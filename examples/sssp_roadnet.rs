@@ -1,0 +1,79 @@
+//! SSSP on a road network (the paper's `USA-road-BAY` class): run all
+//! five scenarios on the Table-1 device, validate every result against a
+//! Dijkstra oracle, and print the Fig-4-style comparison for this app.
+//!
+//! Run with: `cargo run --release --example sssp_roadnet`
+//! Pass a DIMACS `.gr` file to use a real road graph:
+//!     `cargo run --release --example sssp_roadnet -- bay.gr`
+
+use srsp::config::{DeviceConfig, Scenario};
+use srsp::harness::report::format_table;
+use srsp::mem::{BackingStore, MemAlloc};
+use srsp::workload::driver::run_scenario_seeded;
+use srsp::workload::engine::NativeMath;
+use srsp::workload::graph::Graph;
+use srsp::workload::sssp::Sssp;
+
+fn main() {
+    let graph = match std::env::args().nth(1) {
+        Some(path) => {
+            let text = std::fs::read_to_string(&path).expect("read graph file");
+            Graph::from_dimacs_gr(&text).expect("parse DIMACS .gr")
+        }
+        None => Graph::road_grid(64, 64, 0xC0FFEE),
+    };
+    graph.validate().unwrap();
+    println!(
+        "road network: {} vertices, {} edges, max degree {}\n",
+        graph.n,
+        graph.num_edges(),
+        graph.max_degree()
+    );
+
+    let cfg = DeviceConfig::default(); // 64 CUs
+    let oracle = Sssp::oracle(&graph, 0);
+    let reachable = oracle
+        .iter()
+        .filter(|&&d| d != srsp::workload::engine::DIST_INF)
+        .count();
+    println!("oracle: {reachable}/{} vertices reachable from source 0\n", graph.n);
+
+    let mut rows = Vec::new();
+    let mut base_cycles = 0u64;
+    for scenario in Scenario::ALL {
+        let mut alloc = MemAlloc::new();
+        let mut image = BackingStore::new();
+        let mut sssp = Sssp::setup(&graph, &mut alloc, &mut image, 8, 0);
+        let (run, mem) = run_scenario_seeded(&cfg, scenario, &mut sssp, NativeMath, 500, image);
+        assert!(run.converged, "{scenario}: did not converge");
+        assert_eq!(sssp.result(&mem), oracle, "{scenario}: wrong distances");
+        if scenario == Scenario::Baseline {
+            base_cycles = run.stats.cycles;
+        }
+        rows.push(vec![
+            scenario.name().to_string(),
+            run.rounds.to_string(),
+            run.stats.cycles.to_string(),
+            format!("{:.3}", base_cycles as f64 / run.stats.cycles as f64),
+            run.stats.tasks_stolen.to_string(),
+            run.stats.l2_accesses.to_string(),
+            "exact ✓".to_string(),
+        ]);
+    }
+    println!(
+        "{}",
+        format_table(
+            &[
+                "scenario".into(),
+                "rounds".into(),
+                "cycles".into(),
+                "speedup".into(),
+                "steals".into(),
+                "L2".into(),
+                "vs Dijkstra".into(),
+            ],
+            &rows
+        )
+    );
+    println!("(paper Fig. 4: SSSP is sRSP's best case; naive RSP loses its gains)");
+}

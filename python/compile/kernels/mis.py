@@ -1,0 +1,37 @@
+"""Layer-1 Pallas kernel: MIS strict local-maximum test.
+
+Row i carries the priorities of vertex i's *undecided* neighbors (0 for
+padded/decided slots — priority 0 loses every strict comparison except
+against vertex 0, which has priority 0 itself and correctly never beats a
+0 slot... but vertex 0's row is compared with `>`, and isolated rows of
+all-zero neighbors still admit it, matching the reference semantics).
+Unsigned (u32) comparisons — priorities use the full u32 range.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import K, ROWS
+
+BLOCK_ROWS = 128
+
+
+def _mis_kernel(my_pri_ref, nbr_pri_ref, out_ref):
+    m = jnp.max(nbr_pri_ref[...], axis=1)
+    out_ref[...] = (my_pri_ref[...] > m).astype(jnp.uint32)
+
+
+def mis_rows(my_pri, nbr_pri):
+    """my_pri: u32[ROWS]; nbr_pri: u32[ROWS, K] -> u32[ROWS] (0/1)."""
+    return pl.pallas_call(
+        _mis_kernel,
+        grid=(ROWS // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_ROWS, K), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((ROWS,), jnp.uint32),
+        interpret=True,
+    )(my_pri, nbr_pri)

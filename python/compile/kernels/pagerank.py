@@ -1,0 +1,45 @@
+"""Layer-1 Pallas kernel: PageRank tile-row reduction.
+
+The GPU paper's per-vertex gather loop becomes, on TPU-style hardware, a
+dense ``(ROWS, K)`` tile resident in VMEM whose row-sums feed the VPU; the
+BlockSpec carries the HBM->VMEM schedule that the CUDA/HSAIL version
+expressed with workgroups (DESIGN.md §Hardware-Adaptation).
+
+``interpret=True`` throughout: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO the Rust runtime can
+compile and run.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import K, ROWS
+
+# Rows per grid step: one VMEM block holds BLOCK_ROWS * K f32 = 16 kB,
+# comfortably inside a ~16 MB VMEM budget alongside double buffering.
+BLOCK_ROWS = 128
+
+
+def _pagerank_kernel(contribs_ref, damping_ref, inv_n_ref, out_ref):
+    """out[i] = (1-d)*inv_n + d * sum_k contribs[i, k]."""
+    d = damping_ref[0]
+    inv_n = inv_n_ref[0]
+    s = jnp.sum(contribs_ref[...], axis=1)
+    out_ref[...] = (1.0 - d) * inv_n + d * s
+
+
+def pagerank_rows(contribs, damping, inv_n):
+    """contribs: f32[ROWS, K]; damping, inv_n: f32[1] -> f32[ROWS]."""
+    return pl.pallas_call(
+        _pagerank_kernel,
+        grid=(ROWS // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, K), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((ROWS,), jnp.float32),
+        interpret=True,
+    )(contribs, damping, inv_n)

@@ -1,0 +1,45 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Shapes are the AOT tile contract shared with the Rust runtime
+(`rust/src/workload/engine.rs` and `rust/src/runtime/`):
+
+* ROWS = 256 tile rows per executable call,
+* K    = 32 neighbor slots per row.
+
+Padding conventions: PageRank pads contributions with 0.0 (exact under
+f32 addition), SSSP pads with ``DIST_INF + 0`` (never the minimum for
+real slots), MIS pads neighbor priorities with 0 (loses every strict
+comparison).
+"""
+
+import jax.numpy as jnp
+
+ROWS = 256
+K = 32
+
+DIST_INF = 0x3FFF_FFFF
+
+
+def pagerank_rows_ref(contribs, damping, inv_n):
+    """rank_row = (1-d)*inv_n + d * sum(contribs_row).
+
+    contribs: f32[ROWS, K]; damping, inv_n: f32[1].
+    Returns f32[ROWS].
+    """
+    s = jnp.sum(contribs, axis=1)
+    return (1.0 - damping[0]) * inv_n[0] + damping[0] * s
+
+
+def sssp_rows_ref(dist_plus_w):
+    """Min-plus row reduction. dist_plus_w: i32[ROWS, K] -> i32[ROWS]."""
+    return jnp.min(dist_plus_w, axis=1)
+
+
+def mis_rows_ref(my_pri, nbr_pri):
+    """Strict local-maximum test.
+
+    my_pri: u32[ROWS]; nbr_pri: u32[ROWS, K].
+    Returns u32[ROWS] (1 = joins the set).
+    """
+    m = jnp.max(nbr_pri, axis=1)
+    return (my_pri > m).astype(jnp.uint32)

@@ -1,0 +1,61 @@
+"""Layer-2 JAX model: the batched step functions the Rust coordinator
+executes through PJRT.
+
+Each step function wraps the corresponding Layer-1 Pallas kernel
+(`kernels/`) in the fixed-shape tile contract (ROWS x K, see
+`kernels/ref.py`). These are the *whole* device-side numeric graphs of the
+three workloads — the gather/scatter around them is the simulated GPU's
+memory traffic, produced in Rust.
+
+Lowered once by `aot.py` into `artifacts/*.hlo.txt`; never imported at
+runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mis as mis_k
+from .kernels import pagerank as prk_k
+from .kernels import sssp as sssp_k
+from .kernels.ref import K, ROWS
+
+
+def pagerank_step(contribs, damping, inv_n):
+    """f32[ROWS,K], f32[1], f32[1] -> (f32[ROWS],)."""
+    return (prk_k.pagerank_rows(contribs, damping, inv_n),)
+
+
+def sssp_step(dist_plus_w):
+    """i32[ROWS,K] -> (i32[ROWS],)."""
+    return (sssp_k.sssp_rows(dist_plus_w),)
+
+
+def mis_step(my_pri, nbr_pri):
+    """u32[ROWS], u32[ROWS,K] -> (u32[ROWS],)."""
+    return (mis_k.mis_rows(my_pri, nbr_pri),)
+
+
+def example_args(name):
+    """ShapeDtypeStructs used to lower each step function."""
+    f32 = jnp.float32
+    if name == "pagerank":
+        return (
+            jax.ShapeDtypeStruct((ROWS, K), f32),
+            jax.ShapeDtypeStruct((1,), f32),
+            jax.ShapeDtypeStruct((1,), f32),
+        )
+    if name == "sssp":
+        return (jax.ShapeDtypeStruct((ROWS, K), jnp.int32),)
+    if name == "mis":
+        return (
+            jax.ShapeDtypeStruct((ROWS,), jnp.uint32),
+            jax.ShapeDtypeStruct((ROWS, K), jnp.uint32),
+        )
+    raise ValueError(f"unknown model {name!r}")
+
+
+MODELS = {
+    "pagerank": pagerank_step,
+    "sssp": sssp_step,
+    "mis": mis_step,
+}

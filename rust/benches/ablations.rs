@@ -1,0 +1,59 @@
+//! Bench: ablations over the sRSP hardware parameters called out in
+//! DESIGN.md — LR-TBL / PA-TBL capacity and sFIFO depth — on the SSSP
+//! road-network workload (the steal-heaviest input).
+//!
+//! Expected shape: tiny tables force conservative full drains / eager
+//! invalidates and cost performance; the Table-1 sizes (16/16/16) sit on
+//! the knee; larger sizes buy little.
+
+mod bench_common;
+use srsp::config::{DeviceConfig, Scenario};
+use srsp::harness::figures::run_one;
+use srsp::harness::presets::{WorkloadPreset, WorkloadSize};
+use srsp::harness::report::format_table;
+use srsp::workload::driver::App;
+
+fn run_with(cfg: &DeviceConfig, size: WorkloadSize) -> u64 {
+    let preset = WorkloadPreset::new(App::Sssp, size);
+    run_one(cfg, &preset, Scenario::Srsp).stats.cycles
+}
+
+fn main() {
+    let (base_cfg, size) = bench_common::parse_args();
+
+    let mut rows = Vec::new();
+    for lr in [0u32, 4, 16, 64] {
+        for pa in [4u32, 16, 64] {
+            let cfg = DeviceConfig {
+                lr_tbl_entries: lr,
+                pa_tbl_entries: pa,
+                ..base_cfg.clone()
+            };
+            let cycles = bench_common::timed(&format!("lr={lr} pa={pa}"), || {
+                run_with(&cfg, size)
+            });
+            rows.push(vec![lr.to_string(), pa.to_string(), cycles.to_string()]);
+        }
+    }
+    println!(
+        "Ablation — SSSP/sRSP cycles vs table capacities\n{}",
+        format_table(
+            &["LR-TBL".into(), "PA-TBL".into(), "cycles".into()],
+            &rows
+        )
+    );
+
+    let mut rows = Vec::new();
+    for sfifo in [4u32, 8, 16, 32, 64] {
+        let cfg = DeviceConfig {
+            l1_sfifo: sfifo,
+            ..base_cfg.clone()
+        };
+        let cycles = bench_common::timed(&format!("sfifo={sfifo}"), || run_with(&cfg, size));
+        rows.push(vec![sfifo.to_string(), cycles.to_string()]);
+    }
+    println!(
+        "Ablation — SSSP/sRSP cycles vs sFIFO depth\n{}",
+        format_table(&["sFIFO".into(), "cycles".into()], &rows)
+    );
+}

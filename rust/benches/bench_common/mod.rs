@@ -1,0 +1,37 @@
+//! Shared helpers for the hand-rolled bench harness (criterion is not
+//! available offline; each bench is a `harness = false` binary that
+//! regenerates one of the paper's tables/figures and reports wall time).
+
+use std::time::Instant;
+
+pub fn timed<T>(label: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    eprintln!("[bench] {label}: {:.2?}", t0.elapsed());
+    out
+}
+
+/// `--size tiny` (CI smoke) vs default paper scale; `--cus N` override.
+#[allow(dead_code)]
+pub fn parse_args() -> (srsp::config::DeviceConfig, srsp::harness::WorkloadSize) {
+    let mut cfg = srsp::config::DeviceConfig::default();
+    let mut size = srsp::harness::WorkloadSize::Paper;
+    let args: Vec<String> = std::env::args().collect();
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--size" if args.get(i + 1).map(|s| s.as_str()) == Some("tiny") => {
+                size = srsp::harness::WorkloadSize::Tiny;
+                cfg.num_cus = 8;
+                i += 1;
+            }
+            "--cus" => {
+                cfg.num_cus = args[i + 1].parse().expect("--cus");
+                i += 1;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    (cfg, size)
+}

@@ -1,0 +1,39 @@
+//! Extension bench: sRSP vs hLRC (the paper's §6 closest related work)
+//! on the three workloads at 64 CUs.
+//!
+//! Expected shape per the paper's discussion: hLRC is also scalable
+//! (transfer cost is O(1) caches, like sRSP), but its lock transfers
+//! ping-pong whole-cache flush/invalidate pairs and its registry burns a
+//! line per sync variable — so sRSP should hold an edge where steals are
+//! frequent, while both beat naive RSP comfortably.
+
+mod bench_common;
+use srsp::config::Scenario;
+use srsp::harness::figures::run_one;
+use srsp::harness::presets::WorkloadPreset;
+use srsp::harness::report::format_table;
+use srsp::workload::driver::App;
+
+fn main() {
+    let (cfg, size) = bench_common::parse_args();
+    let mut rows = Vec::new();
+    for app in App::ALL {
+        let preset = WorkloadPreset::new(app, size);
+        let base = run_one(&cfg, &preset, Scenario::Baseline).stats.cycles as f64;
+        let mut row = vec![app.name().to_string()];
+        for s in [Scenario::Rsp, Scenario::Srsp, Scenario::Hlrc] {
+            let r = bench_common::timed(&format!("{}/{}", app.name(), s.name()), || {
+                run_one(&cfg, &preset, s)
+            });
+            row.push(format!("{:.3}", base / r.stats.cycles as f64));
+        }
+        rows.push(row);
+    }
+    println!(
+        "Extension — speedup vs Baseline: naive RSP vs sRSP vs hLRC\n{}",
+        format_table(
+            &["app".into(), "rsp".into(), "srsp".into(), "hlrc".into()],
+            &rows
+        )
+    );
+}

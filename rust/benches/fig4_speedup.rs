@@ -1,0 +1,29 @@
+//! Bench: regenerate the paper's Fig. 4 — per-app speedup of the five
+//! scenarios relative to Baseline on the 64-CU Table-1 device, plus the
+//! geomean (paper: sRSP ≈ +29% geomean, best on SSSP; RSP loses its
+//! gains; Scope-only and sRSP are the winners).
+
+mod bench_common;
+use srsp::harness::figures::{fig4_speedup, run_matrix};
+
+fn main() {
+    let (cfg, size) = bench_common::parse_args();
+    let results = bench_common::timed("fig4 matrix", || run_matrix(&cfg, size));
+    let table = fig4_speedup(&results);
+    println!("{}", table.render());
+    // Shape assertions (the paper's qualitative claims).
+    use srsp::config::Scenario::*;
+    assert!(
+        table.geomean(Srsp) > table.geomean(Rsp),
+        "sRSP must outperform naive RSP"
+    );
+    assert!(
+        table.geomean(Srsp) > 1.1,
+        "sRSP must clearly beat the Baseline"
+    );
+    println!(
+        "sRSP geomean speedup: {:.3} (paper: ~1.29); RSP: {:.3}",
+        table.geomean(Srsp),
+        table.geomean(Rsp)
+    );
+}

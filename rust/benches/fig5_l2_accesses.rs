@@ -1,0 +1,21 @@
+//! Bench: regenerate the paper's Fig. 5 — L2 accesses (bandwidth proxy)
+//! relative to Baseline (paper: Scope lowest; sRSP well below RSP).
+
+mod bench_common;
+use srsp::harness::figures::{fig5_l2, run_matrix};
+
+fn main() {
+    let (cfg, size) = bench_common::parse_args();
+    let results = bench_common::timed("fig5 matrix", || run_matrix(&cfg, size));
+    let table = fig5_l2(&results);
+    println!("{}", table.render());
+    use srsp::config::Scenario::*;
+    assert!(
+        table.geomean(Srsp) < table.geomean(Rsp),
+        "sRSP must generate less L2 traffic than naive RSP"
+    );
+    assert!(
+        table.geomean(ScopeOnly) < 1.0,
+        "local scope must reduce L2 traffic below global-scope Baseline"
+    );
+}

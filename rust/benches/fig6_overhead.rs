@@ -1,0 +1,17 @@
+//! Bench: regenerate the paper's Fig. 6 — synchronization overhead of RSP
+//! and sRSP relative to RSP (RSP = 1.0; paper: sRSP much lower).
+
+mod bench_common;
+use srsp::harness::figures::{fig6_overhead, run_matrix};
+
+fn main() {
+    let (cfg, size) = bench_common::parse_args();
+    let results = bench_common::timed("fig6 matrix", || run_matrix(&cfg, size));
+    let table = fig6_overhead(&results);
+    println!("{}", table.render());
+    use srsp::config::Scenario::*;
+    assert!(
+        table.geomean(Srsp) < 1.0,
+        "selective promotion must cost less than naive all-L1 promotion"
+    );
+}

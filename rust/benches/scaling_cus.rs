@@ -1,0 +1,33 @@
+//! Bench: the scalability claim (§1/§7) — geomean speedup of RSP vs sRSP
+//! as CU count grows. Naive RSP's all-L1 promotions erase its advantage
+//! at scale; sRSP holds steady (that is the paper's thesis).
+
+mod bench_common;
+use srsp::harness::figures::scaling_sweep;
+use srsp::harness::report::format_table;
+
+fn main() {
+    let (_, size) = bench_common::parse_args();
+    let cus = [4u32, 8, 16, 32, 64];
+    let rows = bench_common::timed("scaling sweep", || scaling_sweep(&cus, size));
+    let header = vec!["CUs".into(), "RSP".into(), "sRSP".into()];
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(n, r, s)| vec![n.to_string(), format!("{r:.3}"), format!("{s:.3}")])
+        .collect();
+    println!(
+        "Scalability — geomean speedup vs Baseline at equal CU count\n{}",
+        format_table(&header, &body)
+    );
+    let (first, last) = (rows.first().unwrap(), rows.last().unwrap());
+    assert!(
+        last.1 < first.1,
+        "naive RSP must degrade with CU count ({} -> {})",
+        first.1,
+        last.1
+    );
+    assert!(
+        last.2 > last.1,
+        "sRSP must beat naive RSP at full scale"
+    );
+}

@@ -1,0 +1,36 @@
+//! Bench: simulator hot-path throughput (host-side performance of the
+//! simulator itself, the §Perf target for Layer 3). Reports simulated
+//! cycles per wall second and events/instructions per second for a
+//! PageRank round on the Table-1 device.
+
+use srsp::config::Scenario;
+use srsp::harness::figures::run_one;
+use srsp::harness::presets::{WorkloadPreset, WorkloadSize};
+use std::time::Instant;
+
+fn main() {
+    let (cfg, size) = {
+        // default: paper scale
+        let mut c = srsp::config::DeviceConfig::default();
+        let mut s = WorkloadSize::Paper;
+        if std::env::args().any(|a| a == "tiny") {
+            c.num_cus = 8;
+            s = WorkloadSize::Tiny;
+        }
+        (c, s)
+    };
+    for scenario in [Scenario::ScopeOnly, Scenario::Srsp, Scenario::Rsp] {
+        let preset = WorkloadPreset::new(srsp::workload::driver::App::PageRank, size);
+        let t0 = Instant::now();
+        let r = run_one(&cfg, &preset, scenario);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:>6}: wall {:>7.3}s  sim-cycles {:>10}  Mcycles/s {:>8.2}  Minstr/s {:>8.2}",
+            scenario.name(),
+            dt,
+            r.stats.cycles,
+            r.stats.cycles as f64 / dt / 1e6,
+            r.stats.instructions as f64 / dt / 1e6,
+        );
+    }
+}

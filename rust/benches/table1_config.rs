@@ -1,0 +1,12 @@
+//! Bench: print the Table-1 simulation parameters (and validate them).
+
+use srsp::config::DeviceConfig;
+
+fn main() {
+    let cfg = DeviceConfig::default();
+    cfg.validate().expect("Table-1 defaults must validate");
+    println!("Table 1 — simulation parameters\n{}", cfg.table1());
+    assert_eq!(cfg.num_cus, 64);
+    assert_eq!(cfg.l1_sets(), 16);
+    assert_eq!(cfg.l2_sets(), 512);
+}

@@ -1,0 +1,153 @@
+//! Hand-rolled `key = value` config-file parser (TOML-lite).
+//!
+//! Supported syntax: `#`-comments, blank lines, `key = value` with integer
+//! values (decimal, `0x` hex, or `k`/`M` size suffixes) and bare-word
+//! values for enumerations. Unknown keys are errors — catching typos in
+//! experiment configs matters more than forward compatibility here.
+
+use super::DeviceConfig;
+
+/// Error from config parsing, with 1-based line number.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+fn err(line: usize, msg: impl Into<String>) -> ConfigError {
+    ConfigError {
+        line,
+        msg: msg.into(),
+    }
+}
+
+/// Parse an integer with optional `0x` prefix or `k`/`M` suffix.
+fn parse_int(s: &str, line: usize) -> Result<u64, ConfigError> {
+    let s = s.trim();
+    let (body, mult) = if let Some(b) = s.strip_suffix(['k', 'K']) {
+        (b, 1024)
+    } else if let Some(b) = s.strip_suffix(['m', 'M']) {
+        (b, 1024 * 1024)
+    } else {
+        (s, 1)
+    };
+    let v = if let Some(hex) = body.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16)
+    } else {
+        body.trim().parse()
+    }
+    .map_err(|_| err(line, format!("invalid integer '{s}'")))?;
+    Ok(v * mult)
+}
+
+/// Parse config text into a [`DeviceConfig`], starting from defaults.
+pub fn parse_config_str(text: &str) -> Result<DeviceConfig, ConfigError> {
+    let mut c = DeviceConfig::default();
+    for (i, raw) in text.lines().enumerate() {
+        let line_no = i + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| err(line_no, format!("expected 'key = value', got '{line}'")))?;
+        let key = key.trim();
+        let value = value.trim();
+        let int = || parse_int(value, line_no);
+        match key {
+            "num_cus" => c.num_cus = int()? as u32,
+            "wgs_per_cu" => c.wgs_per_cu = int()? as u32,
+            "l1_size" => c.l1_size = int()? as u32,
+            "l1_ways" => c.l1_ways = int()? as u32,
+            "l1_latency" => c.l1_latency = int()?,
+            "l1_sfifo" => c.l1_sfifo = int()? as u32,
+            "l2_size" => c.l2_size = int()? as u32,
+            "l2_ways" => c.l2_ways = int()? as u32,
+            "l2_latency" => c.l2_latency = int()?,
+            "l2_sfifo" => c.l2_sfifo = int()? as u32,
+            "l2_banks" => c.l2_banks = int()? as u32,
+            "l2_bank_occupancy" => c.l2_bank_occupancy = int()?,
+            "xbar_latency" => c.xbar_latency = int()?,
+            "xbar_occupancy" => c.xbar_occupancy = int()?,
+            "dram_channels" => c.dram_channels = int()? as u32,
+            "dram_latency" => c.dram_latency = int()?,
+            "dram_occupancy" => c.dram_occupancy = int()?,
+            "lr_tbl_entries" => c.lr_tbl_entries = int()? as u32,
+            "pa_tbl_entries" => c.pa_tbl_entries = int()? as u32,
+            "compute_cycles_per_item" => c.compute_cycles_per_item = int()?,
+            "issue_cycles" => c.issue_cycles = int()?,
+            "line_size" => c.line_size = int()? as u32,
+            _ => return Err(err(line_no, format!("unknown key '{key}'"))),
+        }
+    }
+    c.validate().map_err(|m| err(0, m))?;
+    Ok(c)
+}
+
+/// Load a config file from disk.
+pub fn load_config(path: &std::path::Path) -> Result<DeviceConfig, Box<dyn std::error::Error>> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(parse_config_str(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = parse_config_str(
+            "# paper Table 1\n\
+             num_cus = 64\n\
+             l1_size = 16k\n\
+             l2_size = 512k   # shared\n\
+             l1_latency = 4\n\
+             dram_channels = 8\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.num_cus, 64);
+        assert_eq!(cfg.l1_size, 16 * 1024);
+        assert_eq!(cfg.l2_size, 512 * 1024);
+    }
+
+    #[test]
+    fn hex_and_suffixes() {
+        assert_eq!(parse_int("0x10", 1).unwrap(), 16);
+        assert_eq!(parse_int("2k", 1).unwrap(), 2048);
+        assert_eq!(parse_int("1M", 1).unwrap(), 1 << 20);
+        assert!(parse_int("zz", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let e = parse_config_str("l1_sizz = 16k\n").unwrap_err();
+        assert!(e.msg.contains("unknown key"));
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn bad_syntax_rejected() {
+        assert!(parse_config_str("num_cus 64\n").is_err());
+    }
+
+    #[test]
+    fn validation_applied_after_parse() {
+        // 24 kB L1 with 16 ways -> 24 sets: not a power of two.
+        assert!(parse_config_str("l1_size = 24k\n").is_err());
+    }
+
+    #[test]
+    fn empty_config_is_defaults() {
+        let cfg = parse_config_str("").unwrap();
+        assert_eq!(cfg, DeviceConfig::default());
+    }
+}

@@ -1,0 +1,388 @@
+//! Device, protocol and scenario configuration.
+//!
+//! [`DeviceConfig`] carries the paper's Table-1 parameters as defaults and
+//! can be loaded from / saved to a simple `key = value` config file
+//! ([`file`] — no serde offline, so the parser is hand-rolled).
+
+pub mod file;
+
+pub use file::{parse_config_str, ConfigError};
+
+use std::fmt;
+
+/// Synchronization protocol implemented by the memory system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Protocol {
+    /// Scoped acquire/release only; remote ops are *not* supported
+    /// (work-stealing scenarios that need them must use cmp scope).
+    ScopedOnly,
+    /// Naive Remote-Scope-Promotion (Orr et al.): remote ops flush and/or
+    /// invalidate **every** L1 in the device.
+    RspNaive,
+    /// Scalable RSP (this paper): selective-flush via LR-TBL, selective
+    /// (deferred) invalidation via PA-TBL.
+    Srsp,
+    /// heterogeneous Lazy Release Consistency (Alsop et al., MICRO'16) —
+    /// the paper's §6 closest related work, implemented as an extension
+    /// comparator: sync variables are *owned* by one L1 at a time
+    /// (registry at the L2); any other CU's wg-scope sync op lazily
+    /// transfers ownership (previous owner flushes, requester
+    /// invalidates). Scalable, but lock transfers ping-pong and each
+    /// registered variable burns registry/cache capacity — the costs the
+    /// paper calls out.
+    Hlrc,
+}
+
+impl Protocol {
+    pub fn name(self) -> &'static str {
+        match self {
+            Protocol::ScopedOnly => "scoped",
+            Protocol::RspNaive => "rsp",
+            Protocol::Srsp => "srsp",
+            Protocol::Hlrc => "hlrc",
+        }
+    }
+}
+
+impl fmt::Display for Protocol {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The five evaluation scenarios of §5.1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scenario {
+    /// Stealing disabled; queue ops use cmp (global) scope.
+    Baseline,
+    /// Stealing disabled; queue ops use wg (local) scope.
+    ScopeOnly,
+    /// Stealing enabled; all sync at cmp scope.
+    StealOnly,
+    /// Stealing enabled; owner at wg scope, steals via remote ops, naive
+    /// all-L1 promotion.
+    Rsp,
+    /// Stealing enabled; owner at wg scope, steals via remote ops,
+    /// selective promotion (the paper's contribution).
+    Srsp,
+    /// Extension (§6 related work): stealing enabled; *all* queue sync at
+    /// wg scope, lazily transferred between owners by the hLRC protocol.
+    /// Not part of the paper's five evaluated scenarios.
+    Hlrc,
+}
+
+impl Scenario {
+    /// The paper's five evaluated scenarios (§5.1). `Hlrc` is an
+    /// extension and intentionally excluded.
+    pub const ALL: [Scenario; 5] = [
+        Scenario::Baseline,
+        Scenario::ScopeOnly,
+        Scenario::StealOnly,
+        Scenario::Rsp,
+        Scenario::Srsp,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::Baseline => "baseline",
+            Scenario::ScopeOnly => "scope",
+            Scenario::StealOnly => "steal",
+            Scenario::Rsp => "rsp",
+            Scenario::Srsp => "srsp",
+            Scenario::Hlrc => "hlrc",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Scenario> {
+        Some(match s {
+            "baseline" => Scenario::Baseline,
+            "scope" | "scope-only" => Scenario::ScopeOnly,
+            "steal" | "steal-only" => Scenario::StealOnly,
+            "rsp" => Scenario::Rsp,
+            "srsp" => Scenario::Srsp,
+            "hlrc" => Scenario::Hlrc,
+            _ => return None,
+        })
+    }
+
+    /// Does this scenario steal work from other queues?
+    pub fn steals(self) -> bool {
+        matches!(
+            self,
+            Scenario::StealOnly | Scenario::Rsp | Scenario::Srsp | Scenario::Hlrc
+        )
+    }
+
+    /// Does the queue owner use light wg-scope synchronization?
+    pub fn local_owner_sync(self) -> bool {
+        matches!(
+            self,
+            Scenario::ScopeOnly | Scenario::Rsp | Scenario::Srsp | Scenario::Hlrc
+        )
+    }
+
+    /// Do steals use the remote-scope-promotion operations?
+    pub fn remote_ops(self) -> bool {
+        matches!(self, Scenario::Rsp | Scenario::Srsp)
+    }
+
+    /// Do steals use plain wg-scope ops, relying on the protocol to
+    /// transfer ownership lazily (hLRC)?
+    pub fn lazy_transfer(self) -> bool {
+        matches!(self, Scenario::Hlrc)
+    }
+
+    /// The memory-system protocol this scenario runs on.
+    pub fn protocol(self) -> Protocol {
+        match self {
+            Scenario::Baseline | Scenario::ScopeOnly | Scenario::StealOnly => {
+                Protocol::ScopedOnly
+            }
+            Scenario::Rsp => Protocol::RspNaive,
+            Scenario::Srsp => Protocol::Srsp,
+            Scenario::Hlrc => Protocol::Hlrc,
+        }
+    }
+}
+
+impl fmt::Display for Scenario {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Full device configuration. Defaults reproduce Table 1 of the paper.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceConfig {
+    /// Number of Compute Units (paper: 64).
+    pub num_cus: u32,
+    /// Work-groups dispatched per CU (paper's work-stealing setup: one
+    /// deque per work-group, one work-group per CU).
+    pub wgs_per_cu: u32,
+
+    // --- L1 data cache (per CU): 16kB, 64B lines, 16-way, 4-cycle ---
+    pub l1_size: u32,
+    pub l1_ways: u32,
+    pub l1_latency: u64,
+    /// sFIFO depth (paper: 16 entries).
+    pub l1_sfifo: u32,
+
+    // --- L2 (shared): 512kB, 64B lines, 16-way, 24-cycle ---
+    pub l2_size: u32,
+    pub l2_ways: u32,
+    pub l2_latency: u64,
+    pub l2_sfifo: u32,
+    /// Number of L2 banks (line-interleaved) for port contention.
+    pub l2_banks: u32,
+    /// Cycles a bank is occupied per access.
+    pub l2_bank_occupancy: u64,
+
+    // --- Interconnect L1 <-> L2 ---
+    pub xbar_latency: u64,
+    /// Per-L1 link occupancy per message.
+    pub xbar_occupancy: u64,
+
+    // --- DRAM: DDR3, 8 channels, 500 MHz ---
+    pub dram_channels: u32,
+    pub dram_latency: u64,
+    /// GPU cycles a channel is occupied per 64B line transfer
+    /// (64B / (8B × 2 × 500MHz) at a 1 GHz core clock = 8 cycles).
+    pub dram_occupancy: u64,
+
+    // --- sRSP structures ---
+    /// LR-TBL capacity (entries). 0 disables the table (degenerates to
+    /// conservative full flush on every selective-flush request).
+    pub lr_tbl_entries: u32,
+    /// PA-TBL capacity (entries).
+    pub pa_tbl_entries: u32,
+
+    /// Cycles per work-item of a `Compute` KIR op (models ALU/SIMD
+    /// throughput of a CU).
+    pub compute_cycles_per_item: u64,
+    /// Fixed issue cost of any instruction.
+    pub issue_cycles: u64,
+
+    /// Line size (bytes). 64 everywhere in the paper.
+    pub line_size: u32,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        Self {
+            num_cus: 64,
+            wgs_per_cu: 1,
+            l1_size: 16 * 1024,
+            l1_ways: 16,
+            l1_latency: 4,
+            l1_sfifo: 16,
+            l2_size: 512 * 1024,
+            l2_ways: 16,
+            l2_latency: 24,
+            l2_sfifo: 24,
+            l2_banks: 16,
+            l2_bank_occupancy: 2,
+            xbar_latency: 8,
+            xbar_occupancy: 1,
+            dram_channels: 8,
+            dram_latency: 100,
+            dram_occupancy: 8,
+            lr_tbl_entries: 16,
+            pa_tbl_entries: 16,
+            compute_cycles_per_item: 2,
+            issue_cycles: 1,
+            line_size: 64,
+        }
+    }
+}
+
+impl DeviceConfig {
+    /// A small device for fast unit tests: 4 CUs, small caches.
+    pub fn small() -> Self {
+        Self {
+            num_cus: 4,
+            l1_size: 2 * 1024,
+            l2_size: 32 * 1024,
+            ..Self::default()
+        }
+    }
+
+    pub fn total_wgs(&self) -> u32 {
+        self.num_cus * self.wgs_per_cu
+    }
+
+    pub fn l1_sets(&self) -> u32 {
+        self.l1_size / self.line_size / self.l1_ways
+    }
+
+    pub fn l2_sets(&self) -> u32 {
+        self.l2_size / self.line_size / self.l2_ways
+    }
+
+    /// Validate internal consistency (powers of two where indexing needs
+    /// them, nonzero sizes).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.num_cus == 0 {
+            return Err("num_cus must be > 0".into());
+        }
+        if self.line_size != 64 {
+            return Err("line_size must be 64 (paper, Table 1)".into());
+        }
+        for (name, v) in [
+            ("l1_sets", self.l1_sets()),
+            ("l2_sets", self.l2_sets()),
+            ("l2_banks", self.l2_banks),
+            ("dram_channels", self.dram_channels),
+        ] {
+            if v == 0 || !v.is_power_of_two() {
+                return Err(format!("{name} must be a nonzero power of two, got {v}"));
+            }
+        }
+        if self.l1_sfifo == 0 || self.l2_sfifo == 0 {
+            return Err("sFIFO depths must be > 0".into());
+        }
+        Ok(())
+    }
+
+    /// Render the Table-1 style parameter listing.
+    pub fn table1(&self) -> String {
+        format!(
+            "| Parameter            | Value                                             |\n\
+             |----------------------|---------------------------------------------------|\n\
+             | Compute Units        | {} CUs, {} work-group(s)/CU                        |\n\
+             | L1 data cache        | {}kB, {}B lines, {}-way, {}-cycle, {}-entry sFIFO  |\n\
+             | L2 cache             | {}kB, {}B lines, {}-way, {}-cycle, {}-entry sFIFO  |\n\
+             | L2 banking           | {} banks, {} cycle(s)/access                       |\n\
+             | Interconnect         | {}-cycle latency, {} cycle(s)/message              |\n\
+             | DRAM                 | DDR3, {} channels, {}-cycle latency                |\n\
+             | Cache protocol       | no-allocate-on-write, write-combining              |\n\
+             | LR-TBL / PA-TBL      | {} / {} entries                                    |",
+            self.num_cus,
+            self.wgs_per_cu,
+            self.l1_size / 1024,
+            self.line_size,
+            self.l1_ways,
+            self.l1_latency,
+            self.l1_sfifo,
+            self.l2_size / 1024,
+            self.line_size,
+            self.l2_ways,
+            self.l2_latency,
+            self.l2_sfifo,
+            self.l2_banks,
+            self.l2_bank_occupancy,
+            self.xbar_latency,
+            self.xbar_occupancy,
+            self.dram_channels,
+            self.dram_latency,
+            self.lr_tbl_entries,
+            self.pa_tbl_entries,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table1() {
+        let c = DeviceConfig::default();
+        assert_eq!(c.num_cus, 64);
+        assert_eq!(c.l1_size, 16 * 1024);
+        assert_eq!(c.l1_ways, 16);
+        assert_eq!(c.l1_latency, 4);
+        assert_eq!(c.l1_sfifo, 16);
+        assert_eq!(c.l2_size, 512 * 1024);
+        assert_eq!(c.l2_latency, 24);
+        assert_eq!(c.l2_sfifo, 24);
+        assert_eq!(c.dram_channels, 8);
+        assert_eq!(c.l1_sets(), 16); // 16kB / 64B / 16-way
+        assert_eq!(c.l2_sets(), 512); // 512kB / 64B / 16-way
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn small_config_valid() {
+        DeviceConfig::small().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_line_size() {
+        let c = DeviceConfig {
+            line_size: 32,
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_non_pow2_sets() {
+        let c = DeviceConfig {
+            l1_size: 24 * 1024, // 24kB/64/16 = 24 sets: not a power of two
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn scenario_properties() {
+        use Scenario::*;
+        assert!(!Baseline.steals() && !Baseline.local_owner_sync());
+        assert!(!ScopeOnly.steals() && ScopeOnly.local_owner_sync());
+        assert!(StealOnly.steals() && !StealOnly.remote_ops());
+        assert!(Rsp.steals() && Rsp.remote_ops() && Rsp.protocol() == Protocol::RspNaive);
+        assert!(Srsp.remote_ops() && Srsp.protocol() == Protocol::Srsp);
+        for s in Scenario::ALL {
+            assert_eq!(Scenario::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Scenario::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn table1_renders() {
+        let t = DeviceConfig::default().table1();
+        assert!(t.contains("64 CUs"));
+        assert!(t.contains("16kB"));
+        assert!(t.contains("512kB"));
+    }
+}

@@ -1,0 +1,240 @@
+//! `Device`: the simulated GPU — CU array + memory system + the
+//! kernel-launch event loop.
+//!
+//! Work-groups are dispatched round-robin over CUs (wg *i* runs on CU
+//! `i % num_cus`, matching the paper's one-deque-per-work-group setup when
+//! `wgs_per_cu == 1`). A kernel launch runs every work-group's KIR program
+//! to `Halt`, driven by the deterministic event queue; the launch ends with
+//! the standard GPU kernel-boundary barrier (all L1s flushed + invalidated,
+//! L2 flushed) so the host observes all device writes.
+
+use crate::config::{DeviceConfig, Protocol};
+use crate::kir::{ComputeEngine, NoopEngine, Program, StepResult, WgContext};
+use crate::mem::MemSystem;
+use crate::sim::{Cycle, EventQueue, Stats};
+
+/// Result of one kernel launch.
+#[derive(Debug, Clone)]
+pub struct LaunchReport {
+    /// Cycle at which the last work-group halted (before the end barrier).
+    pub last_halt: Cycle,
+    /// Cycle at which the kernel-end barrier completed.
+    pub end_cycle: Cycle,
+    /// Events processed (diagnostics).
+    pub events: u64,
+}
+
+/// The simulated GPU device.
+pub struct Device {
+    pub cfg: DeviceConfig,
+    pub protocol: Protocol,
+    pub mem: MemSystem,
+    /// Running cycle count across launches (kernel launches are
+    /// back-to-back; the host gap is ignored, as in the paper's
+    /// device-side measurements).
+    pub now: Cycle,
+}
+
+impl Device {
+    pub fn new(cfg: DeviceConfig, protocol: Protocol) -> Self {
+        Self {
+            mem: MemSystem::new(cfg.clone()),
+            cfg,
+            protocol,
+            now: 0,
+        }
+    }
+
+    /// CU on which work-group `wg` runs.
+    pub fn cu_of_wg(&self, wg: u32) -> u32 {
+        wg % self.cfg.num_cus
+    }
+
+    /// Launch `num_wgs` work-groups of `prog` and run them to completion.
+    ///
+    /// `init` seeds each context's registers before execution (argument
+    /// passing: kernels read their parameters from registers or from
+    /// well-known addresses set up by the host driver).
+    pub fn launch_with_init(
+        &mut self,
+        prog: &Program,
+        num_wgs: u32,
+        engine: &mut dyn ComputeEngine,
+        init: impl Fn(&mut WgContext),
+    ) -> LaunchReport {
+        assert!(num_wgs > 0, "kernel launch needs at least one work-group");
+        let mut queue = EventQueue::new();
+        let mut contexts: Vec<WgContext> = (0..num_wgs)
+            .map(|wg| {
+                let mut ctx = WgContext::new(wg, self.cu_of_wg(wg));
+                init(&mut ctx);
+                ctx
+            })
+            .collect();
+
+        // Stagger dispatch: one work-group issues per cycle (models the
+        // command-processor dispatch rate).
+        for wg in 0..num_wgs {
+            queue.schedule(self.now + wg as u64, wg);
+        }
+
+        let mut events = 0u64;
+        let mut running = num_wgs;
+        let mut last_halt = self.now;
+        while let Some(ev) = queue.pop() {
+            events += 1;
+            let ctx = &mut contexts[ev.wg as usize];
+            debug_assert!(!ctx.halted, "halted wg rescheduled");
+            match crate::kir::interp::step(
+                ctx,
+                prog,
+                &mut self.mem,
+                self.protocol,
+                num_wgs,
+                engine,
+                ev.cycle,
+            ) {
+                StepResult::Continue(next) => {
+                    // Guarantee forward progress in the queue even for
+                    // zero-latency outcomes.
+                    queue.schedule(next.max(ev.cycle + 1), ev.wg);
+                }
+                StepResult::Halted => {
+                    running -= 1;
+                    last_halt = last_halt.max(ev.cycle);
+                    if running == 0 {
+                        break;
+                    }
+                }
+            }
+        }
+        assert_eq!(running, 0, "deadlock: {running} work-groups never halted");
+
+        // Kernel-end barrier: device writes become host-visible.
+        let end_cycle = self.mem.kernel_end_barrier(last_halt);
+        self.now = end_cycle;
+        self.mem.stats.cycles = self.now;
+        LaunchReport {
+            last_halt,
+            end_cycle,
+            events,
+        }
+    }
+
+    /// Launch with zeroed registers.
+    pub fn launch(
+        &mut self,
+        prog: &Program,
+        num_wgs: u32,
+        engine: &mut dyn ComputeEngine,
+    ) -> LaunchReport {
+        self.launch_with_init(prog, num_wgs, engine, |_| {})
+    }
+
+    /// Launch a kernel that needs no compute engine.
+    pub fn launch_simple(&mut self, prog: &Program, num_wgs: u32) -> LaunchReport {
+        let mut eng = NoopEngine;
+        self.launch(prog, num_wgs, &mut eng)
+    }
+
+    /// Take the accumulated statistics (resets for the next measurement).
+    pub fn take_stats(&mut self) -> Stats {
+        let mut s = std::mem::take(&mut self.mem.stats);
+        s.cycles = self.now;
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::{Asm, Src};
+    use crate::sync::{AtomicOp, MemOrder, Scope};
+
+    /// Every work-group stores its id into out[wg].
+    fn store_id_kernel() -> Program {
+        let mut a = Asm::new();
+        let wg = a.reg();
+        let base = a.reg();
+        let addr = a.reg();
+        let off = a.reg();
+        a.wg_id(wg);
+        a.imm(base, 0x1000);
+        a.shl(off, wg, Src::I(2));
+        a.add(addr, base, Src::R(off));
+        a.st(addr, 0, wg, 4);
+        a.halt();
+        a.finish()
+    }
+
+    #[test]
+    fn all_wgs_run_and_results_host_visible() {
+        let mut dev = Device::new(DeviceConfig::small(), Protocol::Srsp);
+        let report = dev.launch_simple(&store_id_kernel(), 8);
+        assert!(report.end_cycle > 0);
+        for wg in 0..8u64 {
+            assert_eq!(
+                dev.mem.backing.read_u32(0x1000 + wg * 4),
+                wg as u32,
+                "wg {wg} result lost"
+            );
+        }
+    }
+
+    #[test]
+    fn wg_to_cu_mapping_round_robin() {
+        let dev = Device::new(DeviceConfig::small(), Protocol::Srsp);
+        assert_eq!(dev.cu_of_wg(0), 0);
+        assert_eq!(dev.cu_of_wg(3), 3);
+        assert_eq!(dev.cu_of_wg(4), 0); // 4 CUs in small()
+    }
+
+    #[test]
+    fn global_atomic_counter_exact() {
+        // Every wg atomically increments a global counter at cmp scope.
+        let mut a = Asm::new();
+        let addr = a.reg();
+        let old = a.reg();
+        a.imm(addr, 0x2000);
+        a.atomic(
+            old,
+            AtomicOp::Add,
+            addr,
+            Src::I(1),
+            Src::I(0),
+            MemOrder::AcqRel,
+            Scope::Cmp,
+        );
+        a.halt();
+        let p = a.finish();
+
+        for proto in [Protocol::ScopedOnly, Protocol::RspNaive, Protocol::Srsp] {
+            let mut dev = Device::new(DeviceConfig::small(), proto);
+            dev.launch_simple(&p, 16);
+            assert_eq!(
+                dev.mem.backing.read_u32(0x2000),
+                16,
+                "{proto:?}: atomics must not lose increments"
+            );
+        }
+    }
+
+    #[test]
+    fn launches_accumulate_time() {
+        let mut dev = Device::new(DeviceConfig::small(), Protocol::Srsp);
+        let p = store_id_kernel();
+        let r1 = dev.launch_simple(&p, 4);
+        let r2 = dev.launch_simple(&p, 4);
+        assert!(r2.end_cycle > r1.end_cycle, "time is cumulative");
+        assert_eq!(dev.now, r2.end_cycle);
+    }
+
+    #[test]
+    fn stats_capture_cycles() {
+        let mut dev = Device::new(DeviceConfig::small(), Protocol::Srsp);
+        dev.launch_simple(&store_id_kernel(), 4);
+        let s = dev.take_stats();
+        assert_eq!(s.cycles, dev.now);
+        assert!(s.instructions >= 4 * 6);
+    }
+}

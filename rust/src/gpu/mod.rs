@@ -1,0 +1,6 @@
+//! The GPU device model: compute units, work-group dispatch and the
+//! kernel-launch event loop.
+
+pub mod device;
+
+pub use device::{Device, LaunchReport};

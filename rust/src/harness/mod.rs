@@ -1,0 +1,10 @@
+//! The evaluation harness: workload presets matched to §5.1 and the
+//! regeneration of Table 1 and Figures 4-6.
+
+pub mod figures;
+pub mod presets;
+pub mod report;
+
+pub use figures::{fig4_speedup, fig5_l2, fig6_overhead, scaling_sweep, FigureCell, FigureTable};
+pub use presets::{WorkloadPreset, WorkloadSize};
+pub use report::{format_table, geomean};

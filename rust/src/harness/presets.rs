@@ -1,0 +1,138 @@
+//! Workload presets: app + input-class + chunking, at paper scale or at
+//! test scale.
+//!
+//! The paper's inputs are DIMACS graphs; the presets use the matching
+//! synthetic generator classes (DESIGN.md substitution table). Real
+//! DIMACS/MatrixMarket files can be substituted through the CLI
+//! (`--graph path.gr`).
+
+use crate::mem::{BackingStore, MemAlloc};
+use crate::workload::driver::{App, Workload};
+use crate::workload::graph::Graph;
+use crate::workload::mis::Mis;
+use crate::workload::pagerank::PageRank;
+use crate::workload::sssp::Sssp;
+
+/// Scale of a preset run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadSize {
+    /// Unit-test scale (seconds on 4 CUs).
+    Tiny,
+    /// Bench scale for the 64-CU figure runs.
+    Paper,
+}
+
+/// A fully-specified workload instance.
+pub struct WorkloadPreset {
+    pub app: App,
+    pub graph: Graph,
+    pub chunk: u32,
+    pub max_rounds: u32,
+    /// PageRank iterations (ignored by SSSP/MIS, which run to
+    /// convergence).
+    pub iters: u32,
+}
+
+impl WorkloadPreset {
+    /// Build the preset for `app` at `size` (§5.1 input classes:
+    /// PRK ← small-world, SSSP ← road grid, MIS ← power-law).
+    pub fn new(app: App, size: WorkloadSize) -> Self {
+        let seed = 0xC0FFEE;
+        match (app, size) {
+            (App::PageRank, WorkloadSize::Paper) => WorkloadPreset {
+                app,
+                graph: Graph::small_world(4096, 8, 0.1, seed),
+                chunk: 8,
+                max_rounds: 16,
+                iters: 6,
+            },
+            (App::PageRank, WorkloadSize::Tiny) => WorkloadPreset {
+                app,
+                graph: Graph::small_world(256, 4, 0.1, seed),
+                chunk: 8,
+                max_rounds: 8,
+                iters: 3,
+            },
+            (App::Sssp, WorkloadSize::Paper) => WorkloadPreset {
+                app,
+                graph: Graph::road_grid(64, 64, seed),
+                chunk: 8,
+                max_rounds: 400,
+                iters: 0,
+            },
+            (App::Sssp, WorkloadSize::Tiny) => WorkloadPreset {
+                app,
+                graph: Graph::road_grid(16, 16, seed),
+                chunk: 8,
+                max_rounds: 200,
+                iters: 0,
+            },
+            (App::Mis, WorkloadSize::Paper) => WorkloadPreset {
+                app,
+                graph: Graph::power_law(4096, 3, seed),
+                chunk: 8,
+                max_rounds: 64,
+                iters: 0,
+            },
+            (App::Mis, WorkloadSize::Tiny) => WorkloadPreset {
+                app,
+                graph: Graph::power_law(256, 2, seed),
+                chunk: 8,
+                max_rounds: 32,
+                iters: 0,
+            },
+        }
+    }
+
+    /// Override the graph (e.g. a real DIMACS file).
+    pub fn with_graph(mut self, g: Graph) -> Self {
+        self.graph = g;
+        self
+    }
+
+    /// Instantiate the workload: allocates and seeds device memory,
+    /// returning the workload object and the initial memory image.
+    pub fn instantiate(&self) -> (Box<dyn Workload>, BackingStore) {
+        let mut alloc = MemAlloc::new();
+        let mut image = BackingStore::new();
+        let wl: Box<dyn Workload> = match self.app {
+            App::PageRank => Box::new(PageRank::setup(
+                &self.graph,
+                &mut alloc,
+                &mut image,
+                self.chunk,
+                self.iters,
+            )),
+            App::Sssp => Box::new(Sssp::setup(&self.graph, &mut alloc, &mut image, self.chunk, 0)),
+            App::Mis => Box::new(Mis::setup(&self.graph, &mut alloc, &mut image, self.chunk)),
+        };
+        (wl, image)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_instantiate() {
+        for app in App::ALL {
+            for size in [WorkloadSize::Tiny, WorkloadSize::Paper] {
+                let p = WorkloadPreset::new(app, size);
+                p.graph.validate().unwrap();
+                let (wl, _image) = p.instantiate();
+                assert_eq!(wl.name(), app.name());
+                assert!(!wl.kinds().is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn paper_presets_bigger_than_tiny() {
+        for app in App::ALL {
+            let tiny = WorkloadPreset::new(app, WorkloadSize::Tiny);
+            let paper = WorkloadPreset::new(app, WorkloadSize::Paper);
+            assert!(paper.graph.n > tiny.graph.n);
+        }
+    }
+}

@@ -1,0 +1,304 @@
+//! KIR assembler: builder API with named labels, forward references and a
+//! simple register allocator. Workload kernels are authored with this —
+//! the OpenCL-to-HSAIL compiler analog of the reproduction.
+
+use super::inst::{AluOp, Inst, Program, Reg, Src, NUM_REGS};
+use crate::sync::{AtomicOp, MemOrder, Scope};
+use std::collections::HashMap;
+
+/// Program builder.
+#[derive(Debug, Default)]
+pub struct Asm {
+    insts: Vec<Inst>,
+    labels: HashMap<String, u32>,
+    /// (inst index, label) pairs to patch at `finish()`.
+    fixups: Vec<(usize, String)>,
+    next_reg: u8,
+}
+
+impl Asm {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate a fresh register.
+    pub fn reg(&mut self) -> Reg {
+        assert!(
+            (self.next_reg as usize) < NUM_REGS,
+            "KIR: out of registers ({NUM_REGS})"
+        );
+        let r = Reg(self.next_reg);
+        self.next_reg += 1;
+        r
+    }
+
+    /// Number of registers allocated so far.
+    pub fn regs_used(&self) -> u8 {
+        self.next_reg
+    }
+
+    /// Define `name` at the current position.
+    pub fn label(&mut self, name: &str) {
+        let at = self.insts.len() as u32;
+        let prev = self.labels.insert(name.to_string(), at);
+        assert!(prev.is_none(), "KIR: duplicate label '{name}'");
+    }
+
+    fn push(&mut self, inst: Inst) -> &mut Self {
+        self.insts.push(inst);
+        self
+    }
+
+    fn push_branch(&mut self, inst: Inst, label: &str) -> &mut Self {
+        self.fixups.push((self.insts.len(), label.to_string()));
+        self.insts.push(inst);
+        self
+    }
+
+    // --- data movement / ALU ---
+
+    pub fn imm(&mut self, dst: Reg, val: u64) -> &mut Self {
+        self.push(Inst::Imm { dst, val })
+    }
+
+    pub fn mov(&mut self, dst: Reg, src: Reg) -> &mut Self {
+        self.push(Inst::Alu {
+            op: AluOp::Add,
+            dst,
+            a: src,
+            b: Src::I(0),
+        })
+    }
+
+    pub fn alu(&mut self, op: AluOp, dst: Reg, a: Reg, b: Src) -> &mut Self {
+        self.push(Inst::Alu { op, dst, a, b })
+    }
+
+    pub fn add(&mut self, dst: Reg, a: Reg, b: Src) -> &mut Self {
+        self.alu(AluOp::Add, dst, a, b)
+    }
+
+    pub fn sub(&mut self, dst: Reg, a: Reg, b: Src) -> &mut Self {
+        self.alu(AluOp::Sub, dst, a, b)
+    }
+
+    pub fn mul(&mut self, dst: Reg, a: Reg, b: Src) -> &mut Self {
+        self.alu(AluOp::Mul, dst, a, b)
+    }
+
+    pub fn and(&mut self, dst: Reg, a: Reg, b: Src) -> &mut Self {
+        self.alu(AluOp::And, dst, a, b)
+    }
+
+    pub fn shl(&mut self, dst: Reg, a: Reg, b: Src) -> &mut Self {
+        self.alu(AluOp::Shl, dst, a, b)
+    }
+
+    pub fn shr(&mut self, dst: Reg, a: Reg, b: Src) -> &mut Self {
+        self.alu(AluOp::Shr, dst, a, b)
+    }
+
+    pub fn lt_u(&mut self, dst: Reg, a: Reg, b: Src) -> &mut Self {
+        self.alu(AluOp::LtU, dst, a, b)
+    }
+
+    pub fn ge_u(&mut self, dst: Reg, a: Reg, b: Src) -> &mut Self {
+        self.alu(AluOp::GeU, dst, a, b)
+    }
+
+    pub fn eq(&mut self, dst: Reg, a: Reg, b: Src) -> &mut Self {
+        self.alu(AluOp::Eq, dst, a, b)
+    }
+
+    pub fn ne(&mut self, dst: Reg, a: Reg, b: Src) -> &mut Self {
+        self.alu(AluOp::Ne, dst, a, b)
+    }
+
+    // --- memory ---
+
+    pub fn ld(&mut self, dst: Reg, base: Reg, off: i32, size: u8) -> &mut Self {
+        debug_assert!(matches!(size, 1 | 2 | 4 | 8));
+        self.push(Inst::Ld { dst, base, off, size })
+    }
+
+    pub fn st(&mut self, base: Reg, off: i32, src: Reg, size: u8) -> &mut Self {
+        debug_assert!(matches!(size, 1 | 2 | 4 | 8));
+        self.push(Inst::St { base, off, src, size })
+    }
+
+    /// Scoped atomic. `dst` receives the old value.
+    #[allow(clippy::too_many_arguments)]
+    pub fn atomic(
+        &mut self,
+        dst: Reg,
+        op: AtomicOp,
+        addr: Reg,
+        operand: Src,
+        cmp: Src,
+        order: MemOrder,
+        scope: Scope,
+    ) -> &mut Self {
+        self.push(Inst::Atomic {
+            dst,
+            op,
+            addr,
+            operand,
+            cmp,
+            order,
+            scope,
+            remote: false,
+        })
+    }
+
+    /// Remote (RSP) atomic: order `Acquire` = `rem_acq`, `Release` =
+    /// `rem_rel`, `AcqRel` = `rem_ar`. Scope is always cmp (§3).
+    pub fn remote_atomic(
+        &mut self,
+        dst: Reg,
+        op: AtomicOp,
+        addr: Reg,
+        operand: Src,
+        cmp: Src,
+        order: MemOrder,
+    ) -> &mut Self {
+        assert!(order != MemOrder::Relaxed, "remote atomics must synchronize");
+        self.push(Inst::Atomic {
+            dst,
+            op,
+            addr,
+            operand,
+            cmp,
+            order,
+            scope: Scope::Cmp,
+            remote: true,
+        })
+    }
+
+    // --- control flow ---
+
+    pub fn br(&mut self, label: &str) -> &mut Self {
+        self.push_branch(Inst::Br { target: u32::MAX }, label)
+    }
+
+    pub fn bnz(&mut self, cond: Reg, label: &str) -> &mut Self {
+        self.push_branch(
+            Inst::Bnz {
+                cond,
+                target: u32::MAX,
+            },
+            label,
+        )
+    }
+
+    pub fn bz(&mut self, cond: Reg, label: &str) -> &mut Self {
+        self.push_branch(
+            Inst::Bz {
+                cond,
+                target: u32::MAX,
+            },
+            label,
+        )
+    }
+
+    // --- misc ---
+
+    pub fn compute(&mut self, kind: u32, arg: Reg) -> &mut Self {
+        self.push(Inst::Compute { kind, arg })
+    }
+
+    pub fn wg_id(&mut self, dst: Reg) -> &mut Self {
+        self.push(Inst::WgId { dst })
+    }
+
+    pub fn num_wgs(&mut self, dst: Reg) -> &mut Self {
+        self.push(Inst::NumWgs { dst })
+    }
+
+    pub fn cu_id(&mut self, dst: Reg) -> &mut Self {
+        self.push(Inst::CuId { dst })
+    }
+
+    pub fn stat(&mut self, counter: super::inst::StatCounter) -> &mut Self {
+        self.push(Inst::Stat { counter })
+    }
+
+    pub fn halt(&mut self) -> &mut Self {
+        self.push(Inst::Halt)
+    }
+
+    /// Resolve labels and produce the program.
+    pub fn finish(self) -> Program {
+        let mut insts = self.insts;
+        for (idx, label) in &self.fixups {
+            let target = *self
+                .labels
+                .get(label)
+                .unwrap_or_else(|| panic!("KIR: undefined label '{label}'"));
+            match &mut insts[*idx] {
+                Inst::Br { target: t } | Inst::Bnz { target: t, .. } | Inst::Bz { target: t, .. } => {
+                    *t = target
+                }
+                other => panic!("fixup on non-branch {other:?}"),
+            }
+        }
+        let mut labels: Vec<(String, u32)> = self.labels.into_iter().collect();
+        labels.sort_by_key(|(_, at)| *at);
+        Program { insts, labels }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_and_backward_labels_resolve() {
+        let mut a = Asm::new();
+        let r = a.reg();
+        a.imm(r, 0);
+        a.label("loop");
+        a.add(r, r, Src::I(1));
+        let c = a.reg();
+        a.lt_u(c, r, Src::I(10));
+        a.bnz(c, "loop");
+        a.bz(c, "end"); // forward reference
+        a.br("loop");
+        a.label("end");
+        a.halt();
+        let p = a.finish();
+        // bnz -> index of "loop" (1), bz -> index of "end".
+        match p.insts[3] {
+            Inst::Bnz { target, .. } => assert_eq!(target, 1),
+            ref other => panic!("{other:?}"),
+        }
+        match p.insts[4] {
+            Inst::Bz { target, .. } => assert_eq!(target, 6),
+            ref other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "undefined label")]
+    fn undefined_label_panics() {
+        let mut a = Asm::new();
+        a.br("nowhere");
+        let _ = a.finish();
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate label")]
+    fn duplicate_label_panics() {
+        let mut a = Asm::new();
+        a.label("x");
+        a.label("x");
+    }
+
+    #[test]
+    fn register_allocation_bounds() {
+        let mut a = Asm::new();
+        for _ in 0..NUM_REGS {
+            a.reg();
+        }
+        assert_eq!(a.regs_used() as usize, NUM_REGS);
+    }
+}

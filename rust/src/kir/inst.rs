@@ -1,0 +1,196 @@
+//! KIR instruction set.
+
+use crate::sync::{AtomicOp, MemOrder, Scope};
+
+/// Register index (32 registers per work-group context).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Reg(pub u8);
+
+pub const NUM_REGS: usize = 32;
+
+/// Right-hand operand: register or immediate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Src {
+    R(Reg),
+    I(u64),
+}
+
+/// Integer ALU operations (u64 semantics; comparisons produce 0/1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Mul,
+    /// Unsigned division; division by zero traps (simulation bug).
+    DivU,
+    RemU,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+    /// Unsigned less-than.
+    LtU,
+    /// Signed less-than (two's complement over u64).
+    LtS,
+    Eq,
+    Ne,
+    LeU,
+    GeU,
+    MinU,
+    MaxU,
+}
+
+impl AluOp {
+    pub fn apply(self, a: u64, b: u64) -> u64 {
+        match self {
+            AluOp::Add => a.wrapping_add(b),
+            AluOp::Sub => a.wrapping_sub(b),
+            AluOp::Mul => a.wrapping_mul(b),
+            AluOp::DivU => {
+                assert!(b != 0, "KIR: division by zero");
+                a / b
+            }
+            AluOp::RemU => {
+                assert!(b != 0, "KIR: remainder by zero");
+                a % b
+            }
+            AluOp::And => a & b,
+            AluOp::Or => a | b,
+            AluOp::Xor => a ^ b,
+            AluOp::Shl => a.wrapping_shl(b as u32),
+            AluOp::Shr => a.wrapping_shr(b as u32),
+            AluOp::LtU => (a < b) as u64,
+            AluOp::LtS => ((a as i64) < (b as i64)) as u64,
+            AluOp::Eq => (a == b) as u64,
+            AluOp::Ne => (a != b) as u64,
+            AluOp::LeU => (a <= b) as u64,
+            AluOp::GeU => (a >= b) as u64,
+            AluOp::MinU => a.min(b),
+            AluOp::MaxU => a.max(b),
+        }
+    }
+}
+
+/// One KIR instruction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Inst {
+    /// `dst = val`
+    Imm { dst: Reg, val: u64 },
+    /// `dst = op(a, b)`
+    Alu { op: AluOp, dst: Reg, a: Reg, b: Src },
+    /// `dst = mem[base + off]` (plain load, `size` ∈ {1,2,4,8})
+    Ld { dst: Reg, base: Reg, off: i32, size: u8 },
+    /// `mem[base + off] = src`
+    St { base: Reg, off: i32, src: Reg, size: u8 },
+    /// Scoped (or remote) atomic on a 4-byte word at `[addr]`.
+    ///
+    /// `remote = true` selects the RSP operations: order `Acquire` is
+    /// `rem_acq`, `Release` is `rem_rel`, `AcqRel` is `rem_ar` (§3).
+    Atomic {
+        dst: Reg,
+        op: AtomicOp,
+        addr: Reg,
+        operand: Src,
+        cmp: Src,
+        order: MemOrder,
+        scope: Scope,
+        remote: bool,
+    },
+    /// Unconditional branch to instruction index.
+    Br { target: u32 },
+    /// Branch if `cond != 0`.
+    Bnz { cond: Reg, target: u32 },
+    /// Branch if `cond == 0`.
+    Bz { cond: Reg, target: u32 },
+    /// Delegate a batch of data-parallel work to the compute engine.
+    /// `arg` is an engine-defined descriptor (usually a task id or a
+    /// pointer to a task record).
+    Compute { kind: u32, arg: Reg },
+    /// `dst = work-group id`
+    WgId { dst: Reg },
+    /// `dst = number of work-groups`
+    NumWgs { dst: Reg },
+    /// `dst = CU id this work-group runs on`
+    CuId { dst: Reg },
+    /// Bump a device performance counter (free: models the CU's hardware
+    /// event counters, used for the paper's steal statistics).
+    Stat { counter: StatCounter },
+    /// Terminate this work-group.
+    Halt,
+}
+
+/// Device performance counters exposed to KIR programs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StatCounter {
+    TaskExecuted,
+    StealAttempt,
+    StealSuccess,
+    StealFail,
+}
+
+/// A finished KIR program (branch targets resolved).
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub insts: Vec<Inst>,
+    /// Optional label map kept for disassembly/debugging.
+    pub labels: Vec<(String, u32)>,
+}
+
+impl Program {
+    pub fn len(&self) -> usize {
+        self.insts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.insts.is_empty()
+    }
+
+    /// Human-readable disassembly (debugging aid).
+    pub fn disassemble(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        for (i, inst) in self.insts.iter().enumerate() {
+            for (name, at) in &self.labels {
+                if *at == i as u32 {
+                    let _ = writeln!(out, "{name}:");
+                }
+            }
+            let _ = writeln!(out, "  {i:4}: {inst:?}");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alu_semantics() {
+        assert_eq!(AluOp::Add.apply(u64::MAX, 1), 0);
+        assert_eq!(AluOp::Sub.apply(0, 1), u64::MAX);
+        assert_eq!(AluOp::LtS.apply(u64::MAX, 0), 1); // -1 < 0 signed
+        assert_eq!(AluOp::LtU.apply(u64::MAX, 0), 0);
+        assert_eq!(AluOp::MinU.apply(3, 9), 3);
+        assert_eq!(AluOp::Eq.apply(4, 4), 1);
+        assert_eq!(AluOp::Shl.apply(1, 12), 4096);
+    }
+
+    #[test]
+    #[should_panic(expected = "division by zero")]
+    fn div_zero_traps() {
+        AluOp::DivU.apply(1, 0);
+    }
+
+    #[test]
+    fn disassembly_includes_labels() {
+        let p = Program {
+            insts: vec![Inst::Imm { dst: Reg(0), val: 1 }, Inst::Halt],
+            labels: vec![("start".into(), 0)],
+        };
+        let d = p.disassemble();
+        assert!(d.contains("start:"));
+        assert!(d.contains("Halt"));
+    }
+}

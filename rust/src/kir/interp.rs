@@ -1,0 +1,470 @@
+//! KIR interpreter: executes one work-group's program against the
+//! simulated memory system.
+//!
+//! ALU/branch instructions retire back-to-back (charged `issue_cycles`
+//! each) up to a quantum; memory, atomic and compute instructions block
+//! the work-group until their computed completion cycle — the event loop
+//! in [`crate::gpu::device`] then reschedules it.
+
+use super::inst::{Inst, Program, Reg, Src, NUM_REGS};
+use crate::config::Protocol;
+use crate::mem::{Addr, MemSystem};
+use crate::sim::Cycle;
+use crate::sync::{engine, MemOrder, Scope};
+
+/// Max consecutive non-memory instructions executed per event — bounds
+/// event-loop starvation from compute-only loops.
+pub const QUANTUM_INSTS: usize = 256;
+
+/// Planning memory interface handed to compute engines: functional
+/// effects (values, cache state, stats) happen immediately; each access's
+/// timing class is recorded and replayed a few per event by the
+/// interpreter, so shared-resource contention resolves in global time
+/// order (see `MemSystem`'s planned-access section).
+pub struct MemAccess<'a> {
+    pub mem: &'a mut MemSystem,
+    pub cu: u32,
+    /// Recorded timing classes, replayed after the engine returns.
+    pub steps: Vec<crate::mem::hierarchy::PlannedAccess>,
+}
+
+impl<'a> MemAccess<'a> {
+    pub fn new(mem: &'a mut MemSystem, cu: u32) -> Self {
+        Self {
+            mem,
+            cu,
+            steps: Vec::with_capacity(64),
+        }
+    }
+
+    pub fn read_u32(&mut self, addr: Addr) -> u32 {
+        let (v, p) = self.mem.plan_read(self.cu, addr, 4);
+        self.steps.push(p);
+        v as u32
+    }
+
+    pub fn read_f32(&mut self, addr: Addr) -> f32 {
+        f32::from_bits(self.read_u32(addr))
+    }
+
+    pub fn write_u32(&mut self, addr: Addr, v: u32) {
+        let p = self.mem.plan_write(self.cu, addr, 4, v as u64);
+        self.steps.push(p);
+    }
+
+    pub fn write_f32(&mut self, addr: Addr, v: f32) {
+        self.write_u32(addr, v.to_bits());
+    }
+
+    pub fn read_u64(&mut self, addr: Addr) -> u64 {
+        let (v, p) = self.mem.plan_read(self.cu, addr, 8);
+        self.steps.push(p);
+        v
+    }
+}
+
+/// Engine for `Compute` instructions. Returns the number of work-items
+/// processed (charged `compute_cycles_per_item` each on top of the memory
+/// time accumulated in `MemAccess.now`).
+pub trait ComputeEngine {
+    fn compute(&mut self, mem: &mut MemAccess<'_>, kind: u32, arg: u64) -> u64;
+}
+
+/// Engine that does nothing (for pure-synchronization microbenchmarks).
+#[derive(Debug, Default)]
+pub struct NoopEngine;
+
+impl ComputeEngine for NoopEngine {
+    fn compute(&mut self, _mem: &mut MemAccess<'_>, _kind: u32, _arg: u64) -> u64 {
+        0
+    }
+}
+
+/// Accesses replayed per scheduling event: bounds the time skew of the
+/// eager functional execution while keeping event-queue overhead low.
+pub const REPLAY_BATCH: usize = 8;
+
+/// Per-work-group execution context.
+#[derive(Debug, Clone)]
+pub struct WgContext {
+    pub wg_id: u32,
+    pub cu: u32,
+    pub pc: u32,
+    pub regs: [u64; NUM_REGS],
+    pub halted: bool,
+    /// Planned compute-op accesses awaiting timed replay.
+    pending: std::collections::VecDeque<crate::mem::hierarchy::PlannedAccess>,
+    /// Compute cycles charged after the last pending access.
+    pending_tail: Cycle,
+}
+
+impl WgContext {
+    pub fn new(wg_id: u32, cu: u32) -> Self {
+        Self {
+            wg_id,
+            cu,
+            pc: 0,
+            regs: [0; NUM_REGS],
+            halted: false,
+            pending: std::collections::VecDeque::new(),
+            pending_tail: 0,
+        }
+    }
+
+    #[inline]
+    fn get(&self, r: Reg) -> u64 {
+        self.regs[r.0 as usize]
+    }
+
+    #[inline]
+    fn set(&mut self, r: Reg, v: u64) {
+        self.regs[r.0 as usize] = v;
+    }
+
+    #[inline]
+    fn src(&self, s: Src) -> u64 {
+        match s {
+            Src::R(r) => self.get(r),
+            Src::I(v) => v,
+        }
+    }
+}
+
+/// Result of one scheduling step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepResult {
+    /// Work-group blocked until this cycle; reschedule it there.
+    Continue(Cycle),
+    /// Work-group executed `Halt`.
+    Halted,
+}
+
+/// Execute up to one blocking instruction (plus up to [`QUANTUM_INSTS`]
+/// non-blocking ones before it) starting at `now`.
+pub fn step(
+    ctx: &mut WgContext,
+    prog: &Program,
+    mem: &mut MemSystem,
+    protocol: Protocol,
+    num_wgs: u32,
+    engine_impl: &mut dyn ComputeEngine,
+    now: Cycle,
+) -> StepResult {
+    let mut t = now;
+    // Replay pending compute-op accesses first (a few per event).
+    if !ctx.pending.is_empty() {
+        for _ in 0..REPLAY_BATCH {
+            let Some(acc) = ctx.pending.pop_front() else { break };
+            t = mem.replay_access(ctx.cu, acc, t);
+        }
+        if ctx.pending.is_empty() {
+            t += std::mem::take(&mut ctx.pending_tail);
+        }
+        return StepResult::Continue(t);
+    }
+    for _ in 0..QUANTUM_INSTS {
+        assert!(
+            (ctx.pc as usize) < prog.insts.len(),
+            "KIR: pc {} out of bounds (wg {})",
+            ctx.pc,
+            ctx.wg_id
+        );
+        let inst = prog.insts[ctx.pc as usize];
+        mem.stats.instructions += 1;
+        match inst {
+            Inst::Imm { dst, val } => {
+                ctx.set(dst, val);
+                ctx.pc += 1;
+                t += mem.cfg.issue_cycles;
+            }
+            Inst::Alu { op, dst, a, b } => {
+                let v = op.apply(ctx.get(a), ctx.src(b));
+                ctx.set(dst, v);
+                ctx.pc += 1;
+                t += mem.cfg.issue_cycles;
+            }
+            Inst::WgId { dst } => {
+                ctx.set(dst, ctx.wg_id as u64);
+                ctx.pc += 1;
+                t += mem.cfg.issue_cycles;
+            }
+            Inst::NumWgs { dst } => {
+                ctx.set(dst, num_wgs as u64);
+                ctx.pc += 1;
+                t += mem.cfg.issue_cycles;
+            }
+            Inst::CuId { dst } => {
+                ctx.set(dst, ctx.cu as u64);
+                ctx.pc += 1;
+                t += mem.cfg.issue_cycles;
+            }
+            Inst::Stat { counter } => {
+                use super::inst::StatCounter::*;
+                match counter {
+                    TaskExecuted => mem.stats.tasks_executed += 1,
+                    StealAttempt => mem.stats.steal_attempts += 1,
+                    StealSuccess => mem.stats.tasks_stolen += 1,
+                    StealFail => mem.stats.steal_failures += 1,
+                }
+                ctx.pc += 1;
+            }
+            Inst::Br { target } => {
+                ctx.pc = target;
+                t += mem.cfg.issue_cycles;
+            }
+            Inst::Bnz { cond, target } => {
+                ctx.pc = if ctx.get(cond) != 0 { target } else { ctx.pc + 1 };
+                t += mem.cfg.issue_cycles;
+            }
+            Inst::Bz { cond, target } => {
+                ctx.pc = if ctx.get(cond) == 0 { target } else { ctx.pc + 1 };
+                t += mem.cfg.issue_cycles;
+            }
+            Inst::Halt => {
+                ctx.halted = true;
+                return StepResult::Halted;
+            }
+            Inst::Ld { dst, base, off, size } => {
+                let addr = ctx.get(base).wrapping_add_signed(off as i64);
+                let (v, done) = mem.l1_read(ctx.cu, addr, size as usize, t);
+                ctx.set(dst, v);
+                ctx.pc += 1;
+                return StepResult::Continue(done);
+            }
+            Inst::St { base, off, src, size } => {
+                let addr = ctx.get(base).wrapping_add_signed(off as i64);
+                let done = mem.l1_write(ctx.cu, addr, size as usize, ctx.get(src), t);
+                ctx.pc += 1;
+                return StepResult::Continue(done);
+            }
+            Inst::Atomic {
+                dst,
+                op,
+                addr,
+                operand,
+                cmp,
+                order,
+                scope,
+                remote,
+            } => {
+                let a = ctx.get(addr);
+                let operand = ctx.src(operand) as u32;
+                let cmp = ctx.src(cmp) as u32;
+                let out = if remote {
+                    engine::remote_op(mem, protocol, ctx.cu, a, op, order, operand, cmp, t)
+                } else {
+                    engine::sync_op(mem, protocol, ctx.cu, a, op, order, scope, operand, cmp, t)
+                };
+                ctx.set(dst, out.value as u64);
+                ctx.pc += 1;
+                return StepResult::Continue(out.done);
+            }
+            Inst::Compute { kind, arg } => {
+                mem.stats.compute_ops += 1;
+                let arg = ctx.get(arg);
+                let mut access = MemAccess::new(mem, ctx.cu);
+                let items = engine_impl.compute(&mut access, kind, arg);
+                let steps = std::mem::take(&mut access.steps);
+                mem.stats.compute_items += items;
+                ctx.pending = steps.into();
+                ctx.pending_tail = items * mem.cfg.compute_cycles_per_item;
+                ctx.pc += 1;
+                if ctx.pending.is_empty() {
+                    return StepResult::Continue(t + std::mem::take(&mut ctx.pending_tail));
+                }
+                // Replay begins on the next event.
+                return StepResult::Continue(t);
+            }
+        }
+    }
+    // Quantum expired without a blocking op: yield, stay runnable.
+    StepResult::Continue(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceConfig;
+    use crate::kir::asm::Asm;
+    use crate::sync::AtomicOp;
+
+    fn run_to_halt(prog: &Program, mem: &mut MemSystem) -> (WgContext, Cycle) {
+        let mut ctx = WgContext::new(0, 0);
+        let mut eng = NoopEngine;
+        let mut t = 0;
+        loop {
+            match step(&mut ctx, prog, mem, Protocol::Srsp, 1, &mut eng, t) {
+                StepResult::Continue(next) => t = next.max(t + 1),
+                StepResult::Halted => return (ctx, t),
+            }
+        }
+    }
+
+    #[test]
+    fn loop_sums_to_ten() {
+        let mut a = Asm::new();
+        let acc = a.reg();
+        let i = a.reg();
+        let c = a.reg();
+        let out = a.reg();
+        a.imm(acc, 0);
+        a.imm(i, 0);
+        a.label("loop");
+        a.add(acc, acc, Src::R(i));
+        a.add(i, i, Src::I(1));
+        a.lt_u(c, i, Src::I(5));
+        a.bnz(c, "loop");
+        a.imm(out, 0x100);
+        a.st(out, 0, acc, 4);
+        a.halt();
+        let p = a.finish();
+
+        let mut mem = MemSystem::new(DeviceConfig::small());
+        let (_ctx, t) = run_to_halt(&p, &mut mem);
+        let (v, _) = mem.l1_read(0, 0x100, 4, t);
+        assert_eq!(v, 0 + 1 + 2 + 3 + 4);
+    }
+
+    #[test]
+    fn load_store_round_trip_and_intrinsics() {
+        let mut a = Asm::new();
+        let base = a.reg();
+        let v = a.reg();
+        let wg = a.reg();
+        a.imm(base, 0x200);
+        a.wg_id(wg);
+        a.num_wgs(v);
+        a.st(base, 0, v, 4);
+        a.st(base, 8, wg, 4);
+        a.ld(v, base, 0, 4);
+        a.halt();
+        let p = a.finish();
+        let mut mem = MemSystem::new(DeviceConfig::small());
+        let mut ctx = WgContext::new(3, 1);
+        let mut eng = NoopEngine;
+        let mut t = 0;
+        loop {
+            match step(&mut ctx, &p, &mut mem, Protocol::Srsp, 8, &mut eng, t) {
+                StepResult::Continue(n) => t = n.max(t + 1),
+                StepResult::Halted => break,
+            }
+        }
+        let (nw, _) = mem.l1_read(1, 0x200, 4, t);
+        let (wgid, _) = mem.l1_read(1, 0x208, 4, t);
+        assert_eq!(nw, 8);
+        assert_eq!(wgid, 3);
+    }
+
+    #[test]
+    fn atomic_cas_spinlock_smoke() {
+        // acquire(CAS 0->1 wg scope), increment counter, release(store 0).
+        let mut a = Asm::new();
+        let lock = a.reg();
+        let ctr = a.reg();
+        let old = a.reg();
+        let tmp = a.reg();
+        a.imm(lock, 0x300);
+        a.imm(ctr, 0x340);
+        a.label("spin");
+        a.atomic(
+            old,
+            AtomicOp::Cas,
+            lock,
+            Src::I(1),
+            Src::I(0),
+            MemOrder::Acquire,
+            Scope::Wg,
+        );
+        a.bnz(old, "spin");
+        a.ld(tmp, ctr, 0, 4);
+        a.add(tmp, tmp, Src::I(1));
+        a.st(ctr, 0, tmp, 4);
+        a.atomic(
+            old,
+            AtomicOp::Store,
+            lock,
+            Src::I(0),
+            Src::I(0),
+            MemOrder::Release,
+            Scope::Wg,
+        );
+        a.halt();
+        let p = a.finish();
+        let mut mem = MemSystem::new(DeviceConfig::small());
+        let (_ctx, t) = run_to_halt(&p, &mut mem);
+        let (v, _) = mem.l1_read(0, 0x340, 4, t);
+        assert_eq!(v, 1);
+        // sRSP: the wg-scope release recorded an LR-TBL entry.
+        assert_eq!(mem.cu(0).lr_tbl.len(), 1);
+    }
+
+    #[test]
+    fn quantum_bounds_alu_only_loops() {
+        // Infinite ALU loop: step() must return after QUANTUM_INSTS.
+        let mut a = Asm::new();
+        let r = a.reg();
+        a.label("forever");
+        a.add(r, r, Src::I(1));
+        a.br("forever");
+        let p = a.finish();
+        let mut mem = MemSystem::new(DeviceConfig::small());
+        let mut ctx = WgContext::new(0, 0);
+        let mut eng = NoopEngine;
+        match step(&mut ctx, &p, &mut mem, Protocol::Srsp, 1, &mut eng, 0) {
+            StepResult::Continue(t) => assert!(t >= QUANTUM_INSTS as u64 / 2),
+            StepResult::Halted => panic!("must not halt"),
+        }
+    }
+
+    #[test]
+    fn compute_engine_invoked_with_timing() {
+        struct CountingEngine {
+            calls: u32,
+        }
+        impl ComputeEngine for CountingEngine {
+            fn compute(&mut self, mem: &mut MemAccess<'_>, kind: u32, arg: u64) -> u64 {
+                assert_eq!(kind, 7);
+                assert_eq!(arg, 42);
+                self.calls += 1;
+                mem.write_u32(0x400, 11);
+                5 // items
+            }
+        }
+        let mut a = Asm::new();
+        let r = a.reg();
+        a.imm(r, 42);
+        a.compute(7, r);
+        a.halt();
+        let p = a.finish();
+        let mut mem = MemSystem::new(DeviceConfig::small());
+        let mut ctx = WgContext::new(0, 0);
+        let mut eng = CountingEngine { calls: 0 };
+        let mut t = 0;
+        loop {
+            match step(&mut ctx, &p, &mut mem, Protocol::Srsp, 1, &mut eng, t) {
+                StepResult::Continue(n) => t = n.max(t + 1),
+                StepResult::Halted => break,
+            }
+        }
+        assert_eq!(eng.calls, 1);
+        assert_eq!(mem.stats.compute_items, 5);
+        let (v, _) = mem.l1_read(0, 0x400, 4, t);
+        assert_eq!(v, 11);
+    }
+
+    #[test]
+    #[should_panic(expected = "pc")]
+    fn running_off_the_end_traps() {
+        let p = Program {
+            insts: vec![Inst::Imm {
+                dst: Reg(0),
+                val: 1,
+            }],
+            labels: vec![],
+        };
+        let mut mem = MemSystem::new(DeviceConfig::small());
+        let mut ctx = WgContext::new(0, 0);
+        let mut eng = NoopEngine;
+        let _ = step(&mut ctx, &p, &mut mem, Protocol::Srsp, 1, &mut eng, 0);
+    }
+}

@@ -1,0 +1,25 @@
+//! KIR — the Kernel IR.
+//!
+//! The paper compiles OpenCL kernels to HSAIL and runs them on gem5's
+//! timing model. KIR is this reproduction's analog: a small register
+//! machine with ALU ops, branches, plain loads/stores and *scoped/remote
+//! atomics*, interpreted against the simulated memory system. The
+//! work-stealing deques and the graph kernels are written in KIR (via the
+//! [`asm`] builder), so all their synchronization behaviour — including
+//! stale reads from non-coherent L1s — is produced by real program
+//! execution, not a canned trace.
+//!
+//! Floating-point vertex math is delegated to a [`ComputeEngine`]
+//! (`Compute` instruction): the engine issues the gather/scatter memory
+//! traffic through the timed [`MemAccess`] interface and performs the
+//! batch numerics either natively or through the AOT-compiled XLA
+//! artifact (see [`crate::runtime`]). One work-group is modeled as one
+//! logical execution stream (the unit of the paper's deques).
+
+pub mod asm;
+pub mod inst;
+pub mod interp;
+
+pub use asm::Asm;
+pub use inst::{AluOp, Inst, Program, Reg, Src};
+pub use interp::{ComputeEngine, MemAccess, NoopEngine, StepResult, WgContext, QUANTUM_INSTS};

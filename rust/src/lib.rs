@@ -1,0 +1,47 @@
+//! # srsp — scalable Remote-Scope-Promotion for asymmetric GPU synchronization
+//!
+//! This crate reproduces the system of *"sRSP: GPUlarda Asimetrik Senkronizasyon
+//! İçin Yeni Ölçeklenebilir Bir Çözüm"* (Yılmazer-Metin, 2022): a scalable
+//! hardware implementation of Remote Scope Promotion (RSP, Orr et al.
+//! ASPLOS'15) for GPU scoped synchronization, evaluated with work-stealing
+//! graph workloads.
+//!
+//! The paper's testbed (the gem5-APU timing simulator) is rebuilt here as a
+//! cycle-approximate, **value-accurate** GPU memory-hierarchy simulator:
+//!
+//! * [`mem`] — L1 write-combining caches with sFIFO dirty tracking, a shared
+//!   banked L2, a channelled DRAM model and the flat backing store.
+//! * [`sync`] — scoped acquire/release semantics and the three protocol
+//!   engines: global-scope baseline, naive RSP (flush/invalidate *every* L1)
+//!   and sRSP (selective-flush / selective-invalidate via LR-TBL + PA-TBL).
+//! * [`kir`] — a small kernel IR (the HSAIL analog): registers, ALU ops,
+//!   branches, scoped/remote atomics; workloads are real programs executed
+//!   against the simulated memory system.
+//! * [`gpu`] — the device model: compute units, work-group dispatch, the
+//!   per-CU memory interface.
+//! * [`workload`] — Cederman–Tsigas work-stealing deques (written in KIR),
+//!   CSR graphs (DIMACS/MatrixMarket parsers + synthetic generators) and the
+//!   three Pannotia-derived apps: PageRank, SSSP, MIS, each with a native
+//!   oracle.
+//! * [`runtime`] — the PJRT bridge: loads the JAX/Pallas-authored,
+//!   AOT-lowered HLO artifacts and serves as the simulator's compute engine.
+//! * [`harness`] — the five evaluation scenarios and the regeneration of the
+//!   paper's Table 1 and Figures 4–6.
+//!
+//! Python (JAX + Pallas) appears only at build time — `make artifacts`
+//! lowers the compute kernels to `artifacts/*.hlo.txt`; the Rust binary is
+//! self-contained afterwards.
+
+pub mod config;
+pub mod gpu;
+pub mod harness;
+pub mod kir;
+pub mod mem;
+pub mod proptest;
+pub mod runtime;
+pub mod sim;
+pub mod sync;
+pub mod workload;
+
+pub use config::{DeviceConfig, Protocol, Scenario};
+pub use sim::Cycle;

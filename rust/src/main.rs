@@ -1,0 +1,283 @@
+//! `srsp` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands regenerate the paper's tables/figures, run individual
+//! scenarios, sweep CU counts and validate results against native oracles.
+//! No external CLI crate is available offline; parsing is hand-rolled.
+
+use srsp::config::{parse_config_str, DeviceConfig, Scenario};
+use srsp::harness::figures::{
+    fig4_speedup, fig5_l2, fig6_overhead, run_matrix, run_one, scaling_sweep,
+};
+use srsp::harness::presets::{WorkloadPreset, WorkloadSize};
+use srsp::harness::report::format_table;
+use srsp::workload::driver::App;
+use srsp::workload::graph::Graph;
+
+const USAGE: &str = "srsp — scalable remote-scope promotion (paper reproduction)
+
+USAGE:
+    srsp <COMMAND> [OPTIONS]
+
+COMMANDS:
+    table1                 Print the Table-1 simulation parameters
+    fig4                   Regenerate Fig. 4 (speedup vs Baseline)
+    fig5                   Regenerate Fig. 5 (L2 accesses vs Baseline)
+    fig6                   Regenerate Fig. 6 (sync overhead vs RSP)
+    sweep                  CU-count scaling sweep (RSP vs sRSP geomean)
+    run                    Run one app under one scenario, print stats
+    validate               Run every app/scenario and check the oracles
+    help                   Show this message
+
+OPTIONS:
+    --app <prk|sssp|mis>        App for `run` (default prk)
+    --scenario <name>           baseline|scope|steal|rsp|srsp|hlrc (default srsp)
+    --cus <n>                   Override CU count
+    --size <tiny|paper>         Workload scale (default paper)
+    --graph <file.gr|file.mtx>  Use a real DIMACS/MatrixMarket graph
+    --config <file>             Device config file (key = value)
+";
+
+struct Opts {
+    app: App,
+    scenario: Scenario,
+    cus: Option<u32>,
+    size: WorkloadSize,
+    graph: Option<String>,
+    config: Option<String>,
+}
+
+fn parse_opts(args: &[String]) -> Result<Opts, String> {
+    let mut o = Opts {
+        app: App::PageRank,
+        scenario: Scenario::Srsp,
+        cus: None,
+        size: WorkloadSize::Paper,
+        graph: None,
+        config: None,
+    };
+    let mut i = 0;
+    while i < args.len() {
+        let key = args[i].clone();
+        let mut val = || -> Result<String, String> {
+            i += 1;
+            args.get(i)
+                .cloned()
+                .ok_or_else(|| format!("{key} needs a value"))
+        };
+        match key.as_str() {
+            "--app" => {
+                o.app = match val()?.as_str() {
+                    "prk" | "pagerank" => App::PageRank,
+                    "sssp" => App::Sssp,
+                    "mis" => App::Mis,
+                    other => return Err(format!("unknown app '{other}'")),
+                }
+            }
+            "--scenario" => {
+                let v = val()?;
+                o.scenario = Scenario::from_name(&v).ok_or(format!("unknown scenario '{v}'"))?;
+            }
+            "--cus" => o.cus = Some(val()?.parse().map_err(|e| format!("--cus: {e}"))?),
+            "--size" => {
+                o.size = match val()?.as_str() {
+                    "tiny" => WorkloadSize::Tiny,
+                    "paper" => WorkloadSize::Paper,
+                    other => return Err(format!("unknown size '{other}'")),
+                }
+            }
+            "--graph" => o.graph = Some(val()?),
+            "--config" => o.config = Some(val()?),
+            other => return Err(format!("unknown option '{other}'")),
+        }
+        i += 1;
+    }
+    Ok(o)
+}
+
+fn device_config(o: &Opts) -> Result<DeviceConfig, String> {
+    let mut cfg = match &o.config {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            parse_config_str(&text).map_err(|e| e.to_string())?
+        }
+        None => DeviceConfig::default(),
+    };
+    if let Some(n) = o.cus {
+        cfg.num_cus = n;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn load_preset(o: &Opts) -> Result<WorkloadPreset, String> {
+    let mut preset = WorkloadPreset::new(o.app, o.size);
+    if let Some(path) = &o.graph {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let g = if path.ends_with(".mtx") {
+            Graph::from_matrix_market(&text)?
+        } else {
+            Graph::from_dimacs_gr(&text)?
+        };
+        g.validate()?;
+        preset = preset.with_graph(g);
+    }
+    Ok(preset)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first().cloned() else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let opts = match parse_opts(&args[1..]) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&cmd, &opts) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
+    match cmd {
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        "table1" => {
+            let cfg = device_config(o)?;
+            println!("Table 1 — simulation parameters\n{}", cfg.table1());
+        }
+        "fig4" | "fig5" | "fig6" => {
+            let cfg = device_config(o)?;
+            eprintln!(
+                "running {} scenarios × 3 apps at {:?} scale on {} CUs ...",
+                Scenario::ALL.len(),
+                o.size,
+                cfg.num_cus
+            );
+            let results = run_matrix(&cfg, o.size);
+            let table = match cmd {
+                "fig4" => fig4_speedup(&results),
+                "fig5" => fig5_l2(&results),
+                _ => fig6_overhead(&results),
+            };
+            println!("{}", table.render());
+        }
+        "sweep" => {
+            let cus = [4u32, 8, 16, 32, 64];
+            eprintln!("scaling sweep over {cus:?} CUs ...");
+            let rows = scaling_sweep(&cus, o.size);
+            let header = vec!["CUs".to_string(), "RSP".to_string(), "sRSP".to_string()];
+            let body: Vec<Vec<String>> = rows
+                .iter()
+                .map(|(n, r, s)| vec![n.to_string(), format!("{r:.3}"), format!("{s:.3}")])
+                .collect();
+            println!(
+                "Scalability — geomean speedup vs Baseline at equal CU count\n{}",
+                format_table(&header, &body)
+            );
+        }
+        "run" => {
+            let cfg = device_config(o)?;
+            let preset = load_preset(o)?;
+            eprintln!(
+                "running {} under {} on {} CUs (n={}, m={}) ...",
+                o.app.name(),
+                o.scenario,
+                cfg.num_cus,
+                preset.graph.n,
+                preset.graph.num_edges()
+            );
+            let r = run_one(&cfg, &preset, o.scenario);
+            println!(
+                "app={} scenario={} rounds={} converged={}",
+                r.app, r.scenario, r.rounds, r.converged
+            );
+            println!("{}", r.stats);
+        }
+        "validate" => {
+            let cfg = device_config(o)?;
+            validate_all(&cfg, o.size)?;
+        }
+        other => {
+            return Err(format!("unknown command '{other}' (try `srsp help`)"));
+        }
+    }
+    Ok(())
+}
+
+/// Run every app under every scenario and check results against the
+/// native oracles (exactness for SSSP/MIS, tolerance for PageRank).
+fn validate_all(cfg: &DeviceConfig, size: WorkloadSize) -> Result<(), String> {
+    use srsp::mem::{BackingStore, MemAlloc};
+    use srsp::workload::driver::run_scenario_seeded;
+    use srsp::workload::engine::NativeMath;
+    use srsp::workload::mis::Mis;
+    use srsp::workload::pagerank::PageRank;
+    use srsp::workload::sssp::Sssp;
+
+    let mut failures = 0;
+    for app in App::ALL {
+        let preset = WorkloadPreset::new(app, size);
+        for scenario in Scenario::ALL {
+            let mut alloc = MemAlloc::new();
+            let mut image = BackingStore::new();
+            let ok = match app {
+                App::PageRank => {
+                    let mut wl = PageRank::setup(
+                        &preset.graph,
+                        &mut alloc,
+                        &mut image,
+                        preset.chunk,
+                        preset.iters,
+                    );
+                    let oracle = PageRank::oracle(&preset.graph, preset.iters);
+                    let (run, mem) = run_scenario_seeded(
+                        cfg, scenario, &mut wl, NativeMath, preset.max_rounds, image,
+                    );
+                    let got = wl.result(&mem);
+                    let diff: f32 = got.iter().zip(&oracle).map(|(a, b)| (a - b).abs()).sum();
+                    run.converged && diff < 1e-3
+                }
+                App::Sssp => {
+                    let mut wl =
+                        Sssp::setup(&preset.graph, &mut alloc, &mut image, preset.chunk, 0);
+                    let oracle = Sssp::oracle(&preset.graph, 0);
+                    let (run, mem) = run_scenario_seeded(
+                        cfg, scenario, &mut wl, NativeMath, preset.max_rounds, image,
+                    );
+                    run.converged && wl.result(&mem) == oracle
+                }
+                App::Mis => {
+                    let mut wl = Mis::setup(&preset.graph, &mut alloc, &mut image, preset.chunk);
+                    let oracle = Mis::oracle(&preset.graph);
+                    let (run, mem) = run_scenario_seeded(
+                        cfg, scenario, &mut wl, NativeMath, preset.max_rounds, image,
+                    );
+                    let got = wl.result(&mem);
+                    run.converged
+                        && Mis::validate_mis(&preset.graph, &got).is_ok()
+                        && got == oracle
+                }
+            };
+            println!(
+                "{:>5} / {:<9} {}",
+                app.name(),
+                scenario.name(),
+                if ok { "OK" } else { "FAIL" }
+            );
+            if !ok {
+                failures += 1;
+            }
+        }
+    }
+    if failures > 0 {
+        return Err(format!("{failures} validation failures"));
+    }
+    println!("all validations passed");
+    Ok(())
+}

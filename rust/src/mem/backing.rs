@@ -1,0 +1,191 @@
+//! The flat backing store (system memory image) and a bump allocator for
+//! laying out workload data structures in the simulated address space.
+
+use super::{byte_mask, line_of, offset_in_line, Addr, LineAddr, LINE};
+use std::collections::HashMap;
+
+/// Ground-truth memory below the L2. Sparse: untouched lines read as zero.
+#[derive(Debug, Default, Clone)]
+pub struct BackingStore {
+    lines: HashMap<LineAddr, [u8; 64]>,
+}
+
+impl BackingStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Read a full line (zeros if never written).
+    pub fn read_line(&self, line: LineAddr) -> [u8; 64] {
+        self.lines.get(&line).copied().unwrap_or([0u8; 64])
+    }
+
+    /// Write the bytes selected by `mask` into a line.
+    pub fn write_line_masked(&mut self, line: LineAddr, mask: u64, data: &[u8; 64]) {
+        if mask == 0 {
+            return;
+        }
+        let entry = self.lines.entry(line).or_insert([0u8; 64]);
+        for i in 0..64 {
+            if mask & (1 << i) != 0 {
+                entry[i] = data[i];
+            }
+        }
+    }
+
+    /// Direct (host) read of `len <= 8` bytes at `addr`; must not straddle
+    /// a line. Used by host drivers and oracles, never by simulated code.
+    pub fn read_bytes(&self, addr: Addr, len: usize) -> u64 {
+        let line = self.read_line(line_of(addr));
+        let off = offset_in_line(addr);
+        debug_assert!(off + len <= 64);
+        let mut v = 0u64;
+        for i in 0..len {
+            v |= (line[off + i] as u64) << (8 * i);
+        }
+        v
+    }
+
+    /// Direct (host) write of `len <= 8` bytes at `addr`.
+    pub fn write_bytes(&mut self, addr: Addr, len: usize, value: u64) {
+        let off = offset_in_line(addr);
+        debug_assert!(off + len <= 64);
+        let mut data = [0u8; 64];
+        for i in 0..len {
+            data[off + i] = (value >> (8 * i)) as u8;
+        }
+        self.write_line_masked(line_of(addr), byte_mask(off, len), &data);
+    }
+
+    pub fn read_u32(&self, addr: Addr) -> u32 {
+        self.read_bytes(addr, 4) as u32
+    }
+
+    pub fn write_u32(&mut self, addr: Addr, v: u32) {
+        self.write_bytes(addr, 4, v as u64);
+    }
+
+    pub fn read_u64(&self, addr: Addr) -> u64 {
+        self.read_bytes(addr, 8)
+    }
+
+    pub fn write_u64(&mut self, addr: Addr, v: u64) {
+        self.write_bytes(addr, 8, v);
+    }
+
+    pub fn read_f32(&self, addr: Addr) -> f32 {
+        f32::from_bits(self.read_u32(addr))
+    }
+
+    pub fn write_f32(&mut self, addr: Addr, v: f32) {
+        self.write_u32(addr, v.to_bits());
+    }
+
+    /// Number of materialized lines (diagnostics).
+    pub fn touched_lines(&self) -> usize {
+        self.lines.len()
+    }
+}
+
+/// Line-aligned bump allocator for the simulated address space.
+///
+/// Address 0 is reserved (never handed out) so null-pointer bugs in KIR
+/// programs are catchable.
+#[derive(Debug)]
+pub struct MemAlloc {
+    next: Addr,
+}
+
+impl Default for MemAlloc {
+    fn default() -> Self {
+        Self { next: LINE }
+    }
+}
+
+impl MemAlloc {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate `bytes` bytes aligned to a cache line; returns base address.
+    pub fn alloc(&mut self, bytes: u64) -> Addr {
+        let base = self.next;
+        let lines = bytes.div_ceil(LINE).max(1);
+        self.next += lines * LINE;
+        base
+    }
+
+    /// Allocate an array of `n` elements of `elem_size` bytes.
+    pub fn alloc_array(&mut self, n: u64, elem_size: u64) -> Addr {
+        self.alloc(n * elem_size)
+    }
+
+    /// Allocate with padding so the region starts on a fresh line *and* the
+    /// next allocation cannot share its last line (always true here since
+    /// allocations are line-granular).
+    pub fn alloc_isolated(&mut self, bytes: u64) -> Addr {
+        self.alloc(bytes)
+    }
+
+    /// Total bytes reserved so far.
+    pub fn high_water(&self) -> u64 {
+        self.next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_default_and_rmw() {
+        let mut m = BackingStore::new();
+        assert_eq!(m.read_u32(100), 0);
+        m.write_u32(100, 0xDEAD_BEEF);
+        assert_eq!(m.read_u32(100), 0xDEAD_BEEF);
+        // Neighbouring bytes untouched.
+        assert_eq!(m.read_u32(104), 0);
+        assert_eq!(m.read_u32(96), 0);
+    }
+
+    #[test]
+    fn u64_round_trip_across_offsets() {
+        let mut m = BackingStore::new();
+        for off in [0u64, 8, 16, 56] {
+            let addr = 640 + off;
+            m.write_u64(addr, 0x0102_0304_0506_0708);
+            assert_eq!(m.read_u64(addr), 0x0102_0304_0506_0708);
+        }
+    }
+
+    #[test]
+    fn f32_round_trip() {
+        let mut m = BackingStore::new();
+        m.write_f32(4, 3.25);
+        assert_eq!(m.read_f32(4), 3.25);
+    }
+
+    #[test]
+    fn masked_line_write() {
+        let mut m = BackingStore::new();
+        let mut data = [0u8; 64];
+        data[3] = 0xAB;
+        m.write_line_masked(5, 1 << 3, &data);
+        let line = m.read_line(5);
+        assert_eq!(line[3], 0xAB);
+        assert_eq!(line[2], 0);
+    }
+
+    #[test]
+    fn alloc_line_aligned_disjoint() {
+        let mut a = MemAlloc::new();
+        let x = a.alloc(4);
+        let y = a.alloc(100);
+        let z = a.alloc(1);
+        assert_eq!(x % LINE, 0);
+        assert_eq!(y % LINE, 0);
+        assert!(x >= LINE, "address 0 reserved");
+        assert!(y >= x + LINE);
+        assert!(z >= y + 2 * LINE); // 100 bytes -> 2 lines
+    }
+}

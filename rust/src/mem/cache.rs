@@ -1,0 +1,501 @@
+//! Set-associative, write-combining, no-allocate-on-write cache with sFIFO
+//! dirty tracking — the paper's L1 *and* L2 protocol (Table 1).
+//!
+//! * **No-allocate-on-write**: a store miss does not fetch the line; it
+//!   allocates a write-combining entry whose only valid bytes are the ones
+//!   written (per-byte `valid`/`dirty` masks).
+//! * **sFIFO**: every clean→dirty transition pushes the line address; a
+//!   full FIFO writes back the oldest entry (QuickRelease overflow).
+//!   Entries whose line was cleaned early (replacement victim) go stale and
+//!   are skipped during drains.
+//! * Value-accurate: lines carry real bytes, so an un-synchronized reader
+//!   genuinely observes stale data.
+
+use super::sfifo::{Sfifo, SfifoEntry};
+use super::{LineAddr, Ticket};
+
+/// One cache line: per-byte valid and dirty masks plus data.
+#[derive(Debug, Clone)]
+pub struct Line {
+    pub addr: LineAddr,
+    /// Bit i set ⇒ byte i holds meaningful data.
+    pub valid: u64,
+    /// Bit i set ⇒ byte i modified locally, not yet written back.
+    /// Invariant: `dirty ⊆ valid`.
+    pub dirty: u64,
+    pub data: [u8; 64],
+}
+
+/// Dirty bytes leaving a cache, headed to the next level.
+#[derive(Debug, Clone)]
+pub struct Writeback {
+    pub line: LineAddr,
+    pub mask: u64,
+    pub data: [u8; 64],
+}
+
+/// Result of one drain step (sFIFO pop).
+#[derive(Debug)]
+pub enum DrainStep {
+    /// FIFO empty / no entry at or below the requested ticket.
+    Done,
+    /// Popped a stale entry (line already clean or evicted): no writeback.
+    Stale,
+    /// Popped a live entry: write these bytes back.
+    Writeback(Writeback),
+}
+
+/// Outcome of a store.
+#[derive(Debug, Default)]
+pub struct WriteOutcome {
+    /// Ticket if this store dirtied a clean/absent line (sFIFO push).
+    pub ticket: Option<Ticket>,
+    /// Writeback forced by sFIFO overflow.
+    pub overflow_wb: Option<Writeback>,
+    /// Writeback of a replacement victim's dirty bytes.
+    pub victim_wb: Option<Writeback>,
+}
+
+/// Outcome of a fill (miss response installation).
+#[derive(Debug, Default)]
+pub struct FillOutcome {
+    pub victim_wb: Option<Writeback>,
+}
+
+/// Write-combining cache.
+#[derive(Debug)]
+pub struct WcCache {
+    sets: usize,
+    ways: usize,
+    set_mask: u64,
+    /// `sets * ways` slots, set-major.
+    slots: Vec<Option<Line>>,
+    /// LRU stamps parallel to `slots`.
+    stamps: Vec<u64>,
+    clock: u64,
+    pub sfifo: Sfifo,
+}
+
+impl WcCache {
+    pub fn new(sets: u32, ways: u32, sfifo_capacity: u32) -> Self {
+        assert!(sets > 0 && sets.is_power_of_two());
+        assert!(ways > 0);
+        let n = (sets * ways) as usize;
+        Self {
+            sets: sets as usize,
+            ways: ways as usize,
+            set_mask: (sets - 1) as u64,
+            slots: vec![None; n],
+            stamps: vec![0; n],
+            clock: 0,
+            sfifo: Sfifo::new(sfifo_capacity as usize),
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, line: LineAddr) -> usize {
+        (line & self.set_mask) as usize
+    }
+
+    #[inline]
+    fn set_range(&self, line: LineAddr) -> std::ops::Range<usize> {
+        let s = self.set_of(line) * self.ways;
+        s..s + self.ways
+    }
+
+    fn find(&self, line: LineAddr) -> Option<usize> {
+        self.set_range(line)
+            .find(|&i| matches!(&self.slots[i], Some(l) if l.addr == line))
+    }
+
+    #[inline]
+    fn touch(&mut self, slot: usize) {
+        self.clock += 1;
+        self.stamps[slot] = self.clock;
+    }
+
+    /// Pick a victim slot in the set of `line`: an invalid slot if any,
+    /// else the LRU way. Returns (slot, evicted dirty bytes).
+    fn victim_slot(&mut self, line: LineAddr) -> (usize, Option<Writeback>) {
+        let range = self.set_range(line);
+        // Prefer an empty way.
+        if let Some(i) = range.clone().find(|&i| self.slots[i].is_none()) {
+            return (i, None);
+        }
+        // Evict LRU.
+        let lru = range.min_by_key(|&i| self.stamps[i]).unwrap();
+        let old = self.slots[lru].take().unwrap();
+        let wb = (old.dirty != 0).then(|| Writeback {
+            line: old.addr,
+            mask: old.dirty,
+            data: old.data,
+        });
+        // Any sFIFO entry for the victim goes stale (lazy invalidation).
+        (lru, wb)
+    }
+
+    /// Does the cache hold all bytes in `mask` for `line`?
+    pub fn has_bytes(&self, line: LineAddr, mask: u64) -> bool {
+        match self.find(line) {
+            Some(i) => self.slots[i].as_ref().unwrap().valid & mask == mask,
+            None => false,
+        }
+    }
+
+    /// Combined probe + read for the hot path: one way-scan instead of
+    /// the `has_bytes` + `read_bytes` pair. Returns `None` when the line
+    /// is absent or the requested bytes are not all valid.
+    pub fn probe_read(&mut self, line: LineAddr, off: usize, len: usize, mask: u64) -> Option<u64> {
+        let i = self.find(line)?;
+        let l = self.slots[i].as_ref().unwrap();
+        if l.valid & mask != mask {
+            return None;
+        }
+        let mut v = 0u64;
+        for k in 0..len {
+            v |= (l.data[off + k] as u64) << (8 * k);
+        }
+        self.touch(i);
+        Some(v)
+    }
+
+    /// Is the line present at all (any valid byte)?
+    pub fn present(&self, line: LineAddr) -> bool {
+        self.find(line).is_some()
+    }
+
+    /// Is the line dirty?
+    pub fn is_dirty(&self, line: LineAddr) -> bool {
+        self.find(line)
+            .is_some_and(|i| self.slots[i].as_ref().unwrap().dirty != 0)
+    }
+
+    /// Read bytes covered by `mask` (caller must have checked
+    /// [`has_bytes`](Self::has_bytes)); bumps LRU.
+    pub fn read_bytes(&mut self, line: LineAddr, off: usize, len: usize) -> u64 {
+        let i = self.find(line).expect("read_bytes: line not present");
+        self.touch(i);
+        let l = self.slots[i].as_ref().unwrap();
+        let mut v = 0u64;
+        for k in 0..len {
+            v |= (l.data[off + k] as u64) << (8 * k);
+        }
+        v
+    }
+
+    /// Store `len <= 8` bytes at in-line offset `off`. Write-combining,
+    /// no-allocate: a miss creates a partial line.
+    pub fn write_bytes(&mut self, line: LineAddr, off: usize, len: usize, value: u64) -> WriteOutcome {
+        let mut data = [0u8; 64];
+        for k in 0..len {
+            data[off + k] = (value >> (8 * k)) as u8;
+        }
+        self.write_masked(line, super::byte_mask(off, len), &data)
+    }
+
+    /// Store the bytes selected by `mask` (general form, used for
+    /// writebacks arriving from an upper level). Write-combining,
+    /// no-allocate.
+    pub fn write_masked(&mut self, line: LineAddr, mask: u64, data: &[u8; 64]) -> WriteOutcome {
+        debug_assert!(mask != 0);
+        let mut out = WriteOutcome::default();
+
+        let slot = match self.find(line) {
+            Some(i) => i,
+            None => {
+                let (i, wb) = self.victim_slot(line);
+                out.victim_wb = wb;
+                self.slots[i] = Some(Line {
+                    addr: line,
+                    valid: 0,
+                    dirty: 0,
+                    data: [0u8; 64],
+                });
+                i
+            }
+        };
+        self.touch(slot);
+        let l = self.slots[slot].as_mut().unwrap();
+        for k in 0..64 {
+            if mask & (1 << k) != 0 {
+                l.data[k] = data[k];
+            }
+        }
+        l.valid |= mask;
+        let was_dirty = l.dirty != 0;
+        l.dirty |= mask;
+        if !was_dirty {
+            // Clean → dirty: track in sFIFO.
+            let (ticket, evicted) = self.sfifo.push(line);
+            out.ticket = Some(ticket);
+            if let Some(e) = evicted {
+                out.overflow_wb = self.clean_line(e.line);
+            }
+        }
+        out
+    }
+
+    /// Full line data; `None` unless every byte is valid.
+    pub fn full_line(&mut self, line: LineAddr) -> Option<[u8; 64]> {
+        let i = self.find(line)?;
+        let l = self.slots[i].as_ref().unwrap();
+        if l.valid == u64::MAX {
+            let data = l.data;
+            self.touch(i);
+            Some(data)
+        } else {
+            None
+        }
+    }
+
+    /// Install a full line fetched from the next level, preserving local
+    /// dirty bytes (they are newer than the fill).
+    pub fn fill(&mut self, line: LineAddr, fill_data: [u8; 64]) -> FillOutcome {
+        let mut out = FillOutcome::default();
+        let slot = match self.find(line) {
+            Some(i) => i,
+            None => {
+                let (i, wb) = self.victim_slot(line);
+                out.victim_wb = wb;
+                self.slots[i] = Some(Line {
+                    addr: line,
+                    valid: 0,
+                    dirty: 0,
+                    data: [0u8; 64],
+                });
+                i
+            }
+        };
+        self.touch(slot);
+        let l = self.slots[slot].as_mut().unwrap();
+        for k in 0..64 {
+            if l.dirty & (1 << k) == 0 {
+                l.data[k] = fill_data[k];
+            }
+        }
+        l.valid = u64::MAX;
+        out
+    }
+
+    /// Clean a line's dirty bytes, returning them for writeback.
+    fn clean_line(&mut self, line: LineAddr) -> Option<Writeback> {
+        let i = self.find(line)?;
+        let l = self.slots[i].as_mut().unwrap();
+        if l.dirty == 0 {
+            return None;
+        }
+        let wb = Writeback {
+            line,
+            mask: l.dirty,
+            data: l.data,
+        };
+        l.dirty = 0;
+        Some(wb)
+    }
+
+    /// One drain step: pop the oldest sFIFO entry at or below `upto`
+    /// (or any entry if `upto` is `None`).
+    pub fn drain_step(&mut self, upto: Option<Ticket>) -> DrainStep {
+        let entry: Option<SfifoEntry> = match upto {
+            Some(t) => self.sfifo.pop_if_at_most(t),
+            None => self.sfifo.pop(),
+        };
+        match entry {
+            None => DrainStep::Done,
+            Some(e) => match self.clean_line(e.line) {
+                Some(wb) => DrainStep::Writeback(wb),
+                None => DrainStep::Stale,
+            },
+        }
+    }
+
+    /// Drop the line entirely (used before an L2-scope atomic so the L1
+    /// cannot serve stale data afterwards). Dirty bytes are returned.
+    pub fn invalidate_line(&mut self, line: LineAddr) -> Option<Writeback> {
+        let i = self.find(line)?;
+        let l = self.slots[i].take().unwrap();
+        (l.dirty != 0).then(|| Writeback {
+            line,
+            mask: l.dirty,
+            data: l.data,
+        })
+    }
+
+    /// Flash-invalidate: drop every line in one cycle. All dirty data must
+    /// already be drained — enforced here.
+    ///
+    /// Returns the number of valid lines discarded (locality lost).
+    pub fn flash_invalidate(&mut self) -> u64 {
+        let mut dropped = 0;
+        for s in &mut self.slots {
+            if let Some(l) = s {
+                assert_eq!(l.dirty, 0, "flash_invalidate with dirty line {:#x}", l.addr);
+                dropped += 1;
+                *s = None;
+            }
+        }
+        self.sfifo.clear();
+        dropped
+    }
+
+    /// Number of dirty lines (invariant checks / diagnostics).
+    pub fn dirty_line_count(&self) -> usize {
+        self.slots
+            .iter()
+            .flatten()
+            .filter(|l| l.dirty != 0)
+            .count()
+    }
+
+    pub fn valid_line_count(&self) -> usize {
+        self.slots.iter().flatten().count()
+    }
+
+    /// Iterate dirty lines (for invariant checks).
+    pub fn dirty_lines(&self) -> impl Iterator<Item = LineAddr> + '_ {
+        self.slots
+            .iter()
+            .flatten()
+            .filter(|l| l.dirty != 0)
+            .map(|l| l.addr)
+    }
+
+    /// Invariant: every dirty line has a (non-stale) sFIFO entry.
+    pub fn check_dirty_subset_of_sfifo(&self) -> bool {
+        use std::collections::HashSet;
+        let tracked: HashSet<LineAddr> = self.sfifo.iter().map(|e| e.line).collect();
+        self.dirty_lines().all(|l| tracked.contains(&l))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache() -> WcCache {
+        WcCache::new(4, 2, 8)
+    }
+
+    #[test]
+    fn write_miss_allocates_partial_line() {
+        let mut c = cache();
+        let out = c.write_bytes(5, 0, 4, 0xAABBCCDD);
+        assert!(out.ticket.is_some());
+        assert!(c.has_bytes(5, 0xF));
+        assert!(!c.has_bytes(5, 0xFF)); // bytes 4..8 not valid
+        assert_eq!(c.read_bytes(5, 0, 4), 0xAABBCCDD);
+        assert!(c.is_dirty(5));
+    }
+
+    #[test]
+    fn write_combining_single_sfifo_entry() {
+        let mut c = cache();
+        let t1 = c.write_bytes(5, 0, 4, 1).ticket;
+        let t2 = c.write_bytes(5, 4, 4, 2).ticket;
+        assert!(t1.is_some());
+        assert!(t2.is_none(), "already-dirty line must not re-push");
+        assert_eq!(c.sfifo.len(), 1);
+    }
+
+    #[test]
+    fn fill_preserves_dirty_bytes() {
+        let mut c = cache();
+        c.write_bytes(9, 0, 4, 0x11111111);
+        let mut fill = [0xFFu8; 64];
+        fill[0] = 0xEE;
+        c.fill(9, fill);
+        // Dirty bytes kept, rest from fill.
+        assert_eq!(c.read_bytes(9, 0, 4), 0x11111111);
+        assert_eq!(c.read_bytes(9, 4, 4), 0xFFFFFFFF);
+        assert!(c.has_bytes(9, u64::MAX));
+    }
+
+    #[test]
+    fn sfifo_overflow_forces_writeback() {
+        let mut c = WcCache::new(64, 4, 2); // tiny sFIFO, roomy cache
+        c.write_bytes(1, 0, 4, 1);
+        c.write_bytes(2, 0, 4, 2);
+        let out = c.write_bytes(3, 0, 4, 3);
+        let wb = out.overflow_wb.expect("oldest dirty line written back");
+        assert_eq!(wb.line, 1);
+        assert!(!c.is_dirty(1), "line cleaned by overflow");
+        assert!(c.present(1), "overflow cleans, does not evict");
+    }
+
+    #[test]
+    fn replacement_evicts_lru_and_writes_back() {
+        let mut c = WcCache::new(1, 2, 16); // one set, two ways
+        c.write_bytes(10, 0, 4, 1);
+        c.write_bytes(20, 0, 4, 2);
+        c.read_bytes(10, 0, 4); // 10 is MRU now
+        let out = c.write_bytes(30, 0, 4, 3);
+        let wb = out.victim_wb.expect("dirty LRU victim written back");
+        assert_eq!(wb.line, 20);
+        assert!(!c.present(20));
+        assert!(c.present(10) && c.present(30));
+    }
+
+    #[test]
+    fn stale_sfifo_entry_skipped_on_drain() {
+        let mut c = WcCache::new(1, 2, 16);
+        c.write_bytes(10, 0, 4, 1);
+        c.write_bytes(20, 0, 4, 2);
+        c.write_bytes(30, 0, 4, 3); // evicts 10 (dirty) -> sFIFO entry stale
+        assert!(matches!(c.drain_step(None), DrainStep::Stale));
+        // Next two entries live.
+        assert!(matches!(c.drain_step(None), DrainStep::Writeback(_)));
+        assert!(matches!(c.drain_step(None), DrainStep::Writeback(_)));
+        assert!(matches!(c.drain_step(None), DrainStep::Done));
+        assert_eq!(c.dirty_line_count(), 0);
+    }
+
+    #[test]
+    fn selective_drain_stops_at_ticket() {
+        let mut c = cache();
+        let t0 = c.write_bytes(1, 0, 4, 1).ticket.unwrap();
+        let _t1 = c.write_bytes(2, 0, 4, 2).ticket.unwrap();
+        match c.drain_step(Some(t0)) {
+            DrainStep::Writeback(wb) => assert_eq!(wb.line, 1),
+            other => panic!("expected writeback, got {other:?}"),
+        }
+        assert!(matches!(c.drain_step(Some(t0)), DrainStep::Done));
+        assert!(c.is_dirty(2), "younger write stays dirty");
+    }
+
+    #[test]
+    fn flash_invalidate_requires_clean() {
+        let mut c = cache();
+        c.write_bytes(1, 0, 4, 1);
+        while !matches!(c.drain_step(None), DrainStep::Done) {}
+        let dropped = c.flash_invalidate();
+        assert_eq!(dropped, 1);
+        assert!(!c.present(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "flash_invalidate with dirty line")]
+    fn flash_invalidate_panics_if_dirty() {
+        let mut c = cache();
+        c.write_bytes(1, 0, 4, 1);
+        c.flash_invalidate();
+    }
+
+    #[test]
+    fn invalidate_line_returns_dirty() {
+        let mut c = cache();
+        c.write_bytes(7, 0, 8, 0x1122334455667788);
+        let wb = c.invalidate_line(7).unwrap();
+        assert_eq!(wb.mask, 0xFF);
+        assert!(!c.present(7));
+        assert!(c.invalidate_line(7).is_none());
+    }
+
+    #[test]
+    fn dirty_subset_of_sfifo_invariant() {
+        let mut c = cache();
+        for i in 0..20 {
+            c.write_bytes(i, (i as usize * 4) % 60, 4, i);
+            assert!(c.check_dirty_subset_of_sfifo());
+        }
+    }
+}

@@ -1,0 +1,846 @@
+//! `MemSystem`: the composed, timed GPU memory hierarchy.
+//!
+//! Owns every per-CU L1 (with its sFIFO, LR-TBL and PA-TBL), the shared
+//! banked L2 (with its own sFIFO), the DRAM channels and the backing store.
+//! Exposes *mechanical* timed primitives — reads, writes, atomics at either
+//! level, flush / selective-flush / invalidate — that the protocol engines
+//! in [`crate::sync::engine`] orchestrate into scoped and remote
+//! synchronization operations.
+//!
+//! Every primitive takes a start cycle and returns a completion cycle;
+//! functional state is updated immediately (the event loop processes
+//! operations in cycle order, which serializes them).
+
+use super::cache::{DrainStep, WcCache, Writeback};
+use super::timing::{Banked, Resource};
+use super::{byte_mask, line_of, offset_in_line, Addr, BackingStore, LineAddr, Ticket};
+use crate::config::DeviceConfig;
+use crate::sim::{Cycle, Stats};
+use crate::sync::scope::AtomicOp;
+use crate::sync::tables::{LrTbl, PaTbl};
+use std::collections::HashMap;
+
+/// Timing class of one planned (compute-engine) access; see the planned
+/// access section of [`MemSystem`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlannedAccess {
+    /// L1 hit at plan time. Re-validated at replay: if the line was
+    /// invalidated in between (e.g. by naive RSP's all-L1 broadcasts),
+    /// the replay converts it to a miss — so invalidation storms are
+    /// priced against in-flight work, not just future planning.
+    Hit { line: LineAddr, mask: u64 },
+    /// L1 miss serviced by the L2 (and DRAM when `dram`); `wbs` victim
+    /// writebacks accompanied it.
+    Miss { line: LineAddr, dram: bool, wbs: u8 },
+    /// Store (posted); `wbs` overflow/victim writebacks accompanied it.
+    Write { line: LineAddr, wbs: u8 },
+}
+
+/// Per-CU slice of the memory system: private L1 + its link + the sRSP
+/// tables attached to the L1 controller.
+pub struct CuSide {
+    pub l1: WcCache,
+    /// L1 access port (one op per cycle).
+    pub port: Resource,
+    /// Crossbar link to the L2.
+    pub link: Resource,
+    pub lr_tbl: LrTbl,
+    pub pa_tbl: PaTbl,
+}
+
+/// The full memory system.
+pub struct MemSystem {
+    pub cfg: DeviceConfig,
+    pub backing: BackingStore,
+    cus: Vec<CuSide>,
+    l2: WcCache,
+    l2_banks: Banked,
+    /// Lines locked by an in-flight remote atomic: accesses stall until the
+    /// recorded cycle (§4.2: the L2 must lock the sync variable's block).
+    l2_locks: HashMap<LineAddr, Cycle>,
+    /// hLRC ownership registry at the L2 (extension protocol, §6 related
+    /// work): sync-variable address → owning CU. Bounded; registering
+    /// past capacity evicts the oldest entry (its owner must flush —
+    /// the replacement-policy sensitivity the paper criticizes).
+    hlrc_registry: Vec<(Addr, u32)>,
+    /// Registry capacity (entries). Reuses the Table-1 flavor of "small
+    /// hardware structure": 2 × num_cus by default.
+    hlrc_capacity: usize,
+    dram: Banked,
+    pub stats: Stats,
+}
+
+impl MemSystem {
+    pub fn new(cfg: DeviceConfig) -> Self {
+        cfg.validate().expect("invalid device config");
+        let cus = (0..cfg.num_cus)
+            .map(|_| CuSide {
+                l1: WcCache::new(cfg.l1_sets(), cfg.l1_ways, cfg.l1_sfifo),
+                port: Resource::new(),
+                link: Resource::new(),
+                lr_tbl: LrTbl::new(cfg.lr_tbl_entries),
+                pa_tbl: PaTbl::new(cfg.pa_tbl_entries),
+            })
+            .collect();
+        Self {
+            l2: WcCache::new(cfg.l2_sets(), cfg.l2_ways, cfg.l2_sfifo),
+            l2_banks: Banked::new(cfg.l2_banks),
+            l2_locks: HashMap::new(),
+            hlrc_registry: Vec::new(),
+            hlrc_capacity: 2 * cfg.num_cus as usize,
+            dram: Banked::new(cfg.dram_channels),
+            backing: BackingStore::new(),
+            stats: Stats::new(),
+            cus,
+            cfg,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // hLRC ownership registry (extension protocol)
+    // ------------------------------------------------------------------
+
+    /// Current owner of a registered sync variable.
+    pub fn hlrc_owner(&self, addr: Addr) -> Option<u32> {
+        self.hlrc_registry.iter().find(|e| e.0 == addr).map(|e| e.1)
+    }
+
+    /// Claim ownership of `addr` for `cu`. Returns the evicted entry when
+    /// the registry was full (its owner must be flushed by the caller).
+    pub fn hlrc_claim(&mut self, addr: Addr, cu: u32) -> Option<(Addr, u32)> {
+        if let Some(e) = self.hlrc_registry.iter_mut().find(|e| e.0 == addr) {
+            e.1 = cu;
+            return None;
+        }
+        let evicted = if self.hlrc_registry.len() >= self.hlrc_capacity {
+            Some(self.hlrc_registry.remove(0)) // FIFO eviction
+        } else {
+            None
+        };
+        self.hlrc_registry.push((addr, cu));
+        evicted
+    }
+
+    /// Drop all registrations owned by `cu` (on full L1 invalidate: the
+    /// cache loses its exclusively-held sync lines).
+    pub fn hlrc_drop_owner(&mut self, cu: u32) {
+        self.hlrc_registry.retain(|e| e.1 != cu);
+    }
+
+    pub fn num_cus(&self) -> u32 {
+        self.cfg.num_cus
+    }
+
+    pub fn cu(&self, cu: u32) -> &CuSide {
+        &self.cus[cu as usize]
+    }
+
+    pub fn cu_mut(&mut self, cu: u32) -> &mut CuSide {
+        &mut self.cus[cu as usize]
+    }
+
+    // ------------------------------------------------------------------
+    // DRAM
+    // ------------------------------------------------------------------
+
+    fn dram_fetch(&mut self, line: LineAddr, at: Cycle) -> ([u8; 64], Cycle) {
+        self.stats.dram_reads += 1;
+        let start = self.dram.acquire(line, at, self.cfg.dram_occupancy);
+        (self.backing.read_line(line), start + self.cfg.dram_latency)
+    }
+
+    fn dram_write(&mut self, wb: &Writeback, at: Cycle) -> Cycle {
+        self.stats.dram_writes += 1;
+        let start = self.dram.acquire(wb.line, at, self.cfg.dram_occupancy);
+        self.backing.write_line_masked(wb.line, wb.mask, &wb.data);
+        start + self.cfg.dram_latency
+    }
+
+    // ------------------------------------------------------------------
+    // L2 level
+    // ------------------------------------------------------------------
+
+    /// Stall until any lock on `line` is released.
+    fn lock_wait(&self, line: LineAddr, at: Cycle) -> Cycle {
+        match self.l2_locks.get(&line) {
+            Some(&until) => at.max(until),
+            None => at,
+        }
+    }
+
+    /// Lock `line` until `until` (remote atomic in flight).
+    pub fn lock_l2_line(&mut self, line: LineAddr, until: Cycle) {
+        let e = self.l2_locks.entry(line).or_insert(0);
+        *e = (*e).max(until);
+    }
+
+    /// Make every byte of `line` valid in L2 (fetch+merge from DRAM on
+    /// miss/partial). Returns data-ready cycle.
+    fn l2_ensure_full(&mut self, line: LineAddr, at: Cycle) -> Cycle {
+        if self.l2.full_line(line).is_some() {
+            self.stats.l2_hits += 1;
+            return at;
+        }
+        self.stats.l2_misses += 1;
+        let (data, t) = self.dram_fetch(line, at);
+        let out = self.l2.fill(line, data);
+        if let Some(victim) = out.victim_wb {
+            self.dram_write(&victim, t);
+        }
+        t
+    }
+
+    /// Read a full line through the L2 (L1 miss path). Returns the line
+    /// image and the data-ready cycle.
+    fn l2_read_line(&mut self, line: LineAddr, at: Cycle) -> ([u8; 64], Cycle) {
+        self.stats.l2_accesses += 1;
+        let at = self.lock_wait(line, at);
+        let start = self.l2_banks.acquire(line, at, self.cfg.l2_bank_occupancy);
+        let t = self.l2_ensure_full(line, start) + self.cfg.l2_latency;
+        let data = self.l2.full_line(line).expect("ensured full");
+        (data, t)
+    }
+
+    /// Accept a masked writeback into the L2 (write-combining, no
+    /// allocate-fill). Returns acceptance cycle.
+    fn l2_accept_writeback(&mut self, wb: &Writeback, at: Cycle) -> Cycle {
+        self.stats.l2_accesses += 1;
+        let at = self.lock_wait(wb.line, at);
+        let start = self.l2_banks.acquire(wb.line, at, self.cfg.l2_bank_occupancy);
+        let out = self.l2.write_masked(wb.line, wb.mask, &wb.data);
+        let mut done = start + self.cfg.l2_bank_occupancy;
+        if let Some(ov) = out.overflow_wb {
+            done = done.max(self.dram_write(&ov, done));
+        }
+        if let Some(victim) = out.victim_wb {
+            self.dram_write(&victim, done);
+        }
+        done
+    }
+
+    /// Atomic RMW performed *at the L2* (cmp scope). The requesting CU's L1
+    /// copy of the line is dropped first (dirty bytes merged into L2) so the
+    /// L1 cannot serve stale data later and the RMW sees this CU's writes.
+    pub fn l2_atomic(
+        &mut self,
+        cu: u32,
+        addr: Addr,
+        op: AtomicOp,
+        operand: u32,
+        cmp: u32,
+        at: Cycle,
+    ) -> (u32, Cycle) {
+        let line = line_of(addr);
+        let off = offset_in_line(addr);
+        debug_assert!(off + 4 <= 64);
+
+        // Drop own copy; push dirty bytes down ahead of the RMW.
+        let mut t = at;
+        if let Some(wb) = self.cus[cu as usize].l1.invalidate_line(line) {
+            t = self.writeback_to_l2(cu, &wb, t);
+        }
+        // Traverse the crossbar to reach the L2.
+        let t = {
+            let start = self.cus[cu as usize].link.acquire(t, self.cfg.xbar_occupancy);
+            start + self.cfg.xbar_latency
+        };
+        let t = self.lock_wait(line, t);
+        self.stats.l2_accesses += 1;
+        self.stats.l2_atomics += 1;
+        let start = self.l2_banks.acquire(line, t, self.cfg.l2_bank_occupancy);
+        let t = self.l2_ensure_full(line, start) + self.cfg.l2_latency;
+        let old = self.l2.read_bytes(line, off, 4) as u32;
+        let (new, result) = op.apply(old, operand, cmp);
+        if op.writes_given(old, operand, cmp) {
+            let mut data = [0u8; 64];
+            for k in 0..4 {
+                data[off + k] = (new >> (8 * k)) as u8;
+            }
+            let out = self.l2.write_masked(line, byte_mask(off, 4), &data);
+            if let Some(ov) = out.overflow_wb {
+                self.dram_write(&ov, t);
+            }
+            if let Some(victim) = out.victim_wb {
+                self.dram_write(&victim, t);
+            }
+        }
+        // Result returns over the crossbar.
+        (result, t + self.cfg.xbar_latency)
+    }
+
+    // ------------------------------------------------------------------
+    // L1 level
+    // ------------------------------------------------------------------
+
+    /// Route one writeback from an L1 down to the L2.
+    fn writeback_to_l2(&mut self, cu: u32, wb: &Writeback, at: Cycle) -> Cycle {
+        self.stats.l1_writebacks += 1;
+        let start = self.cus[cu as usize]
+            .link
+            .acquire(at, self.cfg.xbar_occupancy);
+        self.l2_accept_writeback(wb, start + self.cfg.xbar_latency)
+    }
+
+    /// Plain load of `len <= 8` bytes (must not straddle a line).
+    pub fn l1_read(&mut self, cu: u32, addr: Addr, len: usize, at: Cycle) -> (u64, Cycle) {
+        let line = line_of(addr);
+        let off = offset_in_line(addr);
+        let mask = byte_mask(off, len);
+        let t0 = self.cus[cu as usize].port.acquire(at, 1);
+
+        if let Some(v) = self.cus[cu as usize].l1.probe_read(line, off, len, mask) {
+            self.stats.l1_hits += 1;
+            return (v, t0 + self.cfg.l1_latency);
+        }
+        self.stats.l1_misses += 1;
+        // Miss: through the crossbar to the L2, fill, then read.
+        let t1 = t0 + self.cfg.l1_latency;
+        let start = self.cus[cu as usize].link.acquire(t1, self.cfg.xbar_occupancy);
+        let (data, t2) = self.l2_read_line(line, start + self.cfg.xbar_latency);
+        let out = self.cus[cu as usize].l1.fill(line, data);
+        if let Some(victim) = out.victim_wb {
+            self.writeback_to_l2(cu, &victim, t2);
+        }
+        let v = self.cus[cu as usize].l1.read_bytes(line, off, len);
+        (v, t2 + self.cfg.xbar_latency)
+    }
+
+    /// Plain store of `len <= 8` bytes. Posted: completes at L1 latency;
+    /// overflow/victim writebacks occupy the downstream resources without
+    /// blocking the store.
+    pub fn l1_write(&mut self, cu: u32, addr: Addr, len: usize, value: u64, at: Cycle) -> Cycle {
+        let line = line_of(addr);
+        let off = offset_in_line(addr);
+        self.stats.l1_writes += 1;
+        let t0 = self.cus[cu as usize].port.acquire(at, 1);
+        let out = self.cus[cu as usize].l1.write_bytes(line, off, len, value);
+        let done = t0 + self.cfg.l1_latency;
+        if let Some(wb) = out.overflow_wb {
+            self.writeback_to_l2(cu, &wb, done);
+        }
+        if let Some(wb) = out.victim_wb {
+            self.writeback_to_l2(cu, &wb, done);
+        }
+        done
+    }
+
+    /// Record a store's sFIFO ticket (needed by wg-scope releases for the
+    /// LR-TBL). Same semantics as [`l1_write`](Self::l1_write) but returns
+    /// the ticket of the sFIFO entry tracking the line (existing entry's
+    /// position is *refreshed* per §4.1 when the line was already dirty —
+    /// we return the current frontier in that case, which conservatively
+    /// covers the line).
+    pub fn l1_write_ticketed(
+        &mut self,
+        cu: u32,
+        addr: Addr,
+        len: usize,
+        value: u64,
+        at: Cycle,
+    ) -> (Ticket, Cycle) {
+        let line = line_of(addr);
+        let off = offset_in_line(addr);
+        self.stats.l1_writes += 1;
+        let t0 = self.cus[cu as usize].port.acquire(at, 1);
+        let out = self.cus[cu as usize].l1.write_bytes(line, off, len, value);
+        let done = t0 + self.cfg.l1_latency;
+        if let Some(wb) = out.overflow_wb {
+            self.writeback_to_l2(cu, &wb, done);
+        }
+        if let Some(wb) = out.victim_wb {
+            self.writeback_to_l2(cu, &wb, done);
+        }
+        let ticket = out.ticket.unwrap_or_else(|| {
+            // Line already dirty: its entry is somewhere in the FIFO.
+            // Draining to frontier-1 is guaranteed to cover it.
+            self.cus[cu as usize].l1.sfifo.frontier().saturating_sub(1)
+        });
+        (ticket, done)
+    }
+
+    /// Atomic RMW performed *at the L1* (wg scope). Fills the line on miss.
+    pub fn l1_atomic(
+        &mut self,
+        cu: u32,
+        addr: Addr,
+        op: AtomicOp,
+        operand: u32,
+        cmp: u32,
+        at: Cycle,
+    ) -> (u32, Ticket, Cycle) {
+        let line = line_of(addr);
+        let off = offset_in_line(addr);
+        let mask = byte_mask(off, 4);
+        let t0 = self.cus[cu as usize].port.acquire(at, 1);
+
+        let mut t = t0 + self.cfg.l1_latency;
+        if !self.cus[cu as usize].l1.has_bytes(line, mask) {
+            self.stats.l1_misses += 1;
+            let start = self.cus[cu as usize].link.acquire(t, self.cfg.xbar_occupancy);
+            let (data, t2) = self.l2_read_line(line, start + self.cfg.xbar_latency);
+            let out = self.cus[cu as usize].l1.fill(line, data);
+            if let Some(victim) = out.victim_wb {
+                self.writeback_to_l2(cu, &victim, t2);
+            }
+            t = t2 + self.cfg.xbar_latency;
+        } else {
+            self.stats.l1_hits += 1;
+        }
+        let old = self.cus[cu as usize].l1.read_bytes(line, off, 4) as u32;
+        let (new, result) = op.apply(old, operand, cmp);
+        let mut ticket = self.cus[cu as usize].l1.sfifo.frontier().saturating_sub(1);
+        if op.writes_given(old, operand, cmp) {
+            let out = self.cus[cu as usize].l1.write_bytes(line, off, 4, new as u64);
+            if let Some(tk) = out.ticket {
+                ticket = tk;
+            }
+            if let Some(wb) = out.overflow_wb {
+                self.writeback_to_l2(cu, &wb, t);
+            }
+            if let Some(wb) = out.victim_wb {
+                self.writeback_to_l2(cu, &wb, t);
+            }
+        }
+        (result, ticket, t)
+    }
+
+    // ------------------------------------------------------------------
+    // Flush / invalidate (the heavy operations)
+    // ------------------------------------------------------------------
+
+    /// Drain the L1's sFIFO: all of it (`upto == None`, a cache-flush) or
+    /// up to a ticket (sRSP selective-flush). Returns completion cycle.
+    pub fn flush_l1(&mut self, cu: u32, upto: Option<Ticket>, at: Cycle) -> Cycle {
+        let mut t_pop = at;
+        let mut done = at;
+        loop {
+            // Each sFIFO pop occupies the L1 port for a cycle.
+            let step = self.cus[cu as usize].l1.drain_step(upto);
+            match step {
+                DrainStep::Done => break,
+                DrainStep::Stale => {
+                    t_pop = self.cus[cu as usize].port.acquire(t_pop, 1) + 1;
+                    done = done.max(t_pop);
+                }
+                DrainStep::Writeback(wb) => {
+                    t_pop = self.cus[cu as usize].port.acquire(t_pop, 1) + 1;
+                    self.stats.lines_flushed += 1;
+                    let t_wb = self.writeback_to_l2(cu, &wb, t_pop);
+                    done = done.max(t_wb);
+                }
+            }
+        }
+        done
+    }
+
+    /// Full cache-flush of an L1 (drain entire sFIFO). Global-release path.
+    pub fn full_flush_l1(&mut self, cu: u32, at: Cycle) -> Cycle {
+        self.stats.l1_flushes += 1;
+        self.flush_l1(cu, None, at)
+    }
+
+    /// Full invalidate of an L1: drain dirty, then one-cycle flash
+    /// invalidate. Clears LR-TBL and PA-TBL (§4.4). Global-acquire path.
+    pub fn invalidate_l1(&mut self, cu: u32, at: Cycle) -> Cycle {
+        self.stats.l1_invalidates += 1;
+        let t = self.full_flush_l1(cu, at);
+        let side = &mut self.cus[cu as usize];
+        debug_assert_eq!(side.l1.dirty_line_count(), 0);
+        let dropped = side.l1.flash_invalidate();
+        self.stats.lines_invalidated += dropped;
+        side.lr_tbl.clear();
+        side.pa_tbl.clear();
+        // hLRC: the cache can no longer hold its sync lines exclusively.
+        self.hlrc_drop_owner(cu);
+        t + 1
+    }
+
+    // ------------------------------------------------------------------
+    // System scope (completeness; unused by the paper's workloads)
+    // ------------------------------------------------------------------
+
+    /// Drain the L2's sFIFO to DRAM (system-scope release path).
+    pub fn full_flush_l2(&mut self, at: Cycle) -> Cycle {
+        let mut t_pop = at;
+        let mut done = at;
+        loop {
+            match self.l2.drain_step(None) {
+                DrainStep::Done => break,
+                DrainStep::Stale => {
+                    t_pop += 1;
+                    done = done.max(t_pop);
+                }
+                DrainStep::Writeback(wb) => {
+                    t_pop += 1;
+                    let t_wb = self.dram_write(&wb, t_pop);
+                    done = done.max(t_wb);
+                }
+            }
+        }
+        self.stats.bump("l2_flushes", 1);
+        done
+    }
+
+    /// Invalidate the L2 (system-scope acquire path).
+    pub fn invalidate_l2(&mut self, at: Cycle) -> Cycle {
+        let t = self.full_flush_l2(at);
+        let dropped = self.l2.flash_invalidate();
+        self.stats.bump("l2_lines_invalidated", dropped);
+        t + 1
+    }
+
+    // ------------------------------------------------------------------
+    // Host access (kernel boundaries; never on the simulated timing path)
+    // ------------------------------------------------------------------
+
+    /// Kernel-end semantics: every L1 is flushed and invalidated, the L2 is
+    /// flushed to the backing store. Afterwards the host sees every device
+    /// write via [`BackingStore`] reads. Returns the completion cycle.
+    pub fn kernel_end_barrier(&mut self, at: Cycle) -> Cycle {
+        let mut done = at;
+        for cu in 0..self.cfg.num_cus {
+            done = done.max(self.invalidate_l1(cu, at));
+        }
+        let t = self.full_flush_l2(done);
+        self.l2.flash_invalidate();
+        self.l2_locks.clear();
+        t
+    }
+
+    /// Debug/diagnostic invariant sweep. Panics on violation.
+    pub fn check_invariants(&self) {
+        for (i, side) in self.cus.iter().enumerate() {
+            assert!(
+                side.l1.check_dirty_subset_of_sfifo(),
+                "CU{i}: dirty line not tracked by sFIFO"
+            );
+            if let Some(max) = side.lr_tbl.max_ticket() {
+                assert!(
+                    max < side.l1.sfifo.frontier(),
+                    "CU{i}: LR-TBL ticket beyond sFIFO frontier"
+                );
+            }
+        }
+        assert!(
+            self.l2.check_dirty_subset_of_sfifo(),
+            "L2: dirty line not tracked by sFIFO"
+        );
+    }
+
+    // ------------------------------------------------------------------
+    // Planned accesses (compute-engine traffic)
+    //
+    // A `Compute` KIR op issues hundreds of dependent accesses. Executing
+    // them atomically inside one event would reserve the *shared*
+    // resources (L2 banks, DRAM channels) far into the simulated future
+    // and serialize every other CU behind them. Instead the engine
+    // *plans*: functional effects (values, cache state, hit/miss stats)
+    // happen immediately, and each access's timing class is recorded; the
+    // interpreter then *replays* a few accesses per event, so contention
+    // is resolved in global time order.
+    // ------------------------------------------------------------------
+
+    /// Functional L2 full-line fetch (no timing). Returns data + whether
+    /// DRAM was involved.
+    fn l2_line_functional(&mut self, line: LineAddr) -> ([u8; 64], bool) {
+        self.stats.l2_accesses += 1;
+        if let Some(data) = self.l2.full_line(line) {
+            self.stats.l2_hits += 1;
+            return (data, false);
+        }
+        self.stats.l2_misses += 1;
+        self.stats.dram_reads += 1;
+        let data = self.backing.read_line(line);
+        let out = self.l2.fill(line, data);
+        if let Some(victim) = out.victim_wb {
+            self.stats.dram_writes += 1;
+            self.backing.write_line_masked(victim.line, victim.mask, &victim.data);
+        }
+        let data = self.l2.full_line(line).expect("just filled");
+        (data, true)
+    }
+
+    /// Functional writeback into the L2 (no timing).
+    fn l2_accept_writeback_functional(&mut self, wb: &Writeback) {
+        self.stats.l2_accesses += 1;
+        self.stats.l1_writebacks += 1;
+        let out = self.l2.write_masked(wb.line, wb.mask, &wb.data);
+        if let Some(ov) = out.overflow_wb {
+            self.stats.dram_writes += 1;
+            self.backing.write_line_masked(ov.line, ov.mask, &ov.data);
+        }
+        if let Some(victim) = out.victim_wb {
+            self.stats.dram_writes += 1;
+            self.backing.write_line_masked(victim.line, victim.mask, &victim.data);
+        }
+    }
+
+    /// Plan a load: functional effect now, timing class for replay.
+    pub fn plan_read(&mut self, cu: u32, addr: Addr, len: usize) -> (u64, PlannedAccess) {
+        let line = line_of(addr);
+        let off = offset_in_line(addr);
+        let mask = byte_mask(off, len);
+        if let Some(v) = self.cus[cu as usize].l1.probe_read(line, off, len, mask) {
+            self.stats.l1_hits += 1;
+            return (v, PlannedAccess::Hit { line, mask });
+        }
+        self.stats.l1_misses += 1;
+        let (data, dram) = self.l2_line_functional(line);
+        let out = self.cus[cu as usize].l1.fill(line, data);
+        let wb = if let Some(victim) = out.victim_wb {
+            self.l2_accept_writeback_functional(&victim);
+            1
+        } else {
+            0
+        };
+        let v = self.cus[cu as usize].l1.read_bytes(line, off, len);
+        (v, PlannedAccess::Miss { line, dram, wbs: wb })
+    }
+
+    /// Plan a store: functional effect now, timing class for replay.
+    pub fn plan_write(&mut self, cu: u32, addr: Addr, len: usize, value: u64) -> PlannedAccess {
+        let line = line_of(addr);
+        let off = offset_in_line(addr);
+        self.stats.l1_writes += 1;
+        let out = self.cus[cu as usize].l1.write_bytes(line, off, len, value);
+        let mut wbs = 0u8;
+        if let Some(wb) = out.overflow_wb {
+            self.l2_accept_writeback_functional(&wb);
+            wbs += 1;
+        }
+        if let Some(wb) = out.victim_wb {
+            self.l2_accept_writeback_functional(&wb);
+            wbs += 1;
+        }
+        PlannedAccess::Write { line, wbs }
+    }
+
+    /// Replay one planned access at `at`, charging the resources its
+    /// class touched. Returns the completion cycle.
+    pub fn replay_access(&mut self, cu: u32, acc: PlannedAccess, at: Cycle) -> Cycle {
+        match acc {
+            PlannedAccess::Hit { line, mask } => {
+                if !self.cus[cu as usize].l1.has_bytes(line, mask) {
+                    // Line lost to an invalidation since planning: this
+                    // access actually misses. Refill functionally and
+                    // charge the miss path.
+                    self.stats.l1_hits = self.stats.l1_hits.saturating_sub(1);
+                    self.stats.l1_misses += 1;
+                    self.stats.bump("replay_converted_misses", 1);
+                    let (data, dram) = self.l2_line_functional(line);
+                    let out = self.cus[cu as usize].l1.fill(line, data);
+                    let wbs = if let Some(victim) = out.victim_wb {
+                        self.l2_accept_writeback_functional(&victim);
+                        1
+                    } else {
+                        0
+                    };
+                    return self.replay_access(cu, PlannedAccess::Miss { line, dram, wbs }, at);
+                }
+                let t0 = self.cus[cu as usize].port.acquire(at, 1);
+                t0 + self.cfg.l1_latency
+            }
+            PlannedAccess::Miss { line, dram, wbs } => {
+                let t0 = self.cus[cu as usize].port.acquire(at, 1) + self.cfg.l1_latency;
+                let t1 = {
+                    let start = self.cus[cu as usize].link.acquire(t0, self.cfg.xbar_occupancy);
+                    start + self.cfg.xbar_latency
+                };
+                let t1 = self.lock_wait(line, t1);
+                let start = self.l2_banks.acquire(line, t1, self.cfg.l2_bank_occupancy);
+                let mut t2 = start + self.cfg.l2_latency;
+                if dram {
+                    let ds = self.dram.acquire(line, t2, self.cfg.dram_occupancy);
+                    t2 = ds + self.cfg.dram_latency;
+                }
+                // Victim writebacks occupy the link + a bank in background.
+                for _ in 0..wbs {
+                    let s = self.cus[cu as usize].link.acquire(t2, self.cfg.xbar_occupancy);
+                    self.l2_banks
+                        .acquire(line, s + self.cfg.xbar_latency, self.cfg.l2_bank_occupancy);
+                }
+                t2 + self.cfg.xbar_latency
+            }
+            PlannedAccess::Write { line, wbs } => {
+                let t0 = self.cus[cu as usize].port.acquire(at, 1);
+                let done = t0 + self.cfg.l1_latency;
+                for _ in 0..wbs {
+                    let s = self.cus[cu as usize].link.acquire(done, self.cfg.xbar_occupancy);
+                    self.l2_banks
+                        .acquire(line, s + self.cfg.xbar_latency, self.cfg.l2_bank_occupancy);
+                }
+                done
+            }
+        }
+    }
+
+    /// Crossbar hop: latency + link occupancy for a control message
+    /// to/from a CU (used by broadcast promotions).
+    pub fn xbar_hop(&mut self, cu: u32, at: Cycle) -> Cycle {
+        let start = self.cus[cu as usize].link.acquire(at, self.cfg.xbar_occupancy);
+        start + self.cfg.xbar_latency
+    }
+
+    /// One L2 bank touch for a control message (broadcast fan-out point).
+    pub fn l2_control_hop(&mut self, line: LineAddr, at: Cycle) -> Cycle {
+        let start = self.l2_banks.acquire(line, at, self.cfg.l2_bank_occupancy);
+        start + self.cfg.l2_bank_occupancy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceConfig;
+
+    fn sys() -> MemSystem {
+        MemSystem::new(DeviceConfig::small())
+    }
+
+    #[test]
+    fn read_miss_then_hit() {
+        let mut m = sys();
+        m.backing.write_u32(0x1000, 42);
+        let (v, t1) = m.l1_read(0, 0x1000, 4, 0);
+        assert_eq!(v, 42);
+        assert_eq!(m.stats.l1_misses, 1);
+        let (v2, t2) = m.l1_read(0, 0x1000, 4, t1);
+        assert_eq!(v2, 42);
+        assert_eq!(m.stats.l1_hits, 1);
+        assert!(t2 - t1 < t1, "hit much faster than miss");
+    }
+
+    #[test]
+    fn write_then_read_same_cu() {
+        let mut m = sys();
+        let t = m.l1_write(0, 0x2000, 4, 7, 0);
+        let (v, _) = m.l1_read(0, 0x2000, 4, t);
+        assert_eq!(v, 7);
+        // Dirty data NOT visible in backing store yet.
+        assert_eq!(m.backing.read_u32(0x2000), 0);
+    }
+
+    #[test]
+    fn dirty_data_invisible_to_other_cu_until_flush() {
+        let mut m = sys();
+        let t = m.l1_write(0, 0x3000, 4, 99, 0);
+        // CU1 reads: misses to L2, which has no idea about CU0's dirty line.
+        let (v, t2) = m.l1_read(1, 0x3000, 4, t);
+        assert_eq!(v, 0, "non-coherent caches: stale read expected");
+        // Flush CU0, then CU1 must *invalidate* (else it hits its stale copy).
+        let t3 = m.full_flush_l1(0, t2);
+        let t4 = m.invalidate_l1(1, t3);
+        let (v2, _) = m.l1_read(1, 0x3000, 4, t4);
+        assert_eq!(v2, 99);
+    }
+
+    #[test]
+    fn l1_atomic_local_rmw() {
+        let mut m = sys();
+        m.backing.write_u32(0x100, 5);
+        let (old, _tk, t) = m.l1_atomic(0, 0x100, AtomicOp::Add, 3, 0, 0);
+        assert_eq!(old, 5);
+        let (v, _) = m.l1_read(0, 0x100, 4, t);
+        assert_eq!(v, 8);
+        // Still local: backing unchanged.
+        assert_eq!(m.backing.read_u32(0x100), 5);
+    }
+
+    #[test]
+    fn l2_atomic_visible_across_cus() {
+        let mut m = sys();
+        let (old0, t0) = m.l2_atomic(0, 0x200, AtomicOp::Add, 1, 0, 0);
+        let (old1, _) = m.l2_atomic(1, 0x200, AtomicOp::Add, 1, 0, t0);
+        assert_eq!(old0, 0);
+        assert_eq!(old1, 1, "L2 atomics are globally ordered");
+    }
+
+    #[test]
+    fn l2_atomic_merges_own_dirty_first() {
+        let mut m = sys();
+        // CU0 writes locally (dirty in L1), then does an L2 CAS on the
+        // same word: the CAS must observe its own dirty value.
+        let t = m.l1_write(0, 0x300, 4, 10, 0);
+        let (old, _) = m.l2_atomic(0, 0x300, AtomicOp::Cas, 11, 10, t);
+        assert_eq!(old, 10, "own dirty write must be visible to own L2 RMW");
+    }
+
+    #[test]
+    fn selective_flush_stops_at_ticket() {
+        let mut m = sys();
+        let (tk, t) = m.l1_write_ticketed(0, 0x400, 4, 1, 0);
+        let t = m.l1_write(0, 0x440, 4, 2, t);
+        // Selective flush to the first write's ticket: 0x400 written back,
+        // 0x440 still dirty.
+        let t = m.flush_l1(0, Some(tk), t);
+        assert_eq!(m.stats.lines_flushed, 1);
+        assert!(m.cu(0).l1.is_dirty(line_of(0x440)));
+        let _ = t;
+    }
+
+    #[test]
+    fn invalidate_clears_tables_and_lines() {
+        let mut m = sys();
+        let (tk, t) = m.l1_write_ticketed(0, 0x500, 4, 1, 0);
+        m.cu_mut(0).lr_tbl.record(0x500, tk);
+        m.cu_mut(0).pa_tbl.record(0x500);
+        let t = m.invalidate_l1(0, t);
+        assert!(m.cu(0).lr_tbl.is_empty());
+        assert!(m.cu(0).pa_tbl.is_empty());
+        assert_eq!(m.cu(0).l1.valid_line_count(), 0);
+        assert!(t > 0);
+        // Data reached the L2 (not lost).
+        let (v, _) = m.l1_read(1, 0x500, 4, t);
+        assert_eq!(v, 1);
+    }
+
+    #[test]
+    fn kernel_end_makes_writes_host_visible() {
+        let mut m = sys();
+        let t = m.l1_write(2, 0x600, 4, 123, 0);
+        m.kernel_end_barrier(t);
+        assert_eq!(m.backing.read_u32(0x600), 123);
+        m.check_invariants();
+    }
+
+    #[test]
+    fn l2_line_lock_delays_access() {
+        let mut m = sys();
+        m.lock_l2_line(line_of(0x700), 1000);
+        let (_v, t) = m.l1_read(0, 0x700, 4, 0);
+        assert!(t >= 1000, "read must wait for the line lock, got {t}");
+    }
+
+    #[test]
+    fn sfifo_overflow_writes_back_in_background() {
+        let mut m = sys();
+        let mut t = 0;
+        // More distinct dirty lines than sFIFO entries (16).
+        for i in 0..32u64 {
+            t = m.l1_write(0, 0x8000 + i * 64, 4, i, t);
+        }
+        assert!(m.stats.l1_writebacks >= 16, "overflow must drain oldest");
+        m.check_invariants();
+    }
+
+    #[test]
+    fn invariants_hold_under_mixed_traffic() {
+        let mut m = sys();
+        let mut t = 0;
+        for i in 0..200u64 {
+            let addr = 0x1000 + ((i * 97) % 4096 & !7); // 8-byte aligned
+
+            if i % 3 == 0 {
+                t = m.l1_write((i % 4) as u32, addr, 4, i, t);
+            } else {
+                let (_, tt) = m.l1_read(((i + 1) % 4) as u32, addr, 4, t);
+                t = tt;
+            }
+            if i % 7 == 0 {
+                let (_, _, tt) = m.l1_atomic((i % 4) as u32, addr & !63, AtomicOp::Add, 1, 0, t);
+                t = tt;
+            }
+        }
+        m.check_invariants();
+    }
+}

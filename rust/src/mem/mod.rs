@@ -1,0 +1,84 @@
+//! The simulated GPU memory system.
+//!
+//! Value-accurate and cycle-approximate: caches hold real bytes (so stale
+//! reads genuinely return stale data — the litmus tests depend on it), and
+//! timing comes from per-component latencies plus banked next-free-cycle
+//! contention.
+//!
+//! Hierarchy (paper §2, Table 1): per-CU L1 data caches (write-combining,
+//! no-allocate-on-write, sFIFO dirty tracking) → shared banked L2 (also
+//! write-combining with its own sFIFO) → channelled DRAM over the flat
+//! [`BackingStore`].
+
+pub mod backing;
+pub mod cache;
+pub mod hierarchy;
+pub mod sfifo;
+pub mod timing;
+
+pub use backing::{BackingStore, MemAlloc};
+pub use cache::{Line, WcCache};
+pub use hierarchy::MemSystem;
+pub use sfifo::{Sfifo, Ticket};
+pub use timing::{Banked, Resource};
+
+/// Byte address in the flat simulated address space.
+pub type Addr = u64;
+
+/// Cache-line granularity address (addr >> 6).
+pub type LineAddr = u64;
+
+/// Line size in bytes (fixed at 64, per Table 1).
+pub const LINE: u64 = 64;
+pub const LINE_SHIFT: u32 = 6;
+
+/// Line address of a byte address.
+#[inline]
+pub fn line_of(addr: Addr) -> LineAddr {
+    addr >> LINE_SHIFT
+}
+
+/// Byte offset within a line.
+#[inline]
+pub fn offset_in_line(addr: Addr) -> usize {
+    (addr & (LINE - 1)) as usize
+}
+
+/// Byte mask (one bit per byte of a 64-byte line) covering `len` bytes at
+/// in-line offset `off`.
+#[inline]
+pub fn byte_mask(off: usize, len: usize) -> u64 {
+    debug_assert!(off + len <= 64, "access straddles a line: off={off} len={len}");
+    if len == 64 {
+        u64::MAX
+    } else {
+        ((1u64 << len) - 1) << off
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_math() {
+        assert_eq!(line_of(0), 0);
+        assert_eq!(line_of(63), 0);
+        assert_eq!(line_of(64), 1);
+        assert_eq!(offset_in_line(64 + 5), 5);
+    }
+
+    #[test]
+    fn masks() {
+        assert_eq!(byte_mask(0, 4), 0xF);
+        assert_eq!(byte_mask(4, 4), 0xF0);
+        assert_eq!(byte_mask(0, 64), u64::MAX);
+        assert_eq!(byte_mask(60, 4), 0xF << 60);
+    }
+
+    #[test]
+    #[should_panic]
+    fn straddle_panics_in_debug() {
+        byte_mask(62, 4);
+    }
+}

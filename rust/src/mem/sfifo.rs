@@ -1,0 +1,169 @@
+//! The synchronization FIFO (sFIFO) of QuickRelease (Hechtman et al.,
+//! HPCA'14), as used by the paper's baseline GPU and by sRSP.
+//!
+//! The sFIFO tracks the addresses of dirty cache lines in write order. A
+//! cache-flush drains it in FIFO order; sRSP's *selective-flush* drains it
+//! only **up to a ticket** — the sFIFO position recorded in the LR-TBL by
+//! the local sharer's last wg-scope release.
+//!
+//! Entries are lazily invalidated: a line that was written back early (e.g.
+//! evicted by replacement) keeps its stale entry; draining skips entries
+//! whose line is no longer dirty. Capacity pressure therefore counts stale
+//! entries too, exactly like a real FIFO of addresses would.
+
+use super::LineAddr;
+use std::collections::VecDeque;
+
+/// Monotone position in a cache's dirty-write order. Ticket `t1 < t2`
+/// means the write tracked by `t1` entered the sFIFO first.
+pub type Ticket = u64;
+
+/// One sFIFO entry: the ticket and the dirty line it tracks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SfifoEntry {
+    pub ticket: Ticket,
+    pub line: LineAddr,
+}
+
+/// Bounded FIFO of dirty-line addresses.
+#[derive(Debug)]
+pub struct Sfifo {
+    entries: VecDeque<SfifoEntry>,
+    capacity: usize,
+    next_ticket: Ticket,
+}
+
+impl Sfifo {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "sFIFO capacity must be > 0");
+        Self {
+            entries: VecDeque::with_capacity(capacity),
+            capacity,
+            next_ticket: 0,
+        }
+    }
+
+    /// Push a newly-dirtied line. If the FIFO is full the **oldest entry is
+    /// popped and returned**; the caller must write that line back before
+    /// completing the push (QuickRelease overflow behaviour).
+    pub fn push(&mut self, line: LineAddr) -> (Ticket, Option<SfifoEntry>) {
+        let evicted = if self.entries.len() == self.capacity {
+            self.entries.pop_front()
+        } else {
+            None
+        };
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        self.entries.push_back(SfifoEntry { ticket, line });
+        (ticket, evicted)
+    }
+
+    /// Pop the oldest entry (drain step).
+    pub fn pop(&mut self) -> Option<SfifoEntry> {
+        self.entries.pop_front()
+    }
+
+    /// Pop the oldest entry only if its ticket is `<= upto`.
+    pub fn pop_if_at_most(&mut self, upto: Ticket) -> Option<SfifoEntry> {
+        match self.entries.front() {
+            Some(e) if e.ticket <= upto => self.entries.pop_front(),
+            _ => None,
+        }
+    }
+
+    /// Ticket that the *next* push would receive. All existing entries have
+    /// tickets strictly below this.
+    pub fn frontier(&self) -> Ticket {
+        self.next_ticket
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Oldest ticket still queued (None when empty).
+    pub fn oldest_ticket(&self) -> Option<Ticket> {
+        self.entries.front().map(|e| e.ticket)
+    }
+
+    /// Iterate entries oldest-first (diagnostics / invariant checks).
+    pub fn iter(&self) -> impl Iterator<Item = &SfifoEntry> {
+        self.entries.iter()
+    }
+
+    /// Clear all entries (used by flash-invalidate after a full drain; the
+    /// caller asserts no dirty line remains).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_tickets() {
+        let mut f = Sfifo::new(4);
+        let (t0, e0) = f.push(10);
+        let (t1, e1) = f.push(11);
+        assert!(t0 < t1);
+        assert!(e0.is_none() && e1.is_none());
+        assert_eq!(f.pop().unwrap().line, 10);
+        assert_eq!(f.pop().unwrap().line, 11);
+        assert!(f.pop().is_none());
+    }
+
+    #[test]
+    fn overflow_evicts_oldest() {
+        let mut f = Sfifo::new(2);
+        f.push(1);
+        f.push(2);
+        let (_, evicted) = f.push(3);
+        assert_eq!(evicted.unwrap().line, 1);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.pop().unwrap().line, 2);
+    }
+
+    #[test]
+    fn selective_drain_respects_ticket() {
+        let mut f = Sfifo::new(8);
+        let (t0, _) = f.push(100);
+        let (t1, _) = f.push(101);
+        let (_t2, _) = f.push(102);
+        // Drain up to t1: pops entries t0 and t1, leaves t2.
+        assert_eq!(f.pop_if_at_most(t1).unwrap().ticket, t0);
+        assert_eq!(f.pop_if_at_most(t1).unwrap().ticket, t1);
+        assert!(f.pop_if_at_most(t1).is_none());
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn drain_to_already_popped_ticket_is_noop() {
+        let mut f = Sfifo::new(8);
+        let (t0, _) = f.push(5);
+        f.pop();
+        // t0 is gone; draining to it pops nothing.
+        assert!(f.pop_if_at_most(t0).is_none());
+    }
+
+    #[test]
+    fn frontier_monotone() {
+        let mut f = Sfifo::new(2);
+        let a = f.frontier();
+        f.push(1);
+        f.push(2);
+        f.push(3); // overflow
+        let b = f.frontier();
+        assert!(b > a);
+        assert_eq!(b, 3);
+    }
+}

@@ -1,0 +1,9 @@
+//! The PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and serves
+//! them as the simulator's [`TileMath`](crate::workload::TileMath)
+//! backend. Python never runs here — the HLO text is compiled by the
+//! `xla` crate's PJRT CPU client and executed natively.
+
+pub mod pjrt;
+
+pub use pjrt::{PjrtMath, PjrtRuntime};

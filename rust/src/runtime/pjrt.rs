@@ -1,0 +1,251 @@
+//! PJRT bridge: HLO-text artifacts → compiled executables → `TileMath`.
+//!
+//! Loading follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. The artifacts were lowered with
+//! `return_tuple=True`, so every result is a 1-tuple.
+//!
+//! The tile contract (ROWS×K) must match the Python side
+//! (`python/compile/kernels/ref.py`) — checked against `manifest.json`
+//! at load time.
+
+use crate::workload::engine::{TileMath, K_TILE};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Tile rows per executable invocation (the AOT-lowered batch height).
+pub const ROWS: usize = 256;
+
+/// Compiled artifacts, ready to execute.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pagerank: xla::PjRtLoadedExecutable,
+    sssp: xla::PjRtLoadedExecutable,
+    mis: xla::PjRtLoadedExecutable,
+    /// Executions performed (diagnostics).
+    pub calls: u64,
+}
+
+impl PjrtRuntime {
+    /// Load and compile all artifacts from `dir` (usually `artifacts/`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        if manifest_path.exists() {
+            let manifest = std::fs::read_to_string(&manifest_path)?;
+            // Minimal manifest validation without a JSON dep: the tile
+            // contract constants must appear verbatim.
+            if !manifest.contains(&format!("\"rows\": {ROWS}"))
+                || !manifest.contains(&format!("\"k\": {K_TILE}"))
+            {
+                bail!(
+                    "artifact tile contract mismatch: expected rows={ROWS} k={K_TILE}; \
+                     re-run `make artifacts`"
+                );
+            }
+        }
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let load = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing {path:?} (run `make artifacts`?)"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))
+        };
+        Ok(Self {
+            pagerank: load("pagerank")?,
+            sssp: load("sssp")?,
+            mis: load("mis")?,
+            client,
+            calls: 0,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Run the PageRank step on one padded tile.
+    fn run_pagerank(&mut self, contribs: &[f32], damping: f32, inv_n: f32) -> Result<Vec<f32>> {
+        debug_assert_eq!(contribs.len(), ROWS * K_TILE);
+        self.calls += 1;
+        let c = xla::Literal::vec1(contribs).reshape(&[ROWS as i64, K_TILE as i64])?;
+        let d = xla::Literal::vec1(&[damping]);
+        let n = xla::Literal::vec1(&[inv_n]);
+        let result = self.pagerank.execute::<xla::Literal>(&[c, d, n])?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        Ok(result.to_vec::<f32>()?)
+    }
+
+    fn run_sssp(&mut self, tile: &[i32]) -> Result<Vec<i32>> {
+        debug_assert_eq!(tile.len(), ROWS * K_TILE);
+        self.calls += 1;
+        let t = xla::Literal::vec1(tile).reshape(&[ROWS as i64, K_TILE as i64])?;
+        let result = self.sssp.execute::<xla::Literal>(&[t])?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        Ok(result.to_vec::<i32>()?)
+    }
+
+    fn run_mis(&mut self, my_pri: &[u32], nbr_pri: &[u32]) -> Result<Vec<u32>> {
+        debug_assert_eq!(my_pri.len(), ROWS);
+        debug_assert_eq!(nbr_pri.len(), ROWS * K_TILE);
+        self.calls += 1;
+        let m = xla::Literal::vec1(my_pri);
+        let n = xla::Literal::vec1(nbr_pri).reshape(&[ROWS as i64, K_TILE as i64])?;
+        let result = self.mis.execute::<xla::Literal>(&[m, n])?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        Ok(result.to_vec::<u32>()?)
+    }
+}
+
+/// [`TileMath`] backend over the PJRT executables. Variable-row requests
+/// are padded to the fixed ROWS batch (padding conventions per
+/// `kernels/ref.py`); oversized requests are split into multiple calls.
+pub struct PjrtMath {
+    pub rt: PjrtRuntime,
+}
+
+impl PjrtMath {
+    pub fn new(rt: PjrtRuntime) -> Self {
+        Self { rt }
+    }
+
+    /// Convenience: load from the default `artifacts/` directory.
+    pub fn from_artifacts(dir: &Path) -> Result<Self> {
+        Ok(Self::new(PjrtRuntime::load(dir)?))
+    }
+}
+
+impl TileMath for PjrtMath {
+    fn pagerank_rows(&mut self, contribs: &[f32], rows: usize, damping: f32, n: u32) -> Vec<f32> {
+        assert_eq!(contribs.len(), rows * K_TILE);
+        let inv_n = 1.0 / n as f32;
+        let mut out = Vec::with_capacity(rows);
+        for chunk in contribs.chunks(ROWS * K_TILE) {
+            let valid = chunk.len() / K_TILE;
+            let mut padded = vec![0f32; ROWS * K_TILE];
+            padded[..chunk.len()].copy_from_slice(chunk);
+            let r = self
+                .rt
+                .run_pagerank(&padded, damping, inv_n)
+                .expect("pagerank artifact execution");
+            out.extend_from_slice(&r[..valid]);
+        }
+        out
+    }
+
+    fn sssp_rows(&mut self, dist_plus_w: &[i32], rows: usize) -> Vec<i32> {
+        assert_eq!(dist_plus_w.len(), rows * K_TILE);
+        let mut out = Vec::with_capacity(rows);
+        for chunk in dist_plus_w.chunks(ROWS * K_TILE) {
+            let valid = chunk.len() / K_TILE;
+            let mut padded = vec![i32::MAX; ROWS * K_TILE];
+            padded[..chunk.len()].copy_from_slice(chunk);
+            let r = self.rt.run_sssp(&padded).expect("sssp artifact execution");
+            out.extend_from_slice(&r[..valid]);
+        }
+        out
+    }
+
+    fn mis_rows(&mut self, my_pri: &[u32], nbr_pri: &[u32], rows: usize) -> Vec<bool> {
+        assert_eq!(my_pri.len(), rows);
+        assert_eq!(nbr_pri.len(), rows * K_TILE);
+        let mut out = Vec::with_capacity(rows);
+        for (mp, np) in my_pri.chunks(ROWS).zip(nbr_pri.chunks(ROWS * K_TILE)) {
+            let valid = mp.len();
+            let mut pm = vec![0u32; ROWS];
+            pm[..valid].copy_from_slice(mp);
+            // Padded rows: my_pri 0 vs all-zero neighbors -> 0 > 0 false.
+            let mut pn = vec![0u32; ROWS * K_TILE];
+            pn[..np.len()].copy_from_slice(np);
+            let r = self.rt.run_mis(&pm, &pn).expect("mis artifact execution");
+            out.extend(r[..valid].iter().map(|&x| x != 0));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::engine::NativeMath;
+    use crate::sim::SplitMix64;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn load() -> Option<PjrtMath> {
+        let dir = artifacts_dir();
+        if !dir.join("pagerank.hlo.txt").exists() {
+            eprintln!("skipping PJRT test: run `make artifacts` first");
+            return None;
+        }
+        Some(PjrtMath::from_artifacts(&dir).expect("load artifacts"))
+    }
+
+    #[test]
+    fn pjrt_matches_native_pagerank() {
+        let Some(mut pjrt) = load() else { return };
+        let mut native = NativeMath;
+        let mut rng = SplitMix64::new(1);
+        for rows in [1usize, 7, 256, 300] {
+            let contribs: Vec<f32> = (0..rows * K_TILE)
+                .map(|_| (rng.f64() as f32) * 0.01)
+                .collect();
+            let a = pjrt.pagerank_rows(&contribs, rows, 0.85, 4096);
+            let b = native.pagerank_rows(&contribs, rows, 0.85, 4096);
+            assert_eq!(a.len(), rows);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_matches_native_sssp_exact() {
+        let Some(mut pjrt) = load() else { return };
+        let mut native = NativeMath;
+        let mut rng = SplitMix64::new(2);
+        for rows in [1usize, 255, 257] {
+            let tile: Vec<i32> = (0..rows * K_TILE)
+                .map(|_| rng.below(0x3FFF_FFFF) as i32)
+                .collect();
+            assert_eq!(
+                pjrt.sssp_rows(&tile, rows),
+                native.sssp_rows(&tile, rows),
+                "rows={rows}"
+            );
+        }
+    }
+
+    #[test]
+    fn pjrt_matches_native_mis_exact_unsigned() {
+        let Some(mut pjrt) = load() else { return };
+        let mut native = NativeMath;
+        let mut rng = SplitMix64::new(3);
+        let rows = 300usize;
+        // Full u32 range: catches signed-comparison bugs.
+        let my: Vec<u32> = (0..rows).map(|_| rng.next_u32()).collect();
+        let nbr: Vec<u32> = (0..rows * K_TILE).map(|_| rng.next_u32()).collect();
+        assert_eq!(pjrt.mis_rows(&my, &nbr, rows), native.mis_rows(&my, &nbr, rows));
+    }
+
+    #[test]
+    fn tile_contract_mismatch_detected() {
+        let dir = std::env::temp_dir().join("srsp_bad_artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{\"rows\": 1, \"k\": 1}").unwrap();
+        let err = match PjrtRuntime::load(&dir) {
+            Ok(_) => panic!("mismatched manifest must be rejected"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("tile contract"));
+    }
+}

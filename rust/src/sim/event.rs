@@ -1,0 +1,134 @@
+//! The global event queue: deterministic min-heap of work-group wakeups.
+
+use super::Cycle;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A scheduled wakeup for a work-group context.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Cycle at which the work-group becomes runnable again.
+    pub cycle: Cycle,
+    /// Monotone sequence number; breaks ties deterministically (FIFO among
+    /// events scheduled for the same cycle).
+    pub seq: u64,
+    /// Work-group id to resume.
+    pub wg: u32,
+}
+
+// BinaryHeap is a max-heap; invert the ordering for earliest-first.
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .cycle
+            .cmp(&self.cycle)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic earliest-first event queue.
+///
+/// Determinism contract: two runs that push the same (cycle, wg) sequence
+/// pop the same order, because ties are broken by insertion sequence.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    next_seq: u64,
+    /// High-water mark of the simulated clock: the cycle of the last popped
+    /// event. Time never goes backwards.
+    now: Cycle,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `wg` to resume at `cycle`. Scheduling in the past is clamped
+    /// to `now` (can happen when a zero-latency operation completes).
+    pub fn schedule(&mut self, cycle: Cycle, wg: u32) {
+        let cycle = cycle.max(self.now);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event { cycle, seq, wg });
+    }
+
+    /// Pop the earliest event, advancing the clock.
+    pub fn pop(&mut self) -> Option<Event> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.cycle >= self.now, "time went backwards");
+        self.now = ev.cycle;
+        Some(ev)
+    }
+
+    /// Current simulated cycle (cycle of the last popped event).
+    pub fn now(&self) -> Cycle {
+        self.now
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_cycle_order() {
+        let mut q = EventQueue::new();
+        q.schedule(30, 0);
+        q.schedule(10, 1);
+        q.schedule(20, 2);
+        assert_eq!(q.pop().unwrap().wg, 1);
+        assert_eq!(q.pop().unwrap().wg, 2);
+        assert_eq!(q.pop().unwrap().wg, 0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut q = EventQueue::new();
+        for wg in 0..8 {
+            q.schedule(5, wg);
+        }
+        for wg in 0..8 {
+            assert_eq!(q.pop().unwrap().wg, wg);
+        }
+    }
+
+    #[test]
+    fn clock_monotone_and_past_clamped() {
+        let mut q = EventQueue::new();
+        q.schedule(100, 0);
+        assert_eq!(q.pop().unwrap().cycle, 100);
+        assert_eq!(q.now(), 100);
+        // Scheduling "in the past" clamps to now.
+        q.schedule(50, 1);
+        let ev = q.pop().unwrap();
+        assert_eq!(ev.cycle, 100);
+        assert_eq!(q.now(), 100);
+    }
+
+    #[test]
+    fn len_and_empty() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.schedule(1, 0);
+        q.schedule(2, 1);
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.len(), 1);
+        assert!(!q.is_empty());
+    }
+}

@@ -1,0 +1,21 @@
+//! Discrete-event simulation core.
+//!
+//! The simulator is *serialized* discrete-event: a single [`EventQueue`]
+//! orders work-group wakeups by `(cycle, seq)`; each wakeup executes one (or
+//! a quantum of) KIR instruction(s) functionally at that cycle and
+//! reschedules at its computed completion cycle. Contention is modeled by
+//! banked next-free-cycle resources ([`timing`](crate::mem::timing)) rather
+//! than split transactions — adequate for the paper's first-order effects
+//! (flush drain cost, invalidation-induced miss storms, L2 port pressure).
+
+pub mod event;
+pub mod rng;
+pub mod stats;
+
+pub use event::{Event, EventQueue};
+pub use rng::SplitMix64;
+pub use stats::Stats;
+
+/// Simulated GPU core clock cycle. The device clock is the unit of all
+/// latencies in [`DeviceConfig`](crate::config::DeviceConfig).
+pub type Cycle = u64;

@@ -1,0 +1,248 @@
+//! Simulation statistics: the counters behind the paper's figures.
+//!
+//! Hot counters (cache hits/misses, L2 accesses) are plain struct fields —
+//! they are bumped on every simulated memory operation. Rarer, named
+//! counters go through the `misc` map.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// All counters collected during one kernel run / scenario execution.
+///
+/// `l2_accesses` is the paper's bandwidth-utilization proxy (Fig. 5);
+/// `sync_overhead_cycles` is the promotion-cost metric behind Fig. 6.
+#[derive(Debug, Default, Clone)]
+pub struct Stats {
+    // --- L1 (summed over all CUs) ---
+    pub l1_hits: u64,
+    pub l1_misses: u64,
+    pub l1_writes: u64,
+    pub l1_writebacks: u64,
+    /// Full cache-flush operations (drain entire sFIFO).
+    pub l1_flushes: u64,
+    /// Flash-invalidate operations.
+    pub l1_invalidates: u64,
+    /// Dirty lines written back by flush/selective-flush drains.
+    pub lines_flushed: u64,
+    /// Valid lines discarded by invalidates (locality destroyed).
+    pub lines_invalidated: u64,
+
+    // --- Selective (sRSP) operations ---
+    pub selective_flush_requests: u64,
+    /// Selective-flush requests answered immediately (LR-TBL miss).
+    pub selective_flush_nops: u64,
+    /// Selective-flush requests that drained (LR-TBL hit).
+    pub selective_flush_drains: u64,
+    pub selective_inv_requests: u64,
+    /// wg-scope acquires promoted to global scope by a PA-TBL hit.
+    pub promoted_acquires: u64,
+    /// wg-scope acquires that stayed local (PA-TBL miss).
+    pub local_acquires: u64,
+    pub lr_tbl_insertions: u64,
+    pub lr_tbl_overflows: u64,
+    pub pa_tbl_insertions: u64,
+    pub pa_tbl_overflows: u64,
+
+    // --- L2 / DRAM ---
+    /// Total L2 accesses (reads + writes + atomics): the Fig. 5 metric.
+    pub l2_accesses: u64,
+    pub l2_hits: u64,
+    pub l2_misses: u64,
+    pub l2_atomics: u64,
+    pub dram_reads: u64,
+    pub dram_writes: u64,
+
+    // --- Synchronization operations ---
+    pub wg_acquires: u64,
+    pub wg_releases: u64,
+    pub cmp_acquires: u64,
+    pub cmp_releases: u64,
+    pub remote_acquires: u64,
+    pub remote_releases: u64,
+    pub remote_acqrels: u64,
+    /// Cycles spent inside synchronization operations (the Fig. 6 metric):
+    /// everything beyond a plain L1-latency access for an op that carries
+    /// acquire/release semantics or remote promotion.
+    pub sync_overhead_cycles: u64,
+
+    // --- Work stealing ---
+    pub tasks_executed: u64,
+    pub tasks_stolen: u64,
+    pub steal_attempts: u64,
+    pub steal_failures: u64,
+
+    // --- Execution ---
+    pub instructions: u64,
+    pub compute_ops: u64,
+    pub compute_items: u64,
+    /// Final cycle of the kernel (the performance metric of Fig. 4).
+    pub cycles: u64,
+
+    /// Rare named counters.
+    pub misc: BTreeMap<&'static str, u64>,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bump a named counter.
+    pub fn bump(&mut self, name: &'static str, by: u64) {
+        *self.misc.entry(name).or_insert(0) += by;
+    }
+
+    /// L1 hit rate over reads.
+    pub fn l1_hit_rate(&self) -> f64 {
+        let total = self.l1_hits + self.l1_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.l1_hits as f64 / total as f64
+        }
+    }
+
+    /// Merge another stats block into this one (cycles take the max: they
+    /// are end-times, not sums).
+    pub fn merge(&mut self, other: &Stats) {
+        macro_rules! add {
+            ($($f:ident),*) => { $( self.$f += other.$f; )* };
+        }
+        add!(
+            l1_hits, l1_misses, l1_writes, l1_writebacks, l1_flushes, l1_invalidates,
+            lines_flushed, lines_invalidated, selective_flush_requests,
+            selective_flush_nops, selective_flush_drains, selective_inv_requests,
+            promoted_acquires, local_acquires, lr_tbl_insertions, lr_tbl_overflows,
+            pa_tbl_insertions, pa_tbl_overflows, l2_accesses, l2_hits, l2_misses,
+            l2_atomics, dram_reads, dram_writes, wg_acquires, wg_releases,
+            cmp_acquires, cmp_releases, remote_acquires, remote_releases,
+            remote_acqrels, sync_overhead_cycles, tasks_executed, tasks_stolen,
+            steal_attempts, steal_failures, instructions, compute_ops, compute_items
+        );
+        self.cycles = self.cycles.max(other.cycles);
+        for (k, v) in &other.misc {
+            *self.misc.entry(k).or_insert(0) += v;
+        }
+    }
+}
+
+impl fmt::Display for Stats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "cycles                 {:>14}", self.cycles)?;
+        writeln!(f, "instructions           {:>14}", self.instructions)?;
+        writeln!(
+            f,
+            "L1  hits/misses        {:>14}/{} (hit rate {:.1}%)",
+            self.l1_hits,
+            self.l1_misses,
+            100.0 * self.l1_hit_rate()
+        )?;
+        writeln!(f, "L1  writebacks         {:>14}", self.l1_writebacks)?;
+        writeln!(
+            f,
+            "L1  flushes/invalidates{:>14}/{}",
+            self.l1_flushes, self.l1_invalidates
+        )?;
+        writeln!(
+            f,
+            "    lines flushed/inv  {:>14}/{}",
+            self.lines_flushed, self.lines_invalidated
+        )?;
+        writeln!(f, "L2  accesses           {:>14}", self.l2_accesses)?;
+        writeln!(
+            f,
+            "L2  hits/misses/atomics{:>14}/{}/{}",
+            self.l2_hits, self.l2_misses, self.l2_atomics
+        )?;
+        writeln!(
+            f,
+            "DRAM reads/writes      {:>14}/{}",
+            self.dram_reads, self.dram_writes
+        )?;
+        writeln!(
+            f,
+            "sync wg acq/rel        {:>14}/{}",
+            self.wg_acquires, self.wg_releases
+        )?;
+        writeln!(
+            f,
+            "sync cmp acq/rel       {:>14}/{}",
+            self.cmp_acquires, self.cmp_releases
+        )?;
+        writeln!(
+            f,
+            "sync remote acq/rel/ar {:>14}/{}/{}",
+            self.remote_acquires, self.remote_releases, self.remote_acqrels
+        )?;
+        writeln!(
+            f,
+            "sync overhead cycles   {:>14}",
+            self.sync_overhead_cycles
+        )?;
+        writeln!(
+            f,
+            "promoted/local acq     {:>14}/{}",
+            self.promoted_acquires, self.local_acquires
+        )?;
+        writeln!(
+            f,
+            "sel flush req/nop/drain{:>14}/{}/{}",
+            self.selective_flush_requests,
+            self.selective_flush_nops,
+            self.selective_flush_drains
+        )?;
+        writeln!(
+            f,
+            "tasks exec/stolen      {:>14}/{}",
+            self.tasks_executed, self.tasks_stolen
+        )?;
+        writeln!(
+            f,
+            "steal attempts/failures{:>14}/{}",
+            self.steal_attempts, self.steal_failures
+        )?;
+        for (k, v) in &self.misc {
+            writeln!(f, "{k:<23}{v:>14}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bump_and_merge() {
+        let mut a = Stats::new();
+        a.l1_hits = 10;
+        a.cycles = 100;
+        a.bump("x", 3);
+        let mut b = Stats::new();
+        b.l1_hits = 5;
+        b.cycles = 250;
+        b.bump("x", 2);
+        b.bump("y", 1);
+        a.merge(&b);
+        assert_eq!(a.l1_hits, 15);
+        assert_eq!(a.cycles, 250); // max, not sum
+        assert_eq!(a.misc["x"], 5);
+        assert_eq!(a.misc["y"], 1);
+    }
+
+    #[test]
+    fn hit_rate_guards_div0() {
+        let s = Stats::new();
+        assert_eq!(s.l1_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn display_smoke() {
+        let mut s = Stats::new();
+        s.l1_hits = 1;
+        s.bump("custom", 7);
+        let text = format!("{s}");
+        assert!(text.contains("custom"));
+        assert!(text.contains("L2  accesses"));
+    }
+}

@@ -1,0 +1,20 @@
+//! Scoped synchronization semantics and the three protocol engines.
+//!
+//! * [`scope`] — OpenCL-style scopes and memory orderings, atomic ops.
+//! * [`tables`] — the paper's new per-L1 hardware: **LR-TBL** (local release
+//!   table: sync address → sFIFO ticket of the last wg-scope release) and
+//!   **PA-TBL** (promoted-acquire table: addresses whose next wg-scope
+//!   acquire must be promoted to global scope).
+//! * [`engine`] — the orchestration of scoped / remote operations over the
+//!   [`MemSystem`](crate::mem::MemSystem) primitives, per
+//!   [`Protocol`](crate::config::Protocol):
+//!   global-scope baseline, naive RSP (flush/invalidate every L1) and sRSP
+//!   (selective-flush / selective-invalidate).
+
+pub mod engine;
+pub mod scope;
+pub mod tables;
+
+pub use engine::{remote_op, sync_op, SyncOutcome};
+pub use scope::{AtomicOp, MemOrder, Scope};
+pub use tables::{LrTbl, PaTbl};

@@ -1,0 +1,139 @@
+//! Scopes, memory orderings and atomic operations (paper §2.1).
+
+use std::fmt;
+
+/// OpenCL synchronization scopes. The simulator distinguishes the two the
+/// paper evaluates: work-group (local, L1-level) and device (global,
+/// L2-level). `System` is modeled for completeness (L2 flush + backing
+/// store atomics) but unused by the workloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scope {
+    /// Work-group scope (`wg`): synchronizes through the CU-private L1.
+    Wg,
+    /// Device scope (`cmp`): synchronizes through the shared L2.
+    Cmp,
+    /// System scope (`sys`): synchronizes through the backing store.
+    Sys,
+}
+
+impl fmt::Display for Scope {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Scope::Wg => "wg",
+            Scope::Cmp => "cmp",
+            Scope::Sys => "sys",
+        })
+    }
+}
+
+/// Memory ordering attached to an atomic (acquire/release semantics,
+/// §2.1). `Relaxed` atomics synchronize nothing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemOrder {
+    Relaxed,
+    Acquire,
+    Release,
+    AcqRel,
+}
+
+impl MemOrder {
+    pub fn acquires(self) -> bool {
+        matches!(self, MemOrder::Acquire | MemOrder::AcqRel)
+    }
+    pub fn releases(self) -> bool {
+        matches!(self, MemOrder::Release | MemOrder::AcqRel)
+    }
+}
+
+/// Atomic read-modify-write operations available to KIR programs.
+/// All operate on naturally-aligned 4-byte words (the workloads' queue
+/// indices, locks and counters are u32, as in the paper's OpenCL code).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AtomicOp {
+    /// Plain atomic load.
+    Load,
+    /// Plain atomic store of the operand.
+    Store,
+    /// Compare-and-swap: `if *p == cmp { *p = new }`; returns old value.
+    Cas,
+    /// Fetch-add; returns old value.
+    Add,
+    /// Exchange; returns old value.
+    Exch,
+    /// Fetch-min (unsigned); returns old value.
+    Min,
+}
+
+impl AtomicOp {
+    /// Apply the operation to the current value; returns
+    /// `(new_value_to_store, result_returned_to_program)`.
+    /// `Load` stores nothing (new == old).
+    pub fn apply(self, old: u32, operand: u32, cmp: u32) -> (u32, u32) {
+        match self {
+            AtomicOp::Load => (old, old),
+            AtomicOp::Store => (operand, old),
+            AtomicOp::Cas => {
+                if old == cmp {
+                    (operand, old)
+                } else {
+                    (old, old)
+                }
+            }
+            AtomicOp::Add => (old.wrapping_add(operand), old),
+            AtomicOp::Exch => (operand, old),
+            AtomicOp::Min => (old.min(operand), old),
+        }
+    }
+
+    /// Does this op ever write?
+    pub fn writes(self) -> bool {
+        !matches!(self, AtomicOp::Load)
+    }
+
+    /// Does this op write given the observed old value? (CAS only writes
+    /// on success; Min only when the operand is smaller.)
+    pub fn writes_given(self, old: u32, operand: u32, cmp: u32) -> bool {
+        match self {
+            AtomicOp::Load => false,
+            AtomicOp::Cas => old == cmp,
+            AtomicOp::Min => operand < old,
+            _ => true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn order_predicates() {
+        assert!(MemOrder::Acquire.acquires() && !MemOrder::Acquire.releases());
+        assert!(MemOrder::Release.releases() && !MemOrder::Release.acquires());
+        assert!(MemOrder::AcqRel.acquires() && MemOrder::AcqRel.releases());
+        assert!(!MemOrder::Relaxed.acquires() && !MemOrder::Relaxed.releases());
+    }
+
+    #[test]
+    fn cas_semantics() {
+        assert_eq!(AtomicOp::Cas.apply(5, 9, 5), (9, 5)); // success
+        assert_eq!(AtomicOp::Cas.apply(6, 9, 5), (6, 6)); // failure
+        assert!(AtomicOp::Cas.writes_given(5, 9, 5));
+        assert!(!AtomicOp::Cas.writes_given(6, 9, 5));
+    }
+
+    #[test]
+    fn add_min_exch() {
+        assert_eq!(AtomicOp::Add.apply(10, 3, 0), (13, 10));
+        assert_eq!(AtomicOp::Min.apply(10, 3, 0), (3, 10));
+        assert_eq!(AtomicOp::Min.apply(3, 10, 0), (3, 3));
+        assert_eq!(AtomicOp::Exch.apply(1, 2, 0), (2, 1));
+        assert!(!AtomicOp::Min.writes_given(3, 10, 0));
+    }
+
+    #[test]
+    fn load_never_writes() {
+        assert!(!AtomicOp::Load.writes());
+        assert_eq!(AtomicOp::Load.apply(7, 99, 99), (7, 7));
+    }
+}

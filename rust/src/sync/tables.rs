@@ -1,0 +1,258 @@
+//! LR-TBL and PA-TBL: the two per-L1 hardware structures sRSP adds (§4).
+//!
+//! Both are small CAMs. Capacity overflow is handled *conservatively* — the
+//! paper does not specify overflow behaviour, so we model the safe hardware
+//! choice: a sticky overflow flag that degrades the table to
+//! "assume every address matches" until the next full invalidate clears it.
+//! Correctness is preserved (extra promotions/flushes are always safe);
+//! only performance degrades. The `ablations` bench sweeps capacities.
+
+use crate::mem::{Addr, Ticket};
+
+/// Local Release Table: one entry per sync-variable address that received a
+/// wg-scope release, holding the sFIFO ticket of the release's atomic write.
+///
+/// A *selective-flush(L)* request drains the sFIFO **up to** the recorded
+/// ticket iff the table holds an entry for `L` — the termination marker of
+/// §4.2.
+#[derive(Debug, Clone)]
+pub struct LrTbl {
+    entries: Vec<(Addr, Ticket)>,
+    capacity: usize,
+    /// Sticky: an entry had to be dropped; unknown addresses must be
+    /// treated as "might have had a local release" (full drain).
+    overflowed: bool,
+}
+
+impl LrTbl {
+    pub fn new(capacity: u32) -> Self {
+        Self {
+            entries: Vec::with_capacity(capacity as usize),
+            capacity: capacity as usize,
+            overflowed: false,
+        }
+    }
+
+    /// Record (or refresh) the last wg-scope release to `addr` at sFIFO
+    /// position `ticket`. Returns `true` on overflow (entry displaced).
+    pub fn record(&mut self, addr: Addr, ticket: Ticket) -> bool {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.0 == addr) {
+            e.1 = ticket;
+            return false;
+        }
+        if self.capacity == 0 {
+            self.overflowed = true;
+            return true;
+        }
+        if self.entries.len() == self.capacity {
+            // Displace the entry with the *oldest* ticket: its writes are
+            // the most likely to already be drained. Conservative flag set.
+            let oldest = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.1)
+                .map(|(i, _)| i)
+                .unwrap();
+            self.entries.swap_remove(oldest);
+            self.overflowed = true;
+            self.entries.push((addr, ticket));
+            return true;
+        }
+        self.entries.push((addr, ticket));
+        false
+    }
+
+    /// Ticket to drain to for a selective-flush of `addr`:
+    /// * `Some(Some(t))` — entry found, drain up to `t`.
+    /// * `Some(None)` — overflowed table: drain *everything* (conservative).
+    /// * `None` — definite miss, nothing to drain.
+    pub fn lookup(&self, addr: Addr) -> Option<Option<Ticket>> {
+        if let Some(e) = self.entries.iter().find(|e| e.0 == addr) {
+            return Some(Some(e.1));
+        }
+        if self.overflowed {
+            return Some(None);
+        }
+        None
+    }
+
+    /// Invalidate clears everything, including the sticky flag (§4.4: every
+    /// cache invalidation clears both tables).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.overflowed = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn has_overflowed(&self) -> bool {
+        self.overflowed
+    }
+
+    /// Invariant helper: every recorded ticket is below the sFIFO frontier.
+    pub fn max_ticket(&self) -> Option<Ticket> {
+        self.entries.iter().map(|e| e.1).max()
+    }
+}
+
+/// Result of recording an address in the PA-TBL.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PaRecord {
+    /// Entry stored (or already present).
+    Recorded,
+    /// Table full: the L1 controller must perform an *eager* full
+    /// invalidate (which clears both tables, discharging every deferred
+    /// promotion obligation) and then record. Correct — an invalidate is
+    /// always a legal over-approximation of a promotion — and local, so
+    /// the scalability of the selective scheme is preserved. A sticky
+    /// "promote everything" flag was measurably worse: with one deque per
+    /// CU the broadcasts fill every table and the device degenerates to
+    /// global scope.
+    NeedsInvalidate,
+}
+
+/// Promoted Acquire Table: addresses whose **next** wg-scope acquire must be
+/// promoted to global scope (§4.2–4.4).
+///
+/// A hit forces: full L1 invalidate (pulling fresh data from L2 afterwards)
+/// + the atomic performed at L2. A miss keeps the acquire at the L1.
+#[derive(Debug, Clone)]
+pub struct PaTbl {
+    entries: Vec<Addr>,
+    capacity: usize,
+}
+
+impl PaTbl {
+    pub fn new(capacity: u32) -> Self {
+        Self {
+            entries: Vec::with_capacity(capacity as usize),
+            capacity: capacity as usize,
+        }
+    }
+
+    /// Record that the next wg-scope acquire of `addr` needs promotion.
+    pub fn record(&mut self, addr: Addr) -> PaRecord {
+        if self.entries.contains(&addr) {
+            return PaRecord::Recorded;
+        }
+        if self.entries.len() >= self.capacity {
+            return PaRecord::NeedsInvalidate;
+        }
+        self.entries.push(addr);
+        PaRecord::Recorded
+    }
+
+    /// Must a wg-scope acquire of `addr` be promoted?
+    pub fn needs_promotion(&self, addr: Addr) -> bool {
+        self.entries.contains(&addr)
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.entries.len() >= self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_tbl_record_and_refresh() {
+        let mut t = LrTbl::new(4);
+        assert!(!t.record(0x100, 5));
+        assert_eq!(t.lookup(0x100), Some(Some(5)));
+        // Refresh with a newer ticket.
+        t.record(0x100, 9);
+        assert_eq!(t.lookup(0x100), Some(Some(9)));
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.lookup(0x200), None);
+    }
+
+    #[test]
+    fn lr_tbl_overflow_is_conservative() {
+        let mut t = LrTbl::new(2);
+        t.record(0x100, 1);
+        t.record(0x200, 2);
+        assert!(t.record(0x300, 3)); // overflow: 0x100 (oldest ticket) displaced
+        assert!(t.has_overflowed());
+        // The displaced address now reads as "drain everything".
+        assert_eq!(t.lookup(0x100), Some(None));
+        // Survivors still give precise tickets.
+        assert_eq!(t.lookup(0x300), Some(Some(3)));
+    }
+
+    #[test]
+    fn lr_tbl_clear_resets_overflow() {
+        let mut t = LrTbl::new(1);
+        t.record(0x100, 1);
+        t.record(0x200, 2);
+        assert!(t.has_overflowed());
+        t.clear();
+        assert!(!t.has_overflowed());
+        assert_eq!(t.lookup(0x100), None);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn zero_capacity_lr_tbl_always_conservative() {
+        let mut t = LrTbl::new(0);
+        assert!(t.record(0x100, 1));
+        assert_eq!(t.lookup(0x100), Some(None));
+        assert_eq!(t.lookup(0x999), Some(None));
+    }
+
+    #[test]
+    fn pa_tbl_basic() {
+        let mut t = PaTbl::new(4);
+        assert!(!t.needs_promotion(0x100));
+        assert_eq!(t.record(0x100), PaRecord::Recorded);
+        assert!(t.needs_promotion(0x100));
+        assert!(!t.needs_promotion(0x200));
+        assert_eq!(t.record(0x100), PaRecord::Recorded); // idempotent
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn pa_tbl_overflow_demands_invalidate() {
+        let mut t = PaTbl::new(1);
+        assert_eq!(t.record(0x100), PaRecord::Recorded);
+        assert!(t.is_full());
+        // Re-recording a present address is fine even when full.
+        assert_eq!(t.record(0x100), PaRecord::Recorded);
+        // A new address demands the eager invalidate.
+        assert_eq!(t.record(0x200), PaRecord::NeedsInvalidate);
+        // The invalidate clears the table; then recording succeeds.
+        t.clear();
+        assert_eq!(t.record(0x200), PaRecord::Recorded);
+        assert!(!t.needs_promotion(0x100));
+    }
+
+    #[test]
+    fn lr_tbl_max_ticket() {
+        let mut t = LrTbl::new(4);
+        assert_eq!(t.max_ticket(), None);
+        t.record(1, 10);
+        t.record(2, 30);
+        t.record(3, 20);
+        assert_eq!(t.max_ticket(), Some(30));
+    }
+}

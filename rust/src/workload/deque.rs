@@ -1,0 +1,439 @@
+//! The work-stealing queue (§5.1): one consume-only task queue per
+//! work-group, laid out in simulated memory and operated by generated KIR
+//! code.
+//!
+//! Tasks are pre-filled by the host before each launch (the per-iteration
+//! worklists of the Pannotia apps); the device only *consumes*. Claims go
+//! through a single **claim counter** per queue (`next`): the owner claims
+//! with a wg-scope AcqRel fetch-add — an L1-local operation on the fast
+//! path, recorded in the LR-TBL because it releases — and a thief claims
+//! with a `rem_ar` fetch-add whose promotion machinery (selective-flush of
+//! the owner's counter, PA-TBL arming of the owner's next acquire) makes
+//! the two sides linearize at the L2. `count` is launch-constant, so a
+//! stale view can only ever be *optimistic* (a stale-low `next` escalates
+//! to the promoting claim, which resolves the truth at the L2).
+//!
+//! This is the consume-only specialization of the Cederman–Tsigas GPU
+//! work-stealing queue: with no device-side enqueues, the two-ended deque
+//! degenerates to index claiming, which sidesteps the classic
+//! stale-`bottom` double-claim hazard that plagues ABP-style deques on
+//! non-coherent caches while preserving the paper's asymmetric-sharing
+//! pattern exactly (the counter is THE sync variable: owner-local fast
+//! path, remote-scope promotion on steal).
+//!
+//! Memory layout per queue (line-isolated):
+//!
+//! ```text
+//! +0   next  (u32, claim counter; THE sync variable)
+//! +64  count (u32, host-written task count, launch-constant)
+//! +128 tasks (u32 × capacity)
+//! ```
+
+use crate::config::Scenario;
+use crate::kir::{Asm, Reg, Src};
+use crate::mem::{Addr, BackingStore, MemAlloc, LINE};
+use crate::sync::{AtomicOp, MemOrder, Scope};
+
+/// Sentinel returned in the task register when the pop/steal failed.
+pub const EMPTY: u64 = u32::MAX as u64;
+
+/// Host-side description of the queue array.
+#[derive(Debug, Clone)]
+pub struct DequeLayout {
+    pub base: Addr,
+    pub capacity: u32,
+    pub num_queues: u32,
+    /// Bytes between consecutive queues (line multiple).
+    pub stride: u64,
+}
+
+impl DequeLayout {
+    /// Allocate `num_queues` queues of `capacity` tasks each.
+    pub fn alloc(alloc: &mut MemAlloc, num_queues: u32, capacity: u32) -> Self {
+        let tasks_bytes = capacity as u64 * 4;
+        let stride = (128 + tasks_bytes).div_ceil(LINE) * LINE;
+        let base = alloc.alloc(stride * num_queues as u64);
+        DequeLayout {
+            base,
+            capacity,
+            num_queues,
+            stride,
+        }
+    }
+
+    pub fn next_addr(&self, q: u32) -> Addr {
+        self.base + q as u64 * self.stride
+    }
+
+    pub fn count_addr(&self, q: u32) -> Addr {
+        self.next_addr(q) + 64
+    }
+
+    pub fn tasks_addr(&self, q: u32) -> Addr {
+        self.next_addr(q) + 128
+    }
+
+    /// Host: fill queue `q` with `tasks` before a launch (next = 0,
+    /// count = len). Panics if over capacity.
+    pub fn fill(&self, mem: &mut BackingStore, q: u32, tasks: &[u32]) {
+        assert!(tasks.len() <= self.capacity as usize, "queue overflow");
+        mem.write_u32(self.next_addr(q), 0);
+        mem.write_u32(self.count_addr(q), tasks.len() as u32);
+        for (i, &t) in tasks.iter().enumerate() {
+            assert!(t != EMPTY as u32, "task id collides with EMPTY sentinel");
+            mem.write_u32(self.tasks_addr(q) + i as u64 * 4, t);
+        }
+    }
+
+    /// Host: unclaimed tasks in queue `q` (post-kernel check; `next` may
+    /// overshoot `count` by failed claims).
+    pub fn remaining(&self, mem: &BackingStore, q: u32) -> i64 {
+        let n = mem.read_u32(self.next_addr(q)) as i64;
+        let c = mem.read_u32(self.count_addr(q)) as i64;
+        (c - n).max(0)
+    }
+}
+
+/// How a thief claims from a victim queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StealKind {
+    /// `rem_ar` remote-scope promotion (RSP / sRSP).
+    Remote,
+    /// cmp-scope AcqRel fetch-add (Steal-only).
+    Cmp,
+    /// wg-scope AcqRel fetch-add; the protocol (hLRC) transfers
+    /// ownership lazily.
+    Local,
+}
+
+/// Owner/steal sync flavor derived from the scenario.
+#[derive(Debug, Clone, Copy)]
+pub struct SyncFlavor {
+    /// Scope for the owner's claim fetch-add.
+    pub owner_scope: Scope,
+    /// How thieves claim.
+    pub steal: StealKind,
+}
+
+impl SyncFlavor {
+    pub fn of(s: Scenario) -> Self {
+        SyncFlavor {
+            owner_scope: if s.local_owner_sync() {
+                Scope::Wg
+            } else {
+                Scope::Cmp
+            },
+            steal: if s.remote_ops() {
+                StealKind::Remote
+            } else if s.lazy_transfer() {
+                StealKind::Local
+            } else {
+                StealKind::Cmp
+            },
+        }
+    }
+}
+
+/// Registers used by the queue codegen (caller allocates).
+pub struct DequeRegs {
+    /// In: base address of the queue (its `next` counter).
+    pub qbase: Reg,
+    /// Out: task id or EMPTY.
+    pub task: Reg,
+    /// Scratch.
+    pub t0: Reg,
+    pub t1: Reg,
+    pub t2: Reg,
+}
+
+/// Emit the owner claim. On fall-through `regs.task` holds the task id or
+/// [`EMPTY`]. Labels are suffixed with `tag` for uniqueness.
+///
+/// ```text
+/// i = fetch_add_acq_rel(next, 1)   // owner_scope (wg on the fast path)
+/// if i >= count: task = EMPTY
+/// else:          task = tasks[i]
+/// ```
+///
+/// The AcqRel ordering is load-bearing: the release records the counter in
+/// the LR-TBL (so a thief's promotion can selectively flush exactly up to
+/// this claim), and the acquire consults the PA-TBL (so the claim after a
+/// steal is promoted to the L2 and cannot double-claim).
+pub fn emit_owner_pop(a: &mut Asm, regs: &DequeRegs, flavor: SyncFlavor, tag: &str) {
+    let l_empty = format!("pop_empty_{tag}");
+    let l_done = format!("pop_done_{tag}");
+    let (qbase, task, i, c, t) = (regs.qbase, regs.task, regs.t0, regs.t1, regs.t2);
+
+    a.atomic(
+        i,
+        AtomicOp::Add,
+        qbase,
+        Src::I(1),
+        Src::I(0),
+        MemOrder::AcqRel,
+        flavor.owner_scope,
+    );
+    // count is launch-constant: plain load.
+    a.ld(c, qbase, 64, 4);
+    a.ge_u(t, i, Src::R(c));
+    a.bnz(t, &l_empty);
+    a.shl(t, i, Src::I(2));
+    a.add(t, t, Src::R(qbase));
+    a.ld(task, t, 128, 4);
+    a.br(&l_done);
+    a.label(&l_empty);
+    a.imm(task, EMPTY);
+    a.label(&l_done);
+}
+
+/// Emit the "advertise emptiness" sequence: publish the exhausted claim
+/// counter at device scope (`next = count`, relaxed cmp-scope store) so
+/// thieves' plain pre-checks read `next >= count` fresh from the L2 and
+/// skip the promoting claim. One L2 store per owner per launch; must only
+/// be emitted after the owner's pop observed EMPTY.
+pub fn emit_advertise_empty(a: &mut Asm, regs: &DequeRegs) {
+    let (qbase, _task, _i, c, t) = (regs.qbase, regs.task, regs.t0, regs.t1, regs.t2);
+    a.ld(c, qbase, 64, 4); // count (launch-constant)
+    a.atomic(
+        t,
+        AtomicOp::Store,
+        qbase,
+        Src::R(c),
+        Src::I(0),
+        MemOrder::Relaxed,
+        Scope::Cmp,
+    );
+}
+
+/// Emit the steal against a victim queue whose base address is in
+/// `regs.qbase`. On fall-through `regs.task` = task id or [`EMPTY`].
+///
+/// ```text
+/// n = load(next); c = load(count)       // plain pre-check (cheap)
+/// if n >= c: task = EMPTY               // stale n is only ever LOW, so
+///                                       //  a "full" view escalates and
+///                                       //  the promoting claim decides
+/// i = rem_ar fetch_add(next, 1)         // or cmp-scope AcqRel add
+/// if i >= c: task = EMPTY               // overshoot: queue was drained
+/// else:      task = tasks[i]
+/// ```
+///
+/// The pre-check matters at scale: queues the host filled empty read
+/// fresh (`n >= c`) from the L2 and cost two plain loads instead of a
+/// full remote-scope promotion; only plausibly-nonempty victims pay for
+/// the promoting fetch-add.
+pub fn emit_steal(a: &mut Asm, regs: &DequeRegs, flavor: SyncFlavor, tag: &str) {
+    let l_empty = format!("steal_empty_{tag}");
+    let l_done = format!("steal_done_{tag}");
+    let (qbase, task, i, c, t) = (regs.qbase, regs.task, regs.t0, regs.t1, regs.t2);
+
+    // Cheap plain pre-check.
+    a.ld(i, qbase, 0, 4);
+    a.ld(c, qbase, 64, 4);
+    a.ge_u(t, i, Src::R(c));
+    a.bnz(t, &l_empty);
+
+    // Promoting claim.
+    match flavor.steal {
+        StealKind::Remote => {
+            a.remote_atomic(i, AtomicOp::Add, qbase, Src::I(1), Src::I(0), MemOrder::AcqRel);
+        }
+        StealKind::Cmp => {
+            a.atomic(
+                i,
+                AtomicOp::Add,
+                qbase,
+                Src::I(1),
+                Src::I(0),
+                MemOrder::AcqRel,
+                Scope::Cmp,
+            );
+        }
+        StealKind::Local => {
+            a.atomic(
+                i,
+                AtomicOp::Add,
+                qbase,
+                Src::I(1),
+                Src::I(0),
+                MemOrder::AcqRel,
+                Scope::Wg,
+            );
+        }
+    }
+    // Re-read count (fresh after the acquire; constant anyway).
+    a.ld(c, qbase, 64, 4);
+    a.ge_u(t, i, Src::R(c));
+    a.bnz(t, &l_empty);
+    a.shl(t, i, Src::I(2));
+    a.add(t, t, Src::R(qbase));
+    a.ld(task, t, 128, 4);
+    a.br(&l_done);
+
+    a.label(&l_empty);
+    a.imm(task, EMPTY);
+    a.label(&l_done);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DeviceConfig, Protocol};
+    use crate::gpu::Device;
+    use crate::kir::Asm;
+    use crate::mem::MemAlloc;
+
+    /// Kernel: owner claims everything from its own queue, summing task
+    /// ids into out[wg].
+    fn owner_drain_kernel(layout: &DequeLayout, flavor: SyncFlavor, out: Addr) -> crate::kir::Program {
+        let mut a = Asm::new();
+        let qbase = a.reg();
+        let task = a.reg();
+        let t0 = a.reg();
+        let t1 = a.reg();
+        let t2 = a.reg();
+        let wg = a.reg();
+        let sum = a.reg();
+        let addr = a.reg();
+        let stride = a.reg();
+
+        a.wg_id(wg);
+        a.imm(stride, layout.stride);
+        a.mul(qbase, wg, Src::R(stride));
+        a.add(qbase, qbase, Src::I(layout.base));
+        a.imm(sum, 0);
+        a.label("loop");
+        let regs = DequeRegs { qbase, task, t0, t1, t2 };
+        emit_owner_pop(&mut a, &regs, flavor, "d");
+        // if task == EMPTY: done
+        a.eq(t0, task, Src::I(EMPTY));
+        a.bnz(t0, "end");
+        a.add(sum, sum, Src::R(task));
+        a.br("loop");
+        a.label("end");
+        a.shl(addr, wg, Src::I(3));
+        a.add(addr, addr, Src::I(out));
+        a.st(addr, 0, sum, 8);
+        a.halt();
+        a.finish()
+    }
+
+    #[test]
+    fn owner_drains_own_queue_exactly() {
+        for scenario in [Scenario::Baseline, Scenario::ScopeOnly, Scenario::Srsp] {
+            let mut alloc = MemAlloc::new();
+            let layout = DequeLayout::alloc(&mut alloc, 4, 32);
+            let out = alloc.alloc(4 * 8);
+            let mut dev = Device::new(DeviceConfig::small(), scenario.protocol());
+            // Queue q gets tasks q*10 .. q*10+q (varying lengths).
+            let mut expect = [0u64; 4];
+            for q in 0..4u32 {
+                let tasks: Vec<u32> = (0..=q).map(|i| q * 10 + i).collect();
+                expect[q as usize] = tasks.iter().map(|&t| t as u64).sum();
+                layout.fill(&mut dev.mem.backing, q, &tasks);
+            }
+            let prog = owner_drain_kernel(&layout, SyncFlavor::of(scenario), out);
+            dev.launch_simple(&prog, 4);
+            for q in 0..4u32 {
+                assert_eq!(
+                    dev.mem.backing.read_u64(out + q as u64 * 8),
+                    expect[q as usize],
+                    "{scenario:?}: queue {q} sum"
+                );
+                assert_eq!(layout.remaining(&dev.mem.backing, q), 0);
+            }
+        }
+    }
+
+    /// Kernel: wg0 drains its own queue; wgs 1..N steal from queue 0.
+    /// Each wg accumulates the *sum* of claimed task ids; the grand total
+    /// must equal the fill total exactly (no loss, no duplication).
+    fn contention_kernel(
+        layout: &DequeLayout,
+        flavor: SyncFlavor,
+        out: Addr,
+    ) -> crate::kir::Program {
+        let mut a = Asm::new();
+        let qbase = a.reg();
+        let task = a.reg();
+        let t0 = a.reg();
+        let t1 = a.reg();
+        let t2 = a.reg();
+        let wg = a.reg();
+        let sum = a.reg();
+        let addr = a.reg();
+
+        a.wg_id(wg);
+        a.imm(qbase, layout.next_addr(0));
+        a.imm(sum, 0);
+        let regs = DequeRegs { qbase, task, t0, t1, t2 };
+
+        a.bnz(wg, "thief");
+        // wg0: owner drains.
+        a.label("own_loop");
+        emit_owner_pop(&mut a, &regs, flavor, "o");
+        a.eq(t0, task, Src::I(EMPTY));
+        a.bnz(t0, "end");
+        a.add(sum, sum, Src::R(task));
+        a.br("own_loop");
+
+        a.label("thief");
+        emit_steal(&mut a, &regs, flavor, "s");
+        a.eq(t0, task, Src::I(EMPTY));
+        a.bnz(t0, "end");
+        a.add(sum, sum, Src::R(task));
+        a.br("thief");
+
+        a.label("end");
+        a.shl(addr, wg, Src::I(3));
+        a.add(addr, addr, Src::I(out));
+        a.st(addr, 0, sum, 8);
+        a.halt();
+        a.finish()
+    }
+
+    #[test]
+    fn owner_and_thieves_claim_each_task_exactly_once() {
+        for scenario in [Scenario::StealOnly, Scenario::Rsp, Scenario::Srsp] {
+            let mut alloc = MemAlloc::new();
+            let layout = DequeLayout::alloc(&mut alloc, 1, 64);
+            let out = alloc.alloc(4 * 8);
+            let mut dev = Device::new(DeviceConfig::small(), scenario.protocol());
+            let tasks: Vec<u32> = (1..=40).collect();
+            let total: u64 = tasks.iter().map(|&t| t as u64).sum();
+            layout.fill(&mut dev.mem.backing, 0, &tasks);
+            let prog = contention_kernel(&layout, SyncFlavor::of(scenario), out);
+            dev.launch_simple(&prog, 4);
+            let grand: u64 = (0..4).map(|w| dev.mem.backing.read_u64(out + w * 8)).sum();
+            assert_eq!(grand, total, "{scenario:?}: tasks lost or duplicated");
+            assert_eq!(layout.remaining(&dev.mem.backing, 0), 0);
+        }
+    }
+
+    #[test]
+    fn steals_actually_happen_under_rsp() {
+        let mut alloc = MemAlloc::new();
+        let layout = DequeLayout::alloc(&mut alloc, 1, 64);
+        let out = alloc.alloc(4 * 8);
+        let mut dev = Device::new(DeviceConfig::small(), Protocol::Srsp);
+        layout.fill(&mut dev.mem.backing, 0, &(1..=40).collect::<Vec<_>>());
+        let prog = contention_kernel(&layout, SyncFlavor::of(Scenario::Srsp), out);
+        dev.launch_simple(&prog, 4);
+        assert!(
+            dev.mem.stats.remote_acqrels > 0,
+            "thieves must claim with rem_ar"
+        );
+        // At least one task went to a thief.
+        let thief_sum: u64 = (1..4).map(|w| dev.mem.backing.read_u64(out + w * 8)).sum();
+        assert!(thief_sum > 0, "no task was stolen");
+    }
+
+    #[test]
+    fn layout_line_isolated() {
+        let mut alloc = MemAlloc::new();
+        let layout = DequeLayout::alloc(&mut alloc, 3, 16);
+        assert_eq!(layout.next_addr(0) % LINE, 0);
+        assert_eq!(layout.count_addr(0) - layout.next_addr(0), 64);
+        assert!(layout.next_addr(1) >= layout.tasks_addr(0) + 16 * 4);
+    }
+}

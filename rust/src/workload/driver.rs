@@ -1,0 +1,353 @@
+//! The shared scenario runner: builds the work-stealing kernel for a
+//! scenario, distributes per-round task chunks over the deques, launches
+//! kernels until the workload converges, and collects the statistics
+//! behind Figures 4–6.
+
+use super::deque::{
+    emit_advertise_empty, emit_owner_pop, emit_steal, DequeLayout, DequeRegs, SyncFlavor, EMPTY,
+};
+use super::engine::{AppLayout, TileMath, WorkEngine};
+use crate::config::{DeviceConfig, Scenario};
+use crate::gpu::Device;
+use crate::kir::inst::StatCounter;
+use crate::kir::{Asm, Program, Src};
+use crate::mem::{BackingStore, MemAlloc};
+use crate::sim::Stats;
+
+/// A workload that runs in rounds of kernel launches (the Pannotia apps'
+/// host loops).
+pub trait Workload {
+    /// Compute kinds launched back-to-back each round (MIS: select then
+    /// exclude; others: one).
+    fn kinds(&self) -> Vec<u32>;
+    /// Engine layout for the coming round (addresses may change: buffer
+    /// swaps).
+    fn layout(&self) -> AppLayout;
+    /// Active task chunks for the next round, or `None` when converged.
+    fn begin_round(&mut self, backing: &mut BackingStore) -> Option<Vec<u32>>;
+    /// Post-round bookkeeping (buffer swap, flag clearing).
+    fn end_round(&mut self, backing: &mut BackingStore);
+    /// Human-readable name.
+    fn name(&self) -> &'static str;
+}
+
+/// Applications evaluated in §5 (naming follows the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum App {
+    PageRank,
+    Sssp,
+    Mis,
+}
+
+impl App {
+    pub const ALL: [App; 3] = [App::PageRank, App::Sssp, App::Mis];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            App::PageRank => "PRK",
+            App::Sssp => "SSSP",
+            App::Mis => "MIS",
+        }
+    }
+}
+
+/// Outcome of one scenario run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub scenario: Scenario,
+    pub app: &'static str,
+    pub stats: Stats,
+    pub rounds: u32,
+    pub converged: bool,
+}
+
+/// Build the per-round work-stealing kernel.
+///
+/// Every work-group drains its own deque (owner pops + compute); in
+/// stealing scenarios it then scans the other queues round-robin,
+/// stealing and executing tasks, guarded by a device-scope **completion
+/// counter** (as in the original RSP work-stealing setup): each executed
+/// task bumps `done` with a relaxed cmp-scope atomic, and a thief checks
+/// `done == total` before every probe so the end-game does not degenerate
+/// into 64 × 63 futile remote-op scans.
+///
+/// `ctrl` is a line holding `[done: u32, total: u32]`, host-reset per
+/// launch.
+pub fn build_kernel(
+    deques: &DequeLayout,
+    scenario: Scenario,
+    kind: u32,
+    ctrl: crate::mem::Addr,
+) -> Program {
+    use crate::sync::{AtomicOp, MemOrder, Scope};
+    let flavor = SyncFlavor::of(scenario);
+    let mut a = Asm::new();
+    let wg = a.reg();
+    let nw = a.reg();
+    let qbase = a.reg();
+    let task = a.reg();
+    let t0 = a.reg();
+    let t1 = a.reg();
+    let t2 = a.reg();
+    let stride = a.reg();
+    let victim = a.reg();
+    let vbase = a.reg();
+    let ctrl_r = a.reg();
+    let total = a.reg();
+
+    a.wg_id(wg);
+    a.num_wgs(nw);
+    a.imm(stride, deques.stride);
+    a.mul(qbase, wg, Src::R(stride));
+    a.add(qbase, qbase, Src::I(deques.base));
+    a.imm(ctrl_r, ctrl);
+    if scenario.steals() {
+        // `total` is launch-constant; read it once (plain load).
+        a.ld(total, ctrl_r, 4, 4);
+    }
+
+    // ---- Phase 1: drain own queue ----
+    a.label("own_loop");
+    let own_regs = DequeRegs { qbase, task, t0, t1, t2 };
+    emit_owner_pop(&mut a, &own_regs, flavor, "own");
+    a.eq(t0, task, Src::I(EMPTY));
+    a.bnz(t0, "own_done");
+    a.stat(StatCounter::TaskExecuted);
+    a.compute(kind, task);
+    if scenario.steals() {
+        a.atomic(
+            t0,
+            AtomicOp::Add,
+            ctrl_r,
+            Src::I(1),
+            Src::I(0),
+            MemOrder::Relaxed,
+            Scope::Cmp,
+        );
+    }
+    a.br("own_loop");
+    a.label("own_done");
+
+    if scenario.steals() {
+        // Advertise emptiness so thieves' cheap pre-checks skip this
+        // queue (see `emit_advertise_empty`).
+        emit_advertise_empty(&mut a, &own_regs);
+    }
+
+    if scenario.steals() {
+        // ---- Phase 2: guarded steal scan ----
+        a.add(victim, wg, Src::I(1));
+        a.label("scan");
+        // done == total? Then every task has executed: halt.
+        a.atomic(
+            t0,
+            AtomicOp::Load,
+            ctrl_r,
+            Src::I(0),
+            Src::I(0),
+            MemOrder::Relaxed,
+            Scope::Cmp,
+        );
+        a.ge_u(t0, t0, Src::R(total));
+        a.bnz(t0, "end");
+        // victim %= nw; a full cycle without success also ends the scan
+        // (no new tasks ever appear in the queues).
+        a.alu(crate::kir::AluOp::RemU, victim, victim, Src::R(nw));
+        a.eq(t0, victim, Src::R(wg));
+        a.bnz(t0, "end");
+        a.mul(vbase, victim, Src::R(stride));
+        a.add(vbase, vbase, Src::I(deques.base));
+        a.label("steal_retry");
+        let steal_regs = DequeRegs {
+            qbase: vbase,
+            task,
+            t0,
+            t1,
+            t2,
+        };
+        a.stat(StatCounter::StealAttempt);
+        emit_steal(&mut a, &steal_regs, flavor, "th");
+        a.eq(t0, task, Src::I(EMPTY));
+        a.bnz(t0, "steal_failed");
+        a.stat(StatCounter::StealSuccess);
+        a.stat(StatCounter::TaskExecuted);
+        a.compute(kind, task);
+        a.atomic(
+            t0,
+            AtomicOp::Add,
+            ctrl_r,
+            Src::I(1),
+            Src::I(0),
+            MemOrder::Relaxed,
+            Scope::Cmp,
+        );
+        // Re-check the counter, keep stealing from this victim.
+        a.atomic(
+            t0,
+            AtomicOp::Load,
+            ctrl_r,
+            Src::I(0),
+            Src::I(0),
+            MemOrder::Relaxed,
+            Scope::Cmp,
+        );
+        a.ge_u(t0, t0, Src::R(total));
+        a.bnz(t0, "end");
+        a.br("steal_retry");
+        a.label("steal_failed");
+        a.stat(StatCounter::StealFail);
+        a.add(victim, victim, Src::I(1));
+        a.br("scan");
+    }
+    a.label("end");
+    a.halt();
+    a.finish()
+}
+
+/// Distribute `active` chunks to their owning queues: chunk `c` belongs to
+/// queue `c / chunks_per_queue` — contiguous *block* ownership, stable
+/// across rounds. An owner therefore works a contiguous vertex range whose
+/// CSR rows, columns and neighbor state share cache lines across its
+/// tasks: exactly the locality that global-scope per-pop invalidation
+/// destroys (the paper's Baseline penalty) and wg-scope synchronization
+/// preserves. Block ownership also clusters SSSP's frontier chunks onto
+/// few owners, producing the imbalance that makes stealing pay.
+pub fn distribute(active: &[u32], num_queues: u32, total_chunks: u32) -> Vec<Vec<u32>> {
+    let cpq = total_chunks.div_ceil(num_queues).max(1);
+    let mut per_queue: Vec<Vec<u32>> = vec![Vec::new(); num_queues as usize];
+    for &c in active {
+        per_queue[(c / cpq).min(num_queues - 1) as usize].push(c);
+    }
+    per_queue
+}
+
+/// Run `workload` under `scenario` on a fresh device whose memory is
+/// seeded with `image` (the backing store the workload's `setup` wrote
+/// into). Returns the run result and the final memory image (for result
+/// extraction / oracle comparison). Host bookkeeping between launches is
+/// free, as in the paper's device-side measurements.
+pub fn run_scenario_seeded<M: TileMath>(
+    cfg: &DeviceConfig,
+    scenario: Scenario,
+    workload: &mut dyn Workload,
+    math: M,
+    max_rounds: u32,
+    image: BackingStore,
+) -> (RunResult, BackingStore) {
+    let mut dev = Device::new(cfg.clone(), scenario.protocol());
+    dev.mem.backing = image;
+    let num_wgs = cfg.total_wgs();
+
+    // Size the deques to the worst case: every chunk active at once.
+    let total_chunks = {
+        let l = workload.layout();
+        l.n.div_ceil(l.chunk)
+    };
+    let capacity = total_chunks.div_ceil(num_wgs).max(4);
+    let mut alloc_probe = MemAlloc::new();
+    // The workload allocated its arrays already (from the same address
+    // space origin); deques go above the high-water mark. The caller
+    // passes the allocator through `workload`'s setup; here we replay a
+    // fresh allocator past its reserved range.
+    alloc_probe.alloc(workload.layout().high_water);
+    let deques = DequeLayout::alloc(&mut alloc_probe, num_wgs, capacity);
+    // Control line: [done, total] completion counter.
+    let ctrl = alloc_probe.alloc(64);
+
+    // Pre-build one kernel per compute kind.
+    let kinds = workload.kinds();
+    let programs: Vec<Program> = kinds
+        .iter()
+        .map(|&k| build_kernel(&deques, scenario, k, ctrl))
+        .collect();
+
+    let mut engine = WorkEngine::new(math, workload.layout());
+    let mut rounds = 0;
+    let mut converged = false;
+    while rounds < max_rounds {
+        let Some(active) = workload.begin_round(&mut dev.mem.backing) else {
+            converged = true;
+            break;
+        };
+        engine.layout = workload.layout();
+        let per_queue = distribute(&active, num_wgs, total_chunks);
+        for prog in &programs {
+            for (q, tasks) in per_queue.iter().enumerate() {
+                deques.fill(&mut dev.mem.backing, q as u32, tasks);
+            }
+            // Reset the completion counter for this launch.
+            dev.mem.backing.write_u32(ctrl, 0);
+            dev.mem.backing.write_u32(ctrl + 4, active.len() as u32);
+            dev.launch(prog, num_wgs, &mut engine);
+            // Every queue must be fully drained (no task lost).
+            for q in 0..num_wgs {
+                debug_assert_eq!(
+                    deques.remaining(&dev.mem.backing, q),
+                    0,
+                    "queue {q} not drained"
+                );
+            }
+        }
+        workload.end_round(&mut dev.mem.backing);
+        rounds += 1;
+    }
+
+    let mut stats = dev.take_stats();
+    stats.bump("rounds", rounds as u64);
+    (
+        RunResult {
+            scenario,
+            app: workload.name(),
+            stats,
+            rounds,
+            converged,
+        },
+        std::mem::take(&mut dev.mem.backing),
+    )
+}
+
+/// Convenience wrapper: run from an empty memory image (workloads that
+/// seeded their arrays through the device's own backing store).
+pub fn run_scenario<M: TileMath>(
+    cfg: &DeviceConfig,
+    scenario: Scenario,
+    workload: &mut dyn Workload,
+    math: M,
+    max_rounds: u32,
+) -> RunResult {
+    run_scenario_seeded(cfg, scenario, workload, math, max_rounds, BackingStore::new()).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distribute_block_ownership() {
+        // 12 chunks over 4 queues: 3 contiguous chunks per queue.
+        let a = distribute(&[0, 1, 2, 3, 8, 9, 11], 4, 12);
+        assert_eq!(a[0], vec![0, 1, 2]);
+        assert_eq!(a[1], vec![3]);
+        assert_eq!(a[2], vec![8]);
+        assert_eq!(a[3], vec![9, 11]);
+        // Same chunk -> same queue in a later round (stable ownership).
+        let b = distribute(&[8], 4, 12);
+        assert_eq!(b[2], vec![8]);
+        // Out-of-range chunk ids clamp to the last queue.
+        let c = distribute(&[100], 4, 12);
+        assert_eq!(c[3], vec![100]);
+    }
+
+    #[test]
+    fn kernel_builds_for_all_scenarios() {
+        let mut alloc = MemAlloc::new();
+        let deques = DequeLayout::alloc(&mut alloc, 4, 8);
+        let ctrl = alloc.alloc(64);
+        for s in Scenario::ALL {
+            let p = build_kernel(&deques, s, 1, ctrl);
+            assert!(!p.is_empty());
+            let has_steal_code = p.insts.len() > 40;
+            assert_eq!(s.steals(), has_steal_code, "{s:?}: {}", p.insts.len());
+        }
+    }
+}

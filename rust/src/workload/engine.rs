@@ -1,0 +1,450 @@
+//! The compute engine: executes one task (a chunk of vertices) on behalf
+//! of a work-group.
+//!
+//! The engine issues all graph-data memory traffic (row pointers, adjacency
+//! lists, neighbor state gathers, result scatters) through the timed
+//! [`MemAccess`] interface — that traffic *is* the locality the scenarios
+//! fight over. The batch floating-point/integer math on the gathered tiles
+//! is delegated to a [`TileMath`] backend:
+//!
+//! * [`NativeMath`] — straight Rust; used by the figure sweeps (fast).
+//! * `PjrtMath` ([`crate::runtime`]) — the AOT-compiled JAX/Pallas
+//!   artifacts executed through the PJRT CPU client; used by the
+//!   end-to-end examples. Both backends compute identical values (tested).
+//!
+//! Tiles are fixed-shape `(V_TILE, K_TILE)` — the shape the Pallas kernels
+//! are lowered for. Vertices with degree > `K_TILE` span multiple tile
+//! rows; their partial results are combined by the engine.
+
+use super::graph::Graph;
+use crate::kir::{ComputeEngine, MemAccess};
+use crate::mem::Addr;
+
+/// Tile height (vertices per tile row-block).
+pub const V_TILE: usize = 64;
+/// Tile width (neighbor slots per row).
+pub const K_TILE: usize = 32;
+
+/// Compute kinds (KIR `Compute` instruction immediate).
+pub const KIND_PAGERANK: u32 = 1;
+pub const KIND_SSSP: u32 = 2;
+pub const KIND_MIS_SELECT: u32 = 3;
+pub const KIND_MIS_EXCLUDE: u32 = 4;
+
+/// Distance "infinity" for SSSP (fits i32 so XLA i32 math is exact; large
+/// enough that INF + max_weight never wraps).
+pub const DIST_INF: u32 = 0x3FFF_FFFF;
+
+/// MIS vertex states.
+pub const MIS_UNDECIDED: u32 = 0;
+pub const MIS_IN: u32 = 1;
+pub const MIS_OUT: u32 = 2;
+
+/// Unique per-vertex priority: a bijective mix of the vertex id (odd
+/// multiplier => invertible mod 2^32), so priorities never tie.
+#[inline]
+pub fn mis_priority(v: u32) -> u32 {
+    v.wrapping_mul(0x9E37_79B1).rotate_left(16) ^ v
+}
+
+/// One PageRank tile: gathered neighbor contributions.
+#[derive(Debug, Clone)]
+pub struct PageRankTile {
+    /// `contribs[i*K_TILE + k]` = rank[u]/outdeg[u] of the k-th neighbor
+    /// of row-vertex i (0.0 when padded).
+    pub contribs: Vec<f32>,
+    /// Per-row damping bookkeeping handled by the caller.
+    pub rows: usize,
+}
+
+/// Batch math over gathered tiles. Implementations must be value-identical
+/// (the pytest suite pins the Pallas kernels to `ref.py`; the Rust tests
+/// pin `PjrtMath` to `NativeMath`).
+pub trait TileMath {
+    /// PageRank: per-row sum of contributions, then
+    /// `rank = (1-d)/n + d * sum`. Returns `rows` ranks.
+    fn pagerank_rows(&mut self, contribs: &[f32], rows: usize, damping: f32, n: u32) -> Vec<f32>;
+
+    /// SSSP min-plus: per-row `min(dist_u[k] + w[k])` over valid slots
+    /// (padded slots carry `DIST_INF` + 0). Returns `rows` candidates.
+    fn sssp_rows(&mut self, dist_plus_w: &[i32], rows: usize) -> Vec<i32>;
+
+    /// MIS select: row i joins the set iff `my_pri[i]` exceeds every
+    /// undecided neighbor's priority (padded slots carry 0).
+    fn mis_rows(&mut self, my_pri: &[u32], nbr_pri: &[u32], rows: usize) -> Vec<bool>;
+}
+
+/// Pure-Rust tile math.
+#[derive(Debug, Default, Clone)]
+pub struct NativeMath;
+
+impl TileMath for NativeMath {
+    fn pagerank_rows(&mut self, contribs: &[f32], rows: usize, damping: f32, n: u32) -> Vec<f32> {
+        assert_eq!(contribs.len(), rows * K_TILE);
+        (0..rows)
+            .map(|i| {
+                let s: f32 = contribs[i * K_TILE..(i + 1) * K_TILE].iter().sum();
+                (1.0 - damping) / n as f32 + damping * s
+            })
+            .collect()
+    }
+
+    fn sssp_rows(&mut self, dist_plus_w: &[i32], rows: usize) -> Vec<i32> {
+        assert_eq!(dist_plus_w.len(), rows * K_TILE);
+        (0..rows)
+            .map(|i| {
+                dist_plus_w[i * K_TILE..(i + 1) * K_TILE]
+                    .iter()
+                    .copied()
+                    .min()
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    fn mis_rows(&mut self, my_pri: &[u32], nbr_pri: &[u32], rows: usize) -> Vec<bool> {
+        assert_eq!(my_pri.len(), rows);
+        assert_eq!(nbr_pri.len(), rows * K_TILE);
+        (0..rows)
+            .map(|i| {
+                let max_n = nbr_pri[i * K_TILE..(i + 1) * K_TILE]
+                    .iter()
+                    .copied()
+                    .max()
+                    .unwrap();
+                my_pri[i] > max_n
+            })
+            .collect()
+    }
+}
+
+/// Device-memory addresses of one application's arrays (host-allocated).
+#[derive(Debug, Clone, Default)]
+pub struct AppLayout {
+    pub row_ptr: Addr,
+    pub col: Addr,
+    pub weight: Addr,
+    /// PageRank: contribution in (read), rank out + contribution out
+    /// (write). SSSP: dist (read/write). MIS: state + priority arrays.
+    pub a0: Addr,
+    pub a1: Addr,
+    pub a2: Addr,
+    /// Per-vertex "changed" flags (u32) driving the host's worklists.
+    pub changed: Addr,
+    /// Vertices per task chunk.
+    pub chunk: u32,
+    pub n: u32,
+    /// PageRank damping factor bits (f32).
+    pub damping_bits: u32,
+    /// Allocator high-water mark after the app's arrays (the scenario
+    /// runner places the deques above it).
+    pub high_water: u64,
+}
+
+/// The engine: decodes task ids into vertex chunks, gathers through the
+/// timed memory path, calls the tile math, scatters results.
+pub struct WorkEngine<M: TileMath> {
+    pub math: M,
+    pub layout: AppLayout,
+}
+
+impl<M: TileMath> WorkEngine<M> {
+    pub fn new(math: M, layout: AppLayout) -> Self {
+        Self { math, layout }
+    }
+
+    fn chunk_range(&self, task: u64) -> (u32, u32) {
+        let lo = task as u32 * self.layout.chunk;
+        let hi = (lo + self.layout.chunk).min(self.layout.n);
+        (lo, hi)
+    }
+
+    /// PageRank task: pull contributions of every neighbor, compute new
+    /// rank + new contribution, write both. Returns items (edges).
+    fn pagerank(&mut self, mem: &mut MemAccess<'_>, task: u64) -> u64 {
+        let l = self.layout.clone();
+        let (lo, hi) = self.chunk_range(task);
+        let damping = f32::from_bits(l.damping_bits);
+        let mut items = 0u64;
+
+        let mut rows_v: Vec<u32> = Vec::new();
+        let mut contribs: Vec<f32> = Vec::new();
+        // Partial-row bookkeeping: vertex -> list of row indices.
+        let mut row_of_vertex: Vec<(u32, usize)> = Vec::new();
+
+        for v in lo..hi {
+            let rp0 = mem.read_u32(l.row_ptr + v as u64 * 4);
+            let rp1 = mem.read_u32(l.row_ptr + v as u64 * 4 + 4);
+            let deg = (rp1 - rp0) as usize;
+            items += deg as u64;
+            let nrows = deg.div_ceil(K_TILE).max(1);
+            for r in 0..nrows {
+                let row = rows_v.len();
+                rows_v.push(v);
+                row_of_vertex.push((v, row));
+                let mut slots = [0f32; K_TILE];
+                for k in 0..K_TILE {
+                    let e = rp0 as usize + r * K_TILE + k;
+                    if e < rp1 as usize {
+                        let u = mem.read_u32(l.col + e as u64 * 4);
+                        // contribution_in[u] = rank[u]/outdeg[u], precomputed.
+                        slots[k] = mem.read_f32(l.a0 + u as u64 * 4);
+                    }
+                }
+                contribs.extend_from_slice(&slots);
+            }
+        }
+        if rows_v.is_empty() {
+            return items;
+        }
+        let ranks = self.math.pagerank_rows(&contribs, rows_v.len(), damping, l.n);
+        // Combine partial rows: sum of row-sums needs base re-added once.
+        // rank_row = base + d*sum_row => rank_v = base + d*Σ sums
+        //          = Σ rank_row - (nrows-1)*base.
+        let base = (1.0 - damping) / l.n as f32;
+        let mut v_rank: std::collections::HashMap<u32, f32> = Default::default();
+        let mut v_rows: std::collections::HashMap<u32, u32> = Default::default();
+        for (row, &v) in rows_v.iter().enumerate() {
+            *v_rank.entry(v).or_insert(0.0) += ranks[row];
+            *v_rows.entry(v).or_insert(0) += 1;
+        }
+        for v in lo..hi {
+            let nrows = *v_rows.get(&v).unwrap_or(&0);
+            if nrows == 0 {
+                continue;
+            }
+            let rank = v_rank[&v] - (nrows - 1) as f32 * base;
+            mem.write_f32(l.a1 + v as u64 * 4, rank);
+            // New contribution for the next iteration.
+            let deg = {
+                let rp0 = mem.read_u32(l.row_ptr + v as u64 * 4);
+                let rp1 = mem.read_u32(l.row_ptr + v as u64 * 4 + 4);
+                (rp1 - rp0).max(1)
+            };
+            mem.write_f32(l.a2 + v as u64 * 4, rank / deg as f32);
+        }
+        items
+    }
+
+    /// SSSP task (pull relaxation): `dist[v] = min(dist[v],
+    /// min_u(dist[u] + w(u,v)))`; only v's own entry is written (race-free).
+    fn sssp(&mut self, mem: &mut MemAccess<'_>, task: u64) -> u64 {
+        let l = self.layout.clone();
+        let (lo, hi) = self.chunk_range(task);
+        let mut items = 0u64;
+
+        let mut rows_v: Vec<u32> = Vec::new();
+        let mut tile: Vec<i32> = Vec::new();
+        for v in lo..hi {
+            let rp0 = mem.read_u32(l.row_ptr + v as u64 * 4);
+            let rp1 = mem.read_u32(l.row_ptr + v as u64 * 4 + 4);
+            let deg = (rp1 - rp0) as usize;
+            items += deg as u64;
+            let nrows = deg.div_ceil(K_TILE).max(1);
+            for r in 0..nrows {
+                rows_v.push(v);
+                let mut slots = [DIST_INF as i32; K_TILE];
+                for k in 0..K_TILE {
+                    let e = rp0 as usize + r * K_TILE + k;
+                    if e < rp1 as usize {
+                        let u = mem.read_u32(l.col + e as u64 * 4);
+                        let w = mem.read_u32(l.weight + e as u64 * 4);
+                        let du = mem.read_u32(l.a0 + u as u64 * 4);
+                        slots[k] = (du.min(DIST_INF) as i32).saturating_add(w as i32);
+                    }
+                }
+                tile.extend_from_slice(&slots);
+            }
+        }
+        if rows_v.is_empty() {
+            return items;
+        }
+        let cands = self.math.sssp_rows(&tile, rows_v.len());
+        let mut best: std::collections::HashMap<u32, i32> = Default::default();
+        for (row, &v) in rows_v.iter().enumerate() {
+            let e = best.entry(v).or_insert(i32::MAX);
+            *e = (*e).min(cands[row]);
+        }
+        for v in lo..hi {
+            let Some(&cand) = best.get(&v) else { continue };
+            let dv = mem.read_u32(l.a0 + v as u64 * 4) as i32;
+            if cand < dv {
+                mem.write_u32(l.a0 + v as u64 * 4, cand as u32);
+                mem.write_u32(l.changed + v as u64 * 4, 1);
+            }
+        }
+        items
+    }
+
+    /// MIS select phase: undecided v joins when its priority beats every
+    /// undecided neighbor.
+    fn mis_select(&mut self, mem: &mut MemAccess<'_>, task: u64) -> u64 {
+        let l = self.layout.clone();
+        let (lo, hi) = self.chunk_range(task);
+        let mut items = 0u64;
+
+        let mut rows_v: Vec<u32> = Vec::new();
+        let mut my_pri: Vec<u32> = Vec::new();
+        let mut nbr_pri: Vec<u32> = Vec::new();
+        for v in lo..hi {
+            // a0 = state array, a1 = priority array.
+            let state = mem.read_u32(l.a0 + v as u64 * 4);
+            if state != MIS_UNDECIDED {
+                continue;
+            }
+            let rp0 = mem.read_u32(l.row_ptr + v as u64 * 4);
+            let rp1 = mem.read_u32(l.row_ptr + v as u64 * 4 + 4);
+            let deg = (rp1 - rp0) as usize;
+            items += deg as u64;
+            let pri_v = mem.read_u32(l.a1 + v as u64 * 4);
+            let nrows = deg.div_ceil(K_TILE).max(1);
+            for r in 0..nrows {
+                rows_v.push(v);
+                my_pri.push(pri_v);
+                let mut slots = [0u32; K_TILE];
+                for k in 0..K_TILE {
+                    let e = rp0 as usize + r * K_TILE + k;
+                    if e < rp1 as usize {
+                        let u = mem.read_u32(l.col + e as u64 * 4);
+                        let su = mem.read_u32(l.a0 + u as u64 * 4);
+                        if su == MIS_UNDECIDED {
+                            slots[k] = mem.read_u32(l.a1 + u as u64 * 4);
+                        }
+                    }
+                }
+                nbr_pri.extend_from_slice(&slots);
+            }
+        }
+        if rows_v.is_empty() {
+            return items;
+        }
+        let wins = self.math.mis_rows(&my_pri, &nbr_pri, rows_v.len());
+        // A vertex joins only if it wins in *all* of its rows.
+        let mut all_win: std::collections::HashMap<u32, bool> = Default::default();
+        for (row, &v) in rows_v.iter().enumerate() {
+            let e = all_win.entry(v).or_insert(true);
+            *e = *e && wins[row];
+        }
+        // Winners are recorded in the *newflag* array (a2), NOT the state
+        // array: the select phase must race-freely compare priorities
+        // against the round-start state snapshot. Writing states here
+        // would let later tasks mask a freshly-IN neighbor out of the
+        // comparison and elect adjacent vertices (a real Luby-on-GPU
+        // pitfall — caught by the validity tests).
+        for (&v, &w) in &all_win {
+            if w {
+                mem.write_u32(l.a2 + v as u64 * 4, 1);
+                mem.write_u32(l.changed + v as u64 * 4, 1);
+            }
+        }
+        items
+    }
+
+    /// MIS merge/exclude phase (separate launch): undecided v joins if its
+    /// newflag is set, leaves if any neighbor's newflag is set. Newflags
+    /// are written only by the *select* launch and cleared only by the
+    /// host between rounds, so this phase reads stable data.
+    fn mis_exclude(&mut self, mem: &mut MemAccess<'_>, task: u64) -> u64 {
+        let l = self.layout.clone();
+        let (lo, hi) = self.chunk_range(task);
+        let mut items = 0u64;
+        for v in lo..hi {
+            let state = mem.read_u32(l.a0 + v as u64 * 4);
+            if state != MIS_UNDECIDED {
+                continue;
+            }
+            if mem.read_u32(l.a2 + v as u64 * 4) != 0 {
+                mem.write_u32(l.a0 + v as u64 * 4, MIS_IN);
+                continue;
+            }
+            let rp0 = mem.read_u32(l.row_ptr + v as u64 * 4);
+            let rp1 = mem.read_u32(l.row_ptr + v as u64 * 4 + 4);
+            items += (rp1 - rp0) as u64;
+            for e in rp0..rp1 {
+                let u = mem.read_u32(l.col + e as u64 * 4);
+                if mem.read_u32(l.a2 + u as u64 * 4) != 0 {
+                    mem.write_u32(l.a0 + v as u64 * 4, MIS_OUT);
+                    mem.write_u32(l.changed + v as u64 * 4, 1);
+                    break;
+                }
+            }
+        }
+        items
+    }
+}
+
+impl<M: TileMath> ComputeEngine for WorkEngine<M> {
+    fn compute(&mut self, mem: &mut MemAccess<'_>, kind: u32, arg: u64) -> u64 {
+        match kind {
+            KIND_PAGERANK => self.pagerank(mem, arg),
+            KIND_SSSP => self.sssp(mem, arg),
+            KIND_MIS_SELECT => self.mis_select(mem, arg),
+            KIND_MIS_EXCLUDE => self.mis_exclude(mem, arg),
+            other => panic!("unknown compute kind {other}"),
+        }
+    }
+}
+
+/// Host-side helpers to lay out a graph's CSR arrays in device memory.
+pub fn upload_graph(
+    g: &Graph,
+    alloc: &mut crate::mem::MemAlloc,
+    backing: &mut crate::mem::BackingStore,
+) -> (Addr, Addr, Addr) {
+    let row_ptr = alloc.alloc((g.n as u64 + 1) * 4);
+    let col = alloc.alloc(g.num_edges() as u64 * 4);
+    let weight = alloc.alloc(g.num_edges() as u64 * 4);
+    for (i, &rp) in g.row_ptr.iter().enumerate() {
+        backing.write_u32(row_ptr + i as u64 * 4, rp);
+    }
+    for (i, (&c, &w)) in g.col.iter().zip(g.weight.iter()).enumerate() {
+        backing.write_u32(col + i as u64 * 4, c);
+        backing.write_u32(weight + i as u64 * 4, w);
+    }
+    (row_ptr, col, weight)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_pagerank_rows() {
+        let mut m = NativeMath;
+        let mut tile = vec![0f32; 2 * K_TILE];
+        tile[0] = 0.25;
+        tile[1] = 0.25;
+        tile[K_TILE] = 0.5;
+        let r = m.pagerank_rows(&tile, 2, 0.85, 4);
+        let base = 0.15 / 4.0;
+        assert!((r[0] - (base + 0.85 * 0.5)).abs() < 1e-6);
+        assert!((r[1] - (base + 0.85 * 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn native_sssp_rows() {
+        let mut m = NativeMath;
+        let mut tile = vec![DIST_INF as i32; K_TILE];
+        tile[3] = 17;
+        tile[9] = 12;
+        assert_eq!(m.sssp_rows(&tile, 1), vec![12]);
+    }
+
+    #[test]
+    fn native_mis_rows() {
+        let mut m = NativeMath;
+        let mut nbr = vec![0u32; 2 * K_TILE];
+        nbr[0] = 100;
+        nbr[K_TILE + 1] = 5;
+        let wins = m.mis_rows(&[50, 50], &nbr, 2);
+        assert_eq!(wins, vec![false, true]);
+    }
+
+    #[test]
+    fn mis_priorities_unique_and_deterministic() {
+        use std::collections::HashSet;
+        let set: HashSet<u32> = (0..10_000).map(mis_priority).collect();
+        assert_eq!(set.len(), 10_000, "priorities must not collide");
+        assert_eq!(mis_priority(42), mis_priority(42));
+    }
+}

@@ -1,0 +1,341 @@
+//! CSR graphs: parsers for the paper's input formats and synthetic
+//! generators matched to each DIMACS input's class.
+//!
+//! The paper uses `cond-mat-2003` (collaboration network → small-world),
+//! `USA-road-BAY` (road network → grid-like, low degree, high diameter)
+//! and `caidaRouterLevel` (router topology → power-law). Real files can be
+//! loaded with [`Graph::from_dimacs_gr`] / [`Graph::from_matrix_market`];
+//! the benches use the generators so the repository is self-contained.
+
+use crate::sim::SplitMix64;
+
+/// Undirected graph in CSR form with u32 edge weights (1 for unweighted).
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub n: u32,
+    /// `row_ptr[v]..row_ptr[v+1]` indexes `col`/`weight` for vertex v.
+    pub row_ptr: Vec<u32>,
+    pub col: Vec<u32>,
+    pub weight: Vec<u32>,
+}
+
+impl Graph {
+    /// Build from an undirected edge list (deduplicated, self-loops
+    /// dropped, symmetrized).
+    pub fn from_edges(n: u32, edges: &[(u32, u32, u32)]) -> Self {
+        use std::collections::BTreeSet;
+        let mut adj: Vec<BTreeSet<(u32, u32)>> = vec![BTreeSet::new(); n as usize];
+        for &(u, v, w) in edges {
+            if u == v || u >= n || v >= n {
+                continue;
+            }
+            // Keep the first weight seen for a duplicate edge.
+            if !adj[u as usize].iter().any(|&(x, _)| x == v) {
+                adj[u as usize].insert((v, w));
+            }
+            if !adj[v as usize].iter().any(|&(x, _)| x == u) {
+                adj[v as usize].insert((u, w));
+            }
+        }
+        let mut row_ptr = Vec::with_capacity(n as usize + 1);
+        let mut col = Vec::new();
+        let mut weight = Vec::new();
+        row_ptr.push(0u32);
+        for v in 0..n as usize {
+            for &(u, w) in &adj[v] {
+                col.push(u);
+                weight.push(w);
+            }
+            row_ptr.push(col.len() as u32);
+        }
+        Graph {
+            n,
+            row_ptr,
+            col,
+            weight,
+        }
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.col.len()
+    }
+
+    pub fn degree(&self, v: u32) -> u32 {
+        self.row_ptr[v as usize + 1] - self.row_ptr[v as usize]
+    }
+
+    pub fn neighbors(&self, v: u32) -> impl Iterator<Item = (u32, u32)> + '_ {
+        let lo = self.row_ptr[v as usize] as usize;
+        let hi = self.row_ptr[v as usize + 1] as usize;
+        self.col[lo..hi]
+            .iter()
+            .copied()
+            .zip(self.weight[lo..hi].iter().copied())
+    }
+
+    pub fn max_degree(&self) -> u32 {
+        (0..self.n).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    /// Structural sanity: symmetric, sorted rows, weights positive.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.row_ptr.len() != self.n as usize + 1 {
+            return Err("row_ptr length".into());
+        }
+        if *self.row_ptr.last().unwrap() as usize != self.col.len() {
+            return Err("row_ptr end".into());
+        }
+        if self.col.len() != self.weight.len() {
+            return Err("weight length".into());
+        }
+        for v in 0..self.n {
+            for (u, w) in self.neighbors(v) {
+                if u >= self.n {
+                    return Err(format!("edge target {u} out of range"));
+                }
+                if w == 0 {
+                    return Err("zero weight".into());
+                }
+                if !self.neighbors(u).any(|(x, _)| x == v) {
+                    return Err(format!("asymmetric edge {v}->{u}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Generators (matched to the paper's input classes)
+    // ------------------------------------------------------------------
+
+    /// Road-network analog of `USA-road-BAY`: a w×h grid (4-neighbor) with
+    /// integer weights in `[1, 100]` and a sparse set of "highway"
+    /// shortcuts (long-range edges), giving low degree and high diameter.
+    pub fn road_grid(w: u32, h: u32, seed: u64) -> Graph {
+        let n = w * h;
+        let mut rng = SplitMix64::new(seed);
+        let mut edges = Vec::new();
+        let id = |x: u32, y: u32| y * w + x;
+        for y in 0..h {
+            for x in 0..w {
+                if x + 1 < w {
+                    edges.push((id(x, y), id(x + 1, y), 1 + rng.below(100) as u32));
+                }
+                if y + 1 < h {
+                    edges.push((id(x, y), id(x, y + 1), 1 + rng.below(100) as u32));
+                }
+            }
+        }
+        // ~n/64 highway shortcuts.
+        for _ in 0..(n / 64).max(1) {
+            let a = rng.below(n as u64) as u32;
+            let b = rng.below(n as u64) as u32;
+            edges.push((a, b, 50 + rng.below(200) as u32));
+        }
+        Graph::from_edges(n, &edges)
+    }
+
+    /// Small-world analog of `cond-mat-2003` (Watts–Strogatz): ring of
+    /// degree `k` with rewiring probability `beta`.
+    pub fn small_world(n: u32, k: u32, beta: f64, seed: u64) -> Graph {
+        assert!(k >= 2 && k % 2 == 0);
+        let mut rng = SplitMix64::new(seed);
+        let mut edges = Vec::new();
+        for v in 0..n {
+            for j in 1..=k / 2 {
+                let mut u = (v + j) % n;
+                if rng.chance(beta) {
+                    u = rng.below(n as u64) as u32;
+                }
+                edges.push((v, u, 1));
+            }
+        }
+        Graph::from_edges(n, &edges)
+    }
+
+    /// Power-law analog of `caidaRouterLevel` (Barabási–Albert
+    /// preferential attachment, `m` edges per new vertex).
+    pub fn power_law(n: u32, m: u32, seed: u64) -> Graph {
+        assert!(n > m && m >= 1);
+        let mut rng = SplitMix64::new(seed);
+        let mut edges: Vec<(u32, u32, u32)> = Vec::new();
+        // Repeated-endpoint list implements preferential attachment.
+        let mut endpoints: Vec<u32> = Vec::new();
+        // Seed clique over the first m+1 vertices.
+        for a in 0..=m {
+            for b in (a + 1)..=m {
+                edges.push((a, b, 1));
+                endpoints.push(a);
+                endpoints.push(b);
+            }
+        }
+        for v in (m + 1)..n {
+            let mut chosen = Vec::with_capacity(m as usize);
+            while chosen.len() < m as usize {
+                let u = endpoints[rng.index(endpoints.len())];
+                if u != v && !chosen.contains(&u) {
+                    chosen.push(u);
+                }
+            }
+            for &u in &chosen {
+                edges.push((v, u, 1));
+                endpoints.push(v);
+                endpoints.push(u);
+            }
+        }
+        Graph::from_edges(n, &edges)
+    }
+
+    // ------------------------------------------------------------------
+    // Parsers
+    // ------------------------------------------------------------------
+
+    /// DIMACS shortest-path format (`.gr`): `p sp <n> <m>` header and
+    /// `a <u> <v> <w>` arcs (1-based vertices).
+    pub fn from_dimacs_gr(text: &str) -> Result<Graph, String> {
+        let mut n = 0u32;
+        let mut edges = Vec::new();
+        for (lno, line) in text.lines().enumerate() {
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("c") | None => continue,
+                Some("p") => {
+                    // p sp n m
+                    let _sp = it.next();
+                    n = it
+                        .next()
+                        .and_then(|s| s.parse().ok())
+                        .ok_or_else(|| format!("line {}: bad p line", lno + 1))?;
+                }
+                Some("a") => {
+                    let u: u32 = it
+                        .next()
+                        .and_then(|s| s.parse().ok())
+                        .ok_or_else(|| format!("line {}: bad arc", lno + 1))?;
+                    let v: u32 = it
+                        .next()
+                        .and_then(|s| s.parse().ok())
+                        .ok_or_else(|| format!("line {}: bad arc", lno + 1))?;
+                    let w: u32 = it.next().and_then(|s| s.parse().ok()).unwrap_or(1);
+                    if u == 0 || v == 0 {
+                        return Err(format!("line {}: DIMACS vertices are 1-based", lno + 1));
+                    }
+                    edges.push((u - 1, v - 1, w.max(1)));
+                }
+                Some(_) => continue,
+            }
+        }
+        if n == 0 {
+            return Err("missing 'p' header".into());
+        }
+        Ok(Graph::from_edges(n, &edges))
+    }
+
+    /// MatrixMarket pattern format (as distributed for `cond-mat-2003` /
+    /// `caidaRouterLevel`): `%%`-comments, then `n n m`, then `u v` pairs
+    /// (1-based).
+    pub fn from_matrix_market(text: &str) -> Result<Graph, String> {
+        let mut lines = text.lines().filter(|l| !l.starts_with('%'));
+        let header = lines.next().ok_or("empty file")?;
+        let mut it = header.split_whitespace();
+        let n: u32 = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or("bad header")?;
+        let mut edges = Vec::new();
+        for (lno, line) in lines.enumerate() {
+            let mut it = line.split_whitespace();
+            let (Some(u), Some(v)) = (it.next(), it.next()) else {
+                continue;
+            };
+            let u: u32 = u.parse().map_err(|_| format!("line {}: bad u", lno + 2))?;
+            let v: u32 = v.parse().map_err(|_| format!("line {}: bad v", lno + 2))?;
+            if u == 0 || v == 0 {
+                return Err("MatrixMarket vertices are 1-based".into());
+            }
+            edges.push((u - 1, v - 1, 1));
+        }
+        Ok(Graph::from_edges(n, &edges))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_edges_symmetrizes_and_dedups() {
+        let g = Graph::from_edges(4, &[(0, 1, 5), (1, 0, 7), (2, 3, 1), (3, 3, 9)]);
+        g.validate().unwrap();
+        assert_eq!(g.num_edges(), 4); // (0,1),(1,0),(2,3),(3,2); self-loop dropped
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.neighbors(0).next(), Some((1, 5)));
+        assert_eq!(g.neighbors(1).next(), Some((0, 5)), "first weight kept");
+        assert_eq!(g.degree(3), 1, "self loop dropped");
+    }
+
+    #[test]
+    fn road_grid_structure() {
+        let g = Graph::road_grid(8, 8, 1);
+        g.validate().unwrap();
+        assert_eq!(g.n, 64);
+        // Interior vertices have degree >= 4 (plus any highways).
+        assert!(g.degree(9) >= 4);
+        // Low max degree (road-like).
+        assert!(g.max_degree() <= 10, "max degree {}", g.max_degree());
+    }
+
+    #[test]
+    fn small_world_structure() {
+        let g = Graph::small_world(128, 4, 0.1, 2);
+        g.validate().unwrap();
+        let avg = g.num_edges() as f64 / g.n as f64;
+        assert!((3.0..5.0).contains(&avg), "avg degree {avg}");
+    }
+
+    #[test]
+    fn power_law_has_hubs() {
+        let g = Graph::power_law(512, 2, 3);
+        g.validate().unwrap();
+        let max = g.max_degree();
+        let avg = g.num_edges() as u32 / g.n;
+        assert!(
+            max > 6 * avg,
+            "power-law should have hubs: max={max} avg={avg}"
+        );
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = Graph::power_law(100, 2, 42);
+        let b = Graph::power_law(100, 2, 42);
+        assert_eq!(a.col, b.col);
+        let c = Graph::power_law(100, 2, 43);
+        assert_ne!(a.col, c.col);
+    }
+
+    #[test]
+    fn dimacs_gr_round_trip() {
+        let text = "c comment\np sp 4 3\na 1 2 10\na 2 3 20\na 3 4 1\n";
+        let g = Graph::from_dimacs_gr(text).unwrap();
+        g.validate().unwrap();
+        assert_eq!(g.n, 4);
+        assert_eq!(g.neighbors(0).next(), Some((1, 10)));
+        assert_eq!(g.neighbors(3).next(), Some((2, 1)));
+    }
+
+    #[test]
+    fn dimacs_rejects_garbage() {
+        assert!(Graph::from_dimacs_gr("a 1 2 3\n").is_err()); // no header
+        assert!(Graph::from_dimacs_gr("p sp 4 1\na 0 2 3\n").is_err()); // 0-based
+    }
+
+    #[test]
+    fn matrix_market_parse() {
+        let text = "%%MatrixMarket matrix coordinate pattern symmetric\n% c\n3 3 2\n1 2\n2 3\n";
+        let g = Graph::from_matrix_market(text).unwrap();
+        g.validate().unwrap();
+        assert_eq!(g.n, 3);
+        assert_eq!(g.degree(1), 2);
+    }
+}

@@ -1,0 +1,192 @@
+//! Maximal Independent Set (§5.1: run with a `caidaRouterLevel`-class
+//! power-law graph).
+//!
+//! Luby-style with unique deterministic priorities
+//! ([`mis_priority`](super::engine::mis_priority)): each round runs two
+//! kernels — *select* (an undecided vertex joins when its priority beats
+//! every undecided neighbor) and *exclude* (an undecided vertex leaves
+//! when a neighbor is IN). Both phases write only the vertex's own state:
+//! race-free under every scenario.
+
+use super::driver::Workload;
+use super::engine::{
+    mis_priority, upload_graph, AppLayout, KIND_MIS_EXCLUDE, KIND_MIS_SELECT, MIS_IN,
+    MIS_UNDECIDED,
+};
+use super::graph::Graph;
+use crate::mem::{Addr, BackingStore, MemAlloc};
+use std::collections::BTreeSet;
+
+/// Host-side MIS state.
+pub struct Mis {
+    layout: AppLayout,
+    state: Addr,
+    newflag: Addr,
+    n: u32,
+    chunk: u32,
+}
+
+impl Mis {
+    pub fn setup(g: &Graph, alloc: &mut MemAlloc, backing: &mut BackingStore, chunk: u32) -> Self {
+        let (row_ptr, col, weight) = upload_graph(g, alloc, backing);
+        let n = g.n;
+        let state = alloc.alloc(n as u64 * 4);
+        let priority = alloc.alloc(n as u64 * 4);
+        let newflag = alloc.alloc(n as u64 * 4);
+        let changed = alloc.alloc(n as u64 * 4);
+        for v in 0..n {
+            backing.write_u32(state + v as u64 * 4, MIS_UNDECIDED);
+            backing.write_u32(priority + v as u64 * 4, mis_priority(v));
+        }
+        let layout = AppLayout {
+            row_ptr,
+            col,
+            weight,
+            a0: state,
+            a1: priority,
+            a2: newflag,
+            changed,
+            chunk,
+            n,
+            damping_bits: 0,
+            high_water: alloc.high_water(),
+        };
+        Mis {
+            layout,
+            state,
+            newflag,
+            n,
+            chunk,
+        }
+    }
+
+    pub fn result(&self, backing: &BackingStore) -> Vec<u32> {
+        (0..self.n)
+            .map(|v| backing.read_u32(self.state + v as u64 * 4))
+            .collect()
+    }
+
+    /// Set membership (IN vertices).
+    pub fn members(&self, backing: &BackingStore) -> Vec<u32> {
+        (0..self.n)
+            .filter(|&v| backing.read_u32(self.state + v as u64 * 4) == MIS_IN)
+            .collect()
+    }
+
+    /// Validity check: independent (no two IN vertices adjacent) and
+    /// maximal (every OUT/undecided vertex has an IN neighbor).
+    pub fn validate_mis(g: &Graph, state: &[u32]) -> Result<(), String> {
+        for v in 0..g.n {
+            match state[v as usize] {
+                s if s == MIS_IN => {
+                    for (u, _) in g.neighbors(v) {
+                        if state[u as usize] == MIS_IN {
+                            return Err(format!("adjacent IN pair {v},{u}"));
+                        }
+                    }
+                }
+                s if s == MIS_UNDECIDED => return Err(format!("vertex {v} undecided")),
+                _ => {
+                    if !g.neighbors(v).any(|(u, _)| state[u as usize] == MIS_IN) {
+                        return Err(format!("OUT vertex {v} has no IN neighbor (not maximal)"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Serial oracle with the same priorities: the greedy MIS over
+    /// priority order — identical to the fixed point of the parallel
+    /// rounds (unique priorities make Luby deterministic).
+    pub fn oracle(g: &Graph) -> Vec<u32> {
+        let mut order: Vec<u32> = (0..g.n).collect();
+        order.sort_by_key(|&v| std::cmp::Reverse(mis_priority(v)));
+        let mut state = vec![MIS_UNDECIDED; g.n as usize];
+        for v in order {
+            if state[v as usize] == MIS_UNDECIDED {
+                state[v as usize] = MIS_IN;
+                for (u, _) in g.neighbors(v) {
+                    if state[u as usize] == MIS_UNDECIDED {
+                        state[u as usize] = super::engine::MIS_OUT;
+                    }
+                }
+            }
+        }
+        state
+    }
+
+    fn chunk_of(&self, v: u32) -> u32 {
+        v / self.chunk
+    }
+}
+
+impl Workload for Mis {
+    fn kinds(&self) -> Vec<u32> {
+        vec![KIND_MIS_SELECT, KIND_MIS_EXCLUDE]
+    }
+
+    fn layout(&self) -> AppLayout {
+        self.layout.clone()
+    }
+
+    fn begin_round(&mut self, backing: &mut BackingStore) -> Option<Vec<u32>> {
+        // Active chunks: those still containing undecided vertices.
+        let mut chunks = BTreeSet::new();
+        for v in 0..self.n {
+            if backing.read_u32(self.state + v as u64 * 4) == MIS_UNDECIDED {
+                chunks.insert(self.chunk_of(v));
+            }
+        }
+        if chunks.is_empty() {
+            None
+        } else {
+            Some(chunks.into_iter().collect())
+        }
+    }
+
+    fn end_round(&mut self, backing: &mut BackingStore) {
+        // Clear newflags for the next round (host-side, free: the merge
+        // launch already applied them to the state array).
+        for v in 0..self.n {
+            backing.write_u32(self.newflag + v as u64 * 4, 0);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "MIS"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DeviceConfig, Scenario};
+    use crate::workload::driver::run_scenario_seeded;
+    use crate::workload::engine::NativeMath;
+
+    #[test]
+    fn oracle_is_valid_mis() {
+        let g = Graph::power_law(200, 2, 5);
+        let state = Mis::oracle(&g);
+        Mis::validate_mis(&g, &state).unwrap();
+    }
+
+    #[test]
+    fn simulated_mis_matches_oracle_all_scenarios() {
+        let g = Graph::power_law(160, 2, 9);
+        let oracle = Mis::oracle(&g);
+        for scenario in Scenario::ALL {
+            let mut alloc = MemAlloc::new();
+            let mut image = BackingStore::new();
+            let mut mis = Mis::setup(&g, &mut alloc, &mut image, 8);
+            let cfg = DeviceConfig::small();
+            let (run, final_mem) =
+                run_scenario_seeded(&cfg, scenario, &mut mis, NativeMath, 200, image);
+            assert!(run.converged, "{scenario:?}: MIS must converge");
+            let state = mis.result(&final_mem);
+            Mis::validate_mis(&g, &state).unwrap();
+            assert_eq!(state, oracle, "{scenario:?}: deterministic Luby must match greedy");
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! The evaluation workloads (§5.1): work-stealing versions of Pannotia's
+//! graph applications, written in KIR against the simulated memory system.
+//!
+//! * [`graph`] — CSR graphs: DIMACS / MatrixMarket parsers and synthetic
+//!   generators matched to the paper's input classes.
+//! * [`deque`] — the Cederman–Tsigas-style work-stealing deque: memory
+//!   layout + KIR code generation, parameterized by scenario sync flavor.
+//! * [`engine`] — the compute engine: gathers per-task graph data through
+//!   the timed memory interface, then delegates the batch math to a
+//!   [`TileMath`](engine::TileMath) backend (native Rust or the
+//!   AOT-compiled XLA artifact via [`crate::runtime`]).
+//! * [`pagerank`] / [`sssp`] / [`mis`] — the three applications with their
+//!   host drivers and native oracles.
+//! * [`driver`] — the shared scenario runner (queue fill, kernel launches,
+//!   convergence loops).
+
+pub mod deque;
+pub mod driver;
+pub mod engine;
+pub mod graph;
+pub mod mis;
+pub mod pagerank;
+pub mod sssp;
+
+pub use driver::{run_scenario, App, RunResult};
+pub use engine::{NativeMath, TileMath, WorkEngine, K_TILE, V_TILE};
+pub use graph::Graph;

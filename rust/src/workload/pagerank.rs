@@ -1,0 +1,188 @@
+//! PageRank (Pannotia PRK, §5.1: run with a `cond-mat-2003`-class
+//! small-world graph).
+//!
+//! Pull formulation with double-buffered contributions:
+//! `rank[v] = (1-d)/n + d * Σ_{u∈N(v)} contrib_in[u]`,
+//! `contrib_out[v] = rank[v]/deg(v)`. Every chunk is active every
+//! iteration; buffers swap between launches. Race-free: a task writes only
+//! its own vertices.
+
+use super::driver::Workload;
+use super::engine::{upload_graph, AppLayout, KIND_PAGERANK, K_TILE};
+use super::graph::Graph;
+use crate::mem::{Addr, BackingStore, MemAlloc};
+
+pub const DAMPING: f32 = 0.85;
+
+/// Host-side PageRank state.
+pub struct PageRank {
+    layout: AppLayout,
+    /// Rank output array.
+    rank: Addr,
+    /// Contribution buffers (swap roles each iteration).
+    contrib_a: Addr,
+    contrib_b: Addr,
+    n: u32,
+    iters: u32,
+    round: u32,
+    total_chunks: u32,
+}
+
+impl PageRank {
+    /// Allocate and initialize device arrays for `g`; run `iters`
+    /// iterations with `chunk` vertices per task.
+    pub fn setup(
+        g: &Graph,
+        alloc: &mut MemAlloc,
+        backing: &mut BackingStore,
+        chunk: u32,
+        iters: u32,
+    ) -> Self {
+        let (row_ptr, col, weight) = upload_graph(g, alloc, backing);
+        let n = g.n;
+        let rank = alloc.alloc(n as u64 * 4);
+        let contrib_a = alloc.alloc(n as u64 * 4);
+        let contrib_b = alloc.alloc(n as u64 * 4);
+        let changed = alloc.alloc(n as u64 * 4);
+        let r0 = 1.0f32 / n as f32;
+        for v in 0..n {
+            backing.write_f32(rank + v as u64 * 4, r0);
+            backing.write_f32(contrib_a + v as u64 * 4, r0 / g.degree(v).max(1) as f32);
+        }
+        let layout = AppLayout {
+            row_ptr,
+            col,
+            weight,
+            a0: contrib_a, // in
+            a1: rank,      // out
+            a2: contrib_b, // contribution out
+            changed,
+            chunk,
+            n,
+            damping_bits: DAMPING.to_bits(),
+            high_water: alloc.high_water(),
+        };
+        PageRank {
+            layout,
+            rank,
+            contrib_a,
+            contrib_b,
+            n,
+            iters,
+            round: 0,
+            total_chunks: n.div_ceil(chunk),
+        }
+    }
+
+    /// Final ranks (host-visible after the last kernel barrier).
+    pub fn result(&self, backing: &BackingStore) -> Vec<f32> {
+        (0..self.n)
+            .map(|v| backing.read_f32(self.rank + v as u64 * 4))
+            .collect()
+    }
+
+    /// Reference power iteration replicating the engine's tiling (K_TILE
+    /// row sums, partial-row combination) so results match closely.
+    pub fn oracle(g: &Graph, iters: u32) -> Vec<f32> {
+        let n = g.n;
+        let base = (1.0 - DAMPING) / n as f32;
+        let mut contrib: Vec<f32> = (0..n)
+            .map(|v| (1.0 / n as f32) / g.degree(v).max(1) as f32)
+            .collect();
+        let mut rank = vec![1.0f32 / n as f32; n as usize];
+        for _ in 0..iters {
+            let mut new_contrib = vec![0f32; n as usize];
+            for v in 0..n {
+                let nbrs: Vec<u32> = g.neighbors(v).map(|(u, _)| u).collect();
+                // Tile-shaped partial sums, as the engine computes them.
+                let mut acc = 0f32;
+                let nrows = nbrs.len().div_ceil(K_TILE).max(1);
+                for r in 0..nrows {
+                    let mut s = 0f32;
+                    for k in 0..K_TILE {
+                        if let Some(&u) = nbrs.get(r * K_TILE + k) {
+                            s += contrib[u as usize];
+                        }
+                    }
+                    acc += base + DAMPING * s;
+                }
+                let rv = acc - (nrows as f32 - 1.0) * base;
+                rank[v as usize] = rv;
+                new_contrib[v as usize] = rv / g.degree(v).max(1) as f32;
+            }
+            contrib = new_contrib;
+        }
+        rank
+    }
+}
+
+impl Workload for PageRank {
+    fn kinds(&self) -> Vec<u32> {
+        vec![KIND_PAGERANK]
+    }
+
+    fn layout(&self) -> AppLayout {
+        self.layout.clone()
+    }
+
+    fn begin_round(&mut self, _backing: &mut BackingStore) -> Option<Vec<u32>> {
+        if self.round >= self.iters {
+            return None;
+        }
+        Some((0..self.total_chunks).collect())
+    }
+
+    fn end_round(&mut self, _backing: &mut BackingStore) {
+        self.round += 1;
+        // Swap contribution buffers.
+        std::mem::swap(&mut self.contrib_a, &mut self.contrib_b);
+        self.layout.a0 = self.contrib_a;
+        self.layout.a2 = self.contrib_b;
+    }
+
+    fn name(&self) -> &'static str {
+        "PRK"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DeviceConfig, Scenario};
+    use crate::workload::driver::run_scenario;
+    use crate::workload::engine::NativeMath;
+
+    fn l1_norm_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+    }
+
+    #[test]
+    fn oracle_sums_to_one() {
+        let g = Graph::small_world(256, 4, 0.1, 7);
+        let r = PageRank::oracle(&g, 10);
+        let sum: f32 = r.iter().sum();
+        assert!((sum - 1.0).abs() < 0.02, "rank mass ~1, got {sum}");
+    }
+
+    #[test]
+    fn simulated_pagerank_matches_oracle_all_scenarios() {
+        let g = Graph::small_world(192, 4, 0.2, 11);
+        let oracle = PageRank::oracle(&g, 4);
+        for scenario in Scenario::ALL {
+            let mut alloc = MemAlloc::new();
+            let mut image = BackingStore::new();
+            let mut prk = PageRank::setup(&g, &mut alloc, &mut image, 16, 4);
+            let cfg = DeviceConfig::small();
+            let (run, final_mem) = crate::workload::driver::run_scenario_seeded(
+                &cfg, scenario, &mut prk, NativeMath, 64, image,
+            );
+            assert!(run.converged, "{scenario:?} must finish");
+            let result = prk.result(&final_mem);
+            let d = l1_norm_diff(&result, &oracle);
+            assert!(
+                d < 1e-4,
+                "{scenario:?}: PageRank deviates from oracle by {d}"
+            );
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Single-source shortest paths (Pannotia SSSP, §5.1: run with a
+//! `USA-road-BAY`-class road network).
+//!
+//! Pull relaxation over a frontier worklist: an active vertex v recomputes
+//! `dist[v] = min(dist[v], min_u(dist[u] + w(u,v)))` (writes only its own
+//! entry — race-free), sets `changed[v]`, and the host activates the
+//! chunks containing neighbors of changed vertices for the next round.
+//! The frontier sweep produces the strong, shifting load imbalance that
+//! makes SSSP the paper's best case for work stealing (+40% with sRSP).
+
+use super::driver::Workload;
+use super::engine::{upload_graph, AppLayout, DIST_INF, KIND_SSSP};
+use super::graph::Graph;
+use crate::mem::{Addr, BackingStore, MemAlloc};
+use std::collections::BTreeSet;
+
+/// Host-side SSSP state.
+pub struct Sssp {
+    layout: AppLayout,
+    dist: Addr,
+    changed: Addr,
+    n: u32,
+    chunk: u32,
+    source: u32,
+    graph_adj: Vec<Vec<u32>>,
+    /// Chunks to process next round (None before the first round).
+    next_active: Option<Vec<u32>>,
+    first: bool,
+}
+
+impl Sssp {
+    pub fn setup(
+        g: &Graph,
+        alloc: &mut MemAlloc,
+        backing: &mut BackingStore,
+        chunk: u32,
+        source: u32,
+    ) -> Self {
+        let (row_ptr, col, weight) = upload_graph(g, alloc, backing);
+        let n = g.n;
+        let dist = alloc.alloc(n as u64 * 4);
+        let changed = alloc.alloc(n as u64 * 4);
+        for v in 0..n {
+            backing.write_u32(dist + v as u64 * 4, if v == source { 0 } else { DIST_INF });
+        }
+        let layout = AppLayout {
+            row_ptr,
+            col,
+            weight,
+            a0: dist,
+            a1: 0,
+            a2: 0,
+            changed,
+            chunk,
+            n,
+            damping_bits: 0,
+            high_water: alloc.high_water(),
+        };
+        let graph_adj = (0..n)
+            .map(|v| g.neighbors(v).map(|(u, _)| u).collect())
+            .collect();
+        Sssp {
+            layout,
+            dist,
+            changed,
+            n,
+            chunk,
+            source,
+            graph_adj,
+            next_active: None,
+            first: true,
+        }
+    }
+
+    pub fn result(&self, backing: &BackingStore) -> Vec<u32> {
+        (0..self.n)
+            .map(|v| backing.read_u32(self.dist + v as u64 * 4))
+            .collect()
+    }
+
+    /// Dijkstra oracle (exact distances; DIST_INF for unreachable).
+    pub fn oracle(g: &Graph, source: u32) -> Vec<u32> {
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        let mut dist = vec![DIST_INF; g.n as usize];
+        dist[source as usize] = 0;
+        let mut heap = BinaryHeap::new();
+        heap.push(Reverse((0u32, source)));
+        while let Some(Reverse((d, v))) = heap.pop() {
+            if d > dist[v as usize] {
+                continue;
+            }
+            for (u, w) in g.neighbors(v) {
+                let nd = d + w;
+                if nd < dist[u as usize] {
+                    dist[u as usize] = nd;
+                    heap.push(Reverse((nd, u)));
+                }
+            }
+        }
+        dist
+    }
+
+    fn chunk_of(&self, v: u32) -> u32 {
+        v / self.chunk
+    }
+}
+
+impl Workload for Sssp {
+    fn kinds(&self) -> Vec<u32> {
+        vec![KIND_SSSP]
+    }
+
+    fn layout(&self) -> AppLayout {
+        self.layout.clone()
+    }
+
+    fn begin_round(&mut self, backing: &mut BackingStore) -> Option<Vec<u32>> {
+        if self.first {
+            self.first = false;
+            // Kick off: activate the chunks holding the source's neighbors.
+            let mut chunks = BTreeSet::new();
+            for &u in &self.graph_adj[self.source as usize] {
+                chunks.insert(self.chunk_of(u));
+            }
+            chunks.insert(self.chunk_of(self.source));
+            return Some(chunks.into_iter().collect());
+        }
+        // Activate chunks containing neighbors of vertices that changed
+        // last round; clear the flags.
+        let mut chunks = BTreeSet::new();
+        for v in 0..self.n {
+            if backing.read_u32(self.changed + v as u64 * 4) != 0 {
+                backing.write_u32(self.changed + v as u64 * 4, 0);
+                for &u in &self.graph_adj[v as usize] {
+                    chunks.insert(self.chunk_of(u));
+                }
+            }
+        }
+        if chunks.is_empty() {
+            None // converged
+        } else {
+            Some(chunks.into_iter().collect())
+        }
+    }
+
+    fn end_round(&mut self, _backing: &mut BackingStore) {}
+
+    fn name(&self) -> &'static str {
+        "SSSP"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DeviceConfig, Scenario};
+    use crate::workload::driver::run_scenario_seeded;
+    use crate::workload::engine::NativeMath;
+
+    #[test]
+    fn oracle_on_path_graph() {
+        let g = Graph::from_edges(4, &[(0, 1, 5), (1, 2, 3), (2, 3, 2)]);
+        assert_eq!(Sssp::oracle(&g, 0), vec![0, 5, 8, 10]);
+    }
+
+    #[test]
+    fn simulated_sssp_exact_all_scenarios() {
+        let g = Graph::road_grid(12, 12, 3);
+        let oracle = Sssp::oracle(&g, 0);
+        for scenario in Scenario::ALL {
+            let mut alloc = MemAlloc::new();
+            let mut image = BackingStore::new();
+            let mut sssp = Sssp::setup(&g, &mut alloc, &mut image, 8, 0);
+            let cfg = DeviceConfig::small();
+            let (run, final_mem) =
+                run_scenario_seeded(&cfg, scenario, &mut sssp, NativeMath, 1000, image);
+            assert!(run.converged, "{scenario:?}: SSSP must converge");
+            assert_eq!(
+                sssp.result(&final_mem),
+                oracle,
+                "{scenario:?}: distances must be exact"
+            );
+        }
+    }
+
+    #[test]
+    fn unreachable_stays_inf() {
+        // Two disconnected components.
+        let g = Graph::from_edges(4, &[(0, 1, 1), (2, 3, 1)]);
+        let mut alloc = MemAlloc::new();
+        let mut image = BackingStore::new();
+        let mut sssp = Sssp::setup(&g, &mut alloc, &mut image, 2, 0);
+        let cfg = DeviceConfig::small();
+        let (_, final_mem) = run_scenario_seeded(
+            &cfg,
+            Scenario::Srsp,
+            &mut sssp,
+            NativeMath,
+            100,
+            image,
+        );
+        let d = sssp.result(&final_mem);
+        assert_eq!(d[1], 1);
+        assert_eq!(d[2], DIST_INF);
+        assert_eq!(d[3], DIST_INF);
+    }
+}

@@ -1,0 +1,147 @@
+//! Work-stealing queue safety properties: under randomized queue sizes,
+//! thief counts and protocols, every task is claimed exactly once (no
+//! loss, no duplication), verified per-task via claim counters in
+//! simulated memory.
+
+use srsp::config::{DeviceConfig, Protocol, Scenario};
+use srsp::gpu::Device;
+use srsp::kir::{Asm, Src};
+use srsp::mem::MemAlloc;
+use srsp::proptest::{run_prop, Gen};
+use srsp::workload::deque::{
+    emit_advertise_empty, emit_owner_pop, emit_steal, DequeLayout, DequeRegs, SyncFlavor, EMPTY,
+};
+
+/// Kernel: wg q drains its own queue; when empty, scans every other queue
+/// stealing. Each claimed task id `t` bumps `claimed[t]` (claimer-private
+/// write: claims are exclusive, so no race).
+fn kernel(
+    layout: &DequeLayout,
+    flavor: SyncFlavor,
+    claimed: u64,
+    num_wgs: u32,
+) -> srsp::kir::Program {
+    let mut a = Asm::new();
+    let qbase = a.reg();
+    let task = a.reg();
+    let t0 = a.reg();
+    let t1 = a.reg();
+    let t2 = a.reg();
+    let wg = a.reg();
+    let addr = a.reg();
+    let victim = a.reg();
+    let one = a.reg();
+
+    a.wg_id(wg);
+    a.imm(one, 1);
+    a.imm(t0, layout.stride);
+    a.mul(qbase, wg, Src::R(t0));
+    a.add(qbase, qbase, Src::I(layout.base));
+    let regs = DequeRegs { qbase, task, t0, t1, t2 };
+
+    a.label("own");
+    emit_owner_pop(&mut a, &regs, flavor, "o");
+    a.eq(t0, task, Src::I(EMPTY));
+    a.bnz(t0, "own_done");
+    a.shl(addr, task, Src::I(2));
+    a.add(addr, addr, Src::I(claimed));
+    a.ld(t1, addr, 0, 4);
+    a.add(t1, t1, Src::R(one));
+    a.st(addr, 0, t1, 4);
+    a.br("own");
+    a.label("own_done");
+    emit_advertise_empty(&mut a, &regs);
+
+    // Steal sweep over all other queues.
+    a.add(victim, wg, Src::I(1));
+    a.label("scan");
+    a.alu(srsp::kir::AluOp::RemU, victim, victim, Src::I(num_wgs as u64));
+    a.eq(t0, victim, Src::R(wg));
+    a.bnz(t0, "end");
+    a.imm(t0, layout.stride);
+    a.mul(qbase, victim, Src::R(t0));
+    a.add(qbase, qbase, Src::I(layout.base));
+    a.label("steal");
+    emit_steal(&mut a, &regs, flavor, "s");
+    a.eq(t0, task, Src::I(EMPTY));
+    a.bnz(t0, "next");
+    a.shl(addr, task, Src::I(2));
+    a.add(addr, addr, Src::I(claimed));
+    a.ld(t1, addr, 0, 4);
+    a.add(t1, t1, Src::R(one));
+    a.st(addr, 0, t1, 4);
+    a.br("steal");
+    a.label("next");
+    a.add(victim, victim, Src::I(1));
+    a.br("scan");
+    a.label("end");
+    a.halt();
+    a.finish()
+}
+
+fn check(g: &mut Gen, protocol: Protocol, scenario: Scenario) {
+    let num_wgs = g.u32(2..5);
+    let cfg = DeviceConfig {
+        num_cus: 4,
+        ..DeviceConfig::small()
+    };
+    let mut alloc = MemAlloc::new();
+    let cap = g.u32(1..40);
+    let layout = DequeLayout::alloc(&mut alloc, num_wgs, cap);
+    // Unique global task ids across queues.
+    let mut next_id = 0u32;
+    let fills: Vec<Vec<u32>> = (0..num_wgs)
+        .map(|_| {
+            let n = g.usize(0..cap as usize + 1);
+            (0..n)
+                .map(|_| {
+                    let id = next_id;
+                    next_id += 1;
+                    id
+                })
+                .collect()
+        })
+        .collect();
+    let total = next_id;
+    let claimed = alloc.alloc(total.max(1) as u64 * 4);
+
+    let mut dev = Device::new(cfg, protocol);
+    for (q, tasks) in fills.iter().enumerate() {
+        layout.fill(&mut dev.mem.backing, q as u32, tasks);
+    }
+    let flavor = SyncFlavor::of(scenario);
+    dev.launch_simple(&kernel(&layout, flavor, claimed, num_wgs), num_wgs);
+
+    for t in 0..total {
+        let c = dev.mem.backing.read_u32(claimed + t as u64 * 4);
+        assert_eq!(
+            c, 1,
+            "{scenario:?}: task {t} claimed {c} times (wgs={num_wgs}, total={total})"
+        );
+    }
+    for q in 0..num_wgs {
+        assert_eq!(layout.remaining(&dev.mem.backing, q), 0, "queue {q} has leftovers");
+    }
+    dev.mem.check_invariants();
+}
+
+#[test]
+fn every_task_claimed_exactly_once_srsp() {
+    run_prop("deque_once_srsp", 30, |g| {
+        check(g, Protocol::Srsp, Scenario::Srsp);
+    });
+}
+
+#[test]
+fn every_task_claimed_exactly_once_naive_rsp() {
+    run_prop("deque_once_rsp", 30, |g| {
+        check(g, Protocol::RspNaive, Scenario::Rsp);
+    });
+}
+
+#[test]
+fn every_task_claimed_exactly_once_global() {
+    run_prop("deque_once_steal", 30, |g| {
+        check(g, Protocol::ScopedOnly, Scenario::StealOnly);
+    });
+}

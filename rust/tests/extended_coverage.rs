@@ -1,0 +1,277 @@
+//! Extended coverage: system scope, multiple work-groups per CU,
+//! high-degree (multi-row) tile splitting, config-file round trips and
+//! host-driver edge cases.
+
+use srsp::config::{parse_config_str, DeviceConfig, Protocol, Scenario};
+use srsp::gpu::Device;
+use srsp::kir::{Asm, Src};
+use srsp::mem::{BackingStore, MemAlloc};
+use srsp::sync::{AtomicOp, MemOrder, Scope};
+use srsp::workload::driver::run_scenario_seeded;
+use srsp::workload::engine::NativeMath;
+use srsp::workload::graph::Graph;
+use srsp::workload::mis::Mis;
+use srsp::workload::pagerank::PageRank;
+use srsp::workload::sssp::Sssp;
+
+// ---------------------------------------------------------------------
+// System scope
+// ---------------------------------------------------------------------
+
+#[test]
+fn sys_scope_publishes_through_l2_to_backing() {
+    let mut dev = Device::new(DeviceConfig::small(), Protocol::Srsp);
+    let t = dev.mem.l1_write(0, 0x4000, 4, 77, 0);
+    // sys-scope release: L1 flushed, then L2 flushed to the backing store.
+    let out = srsp::sync::engine::sync_op(
+        &mut dev.mem, Protocol::Srsp, 0, 0x4040, AtomicOp::Store,
+        MemOrder::Release, Scope::Sys, 1, 0, t,
+    );
+    assert_eq!(
+        dev.mem.backing.read_u32(0x4000),
+        77,
+        "sys release must reach the backing store"
+    );
+    // sys-scope acquire on another CU drops L1 *and* L2 state.
+    let acq = srsp::sync::engine::sync_op(
+        &mut dev.mem, Protocol::Srsp, 1, 0x4040, AtomicOp::Load,
+        MemOrder::Acquire, Scope::Sys, 0, 0, out.done,
+    );
+    assert_eq!(acq.value, 1);
+    let (v, _) = dev.mem.l1_read(1, 0x4000, 4, acq.done);
+    assert_eq!(v, 77);
+    dev.mem.check_invariants();
+}
+
+#[test]
+fn sys_scope_message_passing_kernel() {
+    // Full KIR version across protocols.
+    for p in [Protocol::ScopedOnly, Protocol::RspNaive, Protocol::Srsp] {
+        let mut a = Asm::new();
+        let wg = a.reg();
+        let data = a.reg();
+        let flag = a.reg();
+        let v = a.reg();
+        a.wg_id(wg);
+        a.imm(data, 0x100);
+        a.imm(flag, 0x140);
+        a.bnz(wg, "reader");
+        a.imm(v, 5);
+        a.st(data, 0, v, 4);
+        a.atomic(v, AtomicOp::Store, flag, Src::I(1), Src::I(0), MemOrder::Release, Scope::Sys);
+        a.halt();
+        a.label("reader");
+        a.label("spin");
+        a.atomic(v, AtomicOp::Load, flag, Src::I(0), Src::I(0), MemOrder::Acquire, Scope::Sys);
+        a.bz(v, "spin");
+        a.ld(v, data, 0, 4);
+        a.st(flag, 4, v, 4);
+        a.halt();
+        let prog = a.finish();
+        let mut dev = Device::new(DeviceConfig::small(), p);
+        dev.launch_simple(&prog, 2);
+        assert_eq!(dev.mem.backing.read_u32(0x144), 5, "{p:?}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Multiple work-groups per CU (shared L1)
+// ---------------------------------------------------------------------
+
+#[test]
+fn two_wgs_per_cu_share_an_l1_for_wg_scope() {
+    // 2 wgs/CU: wg0 and wg4 (on CU0) synchronize at wg scope; the
+    // workloads must still validate.
+    let cfg = DeviceConfig {
+        num_cus: 4,
+        wgs_per_cu: 2,
+        ..DeviceConfig::small()
+    };
+    let g = Graph::small_world(128, 4, 0.2, 3);
+    let oracle = PageRank::oracle(&g, 3);
+    for scenario in [Scenario::ScopeOnly, Scenario::Srsp] {
+        let mut alloc = MemAlloc::new();
+        let mut image = BackingStore::new();
+        let mut prk = PageRank::setup(&g, &mut alloc, &mut image, 8, 3);
+        let (run, mem) = run_scenario_seeded(&cfg, scenario, &mut prk, NativeMath, 16, image);
+        assert!(run.converged);
+        let got = prk.result(&mem);
+        let d: f32 = got.iter().zip(&oracle).map(|(a, b)| (a - b).abs()).sum();
+        assert!(d < 1e-4, "{scenario:?}: {d}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// High-degree vertices (multi-row tiles)
+// ---------------------------------------------------------------------
+
+#[test]
+fn star_graph_pagerank_exercises_row_splitting() {
+    // Hub with 200 spokes: degree 200 > K_TILE=32 -> 7 tile rows whose
+    // partial sums must recombine exactly.
+    let n = 201u32;
+    let edges: Vec<(u32, u32, u32)> = (1..n).map(|v| (0, v, 1)).collect();
+    let g = Graph::from_edges(n, &edges);
+    assert!(g.max_degree() > srsp::workload::engine::K_TILE as u32);
+    let oracle = PageRank::oracle(&g, 5);
+    let cfg = DeviceConfig::small();
+    for scenario in [Scenario::Baseline, Scenario::Srsp] {
+        let mut alloc = MemAlloc::new();
+        let mut image = BackingStore::new();
+        let mut prk = PageRank::setup(&g, &mut alloc, &mut image, 16, 5);
+        let (run, mem) = run_scenario_seeded(&cfg, scenario, &mut prk, NativeMath, 16, image);
+        assert!(run.converged);
+        let got = prk.result(&mem);
+        let d: f32 = got.iter().zip(&oracle).map(|(a, b)| (a - b).abs()).sum();
+        assert!(d < 1e-4, "{scenario:?}: hub splitting broke ranks ({d})");
+    }
+}
+
+#[test]
+fn star_graph_sssp_and_mis_with_hub() {
+    let n = 100u32;
+    let edges: Vec<(u32, u32, u32)> = (1..n).map(|v| (0, v, v)).collect();
+    let g = Graph::from_edges(n, &edges);
+    let cfg = DeviceConfig::small();
+
+    let oracle = Sssp::oracle(&g, 0);
+    let mut alloc = MemAlloc::new();
+    let mut image = BackingStore::new();
+    let mut sssp = Sssp::setup(&g, &mut alloc, &mut image, 8, 0);
+    let (run, mem) = run_scenario_seeded(&cfg, Scenario::Srsp, &mut sssp, NativeMath, 100, image);
+    assert!(run.converged);
+    assert_eq!(sssp.result(&mem), oracle);
+
+    let mut alloc = MemAlloc::new();
+    let mut image = BackingStore::new();
+    let mut mis = Mis::setup(&g, &mut alloc, &mut image, 8);
+    let (run, mem) = run_scenario_seeded(&cfg, Scenario::Srsp, &mut mis, NativeMath, 64, image);
+    assert!(run.converged);
+    let state = mis.result(&mem);
+    Mis::validate_mis(&g, &state).unwrap();
+    assert_eq!(state, Mis::oracle(&g));
+}
+
+// ---------------------------------------------------------------------
+// Config files
+// ---------------------------------------------------------------------
+
+#[test]
+fn config_file_round_trip_through_disk() {
+    let dir = std::env::temp_dir().join("srsp_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("dev.cfg");
+    std::fs::write(
+        &path,
+        "# experiment config\nnum_cus = 16\nl1_size = 8k\nl1_ways = 8\nlr_tbl_entries = 4\n",
+    )
+    .unwrap();
+    let cfg = srsp::config::file::load_config(&path).unwrap();
+    assert_eq!(cfg.num_cus, 16);
+    assert_eq!(cfg.l1_size, 8 * 1024);
+    assert_eq!(cfg.l1_sets(), 16); // 8k/64/8
+    assert_eq!(cfg.lr_tbl_entries, 4);
+    cfg.validate().unwrap();
+}
+
+#[test]
+fn custom_config_device_runs_workload() {
+    let cfg = parse_config_str(
+        "num_cus = 8\nl1_size = 4k\nl2_size = 64k\nl1_sfifo = 8\nlr_tbl_entries = 8\npa_tbl_entries = 8\n",
+    )
+    .unwrap();
+    let g = Graph::road_grid(8, 8, 1);
+    let oracle = Sssp::oracle(&g, 0);
+    let mut alloc = MemAlloc::new();
+    let mut image = BackingStore::new();
+    let mut sssp = Sssp::setup(&g, &mut alloc, &mut image, 4, 0);
+    let (run, mem) = run_scenario_seeded(&cfg, Scenario::Srsp, &mut sssp, NativeMath, 200, image);
+    assert!(run.converged);
+    assert_eq!(sssp.result(&mem), oracle);
+}
+
+// ---------------------------------------------------------------------
+// Driver edges
+// ---------------------------------------------------------------------
+
+#[test]
+fn empty_workload_rounds_converge_immediately() {
+    // A graph with one isolated vertex: MIS decides it in one round.
+    let g = Graph::from_edges(2, &[(0, 1, 1)]);
+    let cfg = DeviceConfig::small();
+    let mut alloc = MemAlloc::new();
+    let mut image = BackingStore::new();
+    let mut mis = Mis::setup(&g, &mut alloc, &mut image, 2);
+    let (run, mem) = run_scenario_seeded(&cfg, Scenario::Srsp, &mut mis, NativeMath, 8, image);
+    assert!(run.converged);
+    assert!(run.rounds <= 2);
+    Mis::validate_mis(&g, &mis.result(&mem)).unwrap();
+}
+
+#[test]
+fn single_cu_device_all_scenarios() {
+    // Degenerate device: 1 CU. Steal scans have no victims; everything
+    // must still converge and validate.
+    let cfg = DeviceConfig {
+        num_cus: 1,
+        ..DeviceConfig::small()
+    };
+    let g = Graph::small_world(64, 4, 0.2, 5);
+    let oracle = PageRank::oracle(&g, 2);
+    for scenario in Scenario::ALL {
+        let mut alloc = MemAlloc::new();
+        let mut image = BackingStore::new();
+        let mut prk = PageRank::setup(&g, &mut alloc, &mut image, 8, 2);
+        let (run, mem) = run_scenario_seeded(&cfg, scenario, &mut prk, NativeMath, 8, image);
+        assert!(run.converged, "{scenario:?}");
+        let got = prk.result(&mem);
+        let d: f32 = got.iter().zip(&oracle).map(|(a, b)| (a - b).abs()).sum();
+        assert!(d < 1e-4, "{scenario:?}: {d}");
+    }
+}
+
+#[test]
+fn stats_steal_counters_consistent() {
+    // tasks_executed == total tasks; steals <= attempts; successes +
+    // failures <= attempts (attempts include cheap pre-check skips).
+    let cfg = DeviceConfig {
+        num_cus: 4,
+        ..DeviceConfig::small()
+    };
+    let g = Graph::power_law(256, 2, 7);
+    let mut alloc = MemAlloc::new();
+    let mut image = BackingStore::new();
+    let mut mis = Mis::setup(&g, &mut alloc, &mut image, 8);
+    let (run, _mem) = run_scenario_seeded(&cfg, Scenario::Srsp, &mut mis, NativeMath, 64, image);
+    let s = &run.stats;
+    assert!(s.tasks_stolen <= s.steal_attempts);
+    assert!(s.tasks_stolen + s.steal_failures <= s.steal_attempts + 1);
+    assert!(s.tasks_executed > 0);
+    assert_eq!(
+        s.tasks_executed, s.compute_ops,
+        "every claimed task executes exactly one compute op"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Bundled real-format input
+// ---------------------------------------------------------------------
+
+#[test]
+fn bundled_dimacs_sample_runs_end_to_end() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("data/sample_road.gr");
+    let text = std::fs::read_to_string(path).expect("bundled sample present");
+    let g = Graph::from_dimacs_gr(&text).unwrap();
+    g.validate().unwrap();
+    assert_eq!(g.n, 16);
+    let oracle = Sssp::oracle(&g, 0);
+    let cfg = DeviceConfig::small();
+    for scenario in [Scenario::Baseline, Scenario::Srsp, Scenario::Hlrc] {
+        let mut alloc = MemAlloc::new();
+        let mut image = BackingStore::new();
+        let mut sssp = Sssp::setup(&g, &mut alloc, &mut image, 4, 0);
+        let (run, mem) = run_scenario_seeded(&cfg, scenario, &mut sssp, NativeMath, 200, image);
+        assert!(run.converged, "{scenario:?}");
+        assert_eq!(sssp.result(&mem), oracle, "{scenario:?}");
+    }
+}

@@ -1,0 +1,275 @@
+//! Memory-consistency litmus tests over the simulated hierarchy.
+//!
+//! Value-accurate caches make these meaningful: stale reads really happen
+//! when the model allows them, and must never happen across a proper
+//! acquire/release edge.
+
+use srsp::config::{DeviceConfig, Protocol};
+use srsp::gpu::Device;
+use srsp::kir::{Asm, Program, Src};
+use srsp::sync::{AtomicOp, MemOrder, Scope};
+
+const DATA: u64 = 0x1000;
+const FLAG: u64 = 0x1040;
+const OUT: u64 = 0x2000;
+
+fn all_protocols() -> [Protocol; 3] {
+    [Protocol::ScopedOnly, Protocol::RspNaive, Protocol::Srsp]
+}
+
+/// Message passing at cmp scope: the acquiring reader must see the data
+/// written before the release, on every protocol.
+fn mp_kernel(scope: Scope) -> Program {
+    let mut a = Asm::new();
+    let wg = a.reg();
+    let data = a.reg();
+    let flag = a.reg();
+    let v = a.reg();
+    let out = a.reg();
+    a.wg_id(wg);
+    a.imm(data, DATA);
+    a.imm(flag, FLAG);
+    a.bnz(wg, "reader");
+    // writer
+    a.imm(v, 42);
+    a.st(data, 0, v, 4);
+    a.atomic(v, AtomicOp::Store, flag, Src::I(1), Src::I(0), MemOrder::Release, scope);
+    a.halt();
+    // reader: spin on flag with acquire, then read data.
+    a.label("reader");
+    a.label("spin");
+    a.atomic(v, AtomicOp::Load, flag, Src::I(0), Src::I(0), MemOrder::Acquire, scope);
+    a.bz(v, "spin");
+    a.ld(v, data, 0, 4);
+    a.imm(out, OUT);
+    a.st(out, 0, v, 4);
+    a.halt();
+    a.finish()
+}
+
+#[test]
+fn message_passing_cmp_scope_all_protocols() {
+    for p in all_protocols() {
+        let mut dev = Device::new(DeviceConfig::small(), p);
+        dev.launch_simple(&mp_kernel(Scope::Cmp), 2);
+        assert_eq!(
+            dev.mem.backing.read_u32(OUT),
+            42,
+            "{p:?}: acquire must observe pre-release data"
+        );
+    }
+}
+
+#[test]
+fn message_passing_wg_scope_same_cu() {
+    // Two work-groups on the SAME CU share an L1: wg scope suffices.
+    let cfg = DeviceConfig {
+        num_cus: 1,
+        wgs_per_cu: 2,
+        ..DeviceConfig::small()
+    };
+    for p in all_protocols() {
+        let mut dev = Device::new(cfg.clone(), p);
+        dev.launch_simple(&mp_kernel(Scope::Wg), 2);
+        assert_eq!(
+            dev.mem.backing.read_u32(OUT),
+            42,
+            "{p:?}: wg scope within one CU must synchronize"
+        );
+    }
+}
+
+/// Demonstrate permitted staleness: a plain cross-CU read with *no*
+/// synchronization may legitimately miss the writer's dirty data; after a
+/// cmp acquire/release pair it must be visible.
+#[test]
+fn unsynchronized_cross_cu_read_is_stale() {
+    let mut dev = Device::new(DeviceConfig::small(), Protocol::Srsp);
+    // CU0 writes (stays dirty in its L1).
+    let t = dev.mem.l1_write(0, DATA, 4, 7, 0);
+    // CU1 plain read: L2 has no idea -> 0.
+    let (v, t2) = dev.mem.l1_read(1, DATA, 4, t);
+    assert_eq!(v, 0, "non-coherent L1s must yield the stale value");
+    // Proper pair: CU0 releases at cmp scope, CU1 acquires.
+    let rel = srsp::sync::engine::sync_op(
+        &mut dev.mem, Protocol::Srsp, 0, FLAG, AtomicOp::Store,
+        MemOrder::Release, Scope::Cmp, 1, 0, t2,
+    );
+    let acq = srsp::sync::engine::sync_op(
+        &mut dev.mem, Protocol::Srsp, 1, FLAG, AtomicOp::Load,
+        MemOrder::Acquire, Scope::Cmp, 0, 0, rel.done,
+    );
+    assert_eq!(acq.value, 1);
+    let (v2, _) = dev.mem.l1_read(1, DATA, 4, acq.done);
+    assert_eq!(v2, 7, "cmp acquire/release must publish the data");
+}
+
+/// Remote lock handoff (the paper's §4 example) as a full KIR program:
+/// local sharer takes the lock n0 times, remote sharer n1 times; the
+/// protected counter must be exact under both RSP implementations.
+fn handoff_kernel(n0: u64, n1: u64, remote: bool) -> Program {
+    let mut a = Asm::new();
+    let wg = a.reg();
+    let lock = a.reg();
+    let data = a.reg();
+    let old = a.reg();
+    let tmp = a.reg();
+    let i = a.reg();
+    let c = a.reg();
+    a.wg_id(wg);
+    a.imm(lock, FLAG);
+    a.imm(data, DATA);
+    a.imm(i, 0);
+    a.bnz(wg, "remote_side");
+
+    a.label("l_loop");
+    a.lt_u(c, i, Src::I(n0));
+    a.bz(c, "l_done");
+    a.label("l_spin");
+    a.atomic(old, AtomicOp::Cas, lock, Src::I(1), Src::I(0), MemOrder::Acquire, Scope::Wg);
+    a.bnz(old, "l_spin");
+    a.ld(tmp, data, 0, 4);
+    a.add(tmp, tmp, Src::I(1));
+    a.st(data, 0, tmp, 4);
+    a.atomic(old, AtomicOp::Store, lock, Src::I(0), Src::I(0), MemOrder::Release, Scope::Wg);
+    a.add(i, i, Src::I(1));
+    a.br("l_loop");
+    a.label("l_done");
+    a.halt();
+
+    a.label("remote_side");
+    a.label("r_loop");
+    a.lt_u(c, i, Src::I(n1));
+    a.bz(c, "r_done");
+    a.label("r_spin");
+    if remote {
+        a.remote_atomic(old, AtomicOp::Cas, lock, Src::I(1), Src::I(0), MemOrder::Acquire);
+    } else {
+        a.atomic(old, AtomicOp::Cas, lock, Src::I(1), Src::I(0), MemOrder::Acquire, Scope::Cmp);
+    }
+    a.bnz(old, "r_spin");
+    a.ld(tmp, data, 0, 4);
+    a.add(tmp, tmp, Src::I(1));
+    a.st(data, 0, tmp, 4);
+    if remote {
+        a.remote_atomic(old, AtomicOp::Store, lock, Src::I(0), Src::I(0), MemOrder::Release);
+    } else {
+        a.atomic(old, AtomicOp::Store, lock, Src::I(0), Src::I(0), MemOrder::Release, Scope::Cmp);
+    }
+    a.add(i, i, Src::I(1));
+    a.br("r_loop");
+    a.label("r_done");
+    a.halt();
+    a.finish()
+}
+
+#[test]
+fn remote_lock_handoff_exact_rsp_and_srsp() {
+    for p in [Protocol::RspNaive, Protocol::Srsp] {
+        for (n0, n1) in [(1u64, 1u64), (3, 1), (17, 5), (50, 13)] {
+            let mut dev = Device::new(DeviceConfig::small(), p);
+            dev.launch_simple(&handoff_kernel(n0, n1, true), 2);
+            assert_eq!(
+                dev.mem.backing.read_u32(DATA) as u64,
+                n0 + n1,
+                "{p:?} ({n0},{n1}): mutual exclusion must hold"
+            );
+        }
+    }
+}
+
+#[test]
+fn lock_handoff_many_remote_sharers() {
+    // One local sharer + 3 remote sharers hammering the same lock.
+    let mut a = Asm::new();
+    let wg = a.reg();
+    let lock = a.reg();
+    let data = a.reg();
+    let old = a.reg();
+    let tmp = a.reg();
+    let i = a.reg();
+    let c = a.reg();
+    a.wg_id(wg);
+    a.imm(lock, FLAG);
+    a.imm(data, DATA);
+    a.imm(i, 0);
+    a.bnz(wg, "thief");
+    a.label("o_loop");
+    a.lt_u(c, i, Src::I(30));
+    a.bz(c, "done");
+    a.label("o_spin");
+    a.atomic(old, AtomicOp::Cas, lock, Src::I(1), Src::I(0), MemOrder::Acquire, Scope::Wg);
+    a.bnz(old, "o_spin");
+    a.ld(tmp, data, 0, 4);
+    a.add(tmp, tmp, Src::I(1));
+    a.st(data, 0, tmp, 4);
+    a.atomic(old, AtomicOp::Store, lock, Src::I(0), Src::I(0), MemOrder::Release, Scope::Wg);
+    a.add(i, i, Src::I(1));
+    a.br("o_loop");
+    a.label("thief");
+    a.label("t_loop");
+    a.lt_u(c, i, Src::I(5));
+    a.bz(c, "done");
+    a.label("t_spin");
+    a.remote_atomic(old, AtomicOp::Cas, lock, Src::I(1), Src::I(0), MemOrder::Acquire);
+    a.bnz(old, "t_spin");
+    a.ld(tmp, data, 0, 4);
+    a.add(tmp, tmp, Src::I(1));
+    a.st(data, 0, tmp, 4);
+    a.remote_atomic(old, AtomicOp::Store, lock, Src::I(0), Src::I(0), MemOrder::Release);
+    a.add(i, i, Src::I(1));
+    a.br("t_loop");
+    a.label("done");
+    a.halt();
+    let p = a.finish();
+
+    for proto in [Protocol::RspNaive, Protocol::Srsp] {
+        let mut dev = Device::new(DeviceConfig::small(), proto);
+        dev.launch_simple(&p, 4);
+        assert_eq!(
+            dev.mem.backing.read_u32(DATA),
+            30 + 3 * 5,
+            "{proto:?}: counter must be exact with multiple remote sharers"
+        );
+    }
+}
+
+/// rem_ar as a full fence: a remote fetch-add both observes the local
+/// sharer's preceding writes and publishes its own.
+#[test]
+fn rem_ar_fetch_add_counter_exact() {
+    let mut a = Asm::new();
+    let wg = a.reg();
+    let ctr = a.reg();
+    let old = a.reg();
+    let i = a.reg();
+    let c = a.reg();
+    a.wg_id(wg);
+    a.imm(ctr, FLAG);
+    a.imm(i, 0);
+    a.bnz(wg, "rem");
+    a.label("loc_loop");
+    a.atomic(old, AtomicOp::Add, ctr, Src::I(1), Src::I(0), MemOrder::AcqRel, Scope::Wg);
+    a.add(i, i, Src::I(1));
+    a.lt_u(c, i, Src::I(40));
+    a.bnz(c, "loc_loop");
+    a.halt();
+    a.label("rem");
+    a.label("rem_loop");
+    a.remote_atomic(old, AtomicOp::Add, ctr, Src::I(1), Src::I(0), MemOrder::AcqRel);
+    a.add(i, i, Src::I(1));
+    a.lt_u(c, i, Src::I(6));
+    a.bnz(c, "rem_loop");
+    a.halt();
+    let p = a.finish();
+
+    for proto in [Protocol::RspNaive, Protocol::Srsp] {
+        let mut dev = Device::new(DeviceConfig::small(), proto);
+        dev.launch_simple(&p, 3);
+        assert_eq!(
+            dev.mem.backing.read_u32(FLAG),
+            40 + 2 * 6,
+            "{proto:?}: mixed-scope fetch-adds must not lose increments"
+        );
+    }
+}

@@ -1,0 +1,87 @@
+//! Paper-scale shape test: the qualitative claims of §5.2 must hold on
+//! the Table-1 device (64 CUs, paper-class inputs):
+//!
+//! * Fig. 4 — Scope-only and sRSP are the winners; sRSP clearly beats the
+//!   Baseline; naive RSP loses (most of) its gains; Steal-only is no
+//!   better than Baseline for PRK/SSSP.
+//! * Fig. 5 — Scope-only reduces L2 traffic below Baseline; sRSP's L2
+//!   traffic is below naive RSP's.
+//! * Fig. 6 — sRSP's synchronization overhead is below naive RSP's.
+//! * Scalability — naive RSP degrades as CU count grows; sRSP does not.
+//!
+//! This is the slowest test in the suite (a full 15-run matrix); it runs
+//! the Paper-size inputs so the effects the paper reports actually have
+//! room to appear.
+
+use srsp::config::{DeviceConfig, Scenario};
+use srsp::harness::figures::{fig4_speedup, fig5_l2, fig6_overhead, run_matrix};
+use srsp::harness::presets::WorkloadSize;
+
+#[test]
+fn paper_shape_64_cus() {
+    let cfg = DeviceConfig::default();
+    let results = run_matrix(&cfg, WorkloadSize::Paper);
+
+    let f4 = fig4_speedup(&results);
+    let f5 = fig5_l2(&results);
+    let f6 = fig6_overhead(&results);
+    eprintln!("{}", f4.render());
+    eprintln!("{}", f5.render());
+    eprintln!("{}", f6.render());
+
+    use Scenario::*;
+    // Fig. 4 claims.
+    assert!(f4.geomean(Srsp) > 1.15, "sRSP must clearly beat Baseline");
+    assert!(
+        f4.geomean(Srsp) > f4.geomean(Rsp) + 0.1,
+        "sRSP must clearly beat naive RSP (got {:.3} vs {:.3})",
+        f4.geomean(Srsp),
+        f4.geomean(Rsp)
+    );
+    assert!(f4.geomean(ScopeOnly) > 1.2, "local scope is a big win");
+    assert!(
+        f4.geomean(StealOnly) < 1.1,
+        "global-scope stealing alone must not pay (paper: PRK/SSSP)"
+    );
+    for app in ["PRK", "SSSP", "MIS"] {
+        assert!(
+            f4.value(app, Srsp).unwrap() > f4.value(app, Rsp).unwrap() * 0.97,
+            "{app}: sRSP must not lose to naive RSP"
+        );
+    }
+
+    // Fig. 5 claims.
+    assert!(f5.geomean(ScopeOnly) < 0.9);
+    assert!(f5.geomean(Srsp) < f5.geomean(Rsp));
+
+    // Fig. 6 claim.
+    assert!(
+        f6.geomean(Srsp) < 0.95,
+        "selective promotion must be cheaper than naive (got {:.3})",
+        f6.geomean(Srsp)
+    );
+}
+
+#[test]
+fn rsp_degrades_with_scale_srsp_does_not() {
+    // Small sweep (8 vs 64 CUs) of the steal-heavy scenarios.
+    let speedups = |cus: u32| {
+        let cfg = DeviceConfig {
+            num_cus: cus,
+            ..DeviceConfig::default()
+        };
+        let results = run_matrix(&cfg, WorkloadSize::Paper);
+        let f4 = fig4_speedup(&results);
+        (f4.geomean(Scenario::Rsp), f4.geomean(Scenario::Srsp))
+    };
+    let (rsp_small, _srsp_small) = speedups(8);
+    let (rsp_big, srsp_big) = speedups(64);
+    assert!(
+        rsp_big < rsp_small - 0.1,
+        "naive RSP must degrade with CU count ({rsp_small:.3} -> {rsp_big:.3})"
+    );
+    assert!(
+        srsp_big > rsp_big + 0.2,
+        "sRSP must stay ahead at scale ({srsp_big:.3} vs {rsp_big:.3})"
+    );
+}
