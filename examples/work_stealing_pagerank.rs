@@ -99,7 +99,9 @@ fn main() {
     let mass: f32 = ranks_pjrt.iter().sum();
     assert!((mass - 1.0).abs() < 0.02, "rank mass {mass}");
 
-    println!("validation: PJRT≡native (max dev {max_dev:.2e}), oracle L1 {l1:.2e}, mass {mass:.4}\n");
+    println!(
+        "validation: PJRT≡native (max dev {max_dev:.2e}), oracle L1 {l1:.2e}, mass {mass:.4}\n"
+    );
 
     let s = &run_pjrt.stats;
     let rows = vec![

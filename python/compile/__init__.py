@@ -1,0 +1,3 @@
+"""Build-time compilation layer: JAX/Pallas kernels, the model registry
+and the AOT lowering driver that writes `artifacts/*.hlo.txt` for the
+Rust runtime. Nothing here runs at simulation time."""

@@ -4,11 +4,13 @@
 //! gains; Scope-only and sRSP are the winners).
 
 mod bench_common;
-use srsp::harness::figures::{fig4_speedup, run_matrix};
+use srsp::harness::figures::{fig4_speedup, run_matrix_jobs};
 
 fn main() {
     let (cfg, size) = bench_common::parse_args();
-    let results = bench_common::timed("fig4 matrix", || run_matrix(&cfg, size));
+    // jobs=1: the reported wall time measures simulator cost, not host
+    // parallelism (use the CLI's --jobs for parallel regeneration).
+    let results = bench_common::timed("fig4 matrix", || run_matrix_jobs(&cfg, size, 1));
     let table = fig4_speedup(&results);
     println!("{}", table.render());
     // Shape assertions (the paper's qualitative claims).

@@ -2,11 +2,12 @@
 //! relative to Baseline (paper: Scope lowest; sRSP well below RSP).
 
 mod bench_common;
-use srsp::harness::figures::{fig5_l2, run_matrix};
+use srsp::harness::figures::{fig5_l2, run_matrix_jobs};
 
 fn main() {
     let (cfg, size) = bench_common::parse_args();
-    let results = bench_common::timed("fig5 matrix", || run_matrix(&cfg, size));
+    // jobs=1: wall time measures simulator cost, not host parallelism.
+    let results = bench_common::timed("fig5 matrix", || run_matrix_jobs(&cfg, size, 1));
     let table = fig5_l2(&results);
     println!("{}", table.render());
     use srsp::config::Scenario::*;

@@ -2,11 +2,12 @@
 //! and sRSP relative to RSP (RSP = 1.0; paper: sRSP much lower).
 
 mod bench_common;
-use srsp::harness::figures::{fig6_overhead, run_matrix};
+use srsp::harness::figures::{fig6_overhead, run_matrix_jobs};
 
 fn main() {
     let (cfg, size) = bench_common::parse_args();
-    let results = bench_common::timed("fig6 matrix", || run_matrix(&cfg, size));
+    // jobs=1: wall time measures simulator cost, not host parallelism.
+    let results = bench_common::timed("fig6 matrix", || run_matrix_jobs(&cfg, size, 1));
     let table = fig6_overhead(&results);
     println!("{}", table.render());
     use srsp::config::Scenario::*;

@@ -3,13 +3,14 @@
 //! at scale; sRSP holds steady (that is the paper's thesis).
 
 mod bench_common;
-use srsp::harness::figures::scaling_sweep;
+use srsp::harness::figures::scaling_sweep_jobs;
 use srsp::harness::report::format_table;
 
 fn main() {
     let (_, size) = bench_common::parse_args();
     let cus = [4u32, 8, 16, 32, 64];
-    let rows = bench_common::timed("scaling sweep", || scaling_sweep(&cus, size));
+    // jobs=1: wall time measures simulator cost, not host parallelism.
+    let rows = bench_common::timed("scaling sweep", || scaling_sweep_jobs(&cus, size, 1));
     let header = vec!["CUs".into(), "RSP".into(), "sRSP".into()];
     let body: Vec<Vec<String>> = rows
         .iter()

@@ -1,1 +1,13 @@
-// paper's L3 coordination contribution
+//! Layer-3 coordination facade.
+//!
+//! The paper's evaluation is a protocol × app × CU-count grid; the
+//! machinery that shards that grid over OS threads lives in
+//! [`crate::harness::runner`] and is re-exported here under the
+//! coordination name the CLI and future distributed backends build on.
+//! Every grid cell is an isolated single-threaded simulation, so the
+//! coordinator's only job is deterministic work distribution: stable
+//! cell order, per-cell seed derivation and grid-order result assembly.
+
+pub use crate::harness::runner::{
+    full_grid, into_run_results, run_validated, Cell, CellResult, Runner, Seeding,
+};

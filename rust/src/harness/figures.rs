@@ -11,6 +11,7 @@
 
 use super::presets::{WorkloadPreset, WorkloadSize};
 use super::report::{format_table, geomean};
+use super::runner::{full_grid, into_run_results, Cell, CellResult, Runner};
 use crate::config::{DeviceConfig, Scenario};
 use crate::sim::Stats;
 use crate::workload::driver::{run_scenario_seeded, App, RunResult};
@@ -81,16 +82,18 @@ impl FigureTable {
     }
 }
 
-/// Run every (app, scenario) pair once; returns raw stats.
+/// Run every (app, scenario) pair once; returns raw stats. Cells are
+/// sharded over all available cores through the scenario-matrix
+/// [`Runner`]; use [`run_matrix_jobs`] for explicit worker control.
 pub fn run_matrix(cfg: &DeviceConfig, size: WorkloadSize) -> Vec<RunResult> {
-    let mut out = Vec::new();
-    for app in App::ALL {
-        let preset = WorkloadPreset::new(app, size);
-        for scenario in Scenario::ALL {
-            out.push(run_one(cfg, &preset, scenario));
-        }
-    }
-    out
+    run_matrix_jobs(cfg, size, Runner::default_jobs())
+}
+
+/// [`run_matrix`] with an explicit worker-thread count. Results are
+/// identical for every `jobs` value (grid order, classic seeding).
+pub fn run_matrix_jobs(cfg: &DeviceConfig, size: WorkloadSize, jobs: usize) -> Vec<RunResult> {
+    let runner = Runner::new(cfg.clone(), size, jobs);
+    into_run_results(runner.run_cells(&full_grid(cfg.num_cus)))
 }
 
 /// Run one (preset, scenario) pair.
@@ -193,17 +196,38 @@ pub fn fig6_overhead(results: &[RunResult]) -> FigureTable {
 /// same CU count) as the device grows. Returns rows of
 /// `(num_cus, rsp_speedup, srsp_speedup)`.
 pub fn scaling_sweep(cus: &[u32], size: WorkloadSize) -> Vec<(u32, f64, f64)> {
-    let mut rows = Vec::new();
-    for &n in cus {
-        let cfg = DeviceConfig {
-            num_cus: n,
-            ..DeviceConfig::default()
-        };
-        let results = run_matrix(&cfg, size);
-        let f4 = fig4_speedup(&results);
-        rows.push((n, f4.geomean(Scenario::Rsp), f4.geomean(Scenario::Srsp)));
-    }
-    rows
+    scaling_sweep_jobs(cus, size, Runner::default_jobs())
+}
+
+/// [`scaling_sweep`] with an explicit worker count. The whole CU-count ×
+/// app × scenario grid is flattened into one cell list, so every
+/// simulation — across *all* device sizes — can run concurrently.
+pub fn scaling_sweep_jobs(cus: &[u32], size: WorkloadSize, jobs: usize) -> Vec<(u32, f64, f64)> {
+    let cells = scaling_cells(cus);
+    let runner = Runner::new(DeviceConfig::default(), size, jobs);
+    scaling_rows(cus, &runner.run_cells(&cells))
+}
+
+/// The flattened cell list for a CU-count sweep.
+pub fn scaling_cells(cus: &[u32]) -> Vec<Cell> {
+    cus.iter().flat_map(|&n| full_grid(n)).collect()
+}
+
+/// Reduce executed sweep cells back to `(num_cus, rsp, srsp)` geomean
+/// rows, one per requested CU count.
+pub fn scaling_rows(cus: &[u32], results: &[CellResult]) -> Vec<(u32, f64, f64)> {
+    cus.iter()
+        .map(|&n| {
+            let group: Vec<CellResult> = results
+                .iter()
+                .filter(|c| c.cell.num_cus == n)
+                .cloned()
+                .collect();
+            let group = into_run_results(group);
+            let f4 = fig4_speedup(&group);
+            (n, f4.geomean(Scenario::Rsp), f4.geomean(Scenario::Srsp))
+        })
+        .collect()
 }
 
 #[cfg(test)]

@@ -1,10 +1,14 @@
-//! The evaluation harness: workload presets matched to §5.1 and the
-//! regeneration of Table 1 and Figures 4-6.
+//! The evaluation harness: workload presets matched to §5.1, the
+//! regeneration of Table 1 and Figures 4-6, the parallel scenario-matrix
+//! [`runner`] that shards grid cells over OS threads, and the
+//! machine-readable JSON/CSV [`report`] emission.
 
 pub mod figures;
 pub mod presets;
 pub mod report;
+pub mod runner;
 
 pub use figures::{fig4_speedup, fig5_l2, fig6_overhead, scaling_sweep, FigureCell, FigureTable};
-pub use presets::{WorkloadPreset, WorkloadSize};
-pub use report::{format_table, geomean};
+pub use presets::{WorkloadPreset, WorkloadSize, DEFAULT_SEED};
+pub use report::{format_table, geomean, Report, ReportFormat, ReportRow};
+pub use runner::{full_grid, into_run_results, run_validated, Cell, CellResult, Runner, Seeding};

@@ -22,6 +22,11 @@ pub enum WorkloadSize {
     Paper,
 }
 
+/// The classic workload-generation seed used by every paper-figure
+/// preset. Runs that do not ask for explicit seeding reproduce the
+/// figures byte-for-byte with this value.
+pub const DEFAULT_SEED: u64 = 0xC0FFEE;
+
 /// A fully-specified workload instance.
 pub struct WorkloadPreset {
     pub app: App,
@@ -31,13 +36,21 @@ pub struct WorkloadPreset {
     /// PageRank iterations (ignored by SSSP/MIS, which run to
     /// convergence).
     pub iters: u32,
+    /// Seed the input graph was generated from (recorded in reports).
+    pub seed: u64,
 }
 
 impl WorkloadPreset {
     /// Build the preset for `app` at `size` (§5.1 input classes:
-    /// PRK ← small-world, SSSP ← road grid, MIS ← power-law).
+    /// PRK ← small-world, SSSP ← road grid, MIS ← power-law) with the
+    /// classic figure seed.
     pub fn new(app: App, size: WorkloadSize) -> Self {
-        let seed = 0xC0FFEE;
+        Self::new_seeded(app, size, DEFAULT_SEED)
+    }
+
+    /// Build the preset for `app` at `size` with an explicit generator
+    /// seed (the scenario-matrix runner derives one per grid cell).
+    pub fn new_seeded(app: App, size: WorkloadSize, seed: u64) -> Self {
         match (app, size) {
             (App::PageRank, WorkloadSize::Paper) => WorkloadPreset {
                 app,
@@ -45,6 +58,7 @@ impl WorkloadPreset {
                 chunk: 8,
                 max_rounds: 16,
                 iters: 6,
+                seed,
             },
             (App::PageRank, WorkloadSize::Tiny) => WorkloadPreset {
                 app,
@@ -52,6 +66,7 @@ impl WorkloadPreset {
                 chunk: 8,
                 max_rounds: 8,
                 iters: 3,
+                seed,
             },
             (App::Sssp, WorkloadSize::Paper) => WorkloadPreset {
                 app,
@@ -59,6 +74,7 @@ impl WorkloadPreset {
                 chunk: 8,
                 max_rounds: 400,
                 iters: 0,
+                seed,
             },
             (App::Sssp, WorkloadSize::Tiny) => WorkloadPreset {
                 app,
@@ -66,6 +82,7 @@ impl WorkloadPreset {
                 chunk: 8,
                 max_rounds: 200,
                 iters: 0,
+                seed,
             },
             (App::Mis, WorkloadSize::Paper) => WorkloadPreset {
                 app,
@@ -73,6 +90,7 @@ impl WorkloadPreset {
                 chunk: 8,
                 max_rounds: 64,
                 iters: 0,
+                seed,
             },
             (App::Mis, WorkloadSize::Tiny) => WorkloadPreset {
                 app,
@@ -80,6 +98,7 @@ impl WorkloadPreset {
                 chunk: 8,
                 max_rounds: 32,
                 iters: 0,
+                seed,
             },
         }
     }
@@ -124,6 +143,21 @@ mod tests {
                 assert_eq!(wl.name(), app.name());
                 assert!(!wl.kinds().is_empty());
             }
+        }
+    }
+
+    #[test]
+    fn seeded_presets_deterministic_and_seed_sensitive() {
+        for app in App::ALL {
+            let a = WorkloadPreset::new_seeded(app, WorkloadSize::Tiny, 1);
+            let b = WorkloadPreset::new_seeded(app, WorkloadSize::Tiny, 1);
+            let c = WorkloadPreset::new_seeded(app, WorkloadSize::Tiny, 2);
+            a.graph.validate().unwrap();
+            c.graph.validate().unwrap();
+            assert_eq!(a.graph.col, b.graph.col, "same seed, same graph");
+            assert_ne!(a.graph.col, c.graph.col, "different seed, different graph");
+            let classic = WorkloadPreset::new(app, WorkloadSize::Tiny);
+            assert_eq!(classic.seed, DEFAULT_SEED);
         }
     }
 

@@ -1,4 +1,9 @@
-//! Reporting helpers: geomean, table formatting.
+//! Reporting helpers: geomean, table formatting and the machine-readable
+//! JSON/CSV matrix reports emitted by the scenario-matrix runner
+//! (`--report json|csv` on the CLI). Serialization is hand-rolled — no
+//! serde offline — over a fixed flat schema, [`Report::CSV_COLUMNS`].
+
+use std::fmt::Write as _;
 
 /// Geometric mean of positive values (the paper's summary statistic).
 pub fn geomean(xs: &[f64]) -> f64 {
@@ -44,9 +49,229 @@ pub fn format_table(header: &[String], rows: &[Vec<String>]) -> String {
     out
 }
 
+/// Machine-readable output formats for matrix reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReportFormat {
+    Json,
+    Csv,
+}
+
+impl ReportFormat {
+    pub fn from_name(s: &str) -> Option<ReportFormat> {
+        match s {
+            "json" => Some(ReportFormat::Json),
+            "csv" => Some(ReportFormat::Csv),
+            _ => None,
+        }
+    }
+}
+
+/// One row of a scenario-matrix report: one executed grid cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReportRow {
+    pub app: String,
+    pub scenario: String,
+    pub cus: u32,
+    /// Workload-generation seed the cell's input graph came from.
+    pub seed: u64,
+    pub rounds: u32,
+    pub converged: bool,
+    /// `Some(ok)` when the run was checked against the native oracle;
+    /// `None` when validation was not requested.
+    pub validated: Option<bool>,
+    pub cycles: u64,
+    pub instructions: u64,
+    pub l1_hit_rate: f64,
+    pub l2_accesses: u64,
+    pub sync_overhead_cycles: u64,
+    pub tasks_executed: u64,
+    pub tasks_stolen: u64,
+}
+
+/// A full matrix report; rows are in grid order (stable across `--jobs`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Report {
+    pub rows: Vec<ReportRow>,
+}
+
+impl Report {
+    /// The flat report schema, in serialization order (shared by the CSV
+    /// header and the JSON object keys).
+    pub const CSV_COLUMNS: [&'static str; 14] = [
+        "app",
+        "scenario",
+        "cus",
+        "seed",
+        "rounds",
+        "converged",
+        "validated",
+        "cycles",
+        "instructions",
+        "l1_hit_rate",
+        "l2_accesses",
+        "sync_overhead_cycles",
+        "tasks_executed",
+        "tasks_stolen",
+    ];
+
+    /// Render as CSV: a header line plus one line per row. Cell values
+    /// are numbers, booleans and bare scenario/app names — no quoting or
+    /// escaping is ever needed.
+    pub fn to_csv(&self) -> String {
+        let mut out = Self::CSV_COLUMNS.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            let validated = match r.validated {
+                Some(true) => "true",
+                Some(false) => "false",
+                None => "",
+            };
+            writeln!(
+                out,
+                "{},{},{},{},{},{},{},{},{},{:.6},{},{},{},{}",
+                r.app,
+                r.scenario,
+                r.cus,
+                r.seed,
+                r.rounds,
+                r.converged,
+                validated,
+                r.cycles,
+                r.instructions,
+                r.l1_hit_rate,
+                r.l2_accesses,
+                r.sync_overhead_cycles,
+                r.tasks_executed,
+                r.tasks_stolen,
+            )
+            .expect("writing to a String cannot fail");
+        }
+        out
+    }
+
+    /// Render as a JSON array of flat objects (keys = [`Self::CSV_COLUMNS`]).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("[\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            let validated = match r.validated {
+                Some(true) => "true",
+                Some(false) => "false",
+                None => "null",
+            };
+            write!(
+                out,
+                "  {{\"app\":\"{}\",\"scenario\":\"{}\",\"cus\":{},\"seed\":{},\
+                 \"rounds\":{},\"converged\":{},\"validated\":{},\"cycles\":{},\
+                 \"instructions\":{},\"l1_hit_rate\":{:.6},\"l2_accesses\":{},\
+                 \"sync_overhead_cycles\":{},\"tasks_executed\":{},\"tasks_stolen\":{}}}",
+                r.app,
+                r.scenario,
+                r.cus,
+                r.seed,
+                r.rounds,
+                r.converged,
+                validated,
+                r.cycles,
+                r.instructions,
+                r.l1_hit_rate,
+                r.l2_accesses,
+                r.sync_overhead_cycles,
+                r.tasks_executed,
+                r.tasks_stolen,
+            )
+            .expect("writing to a String cannot fail");
+            out.push_str(if i + 1 < self.rows.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("]\n");
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn sample_report() -> Report {
+        let row = |app: &str, scenario: &str, validated| ReportRow {
+            app: app.to_string(),
+            scenario: scenario.to_string(),
+            cus: 8,
+            seed: 0xC0FFEE,
+            rounds: 5,
+            converged: true,
+            validated,
+            cycles: 123_456,
+            instructions: 9_999,
+            l1_hit_rate: 0.875,
+            l2_accesses: 4_321,
+            sync_overhead_cycles: 777,
+            tasks_executed: 64,
+            tasks_stolen: 7,
+        };
+        Report {
+            rows: vec![
+                row("PRK", "baseline", None),
+                row("SSSP", "srsp", Some(true)),
+                row("MIS", "rsp", Some(false)),
+            ],
+        }
+    }
+
+    #[test]
+    fn csv_schema_is_rectangular() {
+        let csv = sample_report().to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 4, "header + 3 rows");
+        assert_eq!(lines[0], Report::CSV_COLUMNS.join(","));
+        for line in &lines {
+            assert_eq!(
+                line.split(',').count(),
+                Report::CSV_COLUMNS.len(),
+                "ragged CSV line: {line}"
+            );
+        }
+        assert!(lines[1].ends_with(",64,7"));
+        assert!(lines[1].contains(",,"), "unvalidated row has empty cell");
+        assert!(lines[2].contains(",true,"));
+        assert!(lines[3].contains(",false,"));
+    }
+
+    #[test]
+    fn json_rows_carry_every_column() {
+        let json = sample_report().to_json();
+        assert!(json.starts_with("[\n"));
+        assert!(json.ends_with("]\n"));
+        assert_eq!(json.matches("{\"app\":").count(), 3);
+        for key in Report::CSV_COLUMNS {
+            assert_eq!(
+                json.matches(&format!("\"{key}\":")).count(),
+                3,
+                "key {key} missing from some row"
+            );
+        }
+        // Balanced braces and a null for the unvalidated cell.
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert!(json.contains("\"validated\":null"));
+        assert!(json.contains("\"l1_hit_rate\":0.875000"));
+    }
+
+    #[test]
+    fn empty_report_serializes() {
+        let r = Report::default();
+        assert_eq!(r.to_csv().lines().count(), 1, "header only");
+        assert_eq!(r.to_json(), "[\n]\n");
+    }
+
+    #[test]
+    fn geomean_of_report_ratios() {
+        // The figure pipeline feeds report-derived ratios through
+        // `geomean`; spot-check the composition on a tiny example.
+        let rep = sample_report();
+        let cycles: Vec<f64> = rep.rows.iter().map(|r| r.cycles as f64).collect();
+        let base = cycles[0];
+        let ratios: Vec<f64> = cycles.iter().map(|c| base / c).collect();
+        assert!((geomean(&ratios) - 1.0).abs() < 1e-12, "identical cycles");
+    }
 
     #[test]
     fn geomean_basics() {

@@ -1,0 +1,446 @@
+//! The parallel scenario-matrix runner: shards the protocol × app ×
+//! CU-count grid across OS threads.
+//!
+//! Every grid [`Cell`] is an independent, single-threaded simulation —
+//! its own [`Device`](crate::gpu::Device), memory image and workload
+//! instance are all constructed inside the worker thread that executes
+//! it — so cells parallelize with no shared mutable state. Workers pull
+//! cell indices from an atomic counter (dynamic load balancing: the
+//! 64-CU sRSP cells cost far more than the 4-CU baseline cells) and send
+//! results back over a channel; results are reassembled in grid order,
+//! so the output is byte-for-byte identical for any `--jobs` value.
+//!
+//! Seeding is deterministic either way: [`Seeding::Shared`] reproduces
+//! the classic figure presets, [`Seeding::PerCell`] derives an
+//! independent [`SplitMix64`] stream per (app, CU-count) pair. The seed
+//! deliberately ignores the scenario: all scenarios of one app at one CU
+//! count must share an input graph or vs-Baseline ratios would compare
+//! different problems.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::thread;
+
+use super::presets::{WorkloadPreset, WorkloadSize, DEFAULT_SEED};
+use super::report::{Report, ReportRow};
+use crate::config::{DeviceConfig, Scenario};
+use crate::mem::{BackingStore, MemAlloc};
+use crate::sim::SplitMix64;
+use crate::workload::driver::{run_scenario_seeded, App, RunResult};
+use crate::workload::engine::NativeMath;
+use crate::workload::mis::Mis;
+use crate::workload::pagerank::PageRank;
+use crate::workload::sssp::Sssp;
+
+/// One cell of the protocol × app × CU-count grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cell {
+    pub app: App,
+    pub scenario: Scenario,
+    pub num_cus: u32,
+}
+
+/// How workload-generation seeds are assigned to grid cells.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Seeding {
+    /// Every cell uses the same seed — the classic figure presets
+    /// (`DEFAULT_SEED` reproduces the paper figures byte-for-byte).
+    Shared(u64),
+    /// Each (app, CU-count) pair derives its own seed from a base value
+    /// via [`SplitMix64`]; scenarios still share the graph (see module
+    /// docs).
+    PerCell(u64),
+}
+
+impl Default for Seeding {
+    fn default() -> Self {
+        Seeding::Shared(DEFAULT_SEED)
+    }
+}
+
+impl Seeding {
+    /// The workload seed for `cell`.
+    pub fn seed_for(self, cell: &Cell) -> u64 {
+        match self {
+            Seeding::Shared(seed) => seed,
+            Seeding::PerCell(base) => {
+                let tag = ((app_ord(cell.app) + 1) << 32) | u64::from(cell.num_cus);
+                SplitMix64::new(base ^ tag).next_u64()
+            }
+        }
+    }
+}
+
+/// Stable per-app ordinal used for seed derivation (do not reorder:
+/// recorded seeds in saved reports depend on it).
+fn app_ord(app: App) -> u64 {
+    match app {
+        App::PageRank => 0,
+        App::Sssp => 1,
+        App::Mis => 2,
+    }
+}
+
+/// Outcome of one executed cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub cell: Cell,
+    /// The workload seed the cell actually ran with.
+    pub seed: u64,
+    pub result: RunResult,
+    /// `Some(ok)` when oracle validation was requested.
+    pub validated: Option<bool>,
+}
+
+/// The full §5.1 evaluation grid (every app × every scenario) at one CU
+/// count, in stable (app-major) order.
+pub fn full_grid(num_cus: u32) -> Vec<Cell> {
+    let mut cells = Vec::with_capacity(App::ALL.len() * Scenario::ALL.len());
+    for app in App::ALL {
+        for scenario in Scenario::ALL {
+            cells.push(Cell {
+                app,
+                scenario,
+                num_cus,
+            });
+        }
+    }
+    cells
+}
+
+/// Strip cell metadata for the figure pipelines, which require every run
+/// to have converged (`max_rounds` bounds are sized so the classic seeds
+/// always do).
+pub fn into_run_results(results: Vec<CellResult>) -> Vec<RunResult> {
+    results
+        .into_iter()
+        .map(|c| {
+            assert!(
+                c.result.converged,
+                "{}/{} on {} CUs did not converge (seed {:#x})",
+                c.result.app, c.result.scenario, c.cell.num_cus, c.seed
+            );
+            c.result
+        })
+        .collect()
+}
+
+/// Run one (preset, scenario) pair and check the final memory against
+/// the app's native oracle: exactness for SSSP/MIS, L1-norm tolerance
+/// for PageRank (floating-point accumulation order differs between the
+/// tiled device math and the oracle).
+pub fn run_validated(
+    cfg: &DeviceConfig,
+    preset: &WorkloadPreset,
+    scenario: Scenario,
+) -> (RunResult, bool) {
+    let mut alloc = MemAlloc::new();
+    let mut image = BackingStore::new();
+    match preset.app {
+        App::PageRank => {
+            let mut wl = PageRank::setup(
+                &preset.graph,
+                &mut alloc,
+                &mut image,
+                preset.chunk,
+                preset.iters,
+            );
+            let oracle = PageRank::oracle(&preset.graph, preset.iters);
+            let (run, mem) = run_scenario_seeded(
+                cfg,
+                scenario,
+                &mut wl,
+                NativeMath,
+                preset.max_rounds,
+                image,
+            );
+            let got = wl.result(&mem);
+            let diff: f32 = got.iter().zip(&oracle).map(|(a, b)| (a - b).abs()).sum();
+            let ok = run.converged && diff < 1e-3;
+            (run, ok)
+        }
+        App::Sssp => {
+            let mut wl = Sssp::setup(&preset.graph, &mut alloc, &mut image, preset.chunk, 0);
+            let oracle = Sssp::oracle(&preset.graph, 0);
+            let (run, mem) = run_scenario_seeded(
+                cfg,
+                scenario,
+                &mut wl,
+                NativeMath,
+                preset.max_rounds,
+                image,
+            );
+            let ok = run.converged && wl.result(&mem) == oracle;
+            (run, ok)
+        }
+        App::Mis => {
+            let mut wl = Mis::setup(&preset.graph, &mut alloc, &mut image, preset.chunk);
+            let oracle = Mis::oracle(&preset.graph);
+            let (run, mem) = run_scenario_seeded(
+                cfg,
+                scenario,
+                &mut wl,
+                NativeMath,
+                preset.max_rounds,
+                image,
+            );
+            let got = wl.result(&mem);
+            let ok = run.converged
+                && Mis::validate_mis(&preset.graph, &got).is_ok()
+                && got == oracle;
+            (run, ok)
+        }
+    }
+}
+
+/// The scenario-matrix runner configuration.
+#[derive(Debug, Clone)]
+pub struct Runner {
+    /// Worker thread count (0 is treated as 1; clamped to the cell
+    /// count).
+    pub jobs: usize,
+    pub seeding: Seeding,
+    pub size: WorkloadSize,
+    /// Check every cell against its native oracle.
+    pub validate: bool,
+    /// Device template; `num_cus` is overridden per cell.
+    pub cfg: DeviceConfig,
+}
+
+impl Runner {
+    /// A runner with classic shared seeding and no validation — the
+    /// configuration the figure pipelines use.
+    pub fn new(cfg: DeviceConfig, size: WorkloadSize, jobs: usize) -> Self {
+        Runner {
+            jobs,
+            seeding: Seeding::default(),
+            size,
+            validate: false,
+            cfg,
+        }
+    }
+
+    /// Worker count the host reports as available.
+    pub fn default_jobs() -> usize {
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    /// Run one standalone cell: generates the input graph, builds the
+    /// device, simulates and (when enabled) validates, entirely within
+    /// the calling thread.
+    pub fn run_cell(&self, cell: &Cell) -> CellResult {
+        let seed = self.seeding.seed_for(cell);
+        let preset = WorkloadPreset::new_seeded(cell.app, self.size, seed);
+        self.run_cell_with(cell, &preset)
+    }
+
+    /// Run `cell` against an already-generated preset (which must match
+    /// the cell's app and the runner's seeding — `run_cells` shares one
+    /// preset across all scenarios of an (app, CU-count) pair instead of
+    /// regenerating the identical graph per scenario).
+    fn run_cell_with(&self, cell: &Cell, preset: &WorkloadPreset) -> CellResult {
+        let cfg = DeviceConfig {
+            num_cus: cell.num_cus,
+            ..self.cfg.clone()
+        };
+        let (result, validated) = if self.validate {
+            let (run, ok) = run_validated(&cfg, preset, cell.scenario);
+            (run, Some(ok))
+        } else {
+            let (mut wl, image) = preset.instantiate();
+            let (run, _mem) = run_scenario_seeded(
+                &cfg,
+                cell.scenario,
+                wl.as_mut(),
+                NativeMath,
+                preset.max_rounds,
+                image,
+            );
+            (run, None)
+        };
+        CellResult {
+            cell: *cell,
+            seed: preset.seed,
+            result,
+            validated,
+        }
+    }
+
+    /// Run `cells` across `self.jobs` OS threads. Returns results in
+    /// `cells` order regardless of scheduling, so any jobs count yields
+    /// byte-identical output.
+    pub fn run_cells(&self, cells: &[Cell]) -> Vec<CellResult> {
+        // Seeds ignore the scenario, so every distinct (app, seed) pair
+        // needs exactly one input graph: generate each once, up front,
+        // and share it read-only across the workers.
+        let mut presets: HashMap<(App, u64), WorkloadPreset> = HashMap::new();
+        for cell in cells {
+            let seed = self.seeding.seed_for(cell);
+            presets
+                .entry((cell.app, seed))
+                .or_insert_with(|| WorkloadPreset::new_seeded(cell.app, self.size, seed));
+        }
+        let presets = &presets;
+        let jobs = self.jobs.clamp(1, cells.len().max(1));
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, CellResult)>();
+        thread::scope(|scope| {
+            for _ in 0..jobs {
+                let tx = tx.clone();
+                let next = &next;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let Some(cell) = cells.get(i) else { break };
+                    let seed = self.seeding.seed_for(cell);
+                    let preset = &presets[&(cell.app, seed)];
+                    if tx.send((i, self.run_cell_with(cell, preset))).is_err() {
+                        break;
+                    }
+                });
+            }
+        });
+        drop(tx);
+        let mut slots: Vec<Option<CellResult>> = cells.iter().map(|_| None).collect();
+        for (i, r) in rx {
+            slots[i] = Some(r);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("worker exited without reporting its cell"))
+            .collect()
+    }
+}
+
+impl Report {
+    /// Assemble the machine-readable report for a set of executed cells.
+    pub fn from_cells(results: &[CellResult]) -> Report {
+        let rows = results
+            .iter()
+            .map(|c| ReportRow {
+                app: c.result.app.to_string(),
+                scenario: c.result.scenario.name().to_string(),
+                cus: c.cell.num_cus,
+                seed: c.seed,
+                rounds: c.result.rounds,
+                converged: c.result.converged,
+                validated: c.validated,
+                cycles: c.result.stats.cycles,
+                instructions: c.result.stats.instructions,
+                l1_hit_rate: c.result.stats.l1_hit_rate(),
+                l2_accesses: c.result.stats.l2_accesses,
+                sync_overhead_cycles: c.result.stats.sync_overhead_cycles,
+                tasks_executed: c.result.stats.tasks_executed,
+                tasks_stolen: c.result.stats.tasks_stolen,
+            })
+            .collect();
+        Report { rows }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_runner(jobs: usize, seeding: Seeding, validate: bool) -> Runner {
+        Runner {
+            jobs,
+            seeding,
+            size: WorkloadSize::Tiny,
+            validate,
+            cfg: DeviceConfig {
+                num_cus: 4,
+                ..DeviceConfig::small()
+            },
+        }
+    }
+
+    #[test]
+    fn grid_covers_every_pair() {
+        let g = full_grid(8);
+        assert_eq!(g.len(), App::ALL.len() * Scenario::ALL.len());
+        for app in App::ALL {
+            for scenario in Scenario::ALL {
+                assert!(g.iter().any(|c| c.app == app && c.scenario == scenario));
+            }
+        }
+        assert!(g.iter().all(|c| c.num_cus == 8));
+    }
+
+    #[test]
+    fn per_cell_seeds_share_graphs_across_scenarios() {
+        let cell = |app, scenario, num_cus| Cell {
+            app,
+            scenario,
+            num_cus,
+        };
+        let s = Seeding::PerCell(42);
+        let base = s.seed_for(&cell(App::PageRank, Scenario::Baseline, 4));
+        // Deterministic.
+        assert_eq!(base, s.seed_for(&cell(App::PageRank, Scenario::Baseline, 4)));
+        // Scenario must NOT change the seed (ratios need shared inputs).
+        assert_eq!(base, s.seed_for(&cell(App::PageRank, Scenario::Srsp, 4)));
+        // App and CU count must.
+        assert_ne!(base, s.seed_for(&cell(App::Sssp, Scenario::Baseline, 4)));
+        assert_ne!(base, s.seed_for(&cell(App::PageRank, Scenario::Baseline, 8)));
+        // A different base diverges; shared seeding ignores the cell.
+        let other_base = Seeding::PerCell(43);
+        assert_ne!(base, other_base.seed_for(&cell(App::PageRank, Scenario::Baseline, 4)));
+        let shared = Seeding::Shared(7);
+        assert_eq!(7, shared.seed_for(&cell(App::Mis, Scenario::Rsp, 64)));
+    }
+
+    #[test]
+    fn jobs_1_and_jobs_4_byte_identical() {
+        let cells = full_grid(4);
+        let serial = tiny_runner(1, Seeding::PerCell(42), false).run_cells(&cells);
+        let parallel = tiny_runner(4, Seeding::PerCell(42), false).run_cells(&cells);
+        // Full structural equality, stats included (Debug covers every
+        // counter, including the BTreeMap of named counters).
+        assert_eq!(
+            format!("{serial:?}"),
+            format!("{parallel:?}"),
+            "--jobs must never change results"
+        );
+        // And the emitted artifacts are byte-identical too.
+        let a = Report::from_cells(&serial);
+        let b = Report::from_cells(&parallel);
+        assert_eq!(a.to_csv(), b.to_csv());
+        assert_eq!(a.to_json(), b.to_json());
+    }
+
+    #[test]
+    fn validation_passes_on_tiny_cells() {
+        let cells = [
+            Cell {
+                app: App::PageRank,
+                scenario: Scenario::Baseline,
+                num_cus: 4,
+            },
+            Cell {
+                app: App::Sssp,
+                scenario: Scenario::Srsp,
+                num_cus: 4,
+            },
+            Cell {
+                app: App::Mis,
+                scenario: Scenario::Rsp,
+                num_cus: 4,
+            },
+        ];
+        let results = tiny_runner(2, Seeding::default(), true).run_cells(&cells);
+        for c in &results {
+            assert_eq!(
+                c.validated,
+                Some(true),
+                "{}/{} failed its oracle",
+                c.result.app,
+                c.result.scenario
+            );
+            assert_eq!(c.seed, DEFAULT_SEED);
+        }
+        let report = Report::from_cells(&results);
+        assert_eq!(report.rows.len(), cells.len());
+        assert!(report.to_csv().contains(",true,"));
+    }
+}

@@ -235,9 +235,9 @@ impl Asm {
                 .get(label)
                 .unwrap_or_else(|| panic!("KIR: undefined label '{label}'"));
             match &mut insts[*idx] {
-                Inst::Br { target: t } | Inst::Bnz { target: t, .. } | Inst::Bz { target: t, .. } => {
-                    *t = target
-                }
+                Inst::Br { target: t }
+                | Inst::Bnz { target: t, .. }
+                | Inst::Bz { target: t, .. } => *t = target,
                 other => panic!("fixup on non-branch {other:?}"),
             }
         }

@@ -33,6 +33,7 @@
 //! self-contained afterwards.
 
 pub mod config;
+pub mod coordinator;
 pub mod gpu;
 pub mod harness;
 pub mod kir;

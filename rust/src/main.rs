@@ -1,15 +1,22 @@
 //! `srsp` — the Layer-3 coordinator CLI.
 //!
 //! Subcommands regenerate the paper's tables/figures, run individual
-//! scenarios, sweep CU counts and validate results against native oracles.
-//! No external CLI crate is available offline; parsing is hand-rolled.
+//! scenarios, sweep CU counts and validate results against native
+//! oracles. Everything matrix-shaped (figures, sweeps, validation, the
+//! CI smoke gate) is sharded across OS threads by the scenario-matrix
+//! runner ([`srsp::harness::runner`]); `--jobs N` controls the worker
+//! count and results are byte-identical for every N. No external CLI
+//! crate is available offline; parsing is hand-rolled.
+
+use std::time::Instant;
 
 use srsp::config::{parse_config_str, DeviceConfig, Scenario};
 use srsp::harness::figures::{
-    fig4_speedup, fig5_l2, fig6_overhead, run_matrix, run_one, scaling_sweep,
+    fig4_speedup, fig5_l2, fig6_overhead, run_one, scaling_cells, scaling_rows,
 };
-use srsp::harness::presets::{WorkloadPreset, WorkloadSize};
-use srsp::harness::report::format_table;
+use srsp::harness::presets::{WorkloadPreset, WorkloadSize, DEFAULT_SEED};
+use srsp::harness::report::{format_table, Report, ReportFormat};
+use srsp::harness::runner::{full_grid, into_run_results, CellResult, Runner, Seeding};
 use srsp::workload::driver::App;
 use srsp::workload::graph::Graph;
 
@@ -26,13 +33,23 @@ COMMANDS:
     sweep                  CU-count scaling sweep (RSP vs sRSP geomean)
     run                    Run one app under one scenario, print stats
     validate               Run every app/scenario and check the oracles
+    ci-smoke               Tiny-scale app × scenario matrix, oracle-checked
+                           in parallel; exits non-zero on any mismatch
     help                   Show this message
 
 OPTIONS:
     --app <prk|sssp|mis>        App for `run` (default prk)
     --scenario <name>           baseline|scope|steal|rsp|srsp|hlrc (default srsp)
-    --cus <n>                   Override CU count
-    --size <tiny|paper>         Workload scale (default paper)
+    --cus <n>                   Override CU count (ci-smoke default: 8)
+    --size <tiny|paper>         Workload scale (default paper; ci-smoke: tiny)
+    --jobs <n>                  Worker threads for matrix commands
+                                (default: all available cores)
+    --seed <n>                  Derive a distinct workload seed per grid
+                                cell from base <n> (decimal or 0x hex);
+                                omit to use the classic shared seed that
+                                reproduces the paper figures
+    --report <json|csv>         Emit a machine-readable matrix report
+    --out <file>                Write the report to <file> (default stdout)
     --graph <file.gr|file.mtx>  Use a real DIMACS/MatrixMarket graph
     --config <file>             Device config file (key = value)
 ";
@@ -41,7 +58,11 @@ struct Opts {
     app: App,
     scenario: Scenario,
     cus: Option<u32>,
-    size: WorkloadSize,
+    size: Option<WorkloadSize>,
+    jobs: Option<usize>,
+    seed: Option<u64>,
+    report: Option<ReportFormat>,
+    out: Option<String>,
     graph: Option<String>,
     config: Option<String>,
 }
@@ -51,7 +72,11 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
         app: App::PageRank,
         scenario: Scenario::Srsp,
         cus: None,
-        size: WorkloadSize::Paper,
+        size: None,
+        jobs: None,
+        seed: None,
+        report: None,
+        out: None,
         graph: None,
         config: None,
     };
@@ -75,16 +100,26 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
             }
             "--scenario" => {
                 let v = val()?;
-                o.scenario = Scenario::from_name(&v).ok_or(format!("unknown scenario '{v}'"))?;
+                o.scenario = Scenario::from_name(&v)
+                    .ok_or_else(|| format!("unknown scenario '{v}'"))?;
             }
             "--cus" => o.cus = Some(val()?.parse().map_err(|e| format!("--cus: {e}"))?),
             "--size" => {
                 o.size = match val()?.as_str() {
-                    "tiny" => WorkloadSize::Tiny,
-                    "paper" => WorkloadSize::Paper,
+                    "tiny" => Some(WorkloadSize::Tiny),
+                    "paper" => Some(WorkloadSize::Paper),
                     other => return Err(format!("unknown size '{other}'")),
                 }
             }
+            "--jobs" => o.jobs = Some(val()?.parse().map_err(|e| format!("--jobs: {e}"))?),
+            "--seed" => o.seed = Some(parse_u64(&val()?).map_err(|e| format!("--seed: {e}"))?),
+            "--report" => {
+                let v = val()?;
+                let format =
+                    ReportFormat::from_name(&v).ok_or_else(|| format!("unknown format '{v}'"))?;
+                o.report = Some(format);
+            }
+            "--out" => o.out = Some(val()?),
             "--graph" => o.graph = Some(val()?),
             "--config" => o.config = Some(val()?),
             other => return Err(format!("unknown option '{other}'")),
@@ -92,6 +127,43 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
         i += 1;
     }
     Ok(o)
+}
+
+/// Parse a u64 in decimal or `0x` hexadecimal.
+fn parse_u64(s: &str) -> Result<u64, String> {
+    match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16).map_err(|e| e.to_string()),
+        None => s.parse().map_err(|e: std::num::ParseIntError| e.to_string()),
+    }
+}
+
+impl Opts {
+    fn jobs(&self) -> usize {
+        self.jobs.unwrap_or_else(Runner::default_jobs)
+    }
+
+    /// When `--report` goes to stdout, human-readable output moves to
+    /// stderr so the report stays machine-parseable.
+    fn stdout_is_human(&self) -> bool {
+        self.report.is_none() || self.out.is_some()
+    }
+
+    fn seeding(&self) -> Seeding {
+        match self.seed {
+            Some(base) => Seeding::PerCell(base),
+            None => Seeding::Shared(DEFAULT_SEED),
+        }
+    }
+
+    fn runner(&self, cfg: DeviceConfig, size: WorkloadSize, validate: bool) -> Runner {
+        Runner {
+            jobs: self.jobs(),
+            seeding: self.seeding(),
+            size,
+            validate,
+            cfg,
+        }
+    }
 }
 
 fn device_config(o: &Opts) -> Result<DeviceConfig, String> {
@@ -109,8 +181,9 @@ fn device_config(o: &Opts) -> Result<DeviceConfig, String> {
     Ok(cfg)
 }
 
-fn load_preset(o: &Opts) -> Result<WorkloadPreset, String> {
-    let mut preset = WorkloadPreset::new(o.app, o.size);
+fn load_preset(o: &Opts, size: WorkloadSize) -> Result<WorkloadPreset, String> {
+    // For a single run, --seed is used directly as the generator seed.
+    let mut preset = WorkloadPreset::new_seeded(o.app, size, o.seed.unwrap_or(DEFAULT_SEED));
     if let Some(path) = &o.graph {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         let g = if path.ends_with(".mtx") {
@@ -122,6 +195,55 @@ fn load_preset(o: &Opts) -> Result<WorkloadPreset, String> {
         preset = preset.with_graph(g);
     }
     Ok(preset)
+}
+
+/// Emit the machine-readable report when `--report` was given.
+fn emit_report(results: &[CellResult], o: &Opts) -> Result<(), String> {
+    let Some(format) = o.report else {
+        return Ok(());
+    };
+    let report = Report::from_cells(results);
+    let text = match format {
+        ReportFormat::Json => report.to_json(),
+        ReportFormat::Csv => report.to_csv(),
+    };
+    match &o.out {
+        Some(path) => std::fs::write(path, &text).map_err(|e| format!("{path}: {e}"))?,
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
+/// Print `text` to stdout, or to stderr when stdout is carrying the
+/// machine-readable report.
+fn human(o: &Opts, text: &str) {
+    if o.stdout_is_human() {
+        println!("{text}");
+    } else {
+        eprintln!("{text}");
+    }
+}
+
+/// Print one `app / scenario OK|FAIL` line per validated cell; returns
+/// the failure count.
+fn print_validation(results: &[CellResult], o: &Opts) -> usize {
+    let mut failures = 0;
+    for c in results {
+        let ok = c.validated == Some(true) && c.result.converged;
+        human(
+            o,
+            &format!(
+                "{:>5} / {:<9} {}",
+                c.result.app,
+                c.result.scenario.name(),
+                if ok { "OK" } else { "FAIL" }
+            ),
+        );
+        if !ok {
+            failures += 1;
+        }
+    }
+    failures
 }
 
 fn main() {
@@ -153,37 +275,50 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
         }
         "fig4" | "fig5" | "fig6" => {
             let cfg = device_config(o)?;
+            let size = o.size.unwrap_or(WorkloadSize::Paper);
             eprintln!(
-                "running {} scenarios × 3 apps at {:?} scale on {} CUs ...",
+                "running {} scenarios × {} apps at {size:?} scale on {} CUs ({} jobs) ...",
                 Scenario::ALL.len(),
-                o.size,
-                cfg.num_cus
+                App::ALL.len(),
+                cfg.num_cus,
+                o.jobs()
             );
-            let results = run_matrix(&cfg, o.size);
+            let runner = o.runner(cfg.clone(), size, false);
+            let cells = runner.run_cells(&full_grid(cfg.num_cus));
+            emit_report(&cells, o)?;
+            let results = into_run_results(cells);
             let table = match cmd {
                 "fig4" => fig4_speedup(&results),
                 "fig5" => fig5_l2(&results),
                 _ => fig6_overhead(&results),
             };
-            println!("{}", table.render());
+            human(o, &table.render());
         }
         "sweep" => {
             let cus = [4u32, 8, 16, 32, 64];
-            eprintln!("scaling sweep over {cus:?} CUs ...");
-            let rows = scaling_sweep(&cus, o.size);
+            let size = o.size.unwrap_or(WorkloadSize::Paper);
+            eprintln!("scaling sweep over {cus:?} CUs ({} jobs) ...", o.jobs());
+            let runner = o.runner(device_config(o)?, size, false);
+            let results = runner.run_cells(&scaling_cells(&cus));
+            emit_report(&results, o)?;
+            let rows = scaling_rows(&cus, &results);
             let header = vec!["CUs".to_string(), "RSP".to_string(), "sRSP".to_string()];
             let body: Vec<Vec<String>> = rows
                 .iter()
                 .map(|(n, r, s)| vec![n.to_string(), format!("{r:.3}"), format!("{s:.3}")])
                 .collect();
-            println!(
-                "Scalability — geomean speedup vs Baseline at equal CU count\n{}",
-                format_table(&header, &body)
+            human(
+                o,
+                &format!(
+                    "Scalability — geomean speedup vs Baseline at equal CU count\n{}",
+                    format_table(&header, &body)
+                ),
             );
         }
         "run" => {
             let cfg = device_config(o)?;
-            let preset = load_preset(o)?;
+            let size = o.size.unwrap_or(WorkloadSize::Paper);
+            let preset = load_preset(o, size)?;
             eprintln!(
                 "running {} under {} on {} CUs (n={}, m={}) ...",
                 o.app.name(),
@@ -201,83 +336,53 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
         }
         "validate" => {
             let cfg = device_config(o)?;
-            validate_all(&cfg, o.size)?;
+            let size = o.size.unwrap_or(WorkloadSize::Paper);
+            let runner = o.runner(cfg.clone(), size, true);
+            let results = runner.run_cells(&full_grid(cfg.num_cus));
+            emit_report(&results, o)?;
+            let failures = print_validation(&results, o);
+            if failures > 0 {
+                return Err(format!("{failures} validation failures"));
+            }
+            human(o, "all validations passed");
+        }
+        "ci-smoke" => {
+            let mut cfg = device_config(o)?;
+            if o.cus.is_none() && o.config.is_none() {
+                // Small device so the gate stays fast in CI, but still
+                // multi-CU enough for real stealing/promotion traffic.
+                // An explicit --cus or config file wins.
+                cfg.num_cus = 8;
+            }
+            let size = o.size.unwrap_or(WorkloadSize::Tiny);
+            let jobs = o.jobs();
+            let cells = full_grid(cfg.num_cus);
+            eprintln!(
+                "ci-smoke: {} cells ({} apps × {} scenarios) at {size:?} scale on {} CUs, \
+                 {jobs} job(s) ...",
+                cells.len(),
+                App::ALL.len(),
+                Scenario::ALL.len(),
+                cfg.num_cus
+            );
+            let t0 = Instant::now();
+            let runner = o.runner(cfg, size, true);
+            let results = runner.run_cells(&cells);
+            let wall = t0.elapsed();
+            emit_report(&results, o)?;
+            let failures = print_validation(&results, o);
+            eprintln!("ci-smoke wall time: {wall:.2?} with {jobs} job(s)");
+            if failures > 0 {
+                return Err(format!("ci-smoke: {failures} oracle mismatches"));
+            }
+            human(
+                o,
+                &format!("ci-smoke passed: all {} cells validated", results.len()),
+            );
         }
         other => {
             return Err(format!("unknown command '{other}' (try `srsp help`)"));
         }
     }
-    Ok(())
-}
-
-/// Run every app under every scenario and check results against the
-/// native oracles (exactness for SSSP/MIS, tolerance for PageRank).
-fn validate_all(cfg: &DeviceConfig, size: WorkloadSize) -> Result<(), String> {
-    use srsp::mem::{BackingStore, MemAlloc};
-    use srsp::workload::driver::run_scenario_seeded;
-    use srsp::workload::engine::NativeMath;
-    use srsp::workload::mis::Mis;
-    use srsp::workload::pagerank::PageRank;
-    use srsp::workload::sssp::Sssp;
-
-    let mut failures = 0;
-    for app in App::ALL {
-        let preset = WorkloadPreset::new(app, size);
-        for scenario in Scenario::ALL {
-            let mut alloc = MemAlloc::new();
-            let mut image = BackingStore::new();
-            let ok = match app {
-                App::PageRank => {
-                    let mut wl = PageRank::setup(
-                        &preset.graph,
-                        &mut alloc,
-                        &mut image,
-                        preset.chunk,
-                        preset.iters,
-                    );
-                    let oracle = PageRank::oracle(&preset.graph, preset.iters);
-                    let (run, mem) = run_scenario_seeded(
-                        cfg, scenario, &mut wl, NativeMath, preset.max_rounds, image,
-                    );
-                    let got = wl.result(&mem);
-                    let diff: f32 = got.iter().zip(&oracle).map(|(a, b)| (a - b).abs()).sum();
-                    run.converged && diff < 1e-3
-                }
-                App::Sssp => {
-                    let mut wl =
-                        Sssp::setup(&preset.graph, &mut alloc, &mut image, preset.chunk, 0);
-                    let oracle = Sssp::oracle(&preset.graph, 0);
-                    let (run, mem) = run_scenario_seeded(
-                        cfg, scenario, &mut wl, NativeMath, preset.max_rounds, image,
-                    );
-                    run.converged && wl.result(&mem) == oracle
-                }
-                App::Mis => {
-                    let mut wl = Mis::setup(&preset.graph, &mut alloc, &mut image, preset.chunk);
-                    let oracle = Mis::oracle(&preset.graph);
-                    let (run, mem) = run_scenario_seeded(
-                        cfg, scenario, &mut wl, NativeMath, preset.max_rounds, image,
-                    );
-                    let got = wl.result(&mem);
-                    run.converged
-                        && Mis::validate_mis(&preset.graph, &got).is_ok()
-                        && got == oracle
-                }
-            };
-            println!(
-                "{:>5} / {:<9} {}",
-                app.name(),
-                scenario.name(),
-                if ok { "OK" } else { "FAIL" }
-            );
-            if !ok {
-                failures += 1;
-            }
-        }
-    }
-    if failures > 0 {
-        return Err(format!("{failures} validation failures"));
-    }
-    println!("all validations passed");
     Ok(())
 }

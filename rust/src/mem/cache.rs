@@ -185,7 +185,13 @@ impl WcCache {
 
     /// Store `len <= 8` bytes at in-line offset `off`. Write-combining,
     /// no-allocate: a miss creates a partial line.
-    pub fn write_bytes(&mut self, line: LineAddr, off: usize, len: usize, value: u64) -> WriteOutcome {
+    pub fn write_bytes(
+        &mut self,
+        line: LineAddr,
+        off: usize,
+        len: usize,
+        value: u64,
+    ) -> WriteOutcome {
         let mut data = [0u8; 64];
         for k in 0..len {
             data[off + k] = (value >> (8 * k)) as u8;

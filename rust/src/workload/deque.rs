@@ -285,7 +285,11 @@ mod tests {
 
     /// Kernel: owner claims everything from its own queue, summing task
     /// ids into out[wg].
-    fn owner_drain_kernel(layout: &DequeLayout, flavor: SyncFlavor, out: Addr) -> crate::kir::Program {
+    fn owner_drain_kernel(
+        layout: &DequeLayout,
+        flavor: SyncFlavor,
+        out: Addr,
+    ) -> crate::kir::Program {
         let mut a = Asm::new();
         let qbase = a.reg();
         let task = a.reg();

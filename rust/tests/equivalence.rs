@@ -97,12 +97,13 @@ fn build(spec: &Spec, owner_local: bool) -> Program {
             let tag = format!("w{w}c{k}");
             a.imm(lock, LOCKS + cs.lock as u64 * 64);
             a.label(&format!("spin_{tag}"));
+            let (acq, acq_ord) = (AtomicOp::Cas, MemOrder::Acquire);
             if owner_local && owner {
-                a.atomic(old, AtomicOp::Cas, lock, Src::I(1), Src::I(0), MemOrder::Acquire, Scope::Wg);
+                a.atomic(old, acq, lock, Src::I(1), Src::I(0), acq_ord, Scope::Wg);
             } else if owner_local {
-                a.remote_atomic(old, AtomicOp::Cas, lock, Src::I(1), Src::I(0), MemOrder::Acquire);
+                a.remote_atomic(old, acq, lock, Src::I(1), Src::I(0), acq_ord);
             } else {
-                a.atomic(old, AtomicOp::Cas, lock, Src::I(1), Src::I(0), MemOrder::Acquire, Scope::Cmp);
+                a.atomic(old, acq, lock, Src::I(1), Src::I(0), acq_ord, Scope::Cmp);
             }
             a.bnz(old, &format!("spin_{tag}"));
             for &(c, inc) in &cs.updates {
@@ -111,12 +112,13 @@ fn build(spec: &Spec, owner_local: bool) -> Program {
                 a.add(tmp, tmp, Src::I(inc as u64));
                 a.st(cell, 0, tmp, 4);
             }
+            let (rel, rel_ord) = (AtomicOp::Store, MemOrder::Release);
             if owner_local && owner {
-                a.atomic(old, AtomicOp::Store, lock, Src::I(0), Src::I(0), MemOrder::Release, Scope::Wg);
+                a.atomic(old, rel, lock, Src::I(0), Src::I(0), rel_ord, Scope::Wg);
             } else if owner_local {
-                a.remote_atomic(old, AtomicOp::Store, lock, Src::I(0), Src::I(0), MemOrder::Release);
+                a.remote_atomic(old, rel, lock, Src::I(0), Src::I(0), rel_ord);
             } else {
-                a.atomic(old, AtomicOp::Store, lock, Src::I(0), Src::I(0), MemOrder::Release, Scope::Cmp);
+                a.atomic(old, rel, lock, Src::I(0), Src::I(0), rel_ord, Scope::Cmp);
             }
         }
         a.halt();
@@ -126,8 +128,7 @@ fn build(spec: &Spec, owner_local: bool) -> Program {
 
 /// Expected final cell values (order-independent sums).
 fn expectation(spec: &Spec) -> Vec<(u64, u32)> {
-    let mut sums =
-        vec![0u32; (spec.num_locks * spec.cells_per_lock) as usize];
+    let mut sums = vec![0u32; (spec.num_locks * spec.cells_per_lock) as usize];
     for css in &spec.programs {
         for cs in css {
             for &(c, inc) in &cs.updates {
