@@ -11,10 +11,10 @@ use srsp::config::{DeviceConfig, Scenario};
 use srsp::harness::figures::run_one;
 use srsp::harness::presets::{WorkloadPreset, WorkloadSize};
 use srsp::harness::report::format_table;
-use srsp::workload::driver::App;
+use srsp::workload::registry;
 
 fn run_with(cfg: &DeviceConfig, size: WorkloadSize) -> u64 {
-    let preset = WorkloadPreset::new(App::Sssp, size);
+    let preset = WorkloadPreset::new(registry::SSSP, size);
     run_one(cfg, &preset, Scenario::Srsp).stats.cycles
 }
 

@@ -9,20 +9,20 @@
 
 mod bench_common;
 use srsp::config::Scenario;
+use srsp::coordinator::classic_apps;
 use srsp::harness::figures::run_one;
 use srsp::harness::presets::WorkloadPreset;
 use srsp::harness::report::format_table;
-use srsp::workload::driver::App;
 
 fn main() {
     let (cfg, size) = bench_common::parse_args();
     let mut rows = Vec::new();
-    for app in App::ALL {
+    for app in classic_apps() {
         let preset = WorkloadPreset::new(app, size);
         let base = run_one(&cfg, &preset, Scenario::Baseline).stats.cycles as f64;
-        let mut row = vec![app.name().to_string()];
+        let mut row = vec![app.display().to_string()];
         for s in [Scenario::Rsp, Scenario::Srsp, Scenario::Hlrc] {
-            let r = bench_common::timed(&format!("{}/{}", app.name(), s.name()), || {
+            let r = bench_common::timed(&format!("{}/{}", app.display(), s.name()), || {
                 run_one(&cfg, &preset, s)
             });
             row.push(format!("{:.3}", base / r.stats.cycles as f64));

@@ -1,0 +1,51 @@
+//! Bench: the remote-ratio crossover curve — the asymmetry axis the
+//! paper's argument turns on, swept on the synthetic stress family.
+//!
+//! Expected shape: at `r = 0` every protocol degenerates to wg-scope
+//! fast paths and the three tie; as `r` grows, RspNaive's flush-all
+//! promotion cost scales with the device and collapses, while sRSP's
+//! LR-TBL/PA-TBL selectivity keeps the promotion cost bounded by the hot
+//! owner's sFIFO — the gap widens with `r` and with CU count.
+
+mod bench_common;
+use srsp::coordinator::{Runner, RATIO_POINTS};
+use srsp::harness::report::format_table;
+
+fn main() {
+    let (cfg, size) = bench_common::parse_args();
+    let runner = Runner {
+        validate: true,
+        ..Runner::new(cfg, size, Runner::default_jobs())
+    };
+    let results = bench_common::timed("remote-ratio sweep", || {
+        runner.run_remote_ratio_sweep(srsp::workload::registry::STRESS, &RATIO_POINTS)
+    });
+
+    let cycles = |scenario, r| {
+        results
+            .iter()
+            .find(|c| c.cell.scenario == scenario && c.remote_ratio == Some(r))
+            .map(|c| c.result.stats.cycles as f64)
+            .expect("grid covers every point")
+    };
+    use srsp::config::Scenario::{Rsp, Srsp, StealOnly};
+    let mut rows = Vec::new();
+    for &r in &RATIO_POINTS {
+        let base = cycles(StealOnly, r);
+        rows.push(vec![
+            r.to_string(),
+            format!("{}", base as u64),
+            format!("{:.3}", base / cycles(Rsp, r)),
+            format!("{:.3}", base / cycles(Srsp, r)),
+        ]);
+    }
+    assert!(
+        results.iter().all(|c| c.validated == Some(true)),
+        "every protocol must pass the stress oracle at every r"
+    );
+    let header = ["r".into(), "steal cycles".into(), "rsp ×".into(), "srsp ×".into()];
+    println!(
+        "Remote-ratio crossover — STRESS — speedup vs global-scope stealing\n{}",
+        format_table(&header, &rows)
+    );
+}

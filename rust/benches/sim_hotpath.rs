@@ -20,7 +20,7 @@ fn main() {
         (c, s)
     };
     for scenario in [Scenario::ScopeOnly, Scenario::Srsp, Scenario::Rsp] {
-        let preset = WorkloadPreset::new(srsp::workload::driver::App::PageRank, size);
+        let preset = WorkloadPreset::new(srsp::workload::registry::PRK, size);
         let t0 = Instant::now();
         let r = run_one(&cfg, &preset, scenario);
         let dt = t0.elapsed().as_secs_f64();

@@ -1,13 +1,180 @@
-//! Layer-3 coordination facade.
+//! Layer-3 coordination: the **distribution policy** of the evaluation
+//! grids.
 //!
-//! The paper's evaluation is a protocol × app × CU-count grid; the
-//! machinery that shards that grid over OS threads lives in
-//! [`crate::harness::runner`] and is re-exported here under the
-//! coordination name the CLI and future distributed backends build on.
-//! Every grid cell is an isolated single-threaded simulation, so the
-//! coordinator's only job is deterministic work distribution: stable
-//! cell order, per-cell seed derivation and grid-order result assembly.
+//! The paper's evaluation is a protocol × app × CU-count grid (plus the
+//! stress kernel's protocol × remote-ratio axis). This module owns
+//! everything about *which* cells exist and in *what order*, and how
+//! workload seeds derive per cell — the policy half of the split. The
+//! execution half (OS-thread sharding, oracle validation, result
+//! reassembly) lives in [`crate::harness::runner`] and consumes these
+//! cells; every grid cell is an isolated single-threaded simulation, so
+//! the two halves meet only at the `Cell` type.
 
-pub use crate::harness::runner::{
-    full_grid, into_run_results, run_validated, Cell, CellResult, Runner, Seeding,
-};
+use crate::config::Scenario;
+use crate::sim::SplitMix64;
+use crate::workload::registry::{self, WorkloadId, DEFAULT_SEED};
+
+// Execution-side types, re-exported under the coordination name the CLI
+// and future distributed backends build on.
+pub use crate::harness::runner::{into_run_results, run_validated, CellResult, Runner};
+
+/// One cell of the protocol × app × CU-count grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cell {
+    pub app: WorkloadId,
+    pub scenario: Scenario,
+    pub num_cus: u32,
+}
+
+/// How workload-generation seeds are assigned to grid cells.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Seeding {
+    /// Every cell uses the same seed — the classic figure presets
+    /// (`DEFAULT_SEED` reproduces the paper figures byte-for-byte).
+    Shared(u64),
+    /// Each (app, CU-count) pair derives its own seed from a base value
+    /// via [`SplitMix64`]; scenarios still share the graph (ratios need
+    /// shared inputs).
+    PerCell(u64),
+}
+
+impl Default for Seeding {
+    fn default() -> Self {
+        Seeding::Shared(DEFAULT_SEED)
+    }
+}
+
+impl Seeding {
+    /// The workload seed for `cell`. Derivation uses the workload's
+    /// stable registry ordinal and deliberately ignores the scenario:
+    /// all scenarios of one app at one CU count must share an input or
+    /// vs-Baseline ratios would compare different problems.
+    pub fn seed_for(self, cell: &Cell) -> u64 {
+        match self {
+            Seeding::Shared(seed) => seed,
+            Seeding::PerCell(base) => {
+                let tag = ((cell.app.ord() + 1) << 32) | u64::from(cell.num_cus);
+                SplitMix64::new(base ^ tag).next_u64()
+            }
+        }
+    }
+}
+
+/// The three Pannotia apps of the paper's §5.1 figures, in figure order.
+pub fn classic_apps() -> [WorkloadId; 3] {
+    [registry::PRK, registry::SSSP, registry::MIS]
+}
+
+/// The classic §5.1 figure grid (three apps × five scenarios) at one CU
+/// count, in stable app-major order.
+pub fn classic_grid(num_cus: u32) -> Vec<Cell> {
+    grid(&classic_apps(), num_cus)
+}
+
+/// Every registered workload × every scenario at one CU count, in stable
+/// registry-major order (the `validate`/`ci-smoke` coverage grid).
+pub fn full_grid(num_cus: u32) -> Vec<Cell> {
+    let apps: Vec<WorkloadId> = registry::all().collect();
+    grid(&apps, num_cus)
+}
+
+/// App-major grid over an explicit app list.
+pub fn grid(apps: &[WorkloadId], num_cus: u32) -> Vec<Cell> {
+    let mut cells = Vec::with_capacity(apps.len() * Scenario::ALL.len());
+    for &app in apps {
+        for scenario in Scenario::ALL {
+            cells.push(Cell {
+                app,
+                scenario,
+                num_cus,
+            });
+        }
+    }
+    cells
+}
+
+/// The flattened cell list for a CU-count scaling sweep (classic apps).
+pub fn scaling_cells(cus: &[u32]) -> Vec<Cell> {
+    cus.iter().flat_map(|&n| classic_grid(n)).collect()
+}
+
+/// The three scenarios whose protocols the remote-ratio sweep compares:
+/// global-scope stealing (ScopedOnly), naive promotion (RspNaive) and
+/// selective promotion (Srsp).
+pub const RATIO_SCENARIOS: [Scenario; 3] = [Scenario::StealOnly, Scenario::Rsp, Scenario::Srsp];
+
+/// The default remote-ratio sample points of the sweep axis.
+pub const RATIO_POINTS: [f64; 6] = [0.0, 0.05, 0.1, 0.2, 0.4, 0.8];
+
+/// The protocol × remote-ratio grid, ratio-major (all protocols of one
+/// `r` adjacent, mirroring the report's row grouping).
+pub fn remote_ratio_grid(points: &[f64]) -> Vec<(Scenario, f64)> {
+    let mut cells = Vec::with_capacity(points.len() * RATIO_SCENARIOS.len());
+    for &r in points {
+        for s in RATIO_SCENARIOS {
+            cells.push((s, r));
+        }
+    }
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classic_grid_covers_every_pair() {
+        let g = classic_grid(8);
+        assert_eq!(g.len(), 3 * Scenario::ALL.len());
+        for app in classic_apps() {
+            for scenario in Scenario::ALL {
+                assert!(g.iter().any(|c| c.app == app && c.scenario == scenario));
+            }
+        }
+        assert!(g.iter().all(|c| c.num_cus == 8));
+    }
+
+    #[test]
+    fn full_grid_covers_every_registered_workload() {
+        let g = full_grid(4);
+        assert_eq!(g.len(), registry::all().count() * Scenario::ALL.len());
+        for id in registry::all() {
+            assert!(g.iter().any(|c| c.app == id));
+        }
+    }
+
+    #[test]
+    fn per_cell_seeds_share_graphs_across_scenarios() {
+        let cell = |app, scenario, num_cus| Cell {
+            app,
+            scenario,
+            num_cus,
+        };
+        let s = Seeding::PerCell(42);
+        let base = s.seed_for(&cell(registry::PRK, Scenario::Baseline, 4));
+        // Deterministic.
+        assert_eq!(base, s.seed_for(&cell(registry::PRK, Scenario::Baseline, 4)));
+        // Scenario must NOT change the seed (ratios need shared inputs).
+        assert_eq!(base, s.seed_for(&cell(registry::PRK, Scenario::Srsp, 4)));
+        // App and CU count must.
+        assert_ne!(base, s.seed_for(&cell(registry::SSSP, Scenario::Baseline, 4)));
+        assert_ne!(base, s.seed_for(&cell(registry::PRK, Scenario::Baseline, 8)));
+        // A different base diverges; shared seeding ignores the cell.
+        let other_base = Seeding::PerCell(43);
+        assert_ne!(
+            base,
+            other_base.seed_for(&cell(registry::PRK, Scenario::Baseline, 4))
+        );
+        let shared = Seeding::Shared(7);
+        assert_eq!(7, shared.seed_for(&cell(registry::MIS, Scenario::Rsp, 64)));
+    }
+
+    #[test]
+    fn remote_ratio_grid_is_ratio_major() {
+        let g = remote_ratio_grid(&[0.0, 0.5]);
+        assert_eq!(g.len(), 6);
+        assert_eq!(g[0], (Scenario::StealOnly, 0.0));
+        assert_eq!(g[2], (Scenario::Srsp, 0.0));
+        assert_eq!(g[3], (Scenario::StealOnly, 0.5));
+    }
+}

@@ -11,11 +11,21 @@
 
 use super::presets::{WorkloadPreset, WorkloadSize};
 use super::report::{format_table, geomean};
-use super::runner::{full_grid, into_run_results, Cell, CellResult, Runner};
+use super::runner::{into_run_results, CellResult, Runner};
 use crate::config::{DeviceConfig, Scenario};
+use crate::coordinator::{classic_apps, classic_grid};
 use crate::sim::Stats;
-use crate::workload::driver::{run_scenario_seeded, App, RunResult};
+use crate::workload::driver::{run_scenario_seeded, RunResult};
 use crate::workload::engine::NativeMath;
+
+// The CU-count sweep's flattened cell list is distribution policy and
+// lives with the rest of it; re-exported here for the sweep pipelines.
+pub use crate::coordinator::scaling_cells;
+
+/// The §5.1 figure apps' display names, in figure order.
+fn classic_names() -> [&'static str; 3] {
+    classic_apps().map(|id| id.display())
+}
 
 /// One measured cell of a figure.
 #[derive(Debug, Clone)]
@@ -82,8 +92,8 @@ impl FigureTable {
     }
 }
 
-/// Run every (app, scenario) pair once; returns raw stats. Cells are
-/// sharded over all available cores through the scenario-matrix
+/// Run every classic (app, scenario) pair once; returns raw stats. Cells
+/// are sharded over all available cores through the scenario-matrix
 /// [`Runner`]; use [`run_matrix_jobs`] for explicit worker control.
 pub fn run_matrix(cfg: &DeviceConfig, size: WorkloadSize) -> Vec<RunResult> {
     run_matrix_jobs(cfg, size, Runner::default_jobs())
@@ -93,7 +103,7 @@ pub fn run_matrix(cfg: &DeviceConfig, size: WorkloadSize) -> Vec<RunResult> {
 /// identical for every `jobs` value (grid order, classic seeding).
 pub fn run_matrix_jobs(cfg: &DeviceConfig, size: WorkloadSize, jobs: usize) -> Vec<RunResult> {
     let runner = Runner::new(cfg.clone(), size, jobs);
-    into_run_results(runner.run_cells(&full_grid(cfg.num_cus)))
+    into_run_results(runner.run_cells(&classic_grid(cfg.num_cus)))
 }
 
 /// Run one (preset, scenario) pair.
@@ -110,7 +120,7 @@ pub fn run_one(cfg: &DeviceConfig, preset: &WorkloadPreset, scenario: Scenario) 
     assert!(
         run.converged,
         "{:?}/{:?} did not converge within {} rounds",
-        preset.app, scenario, preset.max_rounds
+        preset.id, scenario, preset.max_rounds
     );
     run
 }
@@ -126,7 +136,7 @@ fn stat_of<'a>(results: &'a [RunResult], app: &str, s: Scenario) -> &'a Stats {
 /// Fig. 4: speedup vs Baseline (higher is better).
 pub fn fig4_speedup(results: &[RunResult]) -> FigureTable {
     let mut cells = Vec::new();
-    for app in App::ALL.map(|a| a.name()) {
+    for app in classic_names() {
         let base = stat_of(results, app, Scenario::Baseline).cycles as f64;
         for s in Scenario::ALL {
             let c = stat_of(results, app, s).cycles as f64;
@@ -148,7 +158,7 @@ pub fn fig4_speedup(results: &[RunResult]) -> FigureTable {
 /// Fig. 5: L2 accesses relative to Baseline (lower is better).
 pub fn fig5_l2(results: &[RunResult]) -> FigureTable {
     let mut cells = Vec::new();
-    for app in App::ALL.map(|a| a.name()) {
+    for app in classic_names() {
         let base = stat_of(results, app, Scenario::Baseline).l2_accesses as f64;
         for s in Scenario::ALL {
             let v = stat_of(results, app, s).l2_accesses as f64;
@@ -173,7 +183,7 @@ pub fn fig5_l2(results: &[RunResult]) -> FigureTable {
 pub fn fig6_overhead(results: &[RunResult]) -> FigureTable {
     let scenarios = vec![Scenario::Rsp, Scenario::Srsp];
     let mut cells = Vec::new();
-    for app in App::ALL.map(|a| a.name()) {
+    for app in classic_names() {
         let rsp = stat_of(results, app, Scenario::Rsp).sync_overhead_cycles as f64;
         for &s in &scenarios {
             let v = stat_of(results, app, s).sync_overhead_cycles as f64;
@@ -206,11 +216,6 @@ pub fn scaling_sweep_jobs(cus: &[u32], size: WorkloadSize, jobs: usize) -> Vec<(
     let cells = scaling_cells(cus);
     let runner = Runner::new(DeviceConfig::default(), size, jobs);
     scaling_rows(cus, &runner.run_cells(&cells))
-}
-
-/// The flattened cell list for a CU-count sweep.
-pub fn scaling_cells(cus: &[u32]) -> Vec<Cell> {
-    cus.iter().flat_map(|&n| full_grid(n)).collect()
 }
 
 /// Reduce executed sweep cells back to `(num_cus, rsp, srsp)` geomean
@@ -246,16 +251,16 @@ mod tests {
 
         let f4 = fig4_speedup(&results);
         // Baseline speedup is 1.0 by construction.
-        for app in App::ALL.map(|a| a.name()) {
+        for app in classic_names() {
             let v = f4.value(app, Scenario::Baseline).unwrap();
             assert!((v - 1.0).abs() < 1e-9);
         }
         let f5 = fig5_l2(&results);
-        for app in App::ALL.map(|a| a.name()) {
+        for app in classic_names() {
             assert!((f5.value(app, Scenario::Baseline).unwrap() - 1.0).abs() < 1e-9);
         }
         let f6 = fig6_overhead(&results);
-        for app in App::ALL.map(|a| a.name()) {
+        for app in classic_names() {
             assert!((f6.value(app, Scenario::Rsp).unwrap() - 1.0).abs() < 1e-9);
             // At tiny scale (4 CUs, 2 kB L1s) naive RSP's all-L1 work is
             // nearly free, so only structural facts are asserted here;

@@ -11,4 +11,7 @@ pub mod runner;
 pub use figures::{fig4_speedup, fig5_l2, fig6_overhead, scaling_sweep, FigureCell, FigureTable};
 pub use presets::{WorkloadPreset, WorkloadSize, DEFAULT_SEED};
 pub use report::{format_table, geomean, Report, ReportFormat, ReportRow};
-pub use runner::{full_grid, into_run_results, run_validated, Cell, CellResult, Runner, Seeding};
+pub use runner::{into_run_results, run_validated, CellResult, Runner};
+// Grid construction and seeding policy live with the coordinator;
+// re-exported so harness users keep one import root.
+pub use crate::coordinator::{classic_grid, full_grid, Cell, Seeding};

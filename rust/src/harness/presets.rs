@@ -1,172 +1,68 @@
-//! Workload presets: app + input-class + chunking, at paper scale or at
-//! test scale.
+//! Workload presets, resolved through the workload registry.
 //!
-//! The paper's inputs are DIMACS graphs; the presets use the matching
+//! Historically this module owned a hard-coded `App` enum and a match
+//! over the three §5.1 apps; presets are now built by each registered
+//! [`Kernel`](crate::workload::registry::Kernel) itself (input class,
+//! default chunking, tunable parameters), so this module re-exports the
+//! registry types under the harness paths the rest of the crate and the
+//! downstream tools import.
+//!
+//! The paper's inputs are DIMACS graphs; the kernels use the matching
 //! synthetic generator classes (DESIGN.md substitution table). Real
 //! DIMACS/MatrixMarket files can be substituted through the CLI
 //! (`--graph path.gr`).
 
-use crate::mem::{BackingStore, MemAlloc};
-use crate::workload::driver::{App, Workload};
-use crate::workload::graph::Graph;
-use crate::workload::mis::Mis;
-use crate::workload::pagerank::PageRank;
-use crate::workload::sssp::Sssp;
-
-/// Scale of a preset run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum WorkloadSize {
-    /// Unit-test scale (seconds on 4 CUs).
-    Tiny,
-    /// Bench scale for the 64-CU figure runs.
-    Paper,
-}
-
-/// The classic workload-generation seed used by every paper-figure
-/// preset. Runs that do not ask for explicit seeding reproduce the
-/// figures byte-for-byte with this value.
-pub const DEFAULT_SEED: u64 = 0xC0FFEE;
-
-/// A fully-specified workload instance.
-pub struct WorkloadPreset {
-    pub app: App,
-    pub graph: Graph,
-    pub chunk: u32,
-    pub max_rounds: u32,
-    /// PageRank iterations (ignored by SSSP/MIS, which run to
-    /// convergence).
-    pub iters: u32,
-    /// Seed the input graph was generated from (recorded in reports).
-    pub seed: u64,
-}
-
-impl WorkloadPreset {
-    /// Build the preset for `app` at `size` (§5.1 input classes:
-    /// PRK ← small-world, SSSP ← road grid, MIS ← power-law) with the
-    /// classic figure seed.
-    pub fn new(app: App, size: WorkloadSize) -> Self {
-        Self::new_seeded(app, size, DEFAULT_SEED)
-    }
-
-    /// Build the preset for `app` at `size` with an explicit generator
-    /// seed (the scenario-matrix runner derives one per grid cell).
-    pub fn new_seeded(app: App, size: WorkloadSize, seed: u64) -> Self {
-        match (app, size) {
-            (App::PageRank, WorkloadSize::Paper) => WorkloadPreset {
-                app,
-                graph: Graph::small_world(4096, 8, 0.1, seed),
-                chunk: 8,
-                max_rounds: 16,
-                iters: 6,
-                seed,
-            },
-            (App::PageRank, WorkloadSize::Tiny) => WorkloadPreset {
-                app,
-                graph: Graph::small_world(256, 4, 0.1, seed),
-                chunk: 8,
-                max_rounds: 8,
-                iters: 3,
-                seed,
-            },
-            (App::Sssp, WorkloadSize::Paper) => WorkloadPreset {
-                app,
-                graph: Graph::road_grid(64, 64, seed),
-                chunk: 8,
-                max_rounds: 400,
-                iters: 0,
-                seed,
-            },
-            (App::Sssp, WorkloadSize::Tiny) => WorkloadPreset {
-                app,
-                graph: Graph::road_grid(16, 16, seed),
-                chunk: 8,
-                max_rounds: 200,
-                iters: 0,
-                seed,
-            },
-            (App::Mis, WorkloadSize::Paper) => WorkloadPreset {
-                app,
-                graph: Graph::power_law(4096, 3, seed),
-                chunk: 8,
-                max_rounds: 64,
-                iters: 0,
-                seed,
-            },
-            (App::Mis, WorkloadSize::Tiny) => WorkloadPreset {
-                app,
-                graph: Graph::power_law(256, 2, seed),
-                chunk: 8,
-                max_rounds: 32,
-                iters: 0,
-                seed,
-            },
-        }
-    }
-
-    /// Override the graph (e.g. a real DIMACS file).
-    pub fn with_graph(mut self, g: Graph) -> Self {
-        self.graph = g;
-        self
-    }
-
-    /// Instantiate the workload: allocates and seeds device memory,
-    /// returning the workload object and the initial memory image.
-    pub fn instantiate(&self) -> (Box<dyn Workload>, BackingStore) {
-        let mut alloc = MemAlloc::new();
-        let mut image = BackingStore::new();
-        let wl: Box<dyn Workload> = match self.app {
-            App::PageRank => Box::new(PageRank::setup(
-                &self.graph,
-                &mut alloc,
-                &mut image,
-                self.chunk,
-                self.iters,
-            )),
-            App::Sssp => Box::new(Sssp::setup(&self.graph, &mut alloc, &mut image, self.chunk, 0)),
-            App::Mis => Box::new(Mis::setup(&self.graph, &mut alloc, &mut image, self.chunk)),
-        };
-        (wl, image)
-    }
-}
+pub use crate::workload::registry::{
+    Instance, Params, WorkloadId, WorkloadPreset, WorkloadSize, DEFAULT_SEED,
+};
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::registry;
 
     #[test]
-    fn presets_instantiate() {
-        for app in App::ALL {
+    fn presets_instantiate_for_every_registered_workload() {
+        for id in registry::all() {
             for size in [WorkloadSize::Tiny, WorkloadSize::Paper] {
-                let p = WorkloadPreset::new(app, size);
-                p.graph.validate().unwrap();
+                let p = WorkloadPreset::new(id, size);
+                if let Some(g) = &p.graph {
+                    g.validate().unwrap();
+                }
                 let (wl, _image) = p.instantiate();
-                assert_eq!(wl.name(), app.name());
+                assert_eq!(wl.name(), id.display());
                 assert!(!wl.kinds().is_empty());
+                assert!(p.max_rounds > 0);
             }
         }
     }
 
     #[test]
     fn seeded_presets_deterministic_and_seed_sensitive() {
-        for app in App::ALL {
-            let a = WorkloadPreset::new_seeded(app, WorkloadSize::Tiny, 1);
-            let b = WorkloadPreset::new_seeded(app, WorkloadSize::Tiny, 1);
-            let c = WorkloadPreset::new_seeded(app, WorkloadSize::Tiny, 2);
-            a.graph.validate().unwrap();
-            c.graph.validate().unwrap();
-            assert_eq!(a.graph.col, b.graph.col, "same seed, same graph");
-            assert_ne!(a.graph.col, c.graph.col, "different seed, different graph");
-            let classic = WorkloadPreset::new(app, WorkloadSize::Tiny);
+        for id in [registry::PRK, registry::SSSP, registry::MIS, registry::BFS] {
+            let a = WorkloadPreset::new_seeded(id, WorkloadSize::Tiny, 1);
+            let b = WorkloadPreset::new_seeded(id, WorkloadSize::Tiny, 1);
+            let c = WorkloadPreset::new_seeded(id, WorkloadSize::Tiny, 2);
+            let (ga, gb, gc) = (a.graph.unwrap(), b.graph.unwrap(), c.graph.unwrap());
+            ga.validate().unwrap();
+            gc.validate().unwrap();
+            assert_eq!(ga.col, gb.col, "same seed, same graph");
+            assert_ne!(ga.col, gc.col, "different seed, different graph");
+            let classic = WorkloadPreset::new(id, WorkloadSize::Tiny);
             assert_eq!(classic.seed, DEFAULT_SEED);
         }
     }
 
     #[test]
     fn paper_presets_bigger_than_tiny() {
-        for app in App::ALL {
-            let tiny = WorkloadPreset::new(app, WorkloadSize::Tiny);
-            let paper = WorkloadPreset::new(app, WorkloadSize::Paper);
-            assert!(paper.graph.n > tiny.graph.n);
+        for id in [registry::PRK, registry::SSSP, registry::MIS, registry::BFS] {
+            let tiny = WorkloadPreset::new(id, WorkloadSize::Tiny);
+            let paper = WorkloadPreset::new(id, WorkloadSize::Paper);
+            assert!(paper.graph.unwrap().n > tiny.graph.unwrap().n);
         }
+        // Non-graph kernels scale their synthetic sizes instead.
+        let tiny = WorkloadPreset::new(registry::STRESS, WorkloadSize::Tiny);
+        let paper = WorkloadPreset::new(registry::STRESS, WorkloadSize::Paper);
+        assert!(paper.params.get("tasks") > tiny.params.get("tasks"));
     }
 }

@@ -74,6 +74,14 @@ pub struct ReportRow {
     pub cus: u32,
     /// Workload-generation seed the cell's input graph came from.
     pub seed: u64,
+    /// `k=v;...` rendering of the explicit parameter overrides (empty
+    /// when the cell ran pure defaults; `;`-separated, never commas, so
+    /// the CSV needs no quoting).
+    pub params: String,
+    /// The remote-ratio sweep coordinate (`None` for workloads without
+    /// the axis) — first-class so protocol × r crossover curves plot
+    /// straight from the CSV.
+    pub remote_ratio: Option<f64>,
     pub rounds: u32,
     pub converged: bool,
     /// `Some(ok)` when the run was checked against the native oracle;
@@ -86,6 +94,13 @@ pub struct ReportRow {
     pub sync_overhead_cycles: u64,
     pub tasks_executed: u64,
     pub tasks_stolen: u64,
+    /// sRSP table-pressure counters (§4): zero under non-sRSP protocols.
+    pub lr_tbl_overflows: u64,
+    pub pa_tbl_overflows: u64,
+    /// Selective-flush outcome split: nop acks (LR-TBL miss) vs drains —
+    /// the selectivity the remote-ratio sweep measures.
+    pub selective_flush_nops: u64,
+    pub selective_flush_drains: u64,
 }
 
 /// A full matrix report; rows are in grid order (stable across `--jobs`).
@@ -97,11 +112,13 @@ pub struct Report {
 impl Report {
     /// The flat report schema, in serialization order (shared by the CSV
     /// header and the JSON object keys).
-    pub const CSV_COLUMNS: [&'static str; 14] = [
+    pub const CSV_COLUMNS: [&'static str; 20] = [
         "app",
         "scenario",
         "cus",
         "seed",
+        "params",
+        "remote_ratio",
         "rounds",
         "converged",
         "validated",
@@ -112,11 +129,15 @@ impl Report {
         "sync_overhead_cycles",
         "tasks_executed",
         "tasks_stolen",
+        "lr_tbl_overflows",
+        "pa_tbl_overflows",
+        "selective_flush_nops",
+        "selective_flush_drains",
     ];
 
     /// Render as CSV: a header line plus one line per row. Cell values
-    /// are numbers, booleans and bare scenario/app names — no quoting or
-    /// escaping is ever needed.
+    /// are numbers, booleans, bare scenario/app names and `;`-separated
+    /// parameter strings — no quoting or escaping is ever needed.
     pub fn to_csv(&self) -> String {
         let mut out = Self::CSV_COLUMNS.join(",");
         out.push('\n');
@@ -126,13 +147,19 @@ impl Report {
                 Some(false) => "false",
                 None => "",
             };
+            let remote_ratio = match r.remote_ratio {
+                Some(v) => v.to_string(),
+                None => String::new(),
+            };
             writeln!(
                 out,
-                "{},{},{},{},{},{},{},{},{},{:.6},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{:.6},{},{},{},{},{},{},{},{}",
                 r.app,
                 r.scenario,
                 r.cus,
                 r.seed,
+                r.params,
+                remote_ratio,
                 r.rounds,
                 r.converged,
                 validated,
@@ -143,6 +170,10 @@ impl Report {
                 r.sync_overhead_cycles,
                 r.tasks_executed,
                 r.tasks_stolen,
+                r.lr_tbl_overflows,
+                r.pa_tbl_overflows,
+                r.selective_flush_nops,
+                r.selective_flush_drains,
             )
             .expect("writing to a String cannot fail");
         }
@@ -158,16 +189,25 @@ impl Report {
                 Some(false) => "false",
                 None => "null",
             };
+            let remote_ratio = match r.remote_ratio {
+                Some(v) => v.to_string(),
+                None => "null".to_string(),
+            };
             write!(
                 out,
                 "  {{\"app\":\"{}\",\"scenario\":\"{}\",\"cus\":{},\"seed\":{},\
+                 \"params\":\"{}\",\"remote_ratio\":{},\
                  \"rounds\":{},\"converged\":{},\"validated\":{},\"cycles\":{},\
                  \"instructions\":{},\"l1_hit_rate\":{:.6},\"l2_accesses\":{},\
-                 \"sync_overhead_cycles\":{},\"tasks_executed\":{},\"tasks_stolen\":{}}}",
+                 \"sync_overhead_cycles\":{},\"tasks_executed\":{},\"tasks_stolen\":{},\
+                 \"lr_tbl_overflows\":{},\"pa_tbl_overflows\":{},\
+                 \"selective_flush_nops\":{},\"selective_flush_drains\":{}}}",
                 r.app,
                 r.scenario,
                 r.cus,
                 r.seed,
+                r.params,
+                remote_ratio,
                 r.rounds,
                 r.converged,
                 validated,
@@ -178,6 +218,10 @@ impl Report {
                 r.sync_overhead_cycles,
                 r.tasks_executed,
                 r.tasks_stolen,
+                r.lr_tbl_overflows,
+                r.pa_tbl_overflows,
+                r.selective_flush_nops,
+                r.selective_flush_drains,
             )
             .expect("writing to a String cannot fail");
             out.push_str(if i + 1 < self.rows.len() { ",\n" } else { "\n" });
@@ -197,6 +241,8 @@ mod tests {
             scenario: scenario.to_string(),
             cus: 8,
             seed: 0xC0FFEE,
+            params: String::new(),
+            remote_ratio: None,
             rounds: 5,
             converged: true,
             validated,
@@ -207,12 +253,20 @@ mod tests {
             sync_overhead_cycles: 777,
             tasks_executed: 64,
             tasks_stolen: 7,
+            lr_tbl_overflows: 1,
+            pa_tbl_overflows: 2,
+            selective_flush_nops: 30,
+            selective_flush_drains: 40,
         };
+        let mut sweep_row = row("STRESS", "srsp", Some(true));
+        sweep_row.params = "remote_ratio=0.4".to_string();
+        sweep_row.remote_ratio = Some(0.4);
         Report {
             rows: vec![
                 row("PRK", "baseline", None),
                 row("SSSP", "srsp", Some(true)),
                 row("MIS", "rsp", Some(false)),
+                sweep_row,
             ],
         }
     }
@@ -221,7 +275,7 @@ mod tests {
     fn csv_schema_is_rectangular() {
         let csv = sample_report().to_csv();
         let lines: Vec<&str> = csv.lines().collect();
-        assert_eq!(lines.len(), 4, "header + 3 rows");
+        assert_eq!(lines.len(), 5, "header + 4 rows");
         assert_eq!(lines[0], Report::CSV_COLUMNS.join(","));
         for line in &lines {
             assert_eq!(
@@ -230,10 +284,12 @@ mod tests {
                 "ragged CSV line: {line}"
             );
         }
-        assert!(lines[1].ends_with(",64,7"));
+        assert!(lines[1].ends_with(",64,7,1,2,30,40"));
         assert!(lines[1].contains(",,"), "unvalidated row has empty cell");
         assert!(lines[2].contains(",true,"));
         assert!(lines[3].contains(",false,"));
+        // The sweep row carries the axis in both columns.
+        assert!(lines[4].contains(",remote_ratio=0.4,0.4,"));
     }
 
     #[test]
@@ -241,18 +297,22 @@ mod tests {
         let json = sample_report().to_json();
         assert!(json.starts_with("[\n"));
         assert!(json.ends_with("]\n"));
-        assert_eq!(json.matches("{\"app\":").count(), 3);
+        assert_eq!(json.matches("{\"app\":").count(), 4);
         for key in Report::CSV_COLUMNS {
             assert_eq!(
                 json.matches(&format!("\"{key}\":")).count(),
-                3,
+                4,
                 "key {key} missing from some row"
             );
         }
-        // Balanced braces and a null for the unvalidated cell.
+        // Balanced braces and nulls for the absent optional cells.
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert!(json.contains("\"validated\":null"));
+        assert!(json.contains("\"remote_ratio\":null"));
+        assert!(json.contains("\"remote_ratio\":0.4"));
+        assert!(json.contains("\"params\":\"remote_ratio=0.4\""));
         assert!(json.contains("\"l1_hit_rate\":0.875000"));
+        assert!(json.contains("\"selective_flush_drains\":40"));
     }
 
     #[test]

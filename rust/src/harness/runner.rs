@@ -1,86 +1,36 @@
-//! The parallel scenario-matrix runner: shards the protocol × app ×
-//! CU-count grid across OS threads.
+//! The parallel scenario-matrix runner: the **execution half** of the
+//! evaluation grids.
 //!
-//! Every grid [`Cell`] is an independent, single-threaded simulation —
-//! its own [`Device`](crate::gpu::Device), memory image and workload
-//! instance are all constructed inside the worker thread that executes
-//! it — so cells parallelize with no shared mutable state. Workers pull
-//! cell indices from an atomic counter (dynamic load balancing: the
-//! 64-CU sRSP cells cost far more than the 4-CU baseline cells) and send
-//! results back over a channel; results are reassembled in grid order,
-//! so the output is byte-for-byte identical for any `--jobs` value.
+//! Which cells exist, in what order, and how their seeds derive is the
+//! *distribution policy* and lives in [`crate::coordinator`]; this module
+//! takes a cell list and executes it. Every grid
+//! [`Cell`](crate::coordinator::Cell) is an independent, single-threaded
+//! simulation — its own [`Device`](crate::gpu::Device), memory image and
+//! workload instance are all constructed inside the worker thread that
+//! executes it — so cells parallelize with no shared mutable state.
+//! Workers pull cell indices from an atomic counter (dynamic load
+//! balancing: the 64-CU sRSP cells cost far more than the 4-CU baseline
+//! cells) and send results back over a channel; results are reassembled
+//! in grid order, so the output is byte-for-byte identical for any
+//! `--jobs` value.
 //!
-//! Seeding is deterministic either way: [`Seeding::Shared`] reproduces
-//! the classic figure presets, [`Seeding::PerCell`] derives an
-//! independent [`SplitMix64`] stream per (app, CU-count) pair. The seed
-//! deliberately ignores the scenario: all scenarios of one app at one CU
-//! count must share an input graph or vs-Baseline ratios would compare
-//! different problems.
+//! Workloads are resolved through the [`crate::workload::registry`]:
+//! instantiation, parameter handling and oracle validation are all
+//! self-described by the registered [`Kernel`](crate::workload::registry::Kernel)
+//! implementations — nothing here matches on a workload enum.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::thread;
 
-use super::presets::{WorkloadPreset, WorkloadSize, DEFAULT_SEED};
+use super::presets::{WorkloadPreset, WorkloadSize};
 use super::report::{Report, ReportRow};
 use crate::config::{DeviceConfig, Scenario};
-use crate::mem::{BackingStore, MemAlloc};
-use crate::sim::SplitMix64;
-use crate::workload::driver::{run_scenario_seeded, App, RunResult};
+use crate::coordinator::{remote_ratio_grid, Cell, Seeding};
+use crate::workload::driver::{run_scenario_seeded, RunResult};
 use crate::workload::engine::NativeMath;
-use crate::workload::mis::Mis;
-use crate::workload::pagerank::PageRank;
-use crate::workload::sssp::Sssp;
-
-/// One cell of the protocol × app × CU-count grid.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct Cell {
-    pub app: App,
-    pub scenario: Scenario,
-    pub num_cus: u32,
-}
-
-/// How workload-generation seeds are assigned to grid cells.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Seeding {
-    /// Every cell uses the same seed — the classic figure presets
-    /// (`DEFAULT_SEED` reproduces the paper figures byte-for-byte).
-    Shared(u64),
-    /// Each (app, CU-count) pair derives its own seed from a base value
-    /// via [`SplitMix64`]; scenarios still share the graph (see module
-    /// docs).
-    PerCell(u64),
-}
-
-impl Default for Seeding {
-    fn default() -> Self {
-        Seeding::Shared(DEFAULT_SEED)
-    }
-}
-
-impl Seeding {
-    /// The workload seed for `cell`.
-    pub fn seed_for(self, cell: &Cell) -> u64 {
-        match self {
-            Seeding::Shared(seed) => seed,
-            Seeding::PerCell(base) => {
-                let tag = ((app_ord(cell.app) + 1) << 32) | u64::from(cell.num_cus);
-                SplitMix64::new(base ^ tag).next_u64()
-            }
-        }
-    }
-}
-
-/// Stable per-app ordinal used for seed derivation (do not reorder:
-/// recorded seeds in saved reports depend on it).
-fn app_ord(app: App) -> u64 {
-    match app {
-        App::PageRank => 0,
-        App::Sssp => 1,
-        App::Mis => 2,
-    }
-}
+use crate::workload::registry::WorkloadId;
 
 /// Outcome of one executed cell.
 #[derive(Debug, Clone)]
@@ -88,25 +38,15 @@ pub struct CellResult {
     pub cell: Cell,
     /// The workload seed the cell actually ran with.
     pub seed: u64,
+    /// `k=v;...` rendering of the explicit parameter overrides the cell's
+    /// preset carried (empty when the run used pure defaults).
+    pub params: String,
+    /// The remote-ratio sweep coordinate, when the workload declares one
+    /// (the stress family); `None` for workloads without the axis.
+    pub remote_ratio: Option<f64>,
     pub result: RunResult,
     /// `Some(ok)` when oracle validation was requested.
     pub validated: Option<bool>,
-}
-
-/// The full §5.1 evaluation grid (every app × every scenario) at one CU
-/// count, in stable (app-major) order.
-pub fn full_grid(num_cus: u32) -> Vec<Cell> {
-    let mut cells = Vec::with_capacity(App::ALL.len() * Scenario::ALL.len());
-    for app in App::ALL {
-        for scenario in Scenario::ALL {
-            cells.push(Cell {
-                app,
-                scenario,
-                num_cus,
-            });
-        }
-    }
-    cells
 }
 
 /// Strip cell metadata for the figure pipelines, which require every run
@@ -127,71 +67,27 @@ pub fn into_run_results(results: Vec<CellResult>) -> Vec<RunResult> {
 }
 
 /// Run one (preset, scenario) pair and check the final memory against
-/// the app's native oracle: exactness for SSSP/MIS, L1-norm tolerance
-/// for PageRank (floating-point accumulation order differs between the
-/// tiled device math and the oracle).
+/// the workload's self-described oracle (each registered kernel builds
+/// its own check: exactness for SSSP/MIS/BFS/stress/prodcons, L1-norm
+/// tolerance for PageRank, whose floating-point accumulation order
+/// differs between the tiled device math and the oracle).
 pub fn run_validated(
     cfg: &DeviceConfig,
     preset: &WorkloadPreset,
     scenario: Scenario,
 ) -> (RunResult, bool) {
-    let mut alloc = MemAlloc::new();
-    let mut image = BackingStore::new();
-    match preset.app {
-        App::PageRank => {
-            let mut wl = PageRank::setup(
-                &preset.graph,
-                &mut alloc,
-                &mut image,
-                preset.chunk,
-                preset.iters,
-            );
-            let oracle = PageRank::oracle(&preset.graph, preset.iters);
-            let (run, mem) = run_scenario_seeded(
-                cfg,
-                scenario,
-                &mut wl,
-                NativeMath,
-                preset.max_rounds,
-                image,
-            );
-            let got = wl.result(&mem);
-            let diff: f32 = got.iter().zip(&oracle).map(|(a, b)| (a - b).abs()).sum();
-            let ok = run.converged && diff < 1e-3;
-            (run, ok)
-        }
-        App::Sssp => {
-            let mut wl = Sssp::setup(&preset.graph, &mut alloc, &mut image, preset.chunk, 0);
-            let oracle = Sssp::oracle(&preset.graph, 0);
-            let (run, mem) = run_scenario_seeded(
-                cfg,
-                scenario,
-                &mut wl,
-                NativeMath,
-                preset.max_rounds,
-                image,
-            );
-            let ok = run.converged && wl.result(&mem) == oracle;
-            (run, ok)
-        }
-        App::Mis => {
-            let mut wl = Mis::setup(&preset.graph, &mut alloc, &mut image, preset.chunk);
-            let oracle = Mis::oracle(&preset.graph);
-            let (run, mem) = run_scenario_seeded(
-                cfg,
-                scenario,
-                &mut wl,
-                NativeMath,
-                preset.max_rounds,
-                image,
-            );
-            let got = wl.result(&mem);
-            let ok = run.converged
-                && Mis::validate_mis(&preset.graph, &got).is_ok()
-                && got == oracle;
-            (run, ok)
-        }
-    }
+    let inst = preset.instance();
+    let mut wl = inst.workload;
+    let (run, mem) = run_scenario_seeded(
+        cfg,
+        scenario,
+        wl.as_mut(),
+        NativeMath,
+        preset.max_rounds,
+        inst.image,
+    );
+    let ok = run.converged && (inst.check)(&mem).is_ok();
+    (run, ok)
 }
 
 /// The scenario-matrix runner configuration.
@@ -204,19 +100,25 @@ pub struct Runner {
     pub size: WorkloadSize,
     /// Check every cell against its native oracle.
     pub validate: bool,
+    /// `--param` overrides applied to every preset this runner builds.
+    /// Panics on a kernel that does not declare a key — the CLI restricts
+    /// `--param` to single-workload commands, so a mixed grid never sees
+    /// overrides.
+    pub params: Vec<(String, f64)>,
     /// Device template; `num_cus` is overridden per cell.
     pub cfg: DeviceConfig,
 }
 
 impl Runner {
-    /// A runner with classic shared seeding and no validation — the
-    /// configuration the figure pipelines use.
+    /// A runner with classic shared seeding, default parameters and no
+    /// validation — the configuration the figure pipelines use.
     pub fn new(cfg: DeviceConfig, size: WorkloadSize, jobs: usize) -> Self {
         Runner {
             jobs,
             seeding: Seeding::default(),
             size,
             validate: false,
+            params: Vec::new(),
             cfg,
         }
     }
@@ -226,19 +128,29 @@ impl Runner {
         thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     }
 
-    /// Run one standalone cell: generates the input graph, builds the
-    /// device, simulates and (when enabled) validates, entirely within
-    /// the calling thread.
+    /// Build the preset for `app` from this runner's size, params and an
+    /// explicit seed, with `extra` overrides appended (the sweep axes own
+    /// their key, so they win over user `--param`s).
+    fn build_preset(&self, app: WorkloadId, seed: u64, extra: &[(String, f64)]) -> WorkloadPreset {
+        let mut overrides = self.params.clone();
+        overrides.extend_from_slice(extra);
+        WorkloadPreset::with_params(app, self.size, seed, &overrides)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Run one standalone cell: generates the input, builds the device,
+    /// simulates and (when enabled) validates, entirely within the
+    /// calling thread.
     pub fn run_cell(&self, cell: &Cell) -> CellResult {
         let seed = self.seeding.seed_for(cell);
-        let preset = WorkloadPreset::new_seeded(cell.app, self.size, seed);
+        let preset = self.build_preset(cell.app, seed, &[]);
         self.run_cell_with(cell, &preset)
     }
 
     /// Run `cell` against an already-generated preset (which must match
-    /// the cell's app and the runner's seeding — `run_cells` shares one
-    /// preset across all scenarios of an (app, CU-count) pair instead of
-    /// regenerating the identical graph per scenario).
+    /// the cell's app and the runner's seeding — the grid entry points
+    /// share one preset across all scenarios of an (app, CU-count) pair
+    /// instead of regenerating the identical input per scenario).
     fn run_cell_with(&self, cell: &Cell, preset: &WorkloadPreset) -> CellResult {
         let cfg = DeviceConfig {
             num_cus: cell.num_cus,
@@ -262,6 +174,8 @@ impl Runner {
         CellResult {
             cell: *cell,
             seed: preset.seed,
+            params: preset.params.overrides_display(),
+            remote_ratio: preset.remote_ratio(),
             result,
             validated,
         }
@@ -272,17 +186,68 @@ impl Runner {
     /// byte-identical output.
     pub fn run_cells(&self, cells: &[Cell]) -> Vec<CellResult> {
         // Seeds ignore the scenario, so every distinct (app, seed) pair
-        // needs exactly one input graph: generate each once, up front,
-        // and share it read-only across the workers.
-        let mut presets: HashMap<(App, u64), WorkloadPreset> = HashMap::new();
+        // needs exactly one input: generate each once, up front, and
+        // share it read-only across the workers.
+        let mut presets: HashMap<(WorkloadId, u64), WorkloadPreset> = HashMap::new();
         for cell in cells {
             let seed = self.seeding.seed_for(cell);
             presets
                 .entry((cell.app, seed))
-                .or_insert_with(|| WorkloadPreset::new_seeded(cell.app, self.size, seed));
+                .or_insert_with(|| self.build_preset(cell.app, seed, &[]));
         }
-        let presets = &presets;
-        let jobs = self.jobs.clamp(1, cells.len().max(1));
+        let pairs: Vec<(Cell, &WorkloadPreset)> = cells
+            .iter()
+            .map(|c| (*c, &presets[&(c.app, self.seeding.seed_for(c))]))
+            .collect();
+        self.run_pairs(&pairs)
+    }
+
+    /// Execute the protocol × remote-ratio sweep grid (the stress
+    /// family's crossover axis) on `app`, which must declare a
+    /// `remote_ratio` parameter. All protocols at one ratio point share
+    /// one preset — and therefore one task population — so the curve
+    /// compares protocols on identical inputs; the cell order is
+    /// [`remote_ratio_grid`]'s ratio-major order.
+    pub fn run_remote_ratio_sweep(&self, app: WorkloadId, points: &[f64]) -> Vec<CellResult> {
+        let num_cus = self.cfg.num_cus;
+        let presets: Vec<WorkloadPreset> = points
+            .iter()
+            .map(|&r| {
+                let cell = Cell {
+                    app,
+                    scenario: Scenario::Srsp,
+                    num_cus,
+                };
+                // Seeds ignore the scenario (and the ratio: the sweep
+                // varies placement over one shared task population).
+                let seed = self.seeding.seed_for(&cell);
+                self.build_preset(app, seed, &[("remote_ratio".to_string(), r)])
+            })
+            .collect();
+        let pairs: Vec<(Cell, &WorkloadPreset)> = remote_ratio_grid(points)
+            .iter()
+            .map(|&(scenario, r)| {
+                let i = points
+                    .iter()
+                    .position(|&p| p == r)
+                    .expect("grid point comes from `points`");
+                (
+                    Cell {
+                        app,
+                        scenario,
+                        num_cus,
+                    },
+                    &presets[i],
+                )
+            })
+            .collect();
+        self.run_pairs(&pairs)
+    }
+
+    /// The shared sharding core: dynamic work queue over an atomic
+    /// counter, results reassembled in input order.
+    fn run_pairs(&self, pairs: &[(Cell, &WorkloadPreset)]) -> Vec<CellResult> {
+        let jobs = self.jobs.clamp(1, pairs.len().max(1));
         let next = AtomicUsize::new(0);
         let (tx, rx) = mpsc::channel::<(usize, CellResult)>();
         thread::scope(|scope| {
@@ -291,9 +256,7 @@ impl Runner {
                 let next = &next;
                 scope.spawn(move || loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
-                    let Some(cell) = cells.get(i) else { break };
-                    let seed = self.seeding.seed_for(cell);
-                    let preset = &presets[&(cell.app, seed)];
+                    let Some((cell, preset)) = pairs.get(i) else { break };
                     if tx.send((i, self.run_cell_with(cell, preset))).is_err() {
                         break;
                     }
@@ -301,7 +264,7 @@ impl Runner {
             }
         });
         drop(tx);
-        let mut slots: Vec<Option<CellResult>> = cells.iter().map(|_| None).collect();
+        let mut slots: Vec<Option<CellResult>> = pairs.iter().map(|_| None).collect();
         for (i, r) in rx {
             slots[i] = Some(r);
         }
@@ -322,6 +285,8 @@ impl Report {
                 scenario: c.result.scenario.name().to_string(),
                 cus: c.cell.num_cus,
                 seed: c.seed,
+                params: c.params.clone(),
+                remote_ratio: c.remote_ratio,
                 rounds: c.result.rounds,
                 converged: c.result.converged,
                 validated: c.validated,
@@ -332,6 +297,10 @@ impl Report {
                 sync_overhead_cycles: c.result.stats.sync_overhead_cycles,
                 tasks_executed: c.result.stats.tasks_executed,
                 tasks_stolen: c.result.stats.tasks_stolen,
+                lr_tbl_overflows: c.result.stats.lr_tbl_overflows,
+                pa_tbl_overflows: c.result.stats.pa_tbl_overflows,
+                selective_flush_nops: c.result.stats.selective_flush_nops,
+                selective_flush_drains: c.result.stats.selective_flush_drains,
             })
             .collect();
         Report { rows }
@@ -341,6 +310,9 @@ impl Report {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::{classic_grid, full_grid, RATIO_SCENARIOS};
+    use crate::harness::presets::DEFAULT_SEED;
+    use crate::workload::registry;
 
     fn tiny_runner(jobs: usize, seeding: Seeding, validate: bool) -> Runner {
         Runner {
@@ -348,6 +320,7 @@ mod tests {
             seeding,
             size: WorkloadSize::Tiny,
             validate,
+            params: Vec::new(),
             cfg: DeviceConfig {
                 num_cus: 4,
                 ..DeviceConfig::small()
@@ -356,43 +329,8 @@ mod tests {
     }
 
     #[test]
-    fn grid_covers_every_pair() {
-        let g = full_grid(8);
-        assert_eq!(g.len(), App::ALL.len() * Scenario::ALL.len());
-        for app in App::ALL {
-            for scenario in Scenario::ALL {
-                assert!(g.iter().any(|c| c.app == app && c.scenario == scenario));
-            }
-        }
-        assert!(g.iter().all(|c| c.num_cus == 8));
-    }
-
-    #[test]
-    fn per_cell_seeds_share_graphs_across_scenarios() {
-        let cell = |app, scenario, num_cus| Cell {
-            app,
-            scenario,
-            num_cus,
-        };
-        let s = Seeding::PerCell(42);
-        let base = s.seed_for(&cell(App::PageRank, Scenario::Baseline, 4));
-        // Deterministic.
-        assert_eq!(base, s.seed_for(&cell(App::PageRank, Scenario::Baseline, 4)));
-        // Scenario must NOT change the seed (ratios need shared inputs).
-        assert_eq!(base, s.seed_for(&cell(App::PageRank, Scenario::Srsp, 4)));
-        // App and CU count must.
-        assert_ne!(base, s.seed_for(&cell(App::Sssp, Scenario::Baseline, 4)));
-        assert_ne!(base, s.seed_for(&cell(App::PageRank, Scenario::Baseline, 8)));
-        // A different base diverges; shared seeding ignores the cell.
-        let other_base = Seeding::PerCell(43);
-        assert_ne!(base, other_base.seed_for(&cell(App::PageRank, Scenario::Baseline, 4)));
-        let shared = Seeding::Shared(7);
-        assert_eq!(7, shared.seed_for(&cell(App::Mis, Scenario::Rsp, 64)));
-    }
-
-    #[test]
     fn jobs_1_and_jobs_4_byte_identical() {
-        let cells = full_grid(4);
+        let cells = classic_grid(4);
         let serial = tiny_runner(1, Seeding::PerCell(42), false).run_cells(&cells);
         let parallel = tiny_runner(4, Seeding::PerCell(42), false).run_cells(&cells);
         // Full structural equality, stats included (Debug covers every
@@ -413,18 +351,23 @@ mod tests {
     fn validation_passes_on_tiny_cells() {
         let cells = [
             Cell {
-                app: App::PageRank,
+                app: registry::PRK,
                 scenario: Scenario::Baseline,
                 num_cus: 4,
             },
             Cell {
-                app: App::Sssp,
+                app: registry::SSSP,
                 scenario: Scenario::Srsp,
                 num_cus: 4,
             },
             Cell {
-                app: App::Mis,
+                app: registry::MIS,
                 scenario: Scenario::Rsp,
+                num_cus: 4,
+            },
+            Cell {
+                app: registry::BFS,
+                scenario: Scenario::Srsp,
                 num_cus: 4,
             },
         ];
@@ -438,9 +381,76 @@ mod tests {
                 c.result.scenario
             );
             assert_eq!(c.seed, DEFAULT_SEED);
+            assert_eq!(c.params, "", "matrix cells run pure defaults");
         }
         let report = Report::from_cells(&results);
         assert_eq!(report.rows.len(), cells.len());
         assert!(report.to_csv().contains(",true,"));
+    }
+
+    #[test]
+    fn full_grid_covers_every_registered_workload_and_validates() {
+        // The registry round-trip at runner level: every registered
+        // workload × srsp validates on the tiny device.
+        let cells: Vec<Cell> = full_grid(4)
+            .into_iter()
+            .filter(|c| c.scenario == Scenario::Srsp)
+            .collect();
+        assert_eq!(cells.len(), registry::all().count());
+        let results = tiny_runner(4, Seeding::default(), true).run_cells(&cells);
+        for c in &results {
+            assert_eq!(
+                c.validated,
+                Some(true),
+                "{}/{} failed its oracle",
+                c.result.app,
+                c.result.scenario
+            );
+        }
+    }
+
+    #[test]
+    fn remote_ratio_sweep_shape_params_and_oracles() {
+        let runner = tiny_runner(4, Seeding::default(), true);
+        let points = [0.0, 0.5];
+        let results = runner.run_remote_ratio_sweep(registry::STRESS, &points);
+        assert_eq!(results.len(), points.len() * RATIO_SCENARIOS.len());
+        for (i, c) in results.iter().enumerate() {
+            let (want_scenario, want_r) = remote_ratio_grid(&points)[i];
+            assert_eq!(c.cell.scenario, want_scenario);
+            assert_eq!(c.remote_ratio, Some(want_r), "cell {i}");
+            assert_eq!(c.validated, Some(true), "{want_scenario:?} r={want_r}");
+            assert_eq!(c.params, format!("remote_ratio={want_r}"));
+        }
+        // The report carries the axis as a first-class column.
+        let report = Report::from_cells(&results);
+        assert!(report.to_csv().contains("remote_ratio"));
+    }
+
+    #[test]
+    fn runner_params_reach_the_preset() {
+        let mut runner = tiny_runner(1, Seeding::default(), true);
+        runner.params = vec![("tasks".to_string(), 32.0)];
+        let cell = Cell {
+            app: registry::STRESS,
+            scenario: Scenario::Srsp,
+            num_cus: 4,
+        };
+        let r = runner.run_cell(&cell);
+        assert_eq!(r.params, "tasks=32");
+        assert_eq!(r.validated, Some(true));
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown parameter")]
+    fn runner_rejects_unknown_params() {
+        let mut runner = tiny_runner(1, Seeding::default(), false);
+        runner.params = vec![("bogus".to_string(), 1.0)];
+        let cell = Cell {
+            app: registry::PRK,
+            scenario: Scenario::Baseline,
+            num_cus: 4,
+        };
+        let _ = runner.run_cell(&cell);
     }
 }

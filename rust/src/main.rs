@@ -1,8 +1,11 @@
 //! `srsp` — the Layer-3 coordinator CLI.
 //!
 //! Subcommands regenerate the paper's tables/figures, run individual
-//! scenarios, sweep CU counts and validate results against native
-//! oracles. Everything matrix-shaped (figures, sweeps, validation, the
+//! scenarios, sweep CU counts or the stress family's remote-access
+//! ratio, and validate results against native oracles. Workloads are
+//! resolved by name through the [`srsp::workload::registry`] — adding a
+//! workload there makes it reachable from every subcommand with no CLI
+//! changes. Everything matrix-shaped (figures, sweeps, validation, the
 //! CI smoke gate) is sharded across OS threads by the scenario-matrix
 //! runner ([`srsp::harness::runner`]); `--jobs N` controls the worker
 //! count and results are byte-identical for every N. No external CLI
@@ -11,14 +14,13 @@
 use std::time::Instant;
 
 use srsp::config::{parse_config_str, DeviceConfig, Scenario};
-use srsp::harness::figures::{
-    fig4_speedup, fig5_l2, fig6_overhead, run_one, scaling_cells, scaling_rows,
-};
+use srsp::coordinator::{classic_grid, full_grid, scaling_cells, Seeding, RATIO_POINTS};
+use srsp::harness::figures::{fig4_speedup, fig5_l2, fig6_overhead, run_one, scaling_rows};
 use srsp::harness::presets::{WorkloadPreset, WorkloadSize, DEFAULT_SEED};
 use srsp::harness::report::{format_table, Report, ReportFormat};
-use srsp::harness::runner::{full_grid, into_run_results, CellResult, Runner, Seeding};
-use srsp::workload::driver::App;
+use srsp::harness::runner::{into_run_results, CellResult, Runner};
 use srsp::workload::graph::Graph;
+use srsp::workload::registry::{self, Params, WorkloadId};
 
 const USAGE: &str = "srsp — scalable remote-scope promotion (paper reproduction)
 
@@ -27,19 +29,30 @@ USAGE:
 
 COMMANDS:
     table1                 Print the Table-1 simulation parameters
+    list-workloads         Print the registered workload table
     fig4                   Regenerate Fig. 4 (speedup vs Baseline)
     fig5                   Regenerate Fig. 5 (L2 accesses vs Baseline)
     fig6                   Regenerate Fig. 6 (sync overhead vs RSP)
-    sweep                  CU-count scaling sweep (RSP vs sRSP geomean)
-    run                    Run one app under one scenario, print stats
-    validate               Run every app/scenario and check the oracles
-    ci-smoke               Tiny-scale app × scenario matrix, oracle-checked
+    sweep                  Scaling sweep: --axis cus (RSP vs sRSP geomean as
+                           CUs grow, the default) or --axis remote-ratio
+                           (protocol × r crossover on the stress family,
+                           oracle-gated)
+    run                    Run one workload under one scenario, print stats
+    validate               Run every workload/scenario and check the oracles
+    ci-smoke               Tiny-scale workload × scenario matrix, oracle-checked
                            in parallel; exits non-zero on any mismatch
     help                   Show this message
 
 OPTIONS:
-    --app <prk|sssp|mis>        App for `run` (default prk)
+    --app <name>                Workload by registry name (see
+                                `srsp list-workloads`; default prk, or
+                                stress for `sweep --axis remote-ratio`)
+    --param <k=v>               Override a workload parameter (repeatable;
+                                single-workload commands only)
     --scenario <name>           baseline|scope|steal|rsp|srsp|hlrc (default srsp)
+    --axis <cus|remote-ratio>   Sweep axis for `sweep` (default cus)
+    --ratios <r1,r2,...>        remote-ratio sample points in [0, 1]
+                                (default 0,0.05,0.1,0.2,0.4,0.8)
     --cus <n>                   Override CU count (ci-smoke default: 8)
     --size <tiny|paper>         Workload scale (default paper; ci-smoke: tiny)
     --jobs <n>                  Worker threads for matrix commands
@@ -54,9 +67,18 @@ OPTIONS:
     --config <file>             Device config file (key = value)
 ";
 
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum SweepAxis {
+    Cus,
+    RemoteRatio,
+}
+
 struct Opts {
-    app: App,
+    app: Option<WorkloadId>,
     scenario: Scenario,
+    axis: SweepAxis,
+    ratios: Option<Vec<f64>>,
+    params: Vec<(String, f64)>,
     cus: Option<u32>,
     size: Option<WorkloadSize>,
     jobs: Option<usize>,
@@ -69,8 +91,11 @@ struct Opts {
 
 fn parse_opts(args: &[String]) -> Result<Opts, String> {
     let mut o = Opts {
-        app: App::PageRank,
+        app: None,
         scenario: Scenario::Srsp,
+        axis: SweepAxis::Cus,
+        ratios: None,
+        params: Vec::new(),
         cus: None,
         size: None,
         jobs: None,
@@ -91,17 +116,51 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
         };
         match key.as_str() {
             "--app" => {
-                o.app = match val()?.as_str() {
-                    "prk" | "pagerank" => App::PageRank,
-                    "sssp" => App::Sssp,
-                    "mis" => App::Mis,
-                    other => return Err(format!("unknown app '{other}'")),
-                }
+                let v = val()?;
+                o.app = Some(registry::resolve(&v).ok_or_else(|| {
+                    let names: Vec<&str> = registry::all().map(|id| id.name()).collect();
+                    format!("unknown workload '{v}' (registered: {})", names.join(", "))
+                })?);
+            }
+            "--param" => {
+                let v = val()?;
+                let (k, raw) = v
+                    .split_once('=')
+                    .ok_or_else(|| format!("--param needs key=value, got '{v}'"))?;
+                let num: f64 = raw
+                    .parse()
+                    .map_err(|e| format!("--param {k}: bad value '{raw}': {e}"))?;
+                o.params.push((k.to_string(), num));
             }
             "--scenario" => {
                 let v = val()?;
-                o.scenario = Scenario::from_name(&v)
-                    .ok_or_else(|| format!("unknown scenario '{v}'"))?;
+                o.scenario =
+                    Scenario::from_name(&v).ok_or_else(|| format!("unknown scenario '{v}'"))?;
+            }
+            "--axis" => {
+                o.axis = match val()?.as_str() {
+                    "cus" => SweepAxis::Cus,
+                    "remote-ratio" | "remote_ratio" => SweepAxis::RemoteRatio,
+                    other => return Err(format!("unknown axis '{other}' (cus|remote-ratio)")),
+                }
+            }
+            "--ratios" => {
+                let v = val()?;
+                let mut points = Vec::new();
+                for part in v.split(',') {
+                    let r: f64 = part
+                        .trim()
+                        .parse()
+                        .map_err(|e| format!("--ratios: bad point '{part}': {e}"))?;
+                    if !(0.0..=1.0).contains(&r) {
+                        return Err(format!("--ratios: {r} is outside [0, 1]"));
+                    }
+                    points.push(r);
+                }
+                if points.is_empty() {
+                    return Err("--ratios needs at least one point".into());
+                }
+                o.ratios = Some(points);
             }
             "--cus" => o.cus = Some(val()?.parse().map_err(|e| format!("--cus: {e}"))?),
             "--size" => {
@@ -161,7 +220,21 @@ impl Opts {
             seeding: self.seeding(),
             size,
             validate,
+            params: self.params.clone(),
             cfg,
+        }
+    }
+
+    /// Multi-workload grids run pure defaults; `--param` keys are only
+    /// meaningful against one kernel's spec.
+    fn reject_params(&self, cmd: &str) -> Result<(), String> {
+        if self.params.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "--param applies to single-workload commands (run, sweep --axis remote-ratio), \
+                 not '{cmd}'"
+            ))
         }
     }
 }
@@ -181,10 +254,17 @@ fn device_config(o: &Opts) -> Result<DeviceConfig, String> {
     Ok(cfg)
 }
 
-fn load_preset(o: &Opts, size: WorkloadSize) -> Result<WorkloadPreset, String> {
+fn load_preset(o: &Opts, app: WorkloadId, size: WorkloadSize) -> Result<WorkloadPreset, String> {
     // For a single run, --seed is used directly as the generator seed.
-    let mut preset = WorkloadPreset::new_seeded(o.app, size, o.seed.unwrap_or(DEFAULT_SEED));
+    let mut preset =
+        WorkloadPreset::with_params(app, size, o.seed.unwrap_or(DEFAULT_SEED), &o.params)?;
     if let Some(path) = &o.graph {
+        if preset.graph.is_none() {
+            return Err(format!(
+                "--graph: workload '{}' takes no graph input",
+                app.name()
+            ));
+        }
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         let g = if path.ends_with(".mtx") {
             Graph::from_matrix_market(&text)?
@@ -230,10 +310,15 @@ fn print_validation(results: &[CellResult], o: &Opts) -> usize {
     let mut failures = 0;
     for c in results {
         let ok = c.validated == Some(true) && c.result.converged;
+        let tag = if c.params.is_empty() {
+            String::new()
+        } else {
+            format!(" [{}]", c.params)
+        };
         human(
             o,
             &format!(
-                "{:>5} / {:<9} {}",
+                "{:>8} / {:<9}{tag} {}",
                 c.result.app,
                 c.result.scenario.name(),
                 if ok { "OK" } else { "FAIL" }
@@ -273,18 +358,49 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
             let cfg = device_config(o)?;
             println!("Table 1 — simulation parameters\n{}", cfg.table1());
         }
+        "list-workloads" => {
+            let header = vec![
+                "name".to_string(),
+                "aliases".to_string(),
+                "oracle".to_string(),
+                "params (defaults)".to_string(),
+                "summary".to_string(),
+            ];
+            let rows: Vec<Vec<String>> = registry::all()
+                .map(|id| {
+                    let k = id.kernel();
+                    let params: Vec<String> = k
+                        .params()
+                        .iter()
+                        .map(|p| format!("{}={}", p.key, p.default))
+                        .collect();
+                    vec![
+                        k.name().to_string(),
+                        k.aliases().join(","),
+                        k.oracle().to_string(),
+                        params.join(","),
+                        k.summary().to_string(),
+                    ]
+                })
+                .collect();
+            println!("{}", format_table(&header, &rows));
+        }
         "fig4" | "fig5" | "fig6" => {
+            o.reject_params(cmd)?;
             let cfg = device_config(o)?;
             let size = o.size.unwrap_or(WorkloadSize::Paper);
+            let cells = classic_grid(cfg.num_cus);
             eprintln!(
-                "running {} scenarios × {} apps at {size:?} scale on {} CUs ({} jobs) ...",
+                "running {} cells ({} apps × {} scenarios) at {size:?} scale on {} CUs \
+                 ({} jobs) ...",
+                cells.len(),
+                cells.len() / Scenario::ALL.len(),
                 Scenario::ALL.len(),
-                App::ALL.len(),
                 cfg.num_cus,
                 o.jobs()
             );
-            let runner = o.runner(cfg.clone(), size, false);
-            let cells = runner.run_cells(&full_grid(cfg.num_cus));
+            let runner = o.runner(cfg, size, false);
+            let cells = runner.run_cells(&cells);
             emit_report(&cells, o)?;
             let results = into_run_results(cells);
             let table = match cmd {
@@ -294,38 +410,116 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
             };
             human(o, &table.render());
         }
-        "sweep" => {
-            let cus = [4u32, 8, 16, 32, 64];
-            let size = o.size.unwrap_or(WorkloadSize::Paper);
-            eprintln!("scaling sweep over {cus:?} CUs ({} jobs) ...", o.jobs());
-            let runner = o.runner(device_config(o)?, size, false);
-            let results = runner.run_cells(&scaling_cells(&cus));
-            emit_report(&results, o)?;
-            let rows = scaling_rows(&cus, &results);
-            let header = vec!["CUs".to_string(), "RSP".to_string(), "sRSP".to_string()];
-            let body: Vec<Vec<String>> = rows
-                .iter()
-                .map(|(n, r, s)| vec![n.to_string(), format!("{r:.3}"), format!("{s:.3}")])
-                .collect();
-            human(
-                o,
-                &format!(
-                    "Scalability — geomean speedup vs Baseline at equal CU count\n{}",
-                    format_table(&header, &body)
-                ),
-            );
-        }
+        "sweep" => match o.axis {
+            SweepAxis::Cus => {
+                o.reject_params("sweep --axis cus")?;
+                let cus = [4u32, 8, 16, 32, 64];
+                let size = o.size.unwrap_or(WorkloadSize::Paper);
+                eprintln!("scaling sweep over {cus:?} CUs ({} jobs) ...", o.jobs());
+                let runner = o.runner(device_config(o)?, size, false);
+                let results = runner.run_cells(&scaling_cells(&cus));
+                emit_report(&results, o)?;
+                let rows = scaling_rows(&cus, &results);
+                let header = vec!["CUs".to_string(), "RSP".to_string(), "sRSP".to_string()];
+                let body: Vec<Vec<String>> = rows
+                    .iter()
+                    .map(|(n, r, s)| vec![n.to_string(), format!("{r:.3}"), format!("{s:.3}")])
+                    .collect();
+                human(
+                    o,
+                    &format!(
+                        "Scalability — geomean speedup vs Baseline at equal CU count\n{}",
+                        format_table(&header, &body)
+                    ),
+                );
+            }
+            SweepAxis::RemoteRatio => {
+                let app = o.app.unwrap_or(registry::STRESS);
+                if !app.kernel().params().iter().any(|p| p.key == "remote_ratio") {
+                    return Err(format!(
+                        "workload '{app}' has no remote_ratio parameter (try --app stress)"
+                    ));
+                }
+                // Surface bad --param keys as a clean CLI error before the
+                // runner (which would panic inside a worker thread).
+                Params::resolve(app.kernel().params(), &o.params)
+                    .map_err(|e| format!("{}: {e}", app.name()))?;
+                let cfg = device_config(o)?;
+                let size = o.size.unwrap_or(WorkloadSize::Paper);
+                let points = match &o.ratios {
+                    Some(p) => p.clone(),
+                    None => RATIO_POINTS.to_vec(),
+                };
+                eprintln!(
+                    "remote-ratio sweep on {} at {size:?} scale, {} CUs: r = {points:?} \
+                     ({} jobs) ...",
+                    app.name(),
+                    cfg.num_cus,
+                    o.jobs()
+                );
+                let runner = o.runner(cfg, size, true);
+                let results = runner.run_remote_ratio_sweep(app, &points);
+                emit_report(&results, o)?;
+                let failures = print_validation(&results, o);
+                let cycles_of = |scenario: Scenario, r: f64| {
+                    results
+                        .iter()
+                        .find(|c| c.cell.scenario == scenario && c.remote_ratio == Some(r))
+                        .map(|c| c.result.stats.cycles as f64)
+                        .expect("sweep grid covers every (scenario, r)")
+                };
+                let body: Vec<Vec<String>> = points
+                    .iter()
+                    .map(|&r| {
+                        let base = cycles_of(Scenario::StealOnly, r);
+                        vec![
+                            r.to_string(),
+                            format!("{}", base as u64),
+                            format!("{:.3}", base / cycles_of(Scenario::Rsp, r)),
+                            format!("{:.3}", base / cycles_of(Scenario::Srsp, r)),
+                        ]
+                    })
+                    .collect();
+                let header = vec![
+                    "r".to_string(),
+                    "steal cycles".to_string(),
+                    "rsp ×".to_string(),
+                    "srsp ×".to_string(),
+                ];
+                human(
+                    o,
+                    &format!(
+                        "Remote-ratio sweep — {} — speedup vs global-scope stealing \
+                         (steal = 1.0)\n{}",
+                        app.display(),
+                        format_table(&header, &body)
+                    ),
+                );
+                if failures > 0 {
+                    return Err(format!("{failures} oracle failures in the remote-ratio sweep"));
+                }
+            }
+        },
         "run" => {
             let cfg = device_config(o)?;
+            let app = o.app.unwrap_or(registry::PRK);
             let size = o.size.unwrap_or(WorkloadSize::Paper);
-            let preset = load_preset(o, size)?;
+            let preset = load_preset(o, app, size)?;
+            let shape = match &preset.graph {
+                Some(g) => format!(" (n={}, m={})", g.n, g.num_edges()),
+                None => String::new(),
+            };
+            let overrides = preset.params.overrides_display();
+            let overrides = if overrides.is_empty() {
+                String::new()
+            } else {
+                format!(" [{overrides}]")
+            };
             eprintln!(
-                "running {} under {} on {} CUs (n={}, m={}) ...",
-                o.app.name(),
+                "running {}{overrides} under {} on {} CUs{shape} ...",
+                app.name(),
                 o.scenario,
                 cfg.num_cus,
-                preset.graph.n,
-                preset.graph.num_edges()
             );
             let r = run_one(&cfg, &preset, o.scenario);
             println!(
@@ -335,6 +529,7 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
             println!("{}", r.stats);
         }
         "validate" => {
+            o.reject_params(cmd)?;
             let cfg = device_config(o)?;
             let size = o.size.unwrap_or(WorkloadSize::Paper);
             let runner = o.runner(cfg.clone(), size, true);
@@ -347,6 +542,7 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
             human(o, "all validations passed");
         }
         "ci-smoke" => {
+            o.reject_params(cmd)?;
             let mut cfg = device_config(o)?;
             if o.cus.is_none() && o.config.is_none() {
                 // Small device so the gate stays fast in CI, but still
@@ -358,10 +554,10 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
             let jobs = o.jobs();
             let cells = full_grid(cfg.num_cus);
             eprintln!(
-                "ci-smoke: {} cells ({} apps × {} scenarios) at {size:?} scale on {} CUs, \
+                "ci-smoke: {} cells ({} workloads × {} scenarios) at {size:?} scale on {} CUs, \
                  {jobs} job(s) ...",
                 cells.len(),
-                App::ALL.len(),
+                registry::all().count(),
                 Scenario::ALL.len(),
                 cfg.num_cus
             );

@@ -226,7 +226,12 @@ fn record_pa(m: &mut MemSystem, target: u32, addr: Addr, at: Cycle) -> Cycle {
     }
     match m.cu_mut(target).pa_tbl.record(addr) {
         PaRecord::Recorded => t,
-        PaRecord::NeedsInvalidate => unreachable!("table was cleared above"),
+        // Only reachable with `pa_tbl_entries = 0`: nothing can ever be
+        // recorded, but the eager invalidate above already discharged the
+        // obligation — the target's next access misses to the L2 and
+        // reads fresh data — so skipping the record is correct (the table
+        // degenerates to "promote eagerly, every time").
+        PaRecord::NeedsInvalidate => t,
     }
 }
 
@@ -444,8 +449,12 @@ fn remote_op_srsp(
     if order.acquires() {
         // §4.2 optimization: if the local sharer runs on *this* CU the
         // LR-TBL hit is local and no broadcast is needed (same L1 ⇒ its
-        // updates are already visible here).
-        let own_hit = m.cu(cu).lr_tbl.lookup(addr).is_some();
+        // updates are already visible here). Only a *definite* entry may
+        // take this shortcut: a sticky-overflowed table answers every
+        // address conservatively (`Some(None)`), and skipping the
+        // broadcast on that answer would leave the true local sharer's
+        // sFIFO undrained — a stale read, not just a slow one.
+        let own_hit = matches!(m.cu(cu).lr_tbl.lookup(addr), Some(Some(_)));
         let mut t_promote = at + 1; // own LR-TBL probe
         if !own_hit {
             m.stats.selective_flush_requests += 1;
@@ -722,6 +731,136 @@ mod tests {
             m.stats.selective_flush_requests, 0,
             "same-CU local sharer: §4.2 optimization skips the broadcast"
         );
+    }
+
+    const LOCK2: Addr = 0x3000;
+    const DATA2: Addr = 0x4000;
+
+    fn srsp_sys_with(lr: u32, pa: u32) -> MemSystem {
+        MemSystem::new(DeviceConfig {
+            lr_tbl_entries: lr,
+            pa_tbl_entries: pa,
+            ..DeviceConfig::small()
+        })
+    }
+
+    #[test]
+    fn lr_tbl_overflow_conservative_drain_stays_correct() {
+        // Capacity 1: the second wg-scope release displaces the first;
+        // the displaced address must still be found (conservative "drain
+        // everything") by a remote acquire.
+        let mut m = srsp_sys_with(1, 16);
+        let p = Protocol::Srsp;
+        let t = m.l1_write(0, DATA, 4, 41, 0);
+        let t = sync_op(
+            &mut m, p, 0, LOCK, AtomicOp::Store, MemOrder::Release, Scope::Wg, 1, 0, t,
+        )
+        .done;
+        let t = m.l1_write(0, DATA2, 4, 42, t);
+        let t = sync_op(
+            &mut m, p, 0, LOCK2, AtomicOp::Store, MemOrder::Release, Scope::Wg, 1, 0, t,
+        )
+        .done;
+        assert_eq!(m.stats.lr_tbl_overflows, 1, "capacity-1 table must overflow");
+        assert!(m.cu(0).lr_tbl.has_overflowed());
+
+        // LOCK carried the older ticket and was displaced; the remote
+        // acquire must still drain CU0 and observe both the lock and the
+        // guarded data.
+        let out = remote_op(&mut m, p, 1, LOCK, AtomicOp::Cas, MemOrder::Acquire, 2, 1, t);
+        assert_eq!(out.value, 1, "released lock must be visible");
+        assert!(m.stats.selective_flush_drains >= 1, "overflow must drain, not nop");
+        let (v, _) = m.l1_read(1, DATA, 4, out.done);
+        assert_eq!(v, 41, "displaced entry must not lose the release's data");
+    }
+
+    #[test]
+    fn requester_side_overflow_must_not_skip_the_broadcast() {
+        // lr_tbl_entries = 0: every table is sticky-overflowed from the
+        // first release. The requester's own conservative `Some(None)`
+        // answer must NOT be mistaken for "the local sharer is me" — the
+        // true sharer (CU0) still has the lock value in its sFIFO, and
+        // skipping the selective-flush broadcast would read it stale.
+        let mut m = srsp_sys_with(0, 16);
+        let p = Protocol::Srsp;
+        let t = m.l1_write(0, DATA, 4, 41, 0);
+        let t = sync_op(
+            &mut m, p, 0, LOCK, AtomicOp::Store, MemOrder::Release, Scope::Wg, 1, 0, t,
+        )
+        .done;
+        // Overflow the *requester's* table too (a release on an unrelated
+        // variable).
+        let t = m.l1_write(1, DATA2, 4, 9, t);
+        let t = sync_op(
+            &mut m, p, 1, LOCK2, AtomicOp::Store, MemOrder::Release, Scope::Wg, 1, 0, t,
+        )
+        .done;
+        assert!(m.cu(1).lr_tbl.has_overflowed());
+        assert!(m.stats.lr_tbl_overflows >= 2);
+
+        let out = remote_op(&mut m, p, 1, LOCK, AtomicOp::Cas, MemOrder::Acquire, 2, 1, t);
+        assert_eq!(
+            m.stats.selective_flush_requests, 1,
+            "conservative own-table answer must still broadcast"
+        );
+        assert_eq!(out.value, 1, "CAS must see CU0's released lock");
+        let (v, _) = m.l1_read(1, DATA, 4, out.done);
+        assert_eq!(v, 41, "CU0's sFIFO must have been drained");
+    }
+
+    #[test]
+    fn pa_tbl_overflow_eager_invalidate_keeps_correctness() {
+        // Capacity 1: arming a second address at a full table forces the
+        // eager local invalidate (discharging the first obligation) and
+        // then records the second. Both locks' data must stay visible.
+        let mut m = srsp_sys_with(16, 1);
+        let p = Protocol::Srsp;
+        let t = m.l1_write(1, DATA, 4, 7, 0);
+        let t = remote_op(&mut m, p, 1, LOCK, AtomicOp::Store, MemOrder::Release, 1, 0, t).done;
+        let t = m.l1_write(1, DATA2, 4, 9, t);
+        let t = remote_op(&mut m, p, 1, LOCK2, AtomicOp::Store, MemOrder::Release, 1, 0, t).done;
+        // Each of the 3 other CUs had LOCK armed and overflowed on LOCK2.
+        assert_eq!(m.stats.pa_tbl_overflows, 3);
+        assert!(m.cu(0).pa_tbl.needs_promotion(LOCK2));
+        assert!(
+            !m.cu(0).pa_tbl.needs_promotion(LOCK),
+            "eager invalidate discharged the first obligation"
+        );
+
+        // LOCK2: promoted via the PA-TBL hit.
+        let out = sync_op(
+            &mut m, p, 0, LOCK2, AtomicOp::Load, MemOrder::Acquire, Scope::Wg, 0, 0, t,
+        );
+        assert_eq!(out.value, 1);
+        let (v, t) = m.l1_read(0, DATA2, 4, out.done);
+        assert_eq!(v, 9);
+        // LOCK: obligation was discharged by the eager invalidate — the
+        // acquire stays local but misses to the L2 and reads fresh.
+        let out = sync_op(
+            &mut m, p, 0, LOCK, AtomicOp::Load, MemOrder::Acquire, Scope::Wg, 0, 0, t,
+        );
+        assert_eq!(out.value, 1);
+        let (v, _) = m.l1_read(0, DATA, 4, out.done);
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn zero_capacity_pa_tbl_promotes_eagerly() {
+        // pa_tbl_entries = 0: nothing can be deferred; every arming
+        // degenerates to an immediate invalidate at the target. Must not
+        // panic, must count overflows, must stay correct.
+        let mut m = srsp_sys_with(16, 0);
+        let p = Protocol::Srsp;
+        let t = m.l1_write(1, DATA, 4, 5, 0);
+        let t = remote_op(&mut m, p, 1, LOCK, AtomicOp::Store, MemOrder::Release, 1, 0, t).done;
+        assert_eq!(m.stats.pa_tbl_overflows, 3, "one per non-requesting CU");
+        assert!(m.cu(0).pa_tbl.is_empty());
+        let out = sync_op(
+            &mut m, p, 0, LOCK, AtomicOp::Load, MemOrder::Acquire, Scope::Wg, 0, 0, t,
+        );
+        assert_eq!(out.value, 1, "eager invalidate must publish the release");
+        let (v, _) = m.l1_read(0, DATA, 4, out.done);
+        assert_eq!(v, 5);
     }
 
     #[test]

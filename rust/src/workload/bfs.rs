@@ -1,0 +1,259 @@
+//! Breadth-first search, ported through the [`Kernel`] registry.
+//!
+//! Bottom-up level synchronization: every round activates the chunks
+//! that still contain *unvisited* vertices; an unvisited vertex scans
+//! its neighbors and takes `min(depth) + 1` (min-plus over unit weights,
+//! reusing the SSSP tile math). This exercises a sync pattern the three
+//! §5.1 graph apps do not: early rounds are dominated by wasted probes
+//! on chunks whose wavefront has not arrived — a shrinking, strongly
+//! skewed useful-work distribution that concentrates real work on the
+//! frontier owners while everyone else steals.
+//!
+//! Host-loop termination is progress-based: the run ends when every
+//! vertex is visited or a round makes no progress (disconnected
+//! remainder).
+
+use super::driver::Workload;
+use super::engine::{upload_graph, AppLayout, DIST_INF, KIND_BFS};
+use super::graph::Graph;
+use super::registry::{Instance, Kernel, ParamSpec, Params, Prepared, WorkloadPreset, WorkloadSize};
+use crate::mem::{Addr, BackingStore, MemAlloc};
+use std::collections::BTreeSet;
+
+/// Host-side BFS state.
+pub struct Bfs {
+    layout: AppLayout,
+    depth: Addr,
+    n: u32,
+    chunk: u32,
+    /// BFS level the coming round completes (engine's write gate).
+    level: u32,
+    /// Unvisited count after the previous round (progress detector).
+    prev_unvisited: Option<u32>,
+}
+
+impl Bfs {
+    pub fn setup(
+        g: &Graph,
+        alloc: &mut MemAlloc,
+        backing: &mut BackingStore,
+        chunk: u32,
+        source: u32,
+    ) -> Self {
+        let (row_ptr, col, weight) = upload_graph(g, alloc, backing);
+        let n = g.n;
+        let depth = alloc.alloc(n as u64 * 4);
+        for v in 0..n {
+            backing.write_u32(depth + v as u64 * 4, if v == source { 0 } else { DIST_INF });
+        }
+        let layout = AppLayout {
+            row_ptr,
+            col,
+            weight,
+            a0: depth,
+            a1: 0,
+            a2: 0,
+            changed: 0,
+            chunk,
+            n,
+            damping_bits: 0,
+            aux: 0,
+            high_water: alloc.high_water(),
+        };
+        Bfs {
+            layout,
+            depth,
+            n,
+            chunk,
+            level: 1,
+            prev_unvisited: None,
+        }
+    }
+
+    pub fn result(&self, backing: &BackingStore) -> Vec<u32> {
+        (0..self.n)
+            .map(|v| backing.read_u32(self.depth + v as u64 * 4))
+            .collect()
+    }
+
+    /// Queue-based BFS oracle (DIST_INF for unreachable).
+    pub fn oracle(g: &Graph, source: u32) -> Vec<u32> {
+        let mut depth = vec![DIST_INF; g.n as usize];
+        depth[source as usize] = 0;
+        let mut queue = std::collections::VecDeque::from([source]);
+        while let Some(v) = queue.pop_front() {
+            for (u, _) in g.neighbors(v) {
+                if depth[u as usize] == DIST_INF {
+                    depth[u as usize] = depth[v as usize] + 1;
+                    queue.push_back(u);
+                }
+            }
+        }
+        depth
+    }
+}
+
+impl Workload for Bfs {
+    fn kinds(&self) -> Vec<u32> {
+        vec![KIND_BFS]
+    }
+
+    fn layout(&self) -> AppLayout {
+        self.layout.clone()
+    }
+
+    fn begin_round(&mut self, backing: &mut BackingStore) -> Option<Vec<u32>> {
+        let mut chunks = BTreeSet::new();
+        let mut unvisited = 0u32;
+        for v in 0..self.n {
+            if backing.read_u32(self.depth + v as u64 * 4) == DIST_INF {
+                unvisited += 1;
+                chunks.insert(v / self.chunk);
+            }
+        }
+        // Done: everything visited, or no progress (disconnected rest).
+        if unvisited == 0 || self.prev_unvisited == Some(unvisited) {
+            return None;
+        }
+        self.prev_unvisited = Some(unvisited);
+        self.layout.aux = self.level;
+        Some(chunks.into_iter().collect())
+    }
+
+    fn end_round(&mut self, _backing: &mut BackingStore) {
+        self.level += 1;
+    }
+
+    fn name(&self) -> &'static str {
+        "BFS"
+    }
+}
+
+/// Registry entry.
+pub struct BfsKernel;
+
+impl Kernel for BfsKernel {
+    fn name(&self) -> &'static str {
+        "bfs"
+    }
+
+    fn display(&self) -> &'static str {
+        "BFS"
+    }
+
+    fn summary(&self) -> &'static str {
+        "breadth-first search, bottom-up level synchronization"
+    }
+
+    fn oracle(&self) -> &'static str {
+        "exact (queue BFS levels)"
+    }
+
+    fn params(&self) -> &'static [ParamSpec] {
+        &[
+            ParamSpec {
+                key: "source",
+                default: 0.0,
+                help: "source vertex",
+            },
+            ParamSpec {
+                key: "chunk",
+                default: 8.0,
+                help: "vertices per task chunk",
+            },
+        ]
+    }
+
+    fn prepare(&self, size: WorkloadSize, seed: u64, _params: &mut Params) -> Prepared {
+        // Low-rewiring small world: long shortest paths (many BFS levels)
+        // with a few shortcuts that skew the wavefront.
+        // max_rounds covers the zero-shortcut ring-lattice worst case
+        // (diameter n/k), so any derived seed converges.
+        let (graph, max_rounds) = match size {
+            WorkloadSize::Paper => (Graph::small_world(2048, 6, 0.05, seed), 400),
+            WorkloadSize::Tiny => (Graph::small_world(192, 4, 0.05, seed), 64),
+        };
+        Prepared {
+            graph: Some(graph),
+            max_rounds,
+        }
+    }
+
+    fn instantiate(&self, preset: &WorkloadPreset) -> Instance {
+        let g = preset.graph();
+        let source = preset.params.get_u32("source").min(g.n.saturating_sub(1));
+        let mut alloc = MemAlloc::new();
+        let mut image = BackingStore::new();
+        let wl = Bfs::setup(
+            g,
+            &mut alloc,
+            &mut image,
+            preset.params.get_u32("chunk"),
+            source,
+        );
+        let oracle = Bfs::oracle(g, source);
+        let (depth, n) = (wl.depth, wl.n);
+        Instance {
+            workload: Box::new(wl),
+            image,
+            check: Box::new(move |mem| {
+                for v in 0..n {
+                    let got = mem.read_u32(depth + v as u64 * 4);
+                    if got != oracle[v as usize] {
+                        return Err(format!(
+                            "BFS depth[{v}] = {got}, oracle {}",
+                            oracle[v as usize]
+                        ));
+                    }
+                }
+                Ok(())
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DeviceConfig, Scenario};
+    use crate::workload::driver::run_scenario_seeded;
+    use crate::workload::engine::NativeMath;
+
+    #[test]
+    fn oracle_on_path_graph() {
+        let g = Graph::from_edges(4, &[(0, 1, 5), (1, 2, 3), (2, 3, 2)]);
+        assert_eq!(Bfs::oracle(&g, 0), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn simulated_bfs_exact_all_scenarios() {
+        let g = Graph::small_world(96, 4, 0.1, 11);
+        let oracle = Bfs::oracle(&g, 0);
+        for scenario in Scenario::ALL {
+            let mut alloc = MemAlloc::new();
+            let mut image = BackingStore::new();
+            let mut bfs = Bfs::setup(&g, &mut alloc, &mut image, 8, 0);
+            let cfg = DeviceConfig::small();
+            let (run, final_mem) =
+                run_scenario_seeded(&cfg, scenario, &mut bfs, NativeMath, 64, image);
+            assert!(run.converged, "{scenario:?}: BFS must converge");
+            assert_eq!(bfs.result(&final_mem), oracle, "{scenario:?}");
+        }
+    }
+
+    #[test]
+    fn disconnected_component_stays_inf_and_converges() {
+        let g = Graph::from_edges(5, &[(0, 1, 1), (1, 2, 1), (3, 4, 1)]);
+        let mut alloc = MemAlloc::new();
+        let mut image = BackingStore::new();
+        let mut bfs = Bfs::setup(&g, &mut alloc, &mut image, 2, 0);
+        let cfg = DeviceConfig::small();
+        let (run, mem) =
+            run_scenario_seeded(&cfg, Scenario::Srsp, &mut bfs, NativeMath, 32, image);
+        assert!(run.converged, "no-progress detector must end the loop");
+        let d = bfs.result(&mem);
+        assert_eq!(&d[..3], &[0, 1, 2]);
+        assert_eq!(d[3], DIST_INF);
+        assert_eq!(d[4], DIST_INF);
+    }
+}

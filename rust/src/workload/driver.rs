@@ -16,6 +16,12 @@ use crate::sim::Stats;
 
 /// A workload that runs in rounds of kernel launches (the Pannotia apps'
 /// host loops).
+///
+/// The trait's required methods describe the host loop; the provided
+/// methods are hooks with the classic work-stealing defaults, overridden
+/// by workloads that need a different kernel shape
+/// ([`crate::workload::prodcons`]) or a different task-placement policy
+/// ([`crate::workload::stress`]).
 pub trait Workload {
     /// Compute kinds launched back-to-back each round (MIS: select then
     /// exclude; others: one).
@@ -29,25 +35,30 @@ pub trait Workload {
     fn end_round(&mut self, backing: &mut BackingStore);
     /// Human-readable name.
     fn name(&self) -> &'static str;
-}
 
-/// Applications evaluated in §5 (naming follows the paper).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum App {
-    PageRank,
-    Sssp,
-    Mis,
-}
+    /// Build the per-round kernel for one compute kind. Default: the
+    /// shared work-stealing kernel ([`build_kernel`]).
+    fn kernel(
+        &self,
+        deques: &DequeLayout,
+        scenario: Scenario,
+        kind: u32,
+        ctrl: crate::mem::Addr,
+    ) -> Program {
+        build_kernel(deques, scenario, kind, ctrl)
+    }
 
-impl App {
-    pub const ALL: [App; 3] = [App::PageRank, App::Sssp, App::Mis];
+    /// Assign this round's active chunks to owning queues. Default:
+    /// stable block ownership ([`distribute`]).
+    fn place(&self, active: &[u32], num_queues: u32, total_chunks: u32) -> Vec<Vec<u32>> {
+        distribute(active, num_queues, total_chunks)
+    }
 
-    pub fn name(self) -> &'static str {
-        match self {
-            App::PageRank => "PRK",
-            App::Sssp => "SSSP",
-            App::Mis => "MIS",
-        }
+    /// Per-queue deque capacity. Default: the worst case of an even
+    /// split; placement policies that concentrate tasks (the stress
+    /// kernel's hot set) must return a larger bound.
+    fn queue_capacity(&self, total_chunks: u32, num_queues: u32) -> u32 {
+        total_chunks.div_ceil(num_queues).max(4)
     }
 }
 
@@ -243,7 +254,7 @@ pub fn run_scenario_seeded<M: TileMath>(
         let l = workload.layout();
         l.n.div_ceil(l.chunk)
     };
-    let capacity = total_chunks.div_ceil(num_wgs).max(4);
+    let capacity = workload.queue_capacity(total_chunks, num_wgs);
     let mut alloc_probe = MemAlloc::new();
     // The workload allocated its arrays already (from the same address
     // space origin); deques go above the high-water mark. The caller
@@ -258,7 +269,7 @@ pub fn run_scenario_seeded<M: TileMath>(
     let kinds = workload.kinds();
     let programs: Vec<Program> = kinds
         .iter()
-        .map(|&k| build_kernel(&deques, scenario, k, ctrl))
+        .map(|&k| workload.kernel(&deques, scenario, k, ctrl))
         .collect();
 
     let mut engine = WorkEngine::new(math, workload.layout());
@@ -270,7 +281,7 @@ pub fn run_scenario_seeded<M: TileMath>(
             break;
         };
         engine.layout = workload.layout();
-        let per_queue = distribute(&active, num_wgs, total_chunks);
+        let per_queue = workload.place(&active, num_wgs, total_chunks);
         for prog in &programs {
             for (q, tasks) in per_queue.iter().enumerate() {
                 deques.fill(&mut dev.mem.backing, q as u32, tasks);

@@ -30,6 +30,10 @@ pub const KIND_PAGERANK: u32 = 1;
 pub const KIND_SSSP: u32 = 2;
 pub const KIND_MIS_SELECT: u32 = 3;
 pub const KIND_MIS_EXCLUDE: u32 = 4;
+/// Bottom-up level-synchronous BFS (min-plus over unit weights).
+pub const KIND_BFS: u32 = 5;
+/// Asymmetry-stress cell update (see [`crate::workload::stress`]).
+pub const KIND_STRESS: u32 = 6;
 
 /// Distance "infinity" for SSSP (fits i32 so XLA i32 math is exact; large
 /// enough that INF + max_weight never wraps).
@@ -136,6 +140,8 @@ pub struct AppLayout {
     pub n: u32,
     /// PageRank damping factor bits (f32).
     pub damping_bits: u32,
+    /// Workload-specific auxiliary word (stress: pad reads per task).
+    pub aux: u32,
     /// Allocator high-water mark after the app's arrays (the scenario
     /// runner places the deques above it).
     pub high_water: u64,
@@ -340,6 +346,85 @@ impl<M: TileMath> WorkEngine<M> {
         items
     }
 
+    /// Bottom-up level-synchronous BFS task: an unvisited v scans its
+    /// neighbors' depths and takes `min(depth[u]) + 1` (min-plus over
+    /// unit weights, via the same tile math as SSSP), but the write is
+    /// **level-gated**: only accepted when the candidate equals the
+    /// current level (`layout.aux`). The gate is load-bearing — without
+    /// it, v could read a *non-optimal* neighbor's freshly-written depth
+    /// mid-round and store an overestimate that the write-once "unvisited
+    /// only" activation never corrects. With the gate each round
+    /// completes exactly one BFS level (a depth-(k-1) entry can only have
+    /// been written in an earlier round, where it is exact by induction).
+    fn bfs(&mut self, mem: &mut MemAccess<'_>, task: u64) -> u64 {
+        let l = self.layout.clone();
+        let (lo, hi) = self.chunk_range(task);
+        let mut items = 0u64;
+
+        let mut rows_v: Vec<u32> = Vec::new();
+        let mut tile: Vec<i32> = Vec::new();
+        for v in lo..hi {
+            // a0 = depth array; only unvisited vertices do work.
+            if mem.read_u32(l.a0 + v as u64 * 4) != DIST_INF {
+                continue;
+            }
+            let rp0 = mem.read_u32(l.row_ptr + v as u64 * 4);
+            let rp1 = mem.read_u32(l.row_ptr + v as u64 * 4 + 4);
+            let deg = (rp1 - rp0) as usize;
+            items += deg as u64;
+            let nrows = deg.div_ceil(K_TILE).max(1);
+            for r in 0..nrows {
+                rows_v.push(v);
+                let mut slots = [DIST_INF as i32; K_TILE];
+                for k in 0..K_TILE {
+                    let e = rp0 as usize + r * K_TILE + k;
+                    if e < rp1 as usize {
+                        let u = mem.read_u32(l.col + e as u64 * 4);
+                        let du = mem.read_u32(l.a0 + u as u64 * 4);
+                        slots[k] = (du.min(DIST_INF) as i32).saturating_add(1);
+                    }
+                }
+                tile.extend_from_slice(&slots);
+            }
+        }
+        if rows_v.is_empty() {
+            return items;
+        }
+        let cands = self.math.sssp_rows(&tile, rows_v.len());
+        let mut best: std::collections::HashMap<u32, i32> = Default::default();
+        for (row, &v) in rows_v.iter().enumerate() {
+            let e = best.entry(v).or_insert(i32::MAX);
+            *e = (*e).min(cands[row]);
+        }
+        for v in lo..hi {
+            let Some(&cand) = best.get(&v) else { continue };
+            if cand as u32 == l.aux {
+                mem.write_u32(l.a0 + v as u64 * 4, cand as u32);
+            }
+        }
+        items
+    }
+
+    /// Asymmetry-stress task: task `c` (one cell per task) bumps its own
+    /// counter `cells[c]` and xors `aux` words of the shared read-only
+    /// pad into `scratch[c]` — the private locality that global-scope
+    /// invalidation destroys and selective promotion preserves. Writes
+    /// only the task's own entries: race-free under every scenario.
+    fn stress(&mut self, mem: &mut MemAccess<'_>, task: u64) -> u64 {
+        let l = self.layout.clone();
+        let c = task as u32;
+        // a1 = pad (read-only), a0 = cells, a2 = scratch.
+        let mut acc = 0u32;
+        for k in 0..l.aux {
+            let idx = (c.wrapping_add(k)) % l.n.max(1);
+            acc ^= mem.read_u32(l.a1 + idx as u64 * 4);
+        }
+        let v = mem.read_u32(l.a0 + c as u64 * 4);
+        mem.write_u32(l.a0 + c as u64 * 4, v.wrapping_add(1));
+        mem.write_u32(l.a2 + c as u64 * 4, acc);
+        (l.aux + 2) as u64
+    }
+
     /// MIS merge/exclude phase (separate launch): undecided v joins if its
     /// newflag is set, leaves if any neighbor's newflag is set. Newflags
     /// are written only by the *select* launch and cleared only by the
@@ -380,6 +465,8 @@ impl<M: TileMath> ComputeEngine for WorkEngine<M> {
             KIND_SSSP => self.sssp(mem, arg),
             KIND_MIS_SELECT => self.mis_select(mem, arg),
             KIND_MIS_EXCLUDE => self.mis_exclude(mem, arg),
+            KIND_BFS => self.bfs(mem, arg),
+            KIND_STRESS => self.stress(mem, arg),
             other => panic!("unknown compute kind {other}"),
         }
     }

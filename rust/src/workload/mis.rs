@@ -14,6 +14,7 @@ use super::engine::{
     MIS_UNDECIDED,
 };
 use super::graph::Graph;
+use super::registry::{Instance, Kernel, ParamSpec, Params, Prepared, WorkloadPreset, WorkloadSize};
 use crate::mem::{Addr, BackingStore, MemAlloc};
 use std::collections::BTreeSet;
 
@@ -49,6 +50,7 @@ impl Mis {
             chunk,
             n,
             damping_bits: 0,
+            aux: 0,
             high_water: alloc.high_water(),
         };
         Mis {
@@ -155,6 +157,69 @@ impl Workload for Mis {
 
     fn name(&self) -> &'static str {
         "MIS"
+    }
+}
+
+/// Registry entry (§5.1: MIS on a `caidaRouterLevel`-class power-law
+/// graph).
+pub struct MisKernel;
+
+impl Kernel for MisKernel {
+    fn name(&self) -> &'static str {
+        "mis"
+    }
+
+    fn display(&self) -> &'static str {
+        "MIS"
+    }
+
+    fn summary(&self) -> &'static str {
+        "maximal independent set, two-phase deterministic Luby"
+    }
+
+    fn oracle(&self) -> &'static str {
+        "exact (greedy over priorities) + validity"
+    }
+
+    fn params(&self) -> &'static [ParamSpec] {
+        &[ParamSpec {
+            key: "chunk",
+            default: 8.0,
+            help: "vertices per task chunk",
+        }]
+    }
+
+    fn prepare(&self, size: WorkloadSize, seed: u64, _params: &mut Params) -> Prepared {
+        let (graph, max_rounds) = match size {
+            WorkloadSize::Paper => (Graph::power_law(4096, 3, seed), 64),
+            WorkloadSize::Tiny => (Graph::power_law(256, 2, seed), 32),
+        };
+        Prepared {
+            graph: Some(graph),
+            max_rounds,
+        }
+    }
+
+    fn instantiate(&self, preset: &WorkloadPreset) -> Instance {
+        let g = preset.graph().clone();
+        let mut alloc = MemAlloc::new();
+        let mut image = BackingStore::new();
+        let wl = Mis::setup(&g, &mut alloc, &mut image, preset.params.get_u32("chunk"));
+        let oracle = Mis::oracle(&g);
+        let (state, n) = (wl.state, wl.n);
+        Instance {
+            workload: Box::new(wl),
+            image,
+            check: Box::new(move |mem| {
+                let got: Vec<u32> = (0..n).map(|v| mem.read_u32(state + v as u64 * 4)).collect();
+                Mis::validate_mis(&g, &got)?;
+                if got == oracle {
+                    Ok(())
+                } else {
+                    Err("MIS differs from the deterministic-Luby oracle".into())
+                }
+            }),
+        }
     }
 }
 

@@ -11,17 +11,31 @@
 //!   AOT-compiled XLA artifact via [`crate::runtime`]).
 //! * [`pagerank`] / [`sssp`] / [`mis`] — the three applications with their
 //!   host drivers and native oracles.
+//! * [`bfs`] / [`prodcons`] — two further kernels exercising sync
+//!   patterns the graph trio does not (level-synchronous wavefronts,
+//!   intra-launch flag handoff).
+//! * [`stress`] — the asymmetry-stress family: a synthetic
+//!   sharer/stealer kernel with a tunable remote-access ratio, the
+//!   `remote-ratio` sweep axis.
+//! * [`registry`] — the pluggable workload table: every kernel
+//!   self-describes (name, oracle, default chunking, tunable params) and
+//!   the runner/CLI/presets/reports resolve through it.
 //! * [`driver`] — the shared scenario runner (queue fill, kernel launches,
 //!   convergence loops).
 
+pub mod bfs;
 pub mod deque;
 pub mod driver;
 pub mod engine;
 pub mod graph;
 pub mod mis;
 pub mod pagerank;
+pub mod prodcons;
+pub mod registry;
 pub mod sssp;
+pub mod stress;
 
-pub use driver::{run_scenario, App, RunResult};
+pub use driver::{run_scenario, RunResult};
 pub use engine::{NativeMath, TileMath, WorkEngine, K_TILE, V_TILE};
 pub use graph::Graph;
+pub use registry::{Kernel, Params, WorkloadId, WorkloadPreset, WorkloadSize};

@@ -10,6 +10,7 @@
 use super::driver::Workload;
 use super::engine::{upload_graph, AppLayout, KIND_PAGERANK, K_TILE};
 use super::graph::Graph;
+use super::registry::{Instance, Kernel, ParamSpec, Params, Prepared, WorkloadPreset, WorkloadSize};
 use crate::mem::{Addr, BackingStore, MemAlloc};
 
 pub const DAMPING: f32 = 0.85;
@@ -60,6 +61,7 @@ impl PageRank {
             chunk,
             n,
             damping_bits: DAMPING.to_bits(),
+            aux: 0,
             high_water: alloc.high_water(),
         };
         PageRank {
@@ -142,6 +144,94 @@ impl Workload for PageRank {
 
     fn name(&self) -> &'static str {
         "PRK"
+    }
+}
+
+/// Registry entry (§5.1: PRK on a `cond-mat-2003`-class small-world
+/// graph).
+pub struct PageRankKernel;
+
+impl Kernel for PageRankKernel {
+    fn name(&self) -> &'static str {
+        "prk"
+    }
+
+    fn display(&self) -> &'static str {
+        "PRK"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["pagerank"]
+    }
+
+    fn summary(&self) -> &'static str {
+        "PageRank, pull formulation with double-buffered contributions"
+    }
+
+    fn oracle(&self) -> &'static str {
+        "L1-norm < 1e-3 vs tiled power iteration"
+    }
+
+    fn params(&self) -> &'static [ParamSpec] {
+        &[
+            ParamSpec {
+                key: "iters",
+                default: 0.0,
+                help: "power iterations (0 = auto: 3 tiny / 6 paper)",
+            },
+            ParamSpec {
+                key: "chunk",
+                default: 8.0,
+                help: "vertices per task chunk",
+            },
+        ]
+    }
+
+    fn prepare(&self, size: WorkloadSize, seed: u64, params: &mut Params) -> Prepared {
+        let (graph, iters) = match size {
+            WorkloadSize::Paper => (Graph::small_world(4096, 8, 0.1, seed), 6.0),
+            WorkloadSize::Tiny => (Graph::small_world(256, 4, 0.1, seed), 3.0),
+        };
+        if !params.is_explicit("iters") || params.get("iters") == 0.0 {
+            params.set_auto("iters", iters);
+        }
+        Prepared {
+            graph: Some(graph),
+            // One round per power iteration; the bound must track an
+            // explicit `--param iters` or large values could never
+            // converge within it.
+            max_rounds: params.get_u32("iters") + 1,
+        }
+    }
+
+    fn instantiate(&self, preset: &WorkloadPreset) -> Instance {
+        let g = preset.graph();
+        let iters = preset.params.get_u32("iters");
+        let mut alloc = MemAlloc::new();
+        let mut image = BackingStore::new();
+        let wl = PageRank::setup(
+            g,
+            &mut alloc,
+            &mut image,
+            preset.params.get_u32("chunk"),
+            iters,
+        );
+        let oracle = PageRank::oracle(g, iters);
+        let (rank, n) = (wl.rank, wl.n);
+        Instance {
+            workload: Box::new(wl),
+            image,
+            check: Box::new(move |mem| {
+                let diff: f32 = (0..n)
+                    .map(|v| (mem.read_f32(rank + v as u64 * 4) - oracle[v as usize]).abs())
+                    .sum();
+                if diff < 1e-3 {
+                    Ok(())
+                } else {
+                    Err(format!("PRK ranks deviate from oracle by {diff}"))
+                }
+            }),
+        }
     }
 }
 

@@ -1,0 +1,424 @@
+//! Flag-based producer–consumer, ported through the [`Kernel`] registry.
+//!
+//! The textbook asymmetric-sharing pattern the deque apps do *not*
+//! exercise: per-slot message passing. Work-group `p` (the producer of
+//! pair `p`) writes `data[s]` and then publishes it by setting the
+//! line-isolated `flag[s]` with a **release store**; work-group `P + p`
+//! spins on the flag with **acquire loads**, then reads the data and
+//! writes a derived value to `out[s]`.
+//!
+//! The scope assignment follows the scenario exactly like the deque's
+//! [`SyncFlavor`](super::deque::SyncFlavor):
+//!
+//! * promotion scenarios (RSP/sRSP) — the producer releases at **wg
+//!   scope** (L1-local, LR-TBL-recorded under sRSP) and the consumer
+//!   polls with **`rem_acq`**: every poll is a remote-scope promotion,
+//!   so naive RSP pays a device-wide flush+invalidate *per poll* while
+//!   sRSP's LR-TBL lookup answers misses with a one-cycle nop ack;
+//! * hLRC — both sides at wg scope, ownership ping-pongs lazily;
+//! * scoped-only scenarios — cmp-scope release/acquire pairs.
+//!
+//! Unlike the round-based apps, synchronization here happens *within*
+//! one launch between concurrently-running work-groups, driving the
+//! protocol's flag-handoff path rather than its task-claim path.
+//!
+//! Oracle (exact): `out[s] == data_fn(s) + 1` for every slot.
+
+use super::deque::DequeLayout;
+use super::driver::Workload;
+use super::engine::AppLayout;
+use super::registry::{Instance, Kernel, ParamSpec, Params, Prepared, WorkloadPreset, WorkloadSize};
+use crate::config::Scenario;
+use crate::kir::inst::StatCounter;
+use crate::kir::{Asm, Program, Src};
+use crate::mem::{Addr, BackingStore, MemAlloc};
+use crate::sync::{AtomicOp, MemOrder, Scope};
+
+/// The deterministic per-slot payload (`data[s]`), truncated to u32 by
+/// the 4-byte store exactly as the kernel's u64 ALU ops are.
+pub fn data_fn(seed: u64, s: u32) -> u32 {
+    (u64::from(s)
+        .wrapping_mul(2_654_435_761)
+        .wrapping_add(seed & 0xFFFF_FFFF)) as u32
+}
+
+/// Host-side producer–consumer state.
+pub struct ProdCons {
+    layout: AppLayout,
+    data: Addr,
+    flags: Addr,
+    out: Addr,
+    slots: u32,
+    seed: u64,
+    done: bool,
+}
+
+impl ProdCons {
+    pub fn setup(alloc: &mut MemAlloc, backing: &mut BackingStore, slots: u32, seed: u64) -> Self {
+        let data = alloc.alloc(slots as u64 * 4);
+        // Flags are line-isolated: each is its own sync variable, so a
+        // promotion on one slot never drags a neighbor's flag along.
+        let flags = alloc.alloc(slots as u64 * 64);
+        let out = alloc.alloc(slots as u64 * 4);
+        for s in 0..slots {
+            backing.write_u32(data + s as u64 * 4, 0);
+            backing.write_u32(flags + s as u64 * 64, 0);
+            backing.write_u32(out + s as u64 * 4, 0);
+        }
+        let layout = AppLayout {
+            row_ptr: 0,
+            col: 0,
+            weight: 0,
+            a0: data,
+            a1: flags,
+            a2: out,
+            changed: 0,
+            chunk: 1,
+            n: slots,
+            damping_bits: 0,
+            aux: 0,
+            high_water: alloc.high_water(),
+        };
+        ProdCons {
+            layout,
+            data,
+            flags,
+            out,
+            slots,
+            seed,
+            done: false,
+        }
+    }
+
+    /// Final consumer outputs.
+    pub fn result(&self, backing: &BackingStore) -> Vec<u32> {
+        (0..self.slots)
+            .map(|s| backing.read_u32(self.out + s as u64 * 4))
+            .collect()
+    }
+}
+
+impl Workload for ProdCons {
+    fn kinds(&self) -> Vec<u32> {
+        // One launch; the custom kernel never issues a Compute op (kind 0
+        // would trap in the engine — a canary, not a dispatch target).
+        vec![0]
+    }
+
+    fn layout(&self) -> AppLayout {
+        self.layout.clone()
+    }
+
+    fn begin_round(&mut self, _backing: &mut BackingStore) -> Option<Vec<u32>> {
+        if self.done {
+            return None;
+        }
+        // The kernel derives its slot assignment from wg ids; the deques
+        // stay empty.
+        Some(Vec::new())
+    }
+
+    fn end_round(&mut self, _backing: &mut BackingStore) {
+        self.done = true;
+    }
+
+    fn name(&self) -> &'static str {
+        "PRODCONS"
+    }
+
+    /// Custom kernel: per-pair flag handoff instead of deque draining.
+    fn kernel(
+        &self,
+        _deques: &DequeLayout,
+        scenario: Scenario,
+        _kind: u32,
+        _ctrl: Addr,
+    ) -> Program {
+        build_prodcons_kernel(scenario, self.data, self.flags, self.out, self.slots, self.seed)
+    }
+}
+
+/// Consumer-side poll flavor.
+#[derive(Clone, Copy, PartialEq)]
+enum Poll {
+    Remote,
+    Scoped(Scope),
+}
+
+/// Emit the producer/consumer program for `scenario`.
+pub fn build_prodcons_kernel(
+    scenario: Scenario,
+    data: Addr,
+    flags: Addr,
+    out: Addr,
+    slots: u32,
+    seed: u64,
+) -> Program {
+    // Scope pairing per scenario (see module docs): the producer may only
+    // stay at wg scope when the protocol can promote (remote ops) or
+    // transfer ownership (hLRC); otherwise both sides go through cmp.
+    let (prod_scope, poll) = if scenario.remote_ops() {
+        (Scope::Wg, Poll::Remote)
+    } else if scenario.lazy_transfer() {
+        (Scope::Wg, Poll::Scoped(Scope::Wg))
+    } else {
+        (Scope::Cmp, Poll::Scoped(Scope::Cmp))
+    };
+    let payload_add = seed & 0xFFFF_FFFF;
+
+    let mut a = Asm::new();
+    let wg = a.reg();
+    let nw = a.reg();
+    let pairs = a.reg();
+    let s = a.reg();
+    let step = a.reg();
+    let addr = a.reg();
+    let val = a.reg();
+    let t = a.reg();
+    let solo = a.reg();
+
+    a.wg_id(wg);
+    a.num_wgs(nw);
+    a.shr(pairs, nw, Src::I(1));
+    a.imm(solo, 0);
+    a.bz(pairs, "solo");
+    // wg < pairs: producer p = wg.
+    a.lt_u(t, wg, Src::R(pairs));
+    a.bnz(t, "producer_init");
+    // wg < 2*pairs: consumer p = wg - pairs.
+    a.shl(t, pairs, Src::I(1));
+    a.lt_u(t, wg, Src::R(t));
+    a.bnz(t, "consumer_init");
+    a.halt(); // odd leftover work-group
+
+    a.label("solo");
+    // Single work-group: produce everything, then consume everything.
+    a.imm(solo, 1);
+    a.imm(s, 0);
+    a.imm(step, 1);
+    a.br("prod_loop");
+
+    a.label("producer_init");
+    a.mov(s, wg);
+    a.mov(step, pairs);
+    a.br("prod_loop");
+
+    a.label("consumer_init");
+    a.alu(crate::kir::AluOp::Sub, s, wg, Src::R(pairs));
+    a.mov(step, pairs);
+    a.br("cons_loop");
+
+    // ---- producer: data[s] = f(s); flag[s] <-rel- 1 ----
+    a.label("prod_loop");
+    a.ge_u(t, s, Src::I(u64::from(slots)));
+    a.bnz(t, "prod_done");
+    a.mul(val, s, Src::I(2_654_435_761));
+    a.add(val, val, Src::I(payload_add));
+    a.shl(addr, s, Src::I(2));
+    a.add(addr, addr, Src::I(data));
+    a.st(addr, 0, val, 4);
+    a.shl(addr, s, Src::I(6));
+    a.add(addr, addr, Src::I(flags));
+    a.atomic(
+        t,
+        AtomicOp::Store,
+        addr,
+        Src::I(1),
+        Src::I(0),
+        MemOrder::Release,
+        prod_scope,
+    );
+    a.stat(StatCounter::TaskExecuted);
+    a.add(s, s, Src::R(step));
+    a.br("prod_loop");
+    a.label("prod_done");
+    // Solo mode falls through into the consumer sweep.
+    a.bz(solo, "end");
+    a.imm(s, 0);
+    a.imm(step, 1);
+    a.br("cons_loop");
+
+    // ---- consumer: spin on flag[s]; out[s] = data[s] + 1 ----
+    a.label("cons_loop");
+    a.ge_u(t, s, Src::I(u64::from(slots)));
+    a.bnz(t, "end");
+    a.shl(addr, s, Src::I(6));
+    a.add(addr, addr, Src::I(flags));
+    a.label("spin");
+    match poll {
+        Poll::Remote => {
+            a.remote_atomic(t, AtomicOp::Load, addr, Src::I(0), Src::I(0), MemOrder::Acquire);
+        }
+        Poll::Scoped(scope) => {
+            a.atomic(
+                t,
+                AtomicOp::Load,
+                addr,
+                Src::I(0),
+                Src::I(0),
+                MemOrder::Acquire,
+                scope,
+            );
+        }
+    }
+    a.bz(t, "spin");
+    a.shl(addr, s, Src::I(2));
+    a.add(addr, addr, Src::I(data));
+    a.ld(val, addr, 0, 4);
+    a.add(val, val, Src::I(1));
+    a.shl(addr, s, Src::I(2));
+    a.add(addr, addr, Src::I(out));
+    a.st(addr, 0, val, 4);
+    a.stat(StatCounter::TaskExecuted);
+    a.add(s, s, Src::R(step));
+    a.br("cons_loop");
+
+    a.label("end");
+    a.halt();
+    a.finish()
+}
+
+/// Registry entry.
+pub struct ProdConsKernel;
+
+impl Kernel for ProdConsKernel {
+    fn name(&self) -> &'static str {
+        "prodcons"
+    }
+
+    fn display(&self) -> &'static str {
+        "PRODCONS"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["producer-consumer", "flags"]
+    }
+
+    fn summary(&self) -> &'static str {
+        "flag-based producer/consumer pairs (per-slot message passing)"
+    }
+
+    fn oracle(&self) -> &'static str {
+        "exact (out == payload + 1 per slot)"
+    }
+
+    fn params(&self) -> &'static [ParamSpec] {
+        &[ParamSpec {
+            key: "slots",
+            default: 0.0,
+            help: "message slots (0 = auto: 48 tiny / 512 paper)",
+        }]
+    }
+
+    fn prepare(&self, size: WorkloadSize, _seed: u64, params: &mut Params) -> Prepared {
+        if params.get("slots") == 0.0 {
+            params.set_auto(
+                "slots",
+                match size {
+                    WorkloadSize::Paper => 512.0,
+                    WorkloadSize::Tiny => 48.0,
+                },
+            );
+        }
+        Prepared {
+            graph: None,
+            max_rounds: 2,
+        }
+    }
+
+    fn instantiate(&self, preset: &WorkloadPreset) -> Instance {
+        let slots = preset.params.get_u32("slots").max(1);
+        let seed = preset.seed;
+        let mut alloc = MemAlloc::new();
+        let mut image = BackingStore::new();
+        let wl = ProdCons::setup(&mut alloc, &mut image, slots, seed);
+        let out = wl.out;
+        Instance {
+            workload: Box::new(wl),
+            image,
+            check: Box::new(move |mem| {
+                for s in 0..slots {
+                    let want = data_fn(seed, s).wrapping_add(1);
+                    let got = mem.read_u32(out + s as u64 * 4);
+                    if got != want {
+                        return Err(format!(
+                            "PRODCONS out[{s}] = {got:#x}, expected {want:#x} (stale data read)"
+                        ));
+                    }
+                }
+                Ok(())
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceConfig;
+    use crate::workload::driver::run_scenario_seeded;
+    use crate::workload::engine::NativeMath;
+    use crate::workload::registry;
+
+    fn run(scenario: Scenario, num_cus: u32, slots: f64) -> Result<(), String> {
+        let preset = WorkloadPreset::with_params(
+            registry::PRODCONS,
+            WorkloadSize::Tiny,
+            5,
+            &[("slots".into(), slots)],
+        )
+        .unwrap();
+        let inst = preset.instance();
+        let mut wl = inst.workload;
+        let cfg = DeviceConfig {
+            num_cus,
+            ..DeviceConfig::small()
+        };
+        let (r, mem) = run_scenario_seeded(
+            &cfg,
+            scenario,
+            wl.as_mut(),
+            NativeMath,
+            preset.max_rounds,
+            inst.image,
+        );
+        if !r.converged {
+            return Err("did not converge".into());
+        }
+        (inst.check)(&mem)
+    }
+
+    #[test]
+    fn handoff_exact_under_every_scenario() {
+        for scenario in Scenario::ALL {
+            run(scenario, 4, 24.0).unwrap_or_else(|e| panic!("{scenario:?}: {e}"));
+        }
+        run(Scenario::Hlrc, 4, 24.0).unwrap();
+    }
+
+    #[test]
+    fn degenerate_devices() {
+        // 1 wg: solo produce-then-consume; 3 wgs: one idle leftover.
+        run(Scenario::Srsp, 1, 16.0).unwrap();
+        run(Scenario::Srsp, 3, 16.0).unwrap();
+    }
+
+    #[test]
+    fn remote_polling_drives_promotions() {
+        let preset =
+            WorkloadPreset::with_params(registry::PRODCONS, WorkloadSize::Tiny, 5, &[]).unwrap();
+        let inst = preset.instance();
+        let mut wl = inst.workload;
+        let cfg = DeviceConfig::small();
+        let (r, _mem) = run_scenario_seeded(
+            &cfg,
+            Scenario::Srsp,
+            wl.as_mut(),
+            NativeMath,
+            2,
+            inst.image,
+        );
+        assert!(r.stats.remote_acquires > 0, "consumers must poll via rem_acq");
+        assert!(r.stats.wg_releases > 0, "producers must release at wg scope");
+    }
+}

@@ -1,0 +1,388 @@
+//! The pluggable workload registry: every evaluation kernel registers a
+//! [`Kernel`] implementation in [`REGISTRY`] and self-describes — name,
+//! aliases, oracle kind, default chunking, tunable parameters — so the
+//! runner, the CLI (`srsp list-workloads`, `--app <name>`, `--param k=v`),
+//! the presets and the reports all resolve workloads through one table
+//! instead of matching on a hard-coded enum.
+//!
+//! Adding a workload is now a registry entry: implement [`Kernel`] next to
+//! the workload (see `pagerank.rs` for the smallest example, `stress.rs`
+//! for one with parameters and custom task placement) and push it into
+//! [`REGISTRY`]. Nothing else in the harness, CLI or report layers needs
+//! to change.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+use super::driver::Workload;
+use super::graph::Graph;
+use crate::mem::BackingStore;
+
+/// Scale of a preset run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadSize {
+    /// Unit-test scale (seconds on 4 CUs).
+    Tiny,
+    /// Bench scale for the 64-CU figure runs.
+    Paper,
+}
+
+/// The classic workload-generation seed used by every paper-figure
+/// preset. Runs that do not ask for explicit seeding reproduce the
+/// figures byte-for-byte with this value.
+pub const DEFAULT_SEED: u64 = 0xC0FFEE;
+
+/// One tunable parameter a workload exposes (`--param key=value`).
+#[derive(Debug, Clone, Copy)]
+pub struct ParamSpec {
+    pub key: &'static str,
+    /// Default value; by convention `0` often means "auto by size"
+    /// (materialized in [`Kernel::prepare`]) — the `help` text says so.
+    pub default: f64,
+    pub help: &'static str,
+}
+
+/// Resolved parameter values for one workload instance: the spec defaults
+/// overlaid with the user's explicit `--param` overrides.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Params {
+    vals: BTreeMap<&'static str, f64>,
+    explicit: BTreeSet<&'static str>,
+}
+
+impl Params {
+    /// Overlay `overrides` on `specs`' defaults. Unknown keys are an
+    /// error listing the valid ones.
+    pub fn resolve(
+        specs: &'static [ParamSpec],
+        overrides: &[(String, f64)],
+    ) -> Result<Params, String> {
+        let mut p = Params::default();
+        for s in specs {
+            p.vals.insert(s.key, s.default);
+        }
+        for (key, val) in overrides {
+            let Some(spec) = specs.iter().find(|s| s.key == key.as_str()) else {
+                let valid: Vec<&str> = specs.iter().map(|s| s.key).collect();
+                return Err(format!(
+                    "unknown parameter '{key}' (valid: {})",
+                    if valid.is_empty() {
+                        "none".to_string()
+                    } else {
+                        valid.join(", ")
+                    }
+                ));
+            };
+            p.vals.insert(spec.key, *val);
+            p.explicit.insert(spec.key);
+        }
+        Ok(p)
+    }
+
+    /// Value of `key`. Panics on a key the spec does not declare —
+    /// that is a workload-author bug, not a user error.
+    pub fn get(&self, key: &str) -> f64 {
+        *self
+            .vals
+            .get(key)
+            .unwrap_or_else(|| panic!("parameter '{key}' not declared in the workload's spec"))
+    }
+
+    pub fn get_u32(&self, key: &str) -> u32 {
+        self.get(key) as u32
+    }
+
+    /// Was `key` explicitly overridden by the user?
+    pub fn is_explicit(&self, key: &str) -> bool {
+        self.explicit.contains(key)
+    }
+
+    /// Materialize an auto default (used by [`Kernel::prepare`] for
+    /// size-dependent defaults); does not mark the key explicit.
+    pub fn set_auto(&mut self, key: &'static str, val: f64) {
+        self.vals.insert(key, val);
+    }
+
+    /// Compact `k=v;k2=v2` rendering of the explicit overrides (report
+    /// column; empty when the run used pure defaults).
+    pub fn overrides_display(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        for key in &self.explicit {
+            let v = self.vals[key];
+            if v == v.trunc() && v.abs() < 1e15 {
+                parts.push(format!("{key}={}", v as i64));
+            } else {
+                parts.push(format!("{key}={v}"));
+            }
+        }
+        parts.join(";")
+    }
+}
+
+/// Input + bounds produced by [`Kernel::prepare`] for one (size, seed,
+/// params) triple.
+pub struct Prepared {
+    /// Generated input graph (`None` for synthetic non-graph kernels).
+    pub graph: Option<Graph>,
+    /// Host-loop round bound handed to the scenario driver.
+    pub max_rounds: u32,
+}
+
+/// A ready-to-run workload instance: the host-side state, the seeded
+/// initial memory image, and the oracle check over the final image.
+pub struct Instance {
+    pub workload: Box<dyn Workload>,
+    pub image: BackingStore,
+    /// Validate the final (post-run) memory against the native oracle.
+    pub check: Box<dyn Fn(&BackingStore) -> Result<(), String> + Send>,
+}
+
+/// A registered evaluation kernel. Implementations live next to their
+/// workload and self-describe everything the harness layers need.
+pub trait Kernel: Sync {
+    /// Canonical CLI name (`--app <name>`), lower-case.
+    fn name(&self) -> &'static str;
+    /// Display/report label (`PRK`, `SSSP`, ...).
+    fn display(&self) -> &'static str;
+    /// Extra accepted CLI spellings.
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+    /// One-line description for `srsp list-workloads`.
+    fn summary(&self) -> &'static str;
+    /// Human description of the oracle (`exact (Dijkstra)`, ...).
+    fn oracle(&self) -> &'static str;
+    /// Tunable parameters (empty when the kernel has none).
+    fn params(&self) -> &'static [ParamSpec] {
+        &[]
+    }
+    /// Generate the input and size-dependent bounds; may materialize
+    /// auto defaults into `params` (visible to [`Kernel::instantiate`]).
+    fn prepare(&self, size: WorkloadSize, seed: u64, params: &mut Params) -> Prepared;
+    /// Build the runnable instance (host state + memory image + oracle).
+    fn instantiate(&self, preset: &WorkloadPreset) -> Instance;
+}
+
+/// The static workload table. Order is load-bearing: a workload's index
+/// is its [`WorkloadId::ord`], which feeds per-cell seed derivation — new
+/// workloads append, existing ones never reorder.
+pub static REGISTRY: &[&dyn Kernel] = &[
+    &super::pagerank::PageRankKernel,
+    &super::sssp::SsspKernel,
+    &super::mis::MisKernel,
+    &super::stress::StressKernel,
+    &super::bfs::BfsKernel,
+    &super::prodcons::ProdConsKernel,
+];
+
+/// Stable handle to a registered workload (index into [`REGISTRY`]).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct WorkloadId(usize);
+
+/// The three Pannotia apps of the paper's §5.1 evaluation.
+pub const PRK: WorkloadId = WorkloadId(0);
+pub const SSSP: WorkloadId = WorkloadId(1);
+pub const MIS: WorkloadId = WorkloadId(2);
+/// The asymmetry-stress kernel family (remote-ratio sweep axis).
+pub const STRESS: WorkloadId = WorkloadId(3);
+pub const BFS: WorkloadId = WorkloadId(4);
+pub const PRODCONS: WorkloadId = WorkloadId(5);
+
+impl WorkloadId {
+    pub fn kernel(self) -> &'static dyn Kernel {
+        REGISTRY[self.0]
+    }
+
+    /// Stable ordinal used for seed derivation (recorded seeds in saved
+    /// reports depend on it; equals the registry index).
+    pub fn ord(self) -> u64 {
+        self.0 as u64
+    }
+
+    pub fn name(self) -> &'static str {
+        self.kernel().name()
+    }
+
+    pub fn display(self) -> &'static str {
+        self.kernel().display()
+    }
+}
+
+impl fmt::Debug for WorkloadId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.display())
+    }
+}
+
+impl fmt::Display for WorkloadId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Every registered workload, in registry order.
+pub fn all() -> impl Iterator<Item = WorkloadId> {
+    (0..REGISTRY.len()).map(WorkloadId)
+}
+
+/// Resolve a CLI name (canonical or alias, case-insensitive).
+pub fn resolve(name: &str) -> Option<WorkloadId> {
+    let lower = name.to_ascii_lowercase();
+    all().find(|id| {
+        let k = id.kernel();
+        k.name() == lower || k.aliases().contains(&lower.as_str())
+    })
+}
+
+/// A fully-specified workload instance: which kernel, at what scale,
+/// from which seed, with which parameters — plus the pre-generated input
+/// (shared read-only across the scenarios of one grid cell).
+pub struct WorkloadPreset {
+    pub id: WorkloadId,
+    pub size: WorkloadSize,
+    /// Seed the input was generated from (recorded in reports).
+    pub seed: u64,
+    /// Resolved parameters (defaults + `--param` overrides).
+    pub params: Params,
+    pub graph: Option<Graph>,
+    pub max_rounds: u32,
+}
+
+impl WorkloadPreset {
+    /// Classic figure preset: default parameters, classic seed.
+    pub fn new(id: WorkloadId, size: WorkloadSize) -> Self {
+        Self::new_seeded(id, size, DEFAULT_SEED)
+    }
+
+    /// Default parameters with an explicit generator seed (the
+    /// scenario-matrix runner derives one per grid cell).
+    pub fn new_seeded(id: WorkloadId, size: WorkloadSize, seed: u64) -> Self {
+        Self::with_params(id, size, seed, &[]).expect("empty overrides cannot fail")
+    }
+
+    /// Full form: explicit parameter overrides (`--param k=v`).
+    pub fn with_params(
+        id: WorkloadId,
+        size: WorkloadSize,
+        seed: u64,
+        overrides: &[(String, f64)],
+    ) -> Result<Self, String> {
+        let kernel = id.kernel();
+        let mut params = Params::resolve(kernel.params(), overrides)
+            .map_err(|e| format!("{}: {e}", kernel.name()))?;
+        let prepared = kernel.prepare(size, seed, &mut params);
+        Ok(WorkloadPreset {
+            id,
+            size,
+            seed,
+            params,
+            graph: prepared.graph,
+            max_rounds: prepared.max_rounds,
+        })
+    }
+
+    /// Override the input graph (e.g. a real DIMACS file).
+    pub fn with_graph(mut self, g: Graph) -> Self {
+        self.graph = Some(g);
+        self
+    }
+
+    /// The graph input; panics for non-graph kernels (workload-author
+    /// bug: only graph kernels may call this from `instantiate`).
+    pub fn graph(&self) -> &Graph {
+        self.graph
+            .as_ref()
+            .unwrap_or_else(|| panic!("{} has no graph input", self.id.name()))
+    }
+
+    /// The remote-ratio sweep coordinate: `Some(r)` iff this workload
+    /// declares a `remote_ratio` parameter (the stress family). Reports
+    /// surface it as a first-class column so protocol × r curves can be
+    /// plotted straight from the CSV.
+    pub fn remote_ratio(&self) -> Option<f64> {
+        self.id
+            .kernel()
+            .params()
+            .iter()
+            .find(|s| s.key == "remote_ratio")
+            .map(|s| self.params.get(s.key))
+    }
+
+    /// Build the runnable instance (workload + image + oracle check).
+    pub fn instance(&self) -> Instance {
+        self.id.kernel().instantiate(self)
+    }
+
+    /// Instantiate without the oracle (figure pipelines).
+    pub fn instantiate(&self) -> (Box<dyn Workload>, BackingStore) {
+        let inst = self.instance();
+        (inst.workload, inst.image)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_unique_and_resolvable() {
+        let mut seen = BTreeSet::new();
+        for id in all() {
+            let k = id.kernel();
+            assert!(seen.insert(k.name()), "duplicate name {}", k.name());
+            assert_eq!(resolve(k.name()), Some(id));
+            assert_eq!(resolve(&k.name().to_uppercase()), Some(id));
+            for alias in k.aliases() {
+                assert_eq!(resolve(alias), Some(id), "alias {alias}");
+            }
+        }
+        assert_eq!(resolve("bogus"), None);
+    }
+
+    #[test]
+    fn classic_ordinals_stable() {
+        // Saved report seeds depend on these; never reorder.
+        assert_eq!(PRK.ord(), 0);
+        assert_eq!(SSSP.ord(), 1);
+        assert_eq!(MIS.ord(), 2);
+        assert_eq!(resolve("prk"), Some(PRK));
+        assert_eq!(resolve("pagerank"), Some(PRK));
+        assert_eq!(resolve("sssp"), Some(SSSP));
+        assert_eq!(resolve("mis"), Some(MIS));
+        assert_eq!(resolve("stress"), Some(STRESS));
+        assert_eq!(resolve("bfs"), Some(BFS));
+        assert_eq!(resolve("prodcons"), Some(PRODCONS));
+        assert_eq!(all().count(), 6);
+    }
+
+    #[test]
+    fn params_resolution_and_errors() {
+        let specs: &'static [ParamSpec] = &[
+            ParamSpec {
+                key: "alpha",
+                default: 2.0,
+                help: "",
+            },
+            ParamSpec {
+                key: "beta",
+                default: 0.5,
+                help: "",
+            },
+        ];
+        let p = Params::resolve(specs, &[("beta".into(), 0.25)]).unwrap();
+        assert_eq!(p.get("alpha"), 2.0);
+        assert_eq!(p.get("beta"), 0.25);
+        assert!(p.is_explicit("beta") && !p.is_explicit("alpha"));
+        assert_eq!(p.overrides_display(), "beta=0.25");
+        let err = Params::resolve(specs, &[("gamma".into(), 1.0)]).unwrap_err();
+        assert!(err.contains("alpha") && err.contains("beta"), "{err}");
+    }
+
+    #[test]
+    fn preset_rejects_unknown_param() {
+        let err =
+            WorkloadPreset::with_params(STRESS, WorkloadSize::Tiny, 1, &[("nope".into(), 1.0)])
+                .unwrap_err();
+        assert!(err.contains("stress"), "{err}");
+    }
+}

@@ -11,6 +11,7 @@
 use super::driver::Workload;
 use super::engine::{upload_graph, AppLayout, DIST_INF, KIND_SSSP};
 use super::graph::Graph;
+use super::registry::{Instance, Kernel, ParamSpec, Params, Prepared, WorkloadPreset, WorkloadSize};
 use crate::mem::{Addr, BackingStore, MemAlloc};
 use std::collections::BTreeSet;
 
@@ -54,6 +55,7 @@ impl Sssp {
             chunk,
             n,
             damping_bits: 0,
+            aux: 0,
             high_water: alloc.high_water(),
         };
         let graph_adj = (0..n)
@@ -148,6 +150,85 @@ impl Workload for Sssp {
 
     fn name(&self) -> &'static str {
         "SSSP"
+    }
+}
+
+/// Registry entry (§5.1: SSSP on a `USA-road-BAY`-class road grid).
+pub struct SsspKernel;
+
+impl Kernel for SsspKernel {
+    fn name(&self) -> &'static str {
+        "sssp"
+    }
+
+    fn display(&self) -> &'static str {
+        "SSSP"
+    }
+
+    fn summary(&self) -> &'static str {
+        "single-source shortest paths, frontier pull relaxation"
+    }
+
+    fn oracle(&self) -> &'static str {
+        "exact (Dijkstra)"
+    }
+
+    fn params(&self) -> &'static [ParamSpec] {
+        &[
+            ParamSpec {
+                key: "source",
+                default: 0.0,
+                help: "source vertex",
+            },
+            ParamSpec {
+                key: "chunk",
+                default: 8.0,
+                help: "vertices per task chunk",
+            },
+        ]
+    }
+
+    fn prepare(&self, size: WorkloadSize, seed: u64, _params: &mut Params) -> Prepared {
+        let (graph, max_rounds) = match size {
+            WorkloadSize::Paper => (Graph::road_grid(64, 64, seed), 400),
+            WorkloadSize::Tiny => (Graph::road_grid(16, 16, seed), 200),
+        };
+        Prepared {
+            graph: Some(graph),
+            max_rounds,
+        }
+    }
+
+    fn instantiate(&self, preset: &WorkloadPreset) -> Instance {
+        let g = preset.graph();
+        let source = preset.params.get_u32("source").min(g.n.saturating_sub(1));
+        let mut alloc = MemAlloc::new();
+        let mut image = BackingStore::new();
+        let wl = Sssp::setup(
+            g,
+            &mut alloc,
+            &mut image,
+            preset.params.get_u32("chunk"),
+            source,
+        );
+        let oracle = Sssp::oracle(g, source);
+        let (dist, n) = (wl.dist, wl.n);
+        Instance {
+            workload: Box::new(wl),
+            image,
+            check: Box::new(move |mem| {
+                for v in 0..n {
+                    let got = mem.read_u32(dist + v as u64 * 4);
+                    if got != oracle[v as usize] {
+                        return Err(format!(
+                            "SSSP dist[{v}] = {got}, oracle {}",
+                            oracle[v as usize]
+                        ));
+                    }
+                }
+                Ok(())
+            }),
+        }
     }
 }
 

@@ -1,0 +1,391 @@
+//! The asymmetry-stress kernel family: a synthetic sharer/stealer
+//! workload with a **tunable remote-access ratio** `r` — the axis the
+//! paper's argument actually turns on, which the three ported graph apps
+//! each bake into one fixed profile.
+//!
+//! Every task is one cell update (bump `cells[c]`, xor a window of a
+//! shared read-only pad into `scratch[c]`). The sweep axis lives in the
+//! *placement* policy, not the compute: a deterministic per-task coin
+//! with bias `r` marks tasks **remote** — those are concentrated into a
+//! small **hot set** of queues, while the rest keep the classic balanced
+//! block ownership. Owners drain their balanced share with cheap
+//! wg-scope pops; the hot-set surplus is what everyone else must steal
+//! through the promotion machinery. So `r` directly dials the fraction
+//! of claims that go through remote ops:
+//!
+//! * `r = 0` — pure local sharing: every protocol degenerates to
+//!   wg-scope fast paths, RspNaive and sRSP tie.
+//! * `r → 1` — every claim is a steal: RspNaive pays a full
+//!   flush+invalidate of *every* L1 per claim (destroying the pad/cell
+//!   locality in all of them), while sRSP's LR-TBL/PA-TBL selectivity
+//!   drains only the hot owner's sFIFO — the crossover curve of the
+//!   `remote-ratio` sweep.
+//!
+//! `hot_set` sets how many queues absorb the remote tasks (1 = maximum
+//! contention on a single local sharer); `migration` rotates the hot set
+//! every N rounds, forcing LR-TBL/PA-TBL turnover as the local sharer's
+//! L1 changes identity.
+//!
+//! Correctness oracle (exact, protocol-independent): after R rounds
+//! every cell holds exactly R and every scratch word the pad-window xor
+//! — each task ran exactly once per round, no claim lost or duplicated.
+
+use super::driver::Workload;
+use super::engine::{AppLayout, KIND_STRESS};
+use super::registry::{Instance, Kernel, ParamSpec, Params, Prepared, WorkloadPreset, WorkloadSize};
+use crate::mem::{Addr, BackingStore, MemAlloc};
+use crate::sim::SplitMix64;
+
+/// Deterministic remote-coin for task `c`: true with probability `r`.
+/// Independent of queue count and round so the task population is stable
+/// across devices and the sweep axis is exactly comparable.
+fn is_remote(seed: u64, c: u32, r: f64) -> bool {
+    let h = SplitMix64::new(seed ^ 0x5742_1253 ^ u64::from(c)).next_u64();
+    (h >> 11) as f64 / (1u64 << 53) as f64 < r
+}
+
+/// Pad word `i` (seed-derived, read-only during the run).
+fn pad_word(seed: u64, i: u32) -> u32 {
+    SplitMix64::new(seed ^ 0x9AD5 ^ u64::from(i)).next_u64() as u32
+}
+
+/// Host-side stress state.
+pub struct Stress {
+    layout: AppLayout,
+    cells: Addr,
+    scratch: Addr,
+    /// Total tasks (= chunks: one cell per task).
+    tasks: u32,
+    rounds: u32,
+    round: u32,
+    remote_ratio: f64,
+    hot_set: u32,
+    migration: u32,
+    seed: u64,
+}
+
+impl Stress {
+    #[allow(clippy::too_many_arguments)]
+    pub fn setup(
+        alloc: &mut MemAlloc,
+        backing: &mut BackingStore,
+        tasks: u32,
+        rounds: u32,
+        work: u32,
+        remote_ratio: f64,
+        hot_set: u32,
+        migration: u32,
+        seed: u64,
+    ) -> Self {
+        let cells = alloc.alloc(tasks as u64 * 4);
+        let pad = alloc.alloc(tasks as u64 * 4);
+        let scratch = alloc.alloc(tasks as u64 * 4);
+        for c in 0..tasks {
+            backing.write_u32(cells + c as u64 * 4, 0);
+            backing.write_u32(pad + c as u64 * 4, pad_word(seed, c));
+            backing.write_u32(scratch + c as u64 * 4, 0);
+        }
+        let layout = AppLayout {
+            row_ptr: 0,
+            col: 0,
+            weight: 0,
+            a0: cells,
+            a1: pad,
+            a2: scratch,
+            changed: 0,
+            chunk: 1,
+            n: tasks,
+            damping_bits: 0,
+            aux: work,
+            high_water: alloc.high_water(),
+        };
+        Stress {
+            layout,
+            cells,
+            scratch,
+            tasks,
+            rounds,
+            round: 0,
+            remote_ratio,
+            hot_set,
+            migration,
+            seed,
+        }
+    }
+
+    /// Final cell counters.
+    pub fn result(&self, backing: &BackingStore) -> Vec<u32> {
+        (0..self.tasks)
+            .map(|c| backing.read_u32(self.cells + c as u64 * 4))
+            .collect()
+    }
+
+    /// Expected scratch word for task `c` (pad-window xor).
+    pub fn expected_scratch(seed: u64, tasks: u32, work: u32, c: u32) -> u32 {
+        let mut acc = 0u32;
+        for k in 0..work {
+            acc ^= pad_word(seed, c.wrapping_add(k) % tasks.max(1));
+        }
+        acc
+    }
+}
+
+impl Workload for Stress {
+    fn kinds(&self) -> Vec<u32> {
+        vec![KIND_STRESS]
+    }
+
+    fn layout(&self) -> AppLayout {
+        self.layout.clone()
+    }
+
+    fn begin_round(&mut self, _backing: &mut BackingStore) -> Option<Vec<u32>> {
+        if self.round >= self.rounds {
+            return None;
+        }
+        Some((0..self.tasks).collect())
+    }
+
+    fn end_round(&mut self, _backing: &mut BackingStore) {
+        self.round += 1;
+    }
+
+    fn name(&self) -> &'static str {
+        "STRESS"
+    }
+
+    /// The sweep axis: remote-marked tasks go to the (possibly migrated)
+    /// hot queues, the rest keep stable block ownership.
+    fn place(&self, active: &[u32], num_queues: u32, total_chunks: u32) -> Vec<Vec<u32>> {
+        let hot = self.hot_set.clamp(1, num_queues);
+        let phase = if self.migration == 0 {
+            0
+        } else {
+            (self.round / self.migration) % num_queues
+        };
+        let cpq = total_chunks.div_ceil(num_queues).max(1);
+        let mut per_queue: Vec<Vec<u32>> = vec![Vec::new(); num_queues as usize];
+        for &c in active {
+            let q = if is_remote(self.seed, c, self.remote_ratio) {
+                (phase + c % hot) % num_queues
+            } else {
+                (c / cpq).min(num_queues - 1)
+            };
+            per_queue[q as usize].push(c);
+        }
+        per_queue
+    }
+
+    /// The hot set can absorb every task at `r = 1`.
+    fn queue_capacity(&self, total_chunks: u32, _num_queues: u32) -> u32 {
+        total_chunks.max(4)
+    }
+}
+
+/// Registry entry for the asymmetry-stress family.
+pub struct StressKernel;
+
+impl Kernel for StressKernel {
+    fn name(&self) -> &'static str {
+        "stress"
+    }
+
+    fn display(&self) -> &'static str {
+        "STRESS"
+    }
+
+    fn summary(&self) -> &'static str {
+        "synthetic sharer/stealer with a tunable remote-access ratio"
+    }
+
+    fn oracle(&self) -> &'static str {
+        "exact (cells == rounds, scratch == pad xor)"
+    }
+
+    fn params(&self) -> &'static [ParamSpec] {
+        &[
+            ParamSpec {
+                key: "remote_ratio",
+                default: 0.0,
+                help: "fraction of tasks routed to the hot set (0..1)",
+            },
+            ParamSpec {
+                key: "hot_set",
+                default: 2.0,
+                help: "queues absorbing the remote tasks",
+            },
+            ParamSpec {
+                key: "migration",
+                default: 0.0,
+                help: "rotate the hot set every N rounds (0 = never)",
+            },
+            ParamSpec {
+                key: "rounds",
+                default: 0.0,
+                help: "kernel rounds (0 = auto: 4 tiny / 8 paper)",
+            },
+            ParamSpec {
+                key: "tasks",
+                default: 0.0,
+                help: "total tasks (0 = auto: 256 tiny / 2048 paper)",
+            },
+            ParamSpec {
+                key: "work",
+                default: 8.0,
+                help: "shared-pad words read per task (locality food)",
+            },
+        ]
+    }
+
+    fn prepare(&self, size: WorkloadSize, _seed: u64, params: &mut Params) -> Prepared {
+        let (auto_rounds, auto_tasks) = match size {
+            WorkloadSize::Paper => (8.0, 2048.0),
+            WorkloadSize::Tiny => (4.0, 256.0),
+        };
+        if params.get("rounds") == 0.0 {
+            params.set_auto("rounds", auto_rounds);
+        }
+        if params.get("tasks") == 0.0 {
+            params.set_auto("tasks", auto_tasks);
+        }
+        Prepared {
+            graph: None,
+            max_rounds: params.get_u32("rounds") + 1,
+        }
+    }
+
+    fn instantiate(&self, preset: &WorkloadPreset) -> Instance {
+        let p = &preset.params;
+        let (tasks, rounds, work) = (
+            p.get_u32("tasks").max(1),
+            p.get_u32("rounds"),
+            p.get_u32("work"),
+        );
+        let seed = preset.seed;
+        let mut alloc = MemAlloc::new();
+        let mut image = BackingStore::new();
+        let wl = Stress::setup(
+            &mut alloc,
+            &mut image,
+            tasks,
+            rounds,
+            work,
+            p.get("remote_ratio"),
+            p.get_u32("hot_set"),
+            p.get_u32("migration"),
+            seed,
+        );
+        let (cells, scratch) = (wl.cells, wl.scratch);
+        Instance {
+            workload: Box::new(wl),
+            image,
+            check: Box::new(move |mem| {
+                for c in 0..tasks {
+                    let got = mem.read_u32(cells + c as u64 * 4);
+                    if got != rounds {
+                        return Err(format!(
+                            "STRESS cell {c} = {got}, expected {rounds} (claim lost/duplicated)"
+                        ));
+                    }
+                    let want = Stress::expected_scratch(seed, tasks, work, c);
+                    let got = mem.read_u32(scratch + c as u64 * 4);
+                    if got != want {
+                        return Err(format!(
+                            "STRESS scratch {c} = {got:#x}, expected {want:#x} (stale pad read)"
+                        ));
+                    }
+                }
+                Ok(())
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DeviceConfig, Scenario};
+    use crate::workload::driver::run_scenario_seeded;
+    use crate::workload::engine::NativeMath;
+    use crate::workload::registry;
+
+    fn run_ratio(scenario: Scenario, r: f64) -> (crate::workload::driver::RunResult, bool) {
+        let preset = WorkloadPreset::with_params(
+            registry::STRESS,
+            WorkloadSize::Tiny,
+            7,
+            &[("remote_ratio".into(), r), ("tasks".into(), 96.0)],
+        )
+        .unwrap();
+        let inst = preset.instance();
+        let mut wl = inst.workload;
+        let cfg = DeviceConfig::small();
+        let (run, mem) = run_scenario_seeded(
+            &cfg,
+            scenario,
+            wl.as_mut(),
+            NativeMath,
+            preset.max_rounds,
+            inst.image,
+        );
+        (run, (inst.check)(&mem).is_ok())
+    }
+
+    #[test]
+    fn stress_exact_at_ratio_extremes_all_steal_scenarios() {
+        for scenario in [Scenario::StealOnly, Scenario::Rsp, Scenario::Srsp] {
+            for r in [0.0, 0.5, 1.0] {
+                let (run, ok) = run_ratio(scenario, r);
+                assert!(run.converged, "{scenario:?} r={r}");
+                assert!(ok, "{scenario:?} r={r}: oracle failed");
+            }
+        }
+    }
+
+    #[test]
+    fn remote_ratio_dials_steal_traffic() {
+        let (balanced, _) = run_ratio(Scenario::Srsp, 0.0);
+        let (skewed, _) = run_ratio(Scenario::Srsp, 0.9);
+        // r=0 is balanced: at most end-of-round skew steals. r=0.9 routes
+        // ~90% of tasks through the hot set, so most claims are remote.
+        let total = skewed.stats.tasks_executed;
+        assert!(
+            balanced.stats.tasks_stolen < total / 10,
+            "r=0 should steal almost nothing (stole {} of {total})",
+            balanced.stats.tasks_stolen
+        );
+        assert!(
+            skewed.stats.tasks_stolen > total / 8,
+            "r=0.9 must force heavy stealing (stole {} of {total})",
+            skewed.stats.tasks_stolen
+        );
+        assert!(skewed.stats.remote_acqrels > balanced.stats.remote_acqrels);
+    }
+
+    #[test]
+    fn remote_coin_is_deterministic_and_biased() {
+        let n = 10_000u32;
+        for r in [0.0, 0.25, 0.75, 1.0] {
+            let hits = (0..n).filter(|&c| is_remote(42, c, r)).count() as f64;
+            let frac = hits / n as f64;
+            assert!((frac - r).abs() < 0.02, "r={r}: got {frac}");
+        }
+        assert_eq!(is_remote(9, 123, 0.5), is_remote(9, 123, 0.5));
+    }
+
+    #[test]
+    fn migration_rotates_the_hot_set() {
+        let mut alloc = MemAlloc::new();
+        let mut image = BackingStore::new();
+        // r=1: everything is remote, hot_set=1, migrate every round.
+        let mut s = Stress::setup(&mut alloc, &mut image, 16, 4, 0, 1.0, 1, 1, 3);
+        let active: Vec<u32> = (0..16).collect();
+        let q0 = s.place(&active, 4, 16);
+        s.round = 1;
+        let q1 = s.place(&active, 4, 16);
+        let hot0 = q0.iter().position(|q| !q.is_empty()).unwrap();
+        let hot1 = q1.iter().position(|q| !q.is_empty()).unwrap();
+        assert_eq!(q0[hot0].len(), 16, "hot_set=1 concentrates everything");
+        assert_ne!(hot0, hot1, "migration must move the hot queue");
+    }
+}

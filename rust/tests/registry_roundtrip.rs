@@ -1,0 +1,91 @@
+//! Registry round-trip: every registered workload is runnable **by
+//! name** from the CLI — the registry is the single source of truth for
+//! workload dispatch, and no app enum exists outside it. These tests
+//! drive the actual `srsp` binary so the whole chain (name resolution,
+//! parameter handling, preset construction, scenario run) is covered
+//! end-to-end.
+
+use std::process::Command;
+
+use srsp::workload::registry;
+
+fn srsp_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_srsp"))
+}
+
+#[test]
+fn registry_holds_six_workloads() {
+    assert_eq!(registry::all().count(), 6);
+    for name in ["prk", "sssp", "mis", "stress", "bfs", "prodcons"] {
+        assert!(registry::resolve(name).is_some(), "{name} must resolve");
+    }
+}
+
+#[test]
+fn list_workloads_covers_the_registry() {
+    let out = srsp_bin().arg("list-workloads").output().expect("spawn srsp");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for id in registry::all() {
+        assert!(
+            text.contains(id.name()),
+            "'{}' missing from list-workloads:\n{text}",
+            id.name()
+        );
+    }
+}
+
+#[test]
+fn every_workload_runs_by_name_from_the_cli() {
+    for id in registry::all() {
+        let out = srsp_bin()
+            .args(["run", "--app", id.name(), "--size", "tiny", "--cus", "4"])
+            .output()
+            .expect("spawn srsp");
+        assert!(
+            out.status.success(),
+            "srsp run --app {} failed:\n{}",
+            id.name(),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains("converged=true"), "{}:\n{text}", id.name());
+    }
+}
+
+#[test]
+fn unknown_workload_name_lists_the_registered_ones() {
+    let out = srsp_bin()
+        .args(["run", "--app", "bogus"])
+        .output()
+        .expect("spawn srsp");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    for id in registry::all() {
+        assert!(err.contains(id.name()), "error must list '{}':\n{err}", id.name());
+    }
+}
+
+#[test]
+fn params_reach_the_kernel_and_unknown_keys_fail() {
+    let out = srsp_bin()
+        .args(["run", "--app", "stress", "--size", "tiny", "--cus", "4"])
+        .args(["--param", "rounds=2", "--param", "tasks=64"])
+        .output()
+        .expect("spawn srsp");
+    assert!(
+        out.status.success(),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let out = srsp_bin()
+        .args(["run", "--app", "stress", "--param", "bogus=1"])
+        .output()
+        .expect("spawn srsp");
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("unknown parameter"),
+        "the error must name the bad key"
+    );
+}

@@ -1,0 +1,90 @@
+//! The remote-ratio sweep axis (protocol × r on the stress family):
+//! every protocol must pass the stress oracle at every sample point, the
+//! report must carry the axis as a first-class column, and the sweep
+//! must actually measure what it claims — sRSP's selective promotion
+//! doing less invalidation work than naive RSP's flush-all at the
+//! remote-heavy end.
+
+use std::process::Command;
+
+use srsp::config::{DeviceConfig, Scenario};
+use srsp::coordinator::{remote_ratio_grid, Seeding, RATIO_SCENARIOS};
+use srsp::harness::presets::WorkloadSize;
+use srsp::harness::report::Report;
+use srsp::harness::runner::Runner;
+use srsp::workload::registry;
+
+fn tiny_runner() -> Runner {
+    Runner {
+        validate: true,
+        seeding: Seeding::PerCell(7),
+        ..Runner::new(DeviceConfig::small(), WorkloadSize::Tiny, 4)
+    }
+}
+
+#[test]
+fn all_protocols_pass_oracles_at_every_ratio() {
+    let points = [0.0, 0.1, 0.5, 1.0];
+    let results = tiny_runner().run_remote_ratio_sweep(registry::STRESS, &points);
+    assert_eq!(results.len(), points.len() * RATIO_SCENARIOS.len());
+    for (c, &(scenario, r)) in results.iter().zip(remote_ratio_grid(&points).iter()) {
+        assert_eq!(c.cell.scenario, scenario);
+        assert_eq!(c.remote_ratio, Some(r));
+        assert_eq!(
+            c.validated,
+            Some(true),
+            "{scenario:?} failed the stress oracle at r={r}"
+        );
+    }
+    let csv = Report::from_cells(&results).to_csv();
+    assert_eq!(csv.lines().count(), results.len() + 1);
+    assert!(csv.contains("remote_ratio"));
+}
+
+#[test]
+fn srsp_invalidates_less_than_naive_at_the_skewed_end() {
+    let points = [1.0];
+    let results = tiny_runner().run_remote_ratio_sweep(registry::STRESS, &points);
+    let cell = |scenario: Scenario| {
+        results
+            .iter()
+            .find(|c| c.cell.scenario == scenario)
+            .unwrap()
+            .clone()
+    };
+    let rsp = cell(Scenario::Rsp).result.stats;
+    let srsp = cell(Scenario::Srsp).result.stats;
+    assert!(
+        rsp.l1_invalidates > srsp.l1_invalidates,
+        "naive RSP must flush+invalidate more L1s than selective sRSP \
+         ({} vs {})",
+        rsp.l1_invalidates,
+        srsp.l1_invalidates
+    );
+    assert!(
+        srsp.selective_flush_nops > 0,
+        "sRSP must answer LR-TBL misses with nop acks"
+    );
+}
+
+#[test]
+fn cli_remote_ratio_sweep_round_trips() {
+    let out = Command::new(env!("CARGO_BIN_EXE_srsp"))
+        .args(["sweep", "--axis", "remote-ratio", "--size", "tiny", "--cus", "4"])
+        .args(["--ratios", "0,0.1", "--jobs", "2", "--report", "csv"])
+        .output()
+        .expect("spawn srsp");
+    assert!(
+        out.status.success(),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let csv = String::from_utf8_lossy(&out.stdout);
+    let lines: Vec<&str> = csv.lines().collect();
+    assert_eq!(lines.len(), 1 + 2 * 3, "header + 2 ratios × 3 protocols");
+    assert!(lines[0].contains("remote_ratio"));
+    for line in &lines[1..] {
+        assert!(line.contains("STRESS"), "{line}");
+        assert!(line.contains(",true,"), "oracle-validated row: {line}");
+    }
+}

@@ -1,0 +1,89 @@
+//! Workload-level coverage of the LR-TBL/PA-TBL overflow paths: force
+//! tiny (or zero) table capacities through the device config and assert
+//! that (a) the overflow counters fire and (b) sRSP still passes the
+//! workloads' native oracles — the same oracles the ScopedOnly-protocol
+//! scenarios validate against, so the degraded-table machinery is
+//! checked for correctness, not just liveness. (The sFIFO/table
+//! *performance* sensitivity is the `ablations` bench; this is the
+//! correctness side.)
+
+use srsp::config::{DeviceConfig, Scenario};
+use srsp::harness::presets::{WorkloadPreset, WorkloadSize};
+use srsp::harness::runner::run_validated;
+use srsp::workload::registry;
+
+fn tiny_cfg(lr: u32, pa: u32) -> DeviceConfig {
+    DeviceConfig {
+        lr_tbl_entries: lr,
+        pa_tbl_entries: pa,
+        ..DeviceConfig::small()
+    }
+}
+
+fn stress_preset(r: f64) -> WorkloadPreset {
+    WorkloadPreset::with_params(
+        registry::STRESS,
+        WorkloadSize::Tiny,
+        3,
+        &[("remote_ratio".into(), r)],
+    )
+    .unwrap()
+}
+
+#[test]
+fn disabled_lr_tbl_degrades_to_full_drains_but_stays_exact() {
+    // lr_tbl_entries = 0: every wg-scope release overflows (sticky), so
+    // every selective flush degenerates to a conservative full drain and
+    // requester-side lookups must not short-circuit the broadcast.
+    let cfg = tiny_cfg(0, 16);
+    let stress = stress_preset(0.5);
+    let (run, ok) = run_validated(&cfg, &stress, Scenario::Srsp);
+    assert!(ok, "stress must stay exact with a disabled LR-TBL");
+    assert!(
+        run.stats.lr_tbl_overflows > 0,
+        "capacity 0 must overflow on every record"
+    );
+    // The ScopedOnly protocol validates against the identical oracle.
+    let (_, ok) = run_validated(&cfg, &stress, Scenario::StealOnly);
+    assert!(ok);
+
+    let sssp = WorkloadPreset::new_seeded(registry::SSSP, WorkloadSize::Tiny, 3);
+    let (run, ok) = run_validated(&cfg, &sssp, Scenario::Srsp);
+    assert!(ok, "SSSP must stay exact with a disabled LR-TBL");
+    assert!(run.stats.lr_tbl_overflows > 0);
+}
+
+#[test]
+fn one_entry_tables_overflow_on_prodcons_and_stay_exact() {
+    // The producer–consumer kernel releases one flag per slot — dozens
+    // of distinct sync addresses per producer CU — so one-entry tables
+    // thrash: LR-TBL displacement on the producer side, PA-TBL eager
+    // invalidates on the consumer-armed side.
+    let cfg = tiny_cfg(1, 1);
+    let preset = WorkloadPreset::new_seeded(registry::PRODCONS, WorkloadSize::Tiny, 5);
+    let (run, ok) = run_validated(&cfg, &preset, Scenario::Srsp);
+    assert!(ok, "prodcons must stay exact with one-entry tables");
+    assert!(
+        run.stats.lr_tbl_overflows > 0,
+        "per-slot flag releases must displace a one-entry LR-TBL"
+    );
+    assert!(
+        run.stats.pa_tbl_overflows > 0,
+        "per-slot flag arming must overflow a one-entry PA-TBL"
+    );
+    // Same input under the ScopedOnly protocol: identical oracle.
+    let (_, ok) = run_validated(&cfg, &preset, Scenario::StealOnly);
+    assert!(ok);
+}
+
+#[test]
+fn one_entry_tables_keep_the_graph_apps_exact() {
+    let cfg = tiny_cfg(1, 1);
+    for id in [registry::SSSP, registry::MIS, registry::BFS] {
+        let preset = WorkloadPreset::new_seeded(id, WorkloadSize::Tiny, 9);
+        for scenario in [Scenario::StealOnly, Scenario::Rsp, Scenario::Srsp] {
+            let (_, ok) = run_validated(&cfg, &preset, scenario);
+            assert!(ok, "{id}/{scenario:?} with one-entry tables");
+        }
+    }
+}
