@@ -128,9 +128,9 @@ fn main() {
         "asymmetric mutex on {} CUs: 400 local + 20 remote critical sections\n",
         cfg.num_cus
     );
-    run("global", &cfg, Protocol::ScopedOnly, Scope::Cmp, false);
-    run("rsp", &cfg, Protocol::RspNaive, Scope::Wg, true);
-    run("srsp", &cfg, Protocol::Srsp, Scope::Wg, true);
+    run("global", &cfg, Protocol::SCOPED_ONLY, Scope::Cmp, false);
+    run("rsp", &cfg, Protocol::RSP_NAIVE, Scope::Wg, true);
+    run("srsp", &cfg, Protocol::SRSP, Scope::Wg, true);
     println!("\nexpected shape: global pays on every acquire; naive RSP nukes every");
     println!("bystander's L1 on each remote handoff; sRSP touches only the sharer.");
 }

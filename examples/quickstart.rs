@@ -68,7 +68,7 @@ fn main() {
     println!("device: {} CUs (small test configuration)\n", cfg.num_cus);
 
     let (local_iters, remote_iters) = (200, 10);
-    let mut dev = Device::new(cfg, Protocol::Srsp);
+    let mut dev = Device::new(cfg, Protocol::SRSP);
     let report = dev.launch_simple(&kernel(local_iters, remote_iters), 2);
 
     let total = dev.mem.backing.read_u32(DATA);

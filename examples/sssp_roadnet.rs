@@ -47,7 +47,7 @@ fn main() {
         let (run, mem) = run_scenario_seeded(&cfg, scenario, &mut sssp, NativeMath, 500, image);
         assert!(run.converged, "{scenario}: did not converge");
         assert_eq!(sssp.result(&mem), oracle, "{scenario}: wrong distances");
-        if scenario == Scenario::Baseline {
+        if scenario == Scenario::BASELINE {
             base_cycles = run.stats.cycles;
         }
         rows.push(vec![

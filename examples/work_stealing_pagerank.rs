@@ -69,11 +69,11 @@ fn main() {
     );
 
     // 1) Full stack: sRSP + PJRT-executed Pallas kernel.
-    let (run_pjrt, ranks_pjrt, wall_pjrt, _) = run(&graph, &cfg, Scenario::Srsp, true);
+    let (run_pjrt, ranks_pjrt, wall_pjrt, _) = run(&graph, &cfg, Scenario::SRSP, true);
     assert!(run_pjrt.converged);
 
     // 2) Same run with the native tile math: values must agree closely.
-    let (run_native, ranks_native, wall_native, _) = run(&graph, &cfg, Scenario::Srsp, false);
+    let (run_native, ranks_native, wall_native, _) = run(&graph, &cfg, Scenario::SRSP, false);
     let max_dev = ranks_pjrt
         .iter()
         .zip(&ranks_native)

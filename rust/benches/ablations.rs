@@ -15,7 +15,7 @@ use srsp::workload::registry;
 
 fn run_with(cfg: &DeviceConfig, size: WorkloadSize) -> u64 {
     let preset = WorkloadPreset::new(registry::SSSP, size);
-    run_one(cfg, &preset, Scenario::Srsp).stats.cycles
+    run_one(cfg, &preset, Scenario::SRSP).stats.cycles
 }
 
 fn main() {

@@ -19,9 +19,9 @@ fn main() {
     let mut rows = Vec::new();
     for app in classic_apps() {
         let preset = WorkloadPreset::new(app, size);
-        let base = run_one(&cfg, &preset, Scenario::Baseline).stats.cycles as f64;
+        let base = run_one(&cfg, &preset, Scenario::BASELINE).stats.cycles as f64;
         let mut row = vec![app.display().to_string()];
-        for s in [Scenario::Rsp, Scenario::Srsp, Scenario::Hlrc] {
+        for s in [Scenario::RSP, Scenario::SRSP, Scenario::HLRC] {
             let r = bench_common::timed(&format!("{}/{}", app.display(), s.name()), || {
                 run_one(&cfg, &preset, s)
             });

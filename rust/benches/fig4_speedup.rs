@@ -14,18 +14,18 @@ fn main() {
     let table = fig4_speedup(&results);
     println!("{}", table.render());
     // Shape assertions (the paper's qualitative claims).
-    use srsp::config::Scenario::*;
+    use srsp::config::Scenario;
     assert!(
-        table.geomean(Srsp) > table.geomean(Rsp),
+        table.geomean(Scenario::SRSP) > table.geomean(Scenario::RSP),
         "sRSP must outperform naive RSP"
     );
     assert!(
-        table.geomean(Srsp) > 1.1,
+        table.geomean(Scenario::SRSP) > 1.1,
         "sRSP must clearly beat the Baseline"
     );
     println!(
         "sRSP geomean speedup: {:.3} (paper: ~1.29); RSP: {:.3}",
-        table.geomean(Srsp),
-        table.geomean(Rsp)
+        table.geomean(Scenario::SRSP),
+        table.geomean(Scenario::RSP)
     );
 }

@@ -10,13 +10,13 @@ fn main() {
     let results = bench_common::timed("fig5 matrix", || run_matrix_jobs(&cfg, size, 1));
     let table = fig5_l2(&results);
     println!("{}", table.render());
-    use srsp::config::Scenario::*;
+    use srsp::config::Scenario;
     assert!(
-        table.geomean(Srsp) < table.geomean(Rsp),
+        table.geomean(Scenario::SRSP) < table.geomean(Scenario::RSP),
         "sRSP must generate less L2 traffic than naive RSP"
     );
     assert!(
-        table.geomean(ScopeOnly) < 1.0,
+        table.geomean(Scenario::SCOPE_ONLY) < 1.0,
         "local scope must reduce L2 traffic below global-scope Baseline"
     );
 }

@@ -10,9 +10,9 @@ fn main() {
     let results = bench_common::timed("fig6 matrix", || run_matrix_jobs(&cfg, size, 1));
     let table = fig6_overhead(&results);
     println!("{}", table.render());
-    use srsp::config::Scenario::*;
+    use srsp::config::Scenario;
     assert!(
-        table.geomean(Srsp) < 1.0,
+        table.geomean(Scenario::SRSP) < 1.0,
         "selective promotion must cost less than naive all-L1 promotion"
     );
 }

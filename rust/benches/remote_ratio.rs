@@ -28,15 +28,15 @@ fn main() {
             .map(|c| c.result.stats.cycles as f64)
             .expect("grid covers every point")
     };
-    use srsp::config::Scenario::{Rsp, Srsp, StealOnly};
+    use srsp::config::Scenario;
     let mut rows = Vec::new();
     for &r in &RATIO_POINTS {
-        let base = cycles(StealOnly, r);
+        let base = cycles(Scenario::STEAL_ONLY, r);
         rows.push(vec![
             r.to_string(),
             format!("{}", base as u64),
-            format!("{:.3}", base / cycles(Rsp, r)),
-            format!("{:.3}", base / cycles(Srsp, r)),
+            format!("{:.3}", base / cycles(Scenario::RSP, r)),
+            format!("{:.3}", base / cycles(Scenario::SRSP, r)),
         ]);
     }
     assert!(

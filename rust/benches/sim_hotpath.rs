@@ -19,7 +19,7 @@ fn main() {
         }
         (c, s)
     };
-    for scenario in [Scenario::ScopeOnly, Scenario::Srsp, Scenario::Rsp] {
+    for scenario in [Scenario::SCOPE_ONLY, Scenario::SRSP, Scenario::RSP] {
         let preset = WorkloadPreset::new(srsp::workload::registry::PRK, size);
         let t0 = Instant::now();
         let r = run_one(&cfg, &preset, scenario);

@@ -12,6 +12,7 @@
 
 use crate::config::Scenario;
 use crate::sim::SplitMix64;
+use crate::sync::protocol;
 use crate::workload::registry::{self, WorkloadId, DEFAULT_SEED};
 
 // Execution-side types, re-exported under the coordination name the CLI
@@ -71,18 +72,38 @@ pub fn classic_grid(num_cus: u32) -> Vec<Cell> {
     grid(&classic_apps(), num_cus)
 }
 
-/// Every registered workload × every scenario at one CU count, in stable
-/// registry-major order (the `validate`/`ci-smoke` coverage grid).
-pub fn full_grid(num_cus: u32) -> Vec<Cell> {
-    let apps: Vec<WorkloadId> = registry::all().collect();
-    grid(&apps, num_cus)
+/// The scenarios the coverage grids (`validate`, `ci-smoke`) run: the
+/// paper's five plus the canonical scenario of every further registered
+/// protocol (hlrc, srsp-adaptive, ...), resolved through the protocol
+/// registry — a protocol added there is covered here with no change.
+pub fn coverage_scenarios() -> Vec<Scenario> {
+    let mut scenarios: Vec<Scenario> = Scenario::ALL.to_vec();
+    for p in protocol::all() {
+        let s = Scenario::for_protocol(p);
+        if !scenarios.contains(&s) {
+            scenarios.push(s);
+        }
+    }
+    scenarios
 }
 
-/// App-major grid over an explicit app list.
+/// Every registered workload × every coverage scenario at one CU count,
+/// in stable registry-major order (the `validate`/`ci-smoke` grid).
+pub fn full_grid(num_cus: u32) -> Vec<Cell> {
+    let apps: Vec<WorkloadId> = registry::all().collect();
+    grid_over(&apps, &coverage_scenarios(), num_cus)
+}
+
+/// App-major grid over an explicit app list (the paper's five scenarios).
 pub fn grid(apps: &[WorkloadId], num_cus: u32) -> Vec<Cell> {
-    let mut cells = Vec::with_capacity(apps.len() * Scenario::ALL.len());
+    grid_over(apps, &Scenario::ALL, num_cus)
+}
+
+/// The shared app-major cell constructor behind every coverage grid.
+fn grid_over(apps: &[WorkloadId], scenarios: &[Scenario], num_cus: u32) -> Vec<Cell> {
+    let mut cells = Vec::with_capacity(apps.len() * scenarios.len());
     for &app in apps {
-        for scenario in Scenario::ALL {
+        for &scenario in scenarios {
             cells.push(Cell {
                 app,
                 scenario,
@@ -101,7 +122,7 @@ pub fn scaling_cells(cus: &[u32]) -> Vec<Cell> {
 /// The three scenarios whose protocols the remote-ratio sweep compares:
 /// global-scope stealing (ScopedOnly), naive promotion (RspNaive) and
 /// selective promotion (Srsp).
-pub const RATIO_SCENARIOS: [Scenario; 3] = [Scenario::StealOnly, Scenario::Rsp, Scenario::Srsp];
+pub const RATIO_SCENARIOS: [Scenario; 3] = [Scenario::STEAL_ONLY, Scenario::RSP, Scenario::SRSP];
 
 /// The default remote-ratio sample points of the sweep axis.
 pub const RATIO_POINTS: [f64; 6] = [0.0, 0.05, 0.1, 0.2, 0.4, 0.8];
@@ -113,6 +134,23 @@ pub fn remote_ratio_grid(points: &[f64]) -> Vec<(Scenario, f64)> {
     for &r in points {
         for s in RATIO_SCENARIOS {
             cells.push((s, r));
+        }
+    }
+    cells
+}
+
+/// The default CU-count sample points of the `cu-count` sweep axis (the
+/// paper evaluates at 64; the crossover is plotted against the rest).
+pub const CU_POINTS: [u32; 5] = [4, 8, 16, 32, 64];
+
+/// The protocol × CU-count grid, CU-major (all protocols of one device
+/// size adjacent), mirroring [`remote_ratio_grid`] on the scaling axis —
+/// the Fig. 4 crossover plotted against CU count.
+pub fn cu_count_grid(points: &[u32]) -> Vec<(Scenario, u32)> {
+    let mut cells = Vec::with_capacity(points.len() * RATIO_SCENARIOS.len());
+    for &n in points {
+        for s in RATIO_SCENARIOS {
+            cells.push((s, n));
         }
     }
     cells
@@ -135,12 +173,38 @@ mod tests {
     }
 
     #[test]
-    fn full_grid_covers_every_registered_workload() {
+    fn full_grid_covers_every_registered_workload_and_protocol() {
         let g = full_grid(4);
-        assert_eq!(g.len(), registry::all().count() * Scenario::ALL.len());
+        assert_eq!(g.len(), registry::all().count() * coverage_scenarios().len());
         for id in registry::all() {
             assert!(g.iter().any(|c| c.app == id));
         }
+        // Every registered protocol's canonical scenario is covered.
+        for p in protocol::all() {
+            let s = Scenario::for_protocol(p);
+            assert!(g.iter().any(|c| c.scenario == s), "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn coverage_scenarios_extend_the_paper_five() {
+        let cov = coverage_scenarios();
+        assert_eq!(&cov[..5], &Scenario::ALL);
+        assert!(cov.contains(&Scenario::HLRC));
+        assert!(cov.contains(&Scenario::SRSP_ADAPTIVE));
+        // No duplicates.
+        for (i, a) in cov.iter().enumerate() {
+            assert!(!cov[i + 1..].contains(a), "{a:?} appears twice");
+        }
+    }
+
+    #[test]
+    fn cu_count_grid_is_cu_major() {
+        let g = cu_count_grid(&[8, 64]);
+        assert_eq!(g.len(), 6);
+        assert_eq!(g[0], (Scenario::STEAL_ONLY, 8));
+        assert_eq!(g[2], (Scenario::SRSP, 8));
+        assert_eq!(g[3], (Scenario::STEAL_ONLY, 64));
     }
 
     #[test]
@@ -151,30 +215,30 @@ mod tests {
             num_cus,
         };
         let s = Seeding::PerCell(42);
-        let base = s.seed_for(&cell(registry::PRK, Scenario::Baseline, 4));
+        let base = s.seed_for(&cell(registry::PRK, Scenario::BASELINE, 4));
         // Deterministic.
-        assert_eq!(base, s.seed_for(&cell(registry::PRK, Scenario::Baseline, 4)));
+        assert_eq!(base, s.seed_for(&cell(registry::PRK, Scenario::BASELINE, 4)));
         // Scenario must NOT change the seed (ratios need shared inputs).
-        assert_eq!(base, s.seed_for(&cell(registry::PRK, Scenario::Srsp, 4)));
+        assert_eq!(base, s.seed_for(&cell(registry::PRK, Scenario::SRSP, 4)));
         // App and CU count must.
-        assert_ne!(base, s.seed_for(&cell(registry::SSSP, Scenario::Baseline, 4)));
-        assert_ne!(base, s.seed_for(&cell(registry::PRK, Scenario::Baseline, 8)));
+        assert_ne!(base, s.seed_for(&cell(registry::SSSP, Scenario::BASELINE, 4)));
+        assert_ne!(base, s.seed_for(&cell(registry::PRK, Scenario::BASELINE, 8)));
         // A different base diverges; shared seeding ignores the cell.
         let other_base = Seeding::PerCell(43);
         assert_ne!(
             base,
-            other_base.seed_for(&cell(registry::PRK, Scenario::Baseline, 4))
+            other_base.seed_for(&cell(registry::PRK, Scenario::BASELINE, 4))
         );
         let shared = Seeding::Shared(7);
-        assert_eq!(7, shared.seed_for(&cell(registry::MIS, Scenario::Rsp, 64)));
+        assert_eq!(7, shared.seed_for(&cell(registry::MIS, Scenario::RSP, 64)));
     }
 
     #[test]
     fn remote_ratio_grid_is_ratio_major() {
         let g = remote_ratio_grid(&[0.0, 0.5]);
         assert_eq!(g.len(), 6);
-        assert_eq!(g[0], (Scenario::StealOnly, 0.0));
-        assert_eq!(g[2], (Scenario::Srsp, 0.0));
-        assert_eq!(g[3], (Scenario::StealOnly, 0.5));
+        assert_eq!(g[0], (Scenario::STEAL_ONLY, 0.0));
+        assert_eq!(g[2], (Scenario::SRSP, 0.0));
+        assert_eq!(g[3], (Scenario::STEAL_ONLY, 0.5));
     }
 }

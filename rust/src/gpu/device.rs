@@ -36,9 +36,35 @@ pub struct Device {
 }
 
 impl Device {
+    /// Build a device running `protocol`. The config's `proto_params`
+    /// overrides (`--proto-param k=v`) are resolved against the
+    /// protocol's registry spec here: keys the protocol does not declare
+    /// are ignored (a mixed grid's scoped cells have no tables to size),
+    /// and an explicit `lr_tbl_entries`/`pa_tbl_entries` override wins
+    /// over the config fields for the sRSP family.
     pub fn new(cfg: DeviceConfig, protocol: Protocol) -> Self {
+        let mut cfg = cfg;
+        let spec = protocol.proto().params();
+        let mut params = crate::sync::protocol::resolve_overrides(protocol, &cfg.proto_params)
+            .unwrap_or_else(|e| panic!("{e}"));
+        if spec.iter().any(|p| p.key == "lr_tbl_entries") {
+            if params.is_explicit("lr_tbl_entries") {
+                cfg.lr_tbl_entries = params.get_u32("lr_tbl_entries");
+            } else {
+                params.set_auto("lr_tbl_entries", f64::from(cfg.lr_tbl_entries));
+            }
+        }
+        if spec.iter().any(|p| p.key == "pa_tbl_entries") {
+            if params.is_explicit("pa_tbl_entries") {
+                cfg.pa_tbl_entries = params.get_u32("pa_tbl_entries");
+            } else {
+                params.set_auto("pa_tbl_entries", f64::from(cfg.pa_tbl_entries));
+            }
+        }
+        let mut mem = MemSystem::new(cfg.clone());
+        mem.proto_params = params;
         Self {
-            mem: MemSystem::new(cfg.clone()),
+            mem,
             cfg,
             protocol,
             now: 0,
@@ -169,7 +195,7 @@ mod tests {
 
     #[test]
     fn all_wgs_run_and_results_host_visible() {
-        let mut dev = Device::new(DeviceConfig::small(), Protocol::Srsp);
+        let mut dev = Device::new(DeviceConfig::small(), Protocol::SRSP);
         let report = dev.launch_simple(&store_id_kernel(), 8);
         assert!(report.end_cycle > 0);
         for wg in 0..8u64 {
@@ -183,7 +209,7 @@ mod tests {
 
     #[test]
     fn wg_to_cu_mapping_round_robin() {
-        let dev = Device::new(DeviceConfig::small(), Protocol::Srsp);
+        let dev = Device::new(DeviceConfig::small(), Protocol::SRSP);
         assert_eq!(dev.cu_of_wg(0), 0);
         assert_eq!(dev.cu_of_wg(3), 3);
         assert_eq!(dev.cu_of_wg(4), 0); // 4 CUs in small()
@@ -208,7 +234,7 @@ mod tests {
         a.halt();
         let p = a.finish();
 
-        for proto in [Protocol::ScopedOnly, Protocol::RspNaive, Protocol::Srsp] {
+        for proto in [Protocol::SCOPED_ONLY, Protocol::RSP_NAIVE, Protocol::SRSP] {
             let mut dev = Device::new(DeviceConfig::small(), proto);
             dev.launch_simple(&p, 16);
             assert_eq!(
@@ -221,7 +247,7 @@ mod tests {
 
     #[test]
     fn launches_accumulate_time() {
-        let mut dev = Device::new(DeviceConfig::small(), Protocol::Srsp);
+        let mut dev = Device::new(DeviceConfig::small(), Protocol::SRSP);
         let p = store_id_kernel();
         let r1 = dev.launch_simple(&p, 4);
         let r2 = dev.launch_simple(&p, 4);
@@ -230,8 +256,28 @@ mod tests {
     }
 
     #[test]
+    fn proto_params_size_the_tables_and_ignore_undeclared_keys() {
+        // An explicit lr_tbl_entries proto-param must win over the
+        // config field for the sRSP family...
+        let cfg = DeviceConfig {
+            proto_params: vec![("lr_tbl_entries".to_string(), 2.0)],
+            ..DeviceConfig::small()
+        };
+        let dev = Device::new(cfg.clone(), Protocol::SRSP);
+        assert_eq!(dev.cfg.lr_tbl_entries, 2);
+        // ...the non-explicit pa_tbl_entries keeps the config value and
+        // is surfaced truthfully in the resolved params...
+        assert_eq!(dev.cfg.pa_tbl_entries, 16);
+        assert_eq!(dev.mem.proto_params.get("pa_tbl_entries"), 16.0);
+        assert_eq!(dev.mem.proto_params.get("lr_tbl_entries"), 2.0);
+        // ...and a protocol that declares no tables ignores the key.
+        let dev = Device::new(cfg, Protocol::SCOPED_ONLY);
+        assert_eq!(dev.cfg.lr_tbl_entries, 16);
+    }
+
+    #[test]
     fn stats_capture_cycles() {
-        let mut dev = Device::new(DeviceConfig::small(), Protocol::Srsp);
+        let mut dev = Device::new(DeviceConfig::small(), Protocol::SRSP);
         dev.launch_simple(&store_id_kernel(), 4);
         let s = dev.take_stats();
         assert_eq!(s.cycles, dev.now);

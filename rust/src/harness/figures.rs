@@ -137,7 +137,7 @@ fn stat_of<'a>(results: &'a [RunResult], app: &str, s: Scenario) -> &'a Stats {
 pub fn fig4_speedup(results: &[RunResult]) -> FigureTable {
     let mut cells = Vec::new();
     for app in classic_names() {
-        let base = stat_of(results, app, Scenario::Baseline).cycles as f64;
+        let base = stat_of(results, app, Scenario::BASELINE).cycles as f64;
         for s in Scenario::ALL {
             let c = stat_of(results, app, s).cycles as f64;
             cells.push(FigureCell {
@@ -159,7 +159,7 @@ pub fn fig4_speedup(results: &[RunResult]) -> FigureTable {
 pub fn fig5_l2(results: &[RunResult]) -> FigureTable {
     let mut cells = Vec::new();
     for app in classic_names() {
-        let base = stat_of(results, app, Scenario::Baseline).l2_accesses as f64;
+        let base = stat_of(results, app, Scenario::BASELINE).l2_accesses as f64;
         for s in Scenario::ALL {
             let v = stat_of(results, app, s).l2_accesses as f64;
             cells.push(FigureCell {
@@ -181,10 +181,10 @@ pub fn fig5_l2(results: &[RunResult]) -> FigureTable {
 /// better). Compares only the two promotion-capable scenarios, like the
 /// paper.
 pub fn fig6_overhead(results: &[RunResult]) -> FigureTable {
-    let scenarios = vec![Scenario::Rsp, Scenario::Srsp];
+    let scenarios = vec![Scenario::RSP, Scenario::SRSP];
     let mut cells = Vec::new();
     for app in classic_names() {
-        let rsp = stat_of(results, app, Scenario::Rsp).sync_overhead_cycles as f64;
+        let rsp = stat_of(results, app, Scenario::RSP).sync_overhead_cycles as f64;
         for &s in &scenarios {
             let v = stat_of(results, app, s).sync_overhead_cycles as f64;
             cells.push(FigureCell {
@@ -230,7 +230,7 @@ pub fn scaling_rows(cus: &[u32], results: &[CellResult]) -> Vec<(u32, f64, f64)>
                 .collect();
             let group = into_run_results(group);
             let f4 = fig4_speedup(&group);
-            (n, f4.geomean(Scenario::Rsp), f4.geomean(Scenario::Srsp))
+            (n, f4.geomean(Scenario::RSP), f4.geomean(Scenario::SRSP))
         })
         .collect()
 }
@@ -252,21 +252,21 @@ mod tests {
         let f4 = fig4_speedup(&results);
         // Baseline speedup is 1.0 by construction.
         for app in classic_names() {
-            let v = f4.value(app, Scenario::Baseline).unwrap();
+            let v = f4.value(app, Scenario::BASELINE).unwrap();
             assert!((v - 1.0).abs() < 1e-9);
         }
         let f5 = fig5_l2(&results);
         for app in classic_names() {
-            assert!((f5.value(app, Scenario::Baseline).unwrap() - 1.0).abs() < 1e-9);
+            assert!((f5.value(app, Scenario::BASELINE).unwrap() - 1.0).abs() < 1e-9);
         }
         let f6 = fig6_overhead(&results);
         for app in classic_names() {
-            assert!((f6.value(app, Scenario::Rsp).unwrap() - 1.0).abs() < 1e-9);
+            assert!((f6.value(app, Scenario::RSP).unwrap() - 1.0).abs() < 1e-9);
             // At tiny scale (4 CUs, 2 kB L1s) naive RSP's all-L1 work is
             // nearly free, so only structural facts are asserted here;
             // the paper-scale shape (sRSP ≪ RSP) is validated by the
             // 64-CU integration test and the fig6 bench.
-            assert!(f6.value(app, Scenario::Srsp).unwrap() > 0.0);
+            assert!(f6.value(app, Scenario::SRSP).unwrap() > 0.0);
         }
         // Render paths don't panic.
         let _ = f4.render();

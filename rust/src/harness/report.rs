@@ -78,6 +78,10 @@ pub struct ReportRow {
     /// when the cell ran pure defaults; `;`-separated, never commas, so
     /// the CSV needs no quoting).
     pub params: String,
+    /// `k=v;...` rendering of the protocol-parameter overrides the
+    /// cell's protocol consumed (`--proto-param`; same quoting-free
+    /// format as `params`).
+    pub proto_params: String,
     /// The remote-ratio sweep coordinate (`None` for workloads without
     /// the axis) — first-class so protocol × r crossover curves plot
     /// straight from the CSV.
@@ -112,12 +116,13 @@ pub struct Report {
 impl Report {
     /// The flat report schema, in serialization order (shared by the CSV
     /// header and the JSON object keys).
-    pub const CSV_COLUMNS: [&'static str; 20] = [
+    pub const CSV_COLUMNS: [&'static str; 21] = [
         "app",
         "scenario",
         "cus",
         "seed",
         "params",
+        "proto_params",
         "remote_ratio",
         "rounds",
         "converged",
@@ -153,12 +158,13 @@ impl Report {
             };
             writeln!(
                 out,
-                "{},{},{},{},{},{},{},{},{},{},{},{:.6},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{:.6},{},{},{},{},{},{},{},{}",
                 r.app,
                 r.scenario,
                 r.cus,
                 r.seed,
                 r.params,
+                r.proto_params,
                 remote_ratio,
                 r.rounds,
                 r.converged,
@@ -196,7 +202,7 @@ impl Report {
             write!(
                 out,
                 "  {{\"app\":\"{}\",\"scenario\":\"{}\",\"cus\":{},\"seed\":{},\
-                 \"params\":\"{}\",\"remote_ratio\":{},\
+                 \"params\":\"{}\",\"proto_params\":\"{}\",\"remote_ratio\":{},\
                  \"rounds\":{},\"converged\":{},\"validated\":{},\"cycles\":{},\
                  \"instructions\":{},\"l1_hit_rate\":{:.6},\"l2_accesses\":{},\
                  \"sync_overhead_cycles\":{},\"tasks_executed\":{},\"tasks_stolen\":{},\
@@ -207,6 +213,7 @@ impl Report {
                 r.cus,
                 r.seed,
                 r.params,
+                r.proto_params,
                 remote_ratio,
                 r.rounds,
                 r.converged,
@@ -242,6 +249,7 @@ mod tests {
             cus: 8,
             seed: 0xC0FFEE,
             params: String::new(),
+            proto_params: String::new(),
             remote_ratio: None,
             rounds: 5,
             converged: true,
@@ -260,6 +268,7 @@ mod tests {
         };
         let mut sweep_row = row("STRESS", "srsp", Some(true));
         sweep_row.params = "remote_ratio=0.4".to_string();
+        sweep_row.proto_params = "lr_tbl_entries=4".to_string();
         sweep_row.remote_ratio = Some(0.4);
         Report {
             rows: vec![
@@ -288,8 +297,9 @@ mod tests {
         assert!(lines[1].contains(",,"), "unvalidated row has empty cell");
         assert!(lines[2].contains(",true,"));
         assert!(lines[3].contains(",false,"));
-        // The sweep row carries the axis in both columns.
-        assert!(lines[4].contains(",remote_ratio=0.4,0.4,"));
+        // The sweep row carries the axis in both columns, plus the
+        // protocol-parameter overrides.
+        assert!(lines[4].contains(",remote_ratio=0.4,lr_tbl_entries=4,0.4,"));
     }
 
     #[test]
@@ -311,6 +321,7 @@ mod tests {
         assert!(json.contains("\"remote_ratio\":null"));
         assert!(json.contains("\"remote_ratio\":0.4"));
         assert!(json.contains("\"params\":\"remote_ratio=0.4\""));
+        assert!(json.contains("\"proto_params\":\"lr_tbl_entries=4\""));
         assert!(json.contains("\"l1_hit_rate\":0.875000"));
         assert!(json.contains("\"selective_flush_drains\":40"));
     }

@@ -27,7 +27,8 @@ use std::thread;
 use super::presets::{WorkloadPreset, WorkloadSize};
 use super::report::{Report, ReportRow};
 use crate::config::{DeviceConfig, Scenario};
-use crate::coordinator::{remote_ratio_grid, Cell, Seeding};
+use crate::coordinator::{cu_count_grid, remote_ratio_grid, Cell, Seeding};
+use crate::sync::protocol;
 use crate::workload::driver::{run_scenario_seeded, RunResult};
 use crate::workload::engine::NativeMath;
 use crate::workload::registry::WorkloadId;
@@ -41,6 +42,10 @@ pub struct CellResult {
     /// `k=v;...` rendering of the explicit parameter overrides the cell's
     /// preset carried (empty when the run used pure defaults).
     pub params: String,
+    /// `k=v;...` rendering of the protocol-parameter overrides the
+    /// cell's protocol consumed (`--proto-param`; empty when none apply —
+    /// cells of a mixed grid only surface their own protocol's keys).
+    pub proto_params: String,
     /// The remote-ratio sweep coordinate, when the workload declares one
     /// (the stress family); `None` for workloads without the axis.
     pub remote_ratio: Option<f64>,
@@ -175,6 +180,10 @@ impl Runner {
             cell: *cell,
             seed: preset.seed,
             params: preset.params.overrides_display(),
+            proto_params: protocol::overrides_display(
+                cell.scenario.protocol(),
+                &self.cfg.proto_params,
+            ),
             remote_ratio: preset.remote_ratio(),
             result,
             validated,
@@ -215,7 +224,7 @@ impl Runner {
             .map(|&r| {
                 let cell = Cell {
                     app,
-                    scenario: Scenario::Srsp,
+                    scenario: Scenario::SRSP,
                     num_cus,
                 };
                 // Seeds ignore the scenario (and the ratio: the sweep
@@ -230,6 +239,46 @@ impl Runner {
                 let i = points
                     .iter()
                     .position(|&p| p == r)
+                    .expect("grid point comes from `points`");
+                (
+                    Cell {
+                        app,
+                        scenario,
+                        num_cus,
+                    },
+                    &presets[i],
+                )
+            })
+            .collect();
+        self.run_pairs(&pairs)
+    }
+
+    /// Execute the protocol × CU-count sweep grid on `app` — the Fig. 4
+    /// crossover plotted against CU count, reusing the remote-ratio
+    /// sweep's plumbing: all protocols at one device size share one
+    /// preset (identical inputs), cells run in [`cu_count_grid`]'s
+    /// CU-major order.
+    pub fn run_cu_count_sweep(&self, app: WorkloadId, points: &[u32]) -> Vec<CellResult> {
+        let presets: Vec<WorkloadPreset> = points
+            .iter()
+            .map(|&num_cus| {
+                let cell = Cell {
+                    app,
+                    scenario: Scenario::SRSP,
+                    num_cus,
+                };
+                // Seeds ignore the scenario; per-cell seeding derives a
+                // distinct input per device size.
+                let seed = self.seeding.seed_for(&cell);
+                self.build_preset(app, seed, &[])
+            })
+            .collect();
+        let pairs: Vec<(Cell, &WorkloadPreset)> = cu_count_grid(points)
+            .iter()
+            .map(|&(scenario, num_cus)| {
+                let i = points
+                    .iter()
+                    .position(|&p| p == num_cus)
                     .expect("grid point comes from `points`");
                 (
                     Cell {
@@ -286,6 +335,7 @@ impl Report {
                 cus: c.cell.num_cus,
                 seed: c.seed,
                 params: c.params.clone(),
+                proto_params: c.proto_params.clone(),
                 remote_ratio: c.remote_ratio,
                 rounds: c.result.rounds,
                 converged: c.result.converged,
@@ -310,7 +360,7 @@ impl Report {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{classic_grid, full_grid, RATIO_SCENARIOS};
+    use crate::coordinator::{classic_grid, cu_count_grid, full_grid, RATIO_SCENARIOS};
     use crate::harness::presets::DEFAULT_SEED;
     use crate::workload::registry;
 
@@ -352,22 +402,22 @@ mod tests {
         let cells = [
             Cell {
                 app: registry::PRK,
-                scenario: Scenario::Baseline,
+                scenario: Scenario::BASELINE,
                 num_cus: 4,
             },
             Cell {
                 app: registry::SSSP,
-                scenario: Scenario::Srsp,
+                scenario: Scenario::SRSP,
                 num_cus: 4,
             },
             Cell {
                 app: registry::MIS,
-                scenario: Scenario::Rsp,
+                scenario: Scenario::RSP,
                 num_cus: 4,
             },
             Cell {
                 app: registry::BFS,
-                scenario: Scenario::Srsp,
+                scenario: Scenario::SRSP,
                 num_cus: 4,
             },
         ];
@@ -394,7 +444,7 @@ mod tests {
         // workload × srsp validates on the tiny device.
         let cells: Vec<Cell> = full_grid(4)
             .into_iter()
-            .filter(|c| c.scenario == Scenario::Srsp)
+            .filter(|c| c.scenario == Scenario::SRSP)
             .collect();
         assert_eq!(cells.len(), registry::all().count());
         let results = tiny_runner(4, Seeding::default(), true).run_cells(&cells);
@@ -428,12 +478,59 @@ mod tests {
     }
 
     #[test]
+    fn cu_count_sweep_shape_and_oracles() {
+        let runner = tiny_runner(4, Seeding::PerCell(11), true);
+        let points = [2, 4];
+        let results = runner.run_cu_count_sweep(registry::STRESS, &points);
+        assert_eq!(results.len(), points.len() * RATIO_SCENARIOS.len());
+        for (i, c) in results.iter().enumerate() {
+            let (want_scenario, want_cus) = cu_count_grid(&points)[i];
+            assert_eq!(c.cell.scenario, want_scenario);
+            assert_eq!(c.cell.num_cus, want_cus, "cell {i}");
+            assert_eq!(c.validated, Some(true), "{want_scenario:?} cus={want_cus}");
+        }
+        // All protocols at one CU count share a seed (identical inputs);
+        // different CU counts derive different ones under PerCell.
+        assert_eq!(results[0].seed, results[2].seed);
+        assert_ne!(results[0].seed, results[3].seed);
+        // The report carries the axis through the existing cus column.
+        let report = Report::from_cells(&results);
+        assert!(report.to_csv().contains(",2,"));
+    }
+
+    #[test]
+    fn proto_params_reach_the_device_and_the_report() {
+        let mut runner = tiny_runner(1, Seeding::default(), true);
+        runner.cfg.proto_params = vec![("lr_tbl_entries".to_string(), 1.0)];
+        let srsp = runner.run_cell(&Cell {
+            app: registry::STRESS,
+            scenario: Scenario::SRSP,
+            num_cus: 4,
+        });
+        // The one-entry LR-TBL must actually be in effect (overflows
+        // fire) and the cell still validates.
+        assert_eq!(srsp.validated, Some(true));
+        assert!(srsp.result.stats.lr_tbl_overflows > 0);
+        assert_eq!(srsp.proto_params, "lr_tbl_entries=1");
+        // A scoped-protocol cell ignores the key and reports nothing.
+        let steal = runner.run_cell(&Cell {
+            app: registry::STRESS,
+            scenario: Scenario::STEAL_ONLY,
+            num_cus: 4,
+        });
+        assert_eq!(steal.validated, Some(true));
+        assert_eq!(steal.proto_params, "");
+        let report = Report::from_cells(&[srsp, steal]);
+        assert!(report.to_csv().contains("lr_tbl_entries=1"));
+    }
+
+    #[test]
     fn runner_params_reach_the_preset() {
         let mut runner = tiny_runner(1, Seeding::default(), true);
         runner.params = vec![("tasks".to_string(), 32.0)];
         let cell = Cell {
             app: registry::STRESS,
-            scenario: Scenario::Srsp,
+            scenario: Scenario::SRSP,
             num_cus: 4,
         };
         let r = runner.run_cell(&cell);
@@ -448,7 +545,7 @@ mod tests {
         runner.params = vec![("bogus".to_string(), 1.0)];
         let cell = Cell {
             app: registry::PRK,
-            scenario: Scenario::Baseline,
+            scenario: Scenario::BASELINE,
             num_cus: 4,
         };
         let _ = runner.run_cell(&cell);

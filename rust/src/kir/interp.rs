@@ -293,7 +293,7 @@ mod tests {
         let mut eng = NoopEngine;
         let mut t = 0;
         loop {
-            match step(&mut ctx, prog, mem, Protocol::Srsp, 1, &mut eng, t) {
+            match step(&mut ctx, prog, mem, Protocol::SRSP, 1, &mut eng, t) {
                 StepResult::Continue(next) => t = next.max(t + 1),
                 StepResult::Halted => return (ctx, t),
             }
@@ -344,7 +344,7 @@ mod tests {
         let mut eng = NoopEngine;
         let mut t = 0;
         loop {
-            match step(&mut ctx, &p, &mut mem, Protocol::Srsp, 8, &mut eng, t) {
+            match step(&mut ctx, &p, &mut mem, Protocol::SRSP, 8, &mut eng, t) {
                 StepResult::Continue(n) => t = n.max(t + 1),
                 StepResult::Halted => break,
             }
@@ -410,7 +410,7 @@ mod tests {
         let mut mem = MemSystem::new(DeviceConfig::small());
         let mut ctx = WgContext::new(0, 0);
         let mut eng = NoopEngine;
-        match step(&mut ctx, &p, &mut mem, Protocol::Srsp, 1, &mut eng, 0) {
+        match step(&mut ctx, &p, &mut mem, Protocol::SRSP, 1, &mut eng, 0) {
             StepResult::Continue(t) => assert!(t >= QUANTUM_INSTS as u64 / 2),
             StepResult::Halted => panic!("must not halt"),
         }
@@ -441,7 +441,7 @@ mod tests {
         let mut eng = CountingEngine { calls: 0 };
         let mut t = 0;
         loop {
-            match step(&mut ctx, &p, &mut mem, Protocol::Srsp, 1, &mut eng, t) {
+            match step(&mut ctx, &p, &mut mem, Protocol::SRSP, 1, &mut eng, t) {
                 StepResult::Continue(n) => t = n.max(t + 1),
                 StepResult::Halted => break,
             }
@@ -465,6 +465,6 @@ mod tests {
         let mut mem = MemSystem::new(DeviceConfig::small());
         let mut ctx = WgContext::new(0, 0);
         let mut eng = NoopEngine;
-        let _ = step(&mut ctx, &p, &mut mem, Protocol::Srsp, 1, &mut eng, 0);
+        let _ = step(&mut ctx, &p, &mut mem, Protocol::SRSP, 1, &mut eng, 0);
     }
 }

@@ -11,9 +11,11 @@
 //!
 //! * [`mem`] — L1 write-combining caches with sFIFO dirty tracking, a shared
 //!   banked L2, a channelled DRAM model and the flat backing store.
-//! * [`sync`] — scoped acquire/release semantics and the three protocol
-//!   engines: global-scope baseline, naive RSP (flush/invalidate *every* L1)
-//!   and sRSP (selective-flush / selective-invalidate via LR-TBL + PA-TBL).
+//! * [`sync`] — scoped acquire/release semantics and the pluggable
+//!   protocol registry: one module per protocol (scoped baseline, naive
+//!   RSP, sRSP, hLRC, adaptive sRSP) behind the
+//!   [`SyncProtocol`](sync::SyncProtocol) trait, sharing one scoped-op
+//!   core.
 //! * [`kir`] — a small kernel IR (the HSAIL analog): registers, ALU ops,
 //!   branches, scoped/remote atomics; workloads are real programs executed
 //!   against the simulated memory system.
@@ -38,6 +40,7 @@ pub mod gpu;
 pub mod harness;
 pub mod kir;
 pub mod mem;
+pub mod params;
 pub mod proptest;
 pub mod runtime;
 pub mod sim;

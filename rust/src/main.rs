@@ -14,11 +14,14 @@
 use std::time::Instant;
 
 use srsp::config::{parse_config_str, DeviceConfig, Scenario};
-use srsp::coordinator::{classic_grid, full_grid, scaling_cells, Seeding, RATIO_POINTS};
+use srsp::coordinator::{
+    classic_grid, full_grid, scaling_cells, Seeding, CU_POINTS, RATIO_POINTS, RATIO_SCENARIOS,
+};
 use srsp::harness::figures::{fig4_speedup, fig5_l2, fig6_overhead, run_one, scaling_rows};
 use srsp::harness::presets::{WorkloadPreset, WorkloadSize, DEFAULT_SEED};
 use srsp::harness::report::{format_table, Report, ReportFormat};
 use srsp::harness::runner::{into_run_results, CellResult, Runner};
+use srsp::sync::protocol;
 use srsp::workload::graph::Graph;
 use srsp::workload::registry::{self, Params, WorkloadId};
 
@@ -30,12 +33,15 @@ USAGE:
 COMMANDS:
     table1                 Print the Table-1 simulation parameters
     list-workloads         Print the registered workload table
+    list-protocols         Print the registered sync-protocol table
     fig4                   Regenerate Fig. 4 (speedup vs Baseline)
     fig5                   Regenerate Fig. 5 (L2 accesses vs Baseline)
     fig6                   Regenerate Fig. 6 (sync overhead vs RSP)
     sweep                  Scaling sweep: --axis cus (RSP vs sRSP geomean as
-                           CUs grow, the default) or --axis remote-ratio
+                           CUs grow, the default), --axis remote-ratio
                            (protocol × r crossover on the stress family,
+                           oracle-gated) or --axis cu-count (protocol ×
+                           device-size crossover on one workload,
                            oracle-gated)
     run                    Run one workload under one scenario, print stats
     validate               Run every workload/scenario and check the oracles
@@ -49,10 +55,20 @@ OPTIONS:
                                 stress for `sweep --axis remote-ratio`)
     --param <k=v>               Override a workload parameter (repeatable;
                                 single-workload commands only)
-    --scenario <name>           baseline|scope|steal|rsp|srsp|hlrc (default srsp)
-    --axis <cus|remote-ratio>   Sweep axis for `sweep` (default cus)
+    --protocol <name>           Run `run` under a protocol's canonical
+                                scenario by registry name (see
+                                `srsp list-protocols`; overrides --scenario)
+    --proto-param <k=v>         Override a protocol parameter (repeatable;
+                                e.g. lr_tbl_entries, pa_tbl_entries,
+                                overflow_threshold; run + sweep commands)
+    --scenario <name>           baseline|scope|steal or any protocol name
+                                (rsp|srsp|hlrc|srsp-adaptive; default srsp)
+    --axis <cus|remote-ratio|cu-count>
+                                Sweep axis for `sweep` (default cus)
     --ratios <r1,r2,...>        remote-ratio sample points in [0, 1]
                                 (default 0,0.05,0.1,0.2,0.4,0.8)
+    --cu-counts <n1,n2,...>     cu-count sample points
+                                (default 4,8,16,32,64)
     --cus <n>                   Override CU count (ci-smoke default: 8)
     --size <tiny|paper>         Workload scale (default paper; ci-smoke: tiny)
     --jobs <n>                  Worker threads for matrix commands
@@ -71,14 +87,18 @@ OPTIONS:
 enum SweepAxis {
     Cus,
     RemoteRatio,
+    CuCount,
 }
 
 struct Opts {
     app: Option<WorkloadId>,
     scenario: Scenario,
+    protocol: Option<srsp::config::Protocol>,
     axis: SweepAxis,
     ratios: Option<Vec<f64>>,
+    cu_counts: Option<Vec<u32>>,
     params: Vec<(String, f64)>,
+    proto_params: Vec<(String, f64)>,
     cus: Option<u32>,
     size: Option<WorkloadSize>,
     jobs: Option<usize>,
@@ -92,10 +112,13 @@ struct Opts {
 fn parse_opts(args: &[String]) -> Result<Opts, String> {
     let mut o = Opts {
         app: None,
-        scenario: Scenario::Srsp,
+        scenario: Scenario::SRSP,
+        protocol: None,
         axis: SweepAxis::Cus,
         ratios: None,
+        cu_counts: None,
         params: Vec::new(),
+        proto_params: Vec::new(),
         cus: None,
         size: None,
         jobs: None,
@@ -137,11 +160,38 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
                 o.scenario =
                     Scenario::from_name(&v).ok_or_else(|| format!("unknown scenario '{v}'"))?;
             }
+            "--protocol" => {
+                let v = val()?;
+                o.protocol = Some(protocol::resolve(&v).ok_or_else(|| {
+                    let names: Vec<&str> = protocol::all().map(|p| p.name()).collect();
+                    format!("unknown protocol '{v}' (registered: {})", names.join(", "))
+                })?);
+            }
+            "--proto-param" => {
+                let v = val()?;
+                let (k, raw) = v
+                    .split_once('=')
+                    .ok_or_else(|| format!("--proto-param needs key=value, got '{v}'"))?;
+                let num: f64 = raw
+                    .parse()
+                    .map_err(|e| format!("--proto-param {k}: bad value '{raw}': {e}"))?;
+                if !num.is_finite() || num < 0.0 {
+                    return Err(format!(
+                        "--proto-param {k}: must be a finite non-negative number, got '{raw}'"
+                    ));
+                }
+                o.proto_params.push((k.to_string(), num));
+            }
             "--axis" => {
                 o.axis = match val()?.as_str() {
                     "cus" => SweepAxis::Cus,
                     "remote-ratio" | "remote_ratio" => SweepAxis::RemoteRatio,
-                    other => return Err(format!("unknown axis '{other}' (cus|remote-ratio)")),
+                    "cu-count" | "cu_count" => SweepAxis::CuCount,
+                    other => {
+                        return Err(format!(
+                            "unknown axis '{other}' (cus|remote-ratio|cu-count)"
+                        ))
+                    }
                 }
             }
             "--ratios" => {
@@ -163,6 +213,24 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
                 o.ratios = Some(points);
             }
             "--cus" => o.cus = Some(val()?.parse().map_err(|e| format!("--cus: {e}"))?),
+            "--cu-counts" => {
+                let v = val()?;
+                let mut points = Vec::new();
+                for part in v.split(',') {
+                    let n: u32 = part
+                        .trim()
+                        .parse()
+                        .map_err(|e| format!("--cu-counts: bad point '{part}': {e}"))?;
+                    if n == 0 {
+                        return Err("--cu-counts: points must be > 0".into());
+                    }
+                    points.push(n);
+                }
+                if points.is_empty() {
+                    return Err("--cu-counts needs at least one point".into());
+                }
+                o.cu_counts = Some(points);
+            }
             "--size" => {
                 o.size = match val()?.as_str() {
                     "tiny" => Some(WorkloadSize::Tiny),
@@ -237,6 +305,127 @@ impl Opts {
             ))
         }
     }
+
+    /// Each sweep axis consumes its own point flag (`--ratios`,
+    /// `--cu-counts`) and the cu-count/cus axes vary the device size
+    /// themselves; a flag the selected axis would silently ignore is
+    /// rejected so the user never plots a grid believing it was
+    /// constrained (`--cus` vs `--cu-counts` especially invites the
+    /// mix-up).
+    fn check_axis_flags(&self) -> Result<(), String> {
+        let err = |flag: &str, axis: &str| {
+            Err(format!(
+                "{flag} applies to sweep --axis {axis}; the selected axis would ignore it"
+            ))
+        };
+        match self.axis {
+            SweepAxis::Cus => {
+                if self.ratios.is_some() {
+                    return err("--ratios", "remote-ratio");
+                }
+                if self.cu_counts.is_some() {
+                    return err("--cu-counts", "cu-count");
+                }
+                if self.cus.is_some() {
+                    return Err(
+                        "sweep --axis cus runs the fixed 4,8,16,32,64 grid; --cus does not \
+                         apply"
+                            .into(),
+                    );
+                }
+            }
+            SweepAxis::RemoteRatio => {
+                if self.cu_counts.is_some() {
+                    return err("--cu-counts", "cu-count");
+                }
+            }
+            SweepAxis::CuCount => {
+                if self.ratios.is_some() {
+                    return err("--ratios", "remote-ratio");
+                }
+                if self.cus.is_some() {
+                    return Err(
+                        "--cus conflicts with sweep --axis cu-count (the axis varies the CU \
+                         count; use --cu-counts)"
+                            .into(),
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The sweep point flags mean nothing outside `sweep`.
+    fn reject_axis_points(&self, cmd: &str) -> Result<(), String> {
+        if self.ratios.is_some() {
+            return Err(format!(
+                "--ratios applies to sweep --axis remote-ratio, not '{cmd}'"
+            ));
+        }
+        if self.cu_counts.is_some() {
+            return Err(format!(
+                "--cu-counts applies to sweep --axis cu-count, not '{cmd}'"
+            ));
+        }
+        Ok(())
+    }
+
+    /// Only `run` consumes `--protocol`; everywhere else the flag would
+    /// be silently ignored — reject it like a bad `--param` key so the
+    /// user never plots a grid believing it ran their protocol.
+    fn reject_protocol(&self, cmd: &str) -> Result<(), String> {
+        if self.protocol.is_none() {
+            Ok(())
+        } else {
+            Err(format!(
+                "--protocol applies to run, not '{cmd}' (matrix commands run fixed \
+                 scenario grids; see `srsp list-protocols`)"
+            ))
+        }
+    }
+
+    /// Mixed coverage grids run protocol defaults; `--proto-param` keys
+    /// are only meaningful against the protocols a command selects.
+    fn reject_proto_params(&self, cmd: &str) -> Result<(), String> {
+        if self.proto_params.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "--proto-param applies to run and the remote-ratio/cu-count sweep axes, \
+                 not '{cmd}'"
+            ))
+        }
+    }
+
+    /// Every `--proto-param` key must be declared by at least one of the
+    /// protocols the command runs (a clean CLI error instead of a
+    /// silently-ignored typo).
+    fn check_proto_params(&self, scenarios: &[Scenario]) -> Result<(), String> {
+        'keys: for (key, _) in &self.proto_params {
+            for s in scenarios {
+                let spec = s.protocol().proto().params();
+                if spec.iter().any(|p| p.key == key.as_str()) {
+                    continue 'keys;
+                }
+            }
+            let protos: Vec<&str> = scenarios.iter().map(|s| s.protocol().name()).collect();
+            return Err(format!(
+                "--proto-param '{key}' is not declared by any selected protocol ({}); \
+                 see `srsp list-protocols`",
+                protos.join(", ")
+            ));
+        }
+        Ok(())
+    }
+
+    /// The scenario `run` executes: `--protocol <name>`'s canonical
+    /// scenario when given, `--scenario` otherwise.
+    fn run_scenario(&self) -> Scenario {
+        match self.protocol {
+            Some(p) => Scenario::for_protocol(p),
+            None => self.scenario,
+        }
+    }
 }
 
 fn device_config(o: &Opts) -> Result<DeviceConfig, String> {
@@ -250,6 +439,7 @@ fn device_config(o: &Opts) -> Result<DeviceConfig, String> {
     if let Some(n) = o.cus {
         cfg.num_cus = n;
     }
+    cfg.proto_params = o.proto_params.clone();
     cfg.validate()?;
     Ok(cfg)
 }
@@ -385,8 +575,38 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                 .collect();
             println!("{}", format_table(&header, &rows));
         }
+        "list-protocols" => {
+            let header = vec![
+                "name".to_string(),
+                "aliases".to_string(),
+                "remote".to_string(),
+                "params (defaults)".to_string(),
+                "summary".to_string(),
+            ];
+            let rows: Vec<Vec<String>> = protocol::all()
+                .map(|id| {
+                    let p = id.proto();
+                    let params: Vec<String> = p
+                        .params()
+                        .iter()
+                        .map(|s| format!("{}={}", s.key, s.default))
+                        .collect();
+                    vec![
+                        p.name().to_string(),
+                        p.aliases().join(","),
+                        if p.supports_remote() { "yes" } else { "no" }.to_string(),
+                        params.join(","),
+                        p.summary().to_string(),
+                    ]
+                })
+                .collect();
+            println!("{}", format_table(&header, &rows));
+        }
         "fig4" | "fig5" | "fig6" => {
             o.reject_params(cmd)?;
+            o.reject_proto_params(cmd)?;
+            o.reject_protocol(cmd)?;
+            o.reject_axis_points(cmd)?;
             let cfg = device_config(o)?;
             let size = o.size.unwrap_or(WorkloadSize::Paper);
             let cells = classic_grid(cfg.num_cus);
@@ -413,6 +633,16 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
         "sweep" => match o.axis {
             SweepAxis::Cus => {
                 o.reject_params("sweep --axis cus")?;
+                o.reject_proto_params("sweep --axis cus")?;
+                o.reject_protocol("sweep --axis cus")?;
+                o.check_axis_flags()?;
+                if o.app.is_some() {
+                    return Err(
+                        "sweep --axis cus runs the fixed classic grid; --app applies to \
+                         the remote-ratio and cu-count axes"
+                            .into(),
+                    );
+                }
                 let cus = [4u32, 8, 16, 32, 64];
                 let size = o.size.unwrap_or(WorkloadSize::Paper);
                 eprintln!("scaling sweep over {cus:?} CUs ({} jobs) ...", o.jobs());
@@ -444,6 +674,9 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                 // runner (which would panic inside a worker thread).
                 Params::resolve(app.kernel().params(), &o.params)
                     .map_err(|e| format!("{}: {e}", app.name()))?;
+                o.check_proto_params(&RATIO_SCENARIOS)?;
+                o.reject_protocol("sweep --axis remote-ratio")?;
+                o.check_axis_flags()?;
                 let cfg = device_config(o)?;
                 let size = o.size.unwrap_or(WorkloadSize::Paper);
                 let points = match &o.ratios {
@@ -471,12 +704,12 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                 let body: Vec<Vec<String>> = points
                     .iter()
                     .map(|&r| {
-                        let base = cycles_of(Scenario::StealOnly, r);
+                        let base = cycles_of(Scenario::STEAL_ONLY, r);
                         vec![
                             r.to_string(),
                             format!("{}", base as u64),
-                            format!("{:.3}", base / cycles_of(Scenario::Rsp, r)),
-                            format!("{:.3}", base / cycles_of(Scenario::Srsp, r)),
+                            format!("{:.3}", base / cycles_of(Scenario::RSP, r)),
+                            format!("{:.3}", base / cycles_of(Scenario::SRSP, r)),
                         ]
                     })
                     .collect();
@@ -499,8 +732,74 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                     return Err(format!("{failures} oracle failures in the remote-ratio sweep"));
                 }
             }
+            SweepAxis::CuCount => {
+                let app = o.app.unwrap_or(registry::STRESS);
+                Params::resolve(app.kernel().params(), &o.params)
+                    .map_err(|e| format!("{}: {e}", app.name()))?;
+                o.check_proto_params(&RATIO_SCENARIOS)?;
+                o.reject_protocol("sweep --axis cu-count")?;
+                o.check_axis_flags()?;
+                let cfg = device_config(o)?;
+                let size = o.size.unwrap_or(WorkloadSize::Paper);
+                let points = match &o.cu_counts {
+                    Some(p) => p.clone(),
+                    None => CU_POINTS.to_vec(),
+                };
+                eprintln!(
+                    "cu-count sweep on {} at {size:?} scale: cus = {points:?} ({} jobs) ...",
+                    app.name(),
+                    o.jobs()
+                );
+                let runner = o.runner(cfg, size, true);
+                let results = runner.run_cu_count_sweep(app, &points);
+                emit_report(&results, o)?;
+                let failures = print_validation(&results, o);
+                let cycles_of = |scenario: Scenario, n: u32| {
+                    results
+                        .iter()
+                        .find(|c| c.cell.scenario == scenario && c.cell.num_cus == n)
+                        .map(|c| c.result.stats.cycles as f64)
+                        .expect("sweep grid covers every (scenario, cus)")
+                };
+                let body: Vec<Vec<String>> = points
+                    .iter()
+                    .map(|&n| {
+                        let base = cycles_of(Scenario::STEAL_ONLY, n);
+                        vec![
+                            n.to_string(),
+                            format!("{}", base as u64),
+                            format!("{:.3}", base / cycles_of(Scenario::RSP, n)),
+                            format!("{:.3}", base / cycles_of(Scenario::SRSP, n)),
+                        ]
+                    })
+                    .collect();
+                let header = vec![
+                    "CUs".to_string(),
+                    "steal cycles".to_string(),
+                    "rsp ×".to_string(),
+                    "srsp ×".to_string(),
+                ];
+                human(
+                    o,
+                    &format!(
+                        "CU-count sweep — {} — speedup vs global-scope stealing \
+                         (steal = 1.0)\n{}",
+                        app.display(),
+                        format_table(&header, &body)
+                    ),
+                );
+                if failures > 0 {
+                    return Err(format!("{failures} oracle failures in the cu-count sweep"));
+                }
+            }
         },
         "run" => {
+            o.reject_axis_points(cmd)?;
+            let scenario = o.run_scenario();
+            // Strict validation against the selected protocol's spec: an
+            // unknown key is a typo, not a mixed-grid mismatch.
+            Params::resolve(scenario.protocol().proto().params(), &o.proto_params)
+                .map_err(|e| format!("{}: {e}", scenario.protocol().name()))?;
             let cfg = device_config(o)?;
             let app = o.app.unwrap_or(registry::PRK);
             let size = o.size.unwrap_or(WorkloadSize::Paper);
@@ -518,10 +817,10 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
             eprintln!(
                 "running {}{overrides} under {} on {} CUs{shape} ...",
                 app.name(),
-                o.scenario,
+                scenario,
                 cfg.num_cus,
             );
-            let r = run_one(&cfg, &preset, o.scenario);
+            let r = run_one(&cfg, &preset, scenario);
             println!(
                 "app={} scenario={} rounds={} converged={}",
                 r.app, r.scenario, r.rounds, r.converged
@@ -530,6 +829,9 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
         }
         "validate" => {
             o.reject_params(cmd)?;
+            o.reject_proto_params(cmd)?;
+            o.reject_protocol(cmd)?;
+            o.reject_axis_points(cmd)?;
             let cfg = device_config(o)?;
             let size = o.size.unwrap_or(WorkloadSize::Paper);
             let runner = o.runner(cfg.clone(), size, true);
@@ -543,6 +845,9 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
         }
         "ci-smoke" => {
             o.reject_params(cmd)?;
+            o.reject_proto_params(cmd)?;
+            o.reject_protocol(cmd)?;
+            o.reject_axis_points(cmd)?;
             let mut cfg = device_config(o)?;
             if o.cus.is_none() && o.config.is_none() {
                 // Small device so the gate stays fast in CI, but still
@@ -553,12 +858,13 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
             let size = o.size.unwrap_or(WorkloadSize::Tiny);
             let jobs = o.jobs();
             let cells = full_grid(cfg.num_cus);
+            let scenarios = cells.len() / registry::all().count();
             eprintln!(
                 "ci-smoke: {} cells ({} workloads × {} scenarios) at {size:?} scale on {} CUs, \
                  {jobs} job(s) ...",
                 cells.len(),
                 registry::all().count(),
-                Scenario::ALL.len(),
+                scenarios,
                 cfg.num_cus
             );
             let t0 = Instant::now();

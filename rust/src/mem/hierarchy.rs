@@ -68,6 +68,12 @@ pub struct MemSystem {
     hlrc_capacity: usize,
     dram: Banked,
     pub stats: Stats,
+    /// Resolved sync-protocol parameters (`--proto-param` overlaid on the
+    /// selected protocol's registry spec). Populated by
+    /// [`Device::new`](crate::gpu::Device::new); a bare `MemSystem` keeps
+    /// the empty default and protocol hooks fall back to their spec
+    /// defaults via [`Params::get_or`](crate::params::Params::get_or).
+    pub proto_params: crate::params::Params,
 }
 
 impl MemSystem {
@@ -91,6 +97,7 @@ impl MemSystem {
             dram: Banked::new(cfg.dram_channels),
             backing: BackingStore::new(),
             stats: Stats::new(),
+            proto_params: crate::params::Params::default(),
             cus,
             cfg,
         }

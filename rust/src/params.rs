@@ -1,0 +1,159 @@
+//! Generic tunable-parameter machinery shared by the pluggable
+//! registries: workloads (`--param k=v` against a [`Kernel`] spec) and
+//! sync protocols (`--proto-param k=v` against a [`SyncProtocol`] spec).
+//!
+//! A registry entry declares a static [`ParamSpec`] slice; [`Params`]
+//! overlays user overrides on the spec defaults and remembers which keys
+//! were explicit (the `k=v;...` report columns render only those).
+//!
+//! [`Kernel`]: crate::workload::registry::Kernel
+//! [`SyncProtocol`]: crate::sync::protocol::SyncProtocol
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One tunable parameter a registry entry exposes.
+#[derive(Debug, Clone, Copy)]
+pub struct ParamSpec {
+    pub key: &'static str,
+    /// Default value; by convention `0` often means "auto by size"
+    /// (materialized in `prepare`/device construction) — the `help`
+    /// text says so.
+    pub default: f64,
+    pub help: &'static str,
+}
+
+/// Resolved parameter values for one registry-entry instance: the spec
+/// defaults overlaid with the user's explicit overrides.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Params {
+    vals: BTreeMap<&'static str, f64>,
+    explicit: BTreeSet<&'static str>,
+}
+
+impl Params {
+    /// Overlay `overrides` on `specs`' defaults. Unknown keys are an
+    /// error listing the valid ones.
+    pub fn resolve(
+        specs: &'static [ParamSpec],
+        overrides: &[(String, f64)],
+    ) -> Result<Params, String> {
+        let mut p = Params::default();
+        for s in specs {
+            p.vals.insert(s.key, s.default);
+        }
+        for (key, val) in overrides {
+            if !val.is_finite() || *val < 0.0 {
+                return Err(format!(
+                    "parameter '{key}' must be a finite non-negative number, got {val}"
+                ));
+            }
+            let Some(spec) = specs.iter().find(|s| s.key == key.as_str()) else {
+                let valid: Vec<&str> = specs.iter().map(|s| s.key).collect();
+                return Err(format!(
+                    "unknown parameter '{key}' (valid: {})",
+                    if valid.is_empty() {
+                        "none".to_string()
+                    } else {
+                        valid.join(", ")
+                    }
+                ));
+            };
+            p.vals.insert(spec.key, *val);
+            p.explicit.insert(spec.key);
+        }
+        Ok(p)
+    }
+
+    /// Value of `key`. Panics on a key the spec does not declare —
+    /// that is a registry-author bug, not a user error.
+    pub fn get(&self, key: &str) -> f64 {
+        *self
+            .vals
+            .get(key)
+            .unwrap_or_else(|| panic!("parameter '{key}' not declared in the registry spec"))
+    }
+
+    /// Value of `key`, or `default` when the spec never declared it
+    /// (e.g. a bare [`crate::mem::MemSystem`] constructed without going
+    /// through [`crate::gpu::Device`]).
+    pub fn get_or(&self, key: &str, default: f64) -> f64 {
+        self.vals.get(key).copied().unwrap_or(default)
+    }
+
+    pub fn get_u32(&self, key: &str) -> u32 {
+        self.get(key) as u32
+    }
+
+    /// Was `key` explicitly overridden by the user?
+    pub fn is_explicit(&self, key: &str) -> bool {
+        self.explicit.contains(key)
+    }
+
+    /// Materialize an auto default (used by `prepare` hooks for
+    /// size-dependent defaults); does not mark the key explicit.
+    pub fn set_auto(&mut self, key: &'static str, val: f64) {
+        self.vals.insert(key, val);
+    }
+
+    /// Compact `k=v;k2=v2` rendering of the explicit overrides (report
+    /// column; empty when the run used pure defaults).
+    pub fn overrides_display(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        for key in &self.explicit {
+            let v = self.vals[key];
+            if v == v.trunc() && v.abs() < 1e15 {
+                parts.push(format!("{key}={}", v as i64));
+            } else {
+                parts.push(format!("{key}={v}"));
+            }
+        }
+        parts.join(";")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_resolution_and_errors() {
+        let specs: &'static [ParamSpec] = &[
+            ParamSpec {
+                key: "alpha",
+                default: 2.0,
+                help: "",
+            },
+            ParamSpec {
+                key: "beta",
+                default: 0.5,
+                help: "",
+            },
+        ];
+        let p = Params::resolve(specs, &[("beta".into(), 0.25)]).unwrap();
+        assert_eq!(p.get("alpha"), 2.0);
+        assert_eq!(p.get("beta"), 0.25);
+        assert!(p.is_explicit("beta") && !p.is_explicit("alpha"));
+        assert_eq!(p.overrides_display(), "beta=0.25");
+        let err = Params::resolve(specs, &[("gamma".into(), 1.0)]).unwrap_err();
+        assert!(err.contains("alpha") && err.contains("beta"), "{err}");
+        // Values are range-checked: a negative would silently saturate
+        // to 0 in `get_u32` (e.g. sticky-overflow table mode).
+        let err = Params::resolve(specs, &[("alpha".into(), -1.0)]).unwrap_err();
+        assert!(err.contains("non-negative"), "{err}");
+        let err = Params::resolve(specs, &[("alpha".into(), f64::NAN)]).unwrap_err();
+        assert!(err.contains("finite"), "{err}");
+    }
+
+    #[test]
+    fn get_or_falls_back_on_undeclared_keys() {
+        let p = Params::default();
+        assert_eq!(p.get_or("anything", 0.75), 0.75);
+        let specs: &'static [ParamSpec] = &[ParamSpec {
+            key: "x",
+            default: 3.0,
+            help: "",
+        }];
+        let p = Params::resolve(specs, &[]).unwrap();
+        assert_eq!(p.get_or("x", 9.0), 3.0);
+    }
+}

@@ -1,38 +1,32 @@
-//! Protocol engines: scoped and remote synchronization operations (§2.2, §4).
+//! The synchronization engine: thin dispatch from scoped/remote
+//! operation requests to the registered [`SyncProtocol`] hooks.
 //!
-//! Each operation is orchestrated over [`MemSystem`] primitives and is
-//! parameterized by [`Protocol`]:
+//! Historically this module was an ~900-line monolith interleaving every
+//! protocol's logic behind `match protocol` arms; the per-protocol logic
+//! now lives in its own module ([`scoped`](super::scoped),
+//! [`rsp_naive`](super::rsp_naive), [`srsp`](super::srsp),
+//! [`hlrc`](super::hlrc), [`srsp_adaptive`](super::srsp_adaptive)) behind
+//! the [`SyncProtocol`] trait, sharing the protocol-independent scoped-op
+//! core in [`ops`](super::ops). This module only:
 //!
-//! | op                | ScopedOnly          | RspNaive                       | Srsp                                  |
-//! |-------------------|---------------------|--------------------------------|---------------------------------------|
-//! | wg acquire        | L1 atomic           | L1 atomic                      | PA-TBL check → maybe promote (§4.4)   |
-//! | wg release        | L1 atomic           | L1 atomic                      | + LR-TBL record (§4.1)                |
-//! | cmp acquire       | inv own L1 + L2 op  | same                           | same                                  |
-//! | cmp release       | flush own L1 + L2 op| same                           | same                                  |
-//! | remote acquire    | —                   | flush+inv **all** L1s + L2 op  | selective-flush bcast (§4.2) + L2 op  |
-//! | remote release    | —                   | flush own + L2 op + inv **all**| flush own + L2 op + sel-inv bcast (§4.3) |
-//! | remote acq+rel    | —                   | both of the above              | both of the above                     |
+//! * bundles the request into a [`SyncOp`],
+//! * maintains the scope-level operation counters,
+//! * routes wg-scope and remote ops to the protocol hooks (cmp/sys scope
+//!   are protocol-independent and go straight to the shared core),
+//! * charges the Fig. 6 overhead accounting for remote ops.
 //!
-//! Overhead accounting: every cycle beyond what the *same atomic at wg
-//! scope on an L1 hit* would cost is charged to
-//! `stats.sync_overhead_cycles` — the Fig. 6 metric.
+//! [`SyncProtocol`]: super::protocol::SyncProtocol
 
+use super::ops;
+pub use super::ops::{SyncOp, SyncOutcome};
+use super::protocol::Protocol;
 use super::scope::{AtomicOp, MemOrder, Scope};
-use crate::config::Protocol;
-use crate::mem::{line_of, Addr, MemSystem};
+use crate::mem::{Addr, MemSystem};
 use crate::sim::Cycle;
 
-/// Result of a synchronization operation.
-#[derive(Debug, Clone, Copy)]
-pub struct SyncOutcome {
-    /// Value returned to the program (old value for RMW ops).
-    pub value: u32,
-    /// Completion cycle.
-    pub done: Cycle,
-}
-
-/// Perform a scoped atomic (§2.2). `scope` ∈ {Wg, Cmp}; remote ops go
-/// through [`remote_op`].
+/// Perform a scoped atomic (§2.2). `scope` ∈ {Wg, Cmp, Sys}; remote ops
+/// go through [`remote_op`].
+#[allow(clippy::too_many_arguments)]
 pub fn sync_op(
     m: &mut MemSystem,
     protocol: Protocol,
@@ -45,288 +39,37 @@ pub fn sync_op(
     cmp: u32,
     at: Cycle,
 ) -> SyncOutcome {
+    let s = SyncOp {
+        cu,
+        addr,
+        op,
+        order,
+        operand,
+        cmp,
+        at,
+    };
     match scope {
-        Scope::Wg => wg_scope_op(m, protocol, cu, addr, op, order, operand, cmp, at),
-        Scope::Cmp => cmp_scope_op(m, cu, addr, op, order, operand, cmp, at),
-        Scope::Sys => sys_scope_op(m, cu, addr, op, order, operand, cmp, at),
-    }
-}
-
-/// Baseline cost of the same atomic if it were a wg-scope L1 hit — used to
-/// compute promotion/synchronization overhead.
-fn plain_cost(m: &MemSystem) -> u64 {
-    m.cfg.l1_latency + 1
-}
-
-fn charge_overhead(m: &mut MemSystem, at: Cycle, done: Cycle) {
-    let plain = plain_cost(m);
-    let took = done.saturating_sub(at);
-    m.stats.sync_overhead_cycles += took.saturating_sub(plain);
-}
-
-// ----------------------------------------------------------------------
-// wg (local) scope
-// ----------------------------------------------------------------------
-
-#[allow(clippy::too_many_arguments)]
-fn wg_scope_op(
-    m: &mut MemSystem,
-    protocol: Protocol,
-    cu: u32,
-    addr: Addr,
-    op: AtomicOp,
-    order: MemOrder,
-    operand: u32,
-    cmp: u32,
-    at: Cycle,
-) -> SyncOutcome {
-    if order.acquires() {
-        m.stats.wg_acquires += 1;
-    }
-    if order.releases() {
-        m.stats.wg_releases += 1;
-    }
-
-    // §4.4: under sRSP a wg-scope acquire first consults the PA-TBL; a hit
-    // promotes it to global scope (full L1 invalidate + atomic at L2).
-    if protocol == Protocol::Srsp && order.acquires() {
-        // The PA-TBL lookup itself costs one cycle (CAM probe).
-        let t = at + 1;
-        if m.cu(cu).pa_tbl.needs_promotion(addr) {
-            m.stats.promoted_acquires += 1;
-            let t = m.invalidate_l1(cu, t); // also clears LR-TBL + PA-TBL
-            let (value, done) = m.l2_atomic(cu, addr, op, operand, cmp, t);
-            charge_overhead(m, at, done);
-            // A promoted acquire that also releases (AcqRel) performed its
-            // write at the L2 already; nothing further needed.
+        Scope::Wg => {
+            if order.acquires() {
+                m.stats.wg_acquires += 1;
+            }
             if order.releases() {
-                record_release_if_srsp(m, protocol, cu, addr, None);
+                m.stats.wg_releases += 1;
             }
-            return SyncOutcome { value, done };
+            protocol.proto().wg_op(m, &s)
         }
-        m.stats.local_acquires += 1;
-        let (value, ticket, done) = m.l1_atomic(cu, addr, op, operand, cmp, t);
-        if op.writes_given(value, operand, cmp) {
-            record_release_if_srsp(m, protocol, cu, addr, Some(ticket));
-        }
-        charge_overhead(m, at, done);
-        return SyncOutcome { value, done };
-    }
-
-    // hLRC (extension): wg-scope sync ops go to the *owning* L1; a
-    // non-owner's op lazily transfers ownership — the previous owner
-    // flushes (publishing its releases), the requester invalidates
-    // (acquire side), the op completes at the L2, and subsequent ops by
-    // the new owner are L1-local again.
-    if protocol == Protocol::Hlrc {
-        return hlrc_op(m, cu, addr, op, order, operand, cmp, at);
-    }
-
-    // Plain wg-scope atomic at the L1 (all protocols).
-    let (value, ticket, done) = m.l1_atomic(m_cu(cu), addr, op, operand, cmp, at);
-    // §4.1: under sRSP a wg-scope sync *write* records (addr → sFIFO
-    // ticket) in the LR-TBL so a later remote acquire can selectively
-    // flush. Releases are the textbook case, but an acquire-CAS's store
-    // (e.g. taking a lock: CAS_acq_wg 0→1) must be recorded too —
-    // otherwise a remote acquire arriving before the owner's first
-    // release finds an empty LR-TBL, skips the drain, reads the stale
-    // unlocked value from the L2 and breaks mutual exclusion. (Naive RSP
-    // is immune: it always drains every L1.)
-    if op.writes_given(value, operand, cmp) {
-        record_release_if_srsp(m, protocol, cu, addr, Some(ticket));
-    }
-    charge_overhead(m, at, done);
-    SyncOutcome { value, done }
-}
-
-#[inline]
-fn m_cu(cu: u32) -> u32 {
-    cu
-}
-
-/// hLRC wg-scope synchronization (extension protocol, paper §6 related
-/// work). Ownership of the sync variable lives in a registry at the L2:
-///
-/// * requester already owns it → plain L1 atomic (the fast path hLRC is
-///   built around);
-/// * otherwise → lazy transfer: previous owner's L1 is flushed (its
-///   releases become globally visible), the requester's L1 is
-///   invalidated (acquire side), the atomic completes at the L2, and the
-///   requester becomes the owner;
-/// * registry eviction (capacity) forces the evictee's owner to flush —
-///   the replacement-policy sensitivity the paper criticizes.
-#[allow(clippy::too_many_arguments)]
-fn hlrc_op(
-    m: &mut MemSystem,
-    cu: u32,
-    addr: Addr,
-    op: AtomicOp,
-    order: MemOrder,
-    operand: u32,
-    cmp: u32,
-    at: Cycle,
-) -> SyncOutcome {
-    match m.hlrc_owner(addr) {
-        Some(owner) if owner == cu => {
-            // Fast path: L1-local.
-            m.stats.bump("hlrc_local_ops", 1);
-            let (value, _ticket, done) = m.l1_atomic(cu, addr, op, operand, cmp, at);
-            charge_overhead(m, at, done);
-            SyncOutcome { value, done }
-        }
-        prev => {
-            // Lazy transfer through the L2 registry.
-            m.stats.bump("hlrc_transfers", 1);
-            let line = line_of(addr);
-            // Registry probe at the L2.
-            let t_req = m.xbar_hop(cu, at);
-            let mut t_ready = m.l2_control_hop(line, t_req) + 2;
-            if let Some(owner) = prev {
-                // Previous owner publishes everything up to its last
-                // sync op on this variable (full flush: hLRC keeps no
-                // per-variable tickets).
-                let t_arrive = m.xbar_hop(owner, t_ready);
-                let t_flush = m.full_flush_l1(owner, t_arrive);
-                // The owner's cached copy of the line must go, or its
-                // later local reads would see a stale value.
-                if let Some(wb) = m.cu_mut(owner).l1.invalidate_line(line) {
-                    // Flush above already cleaned it; belt and braces.
-                    m.backing.write_line_masked(wb.line, wb.mask, &wb.data);
-                }
-                t_ready = t_ready.max(m.xbar_hop(owner, t_flush));
-            }
-            // Requester acquires: drop its stale state.
-            let t_own = m.invalidate_l1(cu, at);
-            let t_ready = t_ready.max(t_own);
-            // Claim ownership; a capacity eviction forces the evictee's
-            // owner to flush (it loses its exclusive hold).
-            if let Some((_, evicted_owner)) = m.hlrc_claim(addr, cu) {
-                m.stats.bump("hlrc_evictions", 1);
-                m.full_flush_l1(evicted_owner, t_ready);
-            }
-            // The op itself completes at the L2 (the transfer point).
-            let (value, done) = m.l2_atomic(cu, addr, op, operand, cmp, t_ready);
-            let _ = order;
-            charge_overhead(m, at, done);
-            SyncOutcome { value, done }
-        }
+        // cmp/sys scope are identical under every protocol (§2.2).
+        Scope::Cmp => ops::cmp_scope_op(m, &s),
+        Scope::Sys => ops::sys_scope_op(m, &s),
     }
 }
-
-/// Record a promoted-acquire obligation at `target`'s PA-TBL. A full
-/// table forces an eager local invalidate first (clearing both tables —
-/// every deferred obligation is discharged), then records.
-fn record_pa(m: &mut MemSystem, target: u32, addr: Addr, at: Cycle) -> Cycle {
-    use crate::sync::tables::PaRecord;
-    m.stats.pa_tbl_insertions += 1;
-    let mut t = at;
-    if m.cu(target).pa_tbl.is_full() && !m.cu(target).pa_tbl.needs_promotion(addr) {
-        m.stats.pa_tbl_overflows += 1;
-        t = m.invalidate_l1(target, t);
-    }
-    match m.cu_mut(target).pa_tbl.record(addr) {
-        PaRecord::Recorded => t,
-        // Only reachable with `pa_tbl_entries = 0`: nothing can ever be
-        // recorded, but the eager invalidate above already discharged the
-        // obligation — the target's next access misses to the L2 and
-        // reads fresh data — so skipping the record is correct (the table
-        // degenerates to "promote eagerly, every time").
-        PaRecord::NeedsInvalidate => t,
-    }
-}
-
-fn record_release_if_srsp(
-    m: &mut MemSystem,
-    protocol: Protocol,
-    cu: u32,
-    addr: Addr,
-    ticket: Option<u64>,
-) {
-    if protocol != Protocol::Srsp {
-        return;
-    }
-    let Some(ticket) = ticket else { return };
-    m.stats.lr_tbl_insertions += 1;
-    if m.cu_mut(cu).lr_tbl.record(addr, ticket) {
-        m.stats.lr_tbl_overflows += 1;
-    }
-}
-
-// ----------------------------------------------------------------------
-// cmp (global/device) scope — §2.2's heavyweight path, identical in all
-// protocols.
-// ----------------------------------------------------------------------
-
-#[allow(clippy::too_many_arguments)]
-fn cmp_scope_op(
-    m: &mut MemSystem,
-    cu: u32,
-    addr: Addr,
-    op: AtomicOp,
-    order: MemOrder,
-    operand: u32,
-    cmp: u32,
-    at: Cycle,
-) -> SyncOutcome {
-    let mut t = at;
-    if order.releases() {
-        m.stats.cmp_releases += 1;
-        // Global release: every local update must reach the global sync
-        // point (L2) — full cache-flush of the own L1.
-        t = m.full_flush_l1(cu, t);
-    }
-    if order.acquires() {
-        m.stats.cmp_acquires += 1;
-        // Global acquire: all possibly-stale local data must be discarded.
-        t = m.invalidate_l1(cu, t);
-    }
-    let (value, done) = m.l2_atomic(cu, addr, op, operand, cmp, t);
-    charge_overhead(m, at, done);
-    SyncOutcome { value, done }
-}
-
-// ----------------------------------------------------------------------
-// sys scope (completeness)
-// ----------------------------------------------------------------------
-
-#[allow(clippy::too_many_arguments)]
-fn sys_scope_op(
-    m: &mut MemSystem,
-    cu: u32,
-    addr: Addr,
-    op: AtomicOp,
-    order: MemOrder,
-    operand: u32,
-    cmp: u32,
-    at: Cycle,
-) -> SyncOutcome {
-    let mut t = at;
-    if order.releases() {
-        t = m.full_flush_l1(cu, t);
-        t = m.full_flush_l2(t);
-    }
-    if order.acquires() {
-        t = m.invalidate_l1(cu, t);
-        t = m.invalidate_l2(t);
-    }
-    // The atomic itself executes at the memory controller on the backing
-    // store (we route it through the L2 path after the L2 was flushed —
-    // equivalent values, conservative timing).
-    let (value, done) = m.l2_atomic(cu, addr, op, operand, cmp, t);
-    charge_overhead(m, at, done);
-    SyncOutcome { value, done }
-}
-
-// ----------------------------------------------------------------------
-// Remote scope promotion (§3, §4)
-// ----------------------------------------------------------------------
 
 /// Perform a remote synchronization operation (`rem_acq`, `rem_rel`,
 /// `rem_ar`) on `addr` from `cu`. `order` selects which: `Acquire` →
 /// rem_acq, `Release` → rem_rel, `AcqRel` → rem_ar.
 ///
-/// Panics if the protocol is [`Protocol::ScopedOnly`] — remote operations
-/// require RSP hardware; scenarios without it must use cmp scope.
+/// Panics if the protocol does not implement remote-scope promotion
+/// (e.g. scoped-only or hLRC) — scenarios without it must use cmp scope.
 #[allow(clippy::too_many_arguments)]
 pub fn remote_op(
     m: &mut MemSystem,
@@ -345,195 +88,18 @@ pub fn remote_op(
         MemOrder::AcqRel => m.stats.remote_acqrels += 1,
         MemOrder::Relaxed => panic!("remote op requires acquire/release semantics"),
     }
-
-    let out = match protocol {
-        Protocol::ScopedOnly | Protocol::Hlrc => {
-            panic!("remote scope promotion not supported by the {protocol:?} protocol")
-        }
-        Protocol::RspNaive => remote_op_naive(m, cu, addr, op, order, operand, cmp, at),
-        Protocol::Srsp => remote_op_srsp(m, cu, addr, op, order, operand, cmp, at),
+    let s = SyncOp {
+        cu,
+        addr,
+        op,
+        order,
+        operand,
+        cmp,
+        at,
     };
-    charge_overhead(m, at, out.done);
+    let out = protocol.proto().remote_op(m, &s);
+    ops::charge_overhead(m, at, out.done);
     out
-}
-
-/// Naive RSP (Orr et al.): promotion by flushing and invalidating **every**
-/// L1 in the device — the scalability problem the paper fixes.
-#[allow(clippy::too_many_arguments)]
-fn remote_op_naive(
-    m: &mut MemSystem,
-    cu: u32,
-    addr: Addr,
-    op: AtomicOp,
-    order: MemOrder,
-    operand: u32,
-    cmp: u32,
-    at: Cycle,
-) -> SyncOutcome {
-    let line = line_of(addr);
-
-    let mut t_ready = at;
-    if order.acquires() {
-        // rem_acq: promote the local sharer's past releases — since we
-        // don't know *which* L1 is the local sharer, flush them all; and
-        // since we don't know which lines are stale, invalidate them all.
-        // The broadcast fans out through the L2.
-        let t_req = m.xbar_hop(cu, at);
-        let t_fan = m.l2_control_hop(line, t_req);
-        let mut t_all = t_fan;
-        for target in 0..m.num_cus() {
-            if target == cu {
-                continue;
-            }
-            let t_arrive = m.xbar_hop(target, t_fan);
-            let t_inv = m.invalidate_l1(target, t_arrive); // drain + flash
-            let t_ack = m.xbar_hop(target, t_inv);
-            t_all = t_all.max(t_ack);
-        }
-        // Requester drains its own dirty data and invalidates (global
-        // acquire semantics for itself).
-        let t_own = m.invalidate_l1(cu, at);
-        t_ready = t_all.max(t_own);
-    }
-    if order.releases() && !order.acquires() {
-        // rem_rel: the remote sharer's updates must reach global scope
-        // before the releasing store.
-        t_ready = m.full_flush_l1(cu, at);
-    } else if order.releases() {
-        // rem_ar already flushed everything via the invalidates above.
-    }
-
-    // Lock the sync variable's line at the L2 for the duration (§4.2).
-    m.lock_l2_line(line, t_ready);
-    let (value, mut done) = m.l2_atomic(cu, addr, op, operand, cmp, t_ready);
-    m.lock_l2_line(line, done);
-
-    if order.releases() && !order.acquires() {
-        // rem_rel: promote the local sharer's *next* acquire eagerly —
-        // invalidate every other L1 so no stale copy can satisfy it.
-        // (rem_ar already invalidated every L1 above; repeating the
-        // broadcast would double-charge the combined operation.)
-        let t_fan = m.l2_control_hop(line, done);
-        let mut t_all = done;
-        for target in 0..m.num_cus() {
-            if target == cu {
-                continue;
-            }
-            let t_arrive = m.xbar_hop(target, t_fan);
-            let t_inv = m.invalidate_l1(target, t_arrive);
-            let t_ack = m.xbar_hop(target, t_inv);
-            t_all = t_all.max(t_ack);
-        }
-        done = t_all;
-    }
-    SyncOutcome { value, done }
-}
-
-/// sRSP (§4): selective-flush and selective-invalidate — only the local
-/// sharer's L1 does heavy work, found via its LR-TBL; acquire promotion is
-/// *deferred* through the PA-TBL instead of eager invalidation.
-#[allow(clippy::too_many_arguments)]
-fn remote_op_srsp(
-    m: &mut MemSystem,
-    cu: u32,
-    addr: Addr,
-    op: AtomicOp,
-    order: MemOrder,
-    operand: u32,
-    cmp: u32,
-    at: Cycle,
-) -> SyncOutcome {
-    let line = line_of(addr);
-
-    let mut t_ready = at;
-    if order.acquires() {
-        // §4.2 optimization: if the local sharer runs on *this* CU the
-        // LR-TBL hit is local and no broadcast is needed (same L1 ⇒ its
-        // updates are already visible here). Only a *definite* entry may
-        // take this shortcut: a sticky-overflowed table answers every
-        // address conservatively (`Some(None)`), and skipping the
-        // broadcast on that answer would leave the true local sharer's
-        // sFIFO undrained — a stale read, not just a slow one.
-        let own_hit = matches!(m.cu(cu).lr_tbl.lookup(addr), Some(Some(_)));
-        let mut t_promote = at + 1; // own LR-TBL probe
-        if !own_hit {
-            m.stats.selective_flush_requests += 1;
-            // Broadcast selective-flush(L) via the L2 to all other L1s.
-            let t_req = m.xbar_hop(cu, at);
-            let t_fan = m.l2_control_hop(line, t_req);
-            let mut t_all = t_fan;
-            for target in 0..m.num_cus() {
-                if target == cu {
-                    continue;
-                }
-                let t_arrive = m.xbar_hop(target, t_fan);
-                // LR-TBL probe: one cycle.
-                let lookup = m.cu(target).lr_tbl.lookup(addr);
-                let t_done = match lookup {
-                    None => {
-                        // Definite miss: immediate ack (§4.2).
-                        m.stats.selective_flush_nops += 1;
-                        t_arrive + 1
-                    }
-                    Some(upto) => {
-                        // Hit (or conservative overflow): drain the sFIFO
-                        // up to the recorded ticket, then remember that the
-                        // local sharer's next acquire of L must promote.
-                        m.stats.selective_flush_drains += 1;
-                        let t = m.flush_l1(target, upto, t_arrive + 1);
-                        let t = record_pa(m, target, addr, t);
-                        t
-                    }
-                };
-                let t_ack = m.xbar_hop(target, t_done);
-                t_all = t_all.max(t_ack);
-            }
-            t_promote = t_all;
-        }
-        // Requester performs a global acquire for itself: drain own dirty
-        // lines and flash-invalidate (§4.2 steps 4–5).
-        let t_own = m.invalidate_l1(cu, at);
-        t_ready = t_promote.max(t_own);
-    }
-    if order.releases() && !order.acquires() {
-        // §4.3 step 1–2: local cache-flush pushes the remote sharer's
-        // updates to global scope.
-        t_ready = m.full_flush_l1(cu, at);
-    }
-
-    // §4.2 step 6 / §4.3 step 3: the atomic completes at the L2, with the
-    // line locked against intervening reads.
-    m.lock_l2_line(line, t_ready);
-    let (value, mut done) = m.l2_atomic(cu, addr, op, operand, cmp, t_ready);
-    m.lock_l2_line(line, done);
-
-    if order.releases() && !order.acquires() {
-        // §4.3 step 4 (rem_rel): selective-invalidate — L1s record L in
-        // their PA-TBL (one-cycle CAM insert); actual invalidation is
-        // deferred to the local sharer's next wg-scope acquire of L.
-        //
-        // For rem_ar the arming already happened during the acquire
-        // part's selective-flush, *at the LR-TBL-identified local
-        // sharer(s) only* (§4.2's mechanism): a cache with no local
-        // release on L holds no locally-produced state for it, so only
-        // the identified sharer's next acquire needs promotion. This
-        // keeps steal-heavy workloads (64 deque counters) from flooding
-        // every PA-TBL in the device.
-        m.stats.selective_inv_requests += 1;
-        let t_fan = m.l2_control_hop(line, done);
-        let mut t_all = done;
-        for target in 0..m.num_cus() {
-            if target == cu {
-                continue;
-            }
-            let t_arrive = m.xbar_hop(target, t_fan);
-            let t_rec = record_pa(m, target, addr, t_arrive + 1);
-            let t_ack = m.xbar_hop(target, t_rec);
-            t_all = t_all.max(t_ack);
-        }
-        done = t_all;
-    }
-    SyncOutcome { value, done }
 }
 
 #[cfg(test)]
@@ -562,7 +128,7 @@ mod tests {
 
     #[test]
     fn srsp_remote_acquire_sees_local_release() {
-        let (mut m, p) = sys(Protocol::Srsp);
+        let (mut m, p) = sys(Protocol::SRSP);
         let t = local_sharer_writes(&mut m, p, 0);
         // LR-TBL recorded the release.
         assert_eq!(m.cu(0).lr_tbl.len(), 1);
@@ -582,7 +148,7 @@ mod tests {
 
     #[test]
     fn srsp_local_acquire_promoted_after_remote() {
-        let (mut m, p) = sys(Protocol::Srsp);
+        let (mut m, p) = sys(Protocol::SRSP);
         let t = local_sharer_writes(&mut m, p, 0);
         let out = remote_op(
             &mut m, p, 1, LOCK, AtomicOp::Cas, MemOrder::Acquire, 1, 0, t,
@@ -600,7 +166,7 @@ mod tests {
 
     #[test]
     fn srsp_remote_release_hands_data_back() {
-        let (mut m, p) = sys(Protocol::Srsp);
+        let (mut m, p) = sys(Protocol::SRSP);
         let t = local_sharer_writes(&mut m, p, 0);
         let acq = remote_op(&mut m, p, 1, LOCK, AtomicOp::Cas, MemOrder::Acquire, 1, 0, t);
         assert_eq!(acq.value, 0);
@@ -619,7 +185,7 @@ mod tests {
 
     #[test]
     fn naive_rsp_same_semantics() {
-        let (mut m, p) = sys(Protocol::RspNaive);
+        let (mut m, p) = sys(Protocol::RSP_NAIVE);
         let t = local_sharer_writes(&mut m, p, 0);
         let acq = remote_op(&mut m, p, 1, LOCK, AtomicOp::Cas, MemOrder::Acquire, 1, 0, t);
         assert_eq!(acq.value, 0);
@@ -637,7 +203,7 @@ mod tests {
     fn naive_invalidates_all_srsp_does_not() {
         // Warm unrelated data into every L1, then do one remote acquire.
         // Naive RSP destroys all that locality; sRSP keeps it.
-        for proto in [Protocol::RspNaive, Protocol::Srsp] {
+        for (proto, invalidates_all) in [(Protocol::RSP_NAIVE, true), (Protocol::SRSP, false)] {
             let (mut m, p) = sys(proto);
             let mut t = local_sharer_writes(&mut m, p, 0);
             for cu in 0..4 {
@@ -649,23 +215,23 @@ mod tests {
             let before_inv = m.stats.lines_invalidated;
             let _ = remote_op(&mut m, p, 1, LOCK, AtomicOp::Cas, MemOrder::Acquire, 1, 0, t);
             let invalidated = m.stats.lines_invalidated - before_inv;
-            match proto {
-                Protocol::RspNaive => assert!(
+            if invalidates_all {
+                assert!(
                     invalidated > 16,
                     "naive RSP must invalidate every L1 (got {invalidated})"
-                ),
-                Protocol::Srsp => assert!(
+                );
+            } else {
+                assert!(
                     invalidated <= 16,
                     "sRSP must only invalidate the requester (got {invalidated})"
-                ),
-                _ => unreachable!(),
+                );
             }
         }
     }
 
     #[test]
     fn cmp_scope_is_protocol_independent_and_correct() {
-        for proto in [Protocol::ScopedOnly, Protocol::RspNaive, Protocol::Srsp] {
+        for proto in [Protocol::SCOPED_ONLY, Protocol::RSP_NAIVE, Protocol::SRSP] {
             let (mut m, p) = sys(proto);
             // CU0 releases at cmp scope; CU2 acquires at cmp scope.
             let t = m.l1_write(0, DATA, 4, 7, 0);
@@ -684,7 +250,7 @@ mod tests {
     #[test]
     fn srsp_cheaper_than_naive_under_warm_caches() {
         let mut costs = Vec::new();
-        for proto in [Protocol::RspNaive, Protocol::Srsp] {
+        for proto in [Protocol::RSP_NAIVE, Protocol::SRSP] {
             let (mut m, p) = sys(proto);
             let mut t = local_sharer_writes(&mut m, p, 0);
             // Dirty data on *other* CUs that naive RSP will pointlessly drain.
@@ -707,7 +273,7 @@ mod tests {
 
     #[test]
     fn remote_op_without_own_lr_entry_broadcasts() {
-        let (mut m, p) = sys(Protocol::Srsp);
+        let (mut m, p) = sys(Protocol::SRSP);
         let t = local_sharer_writes(&mut m, p, 0);
         let _ = remote_op(&mut m, p, 1, LOCK, AtomicOp::Cas, MemOrder::Acquire, 1, 0, t);
         assert_eq!(m.stats.selective_flush_requests, 1);
@@ -718,7 +284,7 @@ mod tests {
 
     #[test]
     fn same_cu_local_sharer_skips_broadcast() {
-        let (mut m, p) = sys(Protocol::Srsp);
+        let (mut m, p) = sys(Protocol::SRSP);
         // Local sharer on CU1; the remote op also issued from CU1.
         let t = m.l1_write(1, DATA, 4, 5, 0);
         let rel = sync_op(
@@ -750,7 +316,7 @@ mod tests {
         // the displaced address must still be found (conservative "drain
         // everything") by a remote acquire.
         let mut m = srsp_sys_with(1, 16);
-        let p = Protocol::Srsp;
+        let p = Protocol::SRSP;
         let t = m.l1_write(0, DATA, 4, 41, 0);
         let t = sync_op(
             &mut m, p, 0, LOCK, AtomicOp::Store, MemOrder::Release, Scope::Wg, 1, 0, t,
@@ -782,7 +348,7 @@ mod tests {
         // true sharer (CU0) still has the lock value in its sFIFO, and
         // skipping the selective-flush broadcast would read it stale.
         let mut m = srsp_sys_with(0, 16);
-        let p = Protocol::Srsp;
+        let p = Protocol::SRSP;
         let t = m.l1_write(0, DATA, 4, 41, 0);
         let t = sync_op(
             &mut m, p, 0, LOCK, AtomicOp::Store, MemOrder::Release, Scope::Wg, 1, 0, t,
@@ -814,7 +380,7 @@ mod tests {
         // eager local invalidate (discharging the first obligation) and
         // then records the second. Both locks' data must stay visible.
         let mut m = srsp_sys_with(16, 1);
-        let p = Protocol::Srsp;
+        let p = Protocol::SRSP;
         let t = m.l1_write(1, DATA, 4, 7, 0);
         let t = remote_op(&mut m, p, 1, LOCK, AtomicOp::Store, MemOrder::Release, 1, 0, t).done;
         let t = m.l1_write(1, DATA2, 4, 9, t);
@@ -850,7 +416,7 @@ mod tests {
         // degenerates to an immediate invalidate at the target. Must not
         // panic, must count overflows, must stay correct.
         let mut m = srsp_sys_with(16, 0);
-        let p = Protocol::Srsp;
+        let p = Protocol::SRSP;
         let t = m.l1_write(1, DATA, 4, 5, 0);
         let t = remote_op(&mut m, p, 1, LOCK, AtomicOp::Store, MemOrder::Release, 1, 0, t).done;
         assert_eq!(m.stats.pa_tbl_overflows, 3, "one per non-requesting CU");
@@ -866,13 +432,13 @@ mod tests {
     #[test]
     #[should_panic(expected = "not supported")]
     fn scoped_only_rejects_remote_ops() {
-        let (mut m, p) = sys(Protocol::ScopedOnly);
+        let (mut m, p) = sys(Protocol::SCOPED_ONLY);
         let _ = remote_op(&mut m, p, 0, LOCK, AtomicOp::Cas, MemOrder::Acquire, 1, 0, 0);
     }
 
     #[test]
     fn rem_ar_full_fence_semantics() {
-        for proto in [Protocol::RspNaive, Protocol::Srsp] {
+        for proto in [Protocol::RSP_NAIVE, Protocol::SRSP] {
             let (mut m, p) = sys(proto);
             let t = local_sharer_writes(&mut m, p, 0);
             // rem_ar: fetch-add on a counter with full fence.

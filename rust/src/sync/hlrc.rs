@@ -1,0 +1,91 @@
+//! hLRC — heterogeneous Lazy Release Consistency (Alsop et al.,
+//! MICRO'16), the paper's §6 closest related work, implemented as an
+//! extension comparator: sync variables are *owned* by one L1 at a time
+//! (registry at the L2); any other CU's wg-scope sync op lazily transfers
+//! ownership (previous owner flushes, requester invalidates). Scalable,
+//! but lock transfers ping-pong and each registered variable burns
+//! registry/cache capacity — the costs the paper calls out.
+
+use super::ops::{self, SyncOp, SyncOutcome};
+use super::protocol::SyncProtocol;
+use crate::mem::{line_of, MemSystem};
+
+/// Registry entry for the hLRC extension protocol.
+pub struct Hlrc;
+
+impl SyncProtocol for Hlrc {
+    fn name(&self) -> &'static str {
+        "hlrc"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["lazy-rc"]
+    }
+
+    fn summary(&self) -> &'static str {
+        "lazy release consistency: L2 ownership registry, lazy wg-scope transfer"
+    }
+
+    fn lazy_wg_transfer(&self) -> bool {
+        true
+    }
+
+    /// hLRC wg-scope synchronization. Ownership of the sync variable
+    /// lives in a registry at the L2:
+    ///
+    /// * requester already owns it → plain L1 atomic (the fast path hLRC
+    ///   is built around);
+    /// * otherwise → lazy transfer: previous owner's L1 is flushed (its
+    ///   releases become globally visible), the requester's L1 is
+    ///   invalidated (acquire side), the atomic completes at the L2, and
+    ///   the requester becomes the owner;
+    /// * registry eviction (capacity) forces the evictee's owner to flush
+    ///   — the replacement-policy sensitivity the paper criticizes.
+    fn wg_op(&self, m: &mut MemSystem, s: &SyncOp) -> SyncOutcome {
+        match m.hlrc_owner(s.addr) {
+            Some(owner) if owner == s.cu => {
+                // Fast path: L1-local.
+                m.stats.bump("hlrc_local_ops", 1);
+                let (value, _ticket, done) =
+                    m.l1_atomic(s.cu, s.addr, s.op, s.operand, s.cmp, s.at);
+                ops::charge_overhead(m, s.at, done);
+                SyncOutcome { value, done }
+            }
+            prev => {
+                // Lazy transfer through the L2 registry.
+                m.stats.bump("hlrc_transfers", 1);
+                let line = line_of(s.addr);
+                // Registry probe at the L2.
+                let t_req = m.xbar_hop(s.cu, s.at);
+                let mut t_ready = m.l2_control_hop(line, t_req) + 2;
+                if let Some(owner) = prev {
+                    // Previous owner publishes everything up to its last
+                    // sync op on this variable (full flush: hLRC keeps no
+                    // per-variable tickets).
+                    let t_arrive = m.xbar_hop(owner, t_ready);
+                    let t_flush = m.full_flush_l1(owner, t_arrive);
+                    // The owner's cached copy of the line must go, or its
+                    // later local reads would see a stale value.
+                    if let Some(wb) = m.cu_mut(owner).l1.invalidate_line(line) {
+                        // Flush above already cleaned it; belt and braces.
+                        m.backing.write_line_masked(wb.line, wb.mask, &wb.data);
+                    }
+                    t_ready = t_ready.max(m.xbar_hop(owner, t_flush));
+                }
+                // Requester acquires: drop its stale state.
+                let t_own = m.invalidate_l1(s.cu, s.at);
+                let t_ready = t_ready.max(t_own);
+                // Claim ownership; a capacity eviction forces the
+                // evictee's owner to flush (it loses its exclusive hold).
+                if let Some((_, evicted_owner)) = m.hlrc_claim(s.addr, s.cu) {
+                    m.stats.bump("hlrc_evictions", 1);
+                    m.full_flush_l1(evicted_owner, t_ready);
+                }
+                // The op itself completes at the L2 (the transfer point).
+                let (value, done) = m.l2_atomic(s.cu, s.addr, s.op, s.operand, s.cmp, t_ready);
+                ops::charge_overhead(m, s.at, done);
+                SyncOutcome { value, done }
+            }
+        }
+    }
+}

@@ -1,20 +1,33 @@
-//! Scoped synchronization semantics and the three protocol engines.
+//! Scoped synchronization semantics and the pluggable protocol registry.
 //!
 //! * [`scope`] — OpenCL-style scopes and memory orderings, atomic ops.
 //! * [`tables`] — the paper's new per-L1 hardware: **LR-TBL** (local release
 //!   table: sync address → sFIFO ticket of the last wg-scope release) and
 //!   **PA-TBL** (promoted-acquire table: addresses whose next wg-scope
 //!   acquire must be promoted to global scope).
-//! * [`engine`] — the orchestration of scoped / remote operations over the
-//!   [`MemSystem`](crate::mem::MemSystem) primitives, per
-//!   [`Protocol`](crate::config::Protocol):
-//!   global-scope baseline, naive RSP (flush/invalidate every L1) and sRSP
-//!   (selective-flush / selective-invalidate).
+//! * [`protocol`] — the [`SyncProtocol`] trait and the static
+//!   [`PROTOCOLS`] registry every layer resolves protocols through
+//!   (`srsp list-protocols`, `--protocol <name>`, `--proto-param k=v`).
+//! * [`ops`] — the protocol-independent scoped-op core (cmp/sys scope,
+//!   the plain wg-scope atomic, table bookkeeping, overhead accounting).
+//! * per-protocol modules, one file each: [`scoped`], [`rsp_naive`],
+//!   [`srsp`], [`hlrc`], [`srsp_adaptive`].
+//! * [`engine`] — thin dispatch from operation requests to the
+//!   registered protocol hooks.
 
 pub mod engine;
+pub mod hlrc;
+pub mod ops;
+pub mod protocol;
+pub mod rsp_naive;
 pub mod scope;
+pub mod scoped;
+pub mod srsp;
+pub mod srsp_adaptive;
 pub mod tables;
 
 pub use engine::{remote_op, sync_op, SyncOutcome};
+pub use ops::SyncOp;
+pub use protocol::{Protocol, SyncProtocol, PROTOCOLS};
 pub use scope::{AtomicOp, MemOrder, Scope};
 pub use tables::{LrTbl, PaTbl};

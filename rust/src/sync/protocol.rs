@@ -1,0 +1,215 @@
+//! The pluggable sync-protocol registry: every synchronization protocol
+//! registers a [`SyncProtocol`] implementation in [`PROTOCOLS`] and
+//! self-describes — name, aliases, summary, tunable parameters, remote
+//! capability — plus the wg-scope and remote-scope operation hooks the
+//! engine dispatches through. The CLI (`srsp list-protocols`,
+//! `--protocol <name>`, `--proto-param k=v`), the scenario layer, the
+//! runner and the reports all resolve protocols through this one table;
+//! no protocol enum exists to match on.
+//!
+//! Adding a protocol is now a registry entry: implement [`SyncProtocol`]
+//! in a new `sync/<name>.rs` module (see [`scoped`](super::scoped) for
+//! the smallest example, [`srsp_adaptive`](super::srsp_adaptive) for one
+//! with parameters that composes existing protocol cores) and push it
+//! into [`PROTOCOLS`]. Nothing in the engine, config, coordinator,
+//! harness or CLI layers needs to change.
+
+use std::fmt;
+
+use super::ops::{SyncOp, SyncOutcome};
+use crate::mem::MemSystem;
+use crate::params::{ParamSpec, Params};
+
+/// A registered synchronization protocol. Implementations live in their
+/// own `sync/` module and self-describe everything the other layers need.
+pub trait SyncProtocol: Sync {
+    /// Canonical CLI name (`--protocol <name>`), lower-case.
+    fn name(&self) -> &'static str;
+    /// Extra accepted CLI spellings.
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+    /// One-line description for `srsp list-protocols`.
+    fn summary(&self) -> &'static str;
+    /// Tunable parameters (`--proto-param k=v`; empty when none).
+    fn params(&self) -> &'static [ParamSpec] {
+        &[]
+    }
+    /// Does the protocol implement the remote-scope-promotion ops
+    /// (`rem_acq`/`rem_rel`/`rem_ar`)?
+    fn supports_remote(&self) -> bool {
+        false
+    }
+    /// Do plain wg-scope sync ops transfer ownership lazily between CUs
+    /// (the hLRC model), making cross-CU sharing correct without remote
+    /// ops?
+    fn lazy_wg_transfer(&self) -> bool {
+        false
+    }
+    /// Perform a wg-scope scoped atomic. (cmp/sys scopes are
+    /// protocol-independent and stay in [`super::ops`].)
+    fn wg_op(&self, m: &mut MemSystem, s: &SyncOp) -> SyncOutcome;
+    /// Perform a remote synchronization operation.
+    fn remote_op(&self, m: &mut MemSystem, s: &SyncOp) -> SyncOutcome {
+        let _ = (m, s);
+        panic!(
+            "remote scope promotion not supported by the {} protocol",
+            self.name()
+        )
+    }
+}
+
+/// The static protocol table. Order is load-bearing for the stable
+/// [`Protocol`] handles below: new protocols append, existing ones never
+/// reorder.
+pub static PROTOCOLS: &[&dyn SyncProtocol] = &[
+    &super::scoped::ScopedOnly,
+    &super::rsp_naive::RspNaive,
+    &super::srsp::Srsp,
+    &super::hlrc::Hlrc,
+    &super::srsp_adaptive::SrspAdaptive,
+];
+
+/// Stable handle to a registered protocol (index into [`PROTOCOLS`]).
+/// This is the *only* protocol identity in the crate — there is no enum
+/// to `match` on; behavior differences go through the [`SyncProtocol`]
+/// hooks.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Protocol(usize);
+
+impl Protocol {
+    /// Scoped acquire/release only; remote ops are *not* supported.
+    pub const SCOPED_ONLY: Protocol = Protocol(0);
+    /// Naive Remote-Scope-Promotion (Orr et al.).
+    pub const RSP_NAIVE: Protocol = Protocol(1);
+    /// Scalable RSP (this paper).
+    pub const SRSP: Protocol = Protocol(2);
+    /// heterogeneous Lazy Release Consistency (extension comparator).
+    pub const HLRC: Protocol = Protocol(3);
+    /// sRSP with eager-invalidation fallback under LR-TBL pressure.
+    pub const SRSP_ADAPTIVE: Protocol = Protocol(4);
+
+    /// The registered implementation behind this handle.
+    pub fn proto(self) -> &'static dyn SyncProtocol {
+        PROTOCOLS[self.0]
+    }
+
+    pub fn name(self) -> &'static str {
+        self.proto().name()
+    }
+}
+
+impl fmt::Debug for Protocol {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl fmt::Display for Protocol {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Every registered protocol, in registry order.
+pub fn all() -> impl Iterator<Item = Protocol> {
+    (0..PROTOCOLS.len()).map(Protocol)
+}
+
+/// Resolve a CLI name (canonical or alias, case-insensitive).
+pub fn resolve(name: &str) -> Option<Protocol> {
+    let lower = name.to_ascii_lowercase();
+    all().find(|id| {
+        let p = id.proto();
+        p.name() == lower || p.aliases().contains(&lower.as_str())
+    })
+}
+
+/// Resolve the subset of `overrides` that `protocol` declares against
+/// its spec: defaults overlaid with the declared keys, undeclared keys
+/// ignored (cells of a mixed grid only consume their own protocol's
+/// keys). The single source of the "which `--proto-param` keys does this
+/// protocol consume" rule — device construction and report rendering
+/// both derive from it.
+pub fn resolve_overrides(
+    protocol: Protocol,
+    overrides: &[(String, f64)],
+) -> Result<Params, String> {
+    let spec = protocol.proto().params();
+    let declared: Vec<(String, f64)> = overrides
+        .iter()
+        .filter(|(k, _)| spec.iter().any(|p| p.key == k.as_str()))
+        .cloned()
+        .collect();
+    Params::resolve(spec, &declared)
+}
+
+/// Render the subset of `overrides` that `protocol` declares as the
+/// canonical `k=v;...` report string (empty when none apply).
+pub fn overrides_display(protocol: Protocol, overrides: &[(String, f64)]) -> String {
+    resolve_overrides(protocol, overrides)
+        .map(|p| p.overrides_display())
+        .unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn registry_names_unique_and_resolvable() {
+        let mut seen = BTreeSet::new();
+        for id in all() {
+            let p = id.proto();
+            assert!(seen.insert(p.name()), "duplicate name {}", p.name());
+            assert_eq!(resolve(p.name()), Some(id));
+            assert_eq!(resolve(&p.name().to_uppercase()), Some(id));
+            for alias in p.aliases() {
+                assert_eq!(resolve(alias), Some(id), "alias {alias}");
+            }
+        }
+        assert_eq!(resolve("bogus"), None);
+    }
+
+    #[test]
+    fn classic_handles_stable() {
+        // Saved scenario names and reports depend on these; never reorder.
+        assert_eq!(Protocol::SCOPED_ONLY.name(), "scoped");
+        assert_eq!(Protocol::RSP_NAIVE.name(), "rsp");
+        assert_eq!(Protocol::SRSP.name(), "srsp");
+        assert_eq!(Protocol::HLRC.name(), "hlrc");
+        assert_eq!(Protocol::SRSP_ADAPTIVE.name(), "srsp-adaptive");
+        assert_eq!(all().count(), 5);
+    }
+
+    #[test]
+    fn capabilities_match_the_paper() {
+        assert!(!Protocol::SCOPED_ONLY.proto().supports_remote());
+        assert!(Protocol::RSP_NAIVE.proto().supports_remote());
+        assert!(Protocol::SRSP.proto().supports_remote());
+        assert!(Protocol::SRSP_ADAPTIVE.proto().supports_remote());
+        assert!(!Protocol::HLRC.proto().supports_remote());
+        assert!(Protocol::HLRC.proto().lazy_wg_transfer());
+    }
+
+    #[test]
+    fn overrides_display_filters_to_declared_keys() {
+        let overrides = vec![
+            ("lr_tbl_entries".to_string(), 4.0),
+            ("overflow_threshold".to_string(), 0.5),
+        ];
+        // The scoped protocol declares nothing.
+        assert_eq!(overrides_display(Protocol::SCOPED_ONLY, &overrides), "");
+        // sRSP declares the table sizes but not the adaptive threshold.
+        assert_eq!(
+            overrides_display(Protocol::SRSP, &overrides),
+            "lr_tbl_entries=4"
+        );
+        // The adaptive protocol declares all three.
+        assert_eq!(
+            overrides_display(Protocol::SRSP_ADAPTIVE, &overrides),
+            "lr_tbl_entries=4;overflow_threshold=0.5"
+        );
+    }
+}

@@ -1,0 +1,107 @@
+//! Naive Remote-Scope-Promotion (Orr et al., ASPLOS'15): remote ops are
+//! promoted by flushing and invalidating **every** L1 in the device —
+//! the scalability problem the paper fixes.
+//!
+//! | op             | behavior                                          |
+//! |----------------|---------------------------------------------------|
+//! | wg acquire/rel | plain L1 atomic                                   |
+//! | remote acquire | flush+inv **all** L1s + L2 op                     |
+//! | remote release | flush own + L2 op + inv **all**                   |
+//! | remote acq+rel | both of the above                                 |
+
+use super::ops::{self, SyncOp, SyncOutcome};
+use super::protocol::SyncProtocol;
+use crate::mem::{line_of, MemSystem};
+
+/// Registry entry for naive RSP.
+pub struct RspNaive;
+
+impl SyncProtocol for RspNaive {
+    fn name(&self) -> &'static str {
+        "rsp"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["rsp-naive", "naive"]
+    }
+
+    fn summary(&self) -> &'static str {
+        "naive RSP: remote ops flush/invalidate every L1 (Orr et al.)"
+    }
+
+    fn supports_remote(&self) -> bool {
+        true
+    }
+
+    fn wg_op(&self, m: &mut MemSystem, s: &SyncOp) -> SyncOutcome {
+        // Plain wg-scope atomic; naive RSP needs no release bookkeeping
+        // (its promotions always drain every L1).
+        ops::wg_plain(m, s, false)
+    }
+
+    fn remote_op(&self, m: &mut MemSystem, s: &SyncOp) -> SyncOutcome {
+        remote(m, s)
+    }
+}
+
+/// The eager all-L1 promotion, exposed as a free function so the
+/// adaptive protocol can fall back to it under table pressure.
+pub fn remote(m: &mut MemSystem, s: &SyncOp) -> SyncOutcome {
+    let line = line_of(s.addr);
+
+    let mut t_ready = s.at;
+    if s.order.acquires() {
+        // rem_acq: promote the local sharer's past releases — since we
+        // don't know *which* L1 is the local sharer, flush them all; and
+        // since we don't know which lines are stale, invalidate them all.
+        // The broadcast fans out through the L2.
+        let t_req = m.xbar_hop(s.cu, s.at);
+        let t_fan = m.l2_control_hop(line, t_req);
+        let mut t_all = t_fan;
+        for target in 0..m.num_cus() {
+            if target == s.cu {
+                continue;
+            }
+            let t_arrive = m.xbar_hop(target, t_fan);
+            let t_inv = m.invalidate_l1(target, t_arrive); // drain + flash
+            let t_ack = m.xbar_hop(target, t_inv);
+            t_all = t_all.max(t_ack);
+        }
+        // Requester drains its own dirty data and invalidates (global
+        // acquire semantics for itself).
+        let t_own = m.invalidate_l1(s.cu, s.at);
+        t_ready = t_all.max(t_own);
+    }
+    if s.order.releases() && !s.order.acquires() {
+        // rem_rel: the remote sharer's updates must reach global scope
+        // before the releasing store.
+        t_ready = m.full_flush_l1(s.cu, s.at);
+    } else if s.order.releases() {
+        // rem_ar already flushed everything via the invalidates above.
+    }
+
+    // Lock the sync variable's line at the L2 for the duration (§4.2).
+    m.lock_l2_line(line, t_ready);
+    let (value, mut done) = m.l2_atomic(s.cu, s.addr, s.op, s.operand, s.cmp, t_ready);
+    m.lock_l2_line(line, done);
+
+    if s.order.releases() && !s.order.acquires() {
+        // rem_rel: promote the local sharer's *next* acquire eagerly —
+        // invalidate every other L1 so no stale copy can satisfy it.
+        // (rem_ar already invalidated every L1 above; repeating the
+        // broadcast would double-charge the combined operation.)
+        let t_fan = m.l2_control_hop(line, done);
+        let mut t_all = done;
+        for target in 0..m.num_cus() {
+            if target == s.cu {
+                continue;
+            }
+            let t_arrive = m.xbar_hop(target, t_fan);
+            let t_inv = m.invalidate_l1(target, t_arrive);
+            let t_ack = m.xbar_hop(target, t_inv);
+            t_all = t_all.max(t_ack);
+        }
+        done = t_all;
+    }
+    SyncOutcome { value, done }
+}

@@ -1,0 +1,33 @@
+//! The scoped-only baseline protocol: plain OpenCL-style scoped
+//! acquire/release with **no** remote-scope promotion. Work-stealing
+//! scenarios that need cross-CU claims must use cmp scope (the paper's
+//! Baseline and Steal-only configurations).
+//!
+//! This is the smallest [`SyncProtocol`] implementation — the template
+//! for a new registry entry.
+
+use super::ops::{self, SyncOp, SyncOutcome};
+use super::protocol::SyncProtocol;
+use crate::mem::MemSystem;
+
+/// Registry entry for the scoped-only baseline.
+pub struct ScopedOnly;
+
+impl SyncProtocol for ScopedOnly {
+    fn name(&self) -> &'static str {
+        "scoped"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["scoped-only", "baseline-protocol"]
+    }
+
+    fn summary(&self) -> &'static str {
+        "scoped acquire/release only; no remote-scope promotion"
+    }
+
+    fn wg_op(&self, m: &mut MemSystem, s: &SyncOp) -> SyncOutcome {
+        // Plain wg-scope atomic at the L1; no table bookkeeping.
+        ops::wg_plain(m, s, false)
+    }
+}

@@ -1,0 +1,190 @@
+//! sRSP (§4, the paper's contribution): selective-flush and
+//! selective-invalidate — only the local sharer's L1 does heavy work,
+//! found via its LR-TBL; acquire promotion is *deferred* through the
+//! PA-TBL instead of eager invalidation.
+//!
+//! | op             | behavior                                          |
+//! |----------------|---------------------------------------------------|
+//! | wg acquire     | PA-TBL check → maybe promote (§4.4)               |
+//! | wg release     | + LR-TBL record (§4.1)                            |
+//! | remote acquire | selective-flush bcast (§4.2) + L2 op              |
+//! | remote release | flush own + L2 op + sel-inv bcast (§4.3)          |
+//! | remote acq+rel | both of the above                                 |
+
+use super::ops::{self, SyncOp, SyncOutcome};
+use super::protocol::SyncProtocol;
+use crate::mem::{line_of, MemSystem};
+use crate::params::ParamSpec;
+
+/// The table-capacity parameters of the sRSP family. The defaults mirror
+/// Table 1; an explicit `--proto-param` wins over the device config's
+/// `lr_tbl_entries`/`pa_tbl_entries` fields.
+pub const TABLE_PARAMS: [ParamSpec; 2] = [
+    ParamSpec {
+        key: "lr_tbl_entries",
+        default: 16.0,
+        help: "LR-TBL capacity; 0 = sticky-overflow from the first release",
+    },
+    ParamSpec {
+        key: "pa_tbl_entries",
+        default: 16.0,
+        help: "PA-TBL capacity; 0 = promote eagerly, every time",
+    },
+];
+
+/// Registry entry for sRSP.
+pub struct Srsp;
+
+impl SyncProtocol for Srsp {
+    fn name(&self) -> &'static str {
+        "srsp"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["selective"]
+    }
+
+    fn summary(&self) -> &'static str {
+        "scalable RSP: LR-TBL selective flush, PA-TBL deferred invalidation"
+    }
+
+    fn params(&self) -> &'static [ParamSpec] {
+        &TABLE_PARAMS
+    }
+
+    fn supports_remote(&self) -> bool {
+        true
+    }
+
+    fn wg_op(&self, m: &mut MemSystem, s: &SyncOp) -> SyncOutcome {
+        wg(m, s)
+    }
+
+    fn remote_op(&self, m: &mut MemSystem, s: &SyncOp) -> SyncOutcome {
+        remote(m, s)
+    }
+}
+
+/// wg-scope op with the sRSP table machinery, exposed as a free function
+/// so the adaptive protocol can reuse it.
+pub fn wg(m: &mut MemSystem, s: &SyncOp) -> SyncOutcome {
+    // §4.4: a wg-scope acquire first consults the PA-TBL; a hit promotes
+    // it to global scope (full L1 invalidate + atomic at L2).
+    if s.order.acquires() {
+        // The PA-TBL lookup itself costs one cycle (CAM probe).
+        let t = s.at + 1;
+        if m.cu(s.cu).pa_tbl.needs_promotion(s.addr) {
+            m.stats.promoted_acquires += 1;
+            let t = m.invalidate_l1(s.cu, t); // also clears LR-TBL + PA-TBL
+            let (value, done) = m.l2_atomic(s.cu, s.addr, s.op, s.operand, s.cmp, t);
+            ops::charge_overhead(m, s.at, done);
+            // A promoted acquire that also releases (AcqRel) performed its
+            // write at the L2 already; nothing further needed.
+            return SyncOutcome { value, done };
+        }
+        m.stats.local_acquires += 1;
+        let (value, ticket, done) = m.l1_atomic(s.cu, s.addr, s.op, s.operand, s.cmp, t);
+        if s.op.writes_given(value, s.operand, s.cmp) {
+            ops::record_lr_release(m, s.cu, s.addr, Some(ticket));
+        }
+        ops::charge_overhead(m, s.at, done);
+        return SyncOutcome { value, done };
+    }
+    // Plain wg-scope atomic with §4.1 LR-TBL recording of sync writes.
+    ops::wg_plain(m, s, true)
+}
+
+/// The selective remote promotion (§4.2/§4.3), exposed as a free
+/// function so the adaptive protocol can delegate to it.
+pub fn remote(m: &mut MemSystem, s: &SyncOp) -> SyncOutcome {
+    let line = line_of(s.addr);
+
+    let mut t_ready = s.at;
+    if s.order.acquires() {
+        // §4.2 optimization: if the local sharer runs on *this* CU the
+        // LR-TBL hit is local and no broadcast is needed (same L1 ⇒ its
+        // updates are already visible here). Only a *definite* entry may
+        // take this shortcut: a sticky-overflowed table answers every
+        // address conservatively (`Some(None)`), and skipping the
+        // broadcast on that answer would leave the true local sharer's
+        // sFIFO undrained — a stale read, not just a slow one.
+        let own_hit = matches!(m.cu(s.cu).lr_tbl.lookup(s.addr), Some(Some(_)));
+        let mut t_promote = s.at + 1; // own LR-TBL probe
+        if !own_hit {
+            m.stats.selective_flush_requests += 1;
+            // Broadcast selective-flush(L) via the L2 to all other L1s.
+            let t_req = m.xbar_hop(s.cu, s.at);
+            let t_fan = m.l2_control_hop(line, t_req);
+            let mut t_all = t_fan;
+            for target in 0..m.num_cus() {
+                if target == s.cu {
+                    continue;
+                }
+                let t_arrive = m.xbar_hop(target, t_fan);
+                // LR-TBL probe: one cycle.
+                let lookup = m.cu(target).lr_tbl.lookup(s.addr);
+                let t_done = match lookup {
+                    None => {
+                        // Definite miss: immediate ack (§4.2).
+                        m.stats.selective_flush_nops += 1;
+                        t_arrive + 1
+                    }
+                    Some(upto) => {
+                        // Hit (or conservative overflow): drain the sFIFO
+                        // up to the recorded ticket, then remember that the
+                        // local sharer's next acquire of L must promote.
+                        m.stats.selective_flush_drains += 1;
+                        let t = m.flush_l1(target, upto, t_arrive + 1);
+                        ops::record_pa(m, target, s.addr, t)
+                    }
+                };
+                let t_ack = m.xbar_hop(target, t_done);
+                t_all = t_all.max(t_ack);
+            }
+            t_promote = t_all;
+        }
+        // Requester performs a global acquire for itself: drain own dirty
+        // lines and flash-invalidate (§4.2 steps 4–5).
+        let t_own = m.invalidate_l1(s.cu, s.at);
+        t_ready = t_promote.max(t_own);
+    }
+    if s.order.releases() && !s.order.acquires() {
+        // §4.3 step 1–2: local cache-flush pushes the remote sharer's
+        // updates to global scope.
+        t_ready = m.full_flush_l1(s.cu, s.at);
+    }
+
+    // §4.2 step 6 / §4.3 step 3: the atomic completes at the L2, with the
+    // line locked against intervening reads.
+    m.lock_l2_line(line, t_ready);
+    let (value, mut done) = m.l2_atomic(s.cu, s.addr, s.op, s.operand, s.cmp, t_ready);
+    m.lock_l2_line(line, done);
+
+    if s.order.releases() && !s.order.acquires() {
+        // §4.3 step 4 (rem_rel): selective-invalidate — L1s record L in
+        // their PA-TBL (one-cycle CAM insert); actual invalidation is
+        // deferred to the local sharer's next wg-scope acquire of L.
+        //
+        // For rem_ar the arming already happened during the acquire
+        // part's selective-flush, *at the LR-TBL-identified local
+        // sharer(s) only* (§4.2's mechanism): a cache with no local
+        // release on L holds no locally-produced state for it, so only
+        // the identified sharer's next acquire needs promotion. This
+        // keeps steal-heavy workloads (64 deque counters) from flooding
+        // every PA-TBL in the device.
+        m.stats.selective_inv_requests += 1;
+        let t_fan = m.l2_control_hop(line, done);
+        let mut t_all = done;
+        for target in 0..m.num_cus() {
+            if target == s.cu {
+                continue;
+            }
+            let t_arrive = m.xbar_hop(target, t_fan);
+            let t_rec = ops::record_pa(m, target, s.addr, t_arrive + 1);
+            let t_ack = m.xbar_hop(target, t_rec);
+            t_all = t_all.max(t_ack);
+        }
+        done = t_all;
+    }
+    SyncOutcome { value, done }
+}

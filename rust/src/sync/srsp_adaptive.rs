@@ -1,0 +1,251 @@
+//! `srsp-adaptive`: sRSP with an eager-invalidation fallback under
+//! LR-TBL pressure — the paper's §4 monitoring idea taken one step
+//! further, and the proof that the protocol axis is open: this protocol
+//! is a pure registry entry (one file + one [`PROTOCOLS`] line), landed
+//! without touching the engine, config, coordinator, harness or CLI.
+//!
+//! **Rationale.** sRSP's selective flush wins exactly when LR-TBL
+//! lookups are *precise*: a miss is a one-cycle nop ack, a hit drains
+//! one sFIFO prefix. Once a table sticky-overflows, every lookup answers
+//! conservatively (`drain everything`) and each remote acquire pays a
+//! full drain *plus* the PA-TBL arming — strictly more work than naive
+//! RSP's flash invalidate of the same cache. This protocol monitors the
+//! device-wide remote-acquire pressure through the LR-TBL overflow rate
+//! (`lr_tbl_overflows / lr_tbl_insertions`, both already maintained by
+//! the shared core) and, past a tunable threshold, falls back from the
+//! selective-flush broadcast to naive RSP's eager all-L1 invalidation
+//! for the acquire side of remote ops.
+//!
+//! Correctness is free in both modes: the eager broadcast is a strict
+//! superset of the selective obligations (invalidating an L1 drains its
+//! sFIFO and clears both tables, so the local sharer's next access
+//! misses to the L2 and reads fresh). Pure releases (`rem_rel`) stay on
+//! sRSP's selective-invalidate path even under pressure; a combined
+//! `rem_ar` past the threshold delegates wholesale to the naive
+//! promotion, so its release side goes eager too (it already paid the
+//! all-L1 invalidate — arming PA-TBLs on top would be redundant work).
+//! The decision input is deterministic simulator state, so runs replay
+//! byte-identically.
+//!
+//! [`PROTOCOLS`]: super::protocol::PROTOCOLS
+
+use super::ops::{SyncOp, SyncOutcome};
+use super::protocol::SyncProtocol;
+use super::{rsp_naive, srsp};
+use crate::mem::MemSystem;
+use crate::params::ParamSpec;
+
+/// Default LR-TBL overflow rate above which remote acquires go eager.
+pub const DEFAULT_OVERFLOW_THRESHOLD: f64 = 0.25;
+
+/// Registry entry for the adaptive sRSP variant.
+pub struct SrspAdaptive;
+
+static PARAMS: [ParamSpec; 3] = [
+    srsp::TABLE_PARAMS[0],
+    srsp::TABLE_PARAMS[1],
+    ParamSpec {
+        key: "overflow_threshold",
+        default: DEFAULT_OVERFLOW_THRESHOLD,
+        help: "LR-TBL overflow rate beyond which remote acquires invalidate eagerly",
+    },
+];
+
+impl SyncProtocol for SrspAdaptive {
+    fn name(&self) -> &'static str {
+        "srsp-adaptive"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["adaptive", "srsp_adaptive"]
+    }
+
+    fn summary(&self) -> &'static str {
+        "sRSP that falls back to eager invalidation under LR-TBL overflow pressure"
+    }
+
+    fn params(&self) -> &'static [ParamSpec] {
+        &PARAMS
+    }
+
+    fn supports_remote(&self) -> bool {
+        true
+    }
+
+    fn wg_op(&self, m: &mut MemSystem, s: &SyncOp) -> SyncOutcome {
+        // Identical to sRSP: PA-TBL promotion check, LR-TBL recording.
+        srsp::wg(m, s)
+    }
+
+    fn remote_op(&self, m: &mut MemSystem, s: &SyncOp) -> SyncOutcome {
+        // Monitor: fraction of LR-TBL insertions that displaced an entry.
+        // Above the threshold the tables are thrashing, so selective
+        // flushes have degenerated to conservative full drains — eager
+        // invalidation is cheaper and equally correct.
+        let insertions = m.stats.lr_tbl_insertions;
+        let overflows = m.stats.lr_tbl_overflows;
+        let threshold = m
+            .proto_params
+            .get_or("overflow_threshold", DEFAULT_OVERFLOW_THRESHOLD);
+        let thrashing = insertions > 0 && overflows as f64 > threshold * insertions as f64;
+        if thrashing && s.order.acquires() {
+            m.stats.bump("adaptive_eager_promotions", 1);
+            return rsp_naive::remote(m, s);
+        }
+        if s.order.acquires() {
+            m.stats.bump("adaptive_selective_promotions", 1);
+        }
+        srsp::remote(m, s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DeviceConfig, Protocol};
+    use crate::mem::MemSystem;
+    use crate::sync::engine::{remote_op, sync_op};
+    use crate::sync::{AtomicOp, MemOrder, Scope};
+
+    const LOCK: u64 = 0x1000;
+    const LOCK2: u64 = 0x3000;
+    const DATA: u64 = 0x2000;
+
+    fn sys_with_lr(lr: u32) -> MemSystem {
+        MemSystem::new(DeviceConfig {
+            lr_tbl_entries: lr,
+            ..DeviceConfig::small()
+        })
+    }
+
+    /// wg-scope release on `cu` guarding `data`.
+    fn release(m: &mut MemSystem, cu: u32, lock: u64, data: u64, v: u32, t: u64) -> u64 {
+        let t = m.l1_write(cu, data, 4, v as u64, t);
+        sync_op(
+            m,
+            Protocol::SRSP_ADAPTIVE,
+            cu,
+            lock,
+            AtomicOp::Store,
+            MemOrder::Release,
+            Scope::Wg,
+            1,
+            0,
+            t,
+        )
+        .done
+    }
+
+    #[test]
+    fn healthy_tables_stay_selective_and_match_srsp() {
+        // Roomy tables: no overflow pressure, so the adaptive protocol
+        // must take exactly sRSP's selective path (same counters, same
+        // correctness).
+        let mut m = sys_with_lr(16);
+        let t = release(&mut m, 0, LOCK, DATA, 41, 0);
+        let out = remote_op(
+            &mut m,
+            Protocol::SRSP_ADAPTIVE,
+            1,
+            LOCK,
+            AtomicOp::Cas,
+            MemOrder::Acquire,
+            2,
+            1,
+            t,
+        );
+        assert_eq!(out.value, 1, "CAS must see the released lock");
+        let (v, _) = m.l1_read(1, DATA, 4, out.done);
+        assert_eq!(v, 41, "selective path must publish the sharer's data");
+        assert_eq!(m.stats.selective_flush_requests, 1, "must broadcast selectively");
+        assert_eq!(m.stats.misc.get("adaptive_selective_promotions"), Some(&1));
+        assert_eq!(m.stats.misc.get("adaptive_eager_promotions"), None);
+    }
+
+    #[test]
+    fn overflow_pressure_triggers_eager_fallback_and_stays_correct() {
+        // lr_tbl_entries = 0: every insertion overflows, so the overflow
+        // rate is 1.0 > threshold from the first release — the remote
+        // acquire must go eager (no selective broadcast) and still
+        // observe the local sharer's release.
+        let mut m = sys_with_lr(0);
+        let t = release(&mut m, 0, LOCK, DATA, 7, 0);
+        assert!(m.stats.lr_tbl_overflows > 0);
+        let out = remote_op(
+            &mut m,
+            Protocol::SRSP_ADAPTIVE,
+            1,
+            LOCK,
+            AtomicOp::Cas,
+            MemOrder::Acquire,
+            2,
+            1,
+            t,
+        );
+        assert_eq!(out.value, 1, "eager fallback must see the released lock");
+        let (v, _) = m.l1_read(1, DATA, 4, out.done);
+        assert_eq!(v, 7, "eager invalidation must publish the sharer's data");
+        assert_eq!(
+            m.stats.selective_flush_requests, 0,
+            "past the threshold the selective broadcast is skipped"
+        );
+        assert_eq!(m.stats.misc.get("adaptive_eager_promotions"), Some(&1));
+    }
+
+    #[test]
+    fn threshold_param_disables_the_fallback() {
+        // overflow_threshold = 2.0 can never be exceeded (rate <= 1), so
+        // even a permanently-overflowed table stays on the selective
+        // (conservative full-drain) path.
+        let mut m = sys_with_lr(0);
+        m.proto_params = crate::params::Params::resolve(
+            &PARAMS,
+            &[("overflow_threshold".to_string(), 2.0)],
+        )
+        .unwrap();
+        let t = release(&mut m, 0, LOCK, DATA, 9, 0);
+        let out = remote_op(
+            &mut m,
+            Protocol::SRSP_ADAPTIVE,
+            1,
+            LOCK,
+            AtomicOp::Cas,
+            MemOrder::Acquire,
+            2,
+            1,
+            t,
+        );
+        assert_eq!(out.value, 1);
+        let (v, _) = m.l1_read(1, DATA, 4, out.done);
+        assert_eq!(v, 9);
+        assert_eq!(
+            m.stats.selective_flush_requests, 1,
+            "threshold 2.0 must keep the selective broadcast"
+        );
+        assert_eq!(m.stats.misc.get("adaptive_eager_promotions"), None);
+    }
+
+    #[test]
+    fn release_side_stays_selective_even_under_pressure() {
+        // Remote releases keep sRSP's selective-invalidate (PA arming)
+        // regardless of the monitor: the fallback targets the
+        // acquire-side selective-flush only.
+        let mut m = sys_with_lr(0);
+        let _ = release(&mut m, 0, LOCK2, DATA, 1, 0); // build pressure
+        let t = m.l1_write(1, DATA, 4, 5, 0);
+        let out = remote_op(
+            &mut m,
+            Protocol::SRSP_ADAPTIVE,
+            1,
+            LOCK,
+            AtomicOp::Store,
+            MemOrder::Release,
+            1,
+            0,
+            t,
+        );
+        assert!(out.done > t);
+        assert_eq!(m.stats.selective_inv_requests, 1);
+        assert_eq!(m.stats.misc.get("adaptive_eager_promotions"), None);
+    }
+}

@@ -249,7 +249,7 @@ mod tests {
         let mut bfs = Bfs::setup(&g, &mut alloc, &mut image, 2, 0);
         let cfg = DeviceConfig::small();
         let (run, mem) =
-            run_scenario_seeded(&cfg, Scenario::Srsp, &mut bfs, NativeMath, 32, image);
+            run_scenario_seeded(&cfg, Scenario::SRSP, &mut bfs, NativeMath, 32, image);
         assert!(run.converged, "no-progress detector must end the loop");
         let d = bfs.result(&mem);
         assert_eq!(&d[..3], &[0, 1, 2]);

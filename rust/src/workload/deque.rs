@@ -324,7 +324,7 @@ mod tests {
 
     #[test]
     fn owner_drains_own_queue_exactly() {
-        for scenario in [Scenario::Baseline, Scenario::ScopeOnly, Scenario::Srsp] {
+        for scenario in [Scenario::BASELINE, Scenario::SCOPE_ONLY, Scenario::SRSP] {
             let mut alloc = MemAlloc::new();
             let layout = DequeLayout::alloc(&mut alloc, 4, 32);
             let out = alloc.alloc(4 * 8);
@@ -398,7 +398,7 @@ mod tests {
 
     #[test]
     fn owner_and_thieves_claim_each_task_exactly_once() {
-        for scenario in [Scenario::StealOnly, Scenario::Rsp, Scenario::Srsp] {
+        for scenario in [Scenario::STEAL_ONLY, Scenario::RSP, Scenario::SRSP] {
             let mut alloc = MemAlloc::new();
             let layout = DequeLayout::alloc(&mut alloc, 1, 64);
             let out = alloc.alloc(4 * 8);
@@ -419,9 +419,9 @@ mod tests {
         let mut alloc = MemAlloc::new();
         let layout = DequeLayout::alloc(&mut alloc, 1, 64);
         let out = alloc.alloc(4 * 8);
-        let mut dev = Device::new(DeviceConfig::small(), Protocol::Srsp);
+        let mut dev = Device::new(DeviceConfig::small(), Protocol::SRSP);
         layout.fill(&mut dev.mem.backing, 0, &(1..=40).collect::<Vec<_>>());
-        let prog = contention_kernel(&layout, SyncFlavor::of(Scenario::Srsp), out);
+        let prog = contention_kernel(&layout, SyncFlavor::of(Scenario::SRSP), out);
         dev.launch_simple(&prog, 4);
         assert!(
             dev.mem.stats.remote_acqrels > 0,

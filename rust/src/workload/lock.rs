@@ -1,0 +1,469 @@
+//! The asymmetric-mutex workload (in the spirit of Liu et al.,
+//! *Asymmetry-aware Scalable Locking*), ported through the [`Kernel`]
+//! registry: per-lock critical sections with a **fast path** for the
+//! lock's local sharer and a **slow path** for stealers.
+//!
+//! Each of `locks` line-isolated locks guards one line-isolated counter.
+//! Lock `l` is *owned* by work-group `l % nw`; its owner performs
+//! `own_iters` critical sections through the fast path, and work-group
+//! `(l + 1) % nw` — the designated stealer — performs `steal_iters`
+//! critical sections through the slow path. Inside every critical
+//! section the counter is updated with plain (non-atomic) load/add/store,
+//! so the oracle (`counter[l] == own_iters + steal_iters`, exact) proves
+//! *mutual exclusion and visibility*, not just atomicity of the lock ops
+//! themselves.
+//!
+//! The scope assignment follows the scenario exactly like the deque's
+//! [`SyncFlavor`](super::deque::SyncFlavor):
+//!
+//! * promotion scenarios (RSP/sRSP/srsp-adaptive) — the owner spins on a
+//!   **wg-scope CAS** (L1-local once the line is resident; the release
+//!   store is LR-TBL-recorded under sRSP) and stealers acquire/release
+//!   with **`rem_acq`/`rem_rel`**: every lock handoff is a remote-scope
+//!   promotion, the paper's §4 running example as a workload;
+//! * hLRC — both paths at wg scope, ownership ping-pongs lazily;
+//! * scoped-only scenarios — both paths at cmp scope (a wg-scope owner
+//!   with a cmp-scope stealer would be racy on non-coherent L1s: the
+//!   owner's release could sit unflushed in its sFIFO while the stealer's
+//!   L2 CAS reads the stale unlocked value).
+//!
+//! Every scenario performs the *same* critical sections — only the sync
+//! flavor differs — so one oracle validates all of them and vs-Baseline
+//! ratios compare identical work.
+
+use super::deque::DequeLayout;
+use super::driver::Workload;
+use super::engine::AppLayout;
+use super::registry::{Instance, Kernel, ParamSpec, Params, Prepared, WorkloadPreset, WorkloadSize};
+use crate::config::Scenario;
+use crate::kir::inst::StatCounter;
+use crate::kir::{AluOp, Asm, Program, Src};
+use crate::mem::{Addr, BackingStore, MemAlloc};
+use crate::sync::{AtomicOp, MemOrder, Scope};
+
+/// Host-side asymmetric-mutex state.
+pub struct Lock {
+    layout: AppLayout,
+    locks_addr: Addr,
+    counters: Addr,
+    locks: u32,
+    own_iters: u32,
+    steal_iters: u32,
+    done: bool,
+}
+
+impl Lock {
+    pub fn setup(
+        alloc: &mut MemAlloc,
+        backing: &mut BackingStore,
+        locks: u32,
+        own_iters: u32,
+        steal_iters: u32,
+    ) -> Self {
+        // Locks and counters are line-isolated: each lock is its own sync
+        // variable, and a counter update never drags a neighbor's lock
+        // line through a promotion.
+        let locks_addr = alloc.alloc(locks as u64 * 64);
+        let counters = alloc.alloc(locks as u64 * 64);
+        for l in 0..locks {
+            backing.write_u32(locks_addr + l as u64 * 64, 0);
+            backing.write_u32(counters + l as u64 * 64, 0);
+        }
+        let layout = AppLayout {
+            row_ptr: 0,
+            col: 0,
+            weight: 0,
+            a0: locks_addr,
+            a1: counters,
+            a2: 0,
+            changed: 0,
+            chunk: 1,
+            n: locks,
+            damping_bits: 0,
+            aux: 0,
+            high_water: alloc.high_water(),
+        };
+        Lock {
+            layout,
+            locks_addr,
+            counters,
+            locks,
+            own_iters,
+            steal_iters,
+            done: false,
+        }
+    }
+
+    /// Final per-lock counters.
+    pub fn result(&self, backing: &BackingStore) -> Vec<u32> {
+        (0..self.locks)
+            .map(|l| backing.read_u32(self.counters + l as u64 * 64))
+            .collect()
+    }
+}
+
+impl Workload for Lock {
+    fn kinds(&self) -> Vec<u32> {
+        // One launch; the custom kernel never issues a Compute op (kind 0
+        // would trap in the engine — a canary, not a dispatch target).
+        vec![0]
+    }
+
+    fn layout(&self) -> AppLayout {
+        self.layout.clone()
+    }
+
+    fn begin_round(&mut self, _backing: &mut BackingStore) -> Option<Vec<u32>> {
+        if self.done {
+            return None;
+        }
+        // The kernel derives lock ownership from wg ids; the deques stay
+        // empty.
+        Some(Vec::new())
+    }
+
+    fn end_round(&mut self, _backing: &mut BackingStore) {
+        self.done = true;
+    }
+
+    fn name(&self) -> &'static str {
+        "LOCK"
+    }
+
+    /// Custom kernel: fast/slow-path critical sections instead of deque
+    /// draining.
+    fn kernel(
+        &self,
+        _deques: &DequeLayout,
+        scenario: Scenario,
+        _kind: u32,
+        _ctrl: Addr,
+    ) -> Program {
+        build_lock_kernel(
+            scenario,
+            self.locks_addr,
+            self.counters,
+            self.locks,
+            self.own_iters,
+            self.steal_iters,
+        )
+    }
+}
+
+/// How a slow-path (stealer) critical section acquires/releases.
+#[derive(Clone, Copy)]
+enum SlowPath {
+    Remote,
+    Scoped(Scope),
+}
+
+/// Emit the asymmetric-mutex program for `scenario`.
+pub fn build_lock_kernel(
+    scenario: Scenario,
+    locks_addr: Addr,
+    counters: Addr,
+    locks: u32,
+    own_iters: u32,
+    steal_iters: u32,
+) -> Program {
+    // Scope pairing per scenario (see module docs).
+    let (owner_scope, slow) = if scenario.remote_ops() {
+        (Scope::Wg, SlowPath::Remote)
+    } else if scenario.lazy_transfer() {
+        (Scope::Wg, SlowPath::Scoped(Scope::Wg))
+    } else {
+        (Scope::Cmp, SlowPath::Scoped(Scope::Cmp))
+    };
+
+    let mut a = Asm::new();
+    let wg = a.reg();
+    let nw = a.reg();
+    let l = a.reg();
+    let c = a.reg();
+    let i = a.reg();
+    let old = a.reg();
+    let val = a.reg();
+    let lock = a.reg();
+    let ctr = a.reg();
+
+    a.wg_id(wg);
+    a.num_wgs(nw);
+    a.imm(l, 0);
+
+    a.label("locks_loop");
+    a.ge_u(c, l, Src::I(u64::from(locks)));
+    a.bnz(c, "end");
+    a.shl(lock, l, Src::I(6));
+    a.add(lock, lock, Src::I(locks_addr));
+    a.shl(ctr, l, Src::I(6));
+    a.add(ctr, ctr, Src::I(counters));
+
+    // ---- fast path: the owner (wg == l % nw) ----
+    a.alu(AluOp::RemU, c, l, Src::R(nw));
+    a.eq(c, c, Src::R(wg));
+    a.bz(c, "not_owner");
+    a.imm(i, 0);
+    a.label("own_cs");
+    a.ge_u(c, i, Src::I(u64::from(own_iters)));
+    a.bnz(c, "not_owner");
+    a.label("own_spin");
+    a.atomic(
+        old,
+        AtomicOp::Cas,
+        lock,
+        Src::I(1),
+        Src::I(0),
+        MemOrder::Acquire,
+        owner_scope,
+    );
+    a.bnz(old, "own_spin");
+    // Critical section: plain load/add/store on the guarded counter.
+    a.ld(val, ctr, 0, 4);
+    a.add(val, val, Src::I(1));
+    a.st(ctr, 0, val, 4);
+    a.atomic(
+        old,
+        AtomicOp::Store,
+        lock,
+        Src::I(0),
+        Src::I(0),
+        MemOrder::Release,
+        owner_scope,
+    );
+    a.stat(StatCounter::TaskExecuted);
+    a.add(i, i, Src::I(1));
+    a.br("own_cs");
+    a.label("not_owner");
+
+    // ---- slow path: the designated stealer (wg == (l + 1) % nw) ----
+    a.add(c, l, Src::I(1));
+    a.alu(AluOp::RemU, c, c, Src::R(nw));
+    a.eq(c, c, Src::R(wg));
+    a.bz(c, "next_lock");
+    a.imm(i, 0);
+    a.label("steal_cs");
+    a.ge_u(c, i, Src::I(u64::from(steal_iters)));
+    a.bnz(c, "next_lock");
+    a.stat(StatCounter::StealAttempt);
+    a.label("steal_spin");
+    match slow {
+        SlowPath::Remote => {
+            a.remote_atomic(old, AtomicOp::Cas, lock, Src::I(1), Src::I(0), MemOrder::Acquire);
+        }
+        SlowPath::Scoped(scope) => {
+            a.atomic(
+                old,
+                AtomicOp::Cas,
+                lock,
+                Src::I(1),
+                Src::I(0),
+                MemOrder::Acquire,
+                scope,
+            );
+        }
+    }
+    a.bnz(old, "steal_spin");
+    a.ld(val, ctr, 0, 4);
+    a.add(val, val, Src::I(1));
+    a.st(ctr, 0, val, 4);
+    match slow {
+        SlowPath::Remote => {
+            a.remote_atomic(old, AtomicOp::Store, lock, Src::I(0), Src::I(0), MemOrder::Release);
+        }
+        SlowPath::Scoped(scope) => {
+            a.atomic(
+                old,
+                AtomicOp::Store,
+                lock,
+                Src::I(0),
+                Src::I(0),
+                MemOrder::Release,
+                scope,
+            );
+        }
+    }
+    a.stat(StatCounter::StealSuccess);
+    a.stat(StatCounter::TaskExecuted);
+    a.add(i, i, Src::I(1));
+    a.br("steal_cs");
+
+    a.label("next_lock");
+    a.add(l, l, Src::I(1));
+    a.br("locks_loop");
+    a.label("end");
+    a.halt();
+    a.finish()
+}
+
+/// Registry entry for the asymmetric mutex.
+pub struct LockKernel;
+
+impl Kernel for LockKernel {
+    fn name(&self) -> &'static str {
+        "lock"
+    }
+
+    fn display(&self) -> &'static str {
+        "LOCK"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["mutex", "asym-lock"]
+    }
+
+    fn summary(&self) -> &'static str {
+        "asymmetric mutexes: owner fast path, stealers through remote scope"
+    }
+
+    fn oracle(&self) -> &'static str {
+        "exact (counter == own_iters + steal_iters per lock)"
+    }
+
+    fn params(&self) -> &'static [ParamSpec] {
+        &[
+            ParamSpec {
+                key: "locks",
+                default: 0.0,
+                help: "mutex count (0 = auto: 12 tiny / 96 paper)",
+            },
+            ParamSpec {
+                key: "own_iters",
+                default: 6.0,
+                help: "fast-path critical sections per lock (the local sharer)",
+            },
+            ParamSpec {
+                key: "steal_iters",
+                default: 2.0,
+                help: "slow-path critical sections per lock (the stealer)",
+            },
+        ]
+    }
+
+    fn prepare(&self, size: WorkloadSize, _seed: u64, params: &mut Params) -> Prepared {
+        if params.get("locks") == 0.0 {
+            params.set_auto(
+                "locks",
+                match size {
+                    WorkloadSize::Paper => 96.0,
+                    WorkloadSize::Tiny => 12.0,
+                },
+            );
+        }
+        Prepared {
+            graph: None,
+            max_rounds: 2,
+        }
+    }
+
+    fn instantiate(&self, preset: &WorkloadPreset) -> Instance {
+        let p = &preset.params;
+        let (locks, own_iters, steal_iters) = (
+            p.get_u32("locks").max(1),
+            p.get_u32("own_iters"),
+            p.get_u32("steal_iters"),
+        );
+        let mut alloc = MemAlloc::new();
+        let mut image = BackingStore::new();
+        let wl = Lock::setup(&mut alloc, &mut image, locks, own_iters, steal_iters);
+        let counters = wl.counters;
+        let want = own_iters + steal_iters;
+        Instance {
+            workload: Box::new(wl),
+            image,
+            check: Box::new(move |mem| {
+                for l in 0..locks {
+                    let got = mem.read_u32(counters + l as u64 * 64);
+                    if got != want {
+                        return Err(format!(
+                            "LOCK counter {l} = {got}, expected {want} \
+                             (mutual exclusion or visibility broken)"
+                        ));
+                    }
+                }
+                Ok(())
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceConfig;
+    use crate::workload::driver::run_scenario_seeded;
+    use crate::workload::engine::NativeMath;
+    use crate::workload::registry;
+
+    fn run(
+        scenario: Scenario,
+        num_cus: u32,
+        overrides: &[(String, f64)],
+    ) -> Result<crate::workload::driver::RunResult, String> {
+        let preset =
+            WorkloadPreset::with_params(registry::LOCK, WorkloadSize::Tiny, 5, overrides).unwrap();
+        let inst = preset.instance();
+        let mut wl = inst.workload;
+        let cfg = DeviceConfig {
+            num_cus,
+            ..DeviceConfig::small()
+        };
+        let (r, mem) = run_scenario_seeded(
+            &cfg,
+            scenario,
+            wl.as_mut(),
+            NativeMath,
+            preset.max_rounds,
+            inst.image,
+        );
+        if !r.converged {
+            return Err("did not converge".into());
+        }
+        (inst.check)(&mem)?;
+        Ok(r)
+    }
+
+    #[test]
+    fn exact_under_every_scenario() {
+        for scenario in Scenario::ALL {
+            run(scenario, 4, &[]).unwrap_or_else(|e| panic!("{scenario:?}: {e}"));
+        }
+        run(Scenario::HLRC, 4, &[]).unwrap();
+        run(Scenario::SRSP_ADAPTIVE, 4, &[]).unwrap();
+    }
+
+    #[test]
+    fn degenerate_devices() {
+        // 1 wg: owner and stealer coincide (the slow path issues remote
+        // ops from the owner's own CU — the §4.2 same-CU shortcut).
+        run(Scenario::SRSP, 1, &[]).unwrap();
+        // More wgs than locks: surplus wgs idle.
+        run(Scenario::SRSP, 4, &[("locks".into(), 2.0)]).unwrap();
+    }
+
+    #[test]
+    fn slow_path_drives_remote_promotions() {
+        let r = run(Scenario::SRSP, 4, &[]).unwrap();
+        assert!(
+            r.stats.remote_acquires > 0 && r.stats.remote_releases > 0,
+            "stealers must take the lock through remote scope"
+        );
+        assert!(r.stats.wg_releases > 0, "owners must release at wg scope");
+        assert!(
+            r.stats.tasks_stolen > 0,
+            "slow-path critical sections count as steals"
+        );
+    }
+
+    #[test]
+    fn srsp_promotes_fewer_lines_than_naive() {
+        let rsp = run(Scenario::RSP, 4, &[]).unwrap();
+        let srsp = run(Scenario::SRSP, 4, &[]).unwrap();
+        assert!(
+            srsp.stats.lines_invalidated < rsp.stats.lines_invalidated,
+            "selective promotion must not flash every L1 per handoff \
+             ({} vs {})",
+            srsp.stats.lines_invalidated,
+            rsp.stats.lines_invalidated
+        );
+    }
+}

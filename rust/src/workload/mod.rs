@@ -17,6 +17,8 @@
 //! * [`stress`] — the asymmetry-stress family: a synthetic
 //!   sharer/stealer kernel with a tunable remote-access ratio, the
 //!   `remote-ratio` sweep axis.
+//! * [`lock`] — the asymmetric mutex (cf. Liu et al.): owner fast-path
+//!   critical sections at wg scope, stealers through remote scope.
 //! * [`registry`] — the pluggable workload table: every kernel
 //!   self-describes (name, oracle, default chunking, tunable params) and
 //!   the runner/CLI/presets/reports resolve through it.
@@ -28,6 +30,7 @@ pub mod deque;
 pub mod driver;
 pub mod engine;
 pub mod graph;
+pub mod lock;
 pub mod mis;
 pub mod pagerank;
 pub mod prodcons;

@@ -393,14 +393,14 @@ mod tests {
         for scenario in Scenario::ALL {
             run(scenario, 4, 24.0).unwrap_or_else(|e| panic!("{scenario:?}: {e}"));
         }
-        run(Scenario::Hlrc, 4, 24.0).unwrap();
+        run(Scenario::HLRC, 4, 24.0).unwrap();
     }
 
     #[test]
     fn degenerate_devices() {
         // 1 wg: solo produce-then-consume; 3 wgs: one idle leftover.
-        run(Scenario::Srsp, 1, 16.0).unwrap();
-        run(Scenario::Srsp, 3, 16.0).unwrap();
+        run(Scenario::SRSP, 1, 16.0).unwrap();
+        run(Scenario::SRSP, 3, 16.0).unwrap();
     }
 
     #[test]
@@ -412,7 +412,7 @@ mod tests {
         let cfg = DeviceConfig::small();
         let (r, _mem) = run_scenario_seeded(
             &cfg,
-            Scenario::Srsp,
+            Scenario::SRSP,
             wl.as_mut(),
             NativeMath,
             2,

@@ -11,12 +11,15 @@
 //! [`REGISTRY`]. Nothing else in the harness, CLI or report layers needs
 //! to change.
 
-use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 
 use super::driver::Workload;
 use super::graph::Graph;
 use crate::mem::BackingStore;
+
+// The generic parameter machinery is shared with the sync-protocol
+// registry; re-exported under the historical workload paths.
+pub use crate::params::{ParamSpec, Params};
 
 /// Scale of a preset run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,93 +34,6 @@ pub enum WorkloadSize {
 /// preset. Runs that do not ask for explicit seeding reproduce the
 /// figures byte-for-byte with this value.
 pub const DEFAULT_SEED: u64 = 0xC0FFEE;
-
-/// One tunable parameter a workload exposes (`--param key=value`).
-#[derive(Debug, Clone, Copy)]
-pub struct ParamSpec {
-    pub key: &'static str,
-    /// Default value; by convention `0` often means "auto by size"
-    /// (materialized in [`Kernel::prepare`]) — the `help` text says so.
-    pub default: f64,
-    pub help: &'static str,
-}
-
-/// Resolved parameter values for one workload instance: the spec defaults
-/// overlaid with the user's explicit `--param` overrides.
-#[derive(Debug, Clone, Default, PartialEq)]
-pub struct Params {
-    vals: BTreeMap<&'static str, f64>,
-    explicit: BTreeSet<&'static str>,
-}
-
-impl Params {
-    /// Overlay `overrides` on `specs`' defaults. Unknown keys are an
-    /// error listing the valid ones.
-    pub fn resolve(
-        specs: &'static [ParamSpec],
-        overrides: &[(String, f64)],
-    ) -> Result<Params, String> {
-        let mut p = Params::default();
-        for s in specs {
-            p.vals.insert(s.key, s.default);
-        }
-        for (key, val) in overrides {
-            let Some(spec) = specs.iter().find(|s| s.key == key.as_str()) else {
-                let valid: Vec<&str> = specs.iter().map(|s| s.key).collect();
-                return Err(format!(
-                    "unknown parameter '{key}' (valid: {})",
-                    if valid.is_empty() {
-                        "none".to_string()
-                    } else {
-                        valid.join(", ")
-                    }
-                ));
-            };
-            p.vals.insert(spec.key, *val);
-            p.explicit.insert(spec.key);
-        }
-        Ok(p)
-    }
-
-    /// Value of `key`. Panics on a key the spec does not declare —
-    /// that is a workload-author bug, not a user error.
-    pub fn get(&self, key: &str) -> f64 {
-        *self
-            .vals
-            .get(key)
-            .unwrap_or_else(|| panic!("parameter '{key}' not declared in the workload's spec"))
-    }
-
-    pub fn get_u32(&self, key: &str) -> u32 {
-        self.get(key) as u32
-    }
-
-    /// Was `key` explicitly overridden by the user?
-    pub fn is_explicit(&self, key: &str) -> bool {
-        self.explicit.contains(key)
-    }
-
-    /// Materialize an auto default (used by [`Kernel::prepare`] for
-    /// size-dependent defaults); does not mark the key explicit.
-    pub fn set_auto(&mut self, key: &'static str, val: f64) {
-        self.vals.insert(key, val);
-    }
-
-    /// Compact `k=v;k2=v2` rendering of the explicit overrides (report
-    /// column; empty when the run used pure defaults).
-    pub fn overrides_display(&self) -> String {
-        let mut parts: Vec<String> = Vec::new();
-        for key in &self.explicit {
-            let v = self.vals[key];
-            if v == v.trunc() && v.abs() < 1e15 {
-                parts.push(format!("{key}={}", v as i64));
-            } else {
-                parts.push(format!("{key}={v}"));
-            }
-        }
-        parts.join(";")
-    }
-}
 
 /// Input + bounds produced by [`Kernel::prepare`] for one (size, seed,
 /// params) triple.
@@ -173,6 +89,7 @@ pub static REGISTRY: &[&dyn Kernel] = &[
     &super::stress::StressKernel,
     &super::bfs::BfsKernel,
     &super::prodcons::ProdConsKernel,
+    &super::lock::LockKernel,
 ];
 
 /// Stable handle to a registered workload (index into [`REGISTRY`]).
@@ -187,6 +104,8 @@ pub const MIS: WorkloadId = WorkloadId(2);
 pub const STRESS: WorkloadId = WorkloadId(3);
 pub const BFS: WorkloadId = WorkloadId(4);
 pub const PRODCONS: WorkloadId = WorkloadId(5);
+/// The asymmetric-mutex workload (Liu et al.-style fast/slow lock paths).
+pub const LOCK: WorkloadId = WorkloadId(6);
 
 impl WorkloadId {
     pub fn kernel(self) -> &'static dyn Kernel {
@@ -323,6 +242,7 @@ impl WorkloadPreset {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::BTreeSet;
 
     #[test]
     fn registry_names_unique_and_resolvable() {
@@ -352,30 +272,8 @@ mod tests {
         assert_eq!(resolve("stress"), Some(STRESS));
         assert_eq!(resolve("bfs"), Some(BFS));
         assert_eq!(resolve("prodcons"), Some(PRODCONS));
-        assert_eq!(all().count(), 6);
-    }
-
-    #[test]
-    fn params_resolution_and_errors() {
-        let specs: &'static [ParamSpec] = &[
-            ParamSpec {
-                key: "alpha",
-                default: 2.0,
-                help: "",
-            },
-            ParamSpec {
-                key: "beta",
-                default: 0.5,
-                help: "",
-            },
-        ];
-        let p = Params::resolve(specs, &[("beta".into(), 0.25)]).unwrap();
-        assert_eq!(p.get("alpha"), 2.0);
-        assert_eq!(p.get("beta"), 0.25);
-        assert!(p.is_explicit("beta") && !p.is_explicit("alpha"));
-        assert_eq!(p.overrides_display(), "beta=0.25");
-        let err = Params::resolve(specs, &[("gamma".into(), 1.0)]).unwrap_err();
-        assert!(err.contains("alpha") && err.contains("beta"), "{err}");
+        assert_eq!(resolve("lock"), Some(LOCK));
+        assert_eq!(all().count(), 7);
     }
 
     #[test]

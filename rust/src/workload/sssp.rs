@@ -275,7 +275,7 @@ mod tests {
         let cfg = DeviceConfig::small();
         let (_, final_mem) = run_scenario_seeded(
             &cfg,
-            Scenario::Srsp,
+            Scenario::SRSP,
             &mut sssp,
             NativeMath,
             100,

@@ -333,7 +333,7 @@ mod tests {
 
     #[test]
     fn stress_exact_at_ratio_extremes_all_steal_scenarios() {
-        for scenario in [Scenario::StealOnly, Scenario::Rsp, Scenario::Srsp] {
+        for scenario in [Scenario::STEAL_ONLY, Scenario::RSP, Scenario::SRSP] {
             for r in [0.0, 0.5, 1.0] {
                 let (run, ok) = run_ratio(scenario, r);
                 assert!(run.converged, "{scenario:?} r={r}");
@@ -344,8 +344,8 @@ mod tests {
 
     #[test]
     fn remote_ratio_dials_steal_traffic() {
-        let (balanced, _) = run_ratio(Scenario::Srsp, 0.0);
-        let (skewed, _) = run_ratio(Scenario::Srsp, 0.9);
+        let (balanced, _) = run_ratio(Scenario::SRSP, 0.0);
+        let (skewed, _) = run_ratio(Scenario::SRSP, 0.9);
         // r=0 is balanced: at most end-of-round skew steals. r=0.9 routes
         // ~90% of tasks through the hot set, so most claims are remote.
         let total = skewed.stats.tasks_executed;

@@ -128,20 +128,20 @@ fn check(g: &mut Gen, protocol: Protocol, scenario: Scenario) {
 #[test]
 fn every_task_claimed_exactly_once_srsp() {
     run_prop("deque_once_srsp", 30, |g| {
-        check(g, Protocol::Srsp, Scenario::Srsp);
+        check(g, Protocol::SRSP, Scenario::SRSP);
     });
 }
 
 #[test]
 fn every_task_claimed_exactly_once_naive_rsp() {
     run_prop("deque_once_rsp", 30, |g| {
-        check(g, Protocol::RspNaive, Scenario::Rsp);
+        check(g, Protocol::RSP_NAIVE, Scenario::RSP);
     });
 }
 
 #[test]
 fn every_task_claimed_exactly_once_global() {
     run_prop("deque_once_steal", 30, |g| {
-        check(g, Protocol::ScopedOnly, Scenario::StealOnly);
+        check(g, Protocol::SCOPED_ONLY, Scenario::STEAL_ONLY);
     });
 }

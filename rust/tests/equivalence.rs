@@ -164,9 +164,9 @@ fn srsp_equals_naive_equals_global_reference() {
     run_prop("protocol_equivalence", 40, |g| {
         let spec = gen_spec(g);
         let want: Vec<u32> = expectation(&spec).iter().map(|&(_, v)| v).collect();
-        let reference = run(&spec, Protocol::ScopedOnly, false);
-        let naive = run(&spec, Protocol::RspNaive, true);
-        let srsp = run(&spec, Protocol::Srsp, true);
+        let reference = run(&spec, Protocol::SCOPED_ONLY, false);
+        let naive = run(&spec, Protocol::RSP_NAIVE, true);
+        let srsp = run(&spec, Protocol::SRSP, true);
         assert_eq!(reference, want, "global-scope reference lost updates");
         assert_eq!(naive, want, "naive RSP diverged from expectation");
         assert_eq!(srsp, want, "sRSP diverged from expectation");
@@ -177,8 +177,8 @@ fn srsp_equals_naive_equals_global_reference() {
 fn srsp_deterministic_for_seed() {
     run_prop("srsp_determinism", 10, |g| {
         let spec = gen_spec(g);
-        let a = run(&spec, Protocol::Srsp, true);
-        let b = run(&spec, Protocol::Srsp, true);
+        let a = run(&spec, Protocol::SRSP, true);
+        let b = run(&spec, Protocol::SRSP, true);
         assert_eq!(a, b, "same program must replay identically");
     });
 }
@@ -187,7 +187,7 @@ fn srsp_deterministic_for_seed() {
 fn invariants_hold_after_random_programs() {
     run_prop("post_run_invariants", 15, |g| {
         let spec = gen_spec(g);
-        let mut dev = Device::new(DeviceConfig::small(), Protocol::Srsp);
+        let mut dev = Device::new(DeviceConfig::small(), Protocol::SRSP);
         dev.launch_simple(&build(&spec, true), NUM_WGS);
         dev.mem.check_invariants();
     });

@@ -20,11 +20,11 @@ use srsp::workload::sssp::Sssp;
 
 #[test]
 fn sys_scope_publishes_through_l2_to_backing() {
-    let mut dev = Device::new(DeviceConfig::small(), Protocol::Srsp);
+    let mut dev = Device::new(DeviceConfig::small(), Protocol::SRSP);
     let t = dev.mem.l1_write(0, 0x4000, 4, 77, 0);
     // sys-scope release: L1 flushed, then L2 flushed to the backing store.
     let out = srsp::sync::engine::sync_op(
-        &mut dev.mem, Protocol::Srsp, 0, 0x4040, AtomicOp::Store,
+        &mut dev.mem, Protocol::SRSP, 0, 0x4040, AtomicOp::Store,
         MemOrder::Release, Scope::Sys, 1, 0, t,
     );
     assert_eq!(
@@ -34,7 +34,7 @@ fn sys_scope_publishes_through_l2_to_backing() {
     );
     // sys-scope acquire on another CU drops L1 *and* L2 state.
     let acq = srsp::sync::engine::sync_op(
-        &mut dev.mem, Protocol::Srsp, 1, 0x4040, AtomicOp::Load,
+        &mut dev.mem, Protocol::SRSP, 1, 0x4040, AtomicOp::Load,
         MemOrder::Acquire, Scope::Sys, 0, 0, out.done,
     );
     assert_eq!(acq.value, 1);
@@ -46,7 +46,7 @@ fn sys_scope_publishes_through_l2_to_backing() {
 #[test]
 fn sys_scope_message_passing_kernel() {
     // Full KIR version across protocols.
-    for p in [Protocol::ScopedOnly, Protocol::RspNaive, Protocol::Srsp] {
+    for p in [Protocol::SCOPED_ONLY, Protocol::RSP_NAIVE, Protocol::SRSP] {
         let mut a = Asm::new();
         let wg = a.reg();
         let data = a.reg();
@@ -89,7 +89,7 @@ fn two_wgs_per_cu_share_an_l1_for_wg_scope() {
     };
     let g = Graph::small_world(128, 4, 0.2, 3);
     let oracle = PageRank::oracle(&g, 3);
-    for scenario in [Scenario::ScopeOnly, Scenario::Srsp] {
+    for scenario in [Scenario::SCOPE_ONLY, Scenario::SRSP] {
         let mut alloc = MemAlloc::new();
         let mut image = BackingStore::new();
         let mut prk = PageRank::setup(&g, &mut alloc, &mut image, 8, 3);
@@ -115,7 +115,7 @@ fn star_graph_pagerank_exercises_row_splitting() {
     assert!(g.max_degree() > srsp::workload::engine::K_TILE as u32);
     let oracle = PageRank::oracle(&g, 5);
     let cfg = DeviceConfig::small();
-    for scenario in [Scenario::Baseline, Scenario::Srsp] {
+    for scenario in [Scenario::BASELINE, Scenario::SRSP] {
         let mut alloc = MemAlloc::new();
         let mut image = BackingStore::new();
         let mut prk = PageRank::setup(&g, &mut alloc, &mut image, 16, 5);
@@ -138,14 +138,14 @@ fn star_graph_sssp_and_mis_with_hub() {
     let mut alloc = MemAlloc::new();
     let mut image = BackingStore::new();
     let mut sssp = Sssp::setup(&g, &mut alloc, &mut image, 8, 0);
-    let (run, mem) = run_scenario_seeded(&cfg, Scenario::Srsp, &mut sssp, NativeMath, 100, image);
+    let (run, mem) = run_scenario_seeded(&cfg, Scenario::SRSP, &mut sssp, NativeMath, 100, image);
     assert!(run.converged);
     assert_eq!(sssp.result(&mem), oracle);
 
     let mut alloc = MemAlloc::new();
     let mut image = BackingStore::new();
     let mut mis = Mis::setup(&g, &mut alloc, &mut image, 8);
-    let (run, mem) = run_scenario_seeded(&cfg, Scenario::Srsp, &mut mis, NativeMath, 64, image);
+    let (run, mem) = run_scenario_seeded(&cfg, Scenario::SRSP, &mut mis, NativeMath, 64, image);
     assert!(run.converged);
     let state = mis.result(&mem);
     Mis::validate_mis(&g, &state).unwrap();
@@ -185,7 +185,7 @@ fn custom_config_device_runs_workload() {
     let mut alloc = MemAlloc::new();
     let mut image = BackingStore::new();
     let mut sssp = Sssp::setup(&g, &mut alloc, &mut image, 4, 0);
-    let (run, mem) = run_scenario_seeded(&cfg, Scenario::Srsp, &mut sssp, NativeMath, 200, image);
+    let (run, mem) = run_scenario_seeded(&cfg, Scenario::SRSP, &mut sssp, NativeMath, 200, image);
     assert!(run.converged);
     assert_eq!(sssp.result(&mem), oracle);
 }
@@ -202,7 +202,7 @@ fn empty_workload_rounds_converge_immediately() {
     let mut alloc = MemAlloc::new();
     let mut image = BackingStore::new();
     let mut mis = Mis::setup(&g, &mut alloc, &mut image, 2);
-    let (run, mem) = run_scenario_seeded(&cfg, Scenario::Srsp, &mut mis, NativeMath, 8, image);
+    let (run, mem) = run_scenario_seeded(&cfg, Scenario::SRSP, &mut mis, NativeMath, 8, image);
     assert!(run.converged);
     assert!(run.rounds <= 2);
     Mis::validate_mis(&g, &mis.result(&mem)).unwrap();
@@ -242,7 +242,7 @@ fn stats_steal_counters_consistent() {
     let mut alloc = MemAlloc::new();
     let mut image = BackingStore::new();
     let mut mis = Mis::setup(&g, &mut alloc, &mut image, 8);
-    let (run, _mem) = run_scenario_seeded(&cfg, Scenario::Srsp, &mut mis, NativeMath, 64, image);
+    let (run, _mem) = run_scenario_seeded(&cfg, Scenario::SRSP, &mut mis, NativeMath, 64, image);
     let s = &run.stats;
     assert!(s.tasks_stolen <= s.steal_attempts);
     assert!(s.tasks_stolen + s.steal_failures <= s.steal_attempts + 1);
@@ -266,7 +266,7 @@ fn bundled_dimacs_sample_runs_end_to_end() {
     assert_eq!(g.n, 16);
     let oracle = Sssp::oracle(&g, 0);
     let cfg = DeviceConfig::small();
-    for scenario in [Scenario::Baseline, Scenario::Srsp, Scenario::Hlrc] {
+    for scenario in [Scenario::BASELINE, Scenario::SRSP, Scenario::HLRC] {
         let mut alloc = MemAlloc::new();
         let mut image = BackingStore::new();
         let mut sssp = Sssp::setup(&g, &mut alloc, &mut image, 4, 0);

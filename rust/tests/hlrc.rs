@@ -58,7 +58,7 @@ fn hlrc_lock_handoff_exact() {
         a.halt();
         let prog = a.finish();
 
-        let mut dev = Device::new(DeviceConfig::small(), Protocol::Hlrc);
+        let mut dev = Device::new(DeviceConfig::small(), Protocol::HLRC);
         dev.launch_simple(&prog, 2);
         assert_eq!(
             dev.mem.backing.read_u32(DATA) as u64,
@@ -81,7 +81,7 @@ fn hlrc_workloads_validate_against_oracles() {
     let mut alloc = MemAlloc::new();
     let mut image = BackingStore::new();
     let mut prk = PageRank::setup(&g, &mut alloc, &mut image, 8, 3);
-    let (run, mem) = run_scenario_seeded(&cfg, Scenario::Hlrc, &mut prk, NativeMath, 16, image);
+    let (run, mem) = run_scenario_seeded(&cfg, Scenario::HLRC, &mut prk, NativeMath, 16, image);
     assert!(run.converged);
     let d: f32 = prk
         .result(&mem)
@@ -96,7 +96,7 @@ fn hlrc_workloads_validate_against_oracles() {
     let mut alloc = MemAlloc::new();
     let mut image = BackingStore::new();
     let mut sssp = Sssp::setup(&g, &mut alloc, &mut image, 8, 0);
-    let (run, mem) = run_scenario_seeded(&cfg, Scenario::Hlrc, &mut sssp, NativeMath, 400, image);
+    let (run, mem) = run_scenario_seeded(&cfg, Scenario::HLRC, &mut sssp, NativeMath, 400, image);
     assert!(run.converged);
     assert_eq!(sssp.result(&mem), oracle, "hLRC SSSP must be exact");
 
@@ -104,7 +104,7 @@ fn hlrc_workloads_validate_against_oracles() {
     let mut alloc = MemAlloc::new();
     let mut image = BackingStore::new();
     let mut mis = Mis::setup(&g, &mut alloc, &mut image, 8);
-    let (run, mem) = run_scenario_seeded(&cfg, Scenario::Hlrc, &mut mis, NativeMath, 64, image);
+    let (run, mem) = run_scenario_seeded(&cfg, Scenario::HLRC, &mut mis, NativeMath, 64, image);
     assert!(run.converged);
     let state = mis.result(&mem);
     Mis::validate_mis(&g, &state).unwrap();
@@ -143,7 +143,7 @@ fn hlrc_claim_counter_never_double_claims() {
         let prog = a.finish();
 
         let nwgs = g.u32(2..5);
-        let mut dev = Device::new(DeviceConfig::small(), Protocol::Hlrc);
+        let mut dev = Device::new(DeviceConfig::small(), Protocol::HLRC);
         dev.launch_simple(&prog, nwgs);
         for k in 0..count {
             let v = dev.mem.backing.read_u32(0x8000 + k * 4);
@@ -180,7 +180,7 @@ fn hlrc_registry_eviction_correct() {
     a.halt();
     let prog = a.finish();
 
-    let mut dev = Device::new(DeviceConfig::small(), Protocol::Hlrc);
+    let mut dev = Device::new(DeviceConfig::small(), Protocol::HLRC);
     dev.launch_simple(&prog, 4);
     // Every increment must land: total = 4 wgs * 30.
     let mut total = 0u64;

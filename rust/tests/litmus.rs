@@ -14,7 +14,7 @@ const FLAG: u64 = 0x1040;
 const OUT: u64 = 0x2000;
 
 fn all_protocols() -> [Protocol; 3] {
-    [Protocol::ScopedOnly, Protocol::RspNaive, Protocol::Srsp]
+    [Protocol::SCOPED_ONLY, Protocol::RSP_NAIVE, Protocol::SRSP]
 }
 
 /// Message passing at cmp scope: the acquiring reader must see the data
@@ -84,7 +84,7 @@ fn message_passing_wg_scope_same_cu() {
 /// cmp acquire/release pair it must be visible.
 #[test]
 fn unsynchronized_cross_cu_read_is_stale() {
-    let mut dev = Device::new(DeviceConfig::small(), Protocol::Srsp);
+    let mut dev = Device::new(DeviceConfig::small(), Protocol::SRSP);
     // CU0 writes (stays dirty in its L1).
     let t = dev.mem.l1_write(0, DATA, 4, 7, 0);
     // CU1 plain read: L2 has no idea -> 0.
@@ -92,11 +92,11 @@ fn unsynchronized_cross_cu_read_is_stale() {
     assert_eq!(v, 0, "non-coherent L1s must yield the stale value");
     // Proper pair: CU0 releases at cmp scope, CU1 acquires.
     let rel = srsp::sync::engine::sync_op(
-        &mut dev.mem, Protocol::Srsp, 0, FLAG, AtomicOp::Store,
+        &mut dev.mem, Protocol::SRSP, 0, FLAG, AtomicOp::Store,
         MemOrder::Release, Scope::Cmp, 1, 0, t2,
     );
     let acq = srsp::sync::engine::sync_op(
-        &mut dev.mem, Protocol::Srsp, 1, FLAG, AtomicOp::Load,
+        &mut dev.mem, Protocol::SRSP, 1, FLAG, AtomicOp::Load,
         MemOrder::Acquire, Scope::Cmp, 0, 0, rel.done,
     );
     assert_eq!(acq.value, 1);
@@ -165,7 +165,7 @@ fn handoff_kernel(n0: u64, n1: u64, remote: bool) -> Program {
 
 #[test]
 fn remote_lock_handoff_exact_rsp_and_srsp() {
-    for p in [Protocol::RspNaive, Protocol::Srsp] {
+    for p in [Protocol::RSP_NAIVE, Protocol::SRSP] {
         for (n0, n1) in [(1u64, 1u64), (3, 1), (17, 5), (50, 13)] {
             let mut dev = Device::new(DeviceConfig::small(), p);
             dev.launch_simple(&handoff_kernel(n0, n1, true), 2);
@@ -223,7 +223,7 @@ fn lock_handoff_many_remote_sharers() {
     a.halt();
     let p = a.finish();
 
-    for proto in [Protocol::RspNaive, Protocol::Srsp] {
+    for proto in [Protocol::RSP_NAIVE, Protocol::SRSP] {
         let mut dev = Device::new(DeviceConfig::small(), proto);
         dev.launch_simple(&p, 4);
         assert_eq!(
@@ -263,7 +263,7 @@ fn rem_ar_fetch_add_counter_exact() {
     a.halt();
     let p = a.finish();
 
-    for proto in [Protocol::RspNaive, Protocol::Srsp] {
+    for proto in [Protocol::RSP_NAIVE, Protocol::SRSP] {
         let mut dev = Device::new(DeviceConfig::small(), proto);
         dev.launch_simple(&p, 3);
         assert_eq!(

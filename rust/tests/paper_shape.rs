@@ -29,36 +29,36 @@ fn paper_shape_64_cus() {
     eprintln!("{}", f5.render());
     eprintln!("{}", f6.render());
 
-    use Scenario::*;
+    let (srsp, rsp) = (Scenario::SRSP, Scenario::RSP);
     // Fig. 4 claims.
-    assert!(f4.geomean(Srsp) > 1.15, "sRSP must clearly beat Baseline");
+    assert!(f4.geomean(srsp) > 1.15, "sRSP must clearly beat Baseline");
     assert!(
-        f4.geomean(Srsp) > f4.geomean(Rsp) + 0.1,
+        f4.geomean(srsp) > f4.geomean(rsp) + 0.1,
         "sRSP must clearly beat naive RSP (got {:.3} vs {:.3})",
-        f4.geomean(Srsp),
-        f4.geomean(Rsp)
+        f4.geomean(srsp),
+        f4.geomean(rsp)
     );
-    assert!(f4.geomean(ScopeOnly) > 1.2, "local scope is a big win");
+    assert!(f4.geomean(Scenario::SCOPE_ONLY) > 1.2, "local scope is a big win");
     assert!(
-        f4.geomean(StealOnly) < 1.1,
+        f4.geomean(Scenario::STEAL_ONLY) < 1.1,
         "global-scope stealing alone must not pay (paper: PRK/SSSP)"
     );
     for app in ["PRK", "SSSP", "MIS"] {
         assert!(
-            f4.value(app, Srsp).unwrap() > f4.value(app, Rsp).unwrap() * 0.97,
+            f4.value(app, srsp).unwrap() > f4.value(app, rsp).unwrap() * 0.97,
             "{app}: sRSP must not lose to naive RSP"
         );
     }
 
     // Fig. 5 claims.
-    assert!(f5.geomean(ScopeOnly) < 0.9);
-    assert!(f5.geomean(Srsp) < f5.geomean(Rsp));
+    assert!(f5.geomean(Scenario::SCOPE_ONLY) < 0.9);
+    assert!(f5.geomean(srsp) < f5.geomean(rsp));
 
     // Fig. 6 claim.
     assert!(
-        f6.geomean(Srsp) < 0.95,
+        f6.geomean(srsp) < 0.95,
         "selective promotion must be cheaper than naive (got {:.3})",
-        f6.geomean(Srsp)
+        f6.geomean(srsp)
     );
 }
 
@@ -72,7 +72,7 @@ fn rsp_degrades_with_scale_srsp_does_not() {
         };
         let results = run_matrix(&cfg, WorkloadSize::Paper);
         let f4 = fig4_speedup(&results);
-        (f4.geomean(Scenario::Rsp), f4.geomean(Scenario::Srsp))
+        (f4.geomean(Scenario::RSP), f4.geomean(Scenario::SRSP))
     };
     let (rsp_small, _srsp_small) = speedups(8);
     let (rsp_big, srsp_big) = speedups(64);

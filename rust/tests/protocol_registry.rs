@@ -1,0 +1,237 @@
+//! Protocol-registry round-trip: every registered sync protocol is
+//! selectable **by name** from the CLI — the registry is the single
+//! source of truth for protocol dispatch, and no protocol enum exists
+//! outside it. Mirrors `registry_roundtrip.rs` (the workload registry's
+//! round-trip) at the sync layer, plus the refactor's equivalence
+//! property: the classic figure grid must produce **byte-identical**
+//! reports whether its scenarios come from the legacy constants or are
+//! re-resolved through registry names.
+
+use std::process::Command;
+
+use srsp::config::{DeviceConfig, Scenario};
+use srsp::coordinator::{classic_grid, Cell, Seeding};
+use srsp::harness::presets::WorkloadSize;
+use srsp::harness::report::Report;
+use srsp::harness::runner::Runner;
+use srsp::sync::protocol;
+
+fn srsp_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_srsp"))
+}
+
+#[test]
+fn registry_holds_five_protocols() {
+    assert_eq!(protocol::all().count(), 5);
+    for name in ["scoped", "rsp", "srsp", "hlrc", "srsp-adaptive"] {
+        assert!(protocol::resolve(name).is_some(), "{name} must resolve");
+    }
+}
+
+#[test]
+fn list_protocols_covers_the_registry() {
+    let out = srsp_bin().arg("list-protocols").output().expect("spawn srsp");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for id in protocol::all() {
+        assert!(
+            text.contains(id.name()),
+            "'{}' missing from list-protocols:\n{text}",
+            id.name()
+        );
+    }
+}
+
+#[test]
+fn scenarios_round_trip_through_registry_names() {
+    let mut scenarios: Vec<Scenario> = Scenario::ALL.to_vec();
+    scenarios.extend(protocol::all().map(Scenario::for_protocol));
+    for s in scenarios {
+        assert_eq!(Scenario::from_name(s.name()), Some(s), "{}", s.name());
+    }
+}
+
+/// The refactor's acceptance property: dispatching the classic grid via
+/// registry names (name → protocol → scenario) must reproduce the
+/// legacy-constant grid bit-for-bit, reports included.
+#[test]
+fn classic_grid_reports_identical_via_registry_names() {
+    let legacy = classic_grid(4);
+    let by_name: Vec<Cell> = legacy
+        .iter()
+        .map(|c| Cell {
+            scenario: Scenario::from_name(c.scenario.name())
+                .unwrap_or_else(|| panic!("scenario '{}' must resolve", c.scenario.name())),
+            ..*c
+        })
+        .collect();
+    let runner = Runner {
+        seeding: Seeding::PerCell(42),
+        validate: true,
+        ..Runner::new(
+            DeviceConfig {
+                num_cus: 4,
+                ..DeviceConfig::small()
+            },
+            WorkloadSize::Tiny,
+            4,
+        )
+    };
+    let a = runner.run_cells(&legacy);
+    let b = runner.run_cells(&by_name);
+    assert_eq!(
+        format!("{a:?}"),
+        format!("{b:?}"),
+        "registry-name dispatch must not change any cell result"
+    );
+    for c in &a {
+        assert_eq!(c.validated, Some(true), "{}/{}", c.result.app, c.result.scenario);
+    }
+    let ra = Report::from_cells(&a);
+    let rb = Report::from_cells(&b);
+    assert_eq!(ra.to_csv(), rb.to_csv(), "CSV reports must be byte-identical");
+    assert_eq!(ra.to_json(), rb.to_json(), "JSON reports must be byte-identical");
+}
+
+#[test]
+fn srsp_adaptive_and_lock_selectable_purely_by_name() {
+    // The new protocol and the new workload are reachable from the CLI
+    // by registry name alone — no enum was extended to land them.
+    let out = srsp_bin()
+        .args(["run", "--app", "lock", "--protocol", "srsp-adaptive"])
+        .args(["--size", "tiny", "--cus", "4"])
+        .output()
+        .expect("spawn srsp");
+    assert!(
+        out.status.success(),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("scenario=srsp-adaptive"), "{text}");
+    assert!(text.contains("converged=true"), "{text}");
+
+    // `--scenario` resolves protocol names through the same registry.
+    let out = srsp_bin()
+        .args(["run", "--app", "stress", "--scenario", "srsp-adaptive"])
+        .args(["--size", "tiny", "--cus", "4"])
+        .output()
+        .expect("spawn srsp");
+    assert!(
+        out.status.success(),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn proto_params_reach_the_device_and_unknown_keys_fail() {
+    let out = srsp_bin()
+        .args(["run", "--app", "stress", "--protocol", "srsp"])
+        .args(["--size", "tiny", "--cus", "4"])
+        .args(["--proto-param", "lr_tbl_entries=1", "--proto-param", "pa_tbl_entries=1"])
+        .output()
+        .expect("spawn srsp");
+    assert!(
+        out.status.success(),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let out = srsp_bin()
+        .args(["run", "--app", "stress", "--protocol", "srsp"])
+        .args(["--proto-param", "bogus=1"])
+        .output()
+        .expect("spawn srsp");
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("unknown parameter"),
+        "the error must name the bad key"
+    );
+}
+
+#[test]
+fn protocol_flag_rejected_where_it_would_be_ignored() {
+    // Matrix commands run fixed scenario grids; silently ignoring
+    // `--protocol` would let the user believe the grid ran their
+    // protocol. The CLI must refuse, like it does for bad --param keys.
+    for cmd in [
+        &["validate", "--protocol", "srsp-adaptive"][..],
+        &["ci-smoke", "--protocol", "hlrc"][..],
+        &["sweep", "--axis", "cu-count", "--protocol", "hlrc"][..],
+    ] {
+        let out = srsp_bin().args(cmd).output().expect("spawn srsp");
+        assert!(!out.status.success(), "{cmd:?} must refuse --protocol");
+        assert!(
+            String::from_utf8_lossy(&out.stderr).contains("--protocol"),
+            "{cmd:?}: error must name the flag"
+        );
+    }
+}
+
+#[test]
+fn axis_flags_rejected_on_the_wrong_axis() {
+    // `--cus` vs `--cu-counts` invites a mix-up the CLI must catch: on
+    // the cu-count axis the device size comes from the grid points and
+    // `--cus` would be silently ignored.
+    for cmd in [
+        &["sweep", "--axis", "cu-count", "--cus", "8"][..],
+        &["sweep", "--axis", "cu-count", "--ratios", "0,0.5"][..],
+        &["sweep", "--axis", "remote-ratio", "--cu-counts", "4,8"][..],
+        &["run", "--app", "stress", "--cu-counts", "4,8"][..],
+    ] {
+        let out = srsp_bin().args(cmd).output().expect("spawn srsp");
+        assert!(!out.status.success(), "{cmd:?} must be rejected");
+    }
+}
+
+#[test]
+fn negative_proto_param_values_are_rejected() {
+    // `lr_tbl_entries=-1` would silently saturate to 0 (sticky-overflow
+    // mode) while the report claimed -1 was honored.
+    let out = srsp_bin()
+        .args(["run", "--app", "stress", "--protocol", "srsp"])
+        .args(["--proto-param", "lr_tbl_entries=-1"])
+        .output()
+        .expect("spawn srsp");
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("non-negative"),
+        "the error must explain the range"
+    );
+}
+
+#[test]
+fn unknown_protocol_name_lists_the_registered_ones() {
+    let out = srsp_bin()
+        .args(["run", "--protocol", "bogus"])
+        .output()
+        .expect("spawn srsp");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    for id in protocol::all() {
+        assert!(err.contains(id.name()), "error must list '{}':\n{err}", id.name());
+    }
+}
+
+#[test]
+fn cli_cu_count_sweep_round_trips() {
+    let out = srsp_bin()
+        .args(["sweep", "--axis", "cu-count", "--size", "tiny"])
+        .args(["--cu-counts", "2,4", "--jobs", "2", "--report", "csv"])
+        .output()
+        .expect("spawn srsp");
+    assert!(
+        out.status.success(),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let csv = String::from_utf8_lossy(&out.stdout);
+    let lines: Vec<&str> = csv.lines().collect();
+    assert_eq!(lines.len(), 1 + 2 * 3, "header + 2 CU counts × 3 protocols");
+    assert!(lines[0].starts_with("app,scenario,cus,"));
+    for line in &lines[1..] {
+        assert!(line.contains("STRESS"), "{line}");
+        assert!(line.contains(",true,"), "oracle-validated row: {line}");
+    }
+}

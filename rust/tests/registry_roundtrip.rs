@@ -14,9 +14,9 @@ fn srsp_bin() -> Command {
 }
 
 #[test]
-fn registry_holds_six_workloads() {
-    assert_eq!(registry::all().count(), 6);
-    for name in ["prk", "sssp", "mis", "stress", "bfs", "prodcons"] {
+fn registry_holds_seven_workloads() {
+    assert_eq!(registry::all().count(), 7);
+    for name in ["prk", "sssp", "mis", "stress", "bfs", "prodcons", "lock"] {
         assert!(registry::resolve(name).is_some(), "{name} must resolve");
     }
 }

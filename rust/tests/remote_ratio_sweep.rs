@@ -52,8 +52,8 @@ fn srsp_invalidates_less_than_naive_at_the_skewed_end() {
             .unwrap()
             .clone()
     };
-    let rsp = cell(Scenario::Rsp).result.stats;
-    let srsp = cell(Scenario::Srsp).result.stats;
+    let rsp = cell(Scenario::RSP).result.stats;
+    let srsp = cell(Scenario::SRSP).result.stats;
     assert!(
         rsp.l1_invalidates > srsp.l1_invalidates,
         "naive RSP must flush+invalidate more L1s than selective sRSP \

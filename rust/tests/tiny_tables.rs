@@ -37,18 +37,18 @@ fn disabled_lr_tbl_degrades_to_full_drains_but_stays_exact() {
     // requester-side lookups must not short-circuit the broadcast.
     let cfg = tiny_cfg(0, 16);
     let stress = stress_preset(0.5);
-    let (run, ok) = run_validated(&cfg, &stress, Scenario::Srsp);
+    let (run, ok) = run_validated(&cfg, &stress, Scenario::SRSP);
     assert!(ok, "stress must stay exact with a disabled LR-TBL");
     assert!(
         run.stats.lr_tbl_overflows > 0,
         "capacity 0 must overflow on every record"
     );
     // The ScopedOnly protocol validates against the identical oracle.
-    let (_, ok) = run_validated(&cfg, &stress, Scenario::StealOnly);
+    let (_, ok) = run_validated(&cfg, &stress, Scenario::STEAL_ONLY);
     assert!(ok);
 
     let sssp = WorkloadPreset::new_seeded(registry::SSSP, WorkloadSize::Tiny, 3);
-    let (run, ok) = run_validated(&cfg, &sssp, Scenario::Srsp);
+    let (run, ok) = run_validated(&cfg, &sssp, Scenario::SRSP);
     assert!(ok, "SSSP must stay exact with a disabled LR-TBL");
     assert!(run.stats.lr_tbl_overflows > 0);
 }
@@ -61,7 +61,7 @@ fn one_entry_tables_overflow_on_prodcons_and_stay_exact() {
     // invalidates on the consumer-armed side.
     let cfg = tiny_cfg(1, 1);
     let preset = WorkloadPreset::new_seeded(registry::PRODCONS, WorkloadSize::Tiny, 5);
-    let (run, ok) = run_validated(&cfg, &preset, Scenario::Srsp);
+    let (run, ok) = run_validated(&cfg, &preset, Scenario::SRSP);
     assert!(ok, "prodcons must stay exact with one-entry tables");
     assert!(
         run.stats.lr_tbl_overflows > 0,
@@ -72,7 +72,7 @@ fn one_entry_tables_overflow_on_prodcons_and_stay_exact() {
         "per-slot flag arming must overflow a one-entry PA-TBL"
     );
     // Same input under the ScopedOnly protocol: identical oracle.
-    let (_, ok) = run_validated(&cfg, &preset, Scenario::StealOnly);
+    let (_, ok) = run_validated(&cfg, &preset, Scenario::STEAL_ONLY);
     assert!(ok);
 }
 
@@ -81,7 +81,7 @@ fn one_entry_tables_keep_the_graph_apps_exact() {
     let cfg = tiny_cfg(1, 1);
     for id in [registry::SSSP, registry::MIS, registry::BFS] {
         let preset = WorkloadPreset::new_seeded(id, WorkloadSize::Tiny, 9);
-        for scenario in [Scenario::StealOnly, Scenario::Rsp, Scenario::Srsp] {
+        for scenario in [Scenario::STEAL_ONLY, Scenario::RSP, Scenario::SRSP] {
             let (_, ok) = run_validated(&cfg, &preset, scenario);
             assert!(ok, "{id}/{scenario:?} with one-entry tables");
         }
