@@ -8,7 +8,8 @@
 //! owner's sFIFO — the gap widens with `r` and with CU count.
 
 mod bench_common;
-use srsp::coordinator::{Runner, RATIO_POINTS};
+use srsp::coordinator::{axis, Runner, SweepPlan};
+use srsp::harness::figures::sweep_speedup_rows;
 use srsp::harness::report::format_table;
 
 fn main() {
@@ -17,32 +18,25 @@ fn main() {
         validate: true,
         ..Runner::new(cfg, size, Runner::default_jobs())
     };
-    let results = bench_common::timed("remote-ratio sweep", || {
-        runner.run_remote_ratio_sweep(srsp::workload::registry::STRESS, &RATIO_POINTS)
-    });
+    let plan = SweepPlan::new(srsp::workload::registry::STRESS, &[axis::REMOTE_RATIO])
+        .expect("stress declares remote_ratio");
+    let results = bench_common::timed("remote-ratio sweep", || runner.run_sweep(&plan));
 
-    let cycles = |scenario, r| {
-        results
-            .iter()
-            .find(|c| c.cell.scenario == scenario && c.remote_ratio == Some(r))
-            .map(|c| c.result.stats.cycles as f64)
-            .expect("grid covers every point")
-    };
-    use srsp::config::Scenario;
-    let mut rows = Vec::new();
-    for &r in &RATIO_POINTS {
-        let base = cycles(Scenario::STEAL_ONLY, r);
-        rows.push(vec![
-            r.to_string(),
-            format!("{}", base as u64),
-            format!("{:.3}", base / cycles(Scenario::RSP, r)),
-            format!("{:.3}", base / cycles(Scenario::SRSP, r)),
-        ]);
-    }
     assert!(
         results.iter().all(|c| c.validated == Some(true)),
         "every protocol must pass the stress oracle at every r"
     );
+    let rows: Vec<Vec<String>> = sweep_speedup_rows(&plan, &results)
+        .iter()
+        .map(|r| {
+            vec![
+                r.coords[0].1.to_string(),
+                r.steal_cycles.to_string(),
+                format!("{:.3}", r.rsp_speedup),
+                format!("{:.3}", r.srsp_speedup),
+            ]
+        })
+        .collect();
     let header = ["r".into(), "steal cycles".into(), "rsp ×".into(), "srsp ×".into()];
     println!(
         "Remote-ratio crossover — STRESS — speedup vs global-scope stealing\n{}",

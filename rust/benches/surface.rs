@@ -1,0 +1,80 @@
+//! Bench: the protocol × remote-ratio × CU-count **surface** — the
+//! paper's headline Fig. 4 number (~29% average speedup at 64 CUs) is a
+//! single slice of this surface; the crossover between naive RSP and
+//! sRSP shifts jointly with contention asymmetry (`r`) and device size,
+//! so the claim worth regenerating is the whole composed grid.
+//!
+//! Expected shape: at the local-sharing corner (`r = 0`, small device)
+//! the three protocols tie; toward the remote-heavy large-device corner
+//! naive RSP's flush-all promotion cost grows with the CU count while
+//! sRSP's selectivity keeps it bounded — the sRSP advantage must widen
+//! along both axes.
+
+mod bench_common;
+use srsp::coordinator::{axis, Runner, SweepPlan};
+use srsp::harness::figures::sweep_speedup_rows;
+use srsp::harness::report::format_table;
+
+fn main() {
+    let (cfg, size) = bench_common::parse_args();
+    let runner = Runner {
+        validate: true,
+        ..Runner::new(cfg, size, Runner::default_jobs())
+    };
+    let plan = SweepPlan::new(
+        srsp::workload::registry::STRESS,
+        &[axis::REMOTE_RATIO, axis::CU_COUNT],
+    )
+    .expect("stress declares remote_ratio")
+    .with_points(axis::REMOTE_RATIO, vec![0.0, 0.2, 0.8])
+    .expect("valid ratio points")
+    .with_points(axis::CU_COUNT, vec![8.0, 16.0, 32.0])
+    .expect("valid cu-count points");
+    let results =
+        bench_common::timed("remote-ratio × cu-count surface", || runner.run_sweep(&plan));
+
+    assert!(
+        results.iter().all(|c| c.validated == Some(true)),
+        "every protocol must pass the stress oracle at every grid point"
+    );
+    let rows = sweep_speedup_rows(&plan, &results);
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.coords[0].1.to_string(),
+                r.coords[1].1.to_string(),
+                r.steal_cycles.to_string(),
+                format!("{:.3}", r.rsp_speedup),
+                format!("{:.3}", r.srsp_speedup),
+            ]
+        })
+        .collect();
+    let header = [
+        "r".into(),
+        "CUs".into(),
+        "steal cycles".into(),
+        "rsp ×".into(),
+        "srsp ×".into(),
+    ];
+    println!(
+        "Surface — STRESS — protocol × r × CU-count, speedup vs global-scope stealing\n{}",
+        format_table(&header, &body)
+    );
+
+    // The qualitative surface claim: sRSP's edge over naive RSP at the
+    // remote-heavy end must grow with device size.
+    let edge = |r: f64, cus: f64| {
+        let row = rows
+            .iter()
+            .find(|x| x.coords[0].1 == r && x.coords[1].1 == cus)
+            .expect("grid covers every combo");
+        row.srsp_speedup / row.rsp_speedup
+    };
+    assert!(
+        edge(0.8, 32.0) > edge(0.8, 8.0),
+        "sRSP's advantage at r=0.8 must widen with CU count ({:.3} vs {:.3})",
+        edge(0.8, 32.0),
+        edge(0.8, 8.0)
+    );
+}

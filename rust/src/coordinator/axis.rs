@@ -1,0 +1,374 @@
+//! The pluggable sweep-axis registry: every parameter-sweep dimension
+//! registers a [`SweepAxis`] implementation in [`AXES`] and
+//! self-describes — name, aliases, summary, value domain, default grid
+//! points — plus the one hook that matters: how a grid point
+//! **specializes a cell** before execution (override the device CU
+//! count, set a workload parameter, set a protocol parameter). The CLI
+//! (`srsp list-axes`, `sweep --axis a1,a2`, `--points axis=v1,v2`), the
+//! [`SweepPlan`](crate::coordinator::SweepPlan) cross-product and the
+//! generic [`run_sweep`](crate::harness::runner::Runner::run_sweep) all
+//! resolve axes through this one table; no sweep-specific code path
+//! exists per axis.
+//!
+//! This completes the registry trilogy: workloads
+//! ([`Kernel`](crate::workload::registry::Kernel)), protocols
+//! ([`SyncProtocol`](crate::sync::protocol::SyncProtocol)), and now
+//! sweep axes. Adding an axis is a registry entry: implement
+//! [`SweepAxis`] below (see [`HotSetAxis`] for the smallest example)
+//! and push it into [`AXES`]. Nothing in the coordinator, runner,
+//! report or CLI layers needs to change.
+
+use std::fmt;
+
+/// How one grid point specializes the cell it lands on, accumulated by
+/// applying every axis of a [`SweepPlan`](crate::coordinator::SweepPlan)
+/// combo in order. The runner consumes this verbatim: it never knows
+/// *which* axes produced the spec.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CellSpec {
+    /// Device CU-count override (`None` = the runner's configured size).
+    pub num_cus: Option<u32>,
+    /// Workload-parameter overrides, appended after the user's `--param`
+    /// list (an axis owns its key, so it wins).
+    pub params: Vec<(String, f64)>,
+    /// Protocol-parameter overrides, appended after the user's
+    /// `--proto-param` list (same precedence rule).
+    pub proto_params: Vec<(String, f64)>,
+}
+
+/// A registered sweep axis. Implementations self-describe everything the
+/// plan, CLI and report layers need; grid points are `f64` (integer-
+/// valued axes range-check in [`SweepAxis::check_point`] and render
+/// without a fraction via `f64`'s `Display`).
+pub trait SweepAxis: Sync {
+    /// Canonical CLI name (`--axis <name>`), lower-case, kebab-case.
+    fn name(&self) -> &'static str;
+    /// Extra accepted CLI spellings.
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+    /// One-line description for `srsp list-axes`.
+    fn summary(&self) -> &'static str;
+    /// Human description of the value domain for `list-axes` and errors.
+    fn domain(&self) -> &'static str;
+    /// The default grid points a plan uses when `--points` is absent.
+    fn default_points(&self) -> &'static [f64];
+    /// Range/type-check one grid point.
+    fn check_point(&self, v: f64) -> Result<(), String>;
+    /// The workload parameter this axis drives, when it drives one; a
+    /// plan refuses a swept workload whose kernel does not declare it.
+    fn required_param(&self) -> Option<&'static str> {
+        None
+    }
+    /// Specialize one grid cell for point `v`.
+    fn apply(&self, v: f64, spec: &mut CellSpec);
+}
+
+/// Check that `v` is a non-negative whole number no larger than `u32`
+/// holds (the shared domain of the count-valued axes).
+fn check_count(v: f64, at_least: f64) -> Result<(), String> {
+    if !v.is_finite() || v.fract() != 0.0 || v < at_least || v > f64::from(u32::MAX) {
+        return Err(format!("expected a whole number >= {at_least}, got {v}"));
+    }
+    Ok(())
+}
+
+/// The remote-access-ratio axis (`r` of the stress family): the fraction
+/// of tasks routed into the hot set and claimed through the promotion
+/// machinery — the contention-asymmetry dial the paper's argument turns
+/// on.
+pub struct RemoteRatioAxis;
+
+impl SweepAxis for RemoteRatioAxis {
+    fn name(&self) -> &'static str {
+        "remote-ratio"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["remote_ratio", "ratio", "r"]
+    }
+
+    fn summary(&self) -> &'static str {
+        "fraction of tasks claimed through remote-scope promotion"
+    }
+
+    fn domain(&self) -> &'static str {
+        "ratio in [0, 1]"
+    }
+
+    fn default_points(&self) -> &'static [f64] {
+        &[0.0, 0.05, 0.1, 0.2, 0.4, 0.8]
+    }
+
+    fn check_point(&self, v: f64) -> Result<(), String> {
+        if !(0.0..=1.0).contains(&v) {
+            return Err(format!("{v} is outside [0, 1]"));
+        }
+        Ok(())
+    }
+
+    fn required_param(&self) -> Option<&'static str> {
+        Some("remote_ratio")
+    }
+
+    fn apply(&self, v: f64, spec: &mut CellSpec) {
+        spec.params.push(("remote_ratio".to_string(), v));
+    }
+}
+
+/// The device-size axis: the paper evaluates at 64 CUs; sweeping the
+/// count plots the Fig. 4 crossover against scale instead.
+pub struct CuCountAxis;
+
+impl SweepAxis for CuCountAxis {
+    fn name(&self) -> &'static str {
+        "cu-count"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["cu_count", "cu"]
+    }
+
+    fn summary(&self) -> &'static str {
+        "device size in Compute Units"
+    }
+
+    fn domain(&self) -> &'static str {
+        "whole number >= 1"
+    }
+
+    fn default_points(&self) -> &'static [f64] {
+        &[4.0, 8.0, 16.0, 32.0, 64.0]
+    }
+
+    fn check_point(&self, v: f64) -> Result<(), String> {
+        check_count(v, 1.0)
+    }
+
+    fn apply(&self, v: f64, spec: &mut CellSpec) {
+        spec.num_cus = Some(v as u32);
+    }
+}
+
+/// The hot-set-size axis: how many queues absorb the remote tasks
+/// (1 = maximum contention on a single local sharer).
+pub struct HotSetAxis;
+
+impl SweepAxis for HotSetAxis {
+    fn name(&self) -> &'static str {
+        "hot-set"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["hot_set", "hot"]
+    }
+
+    fn summary(&self) -> &'static str {
+        "queues absorbing the remote tasks (contention width)"
+    }
+
+    fn domain(&self) -> &'static str {
+        "whole number >= 1"
+    }
+
+    fn default_points(&self) -> &'static [f64] {
+        &[1.0, 2.0, 4.0, 8.0]
+    }
+
+    fn check_point(&self, v: f64) -> Result<(), String> {
+        check_count(v, 1.0)
+    }
+
+    fn required_param(&self) -> Option<&'static str> {
+        Some("hot_set")
+    }
+
+    fn apply(&self, v: f64, spec: &mut CellSpec) {
+        spec.params.push(("hot_set".to_string(), v));
+    }
+}
+
+/// The hot-set-migration axis: rotate the hot set every N rounds
+/// (0 = never), forcing LR-TBL/PA-TBL turnover as the local sharer's L1
+/// changes identity.
+pub struct MigrationAxis;
+
+impl SweepAxis for MigrationAxis {
+    fn name(&self) -> &'static str {
+        "migration"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["migrate"]
+    }
+
+    fn summary(&self) -> &'static str {
+        "rotate the hot set every N rounds (0 = never)"
+    }
+
+    fn domain(&self) -> &'static str {
+        "whole number >= 0"
+    }
+
+    fn default_points(&self) -> &'static [f64] {
+        &[0.0, 1.0, 2.0, 4.0]
+    }
+
+    fn check_point(&self, v: f64) -> Result<(), String> {
+        check_count(v, 0.0)
+    }
+
+    fn required_param(&self) -> Option<&'static str> {
+        Some("migration")
+    }
+
+    fn apply(&self, v: f64, spec: &mut CellSpec) {
+        spec.params.push(("migration".to_string(), v));
+    }
+}
+
+/// The static axis table. Order is load-bearing for the stable [`AxisId`]
+/// constants below: new axes append, existing ones never reorder.
+pub static AXES: &[&dyn SweepAxis] = &[
+    &RemoteRatioAxis,
+    &CuCountAxis,
+    &HotSetAxis,
+    &MigrationAxis,
+];
+
+/// Stable handle to a registered sweep axis (index into [`AXES`]),
+/// mirroring [`WorkloadId`](crate::workload::registry::WorkloadId) and
+/// [`Protocol`](crate::sync::protocol::Protocol).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AxisId(usize);
+
+/// The protocol × r crossover axis of the stress family.
+pub const REMOTE_RATIO: AxisId = AxisId(0);
+/// The protocol × device-size crossover axis.
+pub const CU_COUNT: AxisId = AxisId(1);
+/// The contention-width axis (registry-only entry).
+pub const HOT_SET: AxisId = AxisId(2);
+/// The hot-set-rotation axis (registry-only entry).
+pub const MIGRATION: AxisId = AxisId(3);
+
+impl AxisId {
+    /// The registered implementation behind this handle.
+    pub fn axis(self) -> &'static dyn SweepAxis {
+        AXES[self.0]
+    }
+
+    pub fn name(self) -> &'static str {
+        self.axis().name()
+    }
+}
+
+impl fmt::Debug for AxisId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl fmt::Display for AxisId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Every registered axis, in registry order.
+pub fn all() -> impl Iterator<Item = AxisId> {
+    (0..AXES.len()).map(AxisId)
+}
+
+/// Resolve a CLI name (canonical or alias, case-insensitive).
+pub fn resolve(name: &str) -> Option<AxisId> {
+    let lower = name.to_ascii_lowercase();
+    all().find(|id| {
+        let a = id.axis();
+        a.name() == lower || a.aliases().contains(&lower.as_str())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn registry_names_unique_and_resolvable() {
+        let mut seen = BTreeSet::new();
+        for id in all() {
+            let a = id.axis();
+            assert!(seen.insert(a.name()), "duplicate name {}", a.name());
+            assert_eq!(resolve(a.name()), Some(id));
+            assert_eq!(resolve(&a.name().to_uppercase()), Some(id));
+            for alias in a.aliases() {
+                assert_eq!(resolve(alias), Some(id), "alias {alias}");
+            }
+        }
+        assert_eq!(resolve("bogus"), None);
+        // "cus" stays the classic scaling sweep's CLI keyword; no axis
+        // may claim it or `--axis cus` becomes ambiguous.
+        assert_eq!(resolve("cus"), None);
+    }
+
+    #[test]
+    fn classic_handles_stable() {
+        assert_eq!(REMOTE_RATIO.name(), "remote-ratio");
+        assert_eq!(CU_COUNT.name(), "cu-count");
+        assert_eq!(HOT_SET.name(), "hot-set");
+        assert_eq!(MIGRATION.name(), "migration");
+        assert_eq!(all().count(), 4);
+    }
+
+    #[test]
+    fn default_points_pass_their_own_checks() {
+        for id in all() {
+            let a = id.axis();
+            assert!(!a.default_points().is_empty(), "{}", a.name());
+            for &v in a.default_points() {
+                a.check_point(v)
+                    .unwrap_or_else(|e| panic!("{} default {v}: {e}", a.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn point_checks_reject_out_of_domain_values() {
+        assert!(REMOTE_RATIO.axis().check_point(1.5).is_err());
+        assert!(REMOTE_RATIO.axis().check_point(-0.1).is_err());
+        assert!(REMOTE_RATIO.axis().check_point(1.0).is_ok());
+        assert!(CU_COUNT.axis().check_point(0.0).is_err());
+        assert!(CU_COUNT.axis().check_point(2.5).is_err());
+        assert!(CU_COUNT.axis().check_point(f64::NAN).is_err());
+        assert!(CU_COUNT.axis().check_point(8.0).is_ok());
+        assert!(HOT_SET.axis().check_point(0.0).is_err());
+        assert!(MIGRATION.axis().check_point(0.0).is_ok());
+    }
+
+    #[test]
+    fn apply_specializes_the_expected_cell_field() {
+        let mut spec = CellSpec::default();
+        REMOTE_RATIO.axis().apply(0.4, &mut spec);
+        CU_COUNT.axis().apply(8.0, &mut spec);
+        HOT_SET.axis().apply(1.0, &mut spec);
+        MIGRATION.axis().apply(2.0, &mut spec);
+        assert_eq!(spec.num_cus, Some(8));
+        assert_eq!(
+            spec.params,
+            vec![
+                ("remote_ratio".to_string(), 0.4),
+                ("hot_set".to_string(), 1.0),
+                ("migration".to_string(), 2.0),
+            ]
+        );
+        assert!(spec.proto_params.is_empty());
+    }
+
+    #[test]
+    fn param_axes_declare_their_workload_key() {
+        assert_eq!(REMOTE_RATIO.axis().required_param(), Some("remote_ratio"));
+        assert_eq!(HOT_SET.axis().required_param(), Some("hot_set"));
+        assert_eq!(MIGRATION.axis().required_param(), Some("migration"));
+        assert_eq!(CU_COUNT.axis().required_param(), None);
+    }
+}

@@ -1,19 +1,24 @@
 //! Layer-3 coordination: the **distribution policy** of the evaluation
 //! grids.
 //!
-//! The paper's evaluation is a protocol × app × CU-count grid (plus the
-//! stress kernel's protocol × remote-ratio axis). This module owns
-//! everything about *which* cells exist and in *what order*, and how
-//! workload seeds derive per cell — the policy half of the split. The
-//! execution half (OS-thread sharding, oracle validation, result
-//! reassembly) lives in [`crate::harness::runner`] and consumes these
-//! cells; every grid cell is an isolated single-threaded simulation, so
-//! the two halves meet only at the `Cell` type.
+//! The paper's evaluation is a protocol × app × CU-count grid plus a
+//! family of parameter sweeps (remote ratio, device size, hot-set width,
+//! migration period — see [`axis`]). This module owns everything about
+//! *which* cells exist and in *what order*, and how workload seeds derive
+//! per cell — the policy half of the split. The execution half
+//! (OS-thread sharding, oracle validation, result reassembly) lives in
+//! [`crate::harness::runner`] and consumes these cells; every grid cell
+//! is an isolated single-threaded simulation, so the two halves meet
+//! only at the `Cell` and [`SweepPlan`] types.
+
+pub mod axis;
 
 use crate::config::Scenario;
 use crate::sim::SplitMix64;
 use crate::sync::protocol;
 use crate::workload::registry::{self, WorkloadId, DEFAULT_SEED};
+
+use axis::{AxisId, CellSpec};
 
 // Execution-side types, re-exported under the coordination name the CLI
 // and future distributed backends build on.
@@ -119,41 +124,159 @@ pub fn scaling_cells(cus: &[u32]) -> Vec<Cell> {
     cus.iter().flat_map(|&n| classic_grid(n)).collect()
 }
 
-/// The three scenarios whose protocols the remote-ratio sweep compares:
+/// The three scenarios whose protocols every parameter sweep compares:
 /// global-scope stealing (ScopedOnly), naive promotion (RspNaive) and
 /// selective promotion (Srsp).
 pub const RATIO_SCENARIOS: [Scenario; 3] = [Scenario::STEAL_ONLY, Scenario::RSP, Scenario::SRSP];
 
-/// The default remote-ratio sample points of the sweep axis.
-pub const RATIO_POINTS: [f64; 6] = [0.0, 0.05, 0.1, 0.2, 0.4, 0.8];
+/// The most axes one sweep composes (a surface plus one extra slice —
+/// beyond that the cross-product grid outgrows a single host; ROADMAP's
+/// distribution item picks it up from there).
+pub const MAX_SWEEP_AXES: usize = 3;
 
-/// The protocol × remote-ratio grid, ratio-major (all protocols of one
-/// `r` adjacent, mirroring the report's row grouping).
-pub fn remote_ratio_grid(points: &[f64]) -> Vec<(Scenario, f64)> {
-    let mut cells = Vec::with_capacity(points.len() * RATIO_SCENARIOS.len());
-    for &r in points {
-        for s in RATIO_SCENARIOS {
-            cells.push((s, r));
-        }
-    }
-    cells
+/// A composed parameter sweep: one workload swept over the cross-product
+/// grid of 1–[`MAX_SWEEP_AXES`] registered [`axis`] entries, each cell
+/// run under every comparison scenario. This is the *policy* object the
+/// generic [`Runner::run_sweep`] executes — which axes, which points,
+/// which scenarios, in what order — and the only sweep construct in the
+/// crate: single-axis sweeps are just one-axis plans.
+#[derive(Debug, Clone)]
+pub struct SweepPlan {
+    pub app: WorkloadId,
+    /// The scenarios every grid combo runs (default [`RATIO_SCENARIOS`]).
+    pub scenarios: Vec<Scenario>,
+    axes: Vec<AxisId>,
+    /// Grid points per axis, parallel to `axes`.
+    points: Vec<Vec<f64>>,
 }
 
-/// The default CU-count sample points of the `cu-count` sweep axis (the
-/// paper evaluates at 64; the crossover is plotted against the rest).
-pub const CU_POINTS: [u32; 5] = [4, 8, 16, 32, 64];
-
-/// The protocol × CU-count grid, CU-major (all protocols of one device
-/// size adjacent), mirroring [`remote_ratio_grid`] on the scaling axis —
-/// the Fig. 4 crossover plotted against CU count.
-pub fn cu_count_grid(points: &[u32]) -> Vec<(Scenario, u32)> {
-    let mut cells = Vec::with_capacity(points.len() * RATIO_SCENARIOS.len());
-    for &n in points {
-        for s in RATIO_SCENARIOS {
-            cells.push((s, n));
+impl SweepPlan {
+    /// A plan over `axes` with each axis's registry default points.
+    /// Rejects an empty or oversized axis list, duplicate axes, and a
+    /// workload that does not declare a parameter some axis drives.
+    pub fn new(app: WorkloadId, axes: &[AxisId]) -> Result<SweepPlan, String> {
+        if axes.is_empty() {
+            return Err("a sweep needs at least one axis".into());
         }
+        if axes.len() > MAX_SWEEP_AXES {
+            return Err(format!(
+                "a sweep composes at most {MAX_SWEEP_AXES} axes, got {}",
+                axes.len()
+            ));
+        }
+        for (i, a) in axes.iter().enumerate() {
+            if axes[i + 1..].contains(a) {
+                return Err(format!("duplicate sweep axis '{}'", a.name()));
+            }
+            if let Some(param) = a.axis().required_param() {
+                if !app.kernel().params().iter().any(|p| p.key == param) {
+                    return Err(format!(
+                        "workload '{}' has no {param} parameter (axis {}; try --app stress)",
+                        app.name(),
+                        a.name()
+                    ));
+                }
+            }
+        }
+        Ok(SweepPlan {
+            app,
+            scenarios: RATIO_SCENARIOS.to_vec(),
+            axes: axes.to_vec(),
+            points: axes
+                .iter()
+                .map(|a| a.axis().default_points().to_vec())
+                .collect(),
+        })
     }
-    cells
+
+    /// Replace one axis's grid points (`--points axis=v1,v2,...`). The
+    /// axis must be part of the plan and every point must pass the
+    /// axis's own domain check.
+    pub fn with_points(mut self, axis: AxisId, points: Vec<f64>) -> Result<SweepPlan, String> {
+        let Some(i) = self.axes.iter().position(|a| *a == axis) else {
+            let selected: Vec<&str> = self.axes.iter().map(|a| a.name()).collect();
+            return Err(format!(
+                "--points {} applies to an axis in --axis (selected: {}); the sweep would \
+                 ignore it",
+                axis.name(),
+                selected.join(", ")
+            ));
+        };
+        if points.is_empty() {
+            return Err(format!("--points {} needs at least one point", axis.name()));
+        }
+        for &v in &points {
+            axis.axis()
+                .check_point(v)
+                .map_err(|e| format!("--points {}: {e}", axis.name()))?;
+        }
+        self.points[i] = points;
+        Ok(self)
+    }
+
+    /// The composed axes, in grid-nesting order (first = outermost).
+    pub fn axes(&self) -> &[AxisId] {
+        &self.axes
+    }
+
+    /// The grid points of `axis` (panics when the axis is not in the
+    /// plan — caller bug, the constructor validated membership).
+    pub fn points(&self, axis: AxisId) -> &[f64] {
+        let i = self
+            .axes
+            .iter()
+            .position(|a| *a == axis)
+            .unwrap_or_else(|| panic!("axis '{}' is not part of this plan", axis.name()));
+        &self.points[i]
+    }
+
+    /// The cross-product grid, first axis outermost, in stable
+    /// coordinate-major order (a one-axis remote-ratio plan reproduces
+    /// the historical ratio-major order exactly; cu-count likewise).
+    pub fn combos(&self) -> Vec<SweepCombo> {
+        let mut combos = vec![SweepCombo::default()];
+        for (axis, points) in self.axes.iter().zip(&self.points) {
+            let mut next = Vec::with_capacity(combos.len() * points.len());
+            for combo in &combos {
+                for &v in points {
+                    let mut c = combo.clone();
+                    c.coords.push((*axis, v));
+                    axis.axis().apply(v, &mut c.spec);
+                    next.push(c);
+                }
+            }
+            combos = next;
+        }
+        combos
+    }
+}
+
+/// One point of a [`SweepPlan`]'s cross-product grid: the coordinate on
+/// every composed axis, plus the accumulated cell specialization.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SweepCombo {
+    /// `(axis, value)` per composed axis, in plan order.
+    pub coords: Vec<(AxisId, f64)>,
+    pub spec: CellSpec,
+}
+
+impl SweepCombo {
+    /// The coordinate on `axis`, when the plan composes it.
+    pub fn coord(&self, axis: AxisId) -> Option<f64> {
+        self.coords.iter().find(|(a, _)| *a == axis).map(|(_, v)| *v)
+    }
+
+    /// The long-format report rendering of the coordinates
+    /// (`axis=v;...` — `;`-separated like the parameter columns, so the
+    /// CSV stays quoting-free).
+    pub fn axis_values(&self) -> String {
+        let parts: Vec<String> = self
+            .coords
+            .iter()
+            .map(|(a, v)| format!("{}={v}", a.name()))
+            .collect();
+        parts.join(";")
+    }
 }
 
 #[cfg(test)]
@@ -199,15 +322,6 @@ mod tests {
     }
 
     #[test]
-    fn cu_count_grid_is_cu_major() {
-        let g = cu_count_grid(&[8, 64]);
-        assert_eq!(g.len(), 6);
-        assert_eq!(g[0], (Scenario::STEAL_ONLY, 8));
-        assert_eq!(g[2], (Scenario::SRSP, 8));
-        assert_eq!(g[3], (Scenario::STEAL_ONLY, 64));
-    }
-
-    #[test]
     fn per_cell_seeds_share_graphs_across_scenarios() {
         let cell = |app, scenario, num_cus| Cell {
             app,
@@ -234,11 +348,79 @@ mod tests {
     }
 
     #[test]
-    fn remote_ratio_grid_is_ratio_major() {
-        let g = remote_ratio_grid(&[0.0, 0.5]);
-        assert_eq!(g.len(), 6);
-        assert_eq!(g[0], (Scenario::STEAL_ONLY, 0.0));
-        assert_eq!(g[2], (Scenario::SRSP, 0.0));
-        assert_eq!(g[3], (Scenario::STEAL_ONLY, 0.5));
+    fn one_axis_plan_reproduces_the_ratio_major_order() {
+        let plan = SweepPlan::new(registry::STRESS, &[axis::REMOTE_RATIO])
+            .unwrap()
+            .with_points(axis::REMOTE_RATIO, vec![0.0, 0.5])
+            .unwrap();
+        let combos = plan.combos();
+        assert_eq!(combos.len(), 2);
+        assert_eq!(combos[0].coord(axis::REMOTE_RATIO), Some(0.0));
+        assert_eq!(combos[1].coord(axis::REMOTE_RATIO), Some(0.5));
+        assert_eq!(combos[1].spec.params, vec![("remote_ratio".to_string(), 0.5)]);
+        assert_eq!(combos[1].spec.num_cus, None);
+        assert_eq!(combos[1].axis_values(), "remote-ratio=0.5");
+        assert_eq!(plan.scenarios, RATIO_SCENARIOS.to_vec());
+    }
+
+    #[test]
+    fn cu_count_plan_overrides_the_device_size() {
+        let plan = SweepPlan::new(registry::STRESS, &[axis::CU_COUNT])
+            .unwrap()
+            .with_points(axis::CU_COUNT, vec![8.0, 64.0])
+            .unwrap();
+        let combos = plan.combos();
+        assert_eq!(combos.len(), 2);
+        assert_eq!(combos[0].spec.num_cus, Some(8));
+        assert_eq!(combos[1].spec.num_cus, Some(64));
+        assert!(combos[1].spec.params.is_empty());
+        assert_eq!(combos[1].axis_values(), "cu-count=64");
+    }
+
+    #[test]
+    fn composed_plan_cross_product_first_axis_outermost() {
+        let plan = SweepPlan::new(registry::STRESS, &[axis::REMOTE_RATIO, axis::CU_COUNT])
+            .unwrap()
+            .with_points(axis::REMOTE_RATIO, vec![0.0, 0.5])
+            .unwrap()
+            .with_points(axis::CU_COUNT, vec![4.0, 8.0])
+            .unwrap();
+        let combos = plan.combos();
+        assert_eq!(combos.len(), 4);
+        let flat: Vec<(f64, u32)> = combos
+            .iter()
+            .map(|c| (c.coord(axis::REMOTE_RATIO).unwrap(), c.spec.num_cus.unwrap()))
+            .collect();
+        assert_eq!(flat, vec![(0.0, 4), (0.0, 8), (0.5, 4), (0.5, 8)]);
+        assert_eq!(combos[3].axis_values(), "remote-ratio=0.5;cu-count=8");
+        assert_eq!(combos[3].spec.params, vec![("remote_ratio".to_string(), 0.5)]);
+    }
+
+    #[test]
+    fn plan_defaults_come_from_the_registry() {
+        let plan = SweepPlan::new(registry::STRESS, &[axis::HOT_SET]).unwrap();
+        assert_eq!(plan.points(axis::HOT_SET), axis::HOT_SET.axis().default_points());
+        assert_eq!(plan.combos().len(), axis::HOT_SET.axis().default_points().len());
+    }
+
+    #[test]
+    fn plan_rejects_bad_axis_lists_and_points() {
+        let dup = SweepPlan::new(registry::STRESS, &[axis::CU_COUNT, axis::CU_COUNT]);
+        assert!(dup.unwrap_err().contains("duplicate"), "duplicate axes");
+        let none = SweepPlan::new(registry::STRESS, &[]);
+        assert!(none.is_err());
+        let four = SweepPlan::new(
+            registry::STRESS,
+            &[axis::REMOTE_RATIO, axis::CU_COUNT, axis::HOT_SET, axis::MIGRATION],
+        );
+        assert!(four.unwrap_err().contains("at most"), "too many axes");
+        // A workload without the driven parameter is refused up front.
+        let err = SweepPlan::new(registry::PRK, &[axis::REMOTE_RATIO]).unwrap_err();
+        assert!(err.contains("has no remote_ratio parameter"), "{err}");
+        // Points for an axis outside the plan, and out-of-domain points.
+        let plan = SweepPlan::new(registry::STRESS, &[axis::REMOTE_RATIO]).unwrap();
+        assert!(plan.clone().with_points(axis::CU_COUNT, vec![4.0]).is_err());
+        assert!(plan.clone().with_points(axis::REMOTE_RATIO, vec![1.5]).is_err());
+        assert!(plan.with_points(axis::REMOTE_RATIO, vec![]).is_err());
     }
 }

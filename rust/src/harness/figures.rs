@@ -8,12 +8,17 @@
 //!   RSP (RSP = 1.0).
 //! * **Scaling sweep** — sRSP vs RSP speedup as CU count grows (the §1/§7
 //!   scalability claim).
+//! * **Sweep surfaces** — the generic reduction of any executed
+//!   [`SweepPlan`] (one row per grid combo: coordinates, scoped-steal
+//!   baseline, per-protocol speedup) shared by the CLI table and the
+//!   sweep benches.
 
 use super::presets::{WorkloadPreset, WorkloadSize};
 use super::report::{format_table, geomean};
 use super::runner::{into_run_results, CellResult, Runner};
 use crate::config::{DeviceConfig, Scenario};
-use crate::coordinator::{classic_apps, classic_grid};
+use crate::coordinator::axis::AxisId;
+use crate::coordinator::{classic_apps, classic_grid, SweepPlan};
 use crate::sim::Stats;
 use crate::workload::driver::{run_scenario_seeded, RunResult};
 use crate::workload::engine::NativeMath;
@@ -218,6 +223,59 @@ pub fn scaling_sweep_jobs(cus: &[u32], size: WorkloadSize, jobs: usize) -> Vec<(
     scaling_rows(cus, &runner.run_cells(&cells))
 }
 
+/// One reduced row of an executed [`SweepPlan`]: the grid coordinates
+/// plus the paper's protocol comparison at that point (speedup of the
+/// promotion protocols over global-scope stealing).
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    /// `(axis, value)` per composed axis, in plan order.
+    pub coords: Vec<(AxisId, f64)>,
+    /// Cycles of the global-scope stealing baseline at this point.
+    pub steal_cycles: u64,
+    /// Speedup of naive RSP over the stealing baseline.
+    pub rsp_speedup: f64,
+    /// Speedup of sRSP over the stealing baseline.
+    pub srsp_speedup: f64,
+}
+
+/// Reduce executed sweep cells to one [`SweepRow`] per grid combo. The
+/// plan must compare the three [`RATIO_SCENARIOS`] protocols (the
+/// default every sweep runs) and `results` must be [`Runner::run_sweep`]
+/// output for that plan, in its combo-major order.
+///
+/// [`RATIO_SCENARIOS`]: crate::coordinator::RATIO_SCENARIOS
+pub fn sweep_speedup_rows(plan: &SweepPlan, results: &[CellResult]) -> Vec<SweepRow> {
+    let per_combo = plan.scenarios.len();
+    let combos = plan.combos();
+    assert_eq!(
+        results.len(),
+        combos.len() * per_combo,
+        "results must cover the plan's full grid"
+    );
+    let cycles_of = |chunk: &[CellResult], scenario: Scenario| {
+        chunk
+            .iter()
+            .find(|c| c.cell.scenario == scenario)
+            .unwrap_or_else(|| panic!("sweep table needs the {} scenario", scenario.name()))
+            .result
+            .stats
+            .cycles as f64
+    };
+    combos
+        .iter()
+        .zip(results.chunks(per_combo))
+        .map(|(combo, chunk)| {
+            let steal = cycles_of(chunk, Scenario::STEAL_ONLY);
+            SweepRow {
+                coords: combo.coords.clone(),
+                steal_cycles: steal as u64,
+                rsp_speedup: steal / cycles_of(chunk, Scenario::RSP),
+                srsp_speedup: steal / cycles_of(chunk, Scenario::SRSP),
+            }
+        })
+        .collect()
+}
+
 /// Reduce executed sweep cells back to `(num_cus, rsp, srsp)` geomean
 /// rows, one per requested CU count.
 pub fn scaling_rows(cus: &[u32], results: &[CellResult]) -> Vec<(u32, f64, f64)> {
@@ -238,6 +296,34 @@ pub fn scaling_rows(cus: &[u32], results: &[CellResult]) -> Vec<(u32, f64, f64)>
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sweep_rows_reduce_in_combo_order() {
+        use crate::coordinator::axis;
+        use crate::workload::registry;
+        let mut runner = Runner::new(
+            DeviceConfig {
+                num_cus: 4,
+                ..DeviceConfig::small()
+            },
+            WorkloadSize::Tiny,
+            4,
+        );
+        runner.validate = true;
+        let plan = SweepPlan::new(registry::STRESS, &[axis::REMOTE_RATIO])
+            .unwrap()
+            .with_points(axis::REMOTE_RATIO, vec![0.0, 1.0])
+            .unwrap();
+        let results = runner.run_sweep(&plan);
+        let rows = sweep_speedup_rows(&plan, &results);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].coords, vec![(axis::REMOTE_RATIO, 0.0)]);
+        assert_eq!(rows[1].coords, vec![(axis::REMOTE_RATIO, 1.0)]);
+        for r in &rows {
+            assert!(r.steal_cycles > 0);
+            assert!(r.rsp_speedup > 0.0 && r.srsp_speedup > 0.0);
+        }
+    }
 
     #[test]
     fn figure_pipeline_tiny() {

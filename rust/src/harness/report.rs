@@ -82,6 +82,12 @@ pub struct ReportRow {
     /// cell's protocol consumed (`--proto-param`; same quoting-free
     /// format as `params`).
     pub proto_params: String,
+    /// Long-format sweep coordinates (`axis=v;...`, e.g.
+    /// `remote-ratio=0.4;cu-count=8`) for cells produced by a
+    /// [`SweepPlan`](crate::coordinator::SweepPlan); empty for plain
+    /// grid cells. One column for any axis composition keeps the report
+    /// schema fixed while surfaces stay plottable in long format.
+    pub axis_values: String,
     /// The remote-ratio sweep coordinate (`None` for workloads without
     /// the axis) — first-class so protocol × r crossover curves plot
     /// straight from the CSV.
@@ -116,13 +122,14 @@ pub struct Report {
 impl Report {
     /// The flat report schema, in serialization order (shared by the CSV
     /// header and the JSON object keys).
-    pub const CSV_COLUMNS: [&'static str; 21] = [
+    pub const CSV_COLUMNS: [&'static str; 22] = [
         "app",
         "scenario",
         "cus",
         "seed",
         "params",
         "proto_params",
+        "axis_values",
         "remote_ratio",
         "rounds",
         "converged",
@@ -158,13 +165,14 @@ impl Report {
             };
             writeln!(
                 out,
-                "{},{},{},{},{},{},{},{},{},{},{},{},{:.6},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{:.6},{},{},{},{},{},{},{},{}",
                 r.app,
                 r.scenario,
                 r.cus,
                 r.seed,
                 r.params,
                 r.proto_params,
+                r.axis_values,
                 remote_ratio,
                 r.rounds,
                 r.converged,
@@ -202,7 +210,8 @@ impl Report {
             write!(
                 out,
                 "  {{\"app\":\"{}\",\"scenario\":\"{}\",\"cus\":{},\"seed\":{},\
-                 \"params\":\"{}\",\"proto_params\":\"{}\",\"remote_ratio\":{},\
+                 \"params\":\"{}\",\"proto_params\":\"{}\",\"axis_values\":\"{}\",\
+                 \"remote_ratio\":{},\
                  \"rounds\":{},\"converged\":{},\"validated\":{},\"cycles\":{},\
                  \"instructions\":{},\"l1_hit_rate\":{:.6},\"l2_accesses\":{},\
                  \"sync_overhead_cycles\":{},\"tasks_executed\":{},\"tasks_stolen\":{},\
@@ -214,6 +223,7 @@ impl Report {
                 r.seed,
                 r.params,
                 r.proto_params,
+                r.axis_values,
                 remote_ratio,
                 r.rounds,
                 r.converged,
@@ -250,6 +260,7 @@ mod tests {
             seed: 0xC0FFEE,
             params: String::new(),
             proto_params: String::new(),
+            axis_values: String::new(),
             remote_ratio: None,
             rounds: 5,
             converged: true,
@@ -269,6 +280,7 @@ mod tests {
         let mut sweep_row = row("STRESS", "srsp", Some(true));
         sweep_row.params = "remote_ratio=0.4".to_string();
         sweep_row.proto_params = "lr_tbl_entries=4".to_string();
+        sweep_row.axis_values = "remote-ratio=0.4;cu-count=8".to_string();
         sweep_row.remote_ratio = Some(0.4);
         Report {
             rows: vec![
@@ -297,9 +309,11 @@ mod tests {
         assert!(lines[1].contains(",,"), "unvalidated row has empty cell");
         assert!(lines[2].contains(",true,"));
         assert!(lines[3].contains(",false,"));
-        // The sweep row carries the axis in both columns, plus the
+        // The sweep row carries the axis coordinates in long format next
+        // to the derived remote_ratio column, plus the
         // protocol-parameter overrides.
-        assert!(lines[4].contains(",remote_ratio=0.4,lr_tbl_entries=4,0.4,"));
+        assert!(lines[4]
+            .contains(",remote_ratio=0.4,lr_tbl_entries=4,remote-ratio=0.4;cu-count=8,0.4,"));
     }
 
     #[test]
@@ -320,6 +334,8 @@ mod tests {
         assert!(json.contains("\"validated\":null"));
         assert!(json.contains("\"remote_ratio\":null"));
         assert!(json.contains("\"remote_ratio\":0.4"));
+        assert!(json.contains("\"axis_values\":\"\""));
+        assert!(json.contains("\"axis_values\":\"remote-ratio=0.4;cu-count=8\""));
         assert!(json.contains("\"params\":\"remote_ratio=0.4\""));
         assert!(json.contains("\"proto_params\":\"lr_tbl_entries=4\""));
         assert!(json.contains("\"l1_hit_rate\":0.875000"));

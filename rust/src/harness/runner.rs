@@ -3,7 +3,7 @@
 //!
 //! Which cells exist, in what order, and how their seeds derive is the
 //! *distribution policy* and lives in [`crate::coordinator`]; this module
-//! takes a cell list and executes it. Every grid
+//! takes a cell list (or a [`SweepPlan`]) and executes it. Every grid
 //! [`Cell`](crate::coordinator::Cell) is an independent, single-threaded
 //! simulation — its own [`Device`](crate::gpu::Device), memory image and
 //! workload instance are all constructed inside the worker thread that
@@ -14,10 +14,12 @@
 //! in grid order, so the output is byte-for-byte identical for any
 //! `--jobs` value.
 //!
-//! Workloads are resolved through the [`crate::workload::registry`]:
-//! instantiation, parameter handling and oracle validation are all
-//! self-described by the registered [`Kernel`](crate::workload::registry::Kernel)
-//! implementations — nothing here matches on a workload enum.
+//! Workloads are resolved through the [`crate::workload::registry`] and
+//! sweep dimensions through the [`crate::coordinator::axis`] registry:
+//! instantiation, parameter handling, oracle validation and cell
+//! specialization are all self-described by the registered
+//! implementations — nothing here matches on a workload, protocol or
+//! axis identity.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -27,7 +29,7 @@ use std::thread;
 use super::presets::{WorkloadPreset, WorkloadSize};
 use super::report::{Report, ReportRow};
 use crate::config::{DeviceConfig, Scenario};
-use crate::coordinator::{cu_count_grid, remote_ratio_grid, Cell, Seeding};
+use crate::coordinator::{Cell, Seeding, SweepPlan};
 use crate::sync::protocol;
 use crate::workload::driver::{run_scenario_seeded, RunResult};
 use crate::workload::engine::NativeMath;
@@ -43,9 +45,13 @@ pub struct CellResult {
     /// preset carried (empty when the run used pure defaults).
     pub params: String,
     /// `k=v;...` rendering of the protocol-parameter overrides the
-    /// cell's protocol consumed (`--proto-param`; empty when none apply —
-    /// cells of a mixed grid only surface their own protocol's keys).
+    /// cell's protocol consumed (`--proto-param` plus any sweep-axis
+    /// contribution; empty when none apply — cells of a mixed grid only
+    /// surface their own protocol's keys).
     pub proto_params: String,
+    /// Long-format sweep coordinates (`axis=v;...`) when the cell came
+    /// from a [`SweepPlan`]; empty for plain grid cells.
+    pub axis_values: String,
     /// The remote-ratio sweep coordinate, when the workload declares one
     /// (the stress family); `None` for workloads without the axis.
     pub remote_ratio: Option<f64>,
@@ -93,6 +99,21 @@ pub fn run_validated(
     );
     let ok = run.converged && (inst.check)(&mem).is_ok();
     (run, ok)
+}
+
+/// One fully-specialized, ready-to-execute cell: the grid coordinates
+/// plus everything a sweep axis may have contributed beyond the cell
+/// itself. Plain grid cells carry empty extras — the execution core
+/// never knows whether a sweep produced its input.
+struct Planned<'a> {
+    cell: Cell,
+    preset: &'a WorkloadPreset,
+    /// Axis-contributed protocol-parameter overrides, appended after the
+    /// runner's own (`--proto-param`) list so an axis that owns a key
+    /// wins.
+    proto_params: Vec<(String, f64)>,
+    /// Long-format sweep coordinates for the report (empty off-sweep).
+    axis_values: String,
 }
 
 /// The scenario-matrix runner configuration.
@@ -149,42 +170,49 @@ impl Runner {
     pub fn run_cell(&self, cell: &Cell) -> CellResult {
         let seed = self.seeding.seed_for(cell);
         let preset = self.build_preset(cell.app, seed, &[]);
-        self.run_cell_with(cell, &preset)
+        self.run_one(&Planned {
+            cell: *cell,
+            preset: &preset,
+            proto_params: Vec::new(),
+            axis_values: String::new(),
+        })
     }
 
-    /// Run `cell` against an already-generated preset (which must match
-    /// the cell's app and the runner's seeding — the grid entry points
-    /// share one preset across all scenarios of an (app, CU-count) pair
-    /// instead of regenerating the identical input per scenario).
-    fn run_cell_with(&self, cell: &Cell, preset: &WorkloadPreset) -> CellResult {
-        let cfg = DeviceConfig {
-            num_cus: cell.num_cus,
+    /// Run one planned cell against an already-generated preset (which
+    /// must match the cell's app and the runner's seeding — the grid
+    /// entry points share one preset across all scenarios of a grid
+    /// point instead of regenerating the identical input per scenario).
+    fn run_one(&self, p: &Planned<'_>) -> CellResult {
+        let mut cfg = DeviceConfig {
+            num_cus: p.cell.num_cus,
             ..self.cfg.clone()
         };
+        cfg.proto_params.extend_from_slice(&p.proto_params);
         let (result, validated) = if self.validate {
-            let (run, ok) = run_validated(&cfg, preset, cell.scenario);
+            let (run, ok) = run_validated(&cfg, p.preset, p.cell.scenario);
             (run, Some(ok))
         } else {
-            let (mut wl, image) = preset.instantiate();
+            let (mut wl, image) = p.preset.instantiate();
             let (run, _mem) = run_scenario_seeded(
                 &cfg,
-                cell.scenario,
+                p.cell.scenario,
                 wl.as_mut(),
                 NativeMath,
-                preset.max_rounds,
+                p.preset.max_rounds,
                 image,
             );
             (run, None)
         };
         CellResult {
-            cell: *cell,
-            seed: preset.seed,
-            params: preset.params.overrides_display(),
+            cell: p.cell,
+            seed: p.preset.seed,
+            params: p.preset.params.overrides_display(),
             proto_params: protocol::overrides_display(
-                cell.scenario.protocol(),
-                &self.cfg.proto_params,
+                p.cell.scenario.protocol(),
+                &cfg.proto_params,
             ),
-            remote_ratio: preset.remote_ratio(),
+            axis_values: p.axis_values.clone(),
+            remote_ratio: p.preset.remote_ratio(),
             result,
             validated,
         }
@@ -204,99 +232,67 @@ impl Runner {
                 .entry((cell.app, seed))
                 .or_insert_with(|| self.build_preset(cell.app, seed, &[]));
         }
-        let pairs: Vec<(Cell, &WorkloadPreset)> = cells
+        let planned: Vec<Planned<'_>> = cells
             .iter()
-            .map(|c| (*c, &presets[&(c.app, self.seeding.seed_for(c))]))
-            .collect();
-        self.run_pairs(&pairs)
-    }
-
-    /// Execute the protocol × remote-ratio sweep grid (the stress
-    /// family's crossover axis) on `app`, which must declare a
-    /// `remote_ratio` parameter. All protocols at one ratio point share
-    /// one preset — and therefore one task population — so the curve
-    /// compares protocols on identical inputs; the cell order is
-    /// [`remote_ratio_grid`]'s ratio-major order.
-    pub fn run_remote_ratio_sweep(&self, app: WorkloadId, points: &[f64]) -> Vec<CellResult> {
-        let num_cus = self.cfg.num_cus;
-        let presets: Vec<WorkloadPreset> = points
-            .iter()
-            .map(|&r| {
-                let cell = Cell {
-                    app,
-                    scenario: Scenario::SRSP,
-                    num_cus,
-                };
-                // Seeds ignore the scenario (and the ratio: the sweep
-                // varies placement over one shared task population).
-                let seed = self.seeding.seed_for(&cell);
-                self.build_preset(app, seed, &[("remote_ratio".to_string(), r)])
+            .map(|c| Planned {
+                cell: *c,
+                preset: &presets[&(c.app, self.seeding.seed_for(c))],
+                proto_params: Vec::new(),
+                axis_values: String::new(),
             })
             .collect();
-        let pairs: Vec<(Cell, &WorkloadPreset)> = remote_ratio_grid(points)
-            .iter()
-            .map(|&(scenario, r)| {
-                let i = points
-                    .iter()
-                    .position(|&p| p == r)
-                    .expect("grid point comes from `points`");
-                (
-                    Cell {
-                        app,
-                        scenario,
-                        num_cus,
-                    },
-                    &presets[i],
-                )
-            })
-            .collect();
-        self.run_pairs(&pairs)
+        self.run_planned(&planned)
     }
 
-    /// Execute the protocol × CU-count sweep grid on `app` — the Fig. 4
-    /// crossover plotted against CU count, reusing the remote-ratio
-    /// sweep's plumbing: all protocols at one device size share one
-    /// preset (identical inputs), cells run in [`cu_count_grid`]'s
-    /// CU-major order.
-    pub fn run_cu_count_sweep(&self, app: WorkloadId, points: &[u32]) -> Vec<CellResult> {
-        let presets: Vec<WorkloadPreset> = points
+    /// Execute a [`SweepPlan`]: the cross-product grid of the plan's
+    /// axes, every combo run under every plan scenario on one shared
+    /// preset — and therefore one task population — so the resulting
+    /// curve or surface compares protocols on identical inputs. Cells
+    /// run in the plan's combo-major order (all scenarios of one grid
+    /// point adjacent, mirroring the report's row grouping); a one-axis
+    /// plan reproduces the historical single-axis sweep orders exactly.
+    pub fn run_sweep(&self, plan: &SweepPlan) -> Vec<CellResult> {
+        let combos = plan.combos();
+        let presets: Vec<WorkloadPreset> = combos
             .iter()
-            .map(|&num_cus| {
-                let cell = Cell {
-                    app,
-                    scenario: Scenario::SRSP,
-                    num_cus,
-                };
-                // Seeds ignore the scenario; per-cell seeding derives a
+            .map(|combo| {
+                let num_cus = combo.spec.num_cus.unwrap_or(self.cfg.num_cus);
+                // Seeds ignore the scenario (and any parameter-only
+                // coordinate: those sweeps vary placement over one
+                // shared task population); per-cell seeding derives a
                 // distinct input per device size.
-                let seed = self.seeding.seed_for(&cell);
-                self.build_preset(app, seed, &[])
+                let seed = self.seeding.seed_for(&Cell {
+                    app: plan.app,
+                    scenario: Scenario::SRSP,
+                    num_cus,
+                });
+                self.build_preset(plan.app, seed, &combo.spec.params)
             })
             .collect();
-        let pairs: Vec<(Cell, &WorkloadPreset)> = cu_count_grid(points)
+        let planned: Vec<Planned<'_>> = combos
             .iter()
-            .map(|&(scenario, num_cus)| {
-                let i = points
-                    .iter()
-                    .position(|&p| p == num_cus)
-                    .expect("grid point comes from `points`");
-                (
-                    Cell {
-                        app,
+            .zip(&presets)
+            .flat_map(|(combo, preset)| {
+                let num_cus = combo.spec.num_cus.unwrap_or(self.cfg.num_cus);
+                plan.scenarios.iter().map(move |&scenario| Planned {
+                    cell: Cell {
+                        app: plan.app,
                         scenario,
                         num_cus,
                     },
-                    &presets[i],
-                )
+                    preset,
+                    proto_params: combo.spec.proto_params.clone(),
+                    axis_values: combo.axis_values(),
+                })
             })
             .collect();
-        self.run_pairs(&pairs)
+        self.run_planned(&planned)
     }
 
     /// The shared sharding core: dynamic work queue over an atomic
     /// counter, results reassembled in input order.
-    fn run_pairs(&self, pairs: &[(Cell, &WorkloadPreset)]) -> Vec<CellResult> {
-        let jobs = self.jobs.clamp(1, pairs.len().max(1));
+    fn run_planned(&self, planned: &[Planned<'_>]) -> Vec<CellResult> {
+        let jobs = self.jobs.clamp(1, planned.len().max(1));
         let next = AtomicUsize::new(0);
         let (tx, rx) = mpsc::channel::<(usize, CellResult)>();
         thread::scope(|scope| {
@@ -305,15 +301,15 @@ impl Runner {
                 let next = &next;
                 scope.spawn(move || loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
-                    let Some((cell, preset)) = pairs.get(i) else { break };
-                    if tx.send((i, self.run_cell_with(cell, preset))).is_err() {
+                    let Some(p) = planned.get(i) else { break };
+                    if tx.send((i, self.run_one(p))).is_err() {
                         break;
                     }
                 });
             }
         });
         drop(tx);
-        let mut slots: Vec<Option<CellResult>> = pairs.iter().map(|_| None).collect();
+        let mut slots: Vec<Option<CellResult>> = planned.iter().map(|_| None).collect();
         for (i, r) in rx {
             slots[i] = Some(r);
         }
@@ -336,6 +332,7 @@ impl Report {
                 seed: c.seed,
                 params: c.params.clone(),
                 proto_params: c.proto_params.clone(),
+                axis_values: c.axis_values.clone(),
                 remote_ratio: c.remote_ratio,
                 rounds: c.result.rounds,
                 converged: c.result.converged,
@@ -360,7 +357,7 @@ impl Report {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{classic_grid, cu_count_grid, full_grid, RATIO_SCENARIOS};
+    use crate::coordinator::{axis, classic_grid, full_grid, RATIO_SCENARIOS};
     use crate::harness::presets::DEFAULT_SEED;
     use crate::workload::registry;
 
@@ -432,6 +429,7 @@ mod tests {
             );
             assert_eq!(c.seed, DEFAULT_SEED);
             assert_eq!(c.params, "", "matrix cells run pure defaults");
+            assert_eq!(c.axis_values, "", "plain grid cells carry no axis coordinates");
         }
         let report = Report::from_cells(&results);
         assert_eq!(report.rows.len(), cells.len());
@@ -463,28 +461,38 @@ mod tests {
     fn remote_ratio_sweep_shape_params_and_oracles() {
         let runner = tiny_runner(4, Seeding::default(), true);
         let points = [0.0, 0.5];
-        let results = runner.run_remote_ratio_sweep(registry::STRESS, &points);
+        let plan = SweepPlan::new(registry::STRESS, &[axis::REMOTE_RATIO])
+            .unwrap()
+            .with_points(axis::REMOTE_RATIO, points.to_vec())
+            .unwrap();
+        let results = runner.run_sweep(&plan);
         assert_eq!(results.len(), points.len() * RATIO_SCENARIOS.len());
         for (i, c) in results.iter().enumerate() {
-            let (want_scenario, want_r) = remote_ratio_grid(&points)[i];
+            let (want_r, want_scenario) = (points[i / 3], RATIO_SCENARIOS[i % 3]);
             assert_eq!(c.cell.scenario, want_scenario);
             assert_eq!(c.remote_ratio, Some(want_r), "cell {i}");
             assert_eq!(c.validated, Some(true), "{want_scenario:?} r={want_r}");
             assert_eq!(c.params, format!("remote_ratio={want_r}"));
+            assert_eq!(c.axis_values, format!("remote-ratio={want_r}"));
         }
         // The report carries the axis as a first-class column.
         let report = Report::from_cells(&results);
-        assert!(report.to_csv().contains("remote_ratio"));
+        assert!(report.to_csv().contains("axis_values"));
+        assert!(report.to_csv().contains("remote-ratio=0.5"));
     }
 
     #[test]
     fn cu_count_sweep_shape_and_oracles() {
         let runner = tiny_runner(4, Seeding::PerCell(11), true);
-        let points = [2, 4];
-        let results = runner.run_cu_count_sweep(registry::STRESS, &points);
+        let points = [2.0, 4.0];
+        let plan = SweepPlan::new(registry::STRESS, &[axis::CU_COUNT])
+            .unwrap()
+            .with_points(axis::CU_COUNT, points.to_vec())
+            .unwrap();
+        let results = runner.run_sweep(&plan);
         assert_eq!(results.len(), points.len() * RATIO_SCENARIOS.len());
         for (i, c) in results.iter().enumerate() {
-            let (want_scenario, want_cus) = cu_count_grid(&points)[i];
+            let (want_cus, want_scenario) = (points[i / 3] as u32, RATIO_SCENARIOS[i % 3]);
             assert_eq!(c.cell.scenario, want_scenario);
             assert_eq!(c.cell.num_cus, want_cus, "cell {i}");
             assert_eq!(c.validated, Some(true), "{want_scenario:?} cus={want_cus}");
@@ -493,9 +501,75 @@ mod tests {
         // different CU counts derive different ones under PerCell.
         assert_eq!(results[0].seed, results[2].seed);
         assert_ne!(results[0].seed, results[3].seed);
-        // The report carries the axis through the existing cus column.
+        // The report carries the axis through the existing cus column
+        // and the long-format coordinate column.
         let report = Report::from_cells(&results);
         assert!(report.to_csv().contains(",2,"));
+        assert!(report.to_csv().contains("cu-count=4"));
+    }
+
+    #[test]
+    fn composed_sweep_crosses_both_axes() {
+        let runner = tiny_runner(4, Seeding::PerCell(3), true);
+        let plan = SweepPlan::new(registry::STRESS, &[axis::REMOTE_RATIO, axis::CU_COUNT])
+            .unwrap()
+            .with_points(axis::REMOTE_RATIO, vec![0.0, 1.0])
+            .unwrap()
+            .with_points(axis::CU_COUNT, vec![2.0, 4.0])
+            .unwrap();
+        let results = runner.run_sweep(&plan);
+        assert_eq!(results.len(), 2 * 2 * RATIO_SCENARIOS.len());
+        let combos = plan.combos();
+        for (i, c) in results.iter().enumerate() {
+            let combo = &combos[i / RATIO_SCENARIOS.len()];
+            assert_eq!(c.cell.scenario, RATIO_SCENARIOS[i % 3]);
+            assert_eq!(c.cell.num_cus, combo.spec.num_cus.unwrap());
+            assert_eq!(c.remote_ratio, combo.coord(axis::REMOTE_RATIO));
+            assert_eq!(c.axis_values, combo.axis_values());
+            assert_eq!(c.validated, Some(true), "cell {i}: {}", c.axis_values);
+        }
+        // Scenarios of one combo share the input; the device size drives
+        // the seed, the ratio does not (placement over one population).
+        assert_eq!(results[0].seed, results[2].seed);
+        assert_eq!(results[0].seed, results[6].seed, "ratio must not reseed");
+        assert_ne!(results[0].seed, results[3].seed, "CU count must reseed");
+    }
+
+    #[test]
+    fn registry_only_axes_run_end_to_end() {
+        // hot-set and migration exist only as axis-registry entries; the
+        // runner and coordinator carry no code specific to them.
+        let runner = tiny_runner(4, Seeding::default(), true);
+        for (id, key) in [(axis::HOT_SET, "hot_set"), (axis::MIGRATION, "migration")] {
+            let plan = SweepPlan::new(registry::STRESS, &[id])
+                .unwrap()
+                .with_points(id, vec![1.0, 2.0])
+                .unwrap();
+            let results = runner.run_sweep(&plan);
+            assert_eq!(results.len(), 2 * RATIO_SCENARIOS.len());
+            for c in &results {
+                assert_eq!(c.validated, Some(true), "{}: {}", id.name(), c.axis_values);
+            }
+            assert_eq!(results[0].params, format!("{key}=1"));
+            assert_eq!(results[3].axis_values, format!("{}=2", id.name()));
+        }
+    }
+
+    #[test]
+    fn sweep_jobs_1_and_4_byte_identical() {
+        let plan = SweepPlan::new(registry::STRESS, &[axis::REMOTE_RATIO, axis::CU_COUNT])
+            .unwrap()
+            .with_points(axis::REMOTE_RATIO, vec![0.0, 0.5])
+            .unwrap()
+            .with_points(axis::CU_COUNT, vec![2.0, 4.0])
+            .unwrap();
+        let serial = tiny_runner(1, Seeding::PerCell(9), true).run_sweep(&plan);
+        let parallel = tiny_runner(4, Seeding::PerCell(9), true).run_sweep(&plan);
+        assert_eq!(format!("{serial:?}"), format!("{parallel:?}"));
+        assert_eq!(
+            Report::from_cells(&serial).to_csv(),
+            Report::from_cells(&parallel).to_csv()
+        );
     }
 
     #[test]
@@ -536,6 +610,23 @@ mod tests {
         let r = runner.run_cell(&cell);
         assert_eq!(r.params, "tasks=32");
         assert_eq!(r.validated, Some(true));
+    }
+
+    #[test]
+    fn sweep_axis_overrides_win_over_runner_params() {
+        // The axis owns its key: a user --param remote_ratio is
+        // overridden by the swept coordinate, not silently kept.
+        let mut runner = tiny_runner(1, Seeding::default(), true);
+        runner.params = vec![("remote_ratio".to_string(), 0.9)];
+        let plan = SweepPlan::new(registry::STRESS, &[axis::REMOTE_RATIO])
+            .unwrap()
+            .with_points(axis::REMOTE_RATIO, vec![0.25])
+            .unwrap();
+        let results = runner.run_sweep(&plan);
+        for c in &results {
+            assert_eq!(c.remote_ratio, Some(0.25));
+            assert_eq!(c.validated, Some(true));
+        }
     }
 
     #[test]

@@ -1,23 +1,29 @@
 //! `srsp` — the Layer-3 coordinator CLI.
 //!
 //! Subcommands regenerate the paper's tables/figures, run individual
-//! scenarios, sweep CU counts or the stress family's remote-access
-//! ratio, and validate results against native oracles. Workloads are
-//! resolved by name through the [`srsp::workload::registry`] — adding a
-//! workload there makes it reachable from every subcommand with no CLI
-//! changes. Everything matrix-shaped (figures, sweeps, validation, the
-//! CI smoke gate) is sharded across OS threads by the scenario-matrix
-//! runner ([`srsp::harness::runner`]); `--jobs N` controls the worker
-//! count and results are byte-identical for every N. No external CLI
-//! crate is available offline; parsing is hand-rolled.
+//! scenarios, sweep registered axes (remote ratio, CU count, hot-set
+//! width, migration period — composable into surfaces), and validate
+//! results against native oracles. Workloads are resolved by name
+//! through the [`srsp::workload::registry`], protocols through
+//! [`srsp::sync::protocol`], sweep dimensions through
+//! [`srsp::coordinator::axis`] — adding an entry to any registry makes
+//! it reachable from every subcommand with no CLI changes. Everything
+//! matrix-shaped (figures, sweeps, validation, the CI smoke gate) is
+//! sharded across OS threads by the scenario-matrix runner
+//! ([`srsp::harness::runner`]); `--jobs N` controls the worker count and
+//! results are byte-identical for every N. No external CLI crate is
+//! available offline; parsing is hand-rolled.
 
 use std::time::Instant;
 
 use srsp::config::{parse_config_str, DeviceConfig, Scenario};
+use srsp::coordinator::axis::{self, AxisId};
 use srsp::coordinator::{
-    classic_grid, full_grid, scaling_cells, Seeding, CU_POINTS, RATIO_POINTS, RATIO_SCENARIOS,
+    classic_grid, full_grid, scaling_cells, Seeding, SweepPlan, MAX_SWEEP_AXES, RATIO_SCENARIOS,
 };
-use srsp::harness::figures::{fig4_speedup, fig5_l2, fig6_overhead, run_one, scaling_rows};
+use srsp::harness::figures::{
+    fig4_speedup, fig5_l2, fig6_overhead, run_one, scaling_rows, sweep_speedup_rows,
+};
 use srsp::harness::presets::{WorkloadPreset, WorkloadSize, DEFAULT_SEED};
 use srsp::harness::report::{format_table, Report, ReportFormat};
 use srsp::harness::runner::{into_run_results, CellResult, Runner};
@@ -34,15 +40,16 @@ COMMANDS:
     table1                 Print the Table-1 simulation parameters
     list-workloads         Print the registered workload table
     list-protocols         Print the registered sync-protocol table
+    list-axes              Print the registered sweep-axis table
     fig4                   Regenerate Fig. 4 (speedup vs Baseline)
     fig5                   Regenerate Fig. 5 (L2 accesses vs Baseline)
     fig6                   Regenerate Fig. 6 (sync overhead vs RSP)
-    sweep                  Scaling sweep: --axis cus (RSP vs sRSP geomean as
-                           CUs grow, the default), --axis remote-ratio
-                           (protocol × r crossover on the stress family,
-                           oracle-gated) or --axis cu-count (protocol ×
-                           device-size crossover on one workload,
-                           oracle-gated)
+    sweep                  Parameter sweep: --axis cus (RSP vs sRSP geomean
+                           as CUs grow, the classic default) or 1-3
+                           registered axes composed into a cross-product
+                           grid (e.g. --axis remote-ratio,cu-count for the
+                           protocol × r × device-size surface), each cell
+                           oracle-gated; see `srsp list-axes`
     run                    Run one workload under one scenario, print stats
     validate               Run every workload/scenario and check the oracles
     ci-smoke               Tiny-scale workload × scenario matrix, oracle-checked
@@ -52,7 +59,7 @@ COMMANDS:
 OPTIONS:
     --app <name>                Workload by registry name (see
                                 `srsp list-workloads`; default prk, or
-                                stress for `sweep --axis remote-ratio`)
+                                stress for registry-axis sweeps)
     --param <k=v>               Override a workload parameter (repeatable;
                                 single-workload commands only)
     --protocol <name>           Run `run` under a protocol's canonical
@@ -63,12 +70,14 @@ OPTIONS:
                                 overflow_threshold; run + sweep commands)
     --scenario <name>           baseline|scope|steal or any protocol name
                                 (rsp|srsp|hlrc|srsp-adaptive; default srsp)
-    --axis <cus|remote-ratio|cu-count>
-                                Sweep axis for `sweep` (default cus)
-    --ratios <r1,r2,...>        remote-ratio sample points in [0, 1]
-                                (default 0,0.05,0.1,0.2,0.4,0.8)
-    --cu-counts <n1,n2,...>     cu-count sample points
-                                (default 4,8,16,32,64)
+    --axis <cus|a1[,a2[,a3]]>   Sweep axes: the classic 'cus' scaling grid,
+                                or up to 3 registered axes composed into a
+                                surface (see `srsp list-axes`; default cus)
+    --points <axis>=<v1,v2,..>  Grid points for one composed axis
+                                (repeatable, one per axis; default: the
+                                axis's registry points)
+    --ratios <r1,r2,...>        Shorthand for --points remote-ratio=...
+    --cu-counts <n1,n2,...>     Shorthand for --points cu-count=...
     --cus <n>                   Override CU count (ci-smoke default: 8)
     --size <tiny|paper>         Workload scale (default paper; ci-smoke: tiny)
     --jobs <n>                  Worker threads for matrix commands
@@ -83,20 +92,26 @@ OPTIONS:
     --config <file>             Device config file (key = value)
 ";
 
-#[derive(Clone, Copy, PartialEq, Eq)]
-enum SweepAxis {
-    Cus,
-    RemoteRatio,
-    CuCount,
+/// What `sweep` runs: the classic fixed CU-scaling grid, or a composed
+/// plan over registered axes.
+#[derive(Clone, PartialEq, Eq)]
+enum SweepSel {
+    /// `--axis cus`: the classic-apps scaling grid with the geomean
+    /// reduction (not a registry axis — it varies apps, not a parameter).
+    Classic,
+    /// 1-3 registered axes, cross-product grid on one workload.
+    Axes(Vec<AxisId>),
 }
 
 struct Opts {
     app: Option<WorkloadId>,
     scenario: Scenario,
     protocol: Option<srsp::config::Protocol>,
-    axis: SweepAxis,
-    ratios: Option<Vec<f64>>,
-    cu_counts: Option<Vec<u32>>,
+    sweep: SweepSel,
+    /// Was `--axis` given explicitly? (Rejected on non-sweep commands.)
+    axis_given: bool,
+    /// Per-axis grid points (`--points`, `--ratios`, `--cu-counts`).
+    points: Vec<(AxisId, Vec<f64>)>,
     params: Vec<(String, f64)>,
     proto_params: Vec<(String, f64)>,
     cus: Option<u32>,
@@ -109,14 +124,54 @@ struct Opts {
     config: Option<String>,
 }
 
+/// Record grid points for `axis`, rejecting duplicates and out-of-domain
+/// values with the originating flag named (shared by `--points` and its
+/// single-axis shorthands).
+fn add_points(
+    points: &mut Vec<(AxisId, Vec<f64>)>,
+    axis: AxisId,
+    pts: Vec<f64>,
+    flag: &str,
+) -> Result<(), String> {
+    if points.iter().any(|(a, _)| *a == axis) {
+        return Err(format!(
+            "{flag}: points for axis '{}' given twice",
+            axis.name()
+        ));
+    }
+    if pts.is_empty() {
+        return Err(format!("{flag} needs at least one point"));
+    }
+    for &v in &pts {
+        axis.axis()
+            .check_point(v)
+            .map_err(|e| format!("{flag}: {e}"))?;
+    }
+    points.push((axis, pts));
+    Ok(())
+}
+
+/// Parse a comma-separated point list as `f64`s.
+fn parse_point_list(v: &str, flag: &str) -> Result<Vec<f64>, String> {
+    let mut pts = Vec::new();
+    for part in v.split(',') {
+        let x: f64 = part
+            .trim()
+            .parse()
+            .map_err(|e| format!("{flag}: bad point '{part}': {e}"))?;
+        pts.push(x);
+    }
+    Ok(pts)
+}
+
 fn parse_opts(args: &[String]) -> Result<Opts, String> {
     let mut o = Opts {
         app: None,
         scenario: Scenario::SRSP,
         protocol: None,
-        axis: SweepAxis::Cus,
-        ratios: None,
-        cu_counts: None,
+        sweep: SweepSel::Classic,
+        axis_given: false,
+        points: Vec::new(),
         params: Vec::new(),
         proto_params: Vec::new(),
         cus: None,
@@ -183,54 +238,61 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
                 o.proto_params.push((k.to_string(), num));
             }
             "--axis" => {
-                o.axis = match val()?.as_str() {
-                    "cus" => SweepAxis::Cus,
-                    "remote-ratio" | "remote_ratio" => SweepAxis::RemoteRatio,
-                    "cu-count" | "cu_count" => SweepAxis::CuCount,
-                    other => {
-                        return Err(format!(
-                            "unknown axis '{other}' (cus|remote-ratio|cu-count)"
-                        ))
+                let v = val()?;
+                o.axis_given = true;
+                if v == "cus" {
+                    o.sweep = SweepSel::Classic;
+                } else {
+                    let mut axes: Vec<AxisId> = Vec::new();
+                    for part in v.split(',') {
+                        let name = part.trim();
+                        let a = axis::resolve(name).ok_or_else(|| {
+                            let names: Vec<&str> = axis::all().map(|id| id.name()).collect();
+                            format!(
+                                "unknown axis '{name}' (registered: {}; or 'cus' for the \
+                                 classic scaling grid)",
+                                names.join(", ")
+                            )
+                        })?;
+                        if axes.contains(&a) {
+                            return Err(format!("--axis: duplicate sweep axis '{}'", a.name()));
+                        }
+                        axes.push(a);
                     }
+                    if axes.len() > MAX_SWEEP_AXES {
+                        return Err(format!(
+                            "--axis: a sweep composes at most {MAX_SWEEP_AXES} axes, got {}",
+                            axes.len()
+                        ));
+                    }
+                    o.sweep = SweepSel::Axes(axes);
                 }
+            }
+            "--points" => {
+                let v = val()?;
+                let (name, list) = v
+                    .split_once('=')
+                    .ok_or_else(|| format!("--points needs <axis>=<v1,v2,...>, got '{v}'"))?;
+                let a = axis::resolve(name.trim()).ok_or_else(|| {
+                    let names: Vec<&str> = axis::all().map(|id| id.name()).collect();
+                    format!(
+                        "--points: unknown axis '{}' (registered: {})",
+                        name.trim(),
+                        names.join(", ")
+                    )
+                })?;
+                let pts = parse_point_list(list, "--points")?;
+                add_points(&mut o.points, a, pts, "--points")?;
             }
             "--ratios" => {
-                let v = val()?;
-                let mut points = Vec::new();
-                for part in v.split(',') {
-                    let r: f64 = part
-                        .trim()
-                        .parse()
-                        .map_err(|e| format!("--ratios: bad point '{part}': {e}"))?;
-                    if !(0.0..=1.0).contains(&r) {
-                        return Err(format!("--ratios: {r} is outside [0, 1]"));
-                    }
-                    points.push(r);
-                }
-                if points.is_empty() {
-                    return Err("--ratios needs at least one point".into());
-                }
-                o.ratios = Some(points);
+                let pts = parse_point_list(&val()?, "--ratios")?;
+                add_points(&mut o.points, axis::REMOTE_RATIO, pts, "--ratios")?;
+            }
+            "--cu-counts" => {
+                let pts = parse_point_list(&val()?, "--cu-counts")?;
+                add_points(&mut o.points, axis::CU_COUNT, pts, "--cu-counts")?;
             }
             "--cus" => o.cus = Some(val()?.parse().map_err(|e| format!("--cus: {e}"))?),
-            "--cu-counts" => {
-                let v = val()?;
-                let mut points = Vec::new();
-                for part in v.split(',') {
-                    let n: u32 = part
-                        .trim()
-                        .parse()
-                        .map_err(|e| format!("--cu-counts: bad point '{part}': {e}"))?;
-                    if n == 0 {
-                        return Err("--cu-counts: points must be > 0".into());
-                    }
-                    points.push(n);
-                }
-                if points.is_empty() {
-                    return Err("--cu-counts needs at least one point".into());
-                }
-                o.cu_counts = Some(points);
-            }
             "--size" => {
                 o.size = match val()?.as_str() {
                     "tiny" => Some(WorkloadSize::Tiny),
@@ -300,31 +362,29 @@ impl Opts {
             Ok(())
         } else {
             Err(format!(
-                "--param applies to single-workload commands (run, sweep --axis remote-ratio), \
+                "--param applies to single-workload commands (run, registry-axis sweeps), \
                  not '{cmd}'"
             ))
         }
     }
 
-    /// Each sweep axis consumes its own point flag (`--ratios`,
-    /// `--cu-counts`) and the cu-count/cus axes vary the device size
-    /// themselves; a flag the selected axis would silently ignore is
-    /// rejected so the user never plots a grid believing it was
-    /// constrained (`--cus` vs `--cu-counts` especially invites the
-    /// mix-up).
+    /// A sweep validates its own flag combination: every `--points`
+    /// entry (including the `--ratios`/`--cu-counts` shorthands) must
+    /// target a selected axis, and `--cus` may not fight an axis that
+    /// varies the device size itself — a flag the sweep would silently
+    /// ignore is rejected so the user never plots a grid believing it
+    /// was constrained (`--cus` vs the cu-count axis especially invites
+    /// the mix-up).
     fn check_axis_flags(&self) -> Result<(), String> {
-        let err = |flag: &str, axis: &str| {
-            Err(format!(
-                "{flag} applies to sweep --axis {axis}; the selected axis would ignore it"
-            ))
-        };
-        match self.axis {
-            SweepAxis::Cus => {
-                if self.ratios.is_some() {
-                    return err("--ratios", "remote-ratio");
-                }
-                if self.cu_counts.is_some() {
-                    return err("--cu-counts", "cu-count");
+        match &self.sweep {
+            SweepSel::Classic => {
+                if let Some((a, _)) = self.points.first() {
+                    return Err(format!(
+                        "points for axis '{}' apply to a registry-axis sweep (e.g. --axis {}); \
+                         --axis cus runs the fixed classic grid",
+                        a.name(),
+                        a.name()
+                    ));
                 }
                 if self.cus.is_some() {
                     return Err(
@@ -334,19 +394,23 @@ impl Opts {
                     );
                 }
             }
-            SweepAxis::RemoteRatio => {
-                if self.cu_counts.is_some() {
-                    return err("--cu-counts", "cu-count");
+            SweepSel::Axes(axes) => {
+                for (a, _) in &self.points {
+                    if !axes.contains(a) {
+                        let selected: Vec<&str> = axes.iter().map(|x| x.name()).collect();
+                        return Err(format!(
+                            "points for axis '{}' apply to sweep --axis {}; the selected \
+                             axes ({}) would ignore them",
+                            a.name(),
+                            a.name(),
+                            selected.join(", ")
+                        ));
+                    }
                 }
-            }
-            SweepAxis::CuCount => {
-                if self.ratios.is_some() {
-                    return err("--ratios", "remote-ratio");
-                }
-                if self.cus.is_some() {
+                if axes.contains(&axis::CU_COUNT) && self.cus.is_some() {
                     return Err(
-                        "--cus conflicts with sweep --axis cu-count (the axis varies the CU \
-                         count; use --cu-counts)"
+                        "--cus conflicts with the cu-count axis (the axis varies the CU \
+                         count; use --points cu-count=...)"
                             .into(),
                     );
                 }
@@ -355,16 +419,15 @@ impl Opts {
         Ok(())
     }
 
-    /// The sweep point flags mean nothing outside `sweep`.
+    /// The sweep flags mean nothing outside `sweep`.
     fn reject_axis_points(&self, cmd: &str) -> Result<(), String> {
-        if self.ratios.is_some() {
-            return Err(format!(
-                "--ratios applies to sweep --axis remote-ratio, not '{cmd}'"
-            ));
+        if self.axis_given {
+            return Err(format!("--axis applies to sweep, not '{cmd}'"));
         }
-        if self.cu_counts.is_some() {
+        if let Some((a, _)) = self.points.first() {
             return Err(format!(
-                "--cu-counts applies to sweep --axis cu-count, not '{cmd}'"
+                "--points/--ratios/--cu-counts (axis '{}') apply to sweep, not '{cmd}'",
+                a.name()
             ));
         }
         Ok(())
@@ -391,8 +454,7 @@ impl Opts {
             Ok(())
         } else {
             Err(format!(
-                "--proto-param applies to run and the remote-ratio/cu-count sweep axes, \
-                 not '{cmd}'"
+                "--proto-param applies to run and the registry-axis sweeps, not '{cmd}'"
             ))
         }
     }
@@ -541,6 +603,69 @@ fn main() {
     }
 }
 
+/// Run a composed registry-axis sweep: build the [`SweepPlan`], execute
+/// the cross-product grid oracle-gated, emit the long-format report and
+/// the human protocol-comparison table.
+fn run_axis_sweep(o: &Opts, axes: &[AxisId]) -> Result<(), String> {
+    let app = o.app.unwrap_or(registry::STRESS);
+    // Surface bad --param keys as a clean CLI error before the runner
+    // (which would panic inside a worker thread).
+    Params::resolve(app.kernel().params(), &o.params).map_err(|e| format!("{}: {e}", app.name()))?;
+    o.check_proto_params(&RATIO_SCENARIOS)?;
+    o.reject_protocol("sweep")?;
+    o.check_axis_flags()?;
+    let mut plan = SweepPlan::new(app, axes)?;
+    for (a, pts) in &o.points {
+        plan = plan.with_points(*a, pts.clone())?;
+    }
+    let cfg = device_config(o)?;
+    let size = o.size.unwrap_or(WorkloadSize::Paper);
+    let axis_names: Vec<&str> = axes.iter().map(|a| a.name()).collect();
+    let combos = plan.combos();
+    eprintln!(
+        "sweep on {} over {} ({} grid points × {} protocols) at {size:?} scale ({} jobs) ...",
+        app.name(),
+        axis_names.join(" × "),
+        combos.len(),
+        plan.scenarios.len(),
+        o.jobs()
+    );
+    let runner = o.runner(cfg, size, true);
+    let results = runner.run_sweep(&plan);
+    emit_report(&results, o)?;
+    let failures = print_validation(&results, o);
+    let rows = sweep_speedup_rows(&plan, &results);
+    let mut header: Vec<String> = axis_names.iter().map(|n| n.to_string()).collect();
+    header.extend([
+        "steal cycles".to_string(),
+        "rsp ×".to_string(),
+        "srsp ×".to_string(),
+    ]);
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let mut row: Vec<String> = r.coords.iter().map(|(_, v)| v.to_string()).collect();
+            row.push(r.steal_cycles.to_string());
+            row.push(format!("{:.3}", r.rsp_speedup));
+            row.push(format!("{:.3}", r.srsp_speedup));
+            row
+        })
+        .collect();
+    human(
+        o,
+        &format!(
+            "Sweep — {} — {} — speedup vs global-scope stealing (steal = 1.0)\n{}",
+            app.display(),
+            axis_names.join(" × "),
+            format_table(&header, &body)
+        ),
+    );
+    if failures > 0 {
+        return Err(format!("{failures} oracle failures in the sweep"));
+    }
+    Ok(())
+}
+
 fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
     match cmd {
         "help" | "--help" | "-h" => print!("{USAGE}"),
@@ -602,6 +727,36 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                 .collect();
             println!("{}", format_table(&header, &rows));
         }
+        "list-axes" => {
+            let header = vec![
+                "name".to_string(),
+                "aliases".to_string(),
+                "domain".to_string(),
+                "default points".to_string(),
+                "drives".to_string(),
+                "summary".to_string(),
+            ];
+            let rows: Vec<Vec<String>> = axis::all()
+                .map(|id| {
+                    let a = id.axis();
+                    let points: Vec<String> =
+                        a.default_points().iter().map(|v| v.to_string()).collect();
+                    let drives = match a.required_param() {
+                        Some(p) => format!("--param {p}"),
+                        None => "device num_cus".to_string(),
+                    };
+                    vec![
+                        a.name().to_string(),
+                        a.aliases().join(","),
+                        a.domain().to_string(),
+                        points.join(","),
+                        drives,
+                        a.summary().to_string(),
+                    ]
+                })
+                .collect();
+            println!("{}", format_table(&header, &rows));
+        }
         "fig4" | "fig5" | "fig6" => {
             o.reject_params(cmd)?;
             o.reject_proto_params(cmd)?;
@@ -630,8 +785,8 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
             };
             human(o, &table.render());
         }
-        "sweep" => match o.axis {
-            SweepAxis::Cus => {
+        "sweep" => match &o.sweep {
+            SweepSel::Classic => {
                 o.reject_params("sweep --axis cus")?;
                 o.reject_proto_params("sweep --axis cus")?;
                 o.reject_protocol("sweep --axis cus")?;
@@ -639,7 +794,7 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                 if o.app.is_some() {
                     return Err(
                         "sweep --axis cus runs the fixed classic grid; --app applies to \
-                         the remote-ratio and cu-count axes"
+                         registry-axis sweeps"
                             .into(),
                     );
                 }
@@ -663,135 +818,7 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                     ),
                 );
             }
-            SweepAxis::RemoteRatio => {
-                let app = o.app.unwrap_or(registry::STRESS);
-                if !app.kernel().params().iter().any(|p| p.key == "remote_ratio") {
-                    return Err(format!(
-                        "workload '{app}' has no remote_ratio parameter (try --app stress)"
-                    ));
-                }
-                // Surface bad --param keys as a clean CLI error before the
-                // runner (which would panic inside a worker thread).
-                Params::resolve(app.kernel().params(), &o.params)
-                    .map_err(|e| format!("{}: {e}", app.name()))?;
-                o.check_proto_params(&RATIO_SCENARIOS)?;
-                o.reject_protocol("sweep --axis remote-ratio")?;
-                o.check_axis_flags()?;
-                let cfg = device_config(o)?;
-                let size = o.size.unwrap_or(WorkloadSize::Paper);
-                let points = match &o.ratios {
-                    Some(p) => p.clone(),
-                    None => RATIO_POINTS.to_vec(),
-                };
-                eprintln!(
-                    "remote-ratio sweep on {} at {size:?} scale, {} CUs: r = {points:?} \
-                     ({} jobs) ...",
-                    app.name(),
-                    cfg.num_cus,
-                    o.jobs()
-                );
-                let runner = o.runner(cfg, size, true);
-                let results = runner.run_remote_ratio_sweep(app, &points);
-                emit_report(&results, o)?;
-                let failures = print_validation(&results, o);
-                let cycles_of = |scenario: Scenario, r: f64| {
-                    results
-                        .iter()
-                        .find(|c| c.cell.scenario == scenario && c.remote_ratio == Some(r))
-                        .map(|c| c.result.stats.cycles as f64)
-                        .expect("sweep grid covers every (scenario, r)")
-                };
-                let body: Vec<Vec<String>> = points
-                    .iter()
-                    .map(|&r| {
-                        let base = cycles_of(Scenario::STEAL_ONLY, r);
-                        vec![
-                            r.to_string(),
-                            format!("{}", base as u64),
-                            format!("{:.3}", base / cycles_of(Scenario::RSP, r)),
-                            format!("{:.3}", base / cycles_of(Scenario::SRSP, r)),
-                        ]
-                    })
-                    .collect();
-                let header = vec![
-                    "r".to_string(),
-                    "steal cycles".to_string(),
-                    "rsp ×".to_string(),
-                    "srsp ×".to_string(),
-                ];
-                human(
-                    o,
-                    &format!(
-                        "Remote-ratio sweep — {} — speedup vs global-scope stealing \
-                         (steal = 1.0)\n{}",
-                        app.display(),
-                        format_table(&header, &body)
-                    ),
-                );
-                if failures > 0 {
-                    return Err(format!("{failures} oracle failures in the remote-ratio sweep"));
-                }
-            }
-            SweepAxis::CuCount => {
-                let app = o.app.unwrap_or(registry::STRESS);
-                Params::resolve(app.kernel().params(), &o.params)
-                    .map_err(|e| format!("{}: {e}", app.name()))?;
-                o.check_proto_params(&RATIO_SCENARIOS)?;
-                o.reject_protocol("sweep --axis cu-count")?;
-                o.check_axis_flags()?;
-                let cfg = device_config(o)?;
-                let size = o.size.unwrap_or(WorkloadSize::Paper);
-                let points = match &o.cu_counts {
-                    Some(p) => p.clone(),
-                    None => CU_POINTS.to_vec(),
-                };
-                eprintln!(
-                    "cu-count sweep on {} at {size:?} scale: cus = {points:?} ({} jobs) ...",
-                    app.name(),
-                    o.jobs()
-                );
-                let runner = o.runner(cfg, size, true);
-                let results = runner.run_cu_count_sweep(app, &points);
-                emit_report(&results, o)?;
-                let failures = print_validation(&results, o);
-                let cycles_of = |scenario: Scenario, n: u32| {
-                    results
-                        .iter()
-                        .find(|c| c.cell.scenario == scenario && c.cell.num_cus == n)
-                        .map(|c| c.result.stats.cycles as f64)
-                        .expect("sweep grid covers every (scenario, cus)")
-                };
-                let body: Vec<Vec<String>> = points
-                    .iter()
-                    .map(|&n| {
-                        let base = cycles_of(Scenario::STEAL_ONLY, n);
-                        vec![
-                            n.to_string(),
-                            format!("{}", base as u64),
-                            format!("{:.3}", base / cycles_of(Scenario::RSP, n)),
-                            format!("{:.3}", base / cycles_of(Scenario::SRSP, n)),
-                        ]
-                    })
-                    .collect();
-                let header = vec![
-                    "CUs".to_string(),
-                    "steal cycles".to_string(),
-                    "rsp ×".to_string(),
-                    "srsp ×".to_string(),
-                ];
-                human(
-                    o,
-                    &format!(
-                        "CU-count sweep — {} — speedup vs global-scope stealing \
-                         (steal = 1.0)\n{}",
-                        app.display(),
-                        format_table(&header, &body)
-                    ),
-                );
-                if failures > 0 {
-                    return Err(format!("{failures} oracle failures in the cu-count sweep"));
-                }
-            }
+            SweepSel::Axes(axes) => run_axis_sweep(o, axes)?,
         },
         "run" => {
             o.reject_axis_points(cmd)?;

@@ -1,0 +1,330 @@
+//! Sweep-axis-registry round-trip: every registered axis is selectable
+//! **by name** from the CLI, axes compose into cross-product surfaces,
+//! and the generic `run_sweep` reproduces the deleted single-axis sweep
+//! paths **exactly**. Mirrors `registry_roundtrip.rs` (workloads) and
+//! `protocol_registry.rs` (protocols) at the sweep layer — the third
+//! registry of the trilogy.
+
+use std::process::Command;
+
+use srsp::config::DeviceConfig;
+use srsp::coordinator::{axis, Cell, Seeding, SweepPlan, RATIO_SCENARIOS};
+use srsp::harness::presets::WorkloadSize;
+use srsp::harness::report::Report;
+use srsp::harness::runner::Runner;
+use srsp::workload::registry;
+
+fn srsp_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_srsp"))
+}
+
+fn tiny_runner() -> Runner {
+    Runner {
+        validate: true,
+        seeding: Seeding::PerCell(5),
+        ..Runner::new(
+            DeviceConfig {
+                num_cus: 4,
+                ..DeviceConfig::small()
+            },
+            WorkloadSize::Tiny,
+            4,
+        )
+    }
+}
+
+#[test]
+fn registry_holds_four_axes() {
+    assert_eq!(axis::all().count(), 4);
+    for name in ["remote-ratio", "cu-count", "hot-set", "migration"] {
+        assert!(axis::resolve(name).is_some(), "{name} must resolve");
+    }
+}
+
+#[test]
+fn list_axes_covers_the_registry() {
+    let out = srsp_bin().arg("list-axes").output().expect("spawn srsp");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for id in axis::all() {
+        assert!(
+            text.contains(id.name()),
+            "'{}' missing from list-axes:\n{text}",
+            id.name()
+        );
+    }
+    // The default points and the driven parameter are self-described.
+    assert!(text.contains("--param remote_ratio"), "{text}");
+    assert!(text.contains("device num_cus"), "{text}");
+}
+
+/// The refactor's acceptance property, remote-ratio side: the generic
+/// `run_sweep` must reproduce what the deleted `run_remote_ratio_sweep`
+/// computed — per point, the exact cells a plain `run_cells` with the
+/// point's parameter override produces, reports included.
+#[test]
+fn single_axis_remote_ratio_equivalent_to_legacy_per_point_grids() {
+    let points = [0.0, 0.5];
+    let runner = tiny_runner();
+    let plan = SweepPlan::new(registry::STRESS, &[axis::REMOTE_RATIO])
+        .unwrap()
+        .with_points(axis::REMOTE_RATIO, points.to_vec())
+        .unwrap();
+    let generic = runner.run_sweep(&plan);
+
+    // Legacy semantics, reconstructed independently: ratio-major cell
+    // order, one shared input per point (seeds ignore both the scenario
+    // and the ratio), the ratio applied as a workload-param override.
+    let mut legacy = Vec::new();
+    for &r in &points {
+        let mut per_point = runner.clone();
+        per_point.params.push(("remote_ratio".to_string(), r));
+        let cells: Vec<Cell> = RATIO_SCENARIOS
+            .iter()
+            .map(|&scenario| Cell {
+                app: registry::STRESS,
+                scenario,
+                num_cus: runner.cfg.num_cus,
+            })
+            .collect();
+        legacy.extend(per_point.run_cells(&cells));
+    }
+
+    assert_eq!(generic.len(), legacy.len());
+    for (g, l) in generic.iter().zip(&legacy) {
+        assert_eq!(g.cell, l.cell);
+        assert_eq!(g.seed, l.seed);
+        assert_eq!(g.params, l.params);
+        assert_eq!(g.remote_ratio, l.remote_ratio);
+        assert_eq!(g.validated, l.validated);
+        assert_eq!(
+            format!("{:?}", g.result),
+            format!("{:?}", l.result),
+            "stats must match at r={:?}",
+            g.remote_ratio
+        );
+    }
+    // Byte-identical reports once the sweep's coordinate column (the
+    // one schema addition of the refactor) is cleared.
+    let mut stripped = generic.clone();
+    for c in &mut stripped {
+        c.axis_values = String::new();
+    }
+    assert_eq!(
+        Report::from_cells(&stripped).to_csv(),
+        Report::from_cells(&legacy).to_csv(),
+        "remote-ratio sweep reports must be byte-identical to the legacy path"
+    );
+    assert_eq!(
+        Report::from_cells(&stripped).to_json(),
+        Report::from_cells(&legacy).to_json()
+    );
+}
+
+/// The refactor's acceptance property, cu-count side: the generic
+/// `run_sweep` must reproduce the deleted `run_cu_count_sweep` — CU-major
+/// order, per-device-size seeds, no parameter overrides.
+#[test]
+fn single_axis_cu_count_equivalent_to_legacy_per_point_grids() {
+    let points = [2u32, 4];
+    let runner = tiny_runner();
+    let plan = SweepPlan::new(registry::STRESS, &[axis::CU_COUNT])
+        .unwrap()
+        .with_points(axis::CU_COUNT, points.iter().map(|&n| f64::from(n)).collect())
+        .unwrap();
+    let generic = runner.run_sweep(&plan);
+
+    let mut legacy = Vec::new();
+    for &n in &points {
+        let cells: Vec<Cell> = RATIO_SCENARIOS
+            .iter()
+            .map(|&scenario| Cell {
+                app: registry::STRESS,
+                scenario,
+                num_cus: n,
+            })
+            .collect();
+        legacy.extend(runner.run_cells(&cells));
+    }
+
+    assert_eq!(generic.len(), legacy.len());
+    for (g, l) in generic.iter().zip(&legacy) {
+        assert_eq!(g.cell, l.cell);
+        assert_eq!(g.seed, l.seed, "per-device-size seed derivation must match");
+        assert_eq!(g.validated, l.validated);
+        assert_eq!(format!("{:?}", g.result), format!("{:?}", l.result));
+    }
+    let mut stripped = generic.clone();
+    for c in &mut stripped {
+        c.axis_values = String::new();
+    }
+    assert_eq!(
+        Report::from_cells(&stripped).to_csv(),
+        Report::from_cells(&legacy).to_csv(),
+        "cu-count sweep reports must be byte-identical to the legacy path"
+    );
+}
+
+#[test]
+fn cli_composed_surface_long_format_csv() {
+    let out = srsp_bin()
+        .args(["sweep", "--axis", "remote-ratio,cu-count", "--size", "tiny"])
+        .args(["--points", "remote-ratio=0,0.5", "--points", "cu-count=2,4"])
+        .args(["--jobs", "2", "--report", "csv"])
+        .output()
+        .expect("spawn srsp");
+    assert!(
+        out.status.success(),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let csv = String::from_utf8_lossy(&out.stdout);
+    let lines: Vec<&str> = csv.lines().collect();
+    assert_eq!(
+        lines.len(),
+        1 + 2 * 2 * 3,
+        "header + 2 ratios × 2 CU counts × 3 protocols"
+    );
+    let columns = Report::CSV_COLUMNS.len();
+    assert_eq!(lines[0], Report::CSV_COLUMNS.join(","));
+    for line in &lines {
+        assert_eq!(line.split(',').count(), columns, "ragged line: {line}");
+    }
+    // Long format: every row carries its full coordinate vector.
+    for line in &lines[1..] {
+        assert!(line.contains("remote-ratio="), "{line}");
+        assert!(line.contains(";cu-count="), "{line}");
+        assert!(line.contains(",true,"), "oracle-validated row: {line}");
+    }
+    assert!(csv.contains("remote-ratio=0.5;cu-count=4"));
+}
+
+#[test]
+fn cli_registry_only_axes_run_end_to_end() {
+    // hot-set and migration exist purely as axis-registry entries; both
+    // must sweep from the CLI by name, oracle-gated, with their
+    // coordinate in the report and the driven parameter in `params`.
+    for (name, key) in [("hot-set", "hot_set"), ("migration", "migration")] {
+        let out = srsp_bin()
+            .args(["sweep", "--axis", name, "--size", "tiny", "--cus", "4"])
+            .args(["--points", &format!("{name}=1,2"), "--jobs", "2"])
+            .args(["--report", "csv"])
+            .output()
+            .expect("spawn srsp");
+        assert!(
+            out.status.success(),
+            "{name}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let csv = String::from_utf8_lossy(&out.stdout);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 1 + 2 * 3, "{name}: header + 2 points × 3 protocols");
+        for line in &lines[1..] {
+            assert!(line.contains(",true,"), "{name} oracle row: {line}");
+        }
+        assert!(csv.contains(&format!("{name}=2")), "{name}: coordinate column");
+        assert!(csv.contains(&format!("{key}=2")), "{name}: params column");
+    }
+}
+
+#[test]
+fn cli_rejects_duplicate_axes_and_orphan_points() {
+    // Duplicate axes in --axis.
+    let out = srsp_bin()
+        .args(["sweep", "--axis", "cu-count,cu-count"])
+        .output()
+        .expect("spawn srsp");
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("duplicate"),
+        "the error must call out the duplicate axis"
+    );
+    // An alias duplicating its canonical name is the same axis.
+    let out = srsp_bin()
+        .args(["sweep", "--axis", "cu-count,cu"])
+        .output()
+        .expect("spawn srsp");
+    assert!(!out.status.success());
+
+    // --points for an axis the sweep does not compose.
+    let out = srsp_bin()
+        .args(["sweep", "--axis", "remote-ratio", "--points", "cu-count=4,8"])
+        .args(["--size", "tiny"])
+        .output()
+        .expect("spawn srsp");
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("cu-count"),
+        "the error must name the orphan axis"
+    );
+
+    // --points repeated for one axis (also via a shorthand).
+    let out = srsp_bin()
+        .args(["sweep", "--axis", "remote-ratio", "--points", "remote-ratio=0"])
+        .args(["--ratios", "0.5"])
+        .output()
+        .expect("spawn srsp");
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("twice"),
+        "the error must flag the repeated points"
+    );
+
+    // More than MAX_SWEEP_AXES composed axes.
+    let out = srsp_bin()
+        .args(["sweep", "--axis", "remote-ratio,cu-count,hot-set,migration"])
+        .output()
+        .expect("spawn srsp");
+    assert!(!out.status.success());
+
+    // Out-of-domain points fail at parse, not mid-run.
+    let out = srsp_bin()
+        .args(["sweep", "--axis", "remote-ratio", "--points", "remote-ratio=1.5"])
+        .output()
+        .expect("spawn srsp");
+    assert!(!out.status.success());
+    let out = srsp_bin()
+        .args(["sweep", "--axis", "cu-count", "--points", "cu-count=2.5"])
+        .output()
+        .expect("spawn srsp");
+    assert!(!out.status.success());
+}
+
+#[test]
+fn cli_rejects_axis_flags_outside_sweep() {
+    for cmd in [
+        &["run", "--app", "stress", "--points", "remote-ratio=0.5"][..],
+        &["validate", "--axis", "remote-ratio"][..],
+        &["fig4", "--points", "hot-set=2"][..],
+    ] {
+        let out = srsp_bin().args(cmd).output().expect("spawn srsp");
+        assert!(!out.status.success(), "{cmd:?} must be rejected");
+    }
+}
+
+#[test]
+fn cli_unknown_axis_lists_the_registered_ones() {
+    let out = srsp_bin()
+        .args(["sweep", "--axis", "bogus"])
+        .output()
+        .expect("spawn srsp");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    for id in axis::all() {
+        assert!(err.contains(id.name()), "error must list '{}':\n{err}", id.name());
+    }
+    assert!(err.contains("cus"), "error must mention the classic grid");
+}
+
+#[test]
+fn cli_workload_without_the_driven_param_is_refused() {
+    let out = srsp_bin()
+        .args(["sweep", "--axis", "hot-set", "--app", "prk", "--size", "tiny"])
+        .output()
+        .expect("spawn srsp");
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("has no hot_set parameter"),
+        "the error must name the missing parameter"
+    );
+}

@@ -3,12 +3,14 @@
 //! report must carry the axis as a first-class column, and the sweep
 //! must actually measure what it claims — sRSP's selective promotion
 //! doing less invalidation work than naive RSP's flush-all at the
-//! remote-heavy end.
+//! remote-heavy end. Since PR 4 the sweep is a one-axis
+//! [`SweepPlan`] through the generic `run_sweep`; the axis itself lives
+//! in the `coordinator::axis` registry.
 
 use std::process::Command;
 
 use srsp::config::{DeviceConfig, Scenario};
-use srsp::coordinator::{remote_ratio_grid, Seeding, RATIO_SCENARIOS};
+use srsp::coordinator::{axis, Seeding, SweepPlan, RATIO_SCENARIOS};
 use srsp::harness::presets::WorkloadSize;
 use srsp::harness::report::Report;
 use srsp::harness::runner::Runner;
@@ -22,14 +24,24 @@ fn tiny_runner() -> Runner {
     }
 }
 
+fn ratio_plan(points: &[f64]) -> SweepPlan {
+    SweepPlan::new(registry::STRESS, &[axis::REMOTE_RATIO])
+        .unwrap()
+        .with_points(axis::REMOTE_RATIO, points.to_vec())
+        .unwrap()
+}
+
 #[test]
 fn all_protocols_pass_oracles_at_every_ratio() {
     let points = [0.0, 0.1, 0.5, 1.0];
-    let results = tiny_runner().run_remote_ratio_sweep(registry::STRESS, &points);
+    let results = tiny_runner().run_sweep(&ratio_plan(&points));
     assert_eq!(results.len(), points.len() * RATIO_SCENARIOS.len());
-    for (c, &(scenario, r)) in results.iter().zip(remote_ratio_grid(&points).iter()) {
+    for (i, c) in results.iter().enumerate() {
+        // Combo-major order: all protocols of one r adjacent.
+        let (r, scenario) = (points[i / 3], RATIO_SCENARIOS[i % 3]);
         assert_eq!(c.cell.scenario, scenario);
         assert_eq!(c.remote_ratio, Some(r));
+        assert_eq!(c.axis_values, format!("remote-ratio={r}"));
         assert_eq!(
             c.validated,
             Some(true),
@@ -39,12 +51,12 @@ fn all_protocols_pass_oracles_at_every_ratio() {
     let csv = Report::from_cells(&results).to_csv();
     assert_eq!(csv.lines().count(), results.len() + 1);
     assert!(csv.contains("remote_ratio"));
+    assert!(csv.contains("axis_values"));
 }
 
 #[test]
 fn srsp_invalidates_less_than_naive_at_the_skewed_end() {
-    let points = [1.0];
-    let results = tiny_runner().run_remote_ratio_sweep(registry::STRESS, &points);
+    let results = tiny_runner().run_sweep(&ratio_plan(&[1.0]));
     let cell = |scenario: Scenario| {
         results
             .iter()
