@@ -20,6 +20,8 @@ pub use file::{parse_config_str, ConfigError};
 // historical `config::Protocol` import path keeps working.
 pub use crate::sync::protocol::Protocol;
 
+use crate::jsonio::{self, Json};
+
 use std::fmt;
 
 /// One evaluation scenario: which synchronization protocol the memory
@@ -323,6 +325,108 @@ impl DeviceConfig {
         Ok(())
     }
 
+    /// JSON encoding for the distributed-pipeline stage files
+    /// ([`ExecutionPlan`](crate::coordinator::ExecutionPlan) /
+    /// [`ShardSpec`](crate::coordinator::shard::ShardSpec)). The
+    /// exhaustive destructuring is the drift guard: adding a
+    /// `DeviceConfig` field without teaching the pipeline about it no
+    /// longer compiles.
+    pub fn to_json(&self) -> Json {
+        let DeviceConfig {
+            num_cus,
+            wgs_per_cu,
+            l1_size,
+            l1_ways,
+            l1_latency,
+            l1_sfifo,
+            l2_size,
+            l2_ways,
+            l2_latency,
+            l2_sfifo,
+            l2_banks,
+            l2_bank_occupancy,
+            xbar_latency,
+            xbar_occupancy,
+            dram_channels,
+            dram_latency,
+            dram_occupancy,
+            lr_tbl_entries,
+            pa_tbl_entries,
+            compute_cycles_per_item,
+            issue_cycles,
+            line_size,
+            proto_params,
+        } = self;
+        Json::Obj(vec![
+            ("num_cus".into(), Json::u32(*num_cus)),
+            ("wgs_per_cu".into(), Json::u32(*wgs_per_cu)),
+            ("l1_size".into(), Json::u32(*l1_size)),
+            ("l1_ways".into(), Json::u32(*l1_ways)),
+            ("l1_latency".into(), Json::u64(*l1_latency)),
+            ("l1_sfifo".into(), Json::u32(*l1_sfifo)),
+            ("l2_size".into(), Json::u32(*l2_size)),
+            ("l2_ways".into(), Json::u32(*l2_ways)),
+            ("l2_latency".into(), Json::u64(*l2_latency)),
+            ("l2_sfifo".into(), Json::u32(*l2_sfifo)),
+            ("l2_banks".into(), Json::u32(*l2_banks)),
+            ("l2_bank_occupancy".into(), Json::u64(*l2_bank_occupancy)),
+            ("xbar_latency".into(), Json::u64(*xbar_latency)),
+            ("xbar_occupancy".into(), Json::u64(*xbar_occupancy)),
+            ("dram_channels".into(), Json::u32(*dram_channels)),
+            ("dram_latency".into(), Json::u64(*dram_latency)),
+            ("dram_occupancy".into(), Json::u64(*dram_occupancy)),
+            ("lr_tbl_entries".into(), Json::u32(*lr_tbl_entries)),
+            ("pa_tbl_entries".into(), Json::u32(*pa_tbl_entries)),
+            (
+                "compute_cycles_per_item".into(),
+                Json::u64(*compute_cycles_per_item),
+            ),
+            ("issue_cycles".into(), Json::u64(*issue_cycles)),
+            ("line_size".into(), Json::u32(*line_size)),
+            ("proto_params".into(), jsonio::pairs_to_json(proto_params)),
+        ])
+    }
+
+    /// Inverse of [`Self::to_json`]; every field is required (a worker
+    /// must never fill gaps with defaults that could diverge from the
+    /// coordinator's) and the result is re-validated.
+    pub fn from_json(v: &Json) -> Result<DeviceConfig, String> {
+        let w = |k: &str| -> Result<u32, String> {
+            v.get(k)?.as_u32().map_err(|e| format!("{k}: {e}"))
+        };
+        let u = |k: &str| -> Result<u64, String> {
+            v.get(k)?.as_u64().map_err(|e| format!("{k}: {e}"))
+        };
+        let cfg = DeviceConfig {
+            num_cus: w("num_cus")?,
+            wgs_per_cu: w("wgs_per_cu")?,
+            l1_size: w("l1_size")?,
+            l1_ways: w("l1_ways")?,
+            l1_latency: u("l1_latency")?,
+            l1_sfifo: w("l1_sfifo")?,
+            l2_size: w("l2_size")?,
+            l2_ways: w("l2_ways")?,
+            l2_latency: u("l2_latency")?,
+            l2_sfifo: w("l2_sfifo")?,
+            l2_banks: w("l2_banks")?,
+            l2_bank_occupancy: u("l2_bank_occupancy")?,
+            xbar_latency: u("xbar_latency")?,
+            xbar_occupancy: u("xbar_occupancy")?,
+            dram_channels: w("dram_channels")?,
+            dram_latency: u("dram_latency")?,
+            dram_occupancy: u("dram_occupancy")?,
+            lr_tbl_entries: w("lr_tbl_entries")?,
+            pa_tbl_entries: w("pa_tbl_entries")?,
+            compute_cycles_per_item: u("compute_cycles_per_item")?,
+            issue_cycles: u("issue_cycles")?,
+            line_size: w("line_size")?,
+            proto_params: jsonio::pairs_from_json(v.get("proto_params")?)
+                .map_err(|e| format!("proto_params: {e}"))?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
     /// Render the Table-1 style parameter listing.
     pub fn table1(&self) -> String {
         format!(
@@ -439,6 +543,32 @@ mod tests {
         // The scoped protocol's canonical scenario is the classic
         // wg-scope no-steal one.
         assert_eq!(Scenario::from_name("scoped"), Some(Scenario::SCOPE_ONLY));
+    }
+
+    #[test]
+    fn device_config_json_round_trips() {
+        let mut cfg = DeviceConfig::small();
+        cfg.proto_params = vec![
+            ("lr_tbl_entries".to_string(), 4.0),
+            ("overflow_threshold".to_string(), 0.25),
+        ];
+        let text = cfg.to_json().render();
+        let v = jsonio::parse(&text).unwrap();
+        assert_eq!(DeviceConfig::from_json(&v).unwrap(), cfg);
+        // Defaults too (empty proto_params).
+        let cfg = DeviceConfig::default();
+        let v = jsonio::parse(&cfg.to_json().render()).unwrap();
+        assert_eq!(DeviceConfig::from_json(&v).unwrap(), cfg);
+        // A missing field is a loud error, never a default.
+        let err = DeviceConfig::from_json(&Json::Obj(vec![])).unwrap_err();
+        assert!(err.contains("num_cus"), "{err}");
+        // An invalid configuration is rejected on load, not at run time.
+        let bad = DeviceConfig {
+            num_cus: 0,
+            ..DeviceConfig::default()
+        };
+        let v = jsonio::parse(&bad.to_json().render()).unwrap();
+        assert!(DeviceConfig::from_json(&v).is_err());
     }
 
     #[test]

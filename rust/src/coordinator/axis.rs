@@ -227,6 +227,45 @@ impl SweepAxis for MigrationAxis {
     }
 }
 
+/// The LR-TBL capacity axis: the first **protocol-parameter** axis —
+/// `apply` drives [`CellSpec::proto_params`] instead of a workload
+/// parameter or the device size. Sweeping the table through undersized
+/// capacities (0 disables it: every selective-flush request degenerates
+/// to a conservative full flush) reproduces the Fig. 5-style
+/// table-pressure study: sRSP's selectivity, and therefore its L2-
+/// traffic edge, collapses as overflows force eager behavior.
+pub struct LrTblEntriesAxis;
+
+impl SweepAxis for LrTblEntriesAxis {
+    fn name(&self) -> &'static str {
+        "lr-tbl-entries"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["lr_tbl_entries", "lr-tbl"]
+    }
+
+    fn summary(&self) -> &'static str {
+        "LR-TBL capacity in entries (0 disables selective tracking)"
+    }
+
+    fn domain(&self) -> &'static str {
+        "whole number >= 0"
+    }
+
+    fn default_points(&self) -> &'static [f64] {
+        &[0.0, 1.0, 2.0, 4.0, 8.0, 16.0]
+    }
+
+    fn check_point(&self, v: f64) -> Result<(), String> {
+        check_count(v, 0.0)
+    }
+
+    fn apply(&self, v: f64, spec: &mut CellSpec) {
+        spec.proto_params.push(("lr_tbl_entries".to_string(), v));
+    }
+}
+
 /// The static axis table. Order is load-bearing for the stable [`AxisId`]
 /// constants below: new axes append, existing ones never reorder.
 pub static AXES: &[&dyn SweepAxis] = &[
@@ -234,6 +273,7 @@ pub static AXES: &[&dyn SweepAxis] = &[
     &CuCountAxis,
     &HotSetAxis,
     &MigrationAxis,
+    &LrTblEntriesAxis,
 ];
 
 /// Stable handle to a registered sweep axis (index into [`AXES`]),
@@ -250,6 +290,8 @@ pub const CU_COUNT: AxisId = AxisId(1);
 pub const HOT_SET: AxisId = AxisId(2);
 /// The hot-set-rotation axis (registry-only entry).
 pub const MIGRATION: AxisId = AxisId(3);
+/// The LR-TBL table-pressure axis (first proto-param axis).
+pub const LR_TBL_ENTRIES: AxisId = AxisId(4);
 
 impl AxisId {
     /// The registered implementation behind this handle.
@@ -317,7 +359,8 @@ mod tests {
         assert_eq!(CU_COUNT.name(), "cu-count");
         assert_eq!(HOT_SET.name(), "hot-set");
         assert_eq!(MIGRATION.name(), "migration");
-        assert_eq!(all().count(), 4);
+        assert_eq!(LR_TBL_ENTRIES.name(), "lr-tbl-entries");
+        assert_eq!(all().count(), 5);
     }
 
     #[test]
@@ -343,6 +386,9 @@ mod tests {
         assert!(CU_COUNT.axis().check_point(8.0).is_ok());
         assert!(HOT_SET.axis().check_point(0.0).is_err());
         assert!(MIGRATION.axis().check_point(0.0).is_ok());
+        assert!(LR_TBL_ENTRIES.axis().check_point(0.0).is_ok());
+        assert!(LR_TBL_ENTRIES.axis().check_point(2.5).is_err());
+        assert!(LR_TBL_ENTRIES.axis().check_point(-1.0).is_err());
     }
 
     #[test]
@@ -352,6 +398,7 @@ mod tests {
         CU_COUNT.axis().apply(8.0, &mut spec);
         HOT_SET.axis().apply(1.0, &mut spec);
         MIGRATION.axis().apply(2.0, &mut spec);
+        LR_TBL_ENTRIES.axis().apply(4.0, &mut spec);
         assert_eq!(spec.num_cus, Some(8));
         assert_eq!(
             spec.params,
@@ -361,7 +408,9 @@ mod tests {
                 ("migration".to_string(), 2.0),
             ]
         );
-        assert!(spec.proto_params.is_empty());
+        // The proto-param axis drives the protocol override channel, not
+        // the workload one.
+        assert_eq!(spec.proto_params, vec![("lr_tbl_entries".to_string(), 4.0)]);
     }
 
     #[test]
@@ -370,5 +419,8 @@ mod tests {
         assert_eq!(HOT_SET.axis().required_param(), Some("hot_set"));
         assert_eq!(MIGRATION.axis().required_param(), Some("migration"));
         assert_eq!(CU_COUNT.axis().required_param(), None);
+        // A proto-param axis constrains the protocol, not the workload:
+        // any swept app is acceptable.
+        assert_eq!(LR_TBL_ENTRIES.axis().required_param(), None);
     }
 }

@@ -6,17 +6,35 @@
 //! migration period — see [`axis`]). This module owns everything about
 //! *which* cells exist and in *what order*, and how workload seeds derive
 //! per cell — the policy half of the split. The execution half
-//! (OS-thread sharding, oracle validation, result reassembly) lives in
+//! (shard execution, oracle validation, result reassembly) lives in
 //! [`crate::harness::runner`] and consumes these cells; every grid cell
 //! is an isolated single-threaded simulation, so the two halves meet
 //! only at the `Cell` and [`SweepPlan`] types.
+//!
+//! Evaluation runs flow through an explicit four-stage pipeline with
+//! serializable boundaries:
+//!
+//! 1. **plan** — this module lowers a [`SweepPlan`] or plain cell list
+//!    into a self-contained [`ExecutionPlan`] (seeds derived, parameter
+//!    overrides folded in, no borrowed state);
+//! 2. **shard** — [`shard::partition`] splits it into deterministic
+//!    [`ShardSpec`](shard::ShardSpec)s;
+//! 3. **execute** — each shard runs in-process (`--jobs`, one thread per
+//!    shard) or as an `srsp worker --shard <file>` subprocess
+//!    (`--workers`) emitting a
+//!    [`PartialReport`](crate::harness::report::PartialReport);
+//! 4. **merge** — [`Report::merge`](crate::harness::report::Report::merge)
+//!    reassembles partial reports in grid order, byte-identical to the
+//!    single-process run for any worker count.
 
 pub mod axis;
+pub mod shard;
 
-use crate::config::Scenario;
+use crate::config::{DeviceConfig, Scenario};
+use crate::jsonio::{self, Json};
 use crate::sim::SplitMix64;
 use crate::sync::protocol;
-use crate::workload::registry::{self, WorkloadId, DEFAULT_SEED};
+use crate::workload::registry::{self, WorkloadId, WorkloadSize, DEFAULT_SEED};
 
 use axis::{AxisId, CellSpec};
 
@@ -130,8 +148,8 @@ pub fn scaling_cells(cus: &[u32]) -> Vec<Cell> {
 pub const RATIO_SCENARIOS: [Scenario; 3] = [Scenario::STEAL_ONLY, Scenario::RSP, Scenario::SRSP];
 
 /// The most axes one sweep composes (a surface plus one extra slice —
-/// beyond that the cross-product grid outgrows a single host; ROADMAP's
-/// distribution item picks it up from there).
+/// beyond that the cross-product grid outgrows a single host even with
+/// `--workers`; multi-host transport is the ROADMAP follow-on).
 pub const MAX_SWEEP_AXES: usize = 3;
 
 /// A composed parameter sweep: one workload swept over the cross-product
@@ -279,6 +297,196 @@ impl SweepCombo {
     }
 }
 
+/// Version tag of the [`ExecutionPlan`]/[`shard::ShardSpec`] file format;
+/// a worker refuses a file from a different coordinator generation
+/// instead of misreading it.
+pub const PLAN_VERSION: u32 = 1;
+
+/// One fully-lowered cell of an [`ExecutionPlan`]: the grid coordinates
+/// plus everything a sweep axis contributed, with the workload seed
+/// already derived. Self-contained — a worker process rebuilds the
+/// exact preset from `(app, size, seed, params)` with no access to the
+/// coordinator's [`Seeding`] or CLI state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlannedCell {
+    pub cell: Cell,
+    /// The workload seed this cell's input generates from.
+    pub seed: u64,
+    /// Full workload-parameter override list the preset builds from: the
+    /// runner's `--param` list first, axis contributions appended after
+    /// (an axis owns its key, so it wins).
+    pub params: Vec<(String, f64)>,
+    /// Axis-contributed protocol-parameter overrides, appended after the
+    /// device config's own (`--proto-param`) list — same precedence rule.
+    pub proto_params: Vec<(String, f64)>,
+    /// Long-format sweep coordinates for the report (empty off-sweep).
+    pub axis_values: String,
+}
+
+impl PlannedCell {
+    pub(crate) fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("app".into(), Json::str(self.cell.app.name())),
+            ("scenario".into(), Json::str(self.cell.scenario.name())),
+            ("cus".into(), Json::u32(self.cell.num_cus)),
+            ("seed".into(), Json::u64(self.seed)),
+            ("params".into(), jsonio::pairs_to_json(&self.params)),
+            ("proto_params".into(), jsonio::pairs_to_json(&self.proto_params)),
+            ("axis_values".into(), Json::str(self.axis_values.clone())),
+        ])
+    }
+
+    pub(crate) fn from_json(v: &Json) -> Result<PlannedCell, String> {
+        let app_name = v.get("app")?.as_str()?;
+        let app = registry::resolve(app_name)
+            .ok_or_else(|| format!("unknown workload '{app_name}' in plan"))?;
+        let scenario_name = v.get("scenario")?.as_str()?;
+        let scenario = Scenario::from_name(scenario_name)
+            .ok_or_else(|| format!("unknown scenario '{scenario_name}' in plan"))?;
+        Ok(PlannedCell {
+            cell: Cell {
+                app,
+                scenario,
+                num_cus: v.get("cus")?.as_u32()?,
+            },
+            seed: v.get("seed")?.as_u64()?,
+            params: jsonio::pairs_from_json(v.get("params")?)?,
+            proto_params: jsonio::pairs_from_json(v.get("proto_params")?)?,
+            axis_values: v.get("axis_values")?.as_str()?.to_string(),
+        })
+    }
+}
+
+pub(crate) fn size_to_name(size: WorkloadSize) -> &'static str {
+    match size {
+        WorkloadSize::Tiny => "tiny",
+        WorkloadSize::Paper => "paper",
+    }
+}
+
+pub(crate) fn size_from_name(name: &str) -> Result<WorkloadSize, String> {
+    match name {
+        "tiny" => Ok(WorkloadSize::Tiny),
+        "paper" => Ok(WorkloadSize::Paper),
+        other => Err(format!("unknown workload size '{other}'")),
+    }
+}
+
+/// Stage 1 of the distributed pipeline: a fully-lowered, self-contained
+/// evaluation run. Everything execution needs is inline — device config,
+/// scale, validation mode and the per-cell seeds/overrides — so the plan
+/// serializes to JSON and crosses process (and eventually host)
+/// boundaries. Every sweep-execution path lowers to this type; there is
+/// no other way to run a grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionPlan {
+    /// Device template; `num_cus` is overridden per cell.
+    pub cfg: DeviceConfig,
+    pub size: WorkloadSize,
+    /// Check every cell against its native oracle.
+    pub validate: bool,
+    /// Cells in grid order — the order the merged report presents.
+    pub cells: Vec<PlannedCell>,
+}
+
+impl ExecutionPlan {
+    /// Lower a plain cell list (the figure/coverage grids): per-cell
+    /// seeds from the runner's [`Seeding`], the runner's `--param` list
+    /// on every cell, no axis contributions.
+    pub fn lower_cells(runner: &Runner, cells: &[Cell]) -> ExecutionPlan {
+        let planned = cells
+            .iter()
+            .map(|&cell| PlannedCell {
+                cell,
+                seed: runner.seeding.seed_for(&cell),
+                params: runner.params.clone(),
+                proto_params: Vec::new(),
+                axis_values: String::new(),
+            })
+            .collect();
+        ExecutionPlan {
+            cfg: runner.cfg.clone(),
+            size: runner.size,
+            validate: runner.validate,
+            cells: planned,
+        }
+    }
+
+    /// Lower a [`SweepPlan`]: the cross-product grid of the plan's axes,
+    /// every combo run under every plan scenario, in combo-major order.
+    /// Seeds ignore the scenario and any parameter-only coordinate
+    /// (those sweeps vary placement over one shared task population);
+    /// per-cell seeding derives a distinct input per device size.
+    pub fn lower_sweep(runner: &Runner, plan: &SweepPlan) -> ExecutionPlan {
+        let mut cells = Vec::new();
+        for combo in plan.combos() {
+            let num_cus = combo.spec.num_cus.unwrap_or(runner.cfg.num_cus);
+            let seed = runner.seeding.seed_for(&Cell {
+                app: plan.app,
+                scenario: Scenario::SRSP,
+                num_cus,
+            });
+            let mut params = runner.params.clone();
+            params.extend_from_slice(&combo.spec.params);
+            for &scenario in &plan.scenarios {
+                cells.push(PlannedCell {
+                    cell: Cell {
+                        app: plan.app,
+                        scenario,
+                        num_cus,
+                    },
+                    seed,
+                    params: params.clone(),
+                    proto_params: combo.spec.proto_params.clone(),
+                    axis_values: combo.axis_values(),
+                });
+            }
+        }
+        ExecutionPlan {
+            cfg: runner.cfg.clone(),
+            size: runner.size,
+            validate: runner.validate,
+            cells,
+        }
+    }
+
+    /// Serialize to the stage-boundary JSON file format.
+    pub fn to_json(&self) -> String {
+        Json::Obj(vec![
+            ("plan_version".into(), Json::u32(PLAN_VERSION)),
+            ("device".into(), self.cfg.to_json()),
+            ("size".into(), Json::str(size_to_name(self.size))),
+            ("validate".into(), Json::Bool(self.validate)),
+            (
+                "cells".into(),
+                Json::Arr(self.cells.iter().map(PlannedCell::to_json).collect()),
+            ),
+        ])
+        .render()
+    }
+
+    /// Parse a stage-boundary JSON file; loud on any malformation.
+    pub fn from_json(text: &str) -> Result<ExecutionPlan, String> {
+        let v = jsonio::parse(text)?;
+        let version = v.get("plan_version")?.as_u32()?;
+        if version != PLAN_VERSION {
+            return Err(format!(
+                "plan file is version {version}, this binary speaks {PLAN_VERSION}"
+            ));
+        }
+        let mut cells = Vec::new();
+        for (i, c) in v.get("cells")?.arr()?.iter().enumerate() {
+            cells.push(PlannedCell::from_json(c).map_err(|e| format!("cell {i}: {e}"))?);
+        }
+        Ok(ExecutionPlan {
+            cfg: DeviceConfig::from_json(v.get("device")?)?,
+            size: size_from_name(v.get("size")?.as_str()?)?,
+            validate: v.get("validate")?.as_bool()?,
+            cells,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -401,6 +609,86 @@ mod tests {
         let plan = SweepPlan::new(registry::STRESS, &[axis::HOT_SET]).unwrap();
         assert_eq!(plan.points(axis::HOT_SET), axis::HOT_SET.axis().default_points());
         assert_eq!(plan.combos().len(), axis::HOT_SET.axis().default_points().len());
+    }
+
+    #[test]
+    fn lowered_sweep_is_self_contained_and_round_trips() {
+        use crate::harness::presets::WorkloadSize;
+
+        let runner = Runner {
+            jobs: 2,
+            seeding: Seeding::PerCell(7),
+            size: WorkloadSize::Tiny,
+            validate: true,
+            params: vec![("tasks".to_string(), 32.0)],
+            cfg: DeviceConfig {
+                num_cus: 4,
+                proto_params: vec![("lr_tbl_entries".to_string(), 2.0)],
+                ..DeviceConfig::small()
+            },
+        };
+        let plan = SweepPlan::new(registry::STRESS, &[axis::REMOTE_RATIO, axis::CU_COUNT])
+            .unwrap()
+            .with_points(axis::REMOTE_RATIO, vec![0.0, 0.5])
+            .unwrap()
+            .with_points(axis::CU_COUNT, vec![2.0, 4.0])
+            .unwrap();
+        let lowered = ExecutionPlan::lower_sweep(&runner, &plan);
+        assert_eq!(lowered.cells.len(), 2 * 2 * RATIO_SCENARIOS.len());
+        assert!(lowered.validate);
+        assert_eq!(lowered.cfg.proto_params.len(), 1, "--proto-param travels in cfg");
+        // Combo-major order: all scenarios of one grid point adjacent;
+        // runner --param first, then the axis override (axis wins).
+        let first = &lowered.cells[0];
+        assert_eq!(first.cell.scenario, RATIO_SCENARIOS[0]);
+        assert_eq!(first.cell.num_cus, 2);
+        assert_eq!(
+            first.params,
+            vec![("tasks".to_string(), 32.0), ("remote_ratio".to_string(), 0.0)]
+        );
+        assert_eq!(first.axis_values, "remote-ratio=0;cu-count=2");
+        // Scenarios of one combo share a seed; device size reseeds.
+        assert_eq!(lowered.cells[0].seed, lowered.cells[2].seed);
+        assert_ne!(lowered.cells[0].seed, lowered.cells[3].seed);
+        // The serialized boundary reproduces the plan exactly.
+        let back = ExecutionPlan::from_json(&lowered.to_json()).unwrap();
+        assert_eq!(back, lowered);
+    }
+
+    #[test]
+    fn lowered_cells_match_the_runner_policy() {
+        use crate::harness::presets::WorkloadSize;
+
+        let runner = Runner::new(DeviceConfig::small(), WorkloadSize::Tiny, 1);
+        let cells = classic_grid(4);
+        let lowered = ExecutionPlan::lower_cells(&runner, &cells);
+        assert_eq!(lowered.cells.len(), cells.len());
+        for (p, c) in lowered.cells.iter().zip(&cells) {
+            assert_eq!(p.cell, *c);
+            assert_eq!(p.seed, runner.seeding.seed_for(c));
+            assert!(p.params.is_empty() && p.proto_params.is_empty());
+            assert_eq!(p.axis_values, "");
+        }
+        let back = ExecutionPlan::from_json(&lowered.to_json()).unwrap();
+        assert_eq!(back, lowered);
+    }
+
+    #[test]
+    fn plan_files_reject_version_and_name_drift() {
+        use crate::harness::presets::WorkloadSize;
+
+        let runner = Runner::new(DeviceConfig::small(), WorkloadSize::Tiny, 1);
+        let lowered = ExecutionPlan::lower_cells(&runner, &classic_grid(4));
+        let text = lowered.to_json();
+        let wrong_version = text.replacen("\"plan_version\":1", "\"plan_version\":999", 1);
+        assert!(ExecutionPlan::from_json(&wrong_version)
+            .unwrap_err()
+            .contains("version"));
+        let wrong_app = text.replacen("\"app\":\"prk\"", "\"app\":\"bogus\"", 1);
+        assert!(ExecutionPlan::from_json(&wrong_app)
+            .unwrap_err()
+            .contains("unknown workload"));
+        assert!(ExecutionPlan::from_json("not json").is_err());
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Stage 2 of the distributed pipeline: partition an [`ExecutionPlan`]
+//! into deterministic, self-contained [`ShardSpec`]s.
+//!
+//! A shard is the unit of executor placement: in-process mode runs one
+//! OS thread per shard, subprocess mode (`sweep --workers N`) writes
+//! each shard to a file and spawns `srsp worker --shard <file>` on it.
+//! Partitioning deals cells out **boustrophedon** (rows of N cells,
+//! alternating left-to-right and right-to-left): adjacent grid cells —
+//! the scenarios of one sweep combo, or one app's cells of a coverage
+//! grid — land on different shards, which spreads the expensive
+//! large-CU cells across executors without any dynamic queue, and the
+//! alternation keeps a shard from locking onto one scenario when N
+//! divides the per-combo scenario count (plain `i mod N` striping would
+//! hand one shard every sRSP cell at `--jobs 3`). The assignment is a
+//! pure function of `(plan, N)`, so the same plan and worker count
+//! always produce identical shards — the report-level determinism gate
+//! (`--workers 2` byte-identical to `--jobs 4`) builds on this.
+//!
+//! Each [`ShardSpec`] embeds the full execution context (device config,
+//! scale, validation mode) plus its cells tagged with their **global
+//! grid index**; the merge stage reassembles rows by that index, so
+//! executors never need to agree on anything but the plan file.
+
+use crate::config::DeviceConfig;
+use crate::jsonio::{self, Json};
+use crate::workload::registry::WorkloadSize;
+
+use super::{size_from_name, size_to_name, ExecutionPlan, PlannedCell, PLAN_VERSION};
+
+/// One executor's slice of an [`ExecutionPlan`] — self-contained, JSON-
+/// serializable, deterministic for a given `(plan, num_shards)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardSpec {
+    /// This shard's index in `0..num_shards`.
+    pub shard: usize,
+    /// How many shards the plan was partitioned into.
+    pub num_shards: usize,
+    /// Cell count of the whole plan (the merge stage's completeness
+    /// denominator).
+    pub total_cells: usize,
+    /// Device template; `num_cus` is overridden per cell.
+    pub cfg: DeviceConfig,
+    pub size: WorkloadSize,
+    pub validate: bool,
+    /// `(global grid index, cell)` pairs, ascending by index.
+    pub cells: Vec<(usize, PlannedCell)>,
+}
+
+/// Partition `plan` into `num_shards` boustrophedon-dealt shards
+/// (clamped to `1..=cell count`, so a 2-cell plan asked for 8 shards
+/// yields 2). Cell `i` sits at column `i mod N` of row `i / N`; even
+/// rows deal columns forward, odd rows backward.
+pub fn partition(plan: &ExecutionPlan, num_shards: usize) -> Vec<ShardSpec> {
+    let n = num_shards.clamp(1, plan.cells.len().max(1));
+    let mut shards: Vec<ShardSpec> = (0..n)
+        .map(|i| ShardSpec {
+            shard: i,
+            num_shards: n,
+            total_cells: plan.cells.len(),
+            cfg: plan.cfg.clone(),
+            size: plan.size,
+            validate: plan.validate,
+            cells: Vec::with_capacity(plan.cells.len().div_ceil(n)),
+        })
+        .collect();
+    for (i, cell) in plan.cells.iter().enumerate() {
+        let (row, col) = (i / n, i % n);
+        let shard = if row % 2 == 0 { col } else { n - 1 - col };
+        shards[shard].cells.push((i, cell.clone()));
+    }
+    shards
+}
+
+impl ShardSpec {
+    /// Serialize to the `srsp worker --shard <file>` format.
+    pub fn to_json(&self) -> String {
+        Json::Obj(vec![
+            ("plan_version".into(), Json::u32(PLAN_VERSION)),
+            ("shard".into(), Json::usize(self.shard)),
+            ("num_shards".into(), Json::usize(self.num_shards)),
+            ("total_cells".into(), Json::usize(self.total_cells)),
+            ("device".into(), self.cfg.to_json()),
+            ("size".into(), Json::str(size_to_name(self.size))),
+            ("validate".into(), Json::Bool(self.validate)),
+            (
+                "cells".into(),
+                Json::Arr(
+                    self.cells
+                        .iter()
+                        .map(|(i, c)| {
+                            Json::Obj(vec![
+                                ("index".into(), Json::usize(*i)),
+                                ("cell".into(), c.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+        .render()
+    }
+
+    /// Parse a shard file; loud on malformation, version drift, or
+    /// indices outside the declared plan shape.
+    pub fn from_json(text: &str) -> Result<ShardSpec, String> {
+        let v = jsonio::parse(text)?;
+        let version = v.get("plan_version")?.as_u32()?;
+        if version != PLAN_VERSION {
+            return Err(format!(
+                "shard file is version {version}, this binary speaks {PLAN_VERSION}"
+            ));
+        }
+        let shard = v.get("shard")?.as_usize()?;
+        let num_shards = v.get("num_shards")?.as_usize()?;
+        let total_cells = v.get("total_cells")?.as_usize()?;
+        if num_shards == 0 || shard >= num_shards {
+            return Err(format!(
+                "shard index {shard} is outside the declared {num_shards} shard(s)"
+            ));
+        }
+        let mut cells = Vec::new();
+        for (i, entry) in v.get("cells")?.arr()?.iter().enumerate() {
+            let index = entry
+                .get("index")
+                .and_then(|x| x.as_usize())
+                .map_err(|e| format!("cell {i}: {e}"))?;
+            if index >= total_cells {
+                return Err(format!(
+                    "cell {i}: grid index {index} is outside the declared {total_cells} cell(s)"
+                ));
+            }
+            let cell =
+                PlannedCell::from_json(entry.get("cell")?).map_err(|e| format!("cell {i}: {e}"))?;
+            cells.push((index, cell));
+        }
+        Ok(ShardSpec {
+            shard,
+            num_shards,
+            total_cells,
+            cfg: DeviceConfig::from_json(v.get("device")?)?,
+            size: size_from_name(v.get("size")?.as_str()?)?,
+            validate: v.get("validate")?.as_bool()?,
+            cells,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{axis, ExecutionPlan, Runner, Seeding, SweepPlan};
+    use crate::workload::registry;
+
+    fn tiny_plan() -> ExecutionPlan {
+        let runner = Runner {
+            seeding: Seeding::PerCell(3),
+            validate: true,
+            ..Runner::new(
+                DeviceConfig {
+                    num_cus: 4,
+                    ..DeviceConfig::small()
+                },
+                WorkloadSize::Tiny,
+                1,
+            )
+        };
+        let plan = SweepPlan::new(registry::STRESS, &[axis::REMOTE_RATIO])
+            .unwrap()
+            .with_points(axis::REMOTE_RATIO, vec![0.0, 0.5])
+            .unwrap();
+        ExecutionPlan::lower_sweep(&runner, &plan)
+    }
+
+    #[test]
+    fn partition_is_deterministic_striped_and_complete() {
+        let plan = tiny_plan(); // 6 cells
+        assert_eq!(plan.cells.len(), 6);
+        let shards = partition(&plan, 4);
+        assert_eq!(shards, partition(&plan, 4), "same plan + count → same shards");
+        assert_eq!(shards.len(), 4);
+        // Boustrophedon: even rows deal forward, odd rows backward.
+        for s in &shards {
+            assert_eq!(s.num_shards, 4);
+            assert_eq!(s.total_cells, 6);
+            for (i, _) in &s.cells {
+                let (row, col) = (i / 4, i % 4);
+                let want = if row % 2 == 0 { col } else { 3 - col };
+                assert_eq!(want, s.shard, "cell {i}");
+            }
+        }
+        // The alternation breaks scenario/shard alignment: with 3 shards
+        // and 3 scenarios per combo, plain striping would pin each shard
+        // to one scenario; here shard 0 sees both ends of the row.
+        let three = partition(&plan, 3);
+        let scenarios: Vec<_> = three[0].cells.iter().map(|(_, c)| c.cell.scenario).collect();
+        assert_eq!(three[0].cells.iter().map(|(i, _)| *i).collect::<Vec<_>>(), vec![0, 5]);
+        assert_ne!(scenarios[0], scenarios[1], "shard must mix scenarios");
+        // Complete and disjoint.
+        let mut seen: Vec<usize> = shards
+            .iter()
+            .flat_map(|s| s.cells.iter().map(|(i, _)| *i))
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..6).collect::<Vec<_>>());
+        // Shard counts clamp to the cell count; one shard carries all.
+        assert_eq!(partition(&plan, 99).len(), 6);
+        let single = partition(&plan, 1);
+        assert_eq!(single.len(), 1);
+        assert_eq!(single[0].cells.len(), 6);
+        assert_eq!(partition(&plan, 0).len(), 1, "0 treated as 1");
+    }
+
+    #[test]
+    fn shard_spec_json_round_trips() {
+        let plan = tiny_plan();
+        for spec in partition(&plan, 3) {
+            let text = spec.to_json();
+            assert_eq!(ShardSpec::from_json(&text).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn shard_files_reject_drift() {
+        let plan = tiny_plan();
+        let spec = &partition(&plan, 2)[1];
+        let text = spec.to_json();
+        let wrong = text.replacen("\"plan_version\":1", "\"plan_version\":0", 1);
+        assert!(ShardSpec::from_json(&wrong).unwrap_err().contains("version"));
+        let wrong = text.replacen("\"shard\":1", "\"shard\":5", 1);
+        assert!(ShardSpec::from_json(&wrong)
+            .unwrap_err()
+            .contains("outside the declared"));
+        let wrong = text.replacen("\"total_cells\":6", "\"total_cells\":1", 1);
+        assert!(ShardSpec::from_json(&wrong)
+            .unwrap_err()
+            .contains("outside the declared"));
+        assert!(ShardSpec::from_json("{}").is_err());
+    }
+}

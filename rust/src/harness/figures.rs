@@ -14,7 +14,7 @@
 //!   sweep benches.
 
 use super::presets::{WorkloadPreset, WorkloadSize};
-use super::report::{format_table, geomean};
+use super::report::{format_table, geomean, Report, ReportRow};
 use super::runner::{into_run_results, CellResult, Runner};
 use crate::config::{DeviceConfig, Scenario};
 use crate::coordinator::axis::AxisId;
@@ -245,25 +245,32 @@ pub struct SweepRow {
 ///
 /// [`RATIO_SCENARIOS`]: crate::coordinator::RATIO_SCENARIOS
 pub fn sweep_speedup_rows(plan: &SweepPlan, results: &[CellResult]) -> Vec<SweepRow> {
+    sweep_speedup_rows_report(plan, &Report::from_cells(results))
+}
+
+/// [`sweep_speedup_rows`] over an already-assembled [`Report`] — the
+/// form the distributed path reduces, where per-cell results live only
+/// inside the workers and the coordinator sees merged report rows. The
+/// in-process path delegates here through [`Report::from_cells`], so the
+/// two modes share one reduction.
+pub fn sweep_speedup_rows_report(plan: &SweepPlan, report: &Report) -> Vec<SweepRow> {
     let per_combo = plan.scenarios.len();
     let combos = plan.combos();
     assert_eq!(
-        results.len(),
+        report.rows.len(),
         combos.len() * per_combo,
-        "results must cover the plan's full grid"
+        "report must cover the plan's full grid"
     );
-    let cycles_of = |chunk: &[CellResult], scenario: Scenario| {
+    let cycles_of = |chunk: &[ReportRow], scenario: Scenario| {
         chunk
             .iter()
-            .find(|c| c.cell.scenario == scenario)
+            .find(|r| r.scenario == scenario.name())
             .unwrap_or_else(|| panic!("sweep table needs the {} scenario", scenario.name()))
-            .result
-            .stats
             .cycles as f64
     };
     combos
         .iter()
-        .zip(results.chunks(per_combo))
+        .zip(report.rows.chunks(per_combo))
         .map(|(combo, chunk)| {
             let steal = cycles_of(chunk, Scenario::STEAL_ONLY);
             SweepRow {

@@ -1,7 +1,8 @@
 //! The evaluation harness: workload presets matched to §5.1, the
-//! regeneration of Table 1 and Figures 4-6, the parallel scenario-matrix
-//! [`runner`] that shards grid cells over OS threads, and the
-//! machine-readable JSON/CSV [`report`] emission.
+//! regeneration of Table 1 and Figures 4-6, the scenario-matrix
+//! [`runner`] that executes pipeline shards (in-process threads or
+//! `srsp worker` subprocesses), and the machine-readable JSON/CSV
+//! [`report`] emission plus the distributed merge stage.
 
 pub mod figures;
 pub mod presets;
@@ -10,8 +11,8 @@ pub mod runner;
 
 pub use figures::{fig4_speedup, fig5_l2, fig6_overhead, scaling_sweep, FigureCell, FigureTable};
 pub use presets::{WorkloadPreset, WorkloadSize, DEFAULT_SEED};
-pub use report::{format_table, geomean, Report, ReportFormat, ReportRow};
-pub use runner::{into_run_results, run_validated, CellResult, Runner};
+pub use report::{format_table, geomean, PartialReport, Report, ReportFormat, ReportRow};
+pub use runner::{execute_plan, execute_shard, into_run_results, run_validated, CellResult, Runner};
 // Grid construction and seeding policy live with the coordinator;
 // re-exported so harness users keep one import root.
 pub use crate::coordinator::{classic_grid, full_grid, Cell, Seeding};

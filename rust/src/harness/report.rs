@@ -1,9 +1,14 @@
-//! Reporting helpers: geomean, table formatting and the machine-readable
+//! Reporting helpers: geomean, table formatting, the machine-readable
 //! JSON/CSV matrix reports emitted by the scenario-matrix runner
-//! (`--report json|csv` on the CLI). Serialization is hand-rolled — no
-//! serde offline — over a fixed flat schema, [`Report::CSV_COLUMNS`].
+//! (`--report json|csv` on the CLI), and the **merge stage** of the
+//! distributed pipeline ([`PartialReport`] → [`Report::merge`]).
+//! Serialization is hand-rolled — no serde offline — over one versioned
+//! flat schema, [`REPORT_SCHEMA`], that the writers, the merger and the
+//! tests all reference.
 
 use std::fmt::Write as _;
+
+use crate::jsonio::{self, Json};
 
 /// Geometric mean of positive values (the paper's summary statistic).
 pub fn geomean(xs: &[f64]) -> f64 {
@@ -119,10 +124,22 @@ pub struct Report {
     pub rows: Vec<ReportRow>,
 }
 
-impl Report {
-    /// The flat report schema, in serialization order (shared by the CSV
-    /// header and the JSON object keys).
-    pub const CSV_COLUMNS: [&'static str; 22] = [
+/// The one versioned report schema: the flat column list in
+/// serialization order (shared by the CSV header and the JSON object
+/// keys) plus a format version the distributed pipeline embeds in every
+/// [`PartialReport`] so a merge never silently mixes generations.
+pub struct ReportSchema {
+    /// Bumped on every column change: v1 = 20 columns, v2 added
+    /// `proto_params`, v3 added `axis_values`.
+    pub version: u32,
+    pub columns: &'static [&'static str],
+}
+
+/// The current report schema. Writers, the merger and the tests all
+/// reference this constant — the column count appears nowhere else.
+pub const REPORT_SCHEMA: ReportSchema = ReportSchema {
+    version: 3,
+    columns: &[
         "app",
         "scenario",
         "cus",
@@ -145,13 +162,15 @@ impl Report {
         "pa_tbl_overflows",
         "selective_flush_nops",
         "selective_flush_drains",
-    ];
+    ],
+};
 
+impl Report {
     /// Render as CSV: a header line plus one line per row. Cell values
     /// are numbers, booleans, bare scenario/app names and `;`-separated
     /// parameter strings — no quoting or escaping is ever needed.
     pub fn to_csv(&self) -> String {
-        let mut out = Self::CSV_COLUMNS.join(",");
+        let mut out = REPORT_SCHEMA.columns.join(",");
         out.push('\n');
         for r in &self.rows {
             let validated = match r.validated {
@@ -194,7 +213,8 @@ impl Report {
         out
     }
 
-    /// Render as a JSON array of flat objects (keys = [`Self::CSV_COLUMNS`]).
+    /// Render as a JSON array of flat objects (keys =
+    /// [`REPORT_SCHEMA`]`.columns`).
     pub fn to_json(&self) -> String {
         let mut out = String::from("[\n");
         for (i, r) in self.rows.iter().enumerate() {
@@ -246,6 +266,242 @@ impl Report {
         out.push_str("]\n");
         out
     }
+
+    /// Stage 4 of the distributed pipeline: reassemble worker partial
+    /// reports into the grid-ordered report. The result is
+    /// byte-identical to the single-process run of the same plan for any
+    /// worker count — the partial-row encoding is lossless, and rows
+    /// land by global grid index. Any gap is a loud error, never a
+    /// short report: missing/duplicate shards, disagreeing run shapes,
+    /// duplicate or missing cell indices all fail the merge.
+    pub fn merge(partials: &[PartialReport]) -> Result<Report, String> {
+        let Some(first) = partials.first() else {
+            return Err("merge needs at least one partial report".into());
+        };
+        let (num_shards, total) = (first.num_shards, first.total_cells);
+        if partials.len() != num_shards {
+            return Err(format!(
+                "merge needs all {num_shards} partial report(s) of the run, got {} — \
+                 a worker is missing",
+                partials.len()
+            ));
+        }
+        let mut seen_shards = vec![false; num_shards];
+        let mut slots: Vec<Option<ReportRow>> = (0..total).map(|_| None).collect();
+        for p in partials {
+            if p.num_shards != num_shards || p.total_cells != total {
+                return Err(format!(
+                    "partial report of shard {} disagrees on the run shape \
+                     ({}/{} vs {num_shards}/{total}): reports from different runs?",
+                    p.shard, p.num_shards, p.total_cells
+                ));
+            }
+            if p.shard >= num_shards {
+                return Err(format!(
+                    "shard index {} is outside the declared {num_shards} shard(s)",
+                    p.shard
+                ));
+            }
+            if seen_shards[p.shard] {
+                return Err(format!("two partial reports claim shard {}", p.shard));
+            }
+            seen_shards[p.shard] = true;
+            for (index, row) in &p.rows {
+                if *index >= total {
+                    return Err(format!(
+                        "shard {}: grid index {index} is outside the declared {total} cell(s)",
+                        p.shard
+                    ));
+                }
+                if slots[*index].is_some() {
+                    return Err(format!("grid cell {index} was reported twice"));
+                }
+                slots[*index] = Some(row.clone());
+            }
+        }
+        let missing = slots.iter().filter(|s| s.is_none()).count();
+        if missing > 0 {
+            let first_gap = slots.iter().position(|s| s.is_none()).unwrap_or(0);
+            return Err(format!(
+                "merge is missing {missing} of {total} cell(s) (first gap at grid index \
+                 {first_gap}): a worker died or emitted a truncated partial report"
+            ));
+        }
+        Ok(Report {
+            rows: slots.into_iter().flatten().collect(),
+        })
+    }
+}
+
+/// One worker's slice of a distributed run: the stage-3 output and
+/// stage-4 input of the pipeline. Rows are tagged with their global grid
+/// index so the merge can reassemble any shard interleaving; the
+/// metadata triple (`shard`, `num_shards`, `total_cells`) lets the merge
+/// prove completeness instead of assuming it.
+///
+/// Unlike [`Report::to_json`], whose `l1_hit_rate` is rounded for
+/// presentation, the partial encoding is **lossless** (shortest
+/// round-trip float rendering, raw `u64`s) — the merged report must be
+/// byte-identical to the single-process run, so nothing may be lost in
+/// transit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartialReport {
+    pub shard: usize,
+    pub num_shards: usize,
+    pub total_cells: usize,
+    /// `(global grid index, row)` pairs, ascending by index.
+    pub rows: Vec<(usize, ReportRow)>,
+}
+
+impl PartialReport {
+    /// Serialize to the worker-output JSON format, stamped with
+    /// [`REPORT_SCHEMA`]`.version`.
+    pub fn to_json(&self) -> String {
+        Json::Obj(vec![
+            ("report_version".into(), Json::u32(REPORT_SCHEMA.version)),
+            ("shard".into(), Json::usize(self.shard)),
+            ("num_shards".into(), Json::usize(self.num_shards)),
+            ("total_cells".into(), Json::usize(self.total_cells)),
+            (
+                "rows".into(),
+                Json::Arr(self.rows.iter().map(|(i, r)| row_to_json(*i, r)).collect()),
+            ),
+        ])
+        .render()
+    }
+
+    /// Parse a worker-output file; loud on malformation or a schema
+    /// version this binary does not speak.
+    pub fn from_json(text: &str) -> Result<PartialReport, String> {
+        let v = jsonio::parse(text)?;
+        let version = v.get("report_version")?.as_u32()?;
+        if version != REPORT_SCHEMA.version {
+            return Err(format!(
+                "partial report has schema version {version}, this binary speaks {}",
+                REPORT_SCHEMA.version
+            ));
+        }
+        let mut rows = Vec::new();
+        for (i, r) in v.get("rows")?.arr()?.iter().enumerate() {
+            rows.push(row_from_json(r).map_err(|e| format!("row {i}: {e}"))?);
+        }
+        Ok(PartialReport {
+            shard: v.get("shard")?.as_usize()?,
+            num_shards: v.get("num_shards")?.as_usize()?,
+            total_cells: v.get("total_cells")?.as_usize()?,
+            rows,
+        })
+    }
+}
+
+/// Lossless JSON encoding of one indexed report row. The exhaustive
+/// destructuring is the drift guard: a new [`ReportRow`] column that is
+/// not carried across the worker boundary no longer compiles.
+fn row_to_json(index: usize, r: &ReportRow) -> Json {
+    let ReportRow {
+        app,
+        scenario,
+        cus,
+        seed,
+        params,
+        proto_params,
+        axis_values,
+        remote_ratio,
+        rounds,
+        converged,
+        validated,
+        cycles,
+        instructions,
+        l1_hit_rate,
+        l2_accesses,
+        sync_overhead_cycles,
+        tasks_executed,
+        tasks_stolen,
+        lr_tbl_overflows,
+        pa_tbl_overflows,
+        selective_flush_nops,
+        selective_flush_drains,
+    } = r;
+    Json::Obj(vec![
+        ("index".into(), Json::usize(index)),
+        ("app".into(), Json::str(app.clone())),
+        ("scenario".into(), Json::str(scenario.clone())),
+        ("cus".into(), Json::u32(*cus)),
+        ("seed".into(), Json::u64(*seed)),
+        ("params".into(), Json::str(params.clone())),
+        ("proto_params".into(), Json::str(proto_params.clone())),
+        ("axis_values".into(), Json::str(axis_values.clone())),
+        (
+            "remote_ratio".into(),
+            match remote_ratio {
+                Some(v) => Json::f64(*v),
+                None => Json::Null,
+            },
+        ),
+        ("rounds".into(), Json::u32(*rounds)),
+        ("converged".into(), Json::Bool(*converged)),
+        (
+            "validated".into(),
+            match validated {
+                Some(b) => Json::Bool(*b),
+                None => Json::Null,
+            },
+        ),
+        ("cycles".into(), Json::u64(*cycles)),
+        ("instructions".into(), Json::u64(*instructions)),
+        ("l1_hit_rate".into(), Json::f64(*l1_hit_rate)),
+        ("l2_accesses".into(), Json::u64(*l2_accesses)),
+        ("sync_overhead_cycles".into(), Json::u64(*sync_overhead_cycles)),
+        ("tasks_executed".into(), Json::u64(*tasks_executed)),
+        ("tasks_stolen".into(), Json::u64(*tasks_stolen)),
+        ("lr_tbl_overflows".into(), Json::u64(*lr_tbl_overflows)),
+        ("pa_tbl_overflows".into(), Json::u64(*pa_tbl_overflows)),
+        ("selective_flush_nops".into(), Json::u64(*selective_flush_nops)),
+        (
+            "selective_flush_drains".into(),
+            Json::u64(*selective_flush_drains),
+        ),
+    ])
+}
+
+fn row_from_json(v: &Json) -> Result<(usize, ReportRow), String> {
+    let opt_f64 = |key: &str| -> Result<Option<f64>, String> {
+        match v.get(key)? {
+            Json::Null => Ok(None),
+            other => other.as_f64().map(Some).map_err(|e| format!("{key}: {e}")),
+        }
+    };
+    let opt_bool = |key: &str| -> Result<Option<bool>, String> {
+        match v.get(key)? {
+            Json::Null => Ok(None),
+            other => other.as_bool().map(Some).map_err(|e| format!("{key}: {e}")),
+        }
+    };
+    let row = ReportRow {
+        app: v.get("app")?.as_str()?.to_string(),
+        scenario: v.get("scenario")?.as_str()?.to_string(),
+        cus: v.get("cus")?.as_u32()?,
+        seed: v.get("seed")?.as_u64()?,
+        params: v.get("params")?.as_str()?.to_string(),
+        proto_params: v.get("proto_params")?.as_str()?.to_string(),
+        axis_values: v.get("axis_values")?.as_str()?.to_string(),
+        remote_ratio: opt_f64("remote_ratio")?,
+        rounds: v.get("rounds")?.as_u32()?,
+        converged: v.get("converged")?.as_bool()?,
+        validated: opt_bool("validated")?,
+        cycles: v.get("cycles")?.as_u64()?,
+        instructions: v.get("instructions")?.as_u64()?,
+        l1_hit_rate: v.get("l1_hit_rate")?.as_f64()?,
+        l2_accesses: v.get("l2_accesses")?.as_u64()?,
+        sync_overhead_cycles: v.get("sync_overhead_cycles")?.as_u64()?,
+        tasks_executed: v.get("tasks_executed")?.as_u64()?,
+        tasks_stolen: v.get("tasks_stolen")?.as_u64()?,
+        lr_tbl_overflows: v.get("lr_tbl_overflows")?.as_u64()?,
+        pa_tbl_overflows: v.get("pa_tbl_overflows")?.as_u64()?,
+        selective_flush_nops: v.get("selective_flush_nops")?.as_u64()?,
+        selective_flush_drains: v.get("selective_flush_drains")?.as_u64()?,
+    };
+    Ok((v.get("index")?.as_usize()?, row))
 }
 
 #[cfg(test)]
@@ -297,11 +553,11 @@ mod tests {
         let csv = sample_report().to_csv();
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 5, "header + 4 rows");
-        assert_eq!(lines[0], Report::CSV_COLUMNS.join(","));
+        assert_eq!(lines[0], REPORT_SCHEMA.columns.join(","));
         for line in &lines {
             assert_eq!(
                 line.split(',').count(),
-                Report::CSV_COLUMNS.len(),
+                REPORT_SCHEMA.columns.len(),
                 "ragged CSV line: {line}"
             );
         }
@@ -322,7 +578,7 @@ mod tests {
         assert!(json.starts_with("[\n"));
         assert!(json.ends_with("]\n"));
         assert_eq!(json.matches("{\"app\":").count(), 4);
-        for key in Report::CSV_COLUMNS {
+        for key in REPORT_SCHEMA.columns {
             assert_eq!(
                 json.matches(&format!("\"{key}\":")).count(),
                 4,
@@ -371,6 +627,115 @@ mod tests {
     #[should_panic]
     fn geomean_rejects_nonpositive() {
         geomean(&[1.0, 0.0]);
+    }
+
+    #[test]
+    fn schema_constant_is_consistent() {
+        // One source of truth: the CSV writer, the JSON writer and the
+        // partial-row codec must all agree with REPORT_SCHEMA.columns.
+        let rep = sample_report();
+        let header = rep.to_csv().lines().next().unwrap().to_string();
+        assert_eq!(header, REPORT_SCHEMA.columns.join(","));
+        let partial = PartialReport {
+            shard: 0,
+            num_shards: 1,
+            total_cells: rep.rows.len(),
+            rows: rep.rows.iter().cloned().enumerate().collect(),
+        };
+        let json = partial.to_json();
+        for key in REPORT_SCHEMA.columns {
+            assert!(json.contains(&format!("\"{key}\":")), "partial rows miss {key}");
+        }
+        assert!(json.contains(&format!("\"report_version\":{}", REPORT_SCHEMA.version)));
+    }
+
+    #[test]
+    fn partial_report_json_round_trips_losslessly() {
+        let mut rep = sample_report();
+        // Values that stress the codec: a full-width u64 seed and floats
+        // with no exact short decimal.
+        rep.rows[0].seed = (1u64 << 63) + 12345;
+        rep.rows[0].l1_hit_rate = 1.0 / 3.0;
+        rep.rows[3].remote_ratio = Some(0.1 + 0.2); // 0.30000000000000004
+        let partial = PartialReport {
+            shard: 1,
+            num_shards: 2,
+            total_cells: 8,
+            rows: rep.rows.iter().cloned().enumerate().map(|(i, r)| (2 * i, r)).collect(),
+        };
+        let back = PartialReport::from_json(&partial.to_json()).unwrap();
+        assert_eq!(back, partial);
+        assert_eq!(back.rows[0].1.seed, (1u64 << 63) + 12345);
+        assert_eq!(back.rows[0].1.l1_hit_rate.to_bits(), (1.0f64 / 3.0).to_bits());
+    }
+
+    #[test]
+    fn merge_reassembles_in_grid_order() {
+        let rep = sample_report();
+        let total = rep.rows.len();
+        // Striped split: shard 0 gets even indices, shard 1 odd.
+        let split = |parity: usize| PartialReport {
+            shard: parity,
+            num_shards: 2,
+            total_cells: total,
+            rows: rep
+                .rows
+                .iter()
+                .cloned()
+                .enumerate()
+                .filter(|(i, _)| i % 2 == parity)
+                .collect(),
+        };
+        // Merge order must not matter.
+        let merged = Report::merge(&[split(1), split(0)]).unwrap();
+        assert_eq!(merged, rep);
+        assert_eq!(merged.to_csv(), rep.to_csv());
+        assert_eq!(merged.to_json(), rep.to_json());
+    }
+
+    #[test]
+    fn merge_failures_are_loud() {
+        let rep = sample_report();
+        let total = rep.rows.len();
+        let shard = |parity: usize| PartialReport {
+            shard: parity,
+            num_shards: 2,
+            total_cells: total,
+            rows: rep
+                .rows
+                .iter()
+                .cloned()
+                .enumerate()
+                .filter(|(i, _)| i % 2 == parity)
+                .collect(),
+        };
+        assert!(Report::merge(&[]).unwrap_err().contains("at least one"));
+        // A missing worker.
+        let err = Report::merge(&[shard(0)]).unwrap_err();
+        assert!(err.contains("a worker is missing"), "{err}");
+        // The same shard twice.
+        let err = Report::merge(&[shard(0), shard(0)]).unwrap_err();
+        assert!(err.contains("shard 0"), "{err}");
+        // A truncated partial: right shard set, rows missing.
+        let mut short = shard(1);
+        short.rows.pop();
+        let err = Report::merge(&[shard(0), short]).unwrap_err();
+        assert!(err.contains("truncated"), "{err}");
+        // Disagreeing run shapes.
+        let mut alien = shard(1);
+        alien.total_cells = total + 1;
+        let err = Report::merge(&[shard(0), alien]).unwrap_err();
+        assert!(err.contains("disagrees"), "{err}");
+        // A duplicated cell index across shards.
+        let mut dup = shard(1);
+        dup.rows[0].0 = 0; // collides with shard 0's first cell
+        let err = Report::merge(&[shard(0), dup]).unwrap_err();
+        assert!(err.contains("twice"), "{err}");
+        // A schema-version mismatch is caught at parse time.
+        let current = format!("\"report_version\":{}", REPORT_SCHEMA.version);
+        let stale = shard(0).to_json().replacen(&current, "\"report_version\":1", 1);
+        let err = PartialReport::from_json(&stale).unwrap_err();
+        assert!(err.contains("schema version 1"), "{err}");
     }
 
     #[test]

@@ -1,18 +1,24 @@
-//! The parallel scenario-matrix runner: the **execution half** of the
-//! evaluation grids.
+//! The scenario-matrix runner: the **execute stage** of the evaluation
+//! pipeline.
 //!
 //! Which cells exist, in what order, and how their seeds derive is the
-//! *distribution policy* and lives in [`crate::coordinator`]; this module
-//! takes a cell list (or a [`SweepPlan`]) and executes it. Every grid
+//! *distribution policy* and lives in [`crate::coordinator`]; this
+//! module executes lowered [`ExecutionPlan`]s. Every grid
 //! [`Cell`](crate::coordinator::Cell) is an independent, single-threaded
 //! simulation — its own [`Device`](crate::gpu::Device), memory image and
-//! workload instance are all constructed inside the worker thread that
-//! executes it — so cells parallelize with no shared mutable state.
-//! Workers pull cell indices from an atomic counter (dynamic load
-//! balancing: the 64-CU sRSP cells cost far more than the 4-CU baseline
-//! cells) and send results back over a channel; results are reassembled
-//! in grid order, so the output is byte-for-byte identical for any
-//! `--jobs` value.
+//! workload instance are all constructed inside the executor that runs
+//! it — so cells parallelize with no shared mutable state.
+//!
+//! All execution flows through the one pipeline: the coordinator lowers
+//! a [`SweepPlan`] or cell list into an [`ExecutionPlan`], the plan is
+//! [partitioned](crate::coordinator::shard::partition) into
+//! deterministic [`ShardSpec`]s, [`execute_shard`] runs one shard
+//! serially in the calling context, and results reassemble by global
+//! grid index. `--jobs N` runs the shards on N in-process threads;
+//! `srsp worker --shard <file>` runs exactly one shard in a subprocess
+//! and emits a [`PartialReport`] — the two executors are the same code
+//! over the same shards, which is what makes a `--workers` merged report
+//! byte-identical to the `--jobs` run.
 //!
 //! Workloads are resolved through the [`crate::workload::registry`] and
 //! sweep dimensions through the [`crate::coordinator::axis`] registry:
@@ -21,19 +27,17 @@
 //! implementations — nothing here matches on a workload, protocol or
 //! axis identity.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::collections::BTreeMap;
 use std::thread;
 
 use super::presets::{WorkloadPreset, WorkloadSize};
-use super::report::{Report, ReportRow};
+use super::report::{PartialReport, Report, ReportRow};
 use crate::config::{DeviceConfig, Scenario};
-use crate::coordinator::{Cell, Seeding, SweepPlan};
+use crate::coordinator::shard::{self, ShardSpec};
+use crate::coordinator::{Cell, ExecutionPlan, PlannedCell, Seeding, SweepPlan};
 use crate::sync::protocol;
 use crate::workload::driver::{run_scenario_seeded, RunResult};
 use crate::workload::engine::NativeMath;
-use crate::workload::registry::WorkloadId;
 
 /// Outcome of one executed cell.
 #[derive(Debug, Clone)]
@@ -101,21 +105,6 @@ pub fn run_validated(
     (run, ok)
 }
 
-/// One fully-specialized, ready-to-execute cell: the grid coordinates
-/// plus everything a sweep axis may have contributed beyond the cell
-/// itself. Plain grid cells carry empty extras — the execution core
-/// never knows whether a sweep produced its input.
-struct Planned<'a> {
-    cell: Cell,
-    preset: &'a WorkloadPreset,
-    /// Axis-contributed protocol-parameter overrides, appended after the
-    /// runner's own (`--proto-param`) list so an axis that owns a key
-    /// wins.
-    proto_params: Vec<(String, f64)>,
-    /// Long-format sweep coordinates for the report (empty off-sweep).
-    axis_values: String,
-}
-
 /// The scenario-matrix runner configuration.
 #[derive(Debug, Clone)]
 pub struct Runner {
@@ -154,203 +143,221 @@ impl Runner {
         thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     }
 
-    /// Build the preset for `app` from this runner's size, params and an
-    /// explicit seed, with `extra` overrides appended (the sweep axes own
-    /// their key, so they win over user `--param`s).
-    fn build_preset(&self, app: WorkloadId, seed: u64, extra: &[(String, f64)]) -> WorkloadPreset {
-        let mut overrides = self.params.clone();
-        overrides.extend_from_slice(extra);
-        WorkloadPreset::with_params(app, self.size, seed, &overrides)
-            .unwrap_or_else(|e| panic!("{e}"))
-    }
-
-    /// Run one standalone cell: generates the input, builds the device,
-    /// simulates and (when enabled) validates, entirely within the
-    /// calling thread.
+    /// Run one standalone cell. Routed through the same plan-lowering as
+    /// every grid — single-cell and sweep paths cannot drift.
     pub fn run_cell(&self, cell: &Cell) -> CellResult {
-        let seed = self.seeding.seed_for(cell);
-        let preset = self.build_preset(cell.app, seed, &[]);
-        self.run_one(&Planned {
-            cell: *cell,
-            preset: &preset,
-            proto_params: Vec::new(),
-            axis_values: String::new(),
-        })
+        let plan = ExecutionPlan::lower_cells(self, std::slice::from_ref(cell));
+        execute_plan(&plan, 1)
+            .pop()
+            .expect("one planned cell yields one result")
     }
 
-    /// Run one planned cell against an already-generated preset (which
-    /// must match the cell's app and the runner's seeding — the grid
-    /// entry points share one preset across all scenarios of a grid
-    /// point instead of regenerating the identical input per scenario).
-    fn run_one(&self, p: &Planned<'_>) -> CellResult {
-        let mut cfg = DeviceConfig {
-            num_cus: p.cell.num_cus,
-            ..self.cfg.clone()
-        };
-        cfg.proto_params.extend_from_slice(&p.proto_params);
-        let (result, validated) = if self.validate {
-            let (run, ok) = run_validated(&cfg, p.preset, p.cell.scenario);
-            (run, Some(ok))
-        } else {
-            let (mut wl, image) = p.preset.instantiate();
-            let (run, _mem) = run_scenario_seeded(
-                &cfg,
-                p.cell.scenario,
-                wl.as_mut(),
-                NativeMath,
-                p.preset.max_rounds,
-                image,
-            );
-            (run, None)
-        };
-        CellResult {
-            cell: p.cell,
-            seed: p.preset.seed,
-            params: p.preset.params.overrides_display(),
-            proto_params: protocol::overrides_display(
-                p.cell.scenario.protocol(),
-                &cfg.proto_params,
-            ),
-            axis_values: p.axis_values.clone(),
-            remote_ratio: p.preset.remote_ratio(),
-            result,
-            validated,
-        }
-    }
-
-    /// Run `cells` across `self.jobs` OS threads. Returns results in
-    /// `cells` order regardless of scheduling, so any jobs count yields
-    /// byte-identical output.
+    /// Run `cells` across `self.jobs` shard-executor threads. Returns
+    /// results in `cells` order regardless of scheduling, so any jobs
+    /// count yields byte-identical output.
     pub fn run_cells(&self, cells: &[Cell]) -> Vec<CellResult> {
-        // Seeds ignore the scenario, so every distinct (app, seed) pair
-        // needs exactly one input: generate each once, up front, and
-        // share it read-only across the workers.
-        let mut presets: HashMap<(WorkloadId, u64), WorkloadPreset> = HashMap::new();
-        for cell in cells {
-            let seed = self.seeding.seed_for(cell);
-            presets
-                .entry((cell.app, seed))
-                .or_insert_with(|| self.build_preset(cell.app, seed, &[]));
-        }
-        let planned: Vec<Planned<'_>> = cells
-            .iter()
-            .map(|c| Planned {
-                cell: *c,
-                preset: &presets[&(c.app, self.seeding.seed_for(c))],
-                proto_params: Vec::new(),
-                axis_values: String::new(),
-            })
-            .collect();
-        self.run_planned(&planned)
+        execute_plan(&ExecutionPlan::lower_cells(self, cells), self.jobs)
     }
 
     /// Execute a [`SweepPlan`]: the cross-product grid of the plan's
     /// axes, every combo run under every plan scenario on one shared
-    /// preset — and therefore one task population — so the resulting
-    /// curve or surface compares protocols on identical inputs. Cells
-    /// run in the plan's combo-major order (all scenarios of one grid
-    /// point adjacent, mirroring the report's row grouping); a one-axis
-    /// plan reproduces the historical single-axis sweep orders exactly.
+    /// input population, so the resulting curve or surface compares
+    /// protocols on identical inputs. Cells run in the plan's
+    /// combo-major order (all scenarios of one grid point adjacent,
+    /// mirroring the report's row grouping); a one-axis plan reproduces
+    /// the historical single-axis sweep orders exactly.
     pub fn run_sweep(&self, plan: &SweepPlan) -> Vec<CellResult> {
-        let combos = plan.combos();
-        let presets: Vec<WorkloadPreset> = combos
-            .iter()
-            .map(|combo| {
-                let num_cus = combo.spec.num_cus.unwrap_or(self.cfg.num_cus);
-                // Seeds ignore the scenario (and any parameter-only
-                // coordinate: those sweeps vary placement over one
-                // shared task population); per-cell seeding derives a
-                // distinct input per device size.
-                let seed = self.seeding.seed_for(&Cell {
-                    app: plan.app,
-                    scenario: Scenario::SRSP,
-                    num_cus,
-                });
-                self.build_preset(plan.app, seed, &combo.spec.params)
-            })
-            .collect();
-        let planned: Vec<Planned<'_>> = combos
-            .iter()
-            .zip(&presets)
-            .flat_map(|(combo, preset)| {
-                let num_cus = combo.spec.num_cus.unwrap_or(self.cfg.num_cus);
-                plan.scenarios.iter().map(move |&scenario| Planned {
-                    cell: Cell {
-                        app: plan.app,
-                        scenario,
-                        num_cus,
-                    },
-                    preset,
-                    proto_params: combo.spec.proto_params.clone(),
-                    axis_values: combo.axis_values(),
-                })
-            })
-            .collect();
-        self.run_planned(&planned)
+        execute_plan(&ExecutionPlan::lower_sweep(self, plan), self.jobs)
     }
+}
 
-    /// The shared sharding core: dynamic work queue over an atomic
-    /// counter, results reassembled in input order.
-    fn run_planned(&self, planned: &[Planned<'_>]) -> Vec<CellResult> {
-        let jobs = self.jobs.clamp(1, planned.len().max(1));
-        let next = AtomicUsize::new(0);
-        let (tx, rx) = mpsc::channel::<(usize, CellResult)>();
-        thread::scope(|scope| {
-            for _ in 0..jobs {
-                let tx = tx.clone();
-                let next = &next;
-                scope.spawn(move || loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    let Some(p) = planned.get(i) else { break };
-                    if tx.send((i, self.run_one(p))).is_err() {
-                        break;
-                    }
-                });
-            }
+/// Stable preset-cache key for one planned cell: presets are shared
+/// between cells exactly when workload, seed and override list agree
+/// (`f64` renders via shortest round-trip `Display`, so the rendering is
+/// injective up to value equality).
+fn preset_key(cell: &PlannedCell) -> (u64, u64, String) {
+    let params: Vec<String> = cell.params.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    (cell.cell.app.ord(), cell.seed, params.join(";"))
+}
+
+/// Generated inputs keyed by [`preset_key`] — one entry per distinct
+/// `(workload, seed, params)` triple, shared read-only by every cell
+/// that agrees on the triple (scenarios of one grid point must compare
+/// on identical inputs — and generation is deterministic, so a worker
+/// process rebuilding the same preset sees the same bytes).
+type PresetCache = BTreeMap<(u64, u64, String), WorkloadPreset>;
+
+/// Generate every distinct input `cells` needs, exactly once each.
+fn build_presets<'a>(
+    size: WorkloadSize,
+    cells: impl Iterator<Item = &'a PlannedCell>,
+) -> PresetCache {
+    let mut presets = PresetCache::new();
+    for pc in cells {
+        presets.entry(preset_key(pc)).or_insert_with(|| {
+            WorkloadPreset::with_params(pc.cell.app, size, pc.seed, &pc.params)
+                .unwrap_or_else(|e| panic!("{e}"))
         });
-        drop(tx);
-        let mut slots: Vec<Option<CellResult>> = planned.iter().map(|_| None).collect();
-        for (i, r) in rx {
-            slots[i] = Some(r);
+    }
+    presets
+}
+
+/// Stage 3 of the pipeline: execute one [`ShardSpec`] serially in the
+/// calling context, in ascending grid-index order, generating the
+/// shard's own inputs (the subprocess executor: a worker shares no
+/// memory with its siblings). Returns `(global grid index, result)`
+/// pairs for reassembly.
+pub fn execute_shard(spec: &ShardSpec) -> Vec<(usize, CellResult)> {
+    let presets = build_presets(spec.size, spec.cells.iter().map(|(_, pc)| pc));
+    execute_shard_with(spec, &presets)
+}
+
+/// [`execute_shard`] against an already-generated preset cache — the
+/// in-process executor generates each distinct input once per *run* and
+/// shares it read-only across all shard threads, like the pre-pipeline
+/// runner did.
+fn execute_shard_with(spec: &ShardSpec, presets: &PresetCache) -> Vec<(usize, CellResult)> {
+    spec.cells
+        .iter()
+        .map(|(index, pc)| (*index, run_planned_cell(spec, pc, &presets[&preset_key(pc)])))
+        .collect()
+}
+
+/// Run one planned cell of a shard against its (already-generated)
+/// preset: build the device, simulate, and (when the shard asks)
+/// validate against the workload's native oracle.
+fn run_planned_cell(spec: &ShardSpec, pc: &PlannedCell, preset: &WorkloadPreset) -> CellResult {
+    let mut cfg = DeviceConfig {
+        num_cus: pc.cell.num_cus,
+        ..spec.cfg.clone()
+    };
+    cfg.proto_params.extend_from_slice(&pc.proto_params);
+    let (result, validated) = if spec.validate {
+        let (run, ok) = run_validated(&cfg, preset, pc.cell.scenario);
+        (run, Some(ok))
+    } else {
+        let (mut wl, image) = preset.instantiate();
+        let (run, _mem) = run_scenario_seeded(
+            &cfg,
+            pc.cell.scenario,
+            wl.as_mut(),
+            NativeMath,
+            preset.max_rounds,
+            image,
+        );
+        (run, None)
+    };
+    CellResult {
+        cell: pc.cell,
+        seed: preset.seed,
+        params: preset.params.overrides_display(),
+        proto_params: protocol::overrides_display(pc.cell.scenario.protocol(), &cfg.proto_params),
+        axis_values: pc.axis_values.clone(),
+        remote_ratio: preset.remote_ratio(),
+        result,
+        validated,
+    }
+}
+
+/// The in-process executor: partition `plan` into `jobs` shards, run
+/// each on its own OS thread through [`execute_shard`], reassemble by
+/// global grid index. One shard stays on the calling thread (serial
+/// semantics, undisturbed panic messages). The shards are the *same*
+/// [`ShardSpec`]s `--workers` would hand to subprocesses — `--jobs` is
+/// just their in-process executor.
+pub fn execute_plan(plan: &ExecutionPlan, jobs: usize) -> Vec<CellResult> {
+    let shards = shard::partition(plan, jobs);
+    // Generate each distinct input once for the whole run, up front;
+    // the shard threads share the cache read-only. (Subprocess workers
+    // regenerate their shard's inputs instead — no shared memory.)
+    let presets = build_presets(plan.size, plan.cells.iter());
+    let indexed: Vec<(usize, CellResult)> = if shards.len() == 1 {
+        execute_shard_with(&shards[0], &presets)
+    } else {
+        thread::scope(|scope| {
+            let presets = &presets;
+            let handles: Vec<_> = shards
+                .iter()
+                .map(|s| scope.spawn(move || execute_shard_with(s, presets)))
+                .collect();
+            let mut all = Vec::with_capacity(plan.cells.len());
+            for h in handles {
+                match h.join() {
+                    Ok(mut part) => all.append(&mut part),
+                    // Re-raise the shard's own panic payload (e.g. a bad
+                    // --param key) instead of a generic join error.
+                    Err(e) => std::panic::resume_unwind(e),
+                }
+            }
+            all
+        })
+    };
+    let mut slots: Vec<Option<CellResult>> = plan.cells.iter().map(|_| None).collect();
+    for (i, r) in indexed {
+        assert!(slots[i].is_none(), "grid cell {i} executed twice");
+        slots[i] = Some(r);
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("a shard exited without covering its cells"))
+        .collect()
+}
+
+impl ReportRow {
+    /// The report projection of one executed cell — the single place a
+    /// [`CellResult`] becomes a row, shared by the whole-run report and
+    /// the per-shard partial reports so the two can never drift.
+    pub fn from_cell(c: &CellResult) -> ReportRow {
+        ReportRow {
+            app: c.result.app.to_string(),
+            scenario: c.result.scenario.name().to_string(),
+            cus: c.cell.num_cus,
+            seed: c.seed,
+            params: c.params.clone(),
+            proto_params: c.proto_params.clone(),
+            axis_values: c.axis_values.clone(),
+            remote_ratio: c.remote_ratio,
+            rounds: c.result.rounds,
+            converged: c.result.converged,
+            validated: c.validated,
+            cycles: c.result.stats.cycles,
+            instructions: c.result.stats.instructions,
+            l1_hit_rate: c.result.stats.l1_hit_rate(),
+            l2_accesses: c.result.stats.l2_accesses,
+            sync_overhead_cycles: c.result.stats.sync_overhead_cycles,
+            tasks_executed: c.result.stats.tasks_executed,
+            tasks_stolen: c.result.stats.tasks_stolen,
+            lr_tbl_overflows: c.result.stats.lr_tbl_overflows,
+            pa_tbl_overflows: c.result.stats.pa_tbl_overflows,
+            selective_flush_nops: c.result.stats.selective_flush_nops,
+            selective_flush_drains: c.result.stats.selective_flush_drains,
         }
-        slots
-            .into_iter()
-            .map(|s| s.expect("worker exited without reporting its cell"))
-            .collect()
     }
 }
 
 impl Report {
     /// Assemble the machine-readable report for a set of executed cells.
     pub fn from_cells(results: &[CellResult]) -> Report {
-        let rows = results
-            .iter()
-            .map(|c| ReportRow {
-                app: c.result.app.to_string(),
-                scenario: c.result.scenario.name().to_string(),
-                cus: c.cell.num_cus,
-                seed: c.seed,
-                params: c.params.clone(),
-                proto_params: c.proto_params.clone(),
-                axis_values: c.axis_values.clone(),
-                remote_ratio: c.remote_ratio,
-                rounds: c.result.rounds,
-                converged: c.result.converged,
-                validated: c.validated,
-                cycles: c.result.stats.cycles,
-                instructions: c.result.stats.instructions,
-                l1_hit_rate: c.result.stats.l1_hit_rate(),
-                l2_accesses: c.result.stats.l2_accesses,
-                sync_overhead_cycles: c.result.stats.sync_overhead_cycles,
-                tasks_executed: c.result.stats.tasks_executed,
-                tasks_stolen: c.result.stats.tasks_stolen,
-                lr_tbl_overflows: c.result.stats.lr_tbl_overflows,
-                pa_tbl_overflows: c.result.stats.pa_tbl_overflows,
-                selective_flush_nops: c.result.stats.selective_flush_nops,
-                selective_flush_drains: c.result.stats.selective_flush_drains,
-            })
-            .collect();
-        Report { rows }
+        Report {
+            rows: results.iter().map(ReportRow::from_cell).collect(),
+        }
+    }
+}
+
+impl PartialReport {
+    /// Package one executed shard as the worker-boundary artifact
+    /// (stage-3 output): rows tagged with their global grid index, plus
+    /// the run shape the merge stage checks completeness against.
+    pub fn from_shard(spec: &ShardSpec, results: &[(usize, CellResult)]) -> PartialReport {
+        PartialReport {
+            shard: spec.shard,
+            num_shards: spec.num_shards,
+            total_cells: spec.total_cells,
+            rows: results
+                .iter()
+                .map(|(i, c)| (*i, ReportRow::from_cell(c)))
+                .collect(),
+        }
     }
 }
 
@@ -570,6 +577,28 @@ mod tests {
             Report::from_cells(&serial).to_csv(),
             Report::from_cells(&parallel).to_csv()
         );
+    }
+
+    #[test]
+    fn sharded_partials_merge_byte_identical_to_in_process() {
+        // The pipeline's acceptance property at the library level: for
+        // any shard count, executing the shards separately and merging
+        // their (JSON-round-tripped) partial reports reproduces the
+        // in-process report byte for byte.
+        let runner = tiny_runner(4, Seeding::PerCell(9), true);
+        let cells = classic_grid(4);
+        let direct = Report::from_cells(&runner.run_cells(&cells));
+        let plan = ExecutionPlan::lower_cells(&runner, &cells);
+        for workers in [1, 2, 4] {
+            let partials: Vec<PartialReport> = shard::partition(&plan, workers)
+                .iter()
+                .map(|s| PartialReport::from_shard(s, &execute_shard(s)))
+                .map(|p| PartialReport::from_json(&p.to_json()).expect("partial round-trip"))
+                .collect();
+            let merged = Report::merge(&partials).unwrap();
+            assert_eq!(merged.to_csv(), direct.to_csv(), "{workers} workers");
+            assert_eq!(merged.to_json(), direct.to_json(), "{workers} workers");
+        }
     }
 
     #[test]

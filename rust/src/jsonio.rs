@@ -1,0 +1,520 @@
+//! Minimal JSON reader/writer for the distributed-pipeline stage
+//! boundaries.
+//!
+//! The plan → shard → execute → merge pipeline crosses process
+//! boundaries as files: [`ExecutionPlan`](crate::coordinator::ExecutionPlan)
+//! and [`ShardSpec`](crate::coordinator::shard::ShardSpec) going down to
+//! `srsp worker` subprocesses, [`PartialReport`](crate::harness::report::PartialReport)
+//! coming back up. No serde is available offline (the crate builds with
+//! zero dependencies), so — like the config-file parser and the report
+//! emitters — the tree is hand-rolled.
+//!
+//! One representation choice is load-bearing: [`Json::Num`] stores the
+//! **raw number token**, not an `f64`. Workload seeds are full-width
+//! `u64`s (beyond `f64`'s 2^53 integer range) and the merged report must
+//! be byte-identical to the single-process run, so numbers must survive
+//! a serialize → parse round trip with zero loss. `u64`s are written via
+//! `Display` and re-parsed as `u64`; `f64`s are written via `Display`
+//! (Rust's shortest round-trip float rendering) and re-parsed as `f64`.
+
+use std::fmt::Write as _;
+
+/// One JSON value. Numbers keep their raw source token (see module doc).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// Raw number token exactly as written or parsed.
+    Num(String),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn u64(v: u64) -> Json {
+        Json::Num(v.to_string())
+    }
+
+    pub fn u32(v: u32) -> Json {
+        Json::Num(v.to_string())
+    }
+
+    pub fn usize(v: usize) -> Json {
+        Json::Num(v.to_string())
+    }
+
+    /// Shortest round-trip rendering; JSON has no NaN/infinity, and no
+    /// pipeline value is ever non-finite (parameters are range-checked).
+    pub fn f64(v: f64) -> Json {
+        assert!(v.is_finite(), "JSON cannot carry non-finite number {v}");
+        Json::Num(v.to_string())
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            Json::Null => "null",
+            Json::Bool(_) => "bool",
+            Json::Num(_) => "number",
+            Json::Str(_) => "string",
+            Json::Arr(_) => "array",
+            Json::Obj(_) => "object",
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool, String> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            other => Err(format!("expected bool, got {}", other.kind())),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64, String> {
+        match self {
+            Json::Num(raw) => raw
+                .parse()
+                .map_err(|_| format!("expected unsigned integer, got '{raw}'")),
+            other => Err(format!("expected number, got {}", other.kind())),
+        }
+    }
+
+    pub fn as_u32(&self) -> Result<u32, String> {
+        match self {
+            Json::Num(raw) => raw
+                .parse()
+                .map_err(|_| format!("expected u32, got '{raw}'")),
+            other => Err(format!("expected number, got {}", other.kind())),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize, String> {
+        match self {
+            Json::Num(raw) => raw
+                .parse()
+                .map_err(|_| format!("expected index, got '{raw}'")),
+            other => Err(format!("expected number, got {}", other.kind())),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64, String> {
+        match self {
+            Json::Num(raw) => raw
+                .parse()
+                .map_err(|_| format!("expected number, got '{raw}'")),
+            other => Err(format!("expected number, got {}", other.kind())),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str, String> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => Err(format!("expected string, got {}", other.kind())),
+        }
+    }
+
+    pub fn arr(&self) -> Result<&[Json], String> {
+        match self {
+            Json::Arr(items) => Ok(items),
+            other => Err(format!("expected array, got {}", other.kind())),
+        }
+    }
+
+    /// Field lookup on an object; a missing key is a loud error naming it.
+    pub fn get(&self, key: &str) -> Result<&Json, String> {
+        match self {
+            Json::Obj(fields) => fields
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v)
+                .ok_or_else(|| format!("missing field '{key}'")),
+            other => Err(format!("expected object with '{key}', got {}", other.kind())),
+        }
+    }
+
+    /// Render to compact JSON text (no trailing newline).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(raw) => out.push_str(raw),
+            Json::Str(s) => write_string(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_string(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                write!(out, "\\u{:04x}", c as u32).expect("writing to a String cannot fail");
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// `[["k", v], ...]` encoding of a parameter-override list (`--param` /
+/// `--proto-param` pairs), order-preserving — override precedence is
+/// positional, so a map encoding would corrupt it.
+pub fn pairs_to_json(pairs: &[(String, f64)]) -> Json {
+    Json::Arr(
+        pairs
+            .iter()
+            .map(|(k, v)| Json::Arr(vec![Json::str(k.clone()), Json::f64(*v)]))
+            .collect(),
+    )
+}
+
+/// Inverse of [`pairs_to_json`].
+pub fn pairs_from_json(v: &Json) -> Result<Vec<(String, f64)>, String> {
+    let mut pairs = Vec::new();
+    for item in v.arr()? {
+        let pair = item.arr()?;
+        if pair.len() != 2 {
+            return Err(format!(
+                "parameter pair must be [key, value], got {} element(s)",
+                pair.len()
+            ));
+        }
+        pairs.push((pair[0].as_str()?.to_string(), pair[1].as_f64()?));
+    }
+    Ok(pairs)
+}
+
+/// Parse one JSON document; trailing non-whitespace is an error.
+pub fn parse(text: &str) -> Result<Json, String> {
+    let mut p = Parser {
+        bytes: text.as_bytes(),
+        pos: 0,
+    };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing content after the JSON document"));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn err(&self, msg: impl std::fmt::Display) -> String {
+        format!("JSON byte {}: {msg}", self.pos)
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(format!("expected '{word}'")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(self.err(format!("unexpected character '{}'", c as char))),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E') | Some(b'0'..=b'9')
+        ) {
+            self.pos += 1;
+        }
+        let raw = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ASCII slice");
+        // Validate the token now so accessors can assume a number shape.
+        raw.parse::<f64>()
+            .map_err(|_| self.err(format!("invalid number '{raw}'")))?;
+        Ok(Json::Num(raw.to_string()))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let Some(b) = self.peek() else {
+                return Err(self.err("unterminated string"));
+            };
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let Some(e) = self.peek() else {
+                        return Err(self.err("unterminated escape"));
+                    };
+                    self.pos += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            if self.pos + 4 > self.bytes.len() {
+                                return Err(self.err("truncated \\u escape"));
+                            }
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+                                .map_err(|_| self.err("non-ASCII \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err(format!("invalid \\u escape '{hex}'")))?;
+                            self.pos += 4;
+                            // Surrogate pairs never occur in pipeline data
+                            // (names and k=v strings are ASCII).
+                            let c = char::from_u32(code)
+                                .ok_or_else(|| self.err(format!("invalid code point {code:#x}")))?;
+                            s.push(c);
+                        }
+                        other => {
+                            return Err(self.err(format!("bad escape '\\{}'", other as char)));
+                        }
+                    }
+                }
+                _ => {
+                    // Multi-byte UTF-8: copy the full scalar value.
+                    let start = self.pos - 1;
+                    let width = utf8_width(b);
+                    self.pos = start + width;
+                    if self.pos > self.bytes.len() {
+                        return Err(self.err("truncated UTF-8 sequence"));
+                    }
+                    let chunk = std::str::from_utf8(&self.bytes[start..self.pos])
+                        .map_err(|_| self.err("invalid UTF-8 in string"))?;
+                    s.push_str(chunk);
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let value = self.value()?;
+            fields.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+}
+
+/// Byte length of the UTF-8 sequence starting with `first`.
+fn utf8_width(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_round_trip() {
+        for text in ["null", "true", "false", "0", "-1.5", "\"hi\""] {
+            let v = parse(text).unwrap();
+            assert_eq!(v.render(), text);
+        }
+        assert_eq!(parse("null").unwrap(), Json::Null);
+        assert!(parse("true").unwrap().as_bool().unwrap());
+        assert_eq!(parse("\"a b\"").unwrap().as_str().unwrap(), "a b");
+    }
+
+    #[test]
+    fn u64_seeds_survive_beyond_f64_precision() {
+        // 2^63 + 1 is not representable as f64; the raw-token Num must
+        // carry it losslessly — the property the whole pipeline rests on.
+        let seed = (1u64 << 63) + 1;
+        let v = Json::u64(seed);
+        let back = parse(&v.render()).unwrap();
+        assert_eq!(back.as_u64().unwrap(), seed);
+    }
+
+    #[test]
+    fn f64_shortest_display_round_trips() {
+        for x in [0.1, 0.25, 1.0 / 3.0, 1e-9, 123456.789, 0.0] {
+            let back = parse(&Json::f64(x).render()).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} must round-trip exactly");
+        }
+    }
+
+    #[test]
+    fn nested_structures_round_trip() {
+        let v = Json::Obj(vec![
+            ("name".into(), Json::str("remote-ratio")),
+            ("points".into(), Json::Arr(vec![Json::f64(0.0), Json::f64(0.5)])),
+            ("nested".into(), Json::Obj(vec![("ok".into(), Json::Bool(true))])),
+            ("none".into(), Json::Null),
+        ]);
+        let text = v.render();
+        assert_eq!(parse(&text).unwrap(), v);
+        assert_eq!(v.get("name").unwrap().as_str().unwrap(), "remote-ratio");
+        assert_eq!(v.get("points").unwrap().arr().unwrap().len(), 2);
+        assert!(v.get("missing").unwrap_err().contains("missing"));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = Json::str("a\"b\\c\nd\te");
+        let text = v.render();
+        assert_eq!(text, "\"a\\\"b\\\\c\\nd\\te\"");
+        assert_eq!(parse(&text).unwrap(), v);
+        // Standard escapes parse even when the writer would not emit them.
+        assert_eq!(parse("\"\\u0041\\/\"").unwrap().as_str().unwrap(), "A/");
+        // Non-ASCII passes through unescaped.
+        let v = Json::str("ölçek");
+        assert_eq!(parse(&v.render()).unwrap(), v);
+    }
+
+    #[test]
+    fn pairs_round_trip_preserving_order() {
+        let pairs = vec![
+            ("remote_ratio".to_string(), 0.5),
+            ("hot_set".to_string(), 2.0),
+            ("remote_ratio".to_string(), 0.75), // later override wins: order matters
+        ];
+        let back = pairs_from_json(&pairs_to_json(&pairs)).unwrap();
+        assert_eq!(back, pairs);
+        assert_eq!(pairs_from_json(&pairs_to_json(&[])).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn malformed_documents_are_loud() {
+        for bad in [
+            "", "{", "[1,", "{\"a\":}", "tru", "\"unterminated", "1 2", "{\"a\" 1}", "[1 2]",
+            "nanana", "--5",
+        ] {
+            assert!(parse(bad).is_err(), "'{bad}' must not parse");
+        }
+        assert!(Json::Null.as_u64().is_err());
+        assert!(Json::Num("1.5".into()).as_u64().is_err());
+        assert!(Json::Num("-1".into()).as_u32().is_err());
+    }
+
+    #[test]
+    fn whitespace_tolerated_between_tokens() {
+        let v = parse(" {\n \"a\" : [ 1 , 2 ] ,\t\"b\" : { } }\n").unwrap();
+        assert_eq!(v.get("a").unwrap().arr().unwrap().len(), 2);
+        assert_eq!(v.get("b").unwrap(), &Json::Obj(vec![]));
+    }
+}

@@ -38,6 +38,7 @@ pub mod config;
 pub mod coordinator;
 pub mod gpu;
 pub mod harness;
+pub mod jsonio;
 pub mod kir;
 pub mod mem;
 pub mod params;

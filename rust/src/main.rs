@@ -8,25 +8,29 @@
 //! [`srsp::sync::protocol`], sweep dimensions through
 //! [`srsp::coordinator::axis`] — adding an entry to any registry makes
 //! it reachable from every subcommand with no CLI changes. Everything
-//! matrix-shaped (figures, sweeps, validation, the CI smoke gate) is
-//! sharded across OS threads by the scenario-matrix runner
-//! ([`srsp::harness::runner`]); `--jobs N` controls the worker count and
-//! results are byte-identical for every N. No external CLI crate is
-//! available offline; parsing is hand-rolled.
+//! matrix-shaped (figures, sweeps, validation, the CI smoke gate) flows
+//! through one plan → shard → execute → merge pipeline
+//! ([`srsp::coordinator`] + [`srsp::harness::runner`]): `--jobs N` runs
+//! the shards on in-process threads, `sweep --workers N` runs them as
+//! spawned `srsp worker` subprocesses — and the merged report is
+//! byte-identical either way. No external CLI crate is available
+//! offline; parsing is hand-rolled.
 
+use std::process::Command;
 use std::time::Instant;
 
 use srsp::config::{parse_config_str, DeviceConfig, Scenario};
 use srsp::coordinator::axis::{self, AxisId};
 use srsp::coordinator::{
-    classic_grid, full_grid, scaling_cells, Seeding, SweepPlan, MAX_SWEEP_AXES, RATIO_SCENARIOS,
+    classic_grid, full_grid, scaling_cells, shard, ExecutionPlan, Seeding, SweepPlan,
+    MAX_SWEEP_AXES, RATIO_SCENARIOS,
 };
 use srsp::harness::figures::{
-    fig4_speedup, fig5_l2, fig6_overhead, run_one, scaling_rows, sweep_speedup_rows,
+    fig4_speedup, fig5_l2, fig6_overhead, run_one, scaling_rows, sweep_speedup_rows_report,
 };
 use srsp::harness::presets::{WorkloadPreset, WorkloadSize, DEFAULT_SEED};
-use srsp::harness::report::{format_table, Report, ReportFormat};
-use srsp::harness::runner::{into_run_results, CellResult, Runner};
+use srsp::harness::report::{format_table, PartialReport, Report, ReportFormat};
+use srsp::harness::runner::{execute_shard, into_run_results, Runner};
 use srsp::sync::protocol;
 use srsp::workload::graph::Graph;
 use srsp::workload::registry::{self, Params, WorkloadId};
@@ -54,6 +58,11 @@ COMMANDS:
     validate               Run every workload/scenario and check the oracles
     ci-smoke               Tiny-scale workload × scenario matrix, oracle-checked
                            in parallel; exits non-zero on any mismatch
+    worker                 Execute one shard file (spawned by sweep --workers;
+                           also usable by an external launcher), emitting a
+                           PartialReport JSON
+    merge-reports          Merge worker PartialReport files into the final
+                           grid-ordered report; fails loudly on any gap
     help                   Show this message
 
 OPTIONS:
@@ -80,8 +89,15 @@ OPTIONS:
     --cu-counts <n1,n2,...>     Shorthand for --points cu-count=...
     --cus <n>                   Override CU count (ci-smoke default: 8)
     --size <tiny|paper>         Workload scale (default paper; ci-smoke: tiny)
-    --jobs <n>                  Worker threads for matrix commands
-                                (default: all available cores)
+    --jobs <n>                  In-process executor threads for matrix
+                                commands (default: all available cores)
+    --workers <n>               Distribute a registry-axis sweep over <n>
+                                `srsp worker` subprocesses instead of
+                                in-process threads; the merged report is
+                                byte-identical to the --jobs run
+    --shard <file>              ShardSpec input for the worker command
+    --partial <file>            PartialReport input for merge-reports
+                                (repeatable, one per worker)
     --seed <n>                  Derive a distinct workload seed per grid
                                 cell from base <n> (decimal or 0x hex);
                                 omit to use the classic shared seed that
@@ -117,6 +133,12 @@ struct Opts {
     cus: Option<u32>,
     size: Option<WorkloadSize>,
     jobs: Option<usize>,
+    /// Subprocess executor count for distributed sweeps (`--workers`).
+    workers: Option<usize>,
+    /// ShardSpec input file (`worker` command only).
+    shard: Option<String>,
+    /// PartialReport input files (`merge-reports` command only).
+    partials: Vec<String>,
     seed: Option<u64>,
     report: Option<ReportFormat>,
     out: Option<String>,
@@ -177,6 +199,9 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
         cus: None,
         size: None,
         jobs: None,
+        workers: None,
+        shard: None,
+        partials: Vec::new(),
         seed: None,
         report: None,
         out: None,
@@ -301,6 +326,15 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
                 }
             }
             "--jobs" => o.jobs = Some(val()?.parse().map_err(|e| format!("--jobs: {e}"))?),
+            "--workers" => {
+                let n: usize = val()?.parse().map_err(|e| format!("--workers: {e}"))?;
+                if n == 0 {
+                    return Err("--workers needs at least 1".into());
+                }
+                o.workers = Some(n);
+            }
+            "--shard" => o.shard = Some(val()?),
+            "--partial" => o.partials.push(val()?),
             "--seed" => o.seed = Some(parse_u64(&val()?).map_err(|e| format!("--seed: {e}"))?),
             "--report" => {
                 let v = val()?;
@@ -480,6 +514,31 @@ impl Opts {
         Ok(())
     }
 
+    /// The distributed-pipeline flags each belong to exactly one
+    /// command; anywhere else they would be silently ignored, so they
+    /// are rejected up front like the other scoped flags.
+    fn check_distributed_flags(&self, cmd: &str) -> Result<(), String> {
+        if self.workers.is_some() && cmd != "sweep" {
+            return Err(format!(
+                "--workers applies to registry-axis sweeps, not '{cmd}'"
+            ));
+        }
+        if self.workers.is_some() && self.jobs.is_some() {
+            return Err(
+                "--jobs selects in-process executor threads; with --workers each subprocess \
+                 executes its shard serially — pick one"
+                    .into(),
+            );
+        }
+        if self.shard.is_some() && cmd != "worker" {
+            return Err(format!("--shard applies to worker, not '{cmd}'"));
+        }
+        if !self.partials.is_empty() && cmd != "merge-reports" {
+            return Err(format!("--partial applies to merge-reports, not '{cmd}'"));
+        }
+        Ok(())
+    }
+
     /// The scenario `run` executes: `--protocol <name>`'s canonical
     /// scenario when given, `--scenario` otherwise.
     fn run_scenario(&self) -> Scenario {
@@ -529,12 +588,8 @@ fn load_preset(o: &Opts, app: WorkloadId, size: WorkloadSize) -> Result<Workload
     Ok(preset)
 }
 
-/// Emit the machine-readable report when `--report` was given.
-fn emit_report(results: &[CellResult], o: &Opts) -> Result<(), String> {
-    let Some(format) = o.report else {
-        return Ok(());
-    };
-    let report = Report::from_cells(results);
+/// Write `report` in `format` to `--out` or stdout.
+fn write_report(report: &Report, format: ReportFormat, o: &Opts) -> Result<(), String> {
     let text = match format {
         ReportFormat::Json => report.to_json(),
         ReportFormat::Csv => report.to_csv(),
@@ -544,6 +599,14 @@ fn emit_report(results: &[CellResult], o: &Opts) -> Result<(), String> {
         None => print!("{text}"),
     }
     Ok(())
+}
+
+/// Emit the machine-readable report when `--report` was given.
+fn emit_report(report: &Report, o: &Opts) -> Result<(), String> {
+    match o.report {
+        Some(format) => write_report(report, format, o),
+        None => Ok(()),
+    }
 }
 
 /// Print `text` to stdout, or to stderr when stdout is carrying the
@@ -556,23 +619,24 @@ fn human(o: &Opts, text: &str) {
     }
 }
 
-/// Print one `app / scenario OK|FAIL` line per validated cell; returns
-/// the failure count.
-fn print_validation(results: &[CellResult], o: &Opts) -> usize {
+/// Print one `app / scenario OK|FAIL` line per validated report row;
+/// returns the failure count. Works off the report — not raw cell
+/// results — so the in-process and distributed paths print identically.
+fn print_validation(report: &Report, o: &Opts) -> usize {
     let mut failures = 0;
-    for c in results {
-        let ok = c.validated == Some(true) && c.result.converged;
-        let tag = if c.params.is_empty() {
+    for r in &report.rows {
+        let ok = r.validated == Some(true) && r.converged;
+        let tag = if r.params.is_empty() {
             String::new()
         } else {
-            format!(" [{}]", c.params)
+            format!(" [{}]", r.params)
         };
         human(
             o,
             &format!(
                 "{:>8} / {:<9}{tag} {}",
-                c.result.app,
-                c.result.scenario.name(),
+                r.app,
+                r.scenario,
                 if ok { "OK" } else { "FAIL" }
             ),
         );
@@ -603,13 +667,93 @@ fn main() {
     }
 }
 
+/// Stage 3 in subprocess mode: lower the plan, write each [`ShardSpec`]
+/// to a scratch file, spawn one `srsp worker --shard <file>` per shard,
+/// then merge their [`PartialReport`]s (stage 4). A worker that exits
+/// non-zero, dies, or emits a short report fails the whole sweep loudly
+/// — never a short report.
+///
+/// [`ShardSpec`]: srsp::coordinator::shard::ShardSpec
+fn run_distributed(runner: &Runner, plan: &SweepPlan, workers: usize) -> Result<Report, String> {
+    let lowered = ExecutionPlan::lower_sweep(runner, plan);
+    let shards = shard::partition(&lowered, workers);
+    let exe = std::env::current_exe().map_err(|e| format!("cannot locate the srsp binary: {e}"))?;
+    let dir = std::env::temp_dir().join(format!("srsp-workers-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+
+    // Spawn phase. On any failure, kill and reap what already started —
+    // an orphan must never keep simulating into the deleted scratch dir.
+    let mut children: Vec<(usize, std::process::Child, std::path::PathBuf)> = Vec::new();
+    for s in &shards {
+        let shard_path = dir.join(format!("shard-{}.json", s.shard));
+        let out_path = dir.join(format!("partial-{}.json", s.shard));
+        let spawned = std::fs::write(&shard_path, s.to_json())
+            .map_err(|e| format!("{}: {e}", shard_path.display()))
+            .and_then(|()| {
+                Command::new(&exe)
+                    .arg("worker")
+                    .arg("--shard")
+                    .arg(&shard_path)
+                    .arg("--out")
+                    .arg(&out_path)
+                    .spawn()
+                    .map_err(|e| format!("spawning worker {}: {e}", s.shard))
+            });
+        match spawned {
+            Ok(child) => children.push((s.shard, child, out_path)),
+            Err(e) => {
+                for (_, child, _) in &mut children {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                }
+                let _ = std::fs::remove_dir_all(&dir);
+                return Err(e);
+            }
+        }
+    }
+
+    // Wait phase: reap EVERY worker before judging the run, so an early
+    // failure never leaves orphans behind the error return.
+    let mut finished: Vec<(usize, std::path::PathBuf)> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    for (i, mut child, out_path) in children {
+        match child.wait() {
+            Ok(status) if status.success() => finished.push((i, out_path)),
+            Ok(status) => failures.push(format!("worker {i} failed ({status})")),
+            Err(e) => failures.push(format!("worker {i}: {e}")),
+        }
+    }
+
+    let collect_and_merge = || -> Result<Report, String> {
+        if let Some(first) = failures.first() {
+            return Err(format!(
+                "{first}; distributed sweep aborted ({} of {} workers failed)",
+                failures.len(),
+                shards.len()
+            ));
+        }
+        let mut partials = Vec::new();
+        for (i, out_path) in &finished {
+            let text = std::fs::read_to_string(out_path)
+                .map_err(|e| format!("worker {i} left no partial report: {e}"))?;
+            partials
+                .push(PartialReport::from_json(&text).map_err(|e| format!("worker {i}: {e}"))?);
+        }
+        Report::merge(&partials)
+    };
+    let result = collect_and_merge();
+    let _ = std::fs::remove_dir_all(&dir);
+    result
+}
+
 /// Run a composed registry-axis sweep: build the [`SweepPlan`], execute
-/// the cross-product grid oracle-gated, emit the long-format report and
-/// the human protocol-comparison table.
+/// the cross-product grid oracle-gated — in-process (`--jobs`) or over
+/// worker subprocesses (`--workers`), byte-identical either way — emit
+/// the long-format report and the human protocol-comparison table.
 fn run_axis_sweep(o: &Opts, axes: &[AxisId]) -> Result<(), String> {
     let app = o.app.unwrap_or(registry::STRESS);
     // Surface bad --param keys as a clean CLI error before the runner
-    // (which would panic inside a worker thread).
+    // (which would panic inside an executor).
     Params::resolve(app.kernel().params(), &o.params).map_err(|e| format!("{}: {e}", app.name()))?;
     o.check_proto_params(&RATIO_SCENARIOS)?;
     o.reject_protocol("sweep")?;
@@ -622,19 +766,25 @@ fn run_axis_sweep(o: &Opts, axes: &[AxisId]) -> Result<(), String> {
     let size = o.size.unwrap_or(WorkloadSize::Paper);
     let axis_names: Vec<&str> = axes.iter().map(|a| a.name()).collect();
     let combos = plan.combos();
+    let executors = match o.workers {
+        Some(w) => format!("{w} worker subprocesses"),
+        None => format!("{} jobs", o.jobs()),
+    };
     eprintln!(
-        "sweep on {} over {} ({} grid points × {} protocols) at {size:?} scale ({} jobs) ...",
+        "sweep on {} over {} ({} grid points × {} protocols) at {size:?} scale ({executors}) ...",
         app.name(),
         axis_names.join(" × "),
         combos.len(),
         plan.scenarios.len(),
-        o.jobs()
     );
     let runner = o.runner(cfg, size, true);
-    let results = runner.run_sweep(&plan);
-    emit_report(&results, o)?;
-    let failures = print_validation(&results, o);
-    let rows = sweep_speedup_rows(&plan, &results);
+    let report = match o.workers {
+        Some(workers) => run_distributed(&runner, &plan, workers)?,
+        None => Report::from_cells(&runner.run_sweep(&plan)),
+    };
+    emit_report(&report, o)?;
+    let failures = print_validation(&report, o);
+    let rows = sweep_speedup_rows_report(&plan, &report);
     let mut header: Vec<String> = axis_names.iter().map(|n| n.to_string()).collect();
     header.extend([
         "steal cycles".to_string(),
@@ -667,6 +817,7 @@ fn run_axis_sweep(o: &Opts, axes: &[AxisId]) -> Result<(), String> {
 }
 
 fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
+    o.check_distributed_flags(cmd)?;
     match cmd {
         "help" | "--help" | "-h" => print!("{USAGE}"),
         "table1" => {
@@ -776,7 +927,7 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
             );
             let runner = o.runner(cfg, size, false);
             let cells = runner.run_cells(&cells);
-            emit_report(&cells, o)?;
+            emit_report(&Report::from_cells(&cells), o)?;
             let results = into_run_results(cells);
             let table = match cmd {
                 "fig4" => fig4_speedup(&results),
@@ -791,6 +942,14 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                 o.reject_proto_params("sweep --axis cus")?;
                 o.reject_protocol("sweep --axis cus")?;
                 o.check_axis_flags()?;
+                if o.workers.is_some() {
+                    return Err(
+                        "--workers applies to registry-axis sweeps (e.g. --axis \
+                         remote-ratio,cu-count); --axis cus runs the fixed classic grid \
+                         in-process"
+                            .into(),
+                    );
+                }
                 if o.app.is_some() {
                     return Err(
                         "sweep --axis cus runs the fixed classic grid; --app applies to \
@@ -803,7 +962,7 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                 eprintln!("scaling sweep over {cus:?} CUs ({} jobs) ...", o.jobs());
                 let runner = o.runner(device_config(o)?, size, false);
                 let results = runner.run_cells(&scaling_cells(&cus));
-                emit_report(&results, o)?;
+                emit_report(&Report::from_cells(&results), o)?;
                 let rows = scaling_rows(&cus, &results);
                 let header = vec!["CUs".to_string(), "RSP".to_string(), "sRSP".to_string()];
                 let body: Vec<Vec<String>> = rows
@@ -863,8 +1022,9 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
             let size = o.size.unwrap_or(WorkloadSize::Paper);
             let runner = o.runner(cfg.clone(), size, true);
             let results = runner.run_cells(&full_grid(cfg.num_cus));
-            emit_report(&results, o)?;
-            let failures = print_validation(&results, o);
+            let report = Report::from_cells(&results);
+            emit_report(&report, o)?;
+            let failures = print_validation(&report, o);
             if failures > 0 {
                 return Err(format!("{failures} validation failures"));
             }
@@ -898,8 +1058,9 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
             let runner = o.runner(cfg, size, true);
             let results = runner.run_cells(&cells);
             let wall = t0.elapsed();
-            emit_report(&results, o)?;
-            let failures = print_validation(&results, o);
+            let report = Report::from_cells(&results);
+            emit_report(&report, o)?;
+            let failures = print_validation(&report, o);
             eprintln!("ci-smoke wall time: {wall:.2?} with {jobs} job(s)");
             if failures > 0 {
                 return Err(format!("ci-smoke: {failures} oracle mismatches"));
@@ -907,6 +1068,63 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
             human(
                 o,
                 &format!("ci-smoke passed: all {} cells validated", results.len()),
+            );
+        }
+        "worker" => {
+            o.reject_params(cmd)?;
+            o.reject_proto_params(cmd)?;
+            o.reject_protocol(cmd)?;
+            o.reject_axis_points(cmd)?;
+            if o.report.is_some() {
+                return Err(
+                    "worker always emits PartialReport JSON; --report does not apply".into(),
+                );
+            }
+            if o.jobs.is_some() {
+                return Err(
+                    "worker executes its shard serially (the shard IS the parallel unit); \
+                     --jobs does not apply"
+                        .into(),
+                );
+            }
+            let Some(path) = &o.shard else {
+                return Err("worker needs --shard <file>".into());
+            };
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            let spec = shard::ShardSpec::from_json(&text).map_err(|e| format!("{path}: {e}"))?;
+            eprintln!(
+                "worker: shard {}/{} ({} of {} cells) ...",
+                spec.shard,
+                spec.num_shards,
+                spec.cells.len(),
+                spec.total_cells
+            );
+            let results = execute_shard(&spec);
+            let partial = PartialReport::from_shard(&spec, &results);
+            match &o.out {
+                Some(p) => std::fs::write(p, partial.to_json()).map_err(|e| format!("{p}: {e}"))?,
+                None => print!("{}", partial.to_json()),
+            }
+        }
+        "merge-reports" => {
+            o.reject_params(cmd)?;
+            o.reject_proto_params(cmd)?;
+            o.reject_protocol(cmd)?;
+            o.reject_axis_points(cmd)?;
+            if o.partials.is_empty() {
+                return Err("merge-reports needs at least one --partial <file>".into());
+            }
+            let mut partials = Vec::new();
+            for path in &o.partials {
+                let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+                partials.push(PartialReport::from_json(&text).map_err(|e| format!("{path}: {e}"))?);
+            }
+            let report = Report::merge(&partials)?;
+            write_report(&report, o.report.unwrap_or(ReportFormat::Csv), o)?;
+            eprintln!(
+                "merged {} partial report(s): {} rows",
+                partials.len(),
+                report.rows.len()
             );
         }
         other => {

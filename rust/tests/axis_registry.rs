@@ -10,7 +10,7 @@ use std::process::Command;
 use srsp::config::DeviceConfig;
 use srsp::coordinator::{axis, Cell, Seeding, SweepPlan, RATIO_SCENARIOS};
 use srsp::harness::presets::WorkloadSize;
-use srsp::harness::report::Report;
+use srsp::harness::report::{Report, REPORT_SCHEMA};
 use srsp::harness::runner::Runner;
 use srsp::workload::registry;
 
@@ -34,9 +34,9 @@ fn tiny_runner() -> Runner {
 }
 
 #[test]
-fn registry_holds_four_axes() {
-    assert_eq!(axis::all().count(), 4);
-    for name in ["remote-ratio", "cu-count", "hot-set", "migration"] {
+fn registry_holds_five_axes() {
+    assert_eq!(axis::all().count(), 5);
+    for name in ["remote-ratio", "cu-count", "hot-set", "migration", "lr-tbl-entries"] {
         assert!(axis::resolve(name).is_some(), "{name} must resolve");
     }
 }
@@ -185,8 +185,8 @@ fn cli_composed_surface_long_format_csv() {
         1 + 2 * 2 * 3,
         "header + 2 ratios × 2 CU counts × 3 protocols"
     );
-    let columns = Report::CSV_COLUMNS.len();
-    assert_eq!(lines[0], Report::CSV_COLUMNS.join(","));
+    let columns = REPORT_SCHEMA.columns.len();
+    assert_eq!(lines[0], REPORT_SCHEMA.columns.join(","));
     for line in &lines {
         assert_eq!(line.split(',').count(), columns, "ragged line: {line}");
     }

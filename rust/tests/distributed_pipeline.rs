@@ -1,0 +1,351 @@
+//! The distributed sweep pipeline end to end: plan → shard → execute →
+//! merge, with the serializable stage boundaries exercised both at the
+//! library level and through the real `srsp worker` / `merge-reports` /
+//! `sweep --workers` CLI. The acceptance property throughout: a plan
+//! executed by worker subprocesses merges to a report **byte-identical**
+//! to the same plan run in-process, for any worker count — and every
+//! failure path (dead worker, truncated partial, version drift) fails
+//! loudly instead of producing a short report.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use srsp::config::DeviceConfig;
+use srsp::coordinator::{axis, shard, ExecutionPlan, Runner, Seeding, SweepPlan};
+use srsp::harness::presets::WorkloadSize;
+use srsp::harness::report::{PartialReport, Report};
+use srsp::harness::runner::execute_shard;
+use srsp::workload::registry;
+
+fn srsp_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_srsp"))
+}
+
+/// A scratch directory unique to this test process + test name.
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("srsp-test-{}-{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+fn tiny_runner() -> Runner {
+    Runner {
+        validate: true,
+        seeding: Seeding::PerCell(11),
+        ..Runner::new(
+            DeviceConfig {
+                num_cus: 4,
+                ..DeviceConfig::small()
+            },
+            WorkloadSize::Tiny,
+            4,
+        )
+    }
+}
+
+fn surface_plan() -> SweepPlan {
+    SweepPlan::new(registry::STRESS, &[axis::REMOTE_RATIO, axis::CU_COUNT])
+        .unwrap()
+        .with_points(axis::REMOTE_RATIO, vec![0.0, 0.5])
+        .unwrap()
+        .with_points(axis::CU_COUNT, vec![2.0, 4.0])
+        .unwrap()
+}
+
+/// Library level: shard partitioning is a pure function of (plan, N) and
+/// the stage-boundary files reproduce it exactly.
+#[test]
+fn shard_partition_deterministic_across_lowering_and_files() {
+    let runner = tiny_runner();
+    let plan = surface_plan();
+    let lowered_a = ExecutionPlan::lower_sweep(&runner, &plan);
+    let lowered_b = ExecutionPlan::lower_sweep(&runner, &plan);
+    assert_eq!(lowered_a, lowered_b, "lowering must be deterministic");
+    for n in [1, 2, 4, 7] {
+        let shards_a = shard::partition(&lowered_a, n);
+        let shards_b = shard::partition(&lowered_b, n);
+        assert_eq!(shards_a, shards_b, "partition({n}) must be deterministic");
+        for (s_a, s_b) in shards_a.iter().zip(&shards_b) {
+            assert_eq!(s_a.to_json(), s_b.to_json(), "shard files must be identical");
+            assert_eq!(&shard::ShardSpec::from_json(&s_a.to_json()).unwrap(), s_a);
+        }
+    }
+}
+
+/// Library level: executing the shards separately and merging the
+/// JSON-round-tripped partials reproduces the in-process sweep report
+/// byte for byte, for 1, 2 and 4 workers — and the in-process report is
+/// itself --jobs-independent.
+#[test]
+fn merged_sweep_report_byte_identical_to_in_process() {
+    let plan = surface_plan();
+    let jobs1 = Report::from_cells(&Runner { jobs: 1, ..tiny_runner() }.run_sweep(&plan));
+    let jobs4 = Report::from_cells(&Runner { jobs: 4, ..tiny_runner() }.run_sweep(&plan));
+    assert_eq!(jobs1.to_csv(), jobs4.to_csv(), "--jobs must not change the report");
+    assert_eq!(jobs1.to_json(), jobs4.to_json());
+
+    let lowered = ExecutionPlan::lower_sweep(&tiny_runner(), &plan);
+    for workers in [1, 2, 4] {
+        let partials: Vec<PartialReport> = shard::partition(&lowered, workers)
+            .iter()
+            .map(|s| PartialReport::from_shard(s, &execute_shard(s)))
+            .map(|p| PartialReport::from_json(&p.to_json()).expect("lossless partial"))
+            .collect();
+        let merged = Report::merge(&partials).unwrap();
+        assert_eq!(merged.to_csv(), jobs1.to_csv(), "{workers} workers (csv)");
+        assert_eq!(merged.to_json(), jobs1.to_json(), "{workers} workers (json)");
+    }
+}
+
+/// CLI level, the acceptance gate: `sweep --workers 2` (subprocess
+/// executors) emits a report byte-identical to the same plan via
+/// `--jobs 4` and `--jobs 1` in-process.
+#[test]
+fn cli_workers_report_byte_identical_to_jobs() {
+    let dir = scratch("workers-vs-jobs");
+    let run = |mode: &[&str], out: &PathBuf, format: &str| {
+        let status = srsp_bin()
+            .args(["sweep", "--axis", "remote-ratio,cu-count", "--app", "stress"])
+            .args(["--size", "tiny", "--seed", "11"])
+            .args(["--points", "remote-ratio=0,0.5", "--points", "cu-count=2,4"])
+            .args(mode)
+            .args(["--report", format, "--out", out.to_str().unwrap()])
+            .status()
+            .expect("spawn srsp");
+        assert!(status.success(), "sweep {mode:?} failed");
+    };
+    let (w2, j4, j1) = (dir.join("w2.csv"), dir.join("j4.csv"), dir.join("j1.csv"));
+    run(&["--workers", "2"], &w2, "csv");
+    run(&["--jobs", "4"], &j4, "csv");
+    run(&["--jobs", "1"], &j1, "csv");
+    let (w2, j4, j1) = (
+        std::fs::read(&w2).unwrap(),
+        std::fs::read(&j4).unwrap(),
+        std::fs::read(&j1).unwrap(),
+    );
+    assert!(!w2.is_empty());
+    assert_eq!(w2, j4, "--workers 2 must be byte-identical to --jobs 4");
+    assert_eq!(w2, j1, "--workers 2 must be byte-identical to --jobs 1");
+    // And for the JSON report format too.
+    let (w2j, j1j) = (dir.join("w2.json"), dir.join("j1.json"));
+    run(&["--workers", "3"], &w2j, "json");
+    run(&["--jobs", "2"], &j1j, "json");
+    assert_eq!(std::fs::read(&w2j).unwrap(), std::fs::read(&j1j).unwrap());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// CLI level: a hand-driven pipeline — shard files in, `srsp worker` per
+/// shard, `srsp merge-reports` over the partials — reassembles the exact
+/// in-process report (the multi-host transport story: every stage
+/// boundary is a file).
+#[test]
+fn cli_worker_and_merge_reports_reassemble_the_run() {
+    let dir = scratch("worker-merge");
+    let runner = tiny_runner();
+    let plan = surface_plan();
+    let expect = Report::from_cells(&runner.run_sweep(&plan));
+    let lowered = ExecutionPlan::lower_sweep(&runner, &plan);
+    let shards = shard::partition(&lowered, 2);
+    let mut merge = srsp_bin();
+    merge.arg("merge-reports");
+    for spec in &shards {
+        let shard_path = dir.join(format!("shard-{}.json", spec.shard));
+        std::fs::write(&shard_path, spec.to_json()).unwrap();
+        // Worker writes its partial to --out; stdout stays clean.
+        let partial_path = dir.join(format!("partial-{}.json", spec.shard));
+        let out = srsp_bin()
+            .args(["worker", "--shard", shard_path.to_str().unwrap()])
+            .args(["--out", partial_path.to_str().unwrap()])
+            .output()
+            .expect("spawn worker");
+        assert!(
+            out.status.success(),
+            "worker {}: {}",
+            spec.shard,
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let partial =
+            PartialReport::from_json(&std::fs::read_to_string(&partial_path).unwrap()).unwrap();
+        assert_eq!(partial.shard, spec.shard);
+        assert_eq!(partial.rows.len(), spec.cells.len());
+        merge.args(["--partial", partial_path.to_str().unwrap()]);
+    }
+    // Without --out, a worker streams the partial to stdout.
+    let out = srsp_bin()
+        .args(["worker", "--shard", dir.join("shard-0.json").to_str().unwrap()])
+        .output()
+        .expect("spawn worker");
+    assert!(out.status.success());
+    let streamed = PartialReport::from_json(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    assert_eq!(streamed.shard, 0);
+
+    let merged_path = dir.join("merged.csv");
+    let out = merge
+        .args(["--report", "csv", "--out", merged_path.to_str().unwrap()])
+        .output()
+        .expect("spawn merge-reports");
+    assert!(
+        out.status.success(),
+        "merge-reports: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert_eq!(
+        std::fs::read_to_string(&merged_path).unwrap(),
+        expect.to_csv(),
+        "merge-reports must reassemble the exact in-process report"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Failure paths: a dead/confused worker or a truncated partial fails
+/// the pipeline loudly — never a short report.
+#[test]
+fn cli_failure_paths_are_loud() {
+    let dir = scratch("failures");
+    // A worker pointed at a missing shard file exits non-zero.
+    let out = srsp_bin()
+        .args(["worker", "--shard", dir.join("nope.json").to_str().unwrap()])
+        .output()
+        .expect("spawn worker");
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("error"),
+        "missing shard file must be reported"
+    );
+    // A malformed shard file exits non-zero naming the problem.
+    let bad = dir.join("bad.json");
+    std::fs::write(&bad, "{\"plan_version\":999}").unwrap();
+    let out = srsp_bin()
+        .args(["worker", "--shard", bad.to_str().unwrap()])
+        .output()
+        .expect("spawn worker");
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("version"),
+        "version drift must be named"
+    );
+    // merge-reports with a missing worker's partial: loud, non-zero.
+    let runner = tiny_runner();
+    let lowered = ExecutionPlan::lower_sweep(&runner, &surface_plan());
+    let shards = shard::partition(&lowered, 2);
+    let p0 = PartialReport::from_shard(&shards[0], &execute_shard(&shards[0]));
+    let p0_path = dir.join("p0.json");
+    std::fs::write(&p0_path, p0.to_json()).unwrap();
+    let out = srsp_bin()
+        .args(["merge-reports", "--partial", p0_path.to_str().unwrap()])
+        .output()
+        .expect("spawn merge-reports");
+    assert!(!out.status.success(), "half a run must not merge");
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("worker is missing"),
+        "the gap must be named"
+    );
+    // A truncated partial report (worker died mid-write): loud.
+    let truncated = p0.to_json();
+    let truncated = &truncated[..truncated.len() / 2];
+    let trunc_path = dir.join("trunc.json");
+    std::fs::write(&trunc_path, truncated).unwrap();
+    let out = srsp_bin()
+        .args(["merge-reports", "--partial", trunc_path.to_str().unwrap()])
+        .output()
+        .expect("spawn merge-reports");
+    assert!(!out.status.success(), "a truncated partial must not merge");
+    // Library level: a partial whose rows were cut short (valid JSON,
+    // incomplete coverage) fails the merge naming the gap.
+    let mut short = PartialReport::from_shard(&shards[1], &execute_shard(&shards[1]));
+    short.rows.pop();
+    let err = Report::merge(&[p0, short]).unwrap_err();
+    assert!(err.contains("truncated"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The distributed-pipeline flags are each scoped to one command.
+#[test]
+fn cli_rejects_misplaced_distributed_flags() {
+    for (args, needle) in [
+        (vec!["run", "--workers", "2"], "--workers applies to"),
+        (vec!["ci-smoke", "--workers", "2"], "--workers applies to"),
+        (
+            vec!["sweep", "--workers", "2"], // classic --axis cus default
+            "registry-axis sweeps",
+        ),
+        (
+            vec!["sweep", "--axis", "remote-ratio", "--workers", "2", "--jobs", "4"],
+            "pick one",
+        ),
+        (vec!["sweep", "--axis", "remote-ratio", "--shard", "x"], "--shard applies to"),
+        (vec!["run", "--partial", "x"], "--partial applies to"),
+        (vec!["worker"], "--shard"),
+        (vec!["merge-reports"], "--partial"),
+        (vec!["sweep", "--workers", "0"], "at least 1"),
+    ] {
+        let out = srsp_bin().args(&args).output().expect("spawn srsp");
+        assert!(!out.status.success(), "{args:?} must be rejected");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(stderr.contains(needle), "{args:?}: expected '{needle}' in:\n{stderr}");
+    }
+}
+
+/// Satellite: the first proto-param sweep axis. `lr-tbl-entries` drives
+/// `CellSpec::proto_params` through the registry — table pressure rises
+/// as the swept capacity shrinks, and the coordinate lands in both the
+/// axis_values and proto_params report columns.
+#[test]
+fn lr_tbl_entries_axis_sweeps_table_pressure() {
+    let runner = tiny_runner();
+    let plan = SweepPlan::new(registry::STRESS, &[axis::LR_TBL_ENTRIES])
+        .unwrap()
+        .with_points(axis::LR_TBL_ENTRIES, vec![1.0, 16.0])
+        .unwrap();
+    let results = runner.run_sweep(&plan);
+    assert_eq!(results.len(), 2 * plan.scenarios.len());
+    let srsp_cells: Vec<_> = results
+        .iter()
+        .filter(|c| c.cell.scenario.name() == "srsp")
+        .collect();
+    assert_eq!(srsp_cells.len(), 2);
+    for c in &results {
+        assert_eq!(c.validated, Some(true), "{}", c.axis_values);
+        assert!(c.params.is_empty(), "a proto-param axis must not touch --param");
+    }
+    // The swept capacity reaches the device: a 1-entry LR-TBL overflows,
+    // and pressure does not decrease as capacity grows to the default.
+    let (tiny, full) = (&srsp_cells[0], &srsp_cells[1]);
+    assert_eq!(tiny.proto_params, "lr_tbl_entries=1");
+    assert_eq!(full.proto_params, "lr_tbl_entries=16");
+    assert!(tiny.result.stats.lr_tbl_overflows > 0, "1-entry table must overflow");
+    assert!(tiny.result.stats.lr_tbl_overflows >= full.result.stats.lr_tbl_overflows);
+    // Non-sRSP protocols ignore the key and report nothing.
+    let steal = results.iter().find(|c| c.cell.scenario.name() == "steal").unwrap();
+    assert_eq!(steal.proto_params, "");
+    assert_eq!(steal.axis_values, "lr-tbl-entries=1");
+}
+
+/// The same axis from the CLI, by registry name — including under
+/// `--workers`, since a proto-param axis must cross the worker boundary.
+#[test]
+fn cli_lr_tbl_entries_axis_end_to_end() {
+    let dir = scratch("lr-tbl-cli");
+    let out_path = dir.join("lr.csv");
+    let out = srsp_bin()
+        .args(["sweep", "--axis", "lr-tbl-entries", "--app", "stress"])
+        .args(["--size", "tiny", "--cus", "4", "--points", "lr-tbl-entries=1,16"])
+        .args(["--workers", "2"])
+        .args(["--report", "csv", "--out", out_path.to_str().unwrap()])
+        .output()
+        .expect("spawn srsp");
+    assert!(
+        out.status.success(),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let csv = std::fs::read_to_string(&out_path).unwrap();
+    // Comma-anchored: "lr-tbl-entries=1" alone would also match =16 rows.
+    assert!(csv.contains("lr-tbl-entries=1,"), "axis coordinate column:\n{csv}");
+    assert!(csv.contains("lr-tbl-entries=16,"));
+    assert!(csv.contains("lr_tbl_entries=1,"), "proto_params column:\n{csv}");
+    for line in csv.lines().skip(1) {
+        assert!(line.contains(",true,"), "oracle-validated row: {line}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
