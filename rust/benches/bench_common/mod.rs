@@ -4,11 +4,25 @@
 
 use std::time::Instant;
 
+// Each bench binary compiles its own copy of this module, so helpers a
+// given bench does not use are expected dead code.
+#[allow(dead_code)]
 pub fn timed<T>(label: &str, f: impl FnOnce() -> T) -> T {
     let t0 = Instant::now();
     let out = f();
     eprintln!("[bench] {label}: {:.2?}", t0.elapsed());
     out
+}
+
+/// `--<flag> N`: parse a u32 flag value if present.
+#[allow(dead_code)]
+pub fn parse_flag_u32(flag: &str) -> Option<u32> {
+    let args: Vec<String> = std::env::args().collect();
+    let i = args.iter().position(|a| a == flag)?;
+    let v = args
+        .get(i + 1)
+        .unwrap_or_else(|| panic!("{flag} needs a value"));
+    Some(v.parse().unwrap_or_else(|e| panic!("{flag}: {e}")))
 }
 
 /// `--size tiny` (CI smoke) vs default paper scale; `--cus N` override.

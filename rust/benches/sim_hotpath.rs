@@ -1,36 +1,32 @@
 //! Bench: simulator hot-path throughput (host-side performance of the
-//! simulator itself, the §Perf target for Layer 3). Reports simulated
-//! cycles per wall second and events/instructions per second for a
-//! PageRank round on the Table-1 device.
+//! simulator itself, the §Perf target for Layer 3).
+//!
+//! Thin wrapper over the shared measurement core in
+//! [`srsp::harness::bench`] — the same cells, statistics, and versioned
+//! JSON schema as `srsp bench hotpath`. The workloads and scenarios come
+//! from the registries by name (no hard-coded `Scenario` consts here);
+//! human lines go to stderr, the `BENCH_*.json` document to stdout.
+//!
+//! Flags: `--size tiny|paper`, `--cus N`, `--repeats N`, `--warmup N`,
+//! `--compare-reference` (also time the pre-decode reference interpreter
+//! and record the decoded-path speedup, asserting identical simulated
+//! results).
 
-use srsp::config::Scenario;
-use srsp::harness::figures::run_one;
-use srsp::harness::presets::{WorkloadPreset, WorkloadSize};
-use std::time::Instant;
+mod bench_common;
+
+use srsp::harness::bench::{run_bench, BenchOpts};
 
 fn main() {
-    let (cfg, size) = {
-        // default: paper scale
-        let mut c = srsp::config::DeviceConfig::default();
-        let mut s = WorkloadSize::Paper;
-        if std::env::args().any(|a| a == "tiny") {
-            c.num_cus = 8;
-            s = WorkloadSize::Tiny;
-        }
-        (c, s)
-    };
-    for scenario in [Scenario::SCOPE_ONLY, Scenario::SRSP, Scenario::RSP] {
-        let preset = WorkloadPreset::new(srsp::workload::registry::PRK, size);
-        let t0 = Instant::now();
-        let r = run_one(&cfg, &preset, scenario);
-        let dt = t0.elapsed().as_secs_f64();
-        println!(
-            "{:>6}: wall {:>7.3}s  sim-cycles {:>10}  Mcycles/s {:>8.2}  Minstr/s {:>8.2}",
-            scenario.name(),
-            dt,
-            r.stats.cycles,
-            r.stats.cycles as f64 / dt / 1e6,
-            r.stats.instructions as f64 / dt / 1e6,
-        );
+    let (cfg, size) = bench_common::parse_args();
+    let mut opts = BenchOpts::hotpath(size);
+    if let Some(n) = bench_common::parse_flag_u32("--repeats") {
+        opts.repeats = n.max(1);
     }
+    if let Some(n) = bench_common::parse_flag_u32("--warmup") {
+        opts.warmup = n;
+    }
+    opts.compare_reference = std::env::args().any(|a| a == "--compare-reference");
+    let report = run_bench(&cfg, &opts);
+    eprint!("{}", report.render_human());
+    print!("{}", report.to_json());
 }

@@ -8,10 +8,13 @@
 //! the standard GPU kernel-boundary barrier (all L1s flushed + invalidated,
 //! L2 flushed) so the host observes all device writes.
 
+use std::time::Instant;
+
 use crate::config::{DeviceConfig, Protocol};
-use crate::kir::{ComputeEngine, NoopEngine, Program, StepResult, WgContext};
+use crate::kir::{ComputeEngine, DecodedProgram, NoopEngine, Program, StepResult, WgContext};
 use crate::mem::MemSystem;
-use crate::sim::{Cycle, EventQueue, Stats};
+use crate::sim::perfstats::{self, TimedEngine};
+use crate::sim::{Cycle, EventQueue, PerfStats, Stats};
 
 /// Result of one kernel launch.
 #[derive(Debug, Clone)]
@@ -33,6 +36,11 @@ pub struct Device {
     /// back-to-back; the host gap is ignored, as in the paper's
     /// device-side measurements).
     pub now: Cycle,
+    /// Host-side cost counters accumulated across this device's launches
+    /// (wall time split into sim vs compute-engine attribution; see
+    /// [`crate::sim::perfstats`]). Never feeds the simulated stats or the
+    /// report pipeline.
+    pub perf: PerfStats,
 }
 
 impl Device {
@@ -68,6 +76,7 @@ impl Device {
             cfg,
             protocol,
             now: 0,
+            perf: PerfStats::default(),
         }
     }
 
@@ -89,6 +98,19 @@ impl Device {
         init: impl Fn(&mut WgContext),
     ) -> LaunchReport {
         assert!(num_wgs > 0, "kernel launch needs at least one work-group");
+        let wall0 = Instant::now();
+        // Decode once per launch for the hot interpreter path; the
+        // reference switch selects the original instruction-by-instruction
+        // interpreter (the semantic oracle the identity tests compare
+        // against).
+        let decoded = if perfstats::reference_paths() {
+            None
+        } else {
+            Some(DecodedProgram::decode(prog))
+        };
+        // Attribute wall time spent inside the compute engine (workload
+        // numerics) separately from simulator time.
+        let mut engine = TimedEngine::new(engine);
         let mut queue = EventQueue::new();
         let mut contexts: Vec<WgContext> = (0..num_wgs)
             .map(|wg| {
@@ -111,15 +133,27 @@ impl Device {
             events += 1;
             let ctx = &mut contexts[ev.wg as usize];
             debug_assert!(!ctx.halted, "halted wg rescheduled");
-            match crate::kir::interp::step(
-                ctx,
-                prog,
-                &mut self.mem,
-                self.protocol,
-                num_wgs,
-                engine,
-                ev.cycle,
-            ) {
+            let result = match &decoded {
+                Some(d) => crate::kir::interp::step_decoded(
+                    ctx,
+                    d,
+                    &mut self.mem,
+                    self.protocol,
+                    num_wgs,
+                    &mut engine,
+                    ev.cycle,
+                ),
+                None => crate::kir::interp::step(
+                    ctx,
+                    prog,
+                    &mut self.mem,
+                    self.protocol,
+                    num_wgs,
+                    &mut engine,
+                    ev.cycle,
+                ),
+            };
+            match result {
                 StepResult::Continue(next) => {
                     // Guarantee forward progress in the queue even for
                     // zero-latency outcomes.
@@ -140,6 +174,14 @@ impl Device {
         let end_cycle = self.mem.kernel_end_barrier(last_halt);
         self.now = end_cycle;
         self.mem.stats.cycles = self.now;
+        let launch_perf = PerfStats {
+            launches: 1,
+            events,
+            launch_nanos: wall0.elapsed().as_nanos() as u64,
+            engine_nanos: engine.nanos,
+        };
+        self.perf.merge(&launch_perf);
+        perfstats::add_thread(&launch_perf);
         LaunchReport {
             last_halt,
             end_cycle,
@@ -273,6 +315,37 @@ mod tests {
         // ...and a protocol that declares no tables ignores the key.
         let dev = Device::new(cfg, Protocol::SCOPED_ONLY);
         assert_eq!(dev.cfg.lr_tbl_entries, 16);
+    }
+
+    #[test]
+    fn perf_counters_accumulate_per_launch() {
+        let _ = perfstats::take_thread(); // isolate from earlier launches
+        let mut dev = Device::new(DeviceConfig::small(), Protocol::SRSP);
+        let r = dev.launch_simple(&store_id_kernel(), 4);
+        assert_eq!(dev.perf.launches, 1);
+        assert_eq!(dev.perf.events, r.events);
+        assert!(dev.perf.launch_nanos >= dev.perf.engine_nanos);
+        // The thread-local collector saw the same launch.
+        let tl = perfstats::take_thread();
+        assert_eq!(tl.launches, 1);
+        assert_eq!(tl.events, r.events);
+    }
+
+    #[test]
+    fn reference_and_fast_paths_agree_on_a_launch() {
+        let p = store_id_kernel();
+        let mut fast = Device::new(DeviceConfig::small(), Protocol::SRSP);
+        fast.launch_simple(&p, 8);
+        let fast_stats = fast.take_stats();
+        perfstats::set_reference_paths(true);
+        let mut reference = Device::new(DeviceConfig::small(), Protocol::SRSP);
+        reference.launch_simple(&p, 8);
+        perfstats::set_reference_paths(false);
+        let ref_stats = reference.take_stats();
+        assert_eq!(fast_stats.cycles, ref_stats.cycles);
+        assert_eq!(fast_stats.instructions, ref_stats.instructions);
+        assert_eq!(fast_stats.l1_hits, ref_stats.l1_hits);
+        assert_eq!(fast_stats.l1_misses, ref_stats.l1_misses);
     }
 
     #[test]

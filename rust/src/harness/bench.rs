@@ -1,0 +1,423 @@
+//! The `srsp bench` measurement core and JSON emitter.
+//!
+//! Replaces the ad-hoc `println!` bench binaries with one shared,
+//! versioned pipeline: a bench run measures a set of (workload, scenario)
+//! cells through [`figures::run_one`] — warmup runs, then `repeats` timed
+//! runs — and emits a `BENCH_*.json` artifact carrying per-repeat wall
+//! times, median/min, and derived throughput rates (cells/sec, Minstr/s,
+//! Mcycles/s) plus the [`PerfStats`] sim-vs-workload cost attribution.
+//!
+//! Workloads and scenarios are resolved through the registries
+//! ([`registry::resolve`], [`Scenario::from_name`]) rather than
+//! hard-coded consts, so `srsp bench hotpath --app sssp --scenario hlrc`
+//! measures any registered pair.
+//!
+//! `--compare-reference` measures every cell under **both** interpreter
+//! paths — the kept-in-tree reference path and the decode-once fast path
+//! — in one artifact, asserting the simulated results are identical and
+//! recording the wall-time speedup. That artifact is the performance
+//! evidence for the fast path: the claim ships with its own control.
+
+use std::time::Instant;
+
+use super::figures;
+use super::presets::{WorkloadPreset, WorkloadSize};
+use crate::config::{DeviceConfig, Scenario};
+use crate::jsonio::Json;
+use crate::sim::perfstats::{self, PerfStats};
+use crate::workload::registry::{self, WorkloadId};
+
+/// Version of the emitted `BENCH_*.json` schema. Bump on any field
+/// rename/removal; additions are backward-compatible.
+pub const BENCH_SCHEMA: u32 = 1;
+
+/// Interpreter path a cell was measured under.
+pub const PATH_DECODED: &str = "decoded";
+pub const PATH_REFERENCE: &str = "reference";
+
+/// One bench request: which cells, how many repeats.
+pub struct BenchOpts {
+    pub size: WorkloadSize,
+    pub repeats: u32,
+    pub warmup: u32,
+    /// Also measure the pre-decode reference interpreter and record the
+    /// speedup (asserting identical simulated results).
+    pub compare_reference: bool,
+    pub apps: Vec<WorkloadId>,
+    pub scenarios: Vec<Scenario>,
+}
+
+impl BenchOpts {
+    /// The `srsp bench hotpath` default cell set: the classic PageRank
+    /// kernel under the no-steal scoped scenario and the two promotion
+    /// protocols — the simulator's hot loop with and without steal
+    /// traffic. Names resolve through the registries.
+    pub fn hotpath(size: WorkloadSize) -> Self {
+        let apps = vec![registry::resolve("prk").expect("prk is registered")];
+        let scenarios = ["scope", "srsp", "rsp"]
+            .iter()
+            .map(|n| Scenario::from_name(n).expect("classic scenario name"))
+            .collect();
+        BenchOpts {
+            size,
+            repeats: 5,
+            warmup: 1,
+            compare_reference: false,
+            apps,
+            scenarios,
+        }
+    }
+}
+
+/// One measured (workload, scenario, path) cell.
+#[derive(Debug, Clone)]
+pub struct CellBench {
+    pub app: &'static str,
+    pub scenario: &'static str,
+    /// [`PATH_DECODED`] or [`PATH_REFERENCE`].
+    pub path: &'static str,
+    /// Wall seconds of each timed repeat, in run order.
+    pub wall_secs: Vec<f64>,
+    pub median_secs: f64,
+    pub min_secs: f64,
+    /// Simulated results (identical across repeats — asserted).
+    pub sim_cycles: u64,
+    pub instructions: u64,
+    pub rounds: u32,
+    /// Host-side cost attribution summed over the timed repeats.
+    pub perf: PerfStats,
+}
+
+impl CellBench {
+    /// Timed cell executions per wall second (1 / median).
+    pub fn cells_per_sec(&self) -> f64 {
+        1.0 / self.median_secs.max(1e-12)
+    }
+
+    /// Millions of simulated instructions per wall second.
+    pub fn minstr_per_sec(&self) -> f64 {
+        self.instructions as f64 / self.median_secs.max(1e-12) / 1e6
+    }
+
+    /// Millions of simulated cycles per wall second.
+    pub fn mcycles_per_sec(&self) -> f64 {
+        self.sim_cycles as f64 / self.median_secs.max(1e-12) / 1e6
+    }
+}
+
+/// A finished bench run, ready to render as `BENCH_*.json`.
+pub struct BenchReport {
+    pub schema: u32,
+    /// Bench kind (`hotpath`).
+    pub kind: String,
+    pub size: WorkloadSize,
+    pub num_cus: u32,
+    pub repeats: u32,
+    pub warmup: u32,
+    pub cells: Vec<CellBench>,
+}
+
+impl BenchReport {
+    fn cells_on(&self, path: &str) -> impl Iterator<Item = &CellBench> {
+        self.cells.iter().filter(move |c| c.path == path)
+    }
+
+    /// Sum of per-cell cells/sec over one path (aggregate throughput).
+    pub fn total_cells_per_sec(&self, path: &str) -> f64 {
+        let total: f64 = self.cells_on(path).map(|c| c.median_secs.max(1e-12)).sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.cells_on(path).count() as f64 / total
+    }
+
+    /// Aggregate Minstr/s over one path (total instructions / total median
+    /// wall).
+    pub fn total_minstr_per_sec(&self, path: &str) -> f64 {
+        let secs: f64 = self.cells_on(path).map(|c| c.median_secs.max(1e-12)).sum();
+        let instr: u64 = self.cells_on(path).map(|c| c.instructions).sum();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        instr as f64 / secs / 1e6
+    }
+
+    /// Median-wall speedup of the decoded path over the reference path
+    /// (`None` unless both paths were measured).
+    pub fn speedup_vs_reference(&self) -> Option<f64> {
+        let dec: f64 = self
+            .cells_on(PATH_DECODED)
+            .map(|c| c.median_secs.max(1e-12))
+            .sum();
+        let reference: f64 = self
+            .cells_on(PATH_REFERENCE)
+            .map(|c| c.median_secs.max(1e-12))
+            .sum();
+        if dec <= 0.0 || reference <= 0.0 {
+            return None;
+        }
+        Some(reference / dec)
+    }
+
+    /// Render the versioned JSON artifact.
+    pub fn to_json(&self) -> String {
+        let cells = self
+            .cells
+            .iter()
+            .map(|c| {
+                Json::Obj(vec![
+                    ("app".into(), Json::str(c.app)),
+                    ("scenario".into(), Json::str(c.scenario)),
+                    ("path".into(), Json::str(c.path)),
+                    (
+                        "wall_secs".into(),
+                        Json::Arr(c.wall_secs.iter().map(|&w| Json::f64(w)).collect()),
+                    ),
+                    ("median_secs".into(), Json::f64(c.median_secs)),
+                    ("min_secs".into(), Json::f64(c.min_secs)),
+                    ("cells_per_sec".into(), Json::f64(c.cells_per_sec())),
+                    ("minstr_per_sec".into(), Json::f64(c.minstr_per_sec())),
+                    ("mcycles_per_sec".into(), Json::f64(c.mcycles_per_sec())),
+                    ("sim_cycles".into(), Json::u64(c.sim_cycles)),
+                    ("instructions".into(), Json::u64(c.instructions)),
+                    ("rounds".into(), Json::u32(c.rounds)),
+                    ("launches".into(), Json::u64(c.perf.launches)),
+                    ("events".into(), Json::u64(c.perf.events)),
+                    ("launch_nanos".into(), Json::u64(c.perf.launch_nanos)),
+                    ("engine_nanos".into(), Json::u64(c.perf.engine_nanos)),
+                    ("sim_nanos".into(), Json::u64(c.perf.sim_nanos())),
+                ])
+            })
+            .collect();
+
+        let mut totals = vec![
+            (
+                "cells_per_sec".into(),
+                Json::f64(self.total_cells_per_sec(PATH_DECODED)),
+            ),
+            (
+                "minstr_per_sec".into(),
+                Json::f64(self.total_minstr_per_sec(PATH_DECODED)),
+            ),
+        ];
+        if let Some(s) = self.speedup_vs_reference() {
+            totals.push(("speedup_vs_reference".into(), Json::f64(s)));
+        }
+
+        let root = Json::Obj(vec![
+            ("schema".into(), Json::u32(self.schema)),
+            ("kind".into(), Json::str(self.kind.clone())),
+            ("size".into(), Json::str(size_name(self.size))),
+            ("num_cus".into(), Json::u32(self.num_cus)),
+            ("repeats".into(), Json::u32(self.repeats)),
+            ("warmup".into(), Json::u32(self.warmup)),
+            ("cells".into(), Json::Arr(cells)),
+            ("totals".into(), Json::Obj(totals)),
+        ]);
+        let mut s = root.render();
+        s.push('\n');
+        s
+    }
+
+    /// One-line-per-cell human rendering (stderr companion of the JSON).
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for c in &self.cells {
+            out.push_str(&format!(
+                "{:>5}/{:<14} {:<9} wall {:>8.3}s  Mcycles/s {:>8.2}  Minstr/s {:>8.2}\n",
+                c.app,
+                c.scenario,
+                c.path,
+                c.median_secs,
+                c.mcycles_per_sec(),
+                c.minstr_per_sec(),
+            ));
+        }
+        if let Some(s) = self.speedup_vs_reference() {
+            out.push_str(&format!("decoded path speedup vs reference: {s:.2}x\n"));
+        }
+        out
+    }
+}
+
+pub(crate) fn size_name(size: WorkloadSize) -> &'static str {
+    match size {
+        WorkloadSize::Tiny => "tiny",
+        WorkloadSize::Paper => "paper",
+    }
+}
+
+/// Median of the sample (mean of the middle pair for even counts).
+fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let mut s = xs.to_vec();
+    s.sort_by(f64::total_cmp);
+    let n = s.len();
+    if n % 2 == 1 {
+        s[n / 2]
+    } else {
+        (s[n / 2 - 1] + s[n / 2]) / 2.0
+    }
+}
+
+/// Measure one cell under the currently selected interpreter path.
+///
+/// The per-thread [`perfstats`] collector is drained before each repeat
+/// and summed, so the attribution covers exactly the timed runs.
+fn measure_cell(
+    cfg: &DeviceConfig,
+    id: WorkloadId,
+    scenario: Scenario,
+    opts: &BenchOpts,
+    path: &'static str,
+) -> CellBench {
+    let preset = WorkloadPreset::new(id, opts.size);
+    for _ in 0..opts.warmup {
+        let _ = figures::run_one(cfg, &preset, scenario);
+    }
+    let mut wall_secs = Vec::with_capacity(opts.repeats as usize);
+    let mut perf = PerfStats::default();
+    let mut last: Option<(u64, u64, u32)> = None;
+    for _ in 0..opts.repeats.max(1) {
+        let _ = perfstats::take_thread();
+        let t0 = Instant::now();
+        let r = figures::run_one(cfg, &preset, scenario);
+        wall_secs.push(t0.elapsed().as_secs_f64());
+        perf.merge(&perfstats::take_thread());
+        let key = (r.stats.cycles, r.stats.instructions, r.rounds);
+        if let Some(prev) = last {
+            assert_eq!(prev, key, "{id}/{scenario:?}: repeats must be deterministic");
+        }
+        last = Some(key);
+    }
+    let (sim_cycles, instructions, rounds) = last.expect("at least one repeat");
+    CellBench {
+        app: id.name(),
+        scenario: scenario.name(),
+        path,
+        median_secs: median(&wall_secs),
+        min_secs: wall_secs.iter().copied().fold(f64::INFINITY, f64::min),
+        wall_secs,
+        sim_cycles,
+        instructions,
+        rounds,
+        perf,
+    }
+}
+
+/// Run a bench request: every (workload, scenario) cell, on the decoded
+/// path — plus, under `compare_reference`, the same cells on the
+/// reference path first, with simulated-result identity asserted.
+///
+/// The interpreter-path switch is process-global; concurrent launches on
+/// other threads stay *correct* either way (the paths are observationally
+/// identical — that is what the identity assertions pin), they just may
+/// be attributed to the other path's wall time. The CLI runs one bench
+/// at a time, so this does not arise outside the test suite.
+pub fn run_bench(cfg: &DeviceConfig, opts: &BenchOpts) -> BenchReport {
+    let mut cells = Vec::new();
+    if opts.compare_reference {
+        perfstats::set_reference_paths(true);
+        for &id in &opts.apps {
+            for &sc in &opts.scenarios {
+                cells.push(measure_cell(cfg, id, sc, opts, PATH_REFERENCE));
+            }
+        }
+    }
+    perfstats::set_reference_paths(false);
+    for &id in &opts.apps {
+        for &sc in &opts.scenarios {
+            let cell = measure_cell(cfg, id, sc, opts, PATH_DECODED);
+            if let Some(reference) = cells.iter().find(|c| {
+                c.path == PATH_REFERENCE && c.app == cell.app && c.scenario == cell.scenario
+            }) {
+                assert_eq!(
+                    (reference.sim_cycles, reference.instructions, reference.rounds),
+                    (cell.sim_cycles, cell.instructions, cell.rounds),
+                    "{}/{}: decoded path must reproduce the reference results",
+                    cell.app,
+                    cell.scenario,
+                );
+            }
+            cells.push(cell);
+        }
+    }
+    BenchReport {
+        schema: BENCH_SCHEMA,
+        kind: "hotpath".into(),
+        size: opts.size,
+        num_cus: cfg.num_cus,
+        repeats: opts.repeats.max(1),
+        warmup: opts.warmup,
+        cells,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonio;
+
+    #[test]
+    fn median_handles_odd_and_even_samples() {
+        assert_eq!(median(&[3.0]), 3.0);
+        assert_eq!(median(&[4.0, 1.0, 3.0]), 3.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn hotpath_bench_emits_versioned_json() {
+        let mut cfg = DeviceConfig::small();
+        cfg.num_cus = 4;
+        let opts = BenchOpts {
+            size: WorkloadSize::Tiny,
+            repeats: 1,
+            warmup: 0,
+            compare_reference: false,
+            apps: vec![registry::resolve("stress").unwrap()],
+            scenarios: vec![Scenario::from_name("scope").unwrap()],
+        };
+        let report = run_bench(&cfg, &opts);
+        assert_eq!(report.cells.len(), 1);
+        let c = &report.cells[0];
+        assert_eq!(c.app, "stress");
+        assert_eq!(c.scenario, "scope");
+        assert_eq!(c.path, PATH_DECODED);
+        assert!(c.sim_cycles > 0 && c.instructions > 0);
+        assert!(c.perf.launches > 0 && c.perf.events > 0);
+
+        let parsed = jsonio::parse(&report.to_json()).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_u32().unwrap(), BENCH_SCHEMA);
+        assert_eq!(parsed.get("kind").unwrap().as_str().unwrap(), "hotpath");
+        assert_eq!(parsed.get("size").unwrap().as_str().unwrap(), "tiny");
+        let cells = parsed.get("cells").unwrap().arr().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert!(cells[0].get("minstr_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(cells[0].get("cells_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        let totals = parsed.get("totals").unwrap();
+        assert!(totals.get("cells_per_sec").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn compare_reference_pins_identical_results_and_reports_speedup() {
+        let mut cfg = DeviceConfig::small();
+        cfg.num_cus = 4;
+        let opts = BenchOpts {
+            size: WorkloadSize::Tiny,
+            repeats: 1,
+            warmup: 0,
+            compare_reference: true,
+            apps: vec![registry::resolve("stress").unwrap()],
+            scenarios: vec![Scenario::from_name("srsp").unwrap()],
+        };
+        // run_bench itself asserts reference/decoded result identity.
+        let report = run_bench(&cfg, &opts);
+        assert_eq!(report.cells.len(), 2);
+        let speedup = report.speedup_vs_reference().expect("both paths measured");
+        assert!(speedup > 0.0);
+        let json = report.to_json();
+        let parsed = jsonio::parse(&json).unwrap();
+        let totals = parsed.get("totals").unwrap();
+        assert!(totals.get("speedup_vs_reference").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

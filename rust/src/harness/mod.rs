@@ -4,11 +4,13 @@
 //! `srsp worker` subprocesses), and the machine-readable JSON/CSV
 //! [`report`] emission plus the distributed merge stage.
 
+pub mod bench;
 pub mod figures;
 pub mod presets;
 pub mod report;
 pub mod runner;
 
+pub use bench::{BenchOpts, BenchReport, CellBench, BENCH_SCHEMA};
 pub use figures::{fig4_speedup, fig5_l2, fig6_overhead, scaling_sweep, FigureCell, FigureTable};
 pub use presets::{WorkloadPreset, WorkloadSize, DEFAULT_SEED};
 pub use report::{format_table, geomean, PartialReport, Report, ReportFormat, ReportRow};

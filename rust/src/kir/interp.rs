@@ -5,12 +5,27 @@
 //! each) up to a quantum; memory, atomic and compute instructions block
 //! the work-group until their computed completion cycle — the event loop
 //! in [`crate::gpu::device`] then reschedules it.
+//!
+//! Two interpreters share the same semantics:
+//!
+//! * [`step`] — the original instruction-by-instruction reference path,
+//!   kept frozen so every optimization has an in-tree semantic oracle
+//!   (selected by [`crate::sim::perfstats::set_reference_paths`]).
+//! * [`step_decoded`] — the hot path over a [`DecodedProgram`]: operands
+//!   pre-resolved at decode time (register/immediate ALU split, load
+//!   offsets pre-widened), the per-instruction `issue_cycles` config
+//!   lookup hoisted out of the dispatch loop, and the instruction
+//!   counter batched per quantum instead of bumped per instruction.
+//!
+//! Both run the planned-access replay through one shared buffer that is
+//! recycled across `Compute` events instead of allocated per event.
 
-use super::inst::{Inst, Program, Reg, Src, NUM_REGS};
+use super::inst::{AluOp, Inst, Program, Reg, Src, StatCounter, NUM_REGS};
 use crate::config::Protocol;
+use crate::mem::hierarchy::PlannedAccess;
 use crate::mem::{Addr, MemSystem};
 use crate::sim::Cycle;
-use crate::sync::{engine, MemOrder, Scope};
+use crate::sync::{engine, AtomicOp, MemOrder, Scope};
 
 /// Max consecutive non-memory instructions executed per event — bounds
 /// event-loop starvation from compute-only loops.
@@ -25,16 +40,19 @@ pub struct MemAccess<'a> {
     pub mem: &'a mut MemSystem,
     pub cu: u32,
     /// Recorded timing classes, replayed after the engine returns.
-    pub steps: Vec<crate::mem::hierarchy::PlannedAccess>,
+    pub steps: Vec<PlannedAccess>,
 }
 
 impl<'a> MemAccess<'a> {
     pub fn new(mem: &'a mut MemSystem, cu: u32) -> Self {
-        Self {
-            mem,
-            cu,
-            steps: Vec::with_capacity(64),
-        }
+        Self::with_buffer(mem, cu, Vec::with_capacity(64))
+    }
+
+    /// Record into a caller-provided buffer (cleared here), so the
+    /// interpreter can recycle one allocation across compute events.
+    pub fn with_buffer(mem: &'a mut MemSystem, cu: u32, mut steps: Vec<PlannedAccess>) -> Self {
+        steps.clear();
+        Self { mem, cu, steps }
     }
 
     pub fn read_u32(&mut self, addr: Addr) -> u32 {
@@ -92,8 +110,12 @@ pub struct WgContext {
     pub pc: u32,
     pub regs: [u64; NUM_REGS],
     pub halted: bool,
-    /// Planned compute-op accesses awaiting timed replay.
-    pending: std::collections::VecDeque<crate::mem::hierarchy::PlannedAccess>,
+    /// Planned compute-op accesses awaiting timed replay. The buffer is
+    /// recycled across compute events (`pending_head` walks it instead of
+    /// popping), so steady-state execution allocates nothing per event.
+    pending: Vec<PlannedAccess>,
+    /// Replay cursor into `pending`.
+    pending_head: usize,
     /// Compute cycles charged after the last pending access.
     pending_tail: Cycle,
 }
@@ -106,7 +128,8 @@ impl WgContext {
             pc: 0,
             regs: [0; NUM_REGS],
             halted: false,
-            pending: std::collections::VecDeque::new(),
+            pending: Vec::new(),
+            pending_head: 0,
             pending_tail: 0,
         }
     }
@@ -139,8 +162,49 @@ pub enum StepResult {
     Halted,
 }
 
+/// Replay up to [`REPLAY_BATCH`] pending compute-op accesses. On drain,
+/// the compute-cycle tail is charged and the buffer is reset for reuse
+/// (capacity retained). Shared by both interpreter paths.
+#[inline]
+fn replay_pending(ctx: &mut WgContext, mem: &mut MemSystem, mut t: Cycle) -> Cycle {
+    let end = (ctx.pending_head + REPLAY_BATCH).min(ctx.pending.len());
+    while ctx.pending_head < end {
+        let acc = ctx.pending[ctx.pending_head];
+        ctx.pending_head += 1;
+        t = mem.replay_access(ctx.cu, acc, t);
+    }
+    if ctx.pending_head == ctx.pending.len() {
+        ctx.pending.clear();
+        ctx.pending_head = 0;
+        t += std::mem::take(&mut ctx.pending_tail);
+    }
+    t
+}
+
+/// Hand the recycled pending buffer to the engine, run it, and take the
+/// recorded plan back. Shared by both interpreter paths.
+#[inline]
+fn run_compute(
+    ctx: &mut WgContext,
+    mem: &mut MemSystem,
+    engine_impl: &mut dyn ComputeEngine,
+    kind: u32,
+    arg: u64,
+) -> u64 {
+    debug_assert!(ctx.pending.is_empty(), "compute with a plan still pending");
+    ctx.pending_head = 0;
+    let buf = std::mem::take(&mut ctx.pending);
+    let mut access = MemAccess::with_buffer(mem, ctx.cu, buf);
+    let items = engine_impl.compute(&mut access, kind, arg);
+    ctx.pending = access.steps;
+    ctx.pending_tail = items * mem.cfg.compute_cycles_per_item;
+    items
+}
+
 /// Execute up to one blocking instruction (plus up to [`QUANTUM_INSTS`]
 /// non-blocking ones before it) starting at `now`.
+///
+/// This is the frozen reference path; [`step_decoded`] is the hot path.
 pub fn step(
     ctx: &mut WgContext,
     prog: &Program,
@@ -153,14 +217,7 @@ pub fn step(
     let mut t = now;
     // Replay pending compute-op accesses first (a few per event).
     if !ctx.pending.is_empty() {
-        for _ in 0..REPLAY_BATCH {
-            let Some(acc) = ctx.pending.pop_front() else { break };
-            t = mem.replay_access(ctx.cu, acc, t);
-        }
-        if ctx.pending.is_empty() {
-            t += std::mem::take(&mut ctx.pending_tail);
-        }
-        return StepResult::Continue(t);
+        return StepResult::Continue(replay_pending(ctx, mem, t));
     }
     for _ in 0..QUANTUM_INSTS {
         assert!(
@@ -260,14 +317,9 @@ pub fn step(
                 return StepResult::Continue(out.done);
             }
             Inst::Compute { kind, arg } => {
-                mem.stats.compute_ops += 1;
                 let arg = ctx.get(arg);
-                let mut access = MemAccess::new(mem, ctx.cu);
-                let items = engine_impl.compute(&mut access, kind, arg);
-                let steps = std::mem::take(&mut access.steps);
-                mem.stats.compute_items += items;
-                ctx.pending = steps.into();
-                ctx.pending_tail = items * mem.cfg.compute_cycles_per_item;
+                let items = run_compute(ctx, mem, engine_impl, kind, arg);
+                mem.stats.record_compute(items);
                 ctx.pc += 1;
                 if ctx.pending.is_empty() {
                     return StepResult::Continue(t + std::mem::take(&mut ctx.pending_tail));
@@ -278,6 +330,262 @@ pub fn step(
         }
     }
     // Quantum expired without a blocking op: yield, stay runnable.
+    StepResult::Continue(t)
+}
+
+/// One pre-decoded instruction: operand shapes resolved once at decode
+/// time so the dispatch loop does no `Src` matching and no offset
+/// widening per execution.
+#[derive(Debug, Clone, Copy)]
+enum DInst {
+    Imm { dst: Reg, val: u64 },
+    /// ALU with a register right-hand operand.
+    AluRR { op: AluOp, dst: Reg, a: Reg, b: Reg },
+    /// ALU with an immediate right-hand operand (pre-extracted).
+    AluRI { op: AluOp, dst: Reg, a: Reg, b: u64 },
+    /// Load with the offset pre-widened to the add width.
+    Ld { dst: Reg, base: Reg, off: i64, size: u8 },
+    St { base: Reg, off: i64, src: Reg, size: u8 },
+    Atomic {
+        dst: Reg,
+        op: AtomicOp,
+        addr: Reg,
+        operand: Src,
+        cmp: Src,
+        order: MemOrder,
+        scope: Scope,
+        remote: bool,
+    },
+    Br { target: u32 },
+    Bnz { cond: Reg, target: u32 },
+    Bz { cond: Reg, target: u32 },
+    Compute { kind: u32, arg: Reg },
+    WgId { dst: Reg },
+    NumWgs { dst: Reg },
+    CuId { dst: Reg },
+    Stat { counter: StatCounter },
+    Halt,
+}
+
+/// A [`Program`] decoded once per launch for the hot interpreter path.
+/// Decoding is a pure representation change — [`step_decoded`] over the
+/// decoded form and [`step`] over the source form are observationally
+/// identical, including trap behaviour (out-of-range branch targets trap
+/// at execution time with the same `pc` assertion, not at decode time).
+#[derive(Debug, Clone)]
+pub struct DecodedProgram {
+    insts: Vec<DInst>,
+}
+
+impl DecodedProgram {
+    pub fn decode(p: &Program) -> Self {
+        // Exhaustive match (no wildcard): a new Inst variant cannot ship
+        // without deciding its decoded form — the drift guard that keeps
+        // the two interpreters in lockstep.
+        let insts = p
+            .insts
+            .iter()
+            .map(|inst| match *inst {
+                Inst::Imm { dst, val } => DInst::Imm { dst, val },
+                Inst::Alu { op, dst, a, b } => match b {
+                    Src::R(r) => DInst::AluRR { op, dst, a, b: r },
+                    Src::I(v) => DInst::AluRI { op, dst, a, b: v },
+                },
+                Inst::Ld { dst, base, off, size } => DInst::Ld {
+                    dst,
+                    base,
+                    off: off as i64,
+                    size,
+                },
+                Inst::St { base, off, src, size } => DInst::St {
+                    base,
+                    off: off as i64,
+                    src,
+                    size,
+                },
+                Inst::Atomic {
+                    dst,
+                    op,
+                    addr,
+                    operand,
+                    cmp,
+                    order,
+                    scope,
+                    remote,
+                } => DInst::Atomic {
+                    dst,
+                    op,
+                    addr,
+                    operand,
+                    cmp,
+                    order,
+                    scope,
+                    remote,
+                },
+                Inst::Br { target } => DInst::Br { target },
+                Inst::Bnz { cond, target } => DInst::Bnz { cond, target },
+                Inst::Bz { cond, target } => DInst::Bz { cond, target },
+                Inst::Compute { kind, arg } => DInst::Compute { kind, arg },
+                Inst::WgId { dst } => DInst::WgId { dst },
+                Inst::NumWgs { dst } => DInst::NumWgs { dst },
+                Inst::CuId { dst } => DInst::CuId { dst },
+                Inst::Stat { counter } => DInst::Stat { counter },
+                Inst::Halt => DInst::Halt,
+            })
+            .collect();
+        Self { insts }
+    }
+
+    pub fn len(&self) -> usize {
+        self.insts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.insts.is_empty()
+    }
+}
+
+/// The hot-path twin of [`step`], over a [`DecodedProgram`]. Same
+/// semantics instruction for instruction; the speed comes from decode-once
+/// operands, the hoisted `issue_cycles` lookup, and batching the retired-
+/// instruction counter per quantum (flushed on every exit path, so the
+/// final `instructions` total is identical to the reference).
+pub fn step_decoded(
+    ctx: &mut WgContext,
+    prog: &DecodedProgram,
+    mem: &mut MemSystem,
+    protocol: Protocol,
+    num_wgs: u32,
+    engine_impl: &mut dyn ComputeEngine,
+    now: Cycle,
+) -> StepResult {
+    let mut t = now;
+    if !ctx.pending.is_empty() {
+        return StepResult::Continue(replay_pending(ctx, mem, t));
+    }
+    let issue = mem.cfg.issue_cycles;
+    let mut executed: u64 = 0;
+    for _ in 0..QUANTUM_INSTS {
+        assert!(
+            (ctx.pc as usize) < prog.insts.len(),
+            "KIR: pc {} out of bounds (wg {})",
+            ctx.pc,
+            ctx.wg_id
+        );
+        let inst = prog.insts[ctx.pc as usize];
+        executed += 1;
+        match inst {
+            DInst::Imm { dst, val } => {
+                ctx.set(dst, val);
+                ctx.pc += 1;
+                t += issue;
+            }
+            DInst::AluRR { op, dst, a, b } => {
+                let v = op.apply(ctx.get(a), ctx.get(b));
+                ctx.set(dst, v);
+                ctx.pc += 1;
+                t += issue;
+            }
+            DInst::AluRI { op, dst, a, b } => {
+                let v = op.apply(ctx.get(a), b);
+                ctx.set(dst, v);
+                ctx.pc += 1;
+                t += issue;
+            }
+            DInst::WgId { dst } => {
+                ctx.set(dst, ctx.wg_id as u64);
+                ctx.pc += 1;
+                t += issue;
+            }
+            DInst::NumWgs { dst } => {
+                ctx.set(dst, num_wgs as u64);
+                ctx.pc += 1;
+                t += issue;
+            }
+            DInst::CuId { dst } => {
+                ctx.set(dst, ctx.cu as u64);
+                ctx.pc += 1;
+                t += issue;
+            }
+            DInst::Stat { counter } => {
+                // Hardware event counters are free: no issue cycles.
+                match counter {
+                    StatCounter::TaskExecuted => mem.stats.tasks_executed += 1,
+                    StatCounter::StealAttempt => mem.stats.steal_attempts += 1,
+                    StatCounter::StealSuccess => mem.stats.tasks_stolen += 1,
+                    StatCounter::StealFail => mem.stats.steal_failures += 1,
+                }
+                ctx.pc += 1;
+            }
+            DInst::Br { target } => {
+                ctx.pc = target;
+                t += issue;
+            }
+            DInst::Bnz { cond, target } => {
+                ctx.pc = if ctx.get(cond) != 0 { target } else { ctx.pc + 1 };
+                t += issue;
+            }
+            DInst::Bz { cond, target } => {
+                ctx.pc = if ctx.get(cond) == 0 { target } else { ctx.pc + 1 };
+                t += issue;
+            }
+            DInst::Halt => {
+                ctx.halted = true;
+                mem.stats.instructions += executed;
+                return StepResult::Halted;
+            }
+            DInst::Ld { dst, base, off, size } => {
+                let addr = ctx.get(base).wrapping_add_signed(off);
+                mem.stats.instructions += executed;
+                let (v, done) = mem.l1_read(ctx.cu, addr, size as usize, t);
+                ctx.set(dst, v);
+                ctx.pc += 1;
+                return StepResult::Continue(done);
+            }
+            DInst::St { base, off, src, size } => {
+                let addr = ctx.get(base).wrapping_add_signed(off);
+                mem.stats.instructions += executed;
+                let done = mem.l1_write(ctx.cu, addr, size as usize, ctx.get(src), t);
+                ctx.pc += 1;
+                return StepResult::Continue(done);
+            }
+            DInst::Atomic {
+                dst,
+                op,
+                addr,
+                operand,
+                cmp,
+                order,
+                scope,
+                remote,
+            } => {
+                let a = ctx.get(addr);
+                let operand = ctx.src(operand) as u32;
+                let cmp = ctx.src(cmp) as u32;
+                mem.stats.instructions += executed;
+                let out = if remote {
+                    engine::remote_op(mem, protocol, ctx.cu, a, op, order, operand, cmp, t)
+                } else {
+                    engine::sync_op(mem, protocol, ctx.cu, a, op, order, scope, operand, cmp, t)
+                };
+                ctx.set(dst, out.value as u64);
+                ctx.pc += 1;
+                return StepResult::Continue(out.done);
+            }
+            DInst::Compute { kind, arg } => {
+                mem.stats.instructions += executed;
+                let arg = ctx.get(arg);
+                let items = run_compute(ctx, mem, engine_impl, kind, arg);
+                mem.stats.record_compute(items);
+                ctx.pc += 1;
+                if ctx.pending.is_empty() {
+                    return StepResult::Continue(t + std::mem::take(&mut ctx.pending_tail));
+                }
+                return StepResult::Continue(t);
+            }
+        }
+    }
+    mem.stats.instructions += executed;
     StepResult::Continue(t)
 }
 
@@ -294,6 +602,19 @@ mod tests {
         let mut t = 0;
         loop {
             match step(&mut ctx, prog, mem, Protocol::SRSP, 1, &mut eng, t) {
+                StepResult::Continue(next) => t = next.max(t + 1),
+                StepResult::Halted => return (ctx, t),
+            }
+        }
+    }
+
+    fn run_to_halt_decoded(prog: &Program, mem: &mut MemSystem) -> (WgContext, Cycle) {
+        let d = DecodedProgram::decode(prog);
+        let mut ctx = WgContext::new(0, 0);
+        let mut eng = NoopEngine;
+        let mut t = 0;
+        loop {
+            match step_decoded(&mut ctx, &d, mem, Protocol::SRSP, 1, &mut eng, t) {
                 StepResult::Continue(next) => t = next.max(t + 1),
                 StepResult::Halted => return (ctx, t),
             }
@@ -466,5 +787,152 @@ mod tests {
         let mut ctx = WgContext::new(0, 0);
         let mut eng = NoopEngine;
         let _ = step(&mut ctx, &p, &mut mem, Protocol::SRSP, 1, &mut eng, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "pc")]
+    fn decoded_running_off_the_end_traps() {
+        let p = Program {
+            insts: vec![Inst::Imm {
+                dst: Reg(0),
+                val: 1,
+            }],
+            labels: vec![],
+        };
+        let d = DecodedProgram::decode(&p);
+        let mut mem = MemSystem::new(DeviceConfig::small());
+        let mut ctx = WgContext::new(0, 0);
+        let mut eng = NoopEngine;
+        let _ = step_decoded(&mut ctx, &d, &mut mem, Protocol::SRSP, 1, &mut eng, 0);
+    }
+
+    /// The equivalence oracle in miniature: every test program must leave
+    /// identical timing, stats and memory under both interpreter paths.
+    #[test]
+    fn decoded_matches_reference() {
+        let programs: Vec<Program> = vec![
+            {
+                // ALU/branch loop + store (covers AluRR/AluRI split).
+                let mut a = Asm::new();
+                let acc = a.reg();
+                let i = a.reg();
+                let c = a.reg();
+                let out = a.reg();
+                a.imm(acc, 0);
+                a.imm(i, 0);
+                a.label("loop");
+                a.add(acc, acc, Src::R(i));
+                a.add(i, i, Src::I(3));
+                a.lt_u(c, i, Src::I(30));
+                a.bnz(c, "loop");
+                a.imm(out, 0x100);
+                a.st(out, 0, acc, 4);
+                a.ld(acc, out, 0, 4);
+                a.halt();
+                a.finish()
+            },
+            {
+                // Atomic CAS lock + intrinsics (covers Atomic/WgId paths).
+                let mut a = Asm::new();
+                let lock = a.reg();
+                let ctr = a.reg();
+                let old = a.reg();
+                let tmp = a.reg();
+                a.imm(lock, 0x300);
+                a.imm(ctr, 0x340);
+                a.label("spin");
+                a.atomic(
+                    old,
+                    AtomicOp::Cas,
+                    lock,
+                    Src::I(1),
+                    Src::I(0),
+                    MemOrder::Acquire,
+                    Scope::Wg,
+                );
+                a.bnz(old, "spin");
+                a.ld(tmp, ctr, 0, 4);
+                a.add(tmp, tmp, Src::I(1));
+                a.st(ctr, 0, tmp, 4);
+                a.atomic(
+                    old,
+                    AtomicOp::Store,
+                    lock,
+                    Src::I(0),
+                    Src::I(0),
+                    MemOrder::Release,
+                    Scope::Wg,
+                );
+                a.halt();
+                a.finish()
+            },
+        ];
+        for p in &programs {
+            let mut ref_mem = MemSystem::new(DeviceConfig::small());
+            let (ref_ctx, ref_t) = run_to_halt(p, &mut ref_mem);
+            let mut fast_mem = MemSystem::new(DeviceConfig::small());
+            let (fast_ctx, fast_t) = run_to_halt_decoded(p, &mut fast_mem);
+            assert_eq!(ref_t, fast_t, "completion cycle must match");
+            assert_eq!(ref_ctx.pc, fast_ctx.pc);
+            assert_eq!(ref_ctx.regs, fast_ctx.regs);
+            assert_eq!(ref_mem.stats.instructions, fast_mem.stats.instructions);
+            assert_eq!(ref_mem.stats.l1_hits, fast_mem.stats.l1_hits);
+            assert_eq!(ref_mem.stats.l1_misses, fast_mem.stats.l1_misses);
+            assert_eq!(
+                ref_mem.stats.sync_overhead_cycles,
+                fast_mem.stats.sync_overhead_cycles
+            );
+        }
+    }
+
+    /// The planned-access buffer must be recycled across compute events:
+    /// after the first plan drains, the second compute records into the
+    /// same allocation (no per-event Vec).
+    #[test]
+    fn compute_buffer_recycled_across_events() {
+        struct BurstEngine;
+        impl ComputeEngine for BurstEngine {
+            fn compute(&mut self, mem: &mut MemAccess<'_>, _kind: u32, arg: u64) -> u64 {
+                for k in 0..12u64 {
+                    mem.write_u32(0x800 + arg * 0x100 + k * 4, k as u32);
+                }
+                12
+            }
+        }
+        let mut a = Asm::new();
+        let r = a.reg();
+        a.imm(r, 0);
+        a.compute(1, r);
+        a.imm(r, 1);
+        a.compute(1, r);
+        a.halt();
+        let p = a.finish();
+        let d = DecodedProgram::decode(&p);
+        let mut mem = MemSystem::new(DeviceConfig::small());
+        let mut ctx = WgContext::new(0, 0);
+        let mut eng = BurstEngine;
+        let mut t = 0;
+        let mut buf_ptr: Option<*const PlannedAccess> = None;
+        loop {
+            match step_decoded(&mut ctx, &d, &mut mem, Protocol::SRSP, 1, &mut eng, t) {
+                StepResult::Continue(n) => t = n.max(t + 1),
+                StepResult::Halted => break,
+            }
+            if !ctx.pending.is_empty() {
+                match buf_ptr {
+                    None => buf_ptr = Some(ctx.pending.as_ptr()),
+                    Some(ptr) => assert_eq!(
+                        ptr,
+                        ctx.pending.as_ptr(),
+                        "second compute must reuse the first plan's allocation"
+                    ),
+                }
+            }
+        }
+        assert!(ctx.pending.is_empty());
+        assert_eq!(ctx.pending_head, 0);
+        assert!(ctx.pending.capacity() >= 12, "capacity retained for reuse");
+        assert_eq!(mem.stats.compute_ops, 2);
+        assert_eq!(mem.stats.compute_items, 24);
     }
 }

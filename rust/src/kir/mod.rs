@@ -22,4 +22,6 @@ pub mod interp;
 
 pub use asm::Asm;
 pub use inst::{AluOp, Inst, Program, Reg, Src};
-pub use interp::{ComputeEngine, MemAccess, NoopEngine, StepResult, WgContext, QUANTUM_INSTS};
+pub use interp::{
+    ComputeEngine, DecodedProgram, MemAccess, NoopEngine, StepResult, WgContext, QUANTUM_INSTS,
+};

@@ -25,6 +25,7 @@ use srsp::coordinator::{
     classic_grid, full_grid, scaling_cells, shard, ExecutionPlan, Seeding, SweepPlan,
     MAX_SWEEP_AXES, RATIO_SCENARIOS,
 };
+use srsp::harness::bench::{self, BenchOpts};
 use srsp::harness::figures::{
     fig4_speedup, fig5_l2, fig6_overhead, run_one, scaling_rows, sweep_speedup_rows_report,
 };
@@ -55,6 +56,11 @@ COMMANDS:
                            protocol × r × device-size surface), each cell
                            oracle-gated; see `srsp list-axes`
     run                    Run one workload under one scenario, print stats
+    bench [kind]           Measure simulator throughput and emit a versioned
+                           BENCH_*.json artifact (kinds: hotpath, list;
+                           default hotpath). --compare-reference also times
+                           the pre-decode reference interpreter and records
+                           the speedup, asserting identical simulated results
     validate               Run every workload/scenario and check the oracles
     ci-smoke               Tiny-scale workload × scenario matrix, oracle-checked
                            in parallel; exits non-zero on any mismatch
@@ -87,8 +93,9 @@ OPTIONS:
                                 axis's registry points)
     --ratios <r1,r2,...>        Shorthand for --points remote-ratio=...
     --cu-counts <n1,n2,...>     Shorthand for --points cu-count=...
-    --cus <n>                   Override CU count (ci-smoke default: 8)
-    --size <tiny|paper>         Workload scale (default paper; ci-smoke: tiny)
+    --cus <n>                   Override CU count (ci-smoke/bench default: 8)
+    --size <tiny|paper>         Workload scale (default paper; ci-smoke and
+                                bench: tiny)
     --jobs <n>                  In-process executor threads for matrix
                                 commands (default: all available cores)
     --workers <n>               Distribute a registry-axis sweep over <n>
@@ -102,6 +109,10 @@ OPTIONS:
                                 cell from base <n> (decimal or 0x hex);
                                 omit to use the classic shared seed that
                                 reproduces the paper figures
+    --repeats <n>               Timed repetitions per bench cell (default 5)
+    --warmup <n>                Untimed warmup runs per bench cell (default 1)
+    --compare-reference         bench: also measure the reference interpreter
+                                path and record the decoded-path speedup
     --report <json|csv>         Emit a machine-readable matrix report
     --out <file>                Write the report to <file> (default stdout)
     --graph <file.gr|file.mtx>  Use a real DIMACS/MatrixMarket graph
@@ -144,6 +155,19 @@ struct Opts {
     out: Option<String>,
     graph: Option<String>,
     config: Option<String>,
+    /// Positional bench kind (`bench` command only), peeled off in
+    /// `main` before flag parsing.
+    bench_kind: Option<String>,
+    /// Was `--scenario` given explicitly? (`bench` narrows its scenario
+    /// set only on an explicit flag; the default field value means
+    /// "bench the full hot-path set".)
+    scenario_given: bool,
+    /// Timed repetitions per bench cell (`--repeats`, bench only).
+    repeats: Option<u32>,
+    /// Untimed warmup runs per bench cell (`--warmup`, bench only).
+    warmup: Option<u32>,
+    /// Also time the reference interpreter path (`--compare-reference`).
+    compare_reference: bool,
 }
 
 /// Record grid points for `axis`, rejecting duplicates and out-of-domain
@@ -207,6 +231,11 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
         out: None,
         graph: None,
         config: None,
+        bench_kind: None,
+        scenario_given: false,
+        repeats: None,
+        warmup: None,
+        compare_reference: false,
     };
     let mut i = 0;
     while i < args.len() {
@@ -239,6 +268,7 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
                 let v = val()?;
                 o.scenario =
                     Scenario::from_name(&v).ok_or_else(|| format!("unknown scenario '{v}'"))?;
+                o.scenario_given = true;
             }
             "--protocol" => {
                 let v = val()?;
@@ -345,6 +375,15 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
             "--out" => o.out = Some(val()?),
             "--graph" => o.graph = Some(val()?),
             "--config" => o.config = Some(val()?),
+            "--repeats" => {
+                let n: u32 = val()?.parse().map_err(|e| format!("--repeats: {e}"))?;
+                if n == 0 {
+                    return Err("--repeats needs at least 1".into());
+                }
+                o.repeats = Some(n);
+            }
+            "--warmup" => o.warmup = Some(val()?.parse().map_err(|e| format!("--warmup: {e}"))?),
+            "--compare-reference" => o.compare_reference = true,
             other => return Err(format!("unknown option '{other}'")),
         }
         i += 1;
@@ -539,6 +578,25 @@ impl Opts {
         Ok(())
     }
 
+    /// The measurement flags belong to `bench` alone; anywhere else
+    /// they would be silently ignored, so they are rejected up front
+    /// like the other scoped flags.
+    fn check_bench_flags(&self, cmd: &str) -> Result<(), String> {
+        if cmd == "bench" {
+            return Ok(());
+        }
+        if self.repeats.is_some() {
+            return Err(format!("--repeats applies to bench, not '{cmd}'"));
+        }
+        if self.warmup.is_some() {
+            return Err(format!("--warmup applies to bench, not '{cmd}'"));
+        }
+        if self.compare_reference {
+            return Err(format!("--compare-reference applies to bench, not '{cmd}'"));
+        }
+        Ok(())
+    }
+
     /// The scenario `run` executes: `--protocol <name>`'s canonical
     /// scenario when given, `--scenario` otherwise.
     fn run_scenario(&self) -> Scenario {
@@ -653,8 +711,24 @@ fn main() {
         eprint!("{USAGE}");
         std::process::exit(2);
     };
-    let opts = match parse_opts(&args[1..]) {
-        Ok(o) => o,
+    // `bench` takes an optional positional kind (`srsp bench hotpath`)
+    // ahead of the flags; everything after the command is flag-only for
+    // every other command.
+    let mut flag_args = &args[1..];
+    let mut bench_kind = None;
+    if cmd == "bench" {
+        if let Some(first) = flag_args.first() {
+            if !first.starts_with('-') {
+                bench_kind = Some(first.clone());
+                flag_args = &flag_args[1..];
+            }
+        }
+    }
+    let opts = match parse_opts(flag_args) {
+        Ok(mut o) => {
+            o.bench_kind = bench_kind;
+            o
+        }
         Err(e) => {
             eprintln!("error: {e}\n");
             eprint!("{USAGE}");
@@ -818,6 +892,7 @@ fn run_axis_sweep(o: &Opts, axes: &[AxisId]) -> Result<(), String> {
 
 fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
     o.check_distributed_flags(cmd)?;
+    o.check_bench_flags(cmd)?;
     match cmd {
         "help" | "--help" | "-h" => print!("{USAGE}"),
         "table1" => {
@@ -1012,6 +1087,83 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                 r.app, r.scenario, r.rounds, r.converged
             );
             println!("{}", r.stats);
+        }
+        "bench" => {
+            o.reject_params(cmd)?;
+            o.reject_proto_params(cmd)?;
+            o.reject_protocol(cmd)?;
+            o.reject_axis_points(cmd)?;
+            if o.report.is_some() {
+                return Err("bench always emits BENCH_*.json; --report does not apply".into());
+            }
+            if o.jobs.is_some() {
+                return Err(
+                    "bench times a serial hot loop (parallel cells would contend for \
+                     cores and skew the numbers); --jobs does not apply"
+                        .into(),
+                );
+            }
+            if o.seed.is_some() || o.graph.is_some() {
+                return Err(
+                    "bench runs the fixed registry presets so BENCH_*.json artifacts stay \
+                     comparable across runs; --seed/--graph do not apply"
+                        .into(),
+                );
+            }
+            match o.bench_kind.as_deref().unwrap_or("hotpath") {
+                "list" => {
+                    println!("hotpath    prk × scope/srsp/rsp — the simulator's event hot loop");
+                }
+                "hotpath" => {
+                    let mut cfg = device_config(o)?;
+                    if o.cus.is_none() && o.config.is_none() {
+                        // Same small-device default as ci-smoke: fast in
+                        // CI, still multi-CU enough for real contention.
+                        cfg.num_cus = 8;
+                    }
+                    let size = o.size.unwrap_or(WorkloadSize::Tiny);
+                    let mut bopts = BenchOpts::hotpath(size);
+                    if let Some(app) = o.app {
+                        bopts.apps = vec![app];
+                    }
+                    if o.scenario_given {
+                        bopts.scenarios = vec![o.scenario];
+                    }
+                    if let Some(n) = o.repeats {
+                        bopts.repeats = n;
+                    }
+                    if let Some(n) = o.warmup {
+                        bopts.warmup = n;
+                    }
+                    bopts.compare_reference = o.compare_reference;
+                    eprintln!(
+                        "bench hotpath: {} app(s) × {} scenario(s) at {size:?} scale on {} \
+                         CUs, {} repeat(s) + {} warmup{} ...",
+                        bopts.apps.len(),
+                        bopts.scenarios.len(),
+                        cfg.num_cus,
+                        bopts.repeats,
+                        bopts.warmup,
+                        if bopts.compare_reference {
+                            ", reference comparison on"
+                        } else {
+                            ""
+                        },
+                    );
+                    let report = bench::run_bench(&cfg, &bopts);
+                    eprint!("{}", report.render_human());
+                    match &o.out {
+                        Some(p) => {
+                            std::fs::write(p, report.to_json()).map_err(|e| format!("{p}: {e}"))?;
+                            eprintln!("wrote {p}");
+                        }
+                        None => print!("{}", report.to_json()),
+                    }
+                }
+                other => {
+                    return Err(format!("unknown bench kind '{other}' (try `srsp bench list`)"));
+                }
+            }
         }
         "validate" => {
             o.reject_params(cmd)?;

@@ -11,6 +11,8 @@
 //! * Value-accurate: lines carry real bytes, so an un-synchronized reader
 //!   genuinely observes stale data.
 
+use std::cell::Cell;
+
 use super::sfifo::{Sfifo, SfifoEntry};
 use super::{LineAddr, Ticket};
 
@@ -73,6 +75,14 @@ pub struct WcCache {
     /// LRU stamps parallel to `slots`.
     stamps: Vec<u64>,
     clock: u64,
+    /// Last-touched `(line, slot)` hint for [`Self::find`]: spatial
+    /// locality makes consecutive accesses overwhelmingly hit the same
+    /// line, so the hint skips the way-scan on the dominant path. The
+    /// hint is *verified* against the slot before use — a stale hint is
+    /// never wrong, only slow — and cleared on invalidations for
+    /// hygiene. Purely a lookup accelerator: observable behaviour is
+    /// identical with or without it.
+    last: Cell<Option<(LineAddr, usize)>>,
     pub sfifo: Sfifo,
 }
 
@@ -88,6 +98,7 @@ impl WcCache {
             slots: vec![None; n],
             stamps: vec![0; n],
             clock: 0,
+            last: Cell::new(None),
             sfifo: Sfifo::new(sfifo_capacity as usize),
         }
     }
@@ -104,8 +115,20 @@ impl WcCache {
     }
 
     fn find(&self, line: LineAddr) -> Option<usize> {
-        self.set_range(line)
-            .find(|&i| matches!(&self.slots[i], Some(l) if l.addr == line))
+        // Verified fast path: trust the hint only if the slot still holds
+        // exactly this line.
+        if let Some((l, i)) = self.last.get() {
+            if l == line && matches!(&self.slots[i], Some(x) if x.addr == line) {
+                return Some(i);
+            }
+        }
+        let hit = self
+            .set_range(line)
+            .find(|&i| matches!(&self.slots[i], Some(l) if l.addr == line));
+        if let Some(i) = hit {
+            self.last.set(Some((line, i)));
+        }
+        hit
     }
 
     #[inline]
@@ -124,6 +147,7 @@ impl WcCache {
         }
         // Evict LRU.
         let lru = range.min_by_key(|&i| self.stamps[i]).unwrap();
+        self.last.set(None);
         let old = self.slots[lru].take().unwrap();
         let wb = (old.dirty != 0).then(|| Writeback {
             line: old.addr,
@@ -221,6 +245,7 @@ impl WcCache {
             }
         };
         self.touch(slot);
+        self.last.set(Some((line, slot)));
         let l = self.slots[slot].as_mut().unwrap();
         for k in 0..64 {
             if mask & (1 << k) != 0 {
@@ -273,6 +298,7 @@ impl WcCache {
             }
         };
         self.touch(slot);
+        self.last.set(Some((line, slot)));
         let l = self.slots[slot].as_mut().unwrap();
         for k in 0..64 {
             if l.dirty & (1 << k) == 0 {
@@ -319,6 +345,7 @@ impl WcCache {
     /// cannot serve stale data afterwards). Dirty bytes are returned.
     pub fn invalidate_line(&mut self, line: LineAddr) -> Option<Writeback> {
         let i = self.find(line)?;
+        self.last.set(None);
         let l = self.slots[i].take().unwrap();
         (l.dirty != 0).then(|| Writeback {
             line,
@@ -332,6 +359,7 @@ impl WcCache {
     ///
     /// Returns the number of valid lines discarded (locality lost).
     pub fn flash_invalidate(&mut self) -> u64 {
+        self.last.set(None);
         let mut dropped = 0;
         for s in &mut self.slots {
             if let Some(l) = s {
@@ -494,6 +522,39 @@ mod tests {
         assert_eq!(wb.mask, 0xFF);
         assert!(!c.present(7));
         assert!(c.invalidate_line(7).is_none());
+    }
+
+    #[test]
+    fn last_line_hint_set_on_find_and_cleared_on_invalidate() {
+        let mut c = cache();
+        c.write_bytes(5, 0, 4, 1);
+        let slot = c.find(5).unwrap();
+        assert_eq!(c.last.get(), Some((5, slot)));
+        c.invalidate_line(5);
+        assert_eq!(c.last.get(), None, "invalidate must drop the hint");
+        assert!(!c.present(5));
+    }
+
+    #[test]
+    fn last_line_hint_cleared_on_flash_invalidate() {
+        let mut c = cache();
+        c.write_bytes(5, 0, 4, 1);
+        while !matches!(c.drain_step(None), DrainStep::Done) {}
+        assert!(c.last.get().is_some());
+        c.flash_invalidate();
+        assert_eq!(c.last.get(), None, "flush must drop the hint");
+        assert!(!c.present(5));
+    }
+
+    #[test]
+    fn stale_hint_after_eviction_is_verified_not_trusted() {
+        let mut c = WcCache::new(1, 1, 16); // one slot: every write evicts
+        c.write_bytes(10, 0, 4, 1);
+        assert!(c.present(10)); // hint -> (10, 0)
+        c.write_bytes(20, 0, 4, 2); // evicts 10; slot 0 now holds 20
+        assert!(!c.present(10), "hint for 10 must not claim a false hit");
+        assert_eq!(c.read_bytes(20, 0, 4), 2);
+        assert_eq!(c.last.get(), Some((20, 0)));
     }
 
     #[test]

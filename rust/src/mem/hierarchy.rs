@@ -289,13 +289,19 @@ impl MemSystem {
     }
 
     /// Plain load of `len <= 8` bytes (must not straddle a line).
+    ///
+    /// Hot path: the dominant L1-hit case is a single bounds-checked CU
+    /// index, one port acquire and one [`probe_read`](WcCache::probe_read)
+    /// (itself O(1) via the cache's verified last-line hint) — no
+    /// redundant `has_bytes` + `read_bytes` double lookup.
     pub fn l1_read(&mut self, cu: u32, addr: Addr, len: usize, at: Cycle) -> (u64, Cycle) {
         let line = line_of(addr);
         let off = offset_in_line(addr);
         let mask = byte_mask(off, len);
-        let t0 = self.cus[cu as usize].port.acquire(at, 1);
+        let cu_slot = &mut self.cus[cu as usize];
+        let t0 = cu_slot.port.acquire(at, 1);
 
-        if let Some(v) = self.cus[cu as usize].l1.probe_read(line, off, len, mask) {
+        if let Some(v) = cu_slot.l1.probe_read(line, off, len, mask) {
             self.stats.l1_hits += 1;
             return (v, t0 + self.cfg.l1_latency);
         }
@@ -583,6 +589,10 @@ impl MemSystem {
     }
 
     /// Plan a load: functional effect now, timing class for replay.
+    ///
+    /// The hit case is a single `probe_read` (O(1) via the L1's verified
+    /// last-line hint); the miss case installs the fill, which primes the
+    /// hint so the trailing `read_bytes` does not re-scan the set.
     pub fn plan_read(&mut self, cu: u32, addr: Addr, len: usize) -> (u64, PlannedAccess) {
         let line = line_of(addr);
         let off = offset_in_line(addr);

@@ -9,10 +9,12 @@
 //! (flush drain cost, invalidation-induced miss storms, L2 port pressure).
 
 pub mod event;
+pub mod perfstats;
 pub mod rng;
 pub mod stats;
 
 pub use event::{Event, EventQueue};
+pub use perfstats::PerfStats;
 pub use rng::SplitMix64;
 pub use stats::Stats;
 

@@ -1,0 +1,321 @@
+//! Host-side performance accounting for the simulator itself.
+//!
+//! Everything in [`crate::sim::stats`] counts *simulated* events — cache
+//! hits, sync promotions, retired instructions. This module counts the
+//! cost of producing them: wall time per launch, wall time spent inside
+//! the compute engines (workload-side numerics), and the interpreter
+//! switch between the frozen reference paths and the decode-once fast
+//! paths. Splitting sim-cost from workload-cost is what lets the
+//! `srsp bench` trend record say *where* a regression landed.
+//!
+//! Three pieces live here:
+//!
+//! * [`set_reference_paths`] / [`reference_paths`] — a process-wide
+//!   switch selecting the original instruction-by-instruction
+//!   interpreter and per-event allocations (the pre-optimization code,
+//!   kept in-tree as the semantic reference) instead of the decoded fast
+//!   paths. The byte-identity tests and `srsp bench --compare-reference`
+//!   flip it; everything else runs the fast paths.
+//! * [`PerfStats`] + the thread-local collector — per-launch host-side
+//!   counters accumulated by [`crate::gpu::Device`], readable around any
+//!   run without threading a handle through the driver/report layers
+//!   (whose serialized output must stay byte-identical).
+//! * The per-run [`Stats`] accessor API — [`record_compute`] /
+//!   [`record_rounds`] on `Stats` and the exhaustive [`stat_pairs`]
+//!   projection, so engines and benches stop poking counter fields
+//!   directly and new counters cannot silently miss the bench emitter.
+//!
+//! [`record_compute`]: Stats::record_compute
+//! [`record_rounds`]: Stats::record_rounds
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use super::stats::Stats;
+use crate::kir::interp::{ComputeEngine, MemAccess};
+
+/// When set, [`crate::gpu::Device`] interprets programs with the original
+/// (pre-decode) `step` path and the memory system's original allocation
+/// behaviour. Default off: the decoded fast paths run. The two must be
+/// observationally identical — that equivalence is pinned by the
+/// `hotpath_identity` integration test.
+static REFERENCE_PATHS: AtomicBool = AtomicBool::new(false);
+
+/// Select the reference interpreter paths (true) or the decoded fast
+/// paths (false, the default). Process-wide: tests that flip it must not
+/// run concurrently with other launches (the byte-identity test is a
+/// single `#[test]` for exactly this reason).
+pub fn set_reference_paths(on: bool) {
+    REFERENCE_PATHS.store(on, Ordering::SeqCst);
+}
+
+/// Is the frozen reference interpreter selected?
+pub fn reference_paths() -> bool {
+    REFERENCE_PATHS.load(Ordering::SeqCst)
+}
+
+/// Host-side cost counters for one or more launches.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct PerfStats {
+    /// Kernel launches measured.
+    pub launches: u64,
+    /// Scheduling events popped by the device event loops.
+    pub events: u64,
+    /// Wall nanoseconds inside `launch_with_init` (sim + workload cost).
+    pub launch_nanos: u64,
+    /// Wall nanoseconds inside compute-engine callbacks (workload cost).
+    pub engine_nanos: u64,
+}
+
+impl PerfStats {
+    /// Simulator-attributed wall time: launch time minus the slice spent
+    /// in workload numerics.
+    pub fn sim_nanos(&self) -> u64 {
+        self.launch_nanos.saturating_sub(self.engine_nanos)
+    }
+
+    pub fn merge(&mut self, other: &PerfStats) {
+        let PerfStats {
+            launches,
+            events,
+            launch_nanos,
+            engine_nanos,
+        } = other;
+        self.launches += launches;
+        self.events += events;
+        self.launch_nanos += launch_nanos;
+        self.engine_nanos += engine_nanos;
+    }
+}
+
+thread_local! {
+    /// Per-thread collector: devices add into it from `launch_with_init`,
+    /// benches bracket a run with [`take_thread`] without any driver or
+    /// report signature changing (their bytes are frozen by the identity
+    /// gates).
+    static THREAD_PERF: RefCell<PerfStats> = RefCell::new(PerfStats::default());
+}
+
+/// Accumulate `p` into this thread's collector.
+pub fn add_thread(p: &PerfStats) {
+    THREAD_PERF.with(|tp| tp.borrow_mut().merge(p));
+}
+
+/// Take (and reset) this thread's accumulated counters.
+pub fn take_thread() -> PerfStats {
+    THREAD_PERF.with(|tp| std::mem::take(&mut *tp.borrow_mut()))
+}
+
+/// A [`ComputeEngine`] wrapper that attributes wall time spent inside the
+/// inner engine (the workload-cost side of the split).
+pub struct TimedEngine<'a> {
+    pub inner: &'a mut dyn ComputeEngine,
+    pub nanos: u64,
+}
+
+impl<'a> TimedEngine<'a> {
+    pub fn new(inner: &'a mut dyn ComputeEngine) -> Self {
+        Self { inner, nanos: 0 }
+    }
+}
+
+impl ComputeEngine for TimedEngine<'_> {
+    fn compute(&mut self, mem: &mut MemAccess<'_>, kind: u32, arg: u64) -> u64 {
+        let t0 = Instant::now();
+        let items = self.inner.compute(mem, kind, arg);
+        self.nanos += t0.elapsed().as_nanos() as u64;
+        items
+    }
+}
+
+impl Stats {
+    /// Record one retired `Compute` instruction that processed `items`
+    /// work-items (the accessor behind the interpreter and the engines;
+    /// replaces direct `compute_ops`/`compute_items` field-poking).
+    pub fn record_compute(&mut self, items: u64) {
+        self.compute_ops += 1;
+        self.compute_items += items;
+    }
+
+    /// Record the host-loop round count of a finished scenario run.
+    pub fn record_rounds(&mut self, rounds: u64) {
+        self.bump("rounds", rounds);
+    }
+}
+
+/// Project every counter of a [`Stats`] block to `(name, value)` pairs,
+/// fixed fields first (declaration order), then the named `misc`
+/// counters. The full destructure (no `..`) is the drift guard: adding a
+/// field to `Stats` without deciding how benches and perf tooling surface
+/// it becomes a compile error here — the same pattern
+/// `DeviceConfig::to_json` uses.
+pub fn stat_pairs(s: &Stats) -> Vec<(&'static str, u64)> {
+    let Stats {
+        l1_hits,
+        l1_misses,
+        l1_writes,
+        l1_writebacks,
+        l1_flushes,
+        l1_invalidates,
+        lines_flushed,
+        lines_invalidated,
+        selective_flush_requests,
+        selective_flush_nops,
+        selective_flush_drains,
+        selective_inv_requests,
+        promoted_acquires,
+        local_acquires,
+        lr_tbl_insertions,
+        lr_tbl_overflows,
+        pa_tbl_insertions,
+        pa_tbl_overflows,
+        l2_accesses,
+        l2_hits,
+        l2_misses,
+        l2_atomics,
+        dram_reads,
+        dram_writes,
+        wg_acquires,
+        wg_releases,
+        cmp_acquires,
+        cmp_releases,
+        remote_acquires,
+        remote_releases,
+        remote_acqrels,
+        sync_overhead_cycles,
+        tasks_executed,
+        tasks_stolen,
+        steal_attempts,
+        steal_failures,
+        instructions,
+        compute_ops,
+        compute_items,
+        cycles,
+        misc,
+    } = s;
+    let mut pairs = vec![
+        ("l1_hits", *l1_hits),
+        ("l1_misses", *l1_misses),
+        ("l1_writes", *l1_writes),
+        ("l1_writebacks", *l1_writebacks),
+        ("l1_flushes", *l1_flushes),
+        ("l1_invalidates", *l1_invalidates),
+        ("lines_flushed", *lines_flushed),
+        ("lines_invalidated", *lines_invalidated),
+        ("selective_flush_requests", *selective_flush_requests),
+        ("selective_flush_nops", *selective_flush_nops),
+        ("selective_flush_drains", *selective_flush_drains),
+        ("selective_inv_requests", *selective_inv_requests),
+        ("promoted_acquires", *promoted_acquires),
+        ("local_acquires", *local_acquires),
+        ("lr_tbl_insertions", *lr_tbl_insertions),
+        ("lr_tbl_overflows", *lr_tbl_overflows),
+        ("pa_tbl_insertions", *pa_tbl_insertions),
+        ("pa_tbl_overflows", *pa_tbl_overflows),
+        ("l2_accesses", *l2_accesses),
+        ("l2_hits", *l2_hits),
+        ("l2_misses", *l2_misses),
+        ("l2_atomics", *l2_atomics),
+        ("dram_reads", *dram_reads),
+        ("dram_writes", *dram_writes),
+        ("wg_acquires", *wg_acquires),
+        ("wg_releases", *wg_releases),
+        ("cmp_acquires", *cmp_acquires),
+        ("cmp_releases", *cmp_releases),
+        ("remote_acquires", *remote_acquires),
+        ("remote_releases", *remote_releases),
+        ("remote_acqrels", *remote_acqrels),
+        ("sync_overhead_cycles", *sync_overhead_cycles),
+        ("tasks_executed", *tasks_executed),
+        ("tasks_stolen", *tasks_stolen),
+        ("steal_attempts", *steal_attempts),
+        ("steal_failures", *steal_failures),
+        ("instructions", *instructions),
+        ("compute_ops", *compute_ops),
+        ("compute_items", *compute_items),
+        ("cycles", *cycles),
+    ];
+    for (k, v) in misc {
+        pairs.push((k, *v));
+    }
+    pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_switch_round_trips() {
+        assert!(!reference_paths(), "fast paths are the default");
+        set_reference_paths(true);
+        assert!(reference_paths());
+        set_reference_paths(false);
+        assert!(!reference_paths());
+    }
+
+    #[test]
+    fn perf_merge_and_attribution() {
+        let mut a = PerfStats {
+            launches: 1,
+            events: 10,
+            launch_nanos: 100,
+            engine_nanos: 30,
+        };
+        let b = PerfStats {
+            launches: 2,
+            events: 5,
+            launch_nanos: 50,
+            engine_nanos: 20,
+        };
+        a.merge(&b);
+        assert_eq!(a.launches, 3);
+        assert_eq!(a.events, 15);
+        assert_eq!(a.sim_nanos(), 150 - 50);
+    }
+
+    #[test]
+    fn thread_collector_takes_and_resets() {
+        let _ = take_thread(); // isolate from other tests on this thread
+        add_thread(&PerfStats {
+            launches: 1,
+            events: 7,
+            launch_nanos: 9,
+            engine_nanos: 2,
+        });
+        let got = take_thread();
+        assert_eq!(got.events, 7);
+        assert_eq!(take_thread(), PerfStats::default());
+    }
+
+    #[test]
+    fn record_accessors_hit_the_right_counters() {
+        let mut s = Stats::new();
+        s.record_compute(5);
+        s.record_compute(0);
+        s.record_rounds(3);
+        assert_eq!(s.compute_ops, 2);
+        assert_eq!(s.compute_items, 5);
+        assert_eq!(s.misc["rounds"], 3);
+    }
+
+    #[test]
+    fn stat_pairs_exhaustive_and_ordered() {
+        let mut s = Stats::new();
+        s.l1_hits = 4;
+        s.cycles = 99;
+        s.bump("rounds", 2);
+        let pairs = stat_pairs(&s);
+        assert_eq!(pairs[0], ("l1_hits", 4));
+        assert_eq!(
+            pairs.iter().find(|(k, _)| *k == "cycles"),
+            Some(&("cycles", 99))
+        );
+        // misc counters ride at the end, after every fixed field.
+        assert_eq!(pairs.last(), Some(&("rounds", 2)));
+        // 40 fixed counters + cycles handled above; a drift in the count
+        // means a Stats field changed without updating the projection.
+        assert_eq!(pairs.len(), 40 + 1);
+    }
+}

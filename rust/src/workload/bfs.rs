@@ -99,7 +99,7 @@ impl Workload for Bfs {
     }
 
     fn layout(&self) -> AppLayout {
-        self.layout.clone()
+        self.layout
     }
 
     fn begin_round(&mut self, backing: &mut BackingStore) -> Option<Vec<u32>> {

@@ -304,7 +304,7 @@ pub fn run_scenario_seeded<M: TileMath>(
     }
 
     let mut stats = dev.take_stats();
-    stats.bump("rounds", rounds as u64);
+    stats.record_rounds(rounds as u64);
     (
         RunResult {
             scenario,

@@ -64,6 +64,11 @@ pub struct PageRankTile {
 /// Batch math over gathered tiles. Implementations must be value-identical
 /// (the pytest suite pins the Pallas kernels to `ref.py`; the Rust tests
 /// pin `PjrtMath` to `NativeMath`).
+///
+/// The `*_into` variants write into a caller-owned buffer so the hot loop
+/// allocates nothing per task; they default to delegating to the
+/// `Vec`-returning methods, so backends that only implement the required
+/// trio (e.g. `PjrtMath`) keep working unchanged.
 pub trait TileMath {
     /// PageRank: per-row sum of contributions, then
     /// `rank = (1-d)/n + d * sum`. Returns `rows` ranks.
@@ -76,54 +81,106 @@ pub trait TileMath {
     /// MIS select: row i joins the set iff `my_pri[i]` exceeds every
     /// undecided neighbor's priority (padded slots carry 0).
     fn mis_rows(&mut self, my_pri: &[u32], nbr_pri: &[u32], rows: usize) -> Vec<bool>;
+
+    /// Allocation-free variant of [`pagerank_rows`](Self::pagerank_rows):
+    /// clears `out` and fills it with the `rows` ranks.
+    fn pagerank_rows_into(
+        &mut self,
+        contribs: &[f32],
+        rows: usize,
+        damping: f32,
+        n: u32,
+        out: &mut Vec<f32>,
+    ) {
+        out.clear();
+        out.extend(self.pagerank_rows(contribs, rows, damping, n));
+    }
+
+    /// Allocation-free variant of [`sssp_rows`](Self::sssp_rows).
+    fn sssp_rows_into(&mut self, dist_plus_w: &[i32], rows: usize, out: &mut Vec<i32>) {
+        out.clear();
+        out.extend(self.sssp_rows(dist_plus_w, rows));
+    }
+
+    /// Allocation-free variant of [`mis_rows`](Self::mis_rows).
+    fn mis_rows_into(&mut self, my_pri: &[u32], nbr_pri: &[u32], rows: usize, out: &mut Vec<bool>) {
+        out.clear();
+        out.extend(self.mis_rows(my_pri, nbr_pri, rows));
+    }
 }
 
-/// Pure-Rust tile math.
+/// Pure-Rust tile math. Implements the `*_into` forms directly and defines
+/// the `Vec`-returning forms in terms of them, so the native backend never
+/// double-allocates.
 #[derive(Debug, Default, Clone)]
 pub struct NativeMath;
 
 impl TileMath for NativeMath {
     fn pagerank_rows(&mut self, contribs: &[f32], rows: usize, damping: f32, n: u32) -> Vec<f32> {
-        assert_eq!(contribs.len(), rows * K_TILE);
-        (0..rows)
-            .map(|i| {
-                let s: f32 = contribs[i * K_TILE..(i + 1) * K_TILE].iter().sum();
-                (1.0 - damping) / n as f32 + damping * s
-            })
-            .collect()
+        let mut out = Vec::with_capacity(rows);
+        self.pagerank_rows_into(contribs, rows, damping, n, &mut out);
+        out
     }
 
     fn sssp_rows(&mut self, dist_plus_w: &[i32], rows: usize) -> Vec<i32> {
-        assert_eq!(dist_plus_w.len(), rows * K_TILE);
-        (0..rows)
-            .map(|i| {
-                dist_plus_w[i * K_TILE..(i + 1) * K_TILE]
-                    .iter()
-                    .copied()
-                    .min()
-                    .unwrap()
-            })
-            .collect()
+        let mut out = Vec::with_capacity(rows);
+        self.sssp_rows_into(dist_plus_w, rows, &mut out);
+        out
     }
 
     fn mis_rows(&mut self, my_pri: &[u32], nbr_pri: &[u32], rows: usize) -> Vec<bool> {
+        let mut out = Vec::with_capacity(rows);
+        self.mis_rows_into(my_pri, nbr_pri, rows, &mut out);
+        out
+    }
+
+    fn pagerank_rows_into(
+        &mut self,
+        contribs: &[f32],
+        rows: usize,
+        damping: f32,
+        n: u32,
+        out: &mut Vec<f32>,
+    ) {
+        assert_eq!(contribs.len(), rows * K_TILE);
+        out.clear();
+        out.extend((0..rows).map(|i| {
+            let s: f32 = contribs[i * K_TILE..(i + 1) * K_TILE].iter().sum();
+            (1.0 - damping) / n as f32 + damping * s
+        }));
+    }
+
+    fn sssp_rows_into(&mut self, dist_plus_w: &[i32], rows: usize, out: &mut Vec<i32>) {
+        assert_eq!(dist_plus_w.len(), rows * K_TILE);
+        out.clear();
+        out.extend((0..rows).map(|i| {
+            dist_plus_w[i * K_TILE..(i + 1) * K_TILE]
+                .iter()
+                .copied()
+                .min()
+                .unwrap()
+        }));
+    }
+
+    fn mis_rows_into(&mut self, my_pri: &[u32], nbr_pri: &[u32], rows: usize, out: &mut Vec<bool>) {
         assert_eq!(my_pri.len(), rows);
         assert_eq!(nbr_pri.len(), rows * K_TILE);
-        (0..rows)
-            .map(|i| {
-                let max_n = nbr_pri[i * K_TILE..(i + 1) * K_TILE]
-                    .iter()
-                    .copied()
-                    .max()
-                    .unwrap();
-                my_pri[i] > max_n
-            })
-            .collect()
+        out.clear();
+        out.extend((0..rows).map(|i| {
+            let max_n = nbr_pri[i * K_TILE..(i + 1) * K_TILE]
+                .iter()
+                .copied()
+                .max()
+                .unwrap();
+            my_pri[i] > max_n
+        }));
     }
 }
 
 /// Device-memory addresses of one application's arrays (host-allocated).
-#[derive(Debug, Clone, Default)]
+/// All-numeric and `Copy`, so the task hot path reads it by value instead
+/// of cloning per task.
+#[derive(Debug, Clone, Copy, Default)]
 pub struct AppLayout {
     pub row_ptr: Addr,
     pub col: Addr,
@@ -147,16 +204,49 @@ pub struct AppLayout {
     pub high_water: u64,
 }
 
+/// Reusable per-engine gather/reduce buffers (arena). Tasks clear these
+/// instead of allocating fresh `Vec`s, so steady-state task execution
+/// performs no heap allocation. Purely a host-side speed concern: buffer
+/// reuse never changes the simulated memory traffic or its order.
+#[derive(Debug, Default)]
+struct Scratch {
+    /// Row -> source vertex (SoA side table for partial-row combining).
+    rows_v: Vec<u32>,
+    /// Gathered f32 tile (PageRank contributions).
+    tile_f32: Vec<f32>,
+    /// Gathered i32 tile (SSSP / BFS `dist + w` slots).
+    tile_i32: Vec<i32>,
+    /// MIS per-row own priorities.
+    my_pri: Vec<u32>,
+    /// MIS gathered neighbor priorities.
+    nbr_pri: Vec<u32>,
+    /// Tile-math outputs.
+    out_f32: Vec<f32>,
+    out_i32: Vec<i32>,
+    out_bool: Vec<bool>,
+    /// Dense per-vertex reductions, indexed `v - lo` over the task chunk
+    /// (replaces the old `HashMap<u32, _>` reductions).
+    red_f32: Vec<f32>,
+    red_u32: Vec<u32>,
+    red_i32: Vec<i32>,
+    red_state: Vec<u8>,
+}
+
 /// The engine: decodes task ids into vertex chunks, gathers through the
 /// timed memory path, calls the tile math, scatters results.
 pub struct WorkEngine<M: TileMath> {
     pub math: M,
     pub layout: AppLayout,
+    scratch: Scratch,
 }
 
 impl<M: TileMath> WorkEngine<M> {
     pub fn new(math: M, layout: AppLayout) -> Self {
-        Self { math, layout }
+        Self {
+            math,
+            layout,
+            scratch: Scratch::default(),
+        }
     }
 
     fn chunk_range(&self, task: u64) -> (u32, u32) {
@@ -168,16 +258,13 @@ impl<M: TileMath> WorkEngine<M> {
     /// PageRank task: pull contributions of every neighbor, compute new
     /// rank + new contribution, write both. Returns items (edges).
     fn pagerank(&mut self, mem: &mut MemAccess<'_>, task: u64) -> u64 {
-        let l = self.layout.clone();
+        let l = self.layout;
         let (lo, hi) = self.chunk_range(task);
         let damping = f32::from_bits(l.damping_bits);
         let mut items = 0u64;
 
-        let mut rows_v: Vec<u32> = Vec::new();
-        let mut contribs: Vec<f32> = Vec::new();
-        // Partial-row bookkeeping: vertex -> list of row indices.
-        let mut row_of_vertex: Vec<(u32, usize)> = Vec::new();
-
+        self.scratch.rows_v.clear();
+        self.scratch.tile_f32.clear();
         for v in lo..hi {
             let rp0 = mem.read_u32(l.row_ptr + v as u64 * 4);
             let rp1 = mem.read_u32(l.row_ptr + v as u64 * 4 + 4);
@@ -185,9 +272,7 @@ impl<M: TileMath> WorkEngine<M> {
             items += deg as u64;
             let nrows = deg.div_ceil(K_TILE).max(1);
             for r in 0..nrows {
-                let row = rows_v.len();
-                rows_v.push(v);
-                row_of_vertex.push((v, row));
+                self.scratch.rows_v.push(v);
                 let mut slots = [0f32; K_TILE];
                 for k in 0..K_TILE {
                     let e = rp0 as usize + r * K_TILE + k;
@@ -197,29 +282,43 @@ impl<M: TileMath> WorkEngine<M> {
                         slots[k] = mem.read_f32(l.a0 + u as u64 * 4);
                     }
                 }
-                contribs.extend_from_slice(&slots);
+                self.scratch.tile_f32.extend_from_slice(&slots);
             }
         }
-        if rows_v.is_empty() {
+        if self.scratch.rows_v.is_empty() {
             return items;
         }
-        let ranks = self.math.pagerank_rows(&contribs, rows_v.len(), damping, l.n);
+        self.math.pagerank_rows_into(
+            &self.scratch.tile_f32,
+            self.scratch.rows_v.len(),
+            damping,
+            l.n,
+            &mut self.scratch.out_f32,
+        );
         // Combine partial rows: sum of row-sums needs base re-added once.
         // rank_row = base + d*sum_row => rank_v = base + d*Σ sums
         //          = Σ rank_row - (nrows-1)*base.
+        // Dense (v - lo)-indexed reduction; rows for a vertex accumulate
+        // in ascending row order, matching the gather order exactly, so
+        // the f32 sums are bit-identical to the old HashMap reduction.
         let base = (1.0 - damping) / l.n as f32;
-        let mut v_rank: std::collections::HashMap<u32, f32> = Default::default();
-        let mut v_rows: std::collections::HashMap<u32, u32> = Default::default();
-        for (row, &v) in rows_v.iter().enumerate() {
-            *v_rank.entry(v).or_insert(0.0) += ranks[row];
-            *v_rows.entry(v).or_insert(0) += 1;
+        let span = (hi - lo) as usize;
+        self.scratch.red_f32.clear();
+        self.scratch.red_f32.resize(span, 0.0);
+        self.scratch.red_u32.clear();
+        self.scratch.red_u32.resize(span, 0);
+        for (row, &v) in self.scratch.rows_v.iter().enumerate() {
+            let i = (v - lo) as usize;
+            self.scratch.red_f32[i] += self.scratch.out_f32[row];
+            self.scratch.red_u32[i] += 1;
         }
         for v in lo..hi {
-            let nrows = *v_rows.get(&v).unwrap_or(&0);
+            let i = (v - lo) as usize;
+            let nrows = self.scratch.red_u32[i];
             if nrows == 0 {
                 continue;
             }
-            let rank = v_rank[&v] - (nrows - 1) as f32 * base;
+            let rank = self.scratch.red_f32[i] - (nrows - 1) as f32 * base;
             mem.write_f32(l.a1 + v as u64 * 4, rank);
             // New contribution for the next iteration.
             let deg = {
@@ -235,12 +334,12 @@ impl<M: TileMath> WorkEngine<M> {
     /// SSSP task (pull relaxation): `dist[v] = min(dist[v],
     /// min_u(dist[u] + w(u,v)))`; only v's own entry is written (race-free).
     fn sssp(&mut self, mem: &mut MemAccess<'_>, task: u64) -> u64 {
-        let l = self.layout.clone();
+        let l = self.layout;
         let (lo, hi) = self.chunk_range(task);
         let mut items = 0u64;
 
-        let mut rows_v: Vec<u32> = Vec::new();
-        let mut tile: Vec<i32> = Vec::new();
+        self.scratch.rows_v.clear();
+        self.scratch.tile_i32.clear();
         for v in lo..hi {
             let rp0 = mem.read_u32(l.row_ptr + v as u64 * 4);
             let rp1 = mem.read_u32(l.row_ptr + v as u64 * 4 + 4);
@@ -248,7 +347,7 @@ impl<M: TileMath> WorkEngine<M> {
             items += deg as u64;
             let nrows = deg.div_ceil(K_TILE).max(1);
             for r in 0..nrows {
-                rows_v.push(v);
+                self.scratch.rows_v.push(v);
                 let mut slots = [DIST_INF as i32; K_TILE];
                 for k in 0..K_TILE {
                     let e = rp0 as usize + r * K_TILE + k;
@@ -259,20 +358,34 @@ impl<M: TileMath> WorkEngine<M> {
                         slots[k] = (du.min(DIST_INF) as i32).saturating_add(w as i32);
                     }
                 }
-                tile.extend_from_slice(&slots);
+                self.scratch.tile_i32.extend_from_slice(&slots);
             }
         }
-        if rows_v.is_empty() {
+        if self.scratch.rows_v.is_empty() {
             return items;
         }
-        let cands = self.math.sssp_rows(&tile, rows_v.len());
-        let mut best: std::collections::HashMap<u32, i32> = Default::default();
-        for (row, &v) in rows_v.iter().enumerate() {
-            let e = best.entry(v).or_insert(i32::MAX);
-            *e = (*e).min(cands[row]);
+        self.math.sssp_rows_into(
+            &self.scratch.tile_i32,
+            self.scratch.rows_v.len(),
+            &mut self.scratch.out_i32,
+        );
+        // Dense per-vertex min (order-independent).
+        let span = (hi - lo) as usize;
+        self.scratch.red_i32.clear();
+        self.scratch.red_i32.resize(span, i32::MAX);
+        self.scratch.red_state.clear();
+        self.scratch.red_state.resize(span, 0);
+        for (row, &v) in self.scratch.rows_v.iter().enumerate() {
+            let i = (v - lo) as usize;
+            self.scratch.red_i32[i] = self.scratch.red_i32[i].min(self.scratch.out_i32[row]);
+            self.scratch.red_state[i] = 1;
         }
         for v in lo..hi {
-            let Some(&cand) = best.get(&v) else { continue };
+            let i = (v - lo) as usize;
+            if self.scratch.red_state[i] == 0 {
+                continue;
+            }
+            let cand = self.scratch.red_i32[i];
             let dv = mem.read_u32(l.a0 + v as u64 * 4) as i32;
             if cand < dv {
                 mem.write_u32(l.a0 + v as u64 * 4, cand as u32);
@@ -285,13 +398,13 @@ impl<M: TileMath> WorkEngine<M> {
     /// MIS select phase: undecided v joins when its priority beats every
     /// undecided neighbor.
     fn mis_select(&mut self, mem: &mut MemAccess<'_>, task: u64) -> u64 {
-        let l = self.layout.clone();
+        let l = self.layout;
         let (lo, hi) = self.chunk_range(task);
         let mut items = 0u64;
 
-        let mut rows_v: Vec<u32> = Vec::new();
-        let mut my_pri: Vec<u32> = Vec::new();
-        let mut nbr_pri: Vec<u32> = Vec::new();
+        self.scratch.rows_v.clear();
+        self.scratch.my_pri.clear();
+        self.scratch.nbr_pri.clear();
         for v in lo..hi {
             // a0 = state array, a1 = priority array.
             let state = mem.read_u32(l.a0 + v as u64 * 4);
@@ -305,8 +418,8 @@ impl<M: TileMath> WorkEngine<M> {
             let pri_v = mem.read_u32(l.a1 + v as u64 * 4);
             let nrows = deg.div_ceil(K_TILE).max(1);
             for r in 0..nrows {
-                rows_v.push(v);
-                my_pri.push(pri_v);
+                self.scratch.rows_v.push(v);
+                self.scratch.my_pri.push(pri_v);
                 let mut slots = [0u32; K_TILE];
                 for k in 0..K_TILE {
                     let e = rp0 as usize + r * K_TILE + k;
@@ -318,18 +431,29 @@ impl<M: TileMath> WorkEngine<M> {
                         }
                     }
                 }
-                nbr_pri.extend_from_slice(&slots);
+                self.scratch.nbr_pri.extend_from_slice(&slots);
             }
         }
-        if rows_v.is_empty() {
+        if self.scratch.rows_v.is_empty() {
             return items;
         }
-        let wins = self.math.mis_rows(&my_pri, &nbr_pri, rows_v.len());
+        self.math.mis_rows_into(
+            &self.scratch.my_pri,
+            &self.scratch.nbr_pri,
+            self.scratch.rows_v.len(),
+            &mut self.scratch.out_bool,
+        );
         // A vertex joins only if it wins in *all* of its rows.
-        let mut all_win: std::collections::HashMap<u32, bool> = Default::default();
-        for (row, &v) in rows_v.iter().enumerate() {
-            let e = all_win.entry(v).or_insert(true);
-            *e = *e && wins[row];
+        // Dense state: 0 = no rows, 1 = winning so far, 2 = lost a row.
+        let span = (hi - lo) as usize;
+        self.scratch.red_state.clear();
+        self.scratch.red_state.resize(span, 0);
+        for (row, &v) in self.scratch.rows_v.iter().enumerate() {
+            let i = (v - lo) as usize;
+            let win = self.scratch.out_bool[row];
+            if self.scratch.red_state[i] != 2 {
+                self.scratch.red_state[i] = if win { 1 } else { 2 };
+            }
         }
         // Winners are recorded in the *newflag* array (a2), NOT the state
         // array: the select phase must race-freely compare priorities
@@ -337,8 +461,13 @@ impl<M: TileMath> WorkEngine<M> {
         // would let later tasks mask a freshly-IN neighbor out of the
         // comparison and elect adjacent vertices (a real Luby-on-GPU
         // pitfall — caught by the validity tests).
-        for (&v, &w) in &all_win {
-            if w {
+        //
+        // The scatter walks vertices in ascending order. The old HashMap
+        // scatter issued these stores in the map's (seeded, per-process)
+        // iteration order, which made simulated timing nondeterministic
+        // across processes; ascending order pins it.
+        for v in lo..hi {
+            if self.scratch.red_state[(v - lo) as usize] == 1 {
                 mem.write_u32(l.a2 + v as u64 * 4, 1);
                 mem.write_u32(l.changed + v as u64 * 4, 1);
             }
@@ -357,12 +486,12 @@ impl<M: TileMath> WorkEngine<M> {
     /// completes exactly one BFS level (a depth-(k-1) entry can only have
     /// been written in an earlier round, where it is exact by induction).
     fn bfs(&mut self, mem: &mut MemAccess<'_>, task: u64) -> u64 {
-        let l = self.layout.clone();
+        let l = self.layout;
         let (lo, hi) = self.chunk_range(task);
         let mut items = 0u64;
 
-        let mut rows_v: Vec<u32> = Vec::new();
-        let mut tile: Vec<i32> = Vec::new();
+        self.scratch.rows_v.clear();
+        self.scratch.tile_i32.clear();
         for v in lo..hi {
             // a0 = depth array; only unvisited vertices do work.
             if mem.read_u32(l.a0 + v as u64 * 4) != DIST_INF {
@@ -374,7 +503,7 @@ impl<M: TileMath> WorkEngine<M> {
             items += deg as u64;
             let nrows = deg.div_ceil(K_TILE).max(1);
             for r in 0..nrows {
-                rows_v.push(v);
+                self.scratch.rows_v.push(v);
                 let mut slots = [DIST_INF as i32; K_TILE];
                 for k in 0..K_TILE {
                     let e = rp0 as usize + r * K_TILE + k;
@@ -384,20 +513,33 @@ impl<M: TileMath> WorkEngine<M> {
                         slots[k] = (du.min(DIST_INF) as i32).saturating_add(1);
                     }
                 }
-                tile.extend_from_slice(&slots);
+                self.scratch.tile_i32.extend_from_slice(&slots);
             }
         }
-        if rows_v.is_empty() {
+        if self.scratch.rows_v.is_empty() {
             return items;
         }
-        let cands = self.math.sssp_rows(&tile, rows_v.len());
-        let mut best: std::collections::HashMap<u32, i32> = Default::default();
-        for (row, &v) in rows_v.iter().enumerate() {
-            let e = best.entry(v).or_insert(i32::MAX);
-            *e = (*e).min(cands[row]);
+        self.math.sssp_rows_into(
+            &self.scratch.tile_i32,
+            self.scratch.rows_v.len(),
+            &mut self.scratch.out_i32,
+        );
+        let span = (hi - lo) as usize;
+        self.scratch.red_i32.clear();
+        self.scratch.red_i32.resize(span, i32::MAX);
+        self.scratch.red_state.clear();
+        self.scratch.red_state.resize(span, 0);
+        for (row, &v) in self.scratch.rows_v.iter().enumerate() {
+            let i = (v - lo) as usize;
+            self.scratch.red_i32[i] = self.scratch.red_i32[i].min(self.scratch.out_i32[row]);
+            self.scratch.red_state[i] = 1;
         }
         for v in lo..hi {
-            let Some(&cand) = best.get(&v) else { continue };
+            let i = (v - lo) as usize;
+            if self.scratch.red_state[i] == 0 {
+                continue;
+            }
+            let cand = self.scratch.red_i32[i];
             if cand as u32 == l.aux {
                 mem.write_u32(l.a0 + v as u64 * 4, cand as u32);
             }
@@ -411,7 +553,7 @@ impl<M: TileMath> WorkEngine<M> {
     /// invalidation destroys and selective promotion preserves. Writes
     /// only the task's own entries: race-free under every scenario.
     fn stress(&mut self, mem: &mut MemAccess<'_>, task: u64) -> u64 {
-        let l = self.layout.clone();
+        let l = self.layout;
         let c = task as u32;
         // a1 = pad (read-only), a0 = cells, a2 = scratch.
         let mut acc = 0u32;
@@ -430,7 +572,7 @@ impl<M: TileMath> WorkEngine<M> {
     /// are written only by the *select* launch and cleared only by the
     /// host between rounds, so this phase reads stable data.
     fn mis_exclude(&mut self, mem: &mut MemAccess<'_>, task: u64) -> u64 {
-        let l = self.layout.clone();
+        let l = self.layout;
         let (lo, hi) = self.chunk_range(task);
         let mut items = 0u64;
         for v in lo..hi {
@@ -533,5 +675,117 @@ mod tests {
         let set: HashSet<u32> = (0..10_000).map(mis_priority).collect();
         assert_eq!(set.len(), 10_000, "priorities must not collide");
         assert_eq!(mis_priority(42), mis_priority(42));
+    }
+
+    /// The provided `*_into` defaults (used by backends that only
+    /// implement the `Vec`-returning trio, e.g. `PjrtMath`) must clear the
+    /// output buffer and match the direct results.
+    #[test]
+    fn tile_math_into_defaults_match_direct() {
+        struct DelegateOnly;
+        impl TileMath for DelegateOnly {
+            fn pagerank_rows(&mut self, c: &[f32], rows: usize, d: f32, n: u32) -> Vec<f32> {
+                NativeMath.pagerank_rows(c, rows, d, n)
+            }
+            fn sssp_rows(&mut self, t: &[i32], rows: usize) -> Vec<i32> {
+                NativeMath.sssp_rows(t, rows)
+            }
+            fn mis_rows(&mut self, a: &[u32], b: &[u32], rows: usize) -> Vec<bool> {
+                NativeMath.mis_rows(a, b, rows)
+            }
+        }
+
+        let mut contribs = vec![0f32; 2 * K_TILE];
+        contribs[0] = 0.5;
+        contribs[K_TILE + 3] = 0.25;
+        let mut out_f = vec![9.0f32; 7]; // stale content must be cleared
+        DelegateOnly.pagerank_rows_into(&contribs, 2, 0.85, 4, &mut out_f);
+        assert_eq!(out_f, NativeMath.pagerank_rows(&contribs, 2, 0.85, 4));
+
+        let mut tile = vec![DIST_INF as i32; K_TILE];
+        tile[5] = 3;
+        let mut out_i = vec![-1i32; 4];
+        DelegateOnly.sssp_rows_into(&tile, 1, &mut out_i);
+        assert_eq!(out_i, vec![3]);
+
+        let mut nbr = vec![0u32; K_TILE];
+        nbr[0] = 10;
+        let mut out_b = vec![false; 9];
+        DelegateOnly.mis_rows_into(&[50], &nbr, 1, &mut out_b);
+        assert_eq!(out_b, vec![true]);
+    }
+
+    /// End-to-end engine task: the dense `(v - lo)`-indexed reduction
+    /// combines partial tile rows exactly like the old HashMap reduction,
+    /// and the scratch arena is reused (no realloc) across tasks.
+    #[test]
+    fn pagerank_task_combines_partial_rows_and_reuses_scratch() {
+        use crate::config::DeviceConfig;
+        use crate::mem::MemSystem;
+
+        let mut mem = MemSystem::new(DeviceConfig::small());
+        let (row_ptr, col, a0, a1, a2) = (0x1000u64, 0x2000u64, 0x4000u64, 0x5000u64, 0x6000u64);
+        // v0 has K_TILE + 1 edges (spans two tile rows), v1 has one edge.
+        let deg0 = K_TILE as u32 + 1;
+        {
+            let mut acc = MemAccess::new(&mut mem, 0);
+            acc.write_u32(row_ptr, 0);
+            acc.write_u32(row_ptr + 4, deg0);
+            acc.write_u32(row_ptr + 8, deg0 + 1);
+            for e in 0..deg0 {
+                acc.write_u32(col + e as u64 * 4, 1);
+            }
+            acc.write_u32(col + deg0 as u64 * 4, 0);
+            acc.write_f32(a0, 0.25); // contribution_in[0]
+            acc.write_f32(a0 + 4, 0.125); // contribution_in[1]
+        }
+        let layout = AppLayout {
+            row_ptr,
+            col,
+            weight: 0x3000,
+            a0,
+            a1,
+            a2,
+            changed: 0x7000,
+            chunk: 2,
+            n: 2,
+            damping_bits: 0.85f32.to_bits(),
+            aux: 0,
+            high_water: 0x8000,
+        };
+        let mut eng = WorkEngine::new(NativeMath, layout);
+        let items = {
+            let mut acc = MemAccess::new(&mut mem, 0);
+            eng.compute(&mut acc, KIND_PAGERANK, 0)
+        };
+        assert_eq!(items, (deg0 + 1) as u64);
+
+        let base = 0.15f32 / 2.0;
+        let expect0 = base + 0.85 * (deg0 as f32 * 0.125);
+        let expect1 = base + 0.85 * 0.25;
+        let (r0, r1, c0, c1) = {
+            let mut acc = MemAccess::new(&mut mem, 0);
+            (
+                acc.read_f32(a1),
+                acc.read_f32(a1 + 4),
+                acc.read_f32(a2),
+                acc.read_f32(a2 + 4),
+            )
+        };
+        assert!((r0 - expect0).abs() < 1e-5, "rank0 {r0} vs {expect0}");
+        assert!((r1 - expect1).abs() < 1e-5, "rank1 {r1} vs {expect1}");
+        assert!((c0 - expect0 / deg0 as f32).abs() < 1e-6);
+        assert!((c1 - expect1).abs() < 1e-6);
+
+        // Second task run must reuse the grown scratch allocations.
+        let ptr = eng.scratch.tile_f32.as_ptr();
+        let cap = eng.scratch.tile_f32.capacity();
+        assert!(cap >= 2 * K_TILE);
+        {
+            let mut acc = MemAccess::new(&mut mem, 0);
+            eng.compute(&mut acc, KIND_PAGERANK, 0);
+        }
+        assert_eq!(eng.scratch.tile_f32.as_ptr(), ptr, "tile buffer must be reused");
+        assert_eq!(eng.scratch.tile_f32.capacity(), cap);
     }
 }

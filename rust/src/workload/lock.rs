@@ -110,7 +110,7 @@ impl Workload for Lock {
     }
 
     fn layout(&self) -> AppLayout {
-        self.layout.clone()
+        self.layout
     }
 
     fn begin_round(&mut self, _backing: &mut BackingStore) -> Option<Vec<u32>> {

@@ -129,7 +129,7 @@ impl Workload for Mis {
     }
 
     fn layout(&self) -> AppLayout {
-        self.layout.clone()
+        self.layout
     }
 
     fn begin_round(&mut self, backing: &mut BackingStore) -> Option<Vec<u32>> {

@@ -106,7 +106,7 @@ impl Workload for ProdCons {
     }
 
     fn layout(&self) -> AppLayout {
-        self.layout.clone()
+        self.layout
     }
 
     fn begin_round(&mut self, _backing: &mut BackingStore) -> Option<Vec<u32>> {

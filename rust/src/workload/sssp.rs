@@ -114,7 +114,7 @@ impl Workload for Sssp {
     }
 
     fn layout(&self) -> AppLayout {
-        self.layout.clone()
+        self.layout
     }
 
     fn begin_round(&mut self, backing: &mut BackingStore) -> Option<Vec<u32>> {

@@ -1,0 +1,190 @@
+//! The hot-path speed campaign's acceptance gate: every host-side
+//! optimization (decode-once interpreter, L1 fast paths, engine arenas)
+//! must leave the *simulated* results untouched. The full ci-smoke
+//! scenario matrix is run under the pre-decode reference interpreter and
+//! under the decoded fast path, and the machine-readable reports must be
+//! **byte-identical** — plus an optional golden-file pin (bless with
+//! `SRSP_BLESS=1`) so a regression against history is caught even when
+//! both paths drift together.
+//!
+//! The interpreter-path switch is process-global, so the before/after
+//! comparison lives in ONE `#[test]` fn (sequential flips); the CLI
+//! checks run the `srsp` binary in subprocesses and cannot race it.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use srsp::config::DeviceConfig;
+use srsp::coordinator::{full_grid, Seeding};
+use srsp::harness::presets::{WorkloadSize, DEFAULT_SEED};
+use srsp::harness::report::Report;
+use srsp::harness::runner::Runner;
+use srsp::jsonio::Json;
+use srsp::sim::perfstats;
+
+fn srsp_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_srsp"))
+}
+
+/// A scratch directory unique to this test process + test name.
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("srsp-test-{}-{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+/// Compare `actual` against the checked-in golden file, or (re)write it
+/// when `SRSP_BLESS=1`. A missing golden is reported but not fatal, so
+/// the suite stays runnable from a bare checkout before the first bless.
+fn golden_check(name: &str, actual: &str) {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden")
+        .join(name);
+    if std::env::var_os("SRSP_BLESS").is_some() {
+        std::fs::create_dir_all(path.parent().unwrap()).expect("create golden dir");
+        std::fs::write(&path, actual).expect("write golden");
+        eprintln!("blessed {}", path.display());
+        return;
+    }
+    match std::fs::read_to_string(&path) {
+        Ok(expected) => assert_eq!(
+            expected,
+            actual,
+            "{} drifted from the checked-in golden; if the simulated-results change is \
+             intended, re-bless with SRSP_BLESS=1",
+            path.display()
+        ),
+        Err(_) => eprintln!(
+            "golden file {} not checked in yet; run with SRSP_BLESS=1 to create it",
+            path.display()
+        ),
+    }
+}
+
+/// The ci-smoke matrix (all registered workloads × the paper scenarios,
+/// tiny scale, 8 CUs) with every oracle validated, under the selected
+/// interpreter path.
+fn ci_smoke_report(reference: bool) -> Report {
+    let cfg = DeviceConfig {
+        num_cus: 8,
+        ..DeviceConfig::default()
+    };
+    let cells = full_grid(cfg.num_cus);
+    perfstats::set_reference_paths(reference);
+    let runner = Runner {
+        validate: true,
+        seeding: Seeding::Shared(DEFAULT_SEED),
+        ..Runner::new(cfg, WorkloadSize::Tiny, 2)
+    };
+    let results = runner.run_cells(&cells);
+    perfstats::set_reference_paths(false);
+    Report::from_cells(&results)
+}
+
+#[test]
+fn ci_smoke_matrix_byte_identical_across_interpreter_paths() {
+    let reference = ci_smoke_report(true);
+    let decoded = ci_smoke_report(false);
+
+    for r in &decoded.rows {
+        assert!(
+            r.converged && r.validated == Some(true),
+            "{}/{} failed its oracle on the decoded path",
+            r.app,
+            r.scenario
+        );
+    }
+    assert_eq!(
+        reference.to_csv(),
+        decoded.to_csv(),
+        "CSV report differs between reference and decoded interpreter paths"
+    );
+    assert_eq!(
+        reference.to_json(),
+        decoded.to_json(),
+        "JSON report differs between reference and decoded interpreter paths"
+    );
+
+    golden_check("ci_smoke_tiny8.csv", &decoded.to_csv());
+    golden_check("ci_smoke_tiny8.json", &decoded.to_json());
+}
+
+/// End-to-end CLI: `srsp bench hotpath` (positional kind + scoped flags)
+/// writes a schema-versioned JSON artifact with the advertised fields.
+#[test]
+fn bench_cli_emits_versioned_artifact() {
+    let dir = scratch("bench-cli");
+    let out = dir.join("BENCH_hotpath_tiny.json");
+    let status = srsp_bin()
+        .args([
+            "bench",
+            "hotpath",
+            "--size",
+            "tiny",
+            "--app",
+            "stress",
+            "--scenario",
+            "scope",
+            "--repeats",
+            "2",
+            "--warmup",
+            "0",
+        ])
+        .arg("--out")
+        .arg(&out)
+        .status()
+        .expect("run srsp bench");
+    assert!(status.success(), "srsp bench hotpath failed: {status}");
+
+    let text = std::fs::read_to_string(&out).expect("read bench artifact");
+    let doc = srsp::jsonio::parse(&text).expect("bench artifact must be valid JSON");
+    assert_eq!(doc.get("schema").and_then(Json::as_u64), Ok(1));
+    assert_eq!(
+        doc.get("kind").and_then(Json::as_str),
+        Ok("hotpath"),
+        "artifact kind"
+    );
+    let cells = doc.get("cells").and_then(Json::arr).expect("cells array");
+    assert_eq!(cells.len(), 1, "one app × one scenario");
+    let cell = &cells[0];
+    for key in ["median_secs", "cells_per_sec", "minstr_per_sec"] {
+        assert!(
+            cell.get(key).and_then(Json::as_f64).is_ok(),
+            "cell missing numeric '{key}'"
+        );
+    }
+    assert!(
+        doc.get("totals")
+            .and_then(|t| t.get("cells_per_sec"))
+            .and_then(Json::as_f64)
+            .is_ok(),
+        "totals missing cells_per_sec"
+    );
+}
+
+/// The bench measurement flags are scoped: any other command rejects
+/// them instead of silently ignoring them.
+#[test]
+fn bench_flags_rejected_elsewhere() {
+    let out = srsp_bin()
+        .args(["ci-smoke", "--repeats", "3"])
+        .output()
+        .expect("run srsp");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        err.contains("--repeats applies to bench"),
+        "unexpected stderr: {err}"
+    );
+
+    let out = srsp_bin()
+        .args(["bench", "no-such-kind"])
+        .output()
+        .expect("run srsp");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        err.contains("unknown bench kind"),
+        "unexpected stderr: {err}"
+    );
+}
