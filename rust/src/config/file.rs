@@ -86,6 +86,7 @@ pub fn parse_config_str(text: &str) -> Result<DeviceConfig, ConfigError> {
             "compute_cycles_per_item" => c.compute_cycles_per_item = int()?,
             "issue_cycles" => c.issue_cycles = int()?,
             "line_size" => c.line_size = int()? as u32,
+            "trace_capacity" => c.trace_capacity = int()? as u32,
             _ => return Err(err(line_no, format!("unknown key '{key}'"))),
         }
     }

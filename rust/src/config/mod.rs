@@ -239,6 +239,12 @@ pub struct DeviceConfig {
     /// Line size (bytes). 64 everywhere in the paper.
     pub line_size: u32,
 
+    /// Sync-event trace ring-buffer capacity
+    /// ([`TraceSink`](crate::sim::trace::TraceSink)); 0 (the default)
+    /// disables tracing entirely. Tracing is observe-only: the value
+    /// never changes simulated results, only whether they are recorded.
+    pub trace_capacity: u32,
+
     /// Protocol-parameter overrides (`--proto-param k=v`), resolved
     /// against the *selected* protocol's registry spec when the device is
     /// built; keys a protocol does not declare are ignored for that
@@ -272,6 +278,7 @@ impl Default for DeviceConfig {
             compute_cycles_per_item: 2,
             issue_cycles: 1,
             line_size: 64,
+            trace_capacity: 0,
             proto_params: Vec::new(),
         }
     }
@@ -355,6 +362,7 @@ impl DeviceConfig {
             compute_cycles_per_item,
             issue_cycles,
             line_size,
+            trace_capacity,
             proto_params,
         } = self;
         Json::Obj(vec![
@@ -383,6 +391,7 @@ impl DeviceConfig {
             ),
             ("issue_cycles".into(), Json::u64(*issue_cycles)),
             ("line_size".into(), Json::u32(*line_size)),
+            ("trace_capacity".into(), Json::u32(*trace_capacity)),
             ("proto_params".into(), jsonio::pairs_to_json(proto_params)),
         ])
     }
@@ -420,6 +429,7 @@ impl DeviceConfig {
             compute_cycles_per_item: u("compute_cycles_per_item")?,
             issue_cycles: u("issue_cycles")?,
             line_size: w("line_size")?,
+            trace_capacity: w("trace_capacity")?,
             proto_params: jsonio::pairs_from_json(v.get("proto_params")?)
                 .map_err(|e| format!("proto_params: {e}"))?,
         };

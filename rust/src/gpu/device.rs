@@ -14,7 +14,8 @@ use crate::config::{DeviceConfig, Protocol};
 use crate::kir::{ComputeEngine, DecodedProgram, NoopEngine, Program, StepResult, WgContext};
 use crate::mem::MemSystem;
 use crate::sim::perfstats::{self, TimedEngine};
-use crate::sim::{Cycle, EventQueue, PerfStats, Stats};
+use crate::sim::trace::DEVICE_CU;
+use crate::sim::{Cycle, EventQueue, PerfStats, Stats, TraceKind};
 
 /// Result of one kernel launch.
 #[derive(Debug, Clone)]
@@ -125,12 +126,16 @@ impl Device {
         for wg in 0..num_wgs {
             queue.schedule(self.now + wg as u64, wg);
         }
+        self.mem
+            .trace
+            .emit(self.now, DEVICE_CU, TraceKind::LaunchBegin, 0, num_wgs as u64);
 
         let mut events = 0u64;
         let mut running = num_wgs;
         let mut last_halt = self.now;
         while let Some(ev) = queue.pop() {
             events += 1;
+            self.mem.trace.set_wg(ev.wg);
             let ctx = &mut contexts[ev.wg as usize];
             debug_assert!(!ctx.halted, "halted wg rescheduled");
             let result = match &decoded {
@@ -171,7 +176,11 @@ impl Device {
         assert_eq!(running, 0, "deadlock: {running} work-groups never halted");
 
         // Kernel-end barrier: device writes become host-visible.
+        self.mem.trace.set_wg(DEVICE_CU);
         let end_cycle = self.mem.kernel_end_barrier(last_halt);
+        self.mem
+            .trace
+            .emit(end_cycle, DEVICE_CU, TraceKind::LaunchEnd, 0, events);
         self.now = end_cycle;
         self.mem.stats.cycles = self.now;
         let launch_perf = PerfStats {

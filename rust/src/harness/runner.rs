@@ -35,6 +35,7 @@ use super::report::{PartialReport, Report, ReportRow};
 use crate::config::{DeviceConfig, Scenario};
 use crate::coordinator::shard::{self, ShardSpec};
 use crate::coordinator::{Cell, ExecutionPlan, PlannedCell, Seeding, SweepPlan};
+use crate::sim::perfstats;
 use crate::sync::protocol;
 use crate::workload::driver::{run_scenario_seeded, RunResult};
 use crate::workload::engine::NativeMath;
@@ -278,12 +279,21 @@ pub fn execute_plan(plan: &ExecutionPlan, jobs: usize) -> Vec<CellResult> {
             let presets = &presets;
             let handles: Vec<_> = shards
                 .iter()
-                .map(|s| scope.spawn(move || execute_shard_with(s, presets)))
+                .map(|s| {
+                    // Each shard thread returns its results plus its
+                    // thread-local perf counters; the caller folds them
+                    // into its own collector so `--jobs N` loses no
+                    // wall-clock attribution.
+                    scope.spawn(move || (execute_shard_with(s, presets), perfstats::take_thread()))
+                })
                 .collect();
             let mut all = Vec::with_capacity(plan.cells.len());
             for h in handles {
                 match h.join() {
-                    Ok(mut part) => all.append(&mut part),
+                    Ok((mut part, perf)) => {
+                        perfstats::add_thread(&perf);
+                        all.append(&mut part);
+                    }
                     // Re-raise the shard's own panic payload (e.g. a bad
                     // --param key) instead of a generic join error.
                     Err(e) => std::panic::resume_unwind(e),

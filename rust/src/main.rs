@@ -31,7 +31,10 @@ use srsp::harness::figures::{
 };
 use srsp::harness::presets::{WorkloadPreset, WorkloadSize, DEFAULT_SEED};
 use srsp::harness::report::{format_table, PartialReport, Report, ReportFormat};
-use srsp::harness::runner::{execute_shard, into_run_results, Runner};
+use srsp::harness::runner::{execute_shard, into_run_results, CellResult, Runner};
+use srsp::harness::tracefile::{self, TraceCell, TracePartial, TraceReport};
+use srsp::sim::perfstats;
+use srsp::sim::trace::DEFAULT_TRACE_CAPACITY;
 use srsp::sync::protocol;
 use srsp::workload::graph::Graph;
 use srsp::workload::registry::{self, Params, WorkloadId};
@@ -69,6 +72,9 @@ COMMANDS:
                            PartialReport JSON
     merge-reports          Merge worker PartialReport files into the final
                            grid-ordered report; fails loudly on any gap
+    trace [kind]           Render a recorded JSONL sync-event trace
+                           (kinds: summary, timeline, perfetto, kinds;
+                           default summary); input via --trace <file>
     help                   Show this message
 
 OPTIONS:
@@ -105,6 +111,16 @@ OPTIONS:
     --shard <file>              ShardSpec input for the worker command
     --partial <file>            PartialReport input for merge-reports
                                 (repeatable, one per worker)
+    --trace <file>              Record the cycle-stamped sync-event trace:
+                                run/sweep write the JSONL trace file there
+                                (a worker writes a TracePartial). Tracing
+                                is observe-only — simulated results are
+                                byte-identical with it off. For the trace
+                                command: the file to read
+    --trace-buf <n>             Per-cell trace ring capacity in events
+                                (run/sweep; default 65536). On overflow
+                                the oldest events drop and the cell is
+                                marked truncated; per-CU counts stay exact
     --seed <n>                  Derive a distinct workload seed per grid
                                 cell from base <n> (decimal or 0x hex);
                                 omit to use the classic shared seed that
@@ -150,13 +166,17 @@ struct Opts {
     shard: Option<String>,
     /// PartialReport input files (`merge-reports` command only).
     partials: Vec<String>,
+    /// Trace output file for run/sweep/worker, input file for `trace`.
+    trace: Option<String>,
+    /// Per-cell trace ring capacity (`--trace-buf`; needs `--trace`).
+    trace_buf: Option<u32>,
     seed: Option<u64>,
     report: Option<ReportFormat>,
     out: Option<String>,
     graph: Option<String>,
     config: Option<String>,
-    /// Positional bench kind (`bench` command only), peeled off in
-    /// `main` before flag parsing.
+    /// Positional kind (`bench` and `trace` commands only), peeled off
+    /// in `main` before flag parsing.
     bench_kind: Option<String>,
     /// Was `--scenario` given explicitly? (`bench` narrows its scenario
     /// set only on an explicit flag; the default field value means
@@ -226,6 +246,8 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
         workers: None,
         shard: None,
         partials: Vec::new(),
+        trace: None,
+        trace_buf: None,
         seed: None,
         report: None,
         out: None,
@@ -365,6 +387,17 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
             }
             "--shard" => o.shard = Some(val()?),
             "--partial" => o.partials.push(val()?),
+            "--trace" => o.trace = Some(val()?),
+            "--trace-buf" => {
+                let n: u32 = val()?.parse().map_err(|e| format!("--trace-buf: {e}"))?;
+                if n == 0 {
+                    return Err(
+                        "--trace-buf needs at least 1 event (omit --trace to disable tracing)"
+                            .into(),
+                    );
+                }
+                o.trace_buf = Some(n);
+            }
             "--seed" => o.seed = Some(parse_u64(&val()?).map_err(|e| format!("--seed: {e}"))?),
             "--report" => {
                 let v = val()?;
@@ -578,6 +611,40 @@ impl Opts {
         Ok(())
     }
 
+    /// The trace flags belong to the commands that record a trace (run,
+    /// sweep, worker) or read one (`trace`); anywhere else they would be
+    /// silently ignored, so they are rejected up front like the other
+    /// scoped flags.
+    fn check_trace_flags(&self, cmd: &str) -> Result<(), String> {
+        if self.trace.is_some() && !matches!(cmd, "run" | "sweep" | "worker" | "trace") {
+            return Err(format!(
+                "--trace applies to run, sweep, worker and trace, not '{cmd}'"
+            ));
+        }
+        if self.trace_buf.is_some() {
+            if self.trace.is_none() {
+                return Err("--trace-buf sizes the trace ring; it needs --trace <file>".into());
+            }
+            if !matches!(cmd, "run" | "sweep") {
+                return Err(format!(
+                    "--trace-buf applies to run and sweep (a worker inherits the capacity \
+                     from its shard's device config), not '{cmd}'"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// The per-cell trace ring capacity this invocation simulates with:
+    /// 0 (tracing off, the default hot path) unless `--trace` was given.
+    fn trace_capacity(&self) -> u32 {
+        if self.trace.is_some() {
+            self.trace_buf.unwrap_or(DEFAULT_TRACE_CAPACITY)
+        } else {
+            0
+        }
+    }
+
     /// The measurement flags belong to `bench` alone; anywhere else
     /// they would be silently ignored, so they are rejected up front
     /// like the other scoped flags.
@@ -619,6 +686,7 @@ fn device_config(o: &Opts) -> Result<DeviceConfig, String> {
         cfg.num_cus = n;
     }
     cfg.proto_params = o.proto_params.clone();
+    cfg.trace_capacity = o.trace_capacity();
     cfg.validate()?;
     Ok(cfg)
 }
@@ -667,6 +735,35 @@ fn emit_report(report: &Report, o: &Opts) -> Result<(), String> {
     }
 }
 
+/// Write the harvested grid trace when `--trace` was given. Loud when
+/// any executed cell carried no trace — a traced command never writes a
+/// silently shorter trace file.
+fn emit_trace(results: &[CellResult], o: &Opts) -> Result<(), String> {
+    let Some(path) = &o.trace else {
+        return Ok(());
+    };
+    let report = TraceReport::from_cells(results)?;
+    std::fs::write(path, report.render_jsonl()).map_err(|e| format!("{path}: {e}"))?;
+    eprintln!("wrote trace: {path} ({} cell(s))", report.cells.len());
+    Ok(())
+}
+
+/// One host-side cost line per matrix run (`ci-smoke`, `validate`): the
+/// thread-local [`perfstats`] collector aggregated across executor
+/// threads by [`execute_plan`](srsp::harness::runner::execute_plan).
+/// Always on stderr — it is wall-clock attribution, never report data.
+fn print_perfstats() {
+    let p = perfstats::take_thread();
+    eprintln!(
+        "perfstats: launches={} events={} launch_nanos={} engine_nanos={} sim_nanos={}",
+        p.launches,
+        p.events,
+        p.launch_nanos,
+        p.engine_nanos,
+        p.sim_nanos()
+    );
+}
+
 /// Print `text` to stdout, or to stderr when stdout is carrying the
 /// machine-readable report.
 fn human(o: &Opts, text: &str) {
@@ -711,12 +808,12 @@ fn main() {
         eprint!("{USAGE}");
         std::process::exit(2);
     };
-    // `bench` takes an optional positional kind (`srsp bench hotpath`)
-    // ahead of the flags; everything after the command is flag-only for
-    // every other command.
+    // `bench` and `trace` take an optional positional kind (`srsp bench
+    // hotpath`, `srsp trace perfetto`) ahead of the flags; everything
+    // after the command is flag-only for every other command.
     let mut flag_args = &args[1..];
     let mut bench_kind = None;
-    if cmd == "bench" {
+    if cmd == "bench" || cmd == "trace" {
         if let Some(first) = flag_args.first() {
             if !first.starts_with('-') {
                 bench_kind = Some(first.clone());
@@ -748,7 +845,12 @@ fn main() {
 /// — never a short report.
 ///
 /// [`ShardSpec`]: srsp::coordinator::shard::ShardSpec
-fn run_distributed(runner: &Runner, plan: &SweepPlan, workers: usize) -> Result<Report, String> {
+fn run_distributed(
+    runner: &Runner,
+    plan: &SweepPlan,
+    workers: usize,
+    o: &Opts,
+) -> Result<Report, String> {
     let lowered = ExecutionPlan::lower_sweep(runner, plan);
     let shards = shard::partition(&lowered, workers);
     let exe = std::env::current_exe().map_err(|e| format!("cannot locate the srsp binary: {e}"))?;
@@ -757,26 +859,41 @@ fn run_distributed(runner: &Runner, plan: &SweepPlan, workers: usize) -> Result<
 
     // Spawn phase. On any failure, kill and reap what already started —
     // an orphan must never keep simulating into the deleted scratch dir.
-    let mut children: Vec<(usize, std::process::Child, std::path::PathBuf)> = Vec::new();
+    type Spawned = (
+        usize,
+        std::process::Child,
+        std::path::PathBuf,
+        Option<std::path::PathBuf>,
+    );
+    let mut children: Vec<Spawned> = Vec::new();
     for s in &shards {
         let shard_path = dir.join(format!("shard-{}.json", s.shard));
         let out_path = dir.join(format!("partial-{}.json", s.shard));
+        // Tracing rides the same artifact protocol as the report: one
+        // TracePartial file per worker, merged below.
+        let trace_path = o
+            .trace
+            .as_ref()
+            .map(|_| dir.join(format!("partial-trace-{}.json", s.shard)));
         let spawned = std::fs::write(&shard_path, s.to_json())
             .map_err(|e| format!("{}: {e}", shard_path.display()))
             .and_then(|()| {
-                Command::new(&exe)
-                    .arg("worker")
+                let mut cmd = Command::new(&exe);
+                cmd.arg("worker")
                     .arg("--shard")
                     .arg(&shard_path)
                     .arg("--out")
-                    .arg(&out_path)
-                    .spawn()
+                    .arg(&out_path);
+                if let Some(tp) = &trace_path {
+                    cmd.arg("--trace").arg(tp);
+                }
+                cmd.spawn()
                     .map_err(|e| format!("spawning worker {}: {e}", s.shard))
             });
         match spawned {
-            Ok(child) => children.push((s.shard, child, out_path)),
+            Ok(child) => children.push((s.shard, child, out_path, trace_path)),
             Err(e) => {
-                for (_, child, _) in &mut children {
+                for (_, child, _, _) in &mut children {
                     let _ = child.kill();
                     let _ = child.wait();
                 }
@@ -788,11 +905,11 @@ fn run_distributed(runner: &Runner, plan: &SweepPlan, workers: usize) -> Result<
 
     // Wait phase: reap EVERY worker before judging the run, so an early
     // failure never leaves orphans behind the error return.
-    let mut finished: Vec<(usize, std::path::PathBuf)> = Vec::new();
+    let mut finished: Vec<(usize, std::path::PathBuf, Option<std::path::PathBuf>)> = Vec::new();
     let mut failures: Vec<String> = Vec::new();
-    for (i, mut child, out_path) in children {
+    for (i, mut child, out_path, trace_path) in children {
         match child.wait() {
-            Ok(status) if status.success() => finished.push((i, out_path)),
+            Ok(status) if status.success() => finished.push((i, out_path, trace_path)),
             Ok(status) => failures.push(format!("worker {i} failed ({status})")),
             Err(e) => failures.push(format!("worker {i}: {e}")),
         }
@@ -807,13 +924,30 @@ fn run_distributed(runner: &Runner, plan: &SweepPlan, workers: usize) -> Result<
             ));
         }
         let mut partials = Vec::new();
-        for (i, out_path) in &finished {
+        for (i, out_path, _) in &finished {
             let text = std::fs::read_to_string(out_path)
                 .map_err(|e| format!("worker {i} left no partial report: {e}"))?;
             partials
                 .push(PartialReport::from_json(&text).map_err(|e| format!("worker {i}: {e}"))?);
         }
-        Report::merge(&partials)
+        let report = Report::merge(&partials)?;
+        if let Some(path) = &o.trace {
+            // Merge the trace partials under the same completeness proof
+            // as the report; the merged file is byte-identical to the
+            // one an in-process (--jobs) traced sweep writes.
+            let mut tpartials = Vec::new();
+            for (i, _, trace_path) in &finished {
+                let tp = trace_path.as_ref().expect("--trace gave every worker a path");
+                let text = std::fs::read_to_string(tp)
+                    .map_err(|e| format!("worker {i} left no trace partial: {e}"))?;
+                tpartials
+                    .push(TracePartial::from_json(&text).map_err(|e| format!("worker {i}: {e}"))?);
+            }
+            let trace = TracePartial::merge(&tpartials)?;
+            std::fs::write(path, trace.render_jsonl()).map_err(|e| format!("{path}: {e}"))?;
+            eprintln!("wrote trace: {path} ({} cell(s))", trace.cells.len());
+        }
+        Ok(report)
     };
     let result = collect_and_merge();
     let _ = std::fs::remove_dir_all(&dir);
@@ -853,8 +987,12 @@ fn run_axis_sweep(o: &Opts, axes: &[AxisId]) -> Result<(), String> {
     );
     let runner = o.runner(cfg, size, true);
     let report = match o.workers {
-        Some(workers) => run_distributed(&runner, &plan, workers)?,
-        None => Report::from_cells(&runner.run_sweep(&plan)),
+        Some(workers) => run_distributed(&runner, &plan, workers, o)?,
+        None => {
+            let results = runner.run_sweep(&plan);
+            emit_trace(&results, o)?;
+            Report::from_cells(&results)
+        }
     };
     emit_report(&report, o)?;
     let failures = print_validation(&report, o);
@@ -893,6 +1031,7 @@ fn run_axis_sweep(o: &Opts, axes: &[AxisId]) -> Result<(), String> {
 fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
     o.check_distributed_flags(cmd)?;
     o.check_bench_flags(cmd)?;
+    o.check_trace_flags(cmd)?;
     match cmd {
         "help" | "--help" | "-h" => print!("{USAGE}"),
         "table1" => {
@@ -1037,6 +1176,7 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                 eprintln!("scaling sweep over {cus:?} CUs ({} jobs) ...", o.jobs());
                 let runner = o.runner(device_config(o)?, size, false);
                 let results = runner.run_cells(&scaling_cells(&cus));
+                emit_trace(&results, o)?;
                 emit_report(&Report::from_cells(&results), o)?;
                 let rows = scaling_rows(&cus, &results);
                 let header = vec!["CUs".to_string(), "RSP".to_string(), "sRSP".to_string()];
@@ -1087,6 +1227,22 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                 r.app, r.scenario, r.rounds, r.converged
             );
             println!("{}", r.stats);
+            if let Some(path) = &o.trace {
+                let Some(t) = &r.trace else {
+                    return Err("run recorded no trace despite --trace (trace_capacity 0?)".into());
+                };
+                let report = TraceReport {
+                    cells: vec![TraceCell {
+                        app: r.app.to_string(),
+                        scenario: r.scenario.name().to_string(),
+                        seed: o.seed.unwrap_or(DEFAULT_SEED),
+                        trace: (**t).clone(),
+                    }],
+                };
+                std::fs::write(path, report.render_jsonl())
+                    .map_err(|e| format!("{path}: {e}"))?;
+                eprintln!("wrote trace: {path} (1 cell)");
+            }
         }
         "bench" => {
             o.reject_params(cmd)?;
@@ -1177,6 +1333,7 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
             let report = Report::from_cells(&results);
             emit_report(&report, o)?;
             let failures = print_validation(&report, o);
+            print_perfstats();
             if failures > 0 {
                 return Err(format!("{failures} validation failures"));
             }
@@ -1213,6 +1370,7 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
             let report = Report::from_cells(&results);
             emit_report(&report, o)?;
             let failures = print_validation(&report, o);
+            print_perfstats();
             eprintln!("ci-smoke wall time: {wall:.2?} with {jobs} job(s)");
             if failures > 0 {
                 return Err(format!("ci-smoke: {failures} oracle mismatches"));
@@ -1239,6 +1397,13 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                         .into(),
                 );
             }
+            if o.trace.is_some() && o.out.is_none() {
+                return Err(
+                    "worker --trace writes a TracePartial to <file> alongside the report; \
+                     pair it with --out <file> so stdout stays one artifact"
+                        .into(),
+                );
+            }
             let Some(path) = &o.shard else {
                 return Err("worker needs --shard <file>".into());
             };
@@ -1253,9 +1418,55 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
             );
             let results = execute_shard(&spec);
             let partial = PartialReport::from_shard(&spec, &results);
+            if let Some(tp) = &o.trace {
+                // Collection was enabled by the shard's own device
+                // config (trace_capacity > 0, set by the traced parent
+                // sweep); a capacity-0 spec fails loudly here.
+                let tpart = TracePartial::from_shard(&spec, &results)?;
+                std::fs::write(tp, tpart.to_json()).map_err(|e| format!("{tp}: {e}"))?;
+            }
             match &o.out {
                 Some(p) => std::fs::write(p, partial.to_json()).map_err(|e| format!("{p}: {e}"))?,
                 None => print!("{}", partial.to_json()),
+            }
+        }
+        "trace" => {
+            o.reject_params(cmd)?;
+            o.reject_proto_params(cmd)?;
+            o.reject_protocol(cmd)?;
+            o.reject_axis_points(cmd)?;
+            if o.report.is_some() {
+                return Err("trace renders its own output formats; --report does not apply".into());
+            }
+            let kind = o.bench_kind.as_deref().unwrap_or("summary");
+            if kind == "kinds" {
+                // The registered event-kind listing needs no input file.
+                print!("{}", tracefile::kinds_listing());
+                return Ok(());
+            }
+            if !matches!(kind, "summary" | "timeline" | "perfetto") {
+                return Err(format!(
+                    "unknown trace kind '{kind}' (kinds: summary, timeline, perfetto, kinds)"
+                ));
+            }
+            let Some(path) = &o.trace else {
+                return Err(format!(
+                    "trace {kind} needs --trace <file> (the JSONL file a traced run/sweep wrote)"
+                ));
+            };
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            let report = TraceReport::parse_jsonl(&text).map_err(|e| format!("{path}: {e}"))?;
+            let rendered = match kind {
+                "summary" => report.summary_table(),
+                "timeline" => report.timeline_table(),
+                _ => report.render_perfetto(),
+            };
+            match &o.out {
+                Some(p) => {
+                    std::fs::write(p, &rendered).map_err(|e| format!("{p}: {e}"))?;
+                    eprintln!("wrote {p}");
+                }
+                None => print!("{rendered}"),
             }
         }
         "merge-reports" => {

@@ -372,6 +372,12 @@ impl WcCache {
         dropped
     }
 
+    /// Number of sFIFO entries pending drain — the work a full flush
+    /// faces right now (diagnostics / trace detail).
+    pub fn sfifo_pending(&self) -> usize {
+        self.sfifo.len()
+    }
+
     /// Number of dirty lines (invariant checks / diagnostics).
     pub fn dirty_line_count(&self) -> usize {
         self.slots

@@ -15,7 +15,7 @@ use super::cache::{DrainStep, WcCache, Writeback};
 use super::timing::{Banked, Resource};
 use super::{byte_mask, line_of, offset_in_line, Addr, BackingStore, LineAddr, Ticket};
 use crate::config::DeviceConfig;
-use crate::sim::{Cycle, Stats};
+use crate::sim::{Cycle, Stats, TraceKind, TraceSink};
 use crate::sync::scope::AtomicOp;
 use crate::sync::tables::{LrTbl, PaTbl};
 use std::collections::HashMap;
@@ -68,6 +68,10 @@ pub struct MemSystem {
     hlrc_capacity: usize,
     dram: Banked,
     pub stats: Stats,
+    /// Sync-event trace sink (observe-only; disabled unless
+    /// [`DeviceConfig::trace_capacity`] > 0). Protocol engines and the
+    /// hierarchy itself emit into it; the driver harvests per cell.
+    pub trace: TraceSink,
     /// Resolved sync-protocol parameters (`--proto-param` overlaid on the
     /// selected protocol's registry spec). Populated by
     /// [`Device::new`](crate::gpu::Device::new); a bare `MemSystem` keeps
@@ -97,6 +101,7 @@ impl MemSystem {
             dram: Banked::new(cfg.dram_channels),
             backing: BackingStore::new(),
             stats: Stats::new(),
+            trace: TraceSink::new(cfg.trace_capacity, cfg.num_cus),
             proto_params: crate::params::Params::default(),
             cus,
             cfg,
@@ -449,6 +454,8 @@ impl MemSystem {
     /// Full cache-flush of an L1 (drain entire sFIFO). Global-release path.
     pub fn full_flush_l1(&mut self, cu: u32, at: Cycle) -> Cycle {
         self.stats.l1_flushes += 1;
+        let pending = self.cus[cu as usize].l1.sfifo_pending() as u64;
+        self.trace.emit(at, cu, TraceKind::L1Flush, 0, pending);
         self.flush_l1(cu, None, at)
     }
 
@@ -463,6 +470,7 @@ impl MemSystem {
         self.stats.lines_invalidated += dropped;
         side.lr_tbl.clear();
         side.pa_tbl.clear();
+        self.trace.emit(at, cu, TraceKind::L1Invalidate, 0, dropped);
         // hLRC: the cache can no longer hold its sync lines exclusively.
         self.hlrc_drop_owner(cu);
         t + 1

@@ -12,11 +12,13 @@ pub mod event;
 pub mod perfstats;
 pub mod rng;
 pub mod stats;
+pub mod trace;
 
 pub use event::{Event, EventQueue};
 pub use perfstats::PerfStats;
 pub use rng::SplitMix64;
 pub use stats::Stats;
+pub use trace::{CellTrace, TraceEvent, TraceKind, TraceSink, TRACE_SCHEMA};
 
 /// Simulated GPU core clock cycle. The device clock is the unit of all
 /// latencies in [`DeviceConfig`](crate::config::DeviceConfig).

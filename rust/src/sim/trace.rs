@@ -1,0 +1,535 @@
+//! Cycle-timestamped sync-event tracing: the observability counterpart
+//! to [`perfstats`](crate::sim::perfstats)' wall-clock split.
+//!
+//! [`Stats`](crate::sim::Stats) can only say *how many* promotions a run
+//! made; this module records *when* each one happened and *which* CU it
+//! hit. A [`TraceSink`] lives on the memory system and collects
+//! [`TraceEvent`]s — `{cycle, cu, wg, kind, addr, detail}` — from hooks
+//! in the sync protocols, the memory hierarchy and the device event
+//! loop, into a bounded ring buffer (oldest events overwritten, loudly
+//! counted in `dropped`) plus an exact per-CU × per-kind counter matrix
+//! that no ring overflow can truncate.
+//!
+//! Tracing is **observe-only and off by default**: a sink with capacity
+//! 0 is disabled and every `emit` returns immediately, so the simulated
+//! results — and therefore all reports — are byte-identical whether a
+//! run is traced or not. The sink is part of the per-cell
+//! [`MemSystem`](crate::mem::MemSystem), so per-cell traces are
+//! deterministic and independent of `--jobs`/`--workers` sharding.
+//!
+//! The serialized forms (the per-cell [`CellTrace`] JSON, the JSONL
+//! trace files and the worker trace partials in
+//! [`harness::tracefile`](crate::harness::tracefile)) are all versioned
+//! by [`TRACE_SCHEMA`].
+
+use crate::jsonio::Json;
+
+use super::Cycle;
+
+/// Version stamp of every serialized trace artifact (per-cell JSON,
+/// JSONL files, worker trace partials). Bumped on any event-kind or
+/// field change so mixed binary generations are refused, not misread.
+pub const TRACE_SCHEMA: u32 = 1;
+
+/// Ring-buffer capacity `--trace` selects when `--trace-buf` is absent.
+pub const DEFAULT_TRACE_CAPACITY: u32 = 65536;
+
+/// Width of one cycle bucket in the time-series reduction
+/// ([`CellTrace::timeline`]).
+pub const TIMELINE_BUCKET_CYCLES: u64 = 1024;
+
+/// Pseudo-CU id for device-wide events (kernel-launch begin/end) that
+/// no single CU owns. Excluded from the per-CU counter matrix.
+pub const DEVICE_CU: u32 = u32::MAX;
+
+/// The traced moments — the events the paper's argument is made of.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// wg-scope acquire (protocol-independent dispatch point).
+    WgAcquire,
+    /// wg-scope release.
+    WgRelease,
+    /// cmp-scope acquire (shared core, protocol-independent).
+    CmpAcquire,
+    /// cmp-scope release.
+    CmpRelease,
+    /// Remote-scope acquire promotion request.
+    RemoteAcquire,
+    /// Remote-scope release promotion request.
+    RemoteRelease,
+    /// Remote-scope acquire+release promotion request.
+    RemoteAcqRel,
+    /// wg acquire promoted to global scope by a PA-TBL hit (sRSP §4).
+    Promotion,
+    /// wg acquire that stayed on the local fast path (PA-TBL miss).
+    LocalAcquire,
+    /// Selective-flush broadcast issued by a remote acquire.
+    SelFlushRequest,
+    /// Selective-flush answered immediately at a target (LR-TBL miss).
+    SelFlushNop,
+    /// Selective-flush that drained a target's sFIFO (LR-TBL hit).
+    SelFlushDrain,
+    /// Selective-invalidate broadcast issued by a pure remote release.
+    SelInvRequest,
+    /// LR-TBL insertion (detail: address recorded).
+    LrInsert,
+    /// LR-TBL sticky overflow.
+    LrOverflow,
+    /// PA-TBL insertion at a target CU.
+    PaInsert,
+    /// PA-TBL overflow at a target CU (conservative eager invalidate).
+    PaOverflow,
+    /// Full L1 flush (sFIFO drain; detail: lines pending).
+    L1Flush,
+    /// L1 flash invalidate (detail: valid lines discarded).
+    L1Invalidate,
+    /// srsp-adaptive fell back to eager all-L1 invalidation.
+    AdaptiveEager,
+    /// srsp-adaptive stayed on the selective path.
+    AdaptiveSelective,
+    /// hLRC wg op on the registered owner's fast path.
+    HlrcLocal,
+    /// hLRC ownership transfer (flush previous owner, invalidate next).
+    HlrcTransfer,
+    /// hLRC registry eviction (capacity pressure).
+    HlrcEvict,
+    /// Kernel launch began (device-wide, cu = [`DEVICE_CU`]).
+    LaunchBegin,
+    /// Kernel launch ended at the end barrier (device-wide).
+    LaunchEnd,
+}
+
+impl TraceKind {
+    /// Every kind, in stable serialization order.
+    pub const ALL: [TraceKind; 26] = [
+        TraceKind::WgAcquire,
+        TraceKind::WgRelease,
+        TraceKind::CmpAcquire,
+        TraceKind::CmpRelease,
+        TraceKind::RemoteAcquire,
+        TraceKind::RemoteRelease,
+        TraceKind::RemoteAcqRel,
+        TraceKind::Promotion,
+        TraceKind::LocalAcquire,
+        TraceKind::SelFlushRequest,
+        TraceKind::SelFlushNop,
+        TraceKind::SelFlushDrain,
+        TraceKind::SelInvRequest,
+        TraceKind::LrInsert,
+        TraceKind::LrOverflow,
+        TraceKind::PaInsert,
+        TraceKind::PaOverflow,
+        TraceKind::L1Flush,
+        TraceKind::L1Invalidate,
+        TraceKind::AdaptiveEager,
+        TraceKind::AdaptiveSelective,
+        TraceKind::HlrcLocal,
+        TraceKind::HlrcTransfer,
+        TraceKind::HlrcEvict,
+        TraceKind::LaunchBegin,
+        TraceKind::LaunchEnd,
+    ];
+
+    /// Number of kinds (the width of the per-CU counter matrix).
+    pub const COUNT: usize = TraceKind::ALL.len();
+
+    /// Stable wire name (JSONL `kind` field, Perfetto event name).
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::WgAcquire => "wg_acquire",
+            TraceKind::WgRelease => "wg_release",
+            TraceKind::CmpAcquire => "cmp_acquire",
+            TraceKind::CmpRelease => "cmp_release",
+            TraceKind::RemoteAcquire => "remote_acquire",
+            TraceKind::RemoteRelease => "remote_release",
+            TraceKind::RemoteAcqRel => "remote_acqrel",
+            TraceKind::Promotion => "promotion",
+            TraceKind::LocalAcquire => "local_acquire",
+            TraceKind::SelFlushRequest => "sel_flush_request",
+            TraceKind::SelFlushNop => "sel_flush_nop",
+            TraceKind::SelFlushDrain => "sel_flush_drain",
+            TraceKind::SelInvRequest => "sel_inv_request",
+            TraceKind::LrInsert => "lr_insert",
+            TraceKind::LrOverflow => "lr_overflow",
+            TraceKind::PaInsert => "pa_insert",
+            TraceKind::PaOverflow => "pa_overflow",
+            TraceKind::L1Flush => "l1_flush",
+            TraceKind::L1Invalidate => "l1_invalidate",
+            TraceKind::AdaptiveEager => "adaptive_eager",
+            TraceKind::AdaptiveSelective => "adaptive_selective",
+            TraceKind::HlrcLocal => "hlrc_local",
+            TraceKind::HlrcTransfer => "hlrc_transfer",
+            TraceKind::HlrcEvict => "hlrc_evict",
+            TraceKind::LaunchBegin => "launch_begin",
+            TraceKind::LaunchEnd => "launch_end",
+        }
+    }
+
+    /// Resolve a wire name back to its kind.
+    pub fn from_name(s: &str) -> Option<TraceKind> {
+        TraceKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+
+    /// Index into the per-CU counter matrix (= position in [`Self::ALL`]).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// One recorded sync event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub cycle: Cycle,
+    /// CU the event happened *at* (the target of a selective-flush nop,
+    /// not its requester); [`DEVICE_CU`] for device-wide events.
+    pub cu: u32,
+    /// Work-group whose instruction caused the event (the requester even
+    /// for events landing at another CU).
+    pub wg: u32,
+    pub kind: TraceKind,
+    /// The synchronized address / cache line, 0 where not applicable.
+    pub addr: u64,
+    /// Kind-specific payload (lines drained, target CU, ...), else 0.
+    pub detail: u64,
+}
+
+/// The bounded event collector living on each cell's memory system.
+///
+/// Disabled (capacity 0) it is a single predictable branch per hook;
+/// enabled it records into the ring and the exact per-CU counters. It
+/// never touches [`Stats`](crate::sim::Stats) or any timing state —
+/// observe-only is the invariant the determinism tests pin.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSink {
+    enabled: bool,
+    capacity: usize,
+    ring: Vec<TraceEvent>,
+    /// Oldest slot once the ring has wrapped.
+    head: usize,
+    /// Events overwritten after the ring filled (loud, never silent).
+    dropped: u64,
+    /// Work-group the device event loop is currently stepping; stamps
+    /// every emitted event (set via [`TraceSink::set_wg`]).
+    cur_wg: u32,
+    /// Exact per-CU × per-kind counters; immune to ring overflow.
+    per_cu: Vec<[u64; TraceKind::COUNT]>,
+}
+
+impl TraceSink {
+    /// A sink for `num_cus` CUs; `capacity == 0` disables tracing.
+    pub fn new(capacity: u32, num_cus: u32) -> TraceSink {
+        let enabled = capacity > 0;
+        TraceSink {
+            enabled,
+            capacity: capacity as usize,
+            ring: Vec::with_capacity(if enabled { capacity as usize } else { 0 }),
+            head: 0,
+            dropped: 0,
+            cur_wg: 0,
+            per_cu: if enabled {
+                vec![[0; TraceKind::COUNT]; num_cus as usize]
+            } else {
+                Vec::new()
+            },
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Stamp the work-group whose instruction is about to execute.
+    #[inline]
+    pub fn set_wg(&mut self, wg: u32) {
+        if self.enabled {
+            self.cur_wg = wg;
+        }
+    }
+
+    /// Record one event (no-op while disabled).
+    #[inline]
+    pub fn emit(&mut self, cycle: Cycle, cu: u32, kind: TraceKind, addr: u64, detail: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.record(cycle, cu, kind, addr, detail);
+    }
+
+    fn record(&mut self, cycle: Cycle, cu: u32, kind: TraceKind, addr: u64, detail: u64) {
+        if let Some(row) = self.per_cu.get_mut(cu as usize) {
+            row[kind.index()] += 1;
+        }
+        let ev = TraceEvent {
+            cycle,
+            cu,
+            wg: self.cur_wg,
+            kind,
+            addr,
+            detail,
+        };
+        if self.ring.len() < self.capacity {
+            self.ring.push(ev);
+        } else {
+            // Overwrite the oldest event; the drop is counted, and the
+            // exporters surface it as a loud `truncated: true`.
+            self.ring[self.head] = ev;
+            self.head = (self.head + 1) % self.capacity;
+            self.dropped += 1;
+        }
+    }
+
+    /// Take the collected trace as an immutable per-cell snapshot
+    /// (chronological event order), resetting the sink for reuse.
+    /// `None` while disabled — callers distinguish "tracing off" from
+    /// "traced but empty".
+    pub fn take_cell(&mut self) -> Option<Box<CellTrace>> {
+        if !self.enabled {
+            return None;
+        }
+        let mut events = Vec::with_capacity(self.ring.len());
+        events.extend_from_slice(&self.ring[self.head..]);
+        events.extend_from_slice(&self.ring[..self.head]);
+        let cell = CellTrace {
+            capacity: self.capacity as u64,
+            dropped: self.dropped,
+            events,
+            per_cu: std::mem::replace(
+                &mut self.per_cu,
+                vec![[0; TraceKind::COUNT]; self.per_cu.len()],
+            ),
+        };
+        self.ring.clear();
+        self.head = 0;
+        self.dropped = 0;
+        Some(Box::new(cell))
+    }
+}
+
+/// One run's finished trace: the ring contents in chronological order
+/// plus the exact per-CU counter matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CellTrace {
+    /// Ring capacity the run recorded under.
+    pub capacity: u64,
+    /// Events overwritten after the ring filled; `> 0` ⇒ truncated.
+    pub dropped: u64,
+    /// Ring contents, oldest first.
+    pub events: Vec<TraceEvent>,
+    /// Exact per-CU × per-kind counts (index = [`TraceKind::index`]).
+    pub per_cu: Vec<[u64; TraceKind::COUNT]>,
+}
+
+impl CellTrace {
+    /// Did the ring overflow (i.e. is `events` missing the oldest part)?
+    pub fn truncated(&self) -> bool {
+        self.dropped > 0
+    }
+
+    /// Total events per CU (row sums of the counter matrix).
+    pub fn cu_totals(&self) -> Vec<u64> {
+        self.per_cu.iter().map(|row| row.iter().sum()).collect()
+    }
+
+    /// The cycle-bucketed time series: `(bucket start cycle, events)`
+    /// pairs ascending, buckets of [`TIMELINE_BUCKET_CYCLES`], computed
+    /// over the (possibly truncated) ring contents. Empty buckets are
+    /// omitted.
+    pub fn timeline(&self) -> Vec<(u64, u64)> {
+        let mut out: Vec<(u64, u64)> = Vec::new();
+        for ev in &self.events {
+            let start = (ev.cycle / TIMELINE_BUCKET_CYCLES) * TIMELINE_BUCKET_CYCLES;
+            match out.last_mut() {
+                // Events are chronological, so buckets close in order.
+                Some((s, n)) if *s == start => *n += 1,
+                _ => out.push((start, 1)),
+            }
+        }
+        out
+    }
+
+    /// Lossless JSON encoding (the worker trace-partial payload).
+    pub fn to_json(&self) -> Json {
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                Json::Obj(vec![
+                    ("cycle".into(), Json::u64(e.cycle)),
+                    ("cu".into(), Json::u32(e.cu)),
+                    ("wg".into(), Json::u32(e.wg)),
+                    ("kind".into(), Json::str(e.kind.name())),
+                    ("addr".into(), Json::u64(e.addr)),
+                    ("detail".into(), Json::u64(e.detail)),
+                ])
+            })
+            .collect();
+        // Counter rows are sparse-encoded (all-zero rows and zero cells
+        // omitted); `cus` preserves the matrix height for the decoder.
+        let mut per_cu = Vec::new();
+        for (cu, row) in self.per_cu.iter().enumerate() {
+            let counts: Vec<(String, Json)> = TraceKind::ALL
+                .iter()
+                .filter(|k| row[k.index()] > 0)
+                .map(|k| (k.name().to_string(), Json::u64(row[k.index()])))
+                .collect();
+            if !counts.is_empty() {
+                per_cu.push(Json::Obj(vec![
+                    ("cu".into(), Json::usize(cu)),
+                    ("counts".into(), Json::Obj(counts)),
+                ]));
+            }
+        }
+        Json::Obj(vec![
+            ("capacity".into(), Json::u64(self.capacity)),
+            ("dropped".into(), Json::u64(self.dropped)),
+            ("truncated".into(), Json::Bool(self.truncated())),
+            ("cus".into(), Json::usize(self.per_cu.len())),
+            ("events".into(), Json::Arr(events)),
+            ("per_cu".into(), Json::Arr(per_cu)),
+        ])
+    }
+
+    /// Decode [`CellTrace::to_json`]; loud on malformation.
+    pub fn from_json(v: &Json) -> Result<CellTrace, String> {
+        let mut events = Vec::new();
+        for (i, e) in v.get("events")?.arr()?.iter().enumerate() {
+            let kind_name = e.get("kind")?.as_str()?;
+            let kind = TraceKind::from_name(kind_name)
+                .ok_or_else(|| format!("event {i}: unknown trace kind '{kind_name}'"))?;
+            events.push(TraceEvent {
+                cycle: e.get("cycle")?.as_u64()?,
+                cu: e.get("cu")?.as_u32()?,
+                wg: e.get("wg")?.as_u32()?,
+                kind,
+                addr: e.get("addr")?.as_u64()?,
+                detail: e.get("detail")?.as_u64()?,
+            });
+        }
+        let cus = v.get("cus")?.as_usize()?;
+        let mut per_cu = vec![[0u64; TraceKind::COUNT]; cus];
+        for row in v.get("per_cu")?.arr()? {
+            let cu = row.get("cu")?.as_usize()?;
+            let slot = per_cu
+                .get_mut(cu)
+                .ok_or_else(|| format!("per_cu row for CU {cu} outside the declared {cus}"))?;
+            let Json::Obj(counts) = row.get("counts")? else {
+                return Err(format!("per_cu row for CU {cu}: counts is not an object"));
+            };
+            for (name, val) in counts {
+                let kind = TraceKind::from_name(name)
+                    .ok_or_else(|| format!("CU {cu}: unknown trace kind '{name}'"))?;
+                slot[kind.index()] = val.as_u64().map_err(|e| format!("CU {cu} {name}: {e}"))?;
+            }
+        }
+        Ok(CellTrace {
+            capacity: v.get("capacity")?.as_u64()?,
+            dropped: v.get("dropped")?.as_u64()?,
+            events,
+            per_cu,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonio;
+
+    fn ev(sink: &mut TraceSink, cycle: Cycle, cu: u32, kind: TraceKind) {
+        sink.emit(cycle, cu, kind, 0x40, 1);
+    }
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let mut s = TraceSink::new(0, 4);
+        assert!(!s.enabled());
+        ev(&mut s, 1, 0, TraceKind::WgAcquire);
+        assert!(s.take_cell().is_none());
+    }
+
+    #[test]
+    fn wire_names_are_unique_and_round_trip() {
+        for (i, k) in TraceKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i, "{} out of order in ALL", k.name());
+            assert_eq!(TraceKind::from_name(k.name()), Some(*k));
+        }
+        let mut names: Vec<&str> = TraceKind::ALL.iter().map(|k| k.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), TraceKind::COUNT, "duplicate wire name");
+    }
+
+    #[test]
+    fn ring_overflow_is_counted_and_keeps_newest() {
+        let mut s = TraceSink::new(3, 2);
+        for c in 0..5u64 {
+            ev(&mut s, c, 0, TraceKind::WgAcquire);
+        }
+        let t = s.take_cell().unwrap();
+        assert!(t.truncated());
+        assert_eq!(t.dropped, 2);
+        let cycles: Vec<Cycle> = t.events.iter().map(|e| e.cycle).collect();
+        assert_eq!(cycles, vec![2, 3, 4], "oldest overwritten, order kept");
+        // The counter matrix is exact regardless of the overflow.
+        assert_eq!(t.per_cu[0][TraceKind::WgAcquire.index()], 5);
+    }
+
+    #[test]
+    fn per_cu_attribution_and_wg_stamp() {
+        let mut s = TraceSink::new(8, 2);
+        s.set_wg(7);
+        ev(&mut s, 1, 0, TraceKind::LocalAcquire);
+        ev(&mut s, 2, 1, TraceKind::SelFlushNop);
+        s.emit(3, DEVICE_CU, TraceKind::LaunchEnd, 0, 0);
+        let t = s.take_cell().unwrap();
+        assert_eq!(t.events.len(), 3);
+        assert!(t.events.iter().all(|e| e.wg == 7));
+        assert_eq!(t.per_cu[0][TraceKind::LocalAcquire.index()], 1);
+        assert_eq!(t.per_cu[1][TraceKind::SelFlushNop.index()], 1);
+        // Device-wide events stay out of the per-CU matrix.
+        assert_eq!(t.cu_totals(), vec![1, 1]);
+    }
+
+    #[test]
+    fn take_cell_resets_for_reuse() {
+        let mut s = TraceSink::new(4, 1);
+        ev(&mut s, 9, 0, TraceKind::L1Flush);
+        let first = s.take_cell().unwrap();
+        assert_eq!(first.events.len(), 1);
+        let second = s.take_cell().unwrap();
+        assert!(second.events.is_empty());
+        assert_eq!(second.dropped, 0);
+        assert_eq!(second.per_cu[0][TraceKind::L1Flush.index()], 0);
+    }
+
+    #[test]
+    fn timeline_buckets_close_in_order() {
+        let mut s = TraceSink::new(16, 1);
+        ev(&mut s, 10, 0, TraceKind::WgAcquire);
+        ev(&mut s, 20, 0, TraceKind::WgAcquire);
+        ev(&mut s, TIMELINE_BUCKET_CYCLES + 1, 0, TraceKind::WgRelease);
+        let t = s.take_cell().unwrap();
+        assert_eq!(t.timeline(), vec![(0, 2), (TIMELINE_BUCKET_CYCLES, 1)]);
+    }
+
+    #[test]
+    fn cell_trace_json_round_trips() {
+        let mut s = TraceSink::new(4, 3);
+        s.set_wg(2);
+        s.emit(5, 1, TraceKind::Promotion, 0x1234_5678_9abc_def0, 3);
+        for c in 0..6u64 {
+            ev(&mut s, c + 6, 0, TraceKind::LrInsert);
+        }
+        let t = *s.take_cell().unwrap();
+        assert!(t.truncated());
+        let text = t.to_json().render();
+        assert!(text.contains("\"truncated\":true"));
+        assert!(text.contains("\"kind\":\"promotion\""));
+        let back = CellTrace::from_json(&jsonio::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, t);
+        // CU 2 never emitted: sparse rows still rebuild the full matrix.
+        assert_eq!(back.per_cu.len(), 3);
+        assert_eq!(back.per_cu[2], [0; TraceKind::COUNT]);
+    }
+}

@@ -22,7 +22,7 @@ pub use super::ops::{SyncOp, SyncOutcome};
 use super::protocol::Protocol;
 use super::scope::{AtomicOp, MemOrder, Scope};
 use crate::mem::{Addr, MemSystem};
-use crate::sim::Cycle;
+use crate::sim::{Cycle, TraceKind};
 
 /// Perform a scoped atomic (§2.2). `scope` ∈ {Wg, Cmp, Sys}; remote ops
 /// go through [`remote_op`].
@@ -52,9 +52,11 @@ pub fn sync_op(
         Scope::Wg => {
             if order.acquires() {
                 m.stats.wg_acquires += 1;
+                m.trace.emit(at, cu, TraceKind::WgAcquire, addr, 0);
             }
             if order.releases() {
                 m.stats.wg_releases += 1;
+                m.trace.emit(at, cu, TraceKind::WgRelease, addr, 0);
             }
             protocol.proto().wg_op(m, &s)
         }
@@ -83,9 +85,18 @@ pub fn remote_op(
     at: Cycle,
 ) -> SyncOutcome {
     match order {
-        MemOrder::Acquire => m.stats.remote_acquires += 1,
-        MemOrder::Release => m.stats.remote_releases += 1,
-        MemOrder::AcqRel => m.stats.remote_acqrels += 1,
+        MemOrder::Acquire => {
+            m.stats.remote_acquires += 1;
+            m.trace.emit(at, cu, TraceKind::RemoteAcquire, addr, 0);
+        }
+        MemOrder::Release => {
+            m.stats.remote_releases += 1;
+            m.trace.emit(at, cu, TraceKind::RemoteRelease, addr, 0);
+        }
+        MemOrder::AcqRel => {
+            m.stats.remote_acqrels += 1;
+            m.trace.emit(at, cu, TraceKind::RemoteAcqRel, addr, 0);
+        }
         MemOrder::Relaxed => panic!("remote op requires acquire/release semantics"),
     }
     let s = SyncOp {

@@ -9,6 +9,7 @@
 use super::ops::{self, SyncOp, SyncOutcome};
 use super::protocol::SyncProtocol;
 use crate::mem::{line_of, MemSystem};
+use crate::sim::TraceKind;
 
 /// Registry entry for the hLRC extension protocol.
 pub struct Hlrc;
@@ -46,14 +47,23 @@ impl SyncProtocol for Hlrc {
             Some(owner) if owner == s.cu => {
                 // Fast path: L1-local.
                 m.stats.bump("hlrc_local_ops", 1);
+                m.trace.emit(s.at, s.cu, TraceKind::HlrcLocal, s.addr, 0);
                 let (value, _ticket, done) =
                     m.l1_atomic(s.cu, s.addr, s.op, s.operand, s.cmp, s.at);
                 ops::charge_overhead(m, s.at, done);
                 SyncOutcome { value, done }
             }
             prev => {
-                // Lazy transfer through the L2 registry.
+                // Lazy transfer through the L2 registry. detail carries the
+                // previous owner (or DEVICE_CU when unowned).
                 m.stats.bump("hlrc_transfers", 1);
+                m.trace.emit(
+                    s.at,
+                    s.cu,
+                    TraceKind::HlrcTransfer,
+                    s.addr,
+                    prev.unwrap_or(crate::sim::trace::DEVICE_CU) as u64,
+                );
                 let line = line_of(s.addr);
                 // Registry probe at the L2.
                 let t_req = m.xbar_hop(s.cu, s.at);
@@ -79,6 +89,8 @@ impl SyncProtocol for Hlrc {
                 // evictee's owner to flush (it loses its exclusive hold).
                 if let Some((_, evicted_owner)) = m.hlrc_claim(s.addr, s.cu) {
                     m.stats.bump("hlrc_evictions", 1);
+                    m.trace
+                        .emit(t_ready, evicted_owner, TraceKind::HlrcEvict, s.addr, 0);
                     m.full_flush_l1(evicted_owner, t_ready);
                 }
                 // The op itself completes at the L2 (the transfer point).

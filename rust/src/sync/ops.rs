@@ -15,7 +15,7 @@
 
 use super::scope::{AtomicOp, MemOrder};
 use crate::mem::{Addr, MemSystem, Ticket};
-use crate::sim::Cycle;
+use crate::sim::{Cycle, TraceKind};
 
 /// Result of a synchronization operation.
 #[derive(Debug, Clone, Copy)]
@@ -67,18 +67,26 @@ pub fn charge_overhead(m: &mut MemSystem, at: Cycle, done: Cycle) {
 pub fn wg_plain(m: &mut MemSystem, s: &SyncOp, record_lr: bool) -> SyncOutcome {
     let (value, ticket, done) = m.l1_atomic(s.cu, s.addr, s.op, s.operand, s.cmp, s.at);
     if record_lr && s.op.writes_given(value, s.operand, s.cmp) {
-        record_lr_release(m, s.cu, s.addr, Some(ticket));
+        record_lr_release(m, s.cu, s.addr, Some(ticket), s.at);
     }
     charge_overhead(m, s.at, done);
     SyncOutcome { value, done }
 }
 
 /// Record a wg-scope sync write in the requester's LR-TBL (§4.1).
-pub fn record_lr_release(m: &mut MemSystem, cu: u32, addr: Addr, ticket: Option<Ticket>) {
+pub fn record_lr_release(
+    m: &mut MemSystem,
+    cu: u32,
+    addr: Addr,
+    ticket: Option<Ticket>,
+    at: Cycle,
+) {
     let Some(ticket) = ticket else { return };
     m.stats.lr_tbl_insertions += 1;
+    m.trace.emit(at, cu, TraceKind::LrInsert, addr, ticket);
     if m.cu_mut(cu).lr_tbl.record(addr, ticket) {
         m.stats.lr_tbl_overflows += 1;
+        m.trace.emit(at, cu, TraceKind::LrOverflow, addr, ticket);
     }
 }
 
@@ -88,9 +96,11 @@ pub fn record_lr_release(m: &mut MemSystem, cu: u32, addr: Addr, ticket: Option<
 pub fn record_pa(m: &mut MemSystem, target: u32, addr: Addr, at: Cycle) -> Cycle {
     use crate::sync::tables::PaRecord;
     m.stats.pa_tbl_insertions += 1;
+    m.trace.emit(at, target, TraceKind::PaInsert, addr, 0);
     let mut t = at;
     if m.cu(target).pa_tbl.is_full() && !m.cu(target).pa_tbl.needs_promotion(addr) {
         m.stats.pa_tbl_overflows += 1;
+        m.trace.emit(at, target, TraceKind::PaOverflow, addr, 0);
         t = m.invalidate_l1(target, t);
     }
     match m.cu_mut(target).pa_tbl.record(addr) {
@@ -110,12 +120,14 @@ pub fn cmp_scope_op(m: &mut MemSystem, s: &SyncOp) -> SyncOutcome {
     let mut t = s.at;
     if s.order.releases() {
         m.stats.cmp_releases += 1;
+        m.trace.emit(s.at, s.cu, TraceKind::CmpRelease, s.addr, 0);
         // Global release: every local update must reach the global sync
         // point (L2) — full cache-flush of the own L1.
         t = m.full_flush_l1(s.cu, t);
     }
     if s.order.acquires() {
         m.stats.cmp_acquires += 1;
+        m.trace.emit(s.at, s.cu, TraceKind::CmpAcquire, s.addr, 0);
         // Global acquire: all possibly-stale local data must be discarded.
         t = m.invalidate_l1(s.cu, t);
     }

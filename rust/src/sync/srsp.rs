@@ -15,6 +15,7 @@ use super::ops::{self, SyncOp, SyncOutcome};
 use super::protocol::SyncProtocol;
 use crate::mem::{line_of, MemSystem};
 use crate::params::ParamSpec;
+use crate::sim::TraceKind;
 
 /// The table-capacity parameters of the sRSP family. The defaults mirror
 /// Table 1; an explicit `--proto-param` wins over the device config's
@@ -75,6 +76,7 @@ pub fn wg(m: &mut MemSystem, s: &SyncOp) -> SyncOutcome {
         let t = s.at + 1;
         if m.cu(s.cu).pa_tbl.needs_promotion(s.addr) {
             m.stats.promoted_acquires += 1;
+            m.trace.emit(s.at, s.cu, TraceKind::Promotion, s.addr, 0);
             let t = m.invalidate_l1(s.cu, t); // also clears LR-TBL + PA-TBL
             let (value, done) = m.l2_atomic(s.cu, s.addr, s.op, s.operand, s.cmp, t);
             ops::charge_overhead(m, s.at, done);
@@ -83,9 +85,10 @@ pub fn wg(m: &mut MemSystem, s: &SyncOp) -> SyncOutcome {
             return SyncOutcome { value, done };
         }
         m.stats.local_acquires += 1;
+        m.trace.emit(s.at, s.cu, TraceKind::LocalAcquire, s.addr, 0);
         let (value, ticket, done) = m.l1_atomic(s.cu, s.addr, s.op, s.operand, s.cmp, t);
         if s.op.writes_given(value, s.operand, s.cmp) {
-            ops::record_lr_release(m, s.cu, s.addr, Some(ticket));
+            ops::record_lr_release(m, s.cu, s.addr, Some(ticket), s.at);
         }
         ops::charge_overhead(m, s.at, done);
         return SyncOutcome { value, done };
@@ -112,6 +115,7 @@ pub fn remote(m: &mut MemSystem, s: &SyncOp) -> SyncOutcome {
         let mut t_promote = s.at + 1; // own LR-TBL probe
         if !own_hit {
             m.stats.selective_flush_requests += 1;
+            m.trace.emit(s.at, s.cu, TraceKind::SelFlushRequest, s.addr, 0);
             // Broadcast selective-flush(L) via the L2 to all other L1s.
             let t_req = m.xbar_hop(s.cu, s.at);
             let t_fan = m.l2_control_hop(line, t_req);
@@ -127,6 +131,7 @@ pub fn remote(m: &mut MemSystem, s: &SyncOp) -> SyncOutcome {
                     None => {
                         // Definite miss: immediate ack (§4.2).
                         m.stats.selective_flush_nops += 1;
+                        m.trace.emit(t_arrive, target, TraceKind::SelFlushNop, s.addr, 0);
                         t_arrive + 1
                     }
                     Some(upto) => {
@@ -134,6 +139,13 @@ pub fn remote(m: &mut MemSystem, s: &SyncOp) -> SyncOutcome {
                         // up to the recorded ticket, then remember that the
                         // local sharer's next acquire of L must promote.
                         m.stats.selective_flush_drains += 1;
+                        m.trace.emit(
+                            t_arrive,
+                            target,
+                            TraceKind::SelFlushDrain,
+                            s.addr,
+                            upto.unwrap_or(u64::MAX),
+                        );
                         let t = m.flush_l1(target, upto, t_arrive + 1);
                         ops::record_pa(m, target, s.addr, t)
                     }
@@ -173,6 +185,7 @@ pub fn remote(m: &mut MemSystem, s: &SyncOp) -> SyncOutcome {
         // keeps steal-heavy workloads (64 deque counters) from flooding
         // every PA-TBL in the device.
         m.stats.selective_inv_requests += 1;
+        m.trace.emit(done, s.cu, TraceKind::SelInvRequest, s.addr, 0);
         let t_fan = m.l2_control_hop(line, done);
         let mut t_all = done;
         for target in 0..m.num_cus() {

@@ -34,6 +34,7 @@ use super::protocol::SyncProtocol;
 use super::{rsp_naive, srsp};
 use crate::mem::MemSystem;
 use crate::params::ParamSpec;
+use crate::sim::TraceKind;
 
 /// Default LR-TBL overflow rate above which remote acquires go eager.
 pub const DEFAULT_OVERFLOW_THRESHOLD: f64 = 0.25;
@@ -90,10 +91,12 @@ impl SyncProtocol for SrspAdaptive {
         let thrashing = insertions > 0 && overflows as f64 > threshold * insertions as f64;
         if thrashing && s.order.acquires() {
             m.stats.bump("adaptive_eager_promotions", 1);
+            m.trace.emit(s.at, s.cu, TraceKind::AdaptiveEager, s.addr, 0);
             return rsp_naive::remote(m, s);
         }
         if s.order.acquires() {
             m.stats.bump("adaptive_selective_promotions", 1);
+            m.trace.emit(s.at, s.cu, TraceKind::AdaptiveSelective, s.addr, 0);
         }
         srsp::remote(m, s)
     }

@@ -70,6 +70,9 @@ pub struct RunResult {
     pub stats: Stats,
     pub rounds: u32,
     pub converged: bool,
+    /// Harvested sync-event trace; `None` unless the device config had
+    /// `trace_capacity > 0`. Observe-only — never feeds `stats`.
+    pub trace: Option<Box<crate::sim::CellTrace>>,
 }
 
 /// Build the per-round work-stealing kernel.
@@ -305,6 +308,7 @@ pub fn run_scenario_seeded<M: TileMath>(
 
     let mut stats = dev.take_stats();
     stats.record_rounds(rounds as u64);
+    let trace = dev.mem.trace.take_cell();
     (
         RunResult {
             scenario,
@@ -312,6 +316,7 @@ pub fn run_scenario_seeded<M: TileMath>(
             stats,
             rounds,
             converged,
+            trace,
         },
         std::mem::take(&mut dev.mem.backing),
     )

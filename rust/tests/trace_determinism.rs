@@ -1,0 +1,247 @@
+//! The sync-event tracing subsystem end to end. The acceptance
+//! properties: tracing is **observe-only** — a traced run's report is
+//! byte-identical to the untraced run's — and the trace file itself is
+//! byte-identical for any `--jobs` / `--workers` split of the same
+//! grid. Ring overflow is loud (`"truncated":true`), the trace flags
+//! are scoped to the commands that consume them, and the `srsp trace`
+//! surface renders every kind from a recorded file.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use srsp::config::DeviceConfig;
+use srsp::coordinator::{axis, SweepPlan};
+use srsp::harness::presets::WorkloadSize;
+use srsp::harness::report::Report;
+use srsp::harness::runner::Runner;
+use srsp::harness::tracefile::TraceReport;
+use srsp::workload::registry;
+
+fn srsp_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_srsp"))
+}
+
+/// A scratch directory unique to this test process + test name.
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("srsp-trace-test-{}-{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+fn tiny_runner(trace_capacity: u32, jobs: usize) -> Runner {
+    Runner {
+        validate: true,
+        ..Runner::new(
+            DeviceConfig {
+                num_cus: 4,
+                trace_capacity,
+                ..DeviceConfig::small()
+            },
+            WorkloadSize::Tiny,
+            jobs,
+        )
+    }
+}
+
+fn ratio_plan() -> SweepPlan {
+    SweepPlan::new(registry::STRESS, &[axis::REMOTE_RATIO])
+        .unwrap()
+        .with_points(axis::REMOTE_RATIO, vec![0.0, 0.5])
+        .unwrap()
+}
+
+/// The shared sweep invocation for the CLI matrix tests.
+fn sweep_args(cmd: &mut Command) -> &mut Command {
+    cmd.args(["sweep", "--axis", "remote-ratio", "--app", "stress"])
+        .args(["--size", "tiny", "--cus", "4"])
+        .args(["--ratios", "0,0.5"])
+}
+
+/// Library level: tracing never perturbs simulation, and the harvested
+/// trace is identical for any in-process jobs split.
+#[test]
+fn tracing_is_observe_only_and_jobs_invariant() {
+    let plan = ratio_plan();
+    let untraced = Report::from_cells(&tiny_runner(0, 1).run_sweep(&plan));
+    let traced_cells = tiny_runner(4096, 1).run_sweep(&plan);
+    let traced = Report::from_cells(&traced_cells);
+    assert_eq!(
+        untraced.to_json(),
+        traced.to_json(),
+        "tracing must not change any reported result"
+    );
+    assert_eq!(untraced.to_csv(), traced.to_csv());
+
+    let jsonl1 = TraceReport::from_cells(&traced_cells).unwrap().render_jsonl();
+    let jsonl4 = TraceReport::from_cells(&tiny_runner(4096, 4).run_sweep(&plan))
+        .unwrap()
+        .render_jsonl();
+    assert_eq!(jsonl1, jsonl4, "--jobs must not change the trace");
+    assert!(jsonl1.contains("\"kind\":\"promotion\""), "srsp cells must promote");
+    assert!(jsonl1.contains("\"truncated\":false"));
+
+    // The JSONL file round-trips losslessly.
+    let parsed = TraceReport::parse_jsonl(&jsonl1).unwrap();
+    assert_eq!(parsed.render_jsonl(), jsonl1);
+}
+
+/// CLI level, the acceptance gate: the trace file from `--workers 2` is
+/// byte-identical to `--jobs 4` and `--jobs 1`, and the traced report is
+/// byte-identical to the untraced one.
+#[test]
+fn cli_trace_byte_identical_across_jobs_and_workers() {
+    let dir = scratch("jobs-vs-workers");
+    let run = |mode: &[&str], trace: Option<&PathBuf>, report: &PathBuf| {
+        let mut cmd = srsp_bin();
+        sweep_args(&mut cmd)
+            .args(mode)
+            .args(["--report", "json", "--out", report.to_str().unwrap()]);
+        if let Some(t) = trace {
+            cmd.args(["--trace", t.to_str().unwrap()]);
+        }
+        let out = cmd.output().expect("spawn srsp");
+        assert!(
+            out.status.success(),
+            "sweep {mode:?}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    };
+    let (t1, t4, tw) = (dir.join("t1.jsonl"), dir.join("t4.jsonl"), dir.join("tw.jsonl"));
+    let (r1, r4, rw, r0) = (
+        dir.join("r1.json"),
+        dir.join("r4.json"),
+        dir.join("rw.json"),
+        dir.join("r0.json"),
+    );
+    run(&["--jobs", "1"], Some(&t1), &r1);
+    run(&["--jobs", "4"], Some(&t4), &r4);
+    run(&["--workers", "2"], Some(&tw), &rw);
+    run(&["--jobs", "4"], None, &r0); // untraced control
+
+    let (t1, t4, tw) = (
+        std::fs::read(&t1).unwrap(),
+        std::fs::read(&t4).unwrap(),
+        std::fs::read(&tw).unwrap(),
+    );
+    assert!(!t1.is_empty());
+    assert_eq!(t1, t4, "--jobs 4 trace must be byte-identical to --jobs 1");
+    assert_eq!(t1, tw, "--workers 2 trace must be byte-identical to --jobs 1");
+    let text = String::from_utf8(t1).unwrap();
+    assert!(text.starts_with("{\"schema\":"), "schema header first:\n{text}");
+    assert!(text.contains("\"kind\":\"promotion\""));
+
+    let (r1, r4, rw, r0) = (
+        std::fs::read(&r1).unwrap(),
+        std::fs::read(&r4).unwrap(),
+        std::fs::read(&rw).unwrap(),
+        std::fs::read(&r0).unwrap(),
+    );
+    assert_eq!(r1, r0, "tracing must not change the report (observe-only)");
+    assert_eq!(r1, r4);
+    assert_eq!(r1, rw);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Ring overflow is loud: a tiny `--trace-buf` marks the cell truncated
+/// in both the JSONL file and the `trace summary` rendering, and still
+/// leaves the report untouched.
+#[test]
+fn trace_ring_overflow_is_loud() {
+    let dir = scratch("overflow");
+    let trace = dir.join("small.jsonl");
+    let out = srsp_bin()
+        .args(["run", "--app", "stress", "--scenario", "srsp", "--size", "tiny"])
+        .args(["--cus", "4", "--param", "remote_ratio=0.5"])
+        .args(["--trace", trace.to_str().unwrap(), "--trace-buf", "16"])
+        .output()
+        .expect("spawn srsp");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = std::fs::read_to_string(&trace).unwrap();
+    assert!(text.contains("\"truncated\":true"), "16-event ring must overflow:\n{text}");
+    let report = TraceReport::parse_jsonl(&text).unwrap();
+    assert_eq!(report.cells.len(), 1);
+    assert!(report.cells[0].trace.truncated());
+    assert_eq!(report.cells[0].trace.events.len(), 16, "ring keeps the newest 16");
+    // Per-CU counters are not ring-bound: they keep counting past the drop.
+    let counted: u64 = report.cells[0].trace.cu_totals().iter().sum();
+    assert!(counted > 16, "per-CU counts must survive overflow (got {counted})");
+    let summary = srsp_bin()
+        .args(["trace", "summary", "--trace", trace.to_str().unwrap()])
+        .output()
+        .expect("spawn srsp trace");
+    assert!(summary.status.success());
+    let summary = String::from_utf8_lossy(&summary.stdout).to_string();
+    assert!(summary.contains("TRUNCATED"), "summary must shout:\n{summary}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The `srsp trace` render surface over a real recorded file.
+#[test]
+fn cli_trace_renders_summary_timeline_perfetto_kinds() {
+    let dir = scratch("render");
+    let trace = dir.join("t.jsonl");
+    let mut cmd = srsp_bin();
+    let out = sweep_args(&mut cmd)
+        .args(["--jobs", "2", "--trace", trace.to_str().unwrap()])
+        .output()
+        .expect("spawn srsp");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let render = |kind: &str| {
+        let out = srsp_bin()
+            .args(["trace", kind, "--trace", trace.to_str().unwrap()])
+            .output()
+            .expect("spawn srsp trace");
+        assert!(
+            out.status.success(),
+            "trace {kind}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    let summary = render("summary");
+    assert!(summary.contains("cell 0: stress/"), "{summary}");
+    assert!(summary.contains("promo"), "{summary}");
+    let timeline = render("timeline");
+    assert!(timeline.contains("bucket_start"), "{timeline}");
+    let perfetto = render("perfetto");
+    assert!(perfetto.starts_with("{\"traceEvents\":["), "{perfetto}");
+    assert!(perfetto.contains("\"thread_name\""), "{perfetto}");
+    let kinds = render("kinds");
+    assert!(kinds.contains("sel_flush_nop"), "{kinds}");
+    // Default kind is summary; --out writes instead of printing.
+    let out_path = dir.join("summary.txt");
+    let out = srsp_bin()
+        .args(["trace", "--trace", trace.to_str().unwrap()])
+        .args(["--out", out_path.to_str().unwrap()])
+        .output()
+        .expect("spawn srsp trace");
+    assert!(out.status.success());
+    assert_eq!(std::fs::read_to_string(&out_path).unwrap(), summary);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The trace flags are scoped: commands that would silently ignore them
+/// reject them up front, and `trace` itself names a missing input.
+#[test]
+fn cli_rejects_misplaced_trace_flags() {
+    for (args, needle) in [
+        (vec!["ci-smoke", "--trace", "t.jsonl"], "--trace applies to"),
+        (vec!["validate", "--trace", "t.jsonl"], "--trace applies to"),
+        (vec!["fig4", "--trace", "t.jsonl"], "--trace applies to"),
+        (vec!["bench", "--trace", "t.jsonl"], "--trace applies to"),
+        (vec!["list-axes", "--trace", "t.jsonl"], "--trace applies to"),
+        (vec!["merge-reports", "--trace", "t.jsonl"], "--trace applies to"),
+        (vec!["run", "--trace-buf", "64"], "needs --trace"),
+        (vec!["worker", "--trace", "t.jsonl", "--trace-buf", "64"], "--trace-buf applies to"),
+        (vec!["run", "--trace", "t.jsonl", "--trace-buf", "0"], "at least 1"),
+        (vec!["worker", "--shard", "s.json", "--trace", "t.jsonl"], "--out"),
+        (vec!["trace"], "needs --trace"),
+        (vec!["trace", "nonsense", "--trace", "t.jsonl"], "unknown trace kind"),
+    ] {
+        let out = srsp_bin().args(&args).output().expect("spawn srsp");
+        assert!(!out.status.success(), "{args:?} must be rejected");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(stderr.contains(needle), "{args:?}: expected '{needle}' in:\n{stderr}");
+    }
+}
