@@ -1,0 +1,861 @@
+//! Content-addressed, persistent result cache for the evaluation
+//! pipeline — the "monitor" that lets a sweep skip its heavyweight path.
+//!
+//! The paper's protocol pays full-synchronization cost only when a
+//! remote access actually needs it; this module applies the same
+//! asymmetric-cost argument one level up. Re-simulating a grid cell is
+//! expensive, looking its result up is cheap, so a run that can *prove*
+//! a cell's inputs are unchanged skips the simulation entirely. Proof is
+//! content addressing: the cache key is the rendered JSON of everything
+//! that determines a cell's row — [`PLAN_VERSION`], the report schema
+//! version, the **effective** [`DeviceConfig`] (per-cell CU count and
+//! protocol-parameter overrides folded in, exactly as the executor
+//! builds it), the workload size, the validate flag and the full
+//! [`PlannedCell`]. All of those serialize through the existing
+//! exhaustive-destructure codecs, so a new config field fails to compile
+//! until its codec — and therefore the fingerprint — accounts for it.
+//!
+//! Two layers share one on-disk store (a directory of JSONL segments):
+//!
+//! 1. **cell layer** — fingerprint → lossless [`ReportRow`] (the same
+//!    raw-token codec the [`PartialReport`](crate::harness::report::PartialReport)
+//!    boundary uses), inserted only for oracle-validated cells;
+//! 2. **preset layer** — fingerprint → serialized workload preset
+//!    (resolved parameters + generated graph + round bound), so sweeps
+//!    that vary only protocol parameters generate each input exactly
+//!    once *across invocations*, not once per run.
+//!
+//! The store is loud and fail-soft: corrupt lines, foreign cache
+//! versions and unknown record kinds are skipped with a stderr warning
+//! (never trusted, never fatal), fingerprint collisions with differing
+//! keys are reported and treated as misses, and every stored row must
+//! round-trip through the `jsonio` codec to the identical token stream
+//! before it is accepted — a lossy row can never poison the store.
+
+use std::collections::BTreeMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufWriter, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::config::DeviceConfig;
+use crate::harness::report::{
+    check_row_round_trip, row_value_from_json, row_value_to_json, ReportRow, REPORT_SCHEMA,
+};
+use crate::jsonio::{self, Json};
+use crate::workload::graph::Graph;
+use crate::workload::registry::{self, Params, WorkloadId, WorkloadPreset, WorkloadSize};
+
+use super::{size_to_name, PlannedCell, PLAN_VERSION};
+
+/// Version tag of the cache record format itself. Bump it whenever the
+/// record layout changes **or** a workload generator's output changes
+/// for the same `(size, seed, params)` triple — stored presets and rows
+/// from the old generation must stop matching. `srsp cache verify`
+/// regenerates every stored preset and is the drift detector when in
+/// doubt.
+pub const CACHE_VERSION: u32 = 1;
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn fnv1a(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = seed;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// 128-bit content fingerprint of a rendered key, as 32 hex chars: two
+/// FNV-1a passes with independent offsets. The fingerprint is only an
+/// *index* — every store entry carries its full key text and lookups
+/// compare the text exactly, so a collision degrades to a loud miss,
+/// never a wrong row.
+pub fn fingerprint(key_text: &str) -> String {
+    let a = fnv1a(FNV_OFFSET, key_text.as_bytes());
+    let b = fnv1a(FNV_OFFSET ^ 0x9e3779b97f4a7c15, key_text.as_bytes());
+    format!("{a:016x}{b:016x}")
+}
+
+/// Hit/miss accounting for one run, summed across layers and shards.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub preset_reuses: u64,
+}
+
+impl CacheCounters {
+    /// Cell-layer lookups performed (hits + misses).
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fold another run's (or shard's) counters into this one. The
+    /// exhaustive destructure is the drift guard: a new counter that is
+    /// not summed here no longer compiles.
+    pub fn add(&mut self, other: &CacheCounters) {
+        let CacheCounters {
+            hits,
+            misses,
+            preset_reuses,
+        } = other;
+        self.hits += hits;
+        self.misses += misses;
+        self.preset_reuses += preset_reuses;
+    }
+
+    pub fn to_json(&self) -> Json {
+        let CacheCounters {
+            hits,
+            misses,
+            preset_reuses,
+        } = self;
+        Json::Obj(vec![
+            ("hits".into(), Json::u64(*hits)),
+            ("misses".into(), Json::u64(*misses)),
+            ("preset_reuses".into(), Json::u64(*preset_reuses)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<CacheCounters, String> {
+        Ok(CacheCounters {
+            hits: v.get("hits")?.as_u64()?,
+            misses: v.get("misses")?.as_u64()?,
+            preset_reuses: v.get("preset_reuses")?.as_u64()?,
+        })
+    }
+}
+
+/// The cell-layer cache key: everything that determines one cell's
+/// report row. The device config is the **effective** one — per-cell CU
+/// count and the cell's protocol-parameter overrides folded in exactly
+/// as `run_planned_cell` builds it — so two plans whose templates differ
+/// only in fields a cell overrides still share the cell's entry, and a
+/// template change that *does* reach the cell forces a miss.
+pub fn cell_key(cfg: &DeviceConfig, size: WorkloadSize, validate: bool, pc: &PlannedCell) -> Json {
+    let mut eff = DeviceConfig {
+        num_cus: pc.cell.num_cus,
+        ..cfg.clone()
+    };
+    eff.proto_params.extend_from_slice(&pc.proto_params);
+    Json::Obj(vec![
+        ("cache_version".into(), Json::u32(CACHE_VERSION)),
+        ("plan_version".into(), Json::u32(PLAN_VERSION)),
+        ("report_version".into(), Json::u32(REPORT_SCHEMA.version)),
+        ("kind".into(), Json::str("cell")),
+        ("device".into(), eff.to_json()),
+        ("size".into(), Json::str(size_to_name(size))),
+        ("validate".into(), Json::Bool(validate)),
+        ("cell".into(), pc.to_json()),
+    ])
+}
+
+/// The preset-layer cache key: everything workload generation consumes.
+/// Device config deliberately excluded — inputs depend only on
+/// `(app, size, seed, parameter overrides)`.
+pub fn preset_key(app: WorkloadId, size: WorkloadSize, seed: u64, overrides: &[(String, f64)]) -> Json {
+    Json::Obj(vec![
+        ("cache_version".into(), Json::u32(CACHE_VERSION)),
+        ("plan_version".into(), Json::u32(PLAN_VERSION)),
+        ("kind".into(), Json::str("preset")),
+        ("app".into(), Json::str(app.name())),
+        ("size".into(), Json::str(size_to_name(size))),
+        ("seed".into(), Json::u64(seed)),
+        ("params".into(), jsonio::pairs_to_json(overrides)),
+    ])
+}
+
+struct CellEntry {
+    /// Full rendered key text; lookups compare this exactly.
+    key: String,
+    row: ReportRow,
+}
+
+struct PresetEntry {
+    key: String,
+    /// `(key, value, explicit)` triples of the resolved parameters.
+    params: Vec<(String, f64, bool)>,
+    max_rounds: u32,
+    graph: Option<Graph>,
+}
+
+#[derive(Default)]
+struct StoreInner {
+    cells: BTreeMap<String, CellEntry>,
+    presets: BTreeMap<String, PresetEntry>,
+    segments: usize,
+    skipped: usize,
+    counters: CacheCounters,
+    writer: Option<BufWriter<File>>,
+}
+
+/// Counts and sizes `srsp cache stats` presents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoreSummary {
+    pub segments: usize,
+    pub cells: usize,
+    pub presets: usize,
+    /// Corrupt / foreign-version / unknown-kind lines skipped at open.
+    pub skipped: usize,
+}
+
+/// The on-disk store: a directory of append-only JSONL segments (one
+/// per writing process, `segment-<pid>.jsonl`) plus a `runs.jsonl` of
+/// per-run counter records. Opening scans every segment into memory;
+/// inserts append to this process's own segment, so concurrent worker
+/// processes sharing one directory never interleave writes within a
+/// line. Lookups and inserts are `&self` (internally locked) so shard
+/// threads can share one store.
+pub struct CacheStore {
+    dir: PathBuf,
+    inner: Mutex<StoreInner>,
+}
+
+impl CacheStore {
+    /// Open (creating if needed) the store at `dir`, scanning all
+    /// existing segments. Corrupt or foreign lines are skipped loudly.
+    pub fn open(dir: &str) -> Result<CacheStore, String> {
+        let dir_path = PathBuf::from(dir);
+        fs::create_dir_all(&dir_path)
+            .map_err(|e| format!("cache: cannot create directory '{dir}': {e}"))?;
+        let mut inner = StoreInner::default();
+        let mut names: Vec<PathBuf> = fs::read_dir(&dir_path)
+            .map_err(|e| format!("cache: cannot read directory '{dir}': {e}"))?
+            .filter_map(|entry| entry.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.extension().is_some_and(|x| x == "jsonl")
+                    && p.file_name().is_some_and(|n| n != "runs.jsonl")
+            })
+            .collect();
+        names.sort();
+        for path in names {
+            inner.segments += 1;
+            let text = fs::read_to_string(&path)
+                .map_err(|e| format!("cache: cannot read '{}': {e}", path.display()))?;
+            for (lineno, line) in text.lines().enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                if let Err(why) = scan_line(&mut inner, line) {
+                    eprintln!(
+                        "cache: skipping {}:{}: {why}",
+                        path.display(),
+                        lineno + 1
+                    );
+                    inner.skipped += 1;
+                }
+            }
+        }
+        Ok(CacheStore {
+            dir: dir_path,
+            inner: Mutex::new(inner),
+        })
+    }
+
+    /// The directory this store persists to.
+    pub fn dir(&self) -> &str {
+        self.dir.to_str().unwrap_or(".")
+    }
+
+    pub fn summary(&self) -> StoreSummary {
+        let inner = self.inner.lock().unwrap();
+        StoreSummary {
+            segments: inner.segments,
+            cells: inner.cells.len(),
+            presets: inner.presets.len(),
+            skipped: inner.skipped,
+        }
+    }
+
+    /// Drain this store's hit/miss counters (accumulated by lookups
+    /// since the last take).
+    pub fn take_counters(&self) -> CacheCounters {
+        std::mem::take(&mut self.inner.lock().unwrap().counters)
+    }
+
+    /// Cell-layer lookup. A fingerprint match with differing key text is
+    /// a collision: reported loudly, counted as a miss, never served.
+    pub fn lookup_cell(&self, key: &Json) -> Option<ReportRow> {
+        let key_text = key.render();
+        let fp = fingerprint(&key_text);
+        let mut inner = self.inner.lock().unwrap();
+        let found = match inner.cells.get(&fp) {
+            Some(e) if e.key == key_text => Some(e.row.clone()),
+            Some(_) => {
+                eprintln!("cache: fingerprint collision on {fp} (differing keys); treating as a miss");
+                None
+            }
+            None => None,
+        };
+        match &found {
+            Some(_) => inner.counters.hits += 1,
+            None => inner.counters.misses += 1,
+        }
+        found
+    }
+
+    /// Insert one validated cell row. Panics if the row is lossy (the
+    /// poison-prevention invariant); IO failures are loud but non-fatal
+    /// — the run's own results are unaffected.
+    pub fn insert_cell(&self, key: &Json, row: &ReportRow) {
+        if let Err(e) = check_row_round_trip(row) {
+            panic!("cache: refusing to store a lossy report row: {e}");
+        }
+        let key_text = key.render();
+        let fp = fingerprint(&key_text);
+        let mut inner = self.inner.lock().unwrap();
+        match inner.cells.get(&fp) {
+            Some(e) if e.key == key_text => return, // already stored
+            Some(_) => {
+                eprintln!("cache: fingerprint collision on {fp} (differing keys); not storing");
+                return;
+            }
+            None => {}
+        }
+        let line = Json::Obj(vec![
+            ("cache_version".into(), Json::u32(CACHE_VERSION)),
+            ("kind".into(), Json::str("cell")),
+            ("fp".into(), Json::str(fp.clone())),
+            ("key".into(), jsonio::parse(&key_text).expect("a rendered key re-parses")),
+            ("row".into(), row_value_to_json(row)),
+        ]);
+        append_line(&mut inner, &self.dir, &line);
+        inner.cells.insert(
+            fp,
+            CellEntry {
+                key: key_text,
+                row: row.clone(),
+            },
+        );
+    }
+
+    /// Preset-layer lookup: rebuild a [`WorkloadPreset`] from a stored
+    /// record. A record whose parameters no longer rehydrate against the
+    /// current registry spec (parameter added/removed since it was
+    /// stored) is reported and treated as a miss — the caller falls back
+    /// to cold generation.
+    pub fn load_preset(
+        &self,
+        key: &Json,
+        id: WorkloadId,
+        size: WorkloadSize,
+        seed: u64,
+    ) -> Option<WorkloadPreset> {
+        let key_text = key.render();
+        let fp = fingerprint(&key_text);
+        let mut inner = self.inner.lock().unwrap();
+        let built = match inner.presets.get(&fp) {
+            Some(e) if e.key == key_text => {
+                match Params::rehydrate(id.kernel().params(), &e.params) {
+                    Ok(params) => Some(WorkloadPreset {
+                        id,
+                        size,
+                        seed,
+                        params,
+                        graph: e.graph.clone(),
+                        max_rounds: e.max_rounds,
+                    }),
+                    Err(why) => {
+                        eprintln!(
+                            "cache: stored preset for '{}' no longer matches the registry \
+                             ({why}); regenerating",
+                            id.name()
+                        );
+                        None
+                    }
+                }
+            }
+            Some(_) => {
+                eprintln!("cache: fingerprint collision on {fp} (differing keys); treating as a miss");
+                None
+            }
+            None => None,
+        };
+        if built.is_some() {
+            inner.counters.preset_reuses += 1;
+        }
+        built
+    }
+
+    /// Persist one generated preset.
+    pub fn insert_preset(&self, key: &Json, preset: &WorkloadPreset) {
+        let key_text = key.render();
+        let fp = fingerprint(&key_text);
+        let mut inner = self.inner.lock().unwrap();
+        match inner.presets.get(&fp) {
+            Some(e) if e.key == key_text => return,
+            Some(_) => {
+                eprintln!("cache: fingerprint collision on {fp} (differing keys); not storing");
+                return;
+            }
+            None => {}
+        }
+        let params = preset.params.entries();
+        let line = Json::Obj(vec![
+            ("cache_version".into(), Json::u32(CACHE_VERSION)),
+            ("kind".into(), Json::str("preset")),
+            ("fp".into(), Json::str(fp.clone())),
+            ("key".into(), jsonio::parse(&key_text).expect("a rendered key re-parses")),
+            ("params".into(), params_to_json(&params)),
+            ("max_rounds".into(), Json::u32(preset.max_rounds)),
+            (
+                "graph".into(),
+                match &preset.graph {
+                    Some(g) => g.to_json(),
+                    None => Json::Null,
+                },
+            ),
+        ]);
+        append_line(&mut inner, &self.dir, &line);
+        inner.presets.insert(
+            fp,
+            PresetEntry {
+                key: key_text,
+                params: params
+                    .into_iter()
+                    .map(|(k, v, e)| (k.to_string(), v, e))
+                    .collect(),
+                max_rounds: preset.max_rounds,
+                graph: preset.graph.clone(),
+            },
+        );
+    }
+
+    /// Integrity check over every stored entry: fingerprints must match
+    /// their keys, rows must round-trip losslessly, and presets must be
+    /// byte-identical to a fresh regeneration (the generator-drift
+    /// detector). Ok carries a human summary; Err lists every issue.
+    pub fn verify(&self) -> Result<String, String> {
+        let inner = self.inner.lock().unwrap();
+        let mut issues = Vec::new();
+        for (fp, e) in &inner.cells {
+            if fingerprint(&e.key) != *fp {
+                issues.push(format!("cell {fp}: stored fingerprint does not match its key"));
+            }
+            if let Err(why) = check_row_round_trip(&e.row) {
+                issues.push(format!("cell {fp}: {why}"));
+            }
+        }
+        for (fp, e) in &inner.presets {
+            if fingerprint(&e.key) != *fp {
+                issues.push(format!("preset {fp}: stored fingerprint does not match its key"));
+                continue;
+            }
+            match verify_preset(e) {
+                Ok(()) => {}
+                Err(why) => issues.push(format!("preset {fp}: {why}")),
+            }
+        }
+        if issues.is_empty() {
+            Ok(format!(
+                "verified {} cell row(s) and {} preset(s): all fingerprints match, rows \
+                 round-trip losslessly, presets regenerate byte-identically",
+                inner.cells.len(),
+                inner.presets.len()
+            ))
+        } else {
+            Err(issues.join("\n"))
+        }
+    }
+}
+
+/// Regenerate a stored preset from its own key and compare — any
+/// difference means a workload generator changed since the entry was
+/// written (time to bump [`CACHE_VERSION`]).
+fn verify_preset(e: &PresetEntry) -> Result<(), String> {
+    let key = jsonio::parse(&e.key)?;
+    let app_name = key.get("app")?.as_str()?;
+    let id = registry::resolve(app_name)
+        .ok_or_else(|| format!("unknown workload '{app_name}' in stored key"))?;
+    let size = super::size_from_name(key.get("size")?.as_str()?)?;
+    let seed = key.get("seed")?.as_u64()?;
+    let overrides = jsonio::pairs_from_json(key.get("params")?)?;
+    let fresh = WorkloadPreset::with_params(id, size, seed, &overrides)
+        .map_err(|why| format!("stored key no longer resolves: {why}"))?;
+    let fresh_params = fresh.params.entries();
+    let same_params = fresh_params.len() == e.params.len()
+        && fresh_params
+            .iter()
+            .zip(&e.params)
+            .all(|((fk, fv, fe), (sk, sv, se))| fk == sk && fv == sv && fe == se);
+    if !same_params {
+        return Err("stored parameters differ from a fresh resolve (registry drift)".into());
+    }
+    if fresh.max_rounds != e.max_rounds {
+        return Err(format!(
+            "stored max_rounds {} differs from regenerated {} (generator drift)",
+            e.max_rounds, fresh.max_rounds
+        ));
+    }
+    let fresh_graph = fresh.graph.as_ref().map(|g| g.to_json().render());
+    let stored_graph = e.graph.as_ref().map(|g| g.to_json().render());
+    if fresh_graph != stored_graph {
+        return Err("stored graph differs from a fresh generation (generator drift)".into());
+    }
+    Ok(())
+}
+
+fn params_to_json(entries: &[(&'static str, f64, bool)]) -> Json {
+    Json::Arr(
+        entries
+            .iter()
+            .map(|(k, v, explicit)| {
+                Json::Arr(vec![Json::str(*k), Json::f64(*v), Json::Bool(*explicit)])
+            })
+            .collect(),
+    )
+}
+
+fn params_from_json(v: &Json) -> Result<Vec<(String, f64, bool)>, String> {
+    let mut out = Vec::new();
+    for item in v.arr()? {
+        let triple = item.arr()?;
+        if triple.len() != 3 {
+            return Err(format!(
+                "parameter entry must be [key, value, explicit], got {} element(s)",
+                triple.len()
+            ));
+        }
+        out.push((
+            triple[0].as_str()?.to_string(),
+            triple[1].as_f64()?,
+            triple[2].as_bool()?,
+        ));
+    }
+    Ok(out)
+}
+
+/// Parse one segment line into the in-memory maps. Errors bubble to the
+/// caller, which skips the line loudly.
+fn scan_line(inner: &mut StoreInner, line: &str) -> Result<(), String> {
+    let v = jsonio::parse(line)?;
+    let version = v.get("cache_version")?.as_u32()?;
+    if version != CACHE_VERSION {
+        return Err(format!(
+            "record is cache version {version}, this binary speaks {CACHE_VERSION}"
+        ));
+    }
+    let kind = v.get("kind")?.as_str()?.to_string();
+    let fp = v.get("fp")?.as_str()?.to_string();
+    // Re-render the parsed key: raw number tokens survive the parse, so
+    // this reproduces the original rendering exactly.
+    let key_text = v.get("key")?.render();
+    match kind.as_str() {
+        "cell" => {
+            let row = row_value_from_json(v.get("row")?)?;
+            match inner.cells.get(&fp) {
+                Some(e) if e.key == key_text => {} // duplicate append, keep first
+                Some(_) => {
+                    eprintln!(
+                        "cache: fingerprint collision on {fp} across segments; keeping the first entry"
+                    );
+                }
+                None => {
+                    inner.cells.insert(fp, CellEntry { key: key_text, row });
+                }
+            }
+        }
+        "preset" => {
+            let params = params_from_json(v.get("params")?)?;
+            let max_rounds = v.get("max_rounds")?.as_u32()?;
+            let graph = match v.get("graph")? {
+                Json::Null => None,
+                other => Some(Graph::from_json(other)?),
+            };
+            match inner.presets.get(&fp) {
+                Some(e) if e.key == key_text => {}
+                Some(_) => {
+                    eprintln!(
+                        "cache: fingerprint collision on {fp} across segments; keeping the first entry"
+                    );
+                }
+                None => {
+                    inner.presets.insert(
+                        fp,
+                        PresetEntry {
+                            key: key_text,
+                            params,
+                            max_rounds,
+                            graph,
+                        },
+                    );
+                }
+            }
+        }
+        other => return Err(format!("unknown record kind '{other}'")),
+    }
+    Ok(())
+}
+
+/// Append one record to this process's segment, opening it lazily (a
+/// warm run that inserts nothing creates no files). IO errors are loud
+/// but non-fatal.
+fn append_line(inner: &mut StoreInner, dir: &Path, line: &Json) {
+    if inner.writer.is_none() {
+        let path = dir.join(format!("segment-{}.jsonl", std::process::id()));
+        match OpenOptions::new().create(true).append(true).open(&path) {
+            Ok(f) => {
+                inner.segments += 1;
+                inner.writer = Some(BufWriter::new(f));
+            }
+            Err(e) => {
+                eprintln!("cache: cannot open '{}' for append: {e}", path.display());
+                return;
+            }
+        }
+    }
+    let writer = inner.writer.as_mut().expect("writer opened above");
+    let mut text = line.render();
+    text.push('\n');
+    if let Err(e) = writer.write_all(text.as_bytes()).and_then(|()| writer.flush()) {
+        eprintln!("cache: write failed: {e}");
+    }
+}
+
+/// Append one run's counters to `<dir>/runs.jsonl` (`srsp cache stats`
+/// reads them back). Best-effort: failures are loud but never fail the
+/// run that produced the counters.
+pub fn record_run(dir: &str, counters: &CacheCounters) {
+    let path = PathBuf::from(dir).join("runs.jsonl");
+    let mut line = Json::Obj(vec![
+        ("cache_version".into(), Json::u32(CACHE_VERSION)),
+        ("kind".into(), Json::str("run")),
+    ]);
+    if let Json::Obj(fields) = &mut line {
+        if let Json::Obj(counter_fields) = counters.to_json() {
+            fields.extend(counter_fields);
+        }
+    }
+    let mut text = line.render();
+    text.push('\n');
+    let result = OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .and_then(|mut f| f.write_all(text.as_bytes()));
+    if let Err(e) = result {
+        eprintln!("cache: cannot record run stats in '{}': {e}", path.display());
+    }
+}
+
+/// All recorded per-run counters, oldest first. Corrupt lines are
+/// skipped loudly; a missing file is an empty history.
+pub fn run_records(dir: &str) -> Vec<CacheCounters> {
+    let path = PathBuf::from(dir).join("runs.jsonl");
+    let Ok(text) = fs::read_to_string(&path) else {
+        return Vec::new();
+    };
+    let mut records = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = jsonio::parse(line).and_then(|v| CacheCounters::from_json(&v));
+        match parsed {
+            Ok(c) => records.push(c),
+            Err(why) => {
+                eprintln!("cache: skipping {}:{}: {why}", path.display(), lineno + 1);
+            }
+        }
+    }
+    records
+}
+
+/// Delete the store's own files (`segment-*.jsonl` and `runs.jsonl`),
+/// leaving anything foreign in place with a note. Returns a summary.
+pub fn clear(dir: &str) -> Result<String, String> {
+    let dir_path = PathBuf::from(dir);
+    let entries = fs::read_dir(&dir_path)
+        .map_err(|e| format!("cache: cannot read directory '{dir}': {e}"))?;
+    let mut removed = 0usize;
+    let mut foreign = Vec::new();
+    for entry in entries.filter_map(|e| e.ok()) {
+        let path = entry.path();
+        let name = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("")
+            .to_string();
+        let ours = name == "runs.jsonl"
+            || (name.starts_with("segment-") && name.ends_with(".jsonl"));
+        if ours {
+            fs::remove_file(&path)
+                .map_err(|e| format!("cache: cannot remove '{}': {e}", path.display()))?;
+            removed += 1;
+        } else {
+            foreign.push(name);
+        }
+    }
+    let mut summary = format!("removed {removed} cache file(s) from {dir}");
+    if !foreign.is_empty() {
+        summary.push_str(&format!(
+            "; left {} foreign file(s) in place: {}",
+            foreign.len(),
+            foreign.join(", ")
+        ));
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Cell;
+    use crate::config::Scenario;
+
+    fn scratch(name: &str) -> String {
+        let dir = std::env::temp_dir().join(format!(
+            "srsp-cache-unit-{}-{name}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir.to_str().unwrap().to_string()
+    }
+
+    fn planned_cell(seed: u64) -> PlannedCell {
+        PlannedCell {
+            cell: Cell {
+                app: registry::STRESS,
+                scenario: Scenario::SRSP,
+                num_cus: 4,
+            },
+            seed,
+            params: vec![("remote_ratio".to_string(), 0.5)],
+            proto_params: Vec::new(),
+            axis_values: "remote-ratio=0.5".to_string(),
+        }
+    }
+
+    #[test]
+    fn fingerprints_are_stable_and_discriminating() {
+        let a = fingerprint("hello");
+        assert_eq!(a.len(), 32);
+        assert_eq!(a, fingerprint("hello"), "deterministic");
+        assert_ne!(a, fingerprint("hello!"));
+        assert!(a.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn counters_sum_exhaustively() {
+        let mut a = CacheCounters {
+            hits: 1,
+            misses: 2,
+            preset_reuses: 3,
+        };
+        let b = CacheCounters {
+            hits: 10,
+            misses: 20,
+            preset_reuses: 30,
+        };
+        a.add(&b);
+        assert_eq!(a.hits, 11);
+        assert_eq!(a.misses, 22);
+        assert_eq!(a.preset_reuses, 33);
+        assert_eq!(a.lookups(), 33);
+        let back = CacheCounters::from_json(&a.to_json()).unwrap();
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn cell_keys_embed_every_version_gate() {
+        let cfg = DeviceConfig::small();
+        let key = cell_key(&cfg, WorkloadSize::Tiny, true, &planned_cell(7)).render();
+        assert!(key.contains(&format!("\"cache_version\":{CACHE_VERSION}")), "{key}");
+        assert!(key.contains(&format!("\"plan_version\":{PLAN_VERSION}")), "{key}");
+        assert!(
+            key.contains(&format!("\"report_version\":{}", REPORT_SCHEMA.version)),
+            "{key}"
+        );
+        // Per-cell CU count reaches the effective device config.
+        let mut other = planned_cell(7);
+        other.cell.num_cus = 8;
+        assert_ne!(key, cell_key(&cfg, WorkloadSize::Tiny, true, &other).render());
+        // Seed and params discriminate too.
+        assert_ne!(key, cell_key(&cfg, WorkloadSize::Tiny, true, &planned_cell(8)).render());
+    }
+
+    #[test]
+    fn preset_round_trips_through_the_store() {
+        let dir = scratch("preset");
+        let overrides = vec![("remote_ratio".to_string(), 0.25)];
+        let key = preset_key(registry::STRESS, WorkloadSize::Tiny, 11, &overrides);
+        let preset =
+            WorkloadPreset::with_params(registry::STRESS, WorkloadSize::Tiny, 11, &overrides)
+                .unwrap();
+        {
+            let store = CacheStore::open(&dir).unwrap();
+            assert!(store
+                .load_preset(&key, registry::STRESS, WorkloadSize::Tiny, 11)
+                .is_none());
+            store.insert_preset(&key, &preset);
+        }
+        // A second process generation: reopen from disk.
+        let store = CacheStore::open(&dir).unwrap();
+        let back = store
+            .load_preset(&key, registry::STRESS, WorkloadSize::Tiny, 11)
+            .expect("stored preset reloads");
+        assert_eq!(back.params, preset.params);
+        assert_eq!(back.max_rounds, preset.max_rounds);
+        assert_eq!(back.seed, 11);
+        assert_eq!(
+            back.graph.as_ref().map(|g| g.to_json().render()),
+            preset.graph.as_ref().map(|g| g.to_json().render())
+        );
+        assert_eq!(store.take_counters().preset_reuses, 1);
+        assert!(store.verify().is_ok());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_and_foreign_lines_are_skipped_loudly() {
+        let dir = scratch("corrupt");
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(
+            PathBuf::from(&dir).join("segment-zz.jsonl"),
+            "this is not json\n{\"cache_version\":999,\"kind\":\"cell\"}\n\
+             {\"cache_version\":1,\"kind\":\"martian\",\"fp\":\"00\",\"key\":{}}\n",
+        )
+        .unwrap();
+        let store = CacheStore::open(&dir).unwrap();
+        let s = store.summary();
+        assert_eq!(s.skipped, 3, "every bad line skipped");
+        assert_eq!(s.cells, 0);
+        assert_eq!(s.presets, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn clear_removes_only_store_files() {
+        let dir = scratch("clear");
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(PathBuf::from(&dir).join("segment-1.jsonl"), "").unwrap();
+        fs::write(PathBuf::from(&dir).join("runs.jsonl"), "").unwrap();
+        fs::write(PathBuf::from(&dir).join("keepme.txt"), "foreign").unwrap();
+        let summary = clear(&dir).unwrap();
+        assert!(summary.contains("removed 2"), "{summary}");
+        assert!(summary.contains("keepme.txt"), "{summary}");
+        assert!(PathBuf::from(&dir).join("keepme.txt").exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn run_records_round_trip() {
+        let dir = scratch("runs");
+        fs::create_dir_all(&dir).unwrap();
+        let counters = CacheCounters {
+            hits: 6,
+            misses: 0,
+            preset_reuses: 2,
+        };
+        record_run(&dir, &counters);
+        record_run(&dir, &CacheCounters::default());
+        let records = run_records(&dir);
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0], counters);
+        assert_eq!(records[1], CacheCounters::default());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

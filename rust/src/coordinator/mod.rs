@@ -28,6 +28,7 @@
 //!    single-process run for any worker count.
 
 pub mod axis;
+pub mod cache;
 pub mod shard;
 
 use crate::config::{DeviceConfig, Scenario};
@@ -299,8 +300,9 @@ impl SweepCombo {
 
 /// Version tag of the [`ExecutionPlan`]/[`shard::ShardSpec`] file format;
 /// a worker refuses a file from a different coordinator generation
-/// instead of misreading it.
-pub const PLAN_VERSION: u32 = 1;
+/// instead of misreading it. v2 added the optional `cache_dir` a shard
+/// carries so `--workers` children share the coordinator's result cache.
+pub const PLAN_VERSION: u32 = 2;
 
 /// One fully-lowered cell of an [`ExecutionPlan`]: the grid coordinates
 /// plus everything a sweep axis contributed, with the workload seed
@@ -680,7 +682,7 @@ mod tests {
         let runner = Runner::new(DeviceConfig::small(), WorkloadSize::Tiny, 1);
         let lowered = ExecutionPlan::lower_cells(&runner, &classic_grid(4));
         let text = lowered.to_json();
-        let wrong_version = text.replacen("\"plan_version\":1", "\"plan_version\":999", 1);
+        let wrong_version = text.replacen("\"plan_version\":2", "\"plan_version\":999", 1);
         assert!(ExecutionPlan::from_json(&wrong_version)
             .unwrap_err()
             .contains("version"));

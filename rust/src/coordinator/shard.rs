@@ -42,6 +42,10 @@ pub struct ShardSpec {
     pub cfg: DeviceConfig,
     pub size: WorkloadSize,
     pub validate: bool,
+    /// Result-cache directory the coordinator runs against, when any —
+    /// a `--workers` child opens the same store so the whole fleet
+    /// shares one cache (`--cache`/`--no-cache` on the worker override).
+    pub cache_dir: Option<String>,
     /// `(global grid index, cell)` pairs, ascending by index.
     pub cells: Vec<(usize, PlannedCell)>,
 }
@@ -60,6 +64,7 @@ pub fn partition(plan: &ExecutionPlan, num_shards: usize) -> Vec<ShardSpec> {
             cfg: plan.cfg.clone(),
             size: plan.size,
             validate: plan.validate,
+            cache_dir: None,
             cells: Vec::with_capacity(plan.cells.len().div_ceil(n)),
         })
         .collect();
@@ -82,6 +87,13 @@ impl ShardSpec {
             ("device".into(), self.cfg.to_json()),
             ("size".into(), Json::str(size_to_name(self.size))),
             ("validate".into(), Json::Bool(self.validate)),
+            (
+                "cache_dir".into(),
+                match &self.cache_dir {
+                    Some(d) => Json::str(d.clone()),
+                    None => Json::Null,
+                },
+            ),
             (
                 "cells".into(),
                 Json::Arr(
@@ -140,6 +152,10 @@ impl ShardSpec {
             cfg: DeviceConfig::from_json(v.get("device")?)?,
             size: size_from_name(v.get("size")?.as_str()?)?,
             validate: v.get("validate")?.as_bool()?,
+            cache_dir: match v.get("cache_dir")? {
+                Json::Null => None,
+                other => Some(other.as_str()?.to_string()),
+            },
             cells,
         })
     }
@@ -224,7 +240,7 @@ mod tests {
         let plan = tiny_plan();
         let spec = &partition(&plan, 2)[1];
         let text = spec.to_json();
-        let wrong = text.replacen("\"plan_version\":1", "\"plan_version\":0", 1);
+        let wrong = text.replacen("\"plan_version\":2", "\"plan_version\":0", 1);
         assert!(ShardSpec::from_json(&wrong).unwrap_err().contains("version"));
         let wrong = text.replacen("\"shard\":1", "\"shard\":5", 1);
         assert!(ShardSpec::from_json(&wrong)

@@ -188,6 +188,7 @@ impl Device {
             events,
             launch_nanos: wall0.elapsed().as_nanos() as u64,
             engine_nanos: engine.nanos,
+            ..PerfStats::default()
         };
         self.perf.merge(&launch_perf);
         perfstats::add_thread(&launch_perf);

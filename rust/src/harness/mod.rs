@@ -14,8 +14,13 @@ pub mod tracefile;
 pub use bench::{BenchOpts, BenchReport, CellBench, BENCH_SCHEMA};
 pub use figures::{fig4_speedup, fig5_l2, fig6_overhead, scaling_sweep, FigureCell, FigureTable};
 pub use presets::{WorkloadPreset, WorkloadSize, DEFAULT_SEED};
-pub use report::{format_table, geomean, PartialReport, Report, ReportFormat, ReportRow};
-pub use runner::{execute_plan, execute_shard, into_run_results, run_validated, CellResult, Runner};
+pub use report::{
+    check_row_round_trip, format_table, geomean, PartialReport, Report, ReportFormat, ReportRow,
+};
+pub use runner::{
+    execute_plan, execute_plan_cached, execute_shard, execute_shard_cached, into_run_results,
+    run_validated, CellOutcome, CellResult, Runner,
+};
 pub use tracefile::{TraceCell, TracePartial, TraceReport};
 // Grid construction and seeding policy live with the coordinator;
 // re-exported so harness users keep one import root.

@@ -8,6 +8,7 @@
 
 use std::fmt::Write as _;
 
+use crate::coordinator::cache::CacheCounters;
 use crate::jsonio::{self, Json};
 
 /// Geometric mean of positive values (the paper's summary statistic).
@@ -130,7 +131,8 @@ pub struct Report {
 /// [`PartialReport`] so a merge never silently mixes generations.
 pub struct ReportSchema {
     /// Bumped on every column change: v1 = 20 columns, v2 added
-    /// `proto_params`, v3 added `axis_values`.
+    /// `proto_params`, v3 added `axis_values`, v4 added the cache-counter
+    /// envelope to partial reports (columns unchanged).
     pub version: u32,
     pub columns: &'static [&'static str],
 }
@@ -138,7 +140,7 @@ pub struct ReportSchema {
 /// The current report schema. Writers, the merger and the tests all
 /// reference this constant — the column count appears nowhere else.
 pub const REPORT_SCHEMA: ReportSchema = ReportSchema {
-    version: 3,
+    version: 4,
     columns: &[
         "app",
         "scenario",
@@ -316,6 +318,11 @@ impl Report {
                 if slots[*index].is_some() {
                     return Err(format!("grid cell {index} was reported twice"));
                 }
+                // A row that does not round-trip losslessly would break
+                // the byte-identity invariant downstream (and could
+                // poison a result cache) — reject the partial instead.
+                check_row_round_trip(row)
+                    .map_err(|e| format!("shard {}: grid cell {index}: {e}", p.shard))?;
                 slots[*index] = Some(row.clone());
             }
         }
@@ -349,6 +356,9 @@ pub struct PartialReport {
     pub shard: usize,
     pub num_shards: usize,
     pub total_cells: usize,
+    /// This shard's result-cache accounting (all zero when the worker
+    /// ran uncached); the coordinator sums the shards' counters.
+    pub cache: CacheCounters,
     /// `(global grid index, row)` pairs, ascending by index.
     pub rows: Vec<(usize, ReportRow)>,
 }
@@ -362,6 +372,7 @@ impl PartialReport {
             ("shard".into(), Json::usize(self.shard)),
             ("num_shards".into(), Json::usize(self.num_shards)),
             ("total_cells".into(), Json::usize(self.total_cells)),
+            ("cache".into(), self.cache.to_json()),
             (
                 "rows".into(),
                 Json::Arr(self.rows.iter().map(|(i, r)| row_to_json(*i, r)).collect()),
@@ -389,15 +400,27 @@ impl PartialReport {
             shard: v.get("shard")?.as_usize()?,
             num_shards: v.get("num_shards")?.as_usize()?,
             total_cells: v.get("total_cells")?.as_usize()?,
+            cache: CacheCounters::from_json(v.get("cache")?)?,
             rows,
         })
     }
 }
 
-/// Lossless JSON encoding of one indexed report row. The exhaustive
-/// destructuring is the drift guard: a new [`ReportRow`] column that is
-/// not carried across the worker boundary no longer compiles.
+/// Lossless JSON encoding of one indexed report row: the field encoding
+/// of [`row_value_to_json`] with the grid index prepended.
 fn row_to_json(index: usize, r: &ReportRow) -> Json {
+    let Json::Obj(mut fields) = row_value_to_json(r) else {
+        unreachable!("row_value_to_json always builds an object")
+    };
+    fields.insert(0, ("index".into(), Json::usize(index)));
+    Json::Obj(fields)
+}
+
+/// Lossless JSON encoding of one report row's fields. The exhaustive
+/// destructuring is the drift guard: a new [`ReportRow`] column that is
+/// not carried across the worker boundary (or the result cache, which
+/// reuses this codec) no longer compiles.
+pub(crate) fn row_value_to_json(r: &ReportRow) -> Json {
     let ReportRow {
         app,
         scenario,
@@ -423,7 +446,6 @@ fn row_to_json(index: usize, r: &ReportRow) -> Json {
         selective_flush_drains,
     } = r;
     Json::Obj(vec![
-        ("index".into(), Json::usize(index)),
         ("app".into(), Json::str(app.clone())),
         ("scenario".into(), Json::str(scenario.clone())),
         ("cus".into(), Json::u32(*cus)),
@@ -465,6 +487,10 @@ fn row_to_json(index: usize, r: &ReportRow) -> Json {
 }
 
 fn row_from_json(v: &Json) -> Result<(usize, ReportRow), String> {
+    Ok((v.get("index")?.as_usize()?, row_value_from_json(v)?))
+}
+
+pub(crate) fn row_value_from_json(v: &Json) -> Result<ReportRow, String> {
     let opt_f64 = |key: &str| -> Result<Option<f64>, String> {
         match v.get(key)? {
             Json::Null => Ok(None),
@@ -501,7 +527,36 @@ fn row_from_json(v: &Json) -> Result<(usize, ReportRow), String> {
         selective_flush_nops: v.get("selective_flush_nops")?.as_u64()?,
         selective_flush_drains: v.get("selective_flush_drains")?.as_u64()?,
     };
-    Ok((v.get("index")?.as_usize()?, row))
+    Ok(row)
+}
+
+/// Check that `r` survives the lossless row codec exactly: encode,
+/// parse, decode, re-encode — the row and its token stream must both be
+/// identical. The finite checks come first because the JSON writer
+/// (correctly) refuses non-finite numbers, and a crafted partial can
+/// smuggle one in (`1e999` parses to infinity): the guard turns what
+/// would be a panic into a loud rejection. [`Report::merge`] runs this
+/// on every incoming row and the result cache on every insert, so a
+/// lossy row can neither break byte-identity nor poison the store.
+pub fn check_row_round_trip(r: &ReportRow) -> Result<(), String> {
+    if !r.l1_hit_rate.is_finite() {
+        return Err(format!("l1_hit_rate {} is not finite", r.l1_hit_rate));
+    }
+    if let Some(v) = r.remote_ratio {
+        if !v.is_finite() {
+            return Err(format!("remote_ratio {v} is not finite"));
+        }
+    }
+    let rendered = row_value_to_json(r).render();
+    let parsed = jsonio::parse(&rendered)?;
+    let back = row_value_from_json(&parsed)?;
+    if back != *r {
+        return Err("report row does not round-trip through the jsonio codec".into());
+    }
+    if row_value_to_json(&back).render() != rendered {
+        return Err("report row round-trips to a different token stream".into());
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -640,6 +695,7 @@ mod tests {
             shard: 0,
             num_shards: 1,
             total_cells: rep.rows.len(),
+            cache: Default::default(),
             rows: rep.rows.iter().cloned().enumerate().collect(),
         };
         let json = partial.to_json();
@@ -661,6 +717,11 @@ mod tests {
             shard: 1,
             num_shards: 2,
             total_cells: 8,
+            cache: CacheCounters {
+                hits: 3,
+                misses: 1,
+                preset_reuses: 2,
+            },
             rows: rep.rows.iter().cloned().enumerate().map(|(i, r)| (2 * i, r)).collect(),
         };
         let back = PartialReport::from_json(&partial.to_json()).unwrap();
@@ -678,6 +739,7 @@ mod tests {
             shard: parity,
             num_shards: 2,
             total_cells: total,
+            cache: Default::default(),
             rows: rep
                 .rows
                 .iter()
@@ -701,6 +763,7 @@ mod tests {
             shard: parity,
             num_shards: 2,
             total_cells: total,
+            cache: Default::default(),
             rows: rep
                 .rows
                 .iter()
@@ -736,6 +799,36 @@ mod tests {
         let stale = shard(0).to_json().replacen(&current, "\"report_version\":1", 1);
         let err = PartialReport::from_json(&stale).unwrap_err();
         assert!(err.contains("schema version 1"), "{err}");
+    }
+
+    #[test]
+    fn merge_rejects_lossy_rows() {
+        // `1e999` is a valid JSON number token that parses to infinity —
+        // the writer would panic on it, so the merge must reject it
+        // before any re-encode. (This is the poison row a result cache
+        // would otherwise store.)
+        let rep = sample_report();
+        let partial = PartialReport {
+            shard: 0,
+            num_shards: 1,
+            total_cells: rep.rows.len(),
+            cache: Default::default(),
+            rows: rep.rows.iter().cloned().enumerate().collect(),
+        };
+        let poisoned = partial
+            .to_json()
+            .replacen("\"l1_hit_rate\":0.875", "\"l1_hit_rate\":1e999", 1);
+        let parsed = PartialReport::from_json(&poisoned).expect("1e999 is a parseable token");
+        let err = Report::merge(&[parsed]).unwrap_err();
+        assert!(err.contains("not finite"), "{err}");
+        // The direct check agrees.
+        let mut bad = rep.rows[0].clone();
+        bad.l1_hit_rate = f64::INFINITY;
+        assert!(check_row_round_trip(&bad).unwrap_err().contains("not finite"));
+        bad.l1_hit_rate = 0.5;
+        bad.remote_ratio = Some(f64::NAN);
+        assert!(check_row_round_trip(&bad).unwrap_err().contains("not finite"));
+        assert!(check_row_round_trip(&rep.rows[0]).is_ok());
     }
 
     #[test]

@@ -33,6 +33,7 @@ use std::thread;
 use super::presets::{WorkloadPreset, WorkloadSize};
 use super::report::{PartialReport, Report, ReportRow};
 use crate::config::{DeviceConfig, Scenario};
+use crate::coordinator::cache::{self, CacheCounters, CacheStore};
 use crate::coordinator::shard::{self, ShardSpec};
 use crate::coordinator::{Cell, ExecutionPlan, PlannedCell, Seeding, SweepPlan};
 use crate::sim::perfstats;
@@ -189,13 +190,28 @@ fn preset_key(cell: &PlannedCell) -> (u64, u64, String) {
 type PresetCache = BTreeMap<(u64, u64, String), WorkloadPreset>;
 
 /// Generate every distinct input `cells` needs, exactly once each.
+/// With a [`CacheStore`], the preset layer is consulted first and feeds
+/// back: inputs already generated by *any* previous invocation against
+/// the same store are deserialized instead of regenerated, and fresh
+/// generations are persisted for the next run.
 fn build_presets<'a>(
     size: WorkloadSize,
     cells: impl Iterator<Item = &'a PlannedCell>,
+    store: Option<&CacheStore>,
 ) -> PresetCache {
     let mut presets = PresetCache::new();
     for pc in cells {
         presets.entry(preset_key(pc)).or_insert_with(|| {
+            if let Some(store) = store {
+                let key = cache::preset_key(pc.cell.app, size, pc.seed, &pc.params);
+                if let Some(p) = store.load_preset(&key, pc.cell.app, size, pc.seed) {
+                    return p;
+                }
+                let p = WorkloadPreset::with_params(pc.cell.app, size, pc.seed, &pc.params)
+                    .unwrap_or_else(|e| panic!("{e}"));
+                store.insert_preset(&key, &p);
+                return p;
+            }
             WorkloadPreset::with_params(pc.cell.app, size, pc.seed, &pc.params)
                 .unwrap_or_else(|e| panic!("{e}"))
         });
@@ -209,7 +225,7 @@ fn build_presets<'a>(
 /// memory with its siblings). Returns `(global grid index, result)`
 /// pairs for reassembly.
 pub fn execute_shard(spec: &ShardSpec) -> Vec<(usize, CellResult)> {
-    let presets = build_presets(spec.size, spec.cells.iter().map(|(_, pc)| pc));
+    let presets = build_presets(spec.size, spec.cells.iter().map(|(_, pc)| pc), None);
     execute_shard_with(spec, &presets)
 }
 
@@ -267,11 +283,22 @@ fn run_planned_cell(spec: &ShardSpec, pc: &PlannedCell, preset: &WorkloadPreset)
 /// [`ShardSpec`]s `--workers` would hand to subprocesses — `--jobs` is
 /// just their in-process executor.
 pub fn execute_plan(plan: &ExecutionPlan, jobs: usize) -> Vec<CellResult> {
+    execute_plan_with_store(plan, jobs, None)
+}
+
+/// [`execute_plan`] with an optional result-cache store backing the
+/// preset layer. All store access happens on the calling thread (preset
+/// generation up front, before the shard threads spawn).
+fn execute_plan_with_store(
+    plan: &ExecutionPlan,
+    jobs: usize,
+    store: Option<&CacheStore>,
+) -> Vec<CellResult> {
     let shards = shard::partition(plan, jobs);
     // Generate each distinct input once for the whole run, up front;
     // the shard threads share the cache read-only. (Subprocess workers
     // regenerate their shard's inputs instead — no shared memory.)
-    let presets = build_presets(plan.size, plan.cells.iter());
+    let presets = build_presets(plan.size, plan.cells.iter(), store);
     let indexed: Vec<(usize, CellResult)> = if shards.len() == 1 {
         execute_shard_with(&shards[0], &presets)
     } else {
@@ -313,6 +340,151 @@ pub fn execute_plan(plan: &ExecutionPlan, jobs: usize) -> Vec<CellResult> {
         .collect()
 }
 
+/// One cell of a cache-aware execution: either freshly simulated this
+/// run, or a lossless row served from the result cache. The cached row
+/// *is* the row [`ReportRow::from_cell`] produced when the cell was
+/// first simulated and validated, so reports assembled from outcomes
+/// are byte-identical to a cold run.
+pub enum CellOutcome {
+    Fresh(CellResult),
+    Cached(ReportRow),
+}
+
+impl CellOutcome {
+    /// The report row of this cell, whichever path produced it.
+    pub fn row(&self) -> ReportRow {
+        match self {
+            CellOutcome::Fresh(c) => ReportRow::from_cell(c),
+            CellOutcome::Cached(r) => r.clone(),
+        }
+    }
+
+    /// The full [`CellResult`], available only for freshly-simulated
+    /// cells (a cached row cannot reconstruct the full `Stats`).
+    pub fn fresh(&self) -> Option<&CellResult> {
+        match self {
+            CellOutcome::Fresh(c) => Some(c),
+            CellOutcome::Cached(_) => None,
+        }
+    }
+}
+
+/// Whether a plan's cells participate in the cell-result layer: only
+/// oracle-validated rows are trustworthy enough to store, and traced
+/// runs are for observation, not caching (a served cell would silently
+/// emit no events).
+fn cell_layer_active(validate: bool, cfg: &DeviceConfig) -> bool {
+    validate && cfg.trace_capacity == 0
+}
+
+/// The cache-aware in-process executor: probe the store for every cell,
+/// simulate only the misses (through the same shard pipeline as the
+/// uncached path), and insert each freshly-validated row. Returns the
+/// outcomes in grid order plus the run's cache counters (already folded
+/// into the perfstats one-liner). With no store this is exactly
+/// [`execute_plan`].
+pub fn execute_plan_cached(
+    plan: &ExecutionPlan,
+    jobs: usize,
+    store: Option<&CacheStore>,
+) -> (Vec<CellOutcome>, CacheCounters) {
+    let Some(store) = store else {
+        let results = execute_plan(plan, jobs);
+        return (
+            results.into_iter().map(CellOutcome::Fresh).collect(),
+            CacheCounters::default(),
+        );
+    };
+    let cache_cells = cell_layer_active(plan.validate, &plan.cfg);
+    let mut slots: Vec<Option<CellOutcome>> = plan.cells.iter().map(|_| None).collect();
+    let (mut miss_idx, mut miss_cells) = (Vec::new(), Vec::new());
+    for (i, pc) in plan.cells.iter().enumerate() {
+        let hit = if cache_cells {
+            store.lookup_cell(&cache::cell_key(&plan.cfg, plan.size, plan.validate, pc))
+        } else {
+            None
+        };
+        match hit {
+            Some(row) => slots[i] = Some(CellOutcome::Cached(row)),
+            None => {
+                miss_idx.push(i);
+                miss_cells.push(pc.clone());
+            }
+        }
+    }
+    if !miss_cells.is_empty() {
+        let sub = ExecutionPlan {
+            cells: miss_cells.clone(),
+            ..plan.clone()
+        };
+        let results = execute_plan_with_store(&sub, jobs, Some(store));
+        for ((&i, pc), r) in miss_idx.iter().zip(miss_cells.iter()).zip(results) {
+            if cache_cells && r.validated == Some(true) {
+                store.insert_cell(
+                    &cache::cell_key(&plan.cfg, plan.size, plan.validate, pc),
+                    &ReportRow::from_cell(&r),
+                );
+            }
+            slots[i] = Some(CellOutcome::Fresh(r));
+        }
+    }
+    let counters = store.take_counters();
+    perfstats::add_cache(counters.hits, counters.misses, counters.preset_reuses);
+    (
+        slots
+            .into_iter()
+            .map(|s| s.expect("every planned cell resolves to an outcome"))
+            .collect(),
+        counters,
+    )
+}
+
+/// The cache-aware worker executor: [`execute_shard`] with
+/// lookup-before-execute and insert-after-validate against `store`.
+/// Serial like the uncached shard path; outcomes come back ascending by
+/// global grid index.
+pub fn execute_shard_cached(
+    spec: &ShardSpec,
+    store: &CacheStore,
+) -> (Vec<(usize, CellOutcome)>, CacheCounters) {
+    let cache_cells = cell_layer_active(spec.validate, &spec.cfg);
+    let mut outcomes: Vec<(usize, CellOutcome)> = Vec::with_capacity(spec.cells.len());
+    let mut miss_cells = Vec::new();
+    for (i, pc) in &spec.cells {
+        let hit = if cache_cells {
+            store.lookup_cell(&cache::cell_key(&spec.cfg, spec.size, spec.validate, pc))
+        } else {
+            None
+        };
+        match hit {
+            Some(row) => outcomes.push((*i, CellOutcome::Cached(row))),
+            None => miss_cells.push((*i, pc.clone())),
+        }
+    }
+    if !miss_cells.is_empty() {
+        let sub = ShardSpec {
+            cells: miss_cells,
+            ..spec.clone()
+        };
+        let presets = build_presets(sub.size, sub.cells.iter().map(|(_, pc)| pc), Some(store));
+        let results = execute_shard_with(&sub, &presets);
+        for ((i, pc), (ri, r)) in sub.cells.iter().zip(results) {
+            debug_assert_eq!(*i, ri);
+            if cache_cells && r.validated == Some(true) {
+                store.insert_cell(
+                    &cache::cell_key(&spec.cfg, spec.size, spec.validate, pc),
+                    &ReportRow::from_cell(&r),
+                );
+            }
+            outcomes.push((*i, CellOutcome::Fresh(r)));
+        }
+    }
+    outcomes.sort_by_key(|(i, _)| *i);
+    let counters = store.take_counters();
+    perfstats::add_cache(counters.hits, counters.misses, counters.preset_reuses);
+    (outcomes, counters)
+}
+
 impl ReportRow {
     /// The report projection of one executed cell — the single place a
     /// [`CellResult`] becomes a row, shared by the whole-run report and
@@ -352,6 +524,16 @@ impl Report {
             rows: results.iter().map(ReportRow::from_cell).collect(),
         }
     }
+
+    /// Assemble the report for a cache-aware execution. Cached rows are
+    /// the stored lossless rows, fresh rows project through
+    /// [`ReportRow::from_cell`] — the same path as [`Report::from_cells`],
+    /// so a warm report is byte-identical to its cold counterpart.
+    pub fn from_outcomes(outcomes: &[CellOutcome]) -> Report {
+        Report {
+            rows: outcomes.iter().map(CellOutcome::row).collect(),
+        }
+    }
 }
 
 impl PartialReport {
@@ -363,10 +545,29 @@ impl PartialReport {
             shard: spec.shard,
             num_shards: spec.num_shards,
             total_cells: spec.total_cells,
+            cache: CacheCounters::default(),
             rows: results
                 .iter()
                 .map(|(i, c)| (*i, ReportRow::from_cell(c)))
                 .collect(),
+        }
+    }
+
+    /// [`PartialReport::from_shard`] for a cache-aware worker: cached
+    /// and fresh outcomes both contribute their lossless rows, and the
+    /// shard's cache counters ride the envelope for the coordinator to
+    /// sum.
+    pub fn from_outcomes(
+        spec: &ShardSpec,
+        outcomes: &[(usize, CellOutcome)],
+        cache: CacheCounters,
+    ) -> PartialReport {
+        PartialReport {
+            shard: spec.shard,
+            num_shards: spec.num_shards,
+            total_cells: spec.total_cells,
+            cache,
+            rows: outcomes.iter().map(|(i, o)| (*i, o.row())).collect(),
         }
     }
 }

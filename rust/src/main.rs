@@ -21,6 +21,7 @@ use std::time::Instant;
 
 use srsp::config::{parse_config_str, DeviceConfig, Scenario};
 use srsp::coordinator::axis::{self, AxisId};
+use srsp::coordinator::cache::{self, CacheCounters, CacheStore};
 use srsp::coordinator::{
     classic_grid, full_grid, scaling_cells, shard, ExecutionPlan, Seeding, SweepPlan,
     MAX_SWEEP_AXES, RATIO_SCENARIOS,
@@ -31,7 +32,9 @@ use srsp::harness::figures::{
 };
 use srsp::harness::presets::{WorkloadPreset, WorkloadSize, DEFAULT_SEED};
 use srsp::harness::report::{format_table, PartialReport, Report, ReportFormat};
-use srsp::harness::runner::{execute_shard, into_run_results, CellResult, Runner};
+use srsp::harness::runner::{
+    execute_plan_cached, execute_shard, execute_shard_cached, into_run_results, CellResult, Runner,
+};
 use srsp::harness::tracefile::{self, TraceCell, TracePartial, TraceReport};
 use srsp::sim::perfstats;
 use srsp::sim::trace::DEFAULT_TRACE_CAPACITY;
@@ -75,6 +78,9 @@ COMMANDS:
     trace [kind]           Render a recorded JSONL sync-event trace
                            (kinds: summary, timeline, perfetto, kinds;
                            default summary); input via --trace <file>
+    cache [kind]           Inspect or maintain a result-cache directory
+                           (kinds: stats, verify, clear; default stats);
+                           select the store with --cache <dir>
     help                   Show this message
 
 OPTIONS:
@@ -133,6 +139,16 @@ OPTIONS:
     --out <file>                Write the report to <file> (default stdout)
     --graph <file.gr|file.mtx>  Use a real DIMACS/MatrixMarket graph
     --config <file>             Device config file (key = value)
+    --cache <dir>               Content-addressed result cache: sweeps and
+                                validation reuse oracle-validated cell rows
+                                and generated workload presets across
+                                invocations, so repeated runs only simulate
+                                what changed; reports stay byte-identical
+                                to uncached runs (run, sweep, validate,
+                                ci-smoke, worker; also selects the store
+                                for the cache command)
+    --no-cache                  Ignore any cache — the flag and a shard-
+                                carried directory — and simulate fresh
 ";
 
 /// What `sweep` runs: the classic fixed CU-scaling grid, or a composed
@@ -175,8 +191,14 @@ struct Opts {
     out: Option<String>,
     graph: Option<String>,
     config: Option<String>,
-    /// Positional kind (`bench` and `trace` commands only), peeled off
-    /// in `main` before flag parsing.
+    /// Result-cache directory (`--cache`; execution commands plus the
+    /// `cache` maintenance command).
+    cache: Option<String>,
+    /// Ignore every cache source, including a shard-carried directory
+    /// (`--no-cache`).
+    no_cache: bool,
+    /// Positional kind (`bench`, `trace` and `cache` commands only),
+    /// peeled off in `main` before flag parsing.
     bench_kind: Option<String>,
     /// Was `--scenario` given explicitly? (`bench` narrows its scenario
     /// set only on an explicit flag; the default field value means
@@ -253,6 +275,8 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
         out: None,
         graph: None,
         config: None,
+        cache: None,
+        no_cache: false,
         bench_kind: None,
         scenario_given: false,
         repeats: None,
@@ -408,6 +432,8 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
             "--out" => o.out = Some(val()?),
             "--graph" => o.graph = Some(val()?),
             "--config" => o.config = Some(val()?),
+            "--cache" => o.cache = Some(val()?),
+            "--no-cache" => o.no_cache = true,
             "--repeats" => {
                 let n: u32 = val()?.parse().map_err(|e| format!("--repeats: {e}"))?;
                 if n == 0 {
@@ -635,6 +661,49 @@ impl Opts {
         Ok(())
     }
 
+    /// The cache flags belong to the commands that execute cells (run,
+    /// sweep, validate, ci-smoke, worker) or maintain a store (`cache`);
+    /// anywhere else they would be silently ignored, so they are
+    /// rejected up front like the other scoped flags. `--cache` also
+    /// conflicts with `--trace`: a cached cell replays no events, so a
+    /// traced run must simulate everything fresh.
+    fn check_cache_flags(&self, cmd: &str) -> Result<(), String> {
+        if self.cache.is_some() {
+            if !matches!(
+                cmd,
+                "run" | "sweep" | "validate" | "ci-smoke" | "worker" | "cache"
+            ) {
+                return Err(format!(
+                    "--cache applies to run, sweep, validate, ci-smoke, worker and cache, \
+                     not '{cmd}'"
+                ));
+            }
+            if self.trace.is_some() {
+                return Err(
+                    "--cache conflicts with --trace: a cached cell replays no sync events, \
+                     so traced runs bypass the result cache — drop one of the flags"
+                        .into(),
+                );
+            }
+        }
+        if self.no_cache && !matches!(cmd, "run" | "sweep" | "validate" | "ci-smoke" | "worker") {
+            return Err(format!(
+                "--no-cache applies to run, sweep, validate, ci-smoke and worker, not '{cmd}'"
+            ));
+        }
+        Ok(())
+    }
+
+    /// The result-cache directory this invocation runs against, when
+    /// any (`--no-cache` wins over `--cache`).
+    fn cache_dir(&self) -> Option<&str> {
+        if self.no_cache {
+            None
+        } else {
+            self.cache.as_deref()
+        }
+    }
+
     /// The per-cell trace ring capacity this invocation simulates with:
     /// 0 (tracing off, the default hot path) unless `--trace` was given.
     fn trace_capacity(&self) -> u32 {
@@ -691,11 +760,18 @@ fn device_config(o: &Opts) -> Result<DeviceConfig, String> {
     Ok(cfg)
 }
 
-fn load_preset(o: &Opts, app: WorkloadId, size: WorkloadSize) -> Result<WorkloadPreset, String> {
+fn load_preset(
+    o: &Opts,
+    app: WorkloadId,
+    size: WorkloadSize,
+    store: Option<&CacheStore>,
+) -> Result<WorkloadPreset, String> {
     // For a single run, --seed is used directly as the generator seed.
-    let mut preset =
-        WorkloadPreset::with_params(app, size, o.seed.unwrap_or(DEFAULT_SEED), &o.params)?;
+    let seed = o.seed.unwrap_or(DEFAULT_SEED);
     if let Some(path) = &o.graph {
+        // A file-backed graph bypasses the preset cache: the store keys
+        // presets by generator inputs, never by file contents.
+        let preset = WorkloadPreset::with_params(app, size, seed, &o.params)?;
         if preset.graph.is_none() {
             return Err(format!(
                 "--graph: workload '{}' takes no graph input",
@@ -709,9 +785,39 @@ fn load_preset(o: &Opts, app: WorkloadId, size: WorkloadSize) -> Result<Workload
             Graph::from_dimacs_gr(&text)?
         };
         g.validate()?;
-        preset = preset.with_graph(g);
+        return Ok(preset.with_graph(g));
     }
-    Ok(preset)
+    if let Some(store) = store {
+        let key = cache::preset_key(app, size, seed, &o.params);
+        if let Some(p) = store.load_preset(&key, app, size, seed) {
+            return Ok(p);
+        }
+        let preset = WorkloadPreset::with_params(app, size, seed, &o.params)?;
+        store.insert_preset(&key, &preset);
+        return Ok(preset);
+    }
+    WorkloadPreset::with_params(app, size, seed, &o.params)
+}
+
+/// Open the `--cache` store when one applies to this invocation.
+fn open_store(o: &Opts) -> Result<Option<CacheStore>, String> {
+    match o.cache_dir() {
+        Some(dir) => Ok(Some(CacheStore::open(dir)?)),
+        None => Ok(None),
+    }
+}
+
+/// Print the per-run cache tally and append it to the store's
+/// `runs.jsonl` (what `srsp cache stats` reports as the last run).
+/// No-op without a store. Always on stderr — like [`print_perfstats`],
+/// it is host-side accounting, never report data.
+fn finish_cached_run(dir: Option<&str>, counters: &CacheCounters) {
+    let Some(dir) = dir else { return };
+    eprintln!(
+        "cache: hits={} misses={} preset_reuses={}",
+        counters.hits, counters.misses, counters.preset_reuses
+    );
+    cache::record_run(dir, counters);
 }
 
 /// Write `report` in `format` to `--out` or stdout.
@@ -755,12 +861,16 @@ fn emit_trace(results: &[CellResult], o: &Opts) -> Result<(), String> {
 fn print_perfstats() {
     let p = perfstats::take_thread();
     eprintln!(
-        "perfstats: launches={} events={} launch_nanos={} engine_nanos={} sim_nanos={}",
+        "perfstats: launches={} events={} launch_nanos={} engine_nanos={} sim_nanos={} \
+         cache_hits={} cache_misses={} preset_reuses={}",
         p.launches,
         p.events,
         p.launch_nanos,
         p.engine_nanos,
-        p.sim_nanos()
+        p.sim_nanos(),
+        p.cache_hits,
+        p.cache_misses,
+        p.preset_reuses
     );
 }
 
@@ -808,12 +918,13 @@ fn main() {
         eprint!("{USAGE}");
         std::process::exit(2);
     };
-    // `bench` and `trace` take an optional positional kind (`srsp bench
-    // hotpath`, `srsp trace perfetto`) ahead of the flags; everything
-    // after the command is flag-only for every other command.
+    // `bench`, `trace` and `cache` take an optional positional kind
+    // (`srsp bench hotpath`, `srsp trace perfetto`, `srsp cache stats`)
+    // ahead of the flags; everything after the command is flag-only for
+    // every other command.
     let mut flag_args = &args[1..];
     let mut bench_kind = None;
-    if cmd == "bench" || cmd == "trace" {
+    if cmd == "bench" || cmd == "trace" || cmd == "cache" {
         if let Some(first) = flag_args.first() {
             if !first.starts_with('-') {
                 bench_kind = Some(first.clone());
@@ -852,7 +963,14 @@ fn run_distributed(
     o: &Opts,
 ) -> Result<Report, String> {
     let lowered = ExecutionPlan::lower_sweep(runner, plan);
-    let shards = shard::partition(&lowered, workers);
+    let mut shards = shard::partition(&lowered, workers);
+    if let Some(dir) = o.cache_dir() {
+        // Workers open the coordinator's store themselves (one segment
+        // file per process — appends never interleave).
+        for s in &mut shards {
+            s.cache_dir = Some(dir.to_string());
+        }
+    }
     let exe = std::env::current_exe().map_err(|e| format!("cannot locate the srsp binary: {e}"))?;
     let dir = std::env::temp_dir().join(format!("srsp-workers-{}", std::process::id()));
     std::fs::create_dir_all(&dir).map_err(|e| format!("{}: {e}", dir.display()))?;
@@ -931,6 +1049,17 @@ fn run_distributed(
                 .push(PartialReport::from_json(&text).map_err(|e| format!("worker {i}: {e}"))?);
         }
         let report = Report::merge(&partials)?;
+        if let Some(dir) = o.cache_dir() {
+            // Each worker tallied its own shard; the coordinator sums
+            // them into the one per-run record (workers never write
+            // runs.jsonl themselves).
+            let mut total = CacheCounters::default();
+            for p in &partials {
+                total.add(&p.cache);
+            }
+            perfstats::add_cache(total.hits, total.misses, total.preset_reuses);
+            finish_cached_run(Some(dir), &total);
+        }
         if let Some(path) = &o.trace {
             // Merge the trace partials under the same completeness proof
             // as the report; the merged file is byte-identical to the
@@ -988,11 +1117,23 @@ fn run_axis_sweep(o: &Opts, axes: &[AxisId]) -> Result<(), String> {
     let runner = o.runner(cfg, size, true);
     let report = match o.workers {
         Some(workers) => run_distributed(&runner, &plan, workers, o)?,
-        None => {
-            let results = runner.run_sweep(&plan);
-            emit_trace(&results, o)?;
-            Report::from_cells(&results)
-        }
+        None => match open_store(o)? {
+            Some(store) => {
+                // Cached in-process path: probe the store per cell, run
+                // only the misses, reassemble by grid index. The report
+                // is byte-identical to the uncached run (--trace cannot
+                // ride along; the CLI rejects the combination).
+                let lowered = ExecutionPlan::lower_sweep(&runner, &plan);
+                let (outcomes, counters) = execute_plan_cached(&lowered, o.jobs(), Some(&store));
+                finish_cached_run(Some(store.dir()), &counters);
+                Report::from_outcomes(&outcomes)
+            }
+            None => {
+                let results = runner.run_sweep(&plan);
+                emit_trace(&results, o)?;
+                Report::from_cells(&results)
+            }
+        },
     };
     emit_report(&report, o)?;
     let failures = print_validation(&report, o);
@@ -1032,6 +1173,7 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
     o.check_distributed_flags(cmd)?;
     o.check_bench_flags(cmd)?;
     o.check_trace_flags(cmd)?;
+    o.check_cache_flags(cmd)?;
     match cmd {
         "help" | "--help" | "-h" => print!("{USAGE}"),
         "table1" => {
@@ -1204,7 +1346,11 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
             let cfg = device_config(o)?;
             let app = o.app.unwrap_or(registry::PRK);
             let size = o.size.unwrap_or(WorkloadSize::Paper);
-            let preset = load_preset(o, app, size)?;
+            // `run` prints full Stats (not reconstructible from a cached
+            // report row), so only the preset layer engages here: the
+            // generated graph is reused, the simulation always runs.
+            let store = open_store(o)?;
+            let preset = load_preset(o, app, size, store.as_ref())?;
             let shape = match &preset.graph {
                 Some(g) => format!(" (n={}, m={})", g.n, g.num_edges()),
                 None => String::new(),
@@ -1227,6 +1373,11 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                 r.app, r.scenario, r.rounds, r.converged
             );
             println!("{}", r.stats);
+            if let Some(store) = &store {
+                let counters = store.take_counters();
+                perfstats::add_cache(counters.hits, counters.misses, counters.preset_reuses);
+                finish_cached_run(Some(store.dir()), &counters);
+            }
             if let Some(path) = &o.trace {
                 let Some(t) = &r.trace else {
                     return Err("run recorded no trace despite --trace (trace_capacity 0?)".into());
@@ -1329,10 +1480,13 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
             let cfg = device_config(o)?;
             let size = o.size.unwrap_or(WorkloadSize::Paper);
             let runner = o.runner(cfg.clone(), size, true);
-            let results = runner.run_cells(&full_grid(cfg.num_cus));
-            let report = Report::from_cells(&results);
+            let store = open_store(o)?;
+            let lowered = ExecutionPlan::lower_cells(&runner, &full_grid(cfg.num_cus));
+            let (outcomes, counters) = execute_plan_cached(&lowered, o.jobs(), store.as_ref());
+            let report = Report::from_outcomes(&outcomes);
             emit_report(&report, o)?;
             let failures = print_validation(&report, o);
+            finish_cached_run(store.as_ref().map(|s| s.dir()), &counters);
             print_perfstats();
             if failures > 0 {
                 return Err(format!("{failures} validation failures"));
@@ -1365,11 +1519,14 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
             );
             let t0 = Instant::now();
             let runner = o.runner(cfg, size, true);
-            let results = runner.run_cells(&cells);
+            let store = open_store(o)?;
+            let lowered = ExecutionPlan::lower_cells(&runner, &cells);
+            let (outcomes, counters) = execute_plan_cached(&lowered, jobs, store.as_ref());
             let wall = t0.elapsed();
-            let report = Report::from_cells(&results);
+            let report = Report::from_outcomes(&outcomes);
             emit_report(&report, o)?;
             let failures = print_validation(&report, o);
+            finish_cached_run(store.as_ref().map(|s| s.dir()), &counters);
             print_perfstats();
             eprintln!("ci-smoke wall time: {wall:.2?} with {jobs} job(s)");
             if failures > 0 {
@@ -1377,7 +1534,7 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
             }
             human(
                 o,
-                &format!("ci-smoke passed: all {} cells validated", results.len()),
+                &format!("ci-smoke passed: all {} cells validated", outcomes.len()),
             );
         }
         "worker" => {
@@ -1416,15 +1573,43 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                 spec.cells.len(),
                 spec.total_cells
             );
-            let results = execute_shard(&spec);
-            let partial = PartialReport::from_shard(&spec, &results);
-            if let Some(tp) = &o.trace {
-                // Collection was enabled by the shard's own device
-                // config (trace_capacity > 0, set by the traced parent
-                // sweep); a capacity-0 spec fails loudly here.
-                let tpart = TracePartial::from_shard(&spec, &results)?;
-                std::fs::write(tp, tpart.to_json()).map_err(|e| format!("{tp}: {e}"))?;
+            // The worker's own flags win over the shard-carried cache
+            // directory (a traced parent never sets one — the CLI
+            // rejects --cache with --trace — but a handcrafted spec
+            // could, so the combination is refused, not ignored).
+            let store_dir = if o.no_cache {
+                None
+            } else {
+                o.cache.clone().or_else(|| spec.cache_dir.clone())
+            };
+            if o.trace.is_some() && store_dir.is_some() {
+                return Err(
+                    "worker --trace conflicts with the shard's result cache; pass --no-cache \
+                     to trace this shard fresh"
+                        .into(),
+                );
             }
+            let partial = match &store_dir {
+                Some(dir) => {
+                    let store = CacheStore::open(dir)?;
+                    let (outcomes, counters) = execute_shard_cached(&spec, &store);
+                    // The tally rides the PartialReport; the coordinator
+                    // sums the fleet into one per-run record.
+                    PartialReport::from_outcomes(&spec, &outcomes, counters)
+                }
+                None => {
+                    let results = execute_shard(&spec);
+                    if let Some(tp) = &o.trace {
+                        // Collection was enabled by the shard's own device
+                        // config (trace_capacity > 0, set by the traced
+                        // parent sweep); a capacity-0 spec fails loudly
+                        // here.
+                        let tpart = TracePartial::from_shard(&spec, &results)?;
+                        std::fs::write(tp, tpart.to_json()).map_err(|e| format!("{tp}: {e}"))?;
+                    }
+                    PartialReport::from_shard(&spec, &results)
+                }
+            };
             match &o.out {
                 Some(p) => std::fs::write(p, partial.to_json()).map_err(|e| format!("{p}: {e}"))?,
                 None => print!("{}", partial.to_json()),
@@ -1467,6 +1652,70 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                     eprintln!("wrote {p}");
                 }
                 None => print!("{rendered}"),
+            }
+        }
+        "cache" => {
+            o.reject_params(cmd)?;
+            o.reject_proto_params(cmd)?;
+            o.reject_protocol(cmd)?;
+            o.reject_axis_points(cmd)?;
+            if o.report.is_some() {
+                return Err("cache prints its own summary; --report does not apply".into());
+            }
+            let Some(dir) = o.cache.as_deref() else {
+                return Err("cache needs --cache <dir> (the store directory)".into());
+            };
+            match o.bench_kind.as_deref().unwrap_or("stats") {
+                "stats" => {
+                    let store = CacheStore::open(dir)?;
+                    let s = store.summary();
+                    println!("cache dir: {dir}");
+                    println!(
+                        "store: {} segment file(s), {} cell row(s), {} preset(s), {} skipped \
+                         line(s)",
+                        s.segments, s.cells, s.presets, s.skipped
+                    );
+                    let runs = cache::run_records(dir);
+                    match runs.last() {
+                        Some(last) => {
+                            let lookups = last.lookups();
+                            let rate = if lookups == 0 {
+                                "n/a".to_string()
+                            } else {
+                                format!("{:.1}%", 100.0 * last.hits as f64 / lookups as f64)
+                            };
+                            println!(
+                                "last run: lookups={lookups} hits={} misses={} preset_reuses={} \
+                                 hit_rate={rate}",
+                                last.hits, last.misses, last.preset_reuses
+                            );
+                        }
+                        None => println!("last run: none recorded"),
+                    }
+                    let mut total = CacheCounters::default();
+                    for r in &runs {
+                        total.add(r);
+                    }
+                    println!(
+                        "all runs: {} run(s), hits={} misses={} preset_reuses={}",
+                        runs.len(),
+                        total.hits,
+                        total.misses,
+                        total.preset_reuses
+                    );
+                }
+                "verify" => {
+                    let store = CacheStore::open(dir)?;
+                    println!("{}", store.verify()?);
+                }
+                "clear" => {
+                    println!("{}", cache::clear(dir)?);
+                }
+                other => {
+                    return Err(format!(
+                        "unknown cache kind '{other}' (kinds: stats, verify, clear)"
+                    ));
+                }
             }
         }
         "merge-reports" => {

@@ -95,6 +95,43 @@ impl Params {
         self.vals.insert(key, val);
     }
 
+    /// Every resolved `(key, value, explicit)` triple, in key order —
+    /// the serialization the result cache's preset layer stores.
+    pub fn entries(&self) -> Vec<(&'static str, f64, bool)> {
+        self.vals
+            .iter()
+            .map(|(k, v)| (*k, *v, self.explicit.contains(k)))
+            .collect()
+    }
+
+    /// Rebuild a [`Params`] from stored [`Params::entries`] triples.
+    /// Strict against registry drift: an entry whose key the current
+    /// spec does not declare, or a spec key the entries do not cover, is
+    /// an error — the caller regenerates instead of trusting a stale
+    /// record. (Keys materialized by `set_auto` outside the spec fail
+    /// here by design: such presets are regenerated, never rehydrated.)
+    pub fn rehydrate(
+        specs: &'static [ParamSpec],
+        entries: &[(String, f64, bool)],
+    ) -> Result<Params, String> {
+        let mut p = Params::default();
+        for (key, val, explicit) in entries {
+            let Some(spec) = specs.iter().find(|s| s.key == key.as_str()) else {
+                return Err(format!("stored parameter '{key}' is not in the registry spec"));
+            };
+            p.vals.insert(spec.key, *val);
+            if *explicit {
+                p.explicit.insert(spec.key);
+            }
+        }
+        for s in specs {
+            if !p.vals.contains_key(s.key) {
+                return Err(format!("stored preset predates parameter '{}'", s.key));
+            }
+        }
+        Ok(p)
+    }
+
     /// Compact `k=v;k2=v2` rendering of the explicit overrides (report
     /// column; empty when the run used pure defaults).
     pub fn overrides_display(&self) -> String {
@@ -142,6 +179,43 @@ mod tests {
         assert!(err.contains("non-negative"), "{err}");
         let err = Params::resolve(specs, &[("alpha".into(), f64::NAN)]).unwrap_err();
         assert!(err.contains("finite"), "{err}");
+    }
+
+    #[test]
+    fn entries_rehydrate_round_trip_and_reject_drift() {
+        let specs: &'static [ParamSpec] = &[
+            ParamSpec {
+                key: "gamma",
+                default: 1.0,
+                help: "",
+            },
+            ParamSpec {
+                key: "delta",
+                default: 4.0,
+                help: "",
+            },
+        ];
+        let p = Params::resolve(specs, &[("delta".into(), 8.0)]).unwrap();
+        let entries: Vec<(String, f64, bool)> = p
+            .entries()
+            .into_iter()
+            .map(|(k, v, e)| (k.to_string(), v, e))
+            .collect();
+        assert_eq!(
+            entries,
+            vec![("delta".to_string(), 8.0, true), ("gamma".to_string(), 1.0, false)]
+        );
+        let back = Params::rehydrate(specs, &entries).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.overrides_display(), "delta=8");
+        // A stored key the spec no longer declares is refused...
+        let alien = vec![("epsilon".to_string(), 1.0, false)];
+        let err = Params::rehydrate(specs, &alien).unwrap_err();
+        assert!(err.contains("not in the registry spec"), "{err}");
+        // ...and so is a record that predates a spec key.
+        let short = vec![("gamma".to_string(), 1.0, false)];
+        let err = Params::rehydrate(specs, &short).unwrap_err();
+        assert!(err.contains("predates parameter 'delta'"), "{err}");
     }
 
     #[test]

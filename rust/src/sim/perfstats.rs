@@ -66,6 +66,14 @@ pub struct PerfStats {
     pub launch_nanos: u64,
     /// Wall nanoseconds inside compute-engine callbacks (workload cost).
     pub engine_nanos: u64,
+    /// Result-cache cell lookups answered from the store (cells whose
+    /// simulation was skipped entirely).
+    pub cache_hits: u64,
+    /// Result-cache cell lookups that fell through to a fresh run.
+    pub cache_misses: u64,
+    /// Workload presets rehydrated from the store instead of
+    /// regenerated (graph builds skipped).
+    pub preset_reuses: u64,
 }
 
 impl PerfStats {
@@ -81,11 +89,17 @@ impl PerfStats {
             events,
             launch_nanos,
             engine_nanos,
+            cache_hits,
+            cache_misses,
+            preset_reuses,
         } = other;
         self.launches += launches;
         self.events += events;
         self.launch_nanos += launch_nanos;
         self.engine_nanos += engine_nanos;
+        self.cache_hits += cache_hits;
+        self.cache_misses += cache_misses;
+        self.preset_reuses += preset_reuses;
     }
 }
 
@@ -105,6 +119,18 @@ pub fn add_thread(p: &PerfStats) {
 /// Take (and reset) this thread's accumulated counters.
 pub fn take_thread() -> PerfStats {
     THREAD_PERF.with(|tp| std::mem::take(&mut *tp.borrow_mut()))
+}
+
+/// Fold result-cache counters into this thread's collector (the cached
+/// execution entry points call it once per run, after draining the
+/// store's own tallies).
+pub fn add_cache(hits: u64, misses: u64, preset_reuses: u64) {
+    THREAD_PERF.with(|tp| {
+        let mut p = tp.borrow_mut();
+        p.cache_hits += hits;
+        p.cache_misses += misses;
+        p.preset_reuses += preset_reuses;
+    });
 }
 
 /// A [`ComputeEngine`] wrapper that attributes wall time spent inside the
@@ -262,17 +288,26 @@ mod tests {
             events: 10,
             launch_nanos: 100,
             engine_nanos: 30,
+            cache_hits: 4,
+            cache_misses: 2,
+            preset_reuses: 1,
         };
         let b = PerfStats {
             launches: 2,
             events: 5,
             launch_nanos: 50,
             engine_nanos: 20,
+            cache_hits: 1,
+            cache_misses: 3,
+            preset_reuses: 2,
         };
         a.merge(&b);
         assert_eq!(a.launches, 3);
         assert_eq!(a.events, 15);
         assert_eq!(a.sim_nanos(), 150 - 50);
+        assert_eq!(a.cache_hits, 5);
+        assert_eq!(a.cache_misses, 5);
+        assert_eq!(a.preset_reuses, 3);
     }
 
     #[test]
@@ -283,9 +318,16 @@ mod tests {
             events: 7,
             launch_nanos: 9,
             engine_nanos: 2,
+            cache_hits: 0,
+            cache_misses: 0,
+            preset_reuses: 0,
         });
+        add_cache(5, 1, 2);
         let got = take_thread();
         assert_eq!(got.events, 7);
+        assert_eq!(got.cache_hits, 5);
+        assert_eq!(got.cache_misses, 1);
+        assert_eq!(got.preset_reuses, 2);
         assert_eq!(take_thread(), PerfStats::default());
     }
 

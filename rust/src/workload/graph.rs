@@ -7,6 +7,7 @@
 //! loaded with [`Graph::from_dimacs_gr`] / [`Graph::from_matrix_market`];
 //! the benches use the generators so the repository is self-contained.
 
+use crate::jsonio::Json;
 use crate::sim::SplitMix64;
 
 /// Undirected graph in CSR form with u32 edge weights (1 for unweighted).
@@ -102,6 +103,39 @@ impl Graph {
             }
         }
         Ok(())
+    }
+
+    /// Serialize the CSR arrays (the result cache's preset layer stores
+    /// generated graphs so repeated sweeps skip generation).
+    pub fn to_json(&self) -> Json {
+        let u32s = |xs: &[u32]| Json::Arr(xs.iter().map(|&v| Json::u32(v)).collect());
+        Json::Obj(vec![
+            ("n".into(), Json::u32(self.n)),
+            ("row_ptr".into(), u32s(&self.row_ptr)),
+            ("col".into(), u32s(&self.col)),
+            ("weight".into(), u32s(&self.weight)),
+        ])
+    }
+
+    /// Inverse of [`Graph::to_json`]; runs [`Graph::validate`] so a
+    /// corrupted record can never produce a structurally broken graph.
+    pub fn from_json(v: &Json) -> Result<Graph, String> {
+        let arr_u32 = |key: &str| -> Result<Vec<u32>, String> {
+            v.get(key)?
+                .arr()?
+                .iter()
+                .map(|x| x.as_u32())
+                .collect::<Result<Vec<u32>, String>>()
+                .map_err(|e| format!("{key}: {e}"))
+        };
+        let g = Graph {
+            n: v.get("n")?.as_u32()?,
+            row_ptr: arr_u32("row_ptr")?,
+            col: arr_u32("col")?,
+            weight: arr_u32("weight")?,
+        };
+        g.validate()?;
+        Ok(g)
     }
 
     // ------------------------------------------------------------------
@@ -337,5 +371,20 @@ mod tests {
         g.validate().unwrap();
         assert_eq!(g.n, 3);
         assert_eq!(g.degree(1), 2);
+    }
+
+    #[test]
+    fn json_codec_round_trips_and_validates() {
+        let g = Graph::road_grid(4, 4, 7);
+        let text = g.to_json().render();
+        let back = Graph::from_json(&crate::jsonio::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.n, g.n);
+        assert_eq!(back.row_ptr, g.row_ptr);
+        assert_eq!(back.col, g.col);
+        assert_eq!(back.weight, g.weight);
+        assert_eq!(back.to_json().render(), text, "codec is byte-stable");
+        // A structurally broken record is refused, not returned.
+        let broken = text.replacen("\"n\":16", "\"n\":2", 1);
+        assert!(Graph::from_json(&crate::jsonio::parse(&broken).unwrap()).is_err());
     }
 }

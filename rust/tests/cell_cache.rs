@@ -1,0 +1,365 @@
+//! The content-addressed result cache end to end: a sweep run against a
+//! `--cache` directory stores every oracle-validated cell row, and a
+//! repeat of the same sweep simulates **zero** cells while emitting a
+//! report byte-identical to the cold run — for any `--jobs` count and
+//! across the `--workers` subprocess boundary. The cache is invisible in
+//! results by construction (cached rows ARE the rows the cold run
+//! emitted), so these tests pin the observable contract: byte-identity,
+//! hit/miss accounting, key sensitivity to every input that matters,
+//! loud skipping of corrupt store lines, and the `srsp cache`
+//! maintenance surface.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use srsp::config::DeviceConfig;
+use srsp::coordinator::{axis, shard, ExecutionPlan, Runner, Seeding, SweepPlan};
+use srsp::harness::presets::WorkloadSize;
+use srsp::harness::report::{PartialReport, Report};
+use srsp::harness::runner::execute_shard;
+use srsp::workload::registry;
+
+fn srsp_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_srsp"))
+}
+
+/// A scratch directory unique to this test process + test name.
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("srsp-test-{}-{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+/// Run `srsp` expecting success; returns (stdout, stderr).
+fn run_ok(args: &[&str]) -> (String, String) {
+    let out = srsp_bin().args(args).output().expect("spawn srsp");
+    assert!(
+        out.status.success(),
+        "{args:?} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+/// The base 6-cell sweep every cache test reuses (2 remote-ratio points
+/// × 3 protocol scenarios, oracle-gated at tiny scale).
+fn sweep_args(store: &str, out: &str) -> Vec<String> {
+    [
+        "sweep",
+        "--axis",
+        "remote-ratio",
+        "--app",
+        "stress",
+        "--size",
+        "tiny",
+        "--seed",
+        "11",
+        "--points",
+        "remote-ratio=0,0.5",
+        "--cus",
+        "4",
+        "--report",
+        "csv",
+        "--out",
+        out,
+        "--cache",
+        store,
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect()
+}
+
+fn run_sweep(store: &str, out: &PathBuf, extra: &[&str]) -> String {
+    let mut args = sweep_args(store, out.to_str().unwrap());
+    args.extend(extra.iter().map(|s| s.to_string()));
+    let argv: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
+    run_ok(&argv).1
+}
+
+/// The acceptance gate: a warm sweep — same flags, any `--jobs` count,
+/// even across the `--workers` subprocess boundary — simulates zero
+/// cells and emits a report byte-identical to the cold run.
+#[test]
+fn warm_sweeps_are_byte_identical_and_simulate_nothing() {
+    let dir = scratch("cold-warm");
+    let store = dir.join("store");
+    let store = store.to_str().unwrap();
+    let (cold, warm_j4, warm_w2) = (dir.join("cold.csv"), dir.join("j4.csv"), dir.join("w2.csv"));
+
+    let err = run_sweep(store, &cold, &["--jobs", "2"]);
+    assert!(err.contains("cache: hits=0 misses=6"), "cold run:\n{err}");
+
+    let err = run_sweep(store, &warm_j4, &["--jobs", "4"]);
+    assert!(err.contains("cache: hits=6 misses=0"), "warm --jobs 4:\n{err}");
+
+    let err = run_sweep(store, &warm_w2, &["--workers", "2"]);
+    assert!(err.contains("cache: hits=6 misses=0"), "warm --workers 2:\n{err}");
+
+    let cold = std::fs::read(&cold).unwrap();
+    assert!(!cold.is_empty());
+    assert_eq!(std::fs::read(&warm_j4).unwrap(), cold, "--jobs 4 warm run");
+    assert_eq!(std::fs::read(&warm_w2).unwrap(), cold, "--workers 2 warm run");
+
+    // The maintenance view agrees: the last recorded run hit 100%.
+    let (stats, _) = run_ok(&["cache", "stats", "--cache", store]);
+    assert!(stats.contains("hit_rate=100.0%"), "{stats}");
+    assert!(stats.contains("6 cell row(s)"), "{stats}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The preset layer alone serves `run`: the second invocation reuses the
+/// generated workload instead of rebuilding it, with identical output
+/// (full Stats are not reconstructible from a report row, so `run`
+/// always simulates — only generation is skipped).
+#[test]
+fn run_reuses_presets_across_invocations() {
+    let dir = scratch("run-preset");
+    let store = dir.join("store");
+    let args = [
+        "run",
+        "--app",
+        "prk",
+        "--size",
+        "tiny",
+        "--cus",
+        "4",
+        "--cache",
+        store.to_str().unwrap(),
+    ];
+    let (out1, err1) = run_ok(&args);
+    assert!(err1.contains("preset_reuses=0"), "first run:\n{err1}");
+    let (out2, err2) = run_ok(&args);
+    assert!(err2.contains("preset_reuses=1"), "second run:\n{err2}");
+    assert_eq!(out1, out2, "a reused preset must not change the run");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Key sensitivity: anything that could change a cell's result — seed,
+/// device template, protocol parameters — changes its fingerprint, so a
+/// perturbed sweep misses the whole store instead of serving stale rows.
+#[test]
+fn perturbed_sweeps_miss_the_cache() {
+    let dir = scratch("perturb");
+    let store = dir.join("store");
+    let store = store.to_str().unwrap();
+    let out = dir.join("r.csv");
+    let err = run_sweep(store, &out, &[]);
+    assert!(err.contains("misses=6"), "cold run:\n{err}");
+
+    // Different base seed → different per-cell seeds → all miss (the
+    // repeated --seed flag wins over the base one).
+    let err = run_sweep(store, &out, &["--seed", "12"]);
+    assert!(err.contains("cache: hits=0 misses=6"), "seed perturbation:\n{err}");
+
+    // A different device template (CU count) misses.
+    let err = run_sweep(store, &out, &["--cus", "2"]);
+    assert!(err.contains("cache: hits=0"), "--cus perturbation:\n{err}");
+
+    // A protocol-parameter override reaches the effective device config
+    // and misses.
+    let err = run_sweep(store, &out, &["--proto-param", "lr_tbl_entries=1"]);
+    assert!(err.contains("cache: hits=0"), "proto-param perturbation:\n{err}");
+
+    // And each perturbed run was itself stored: the original sweep still
+    // hits 100% afterwards.
+    let err = run_sweep(store, &out, &[]);
+    assert!(err.contains("misses=0"), "original run after perturbations:\n{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Corrupt or foreign store lines are skipped loudly and never poison a
+/// run: the intact entries still serve, and `cache stats` counts what
+/// was dropped.
+#[test]
+fn corrupt_store_lines_are_skipped_loudly() {
+    let dir = scratch("corrupt");
+    let store = dir.join("store");
+    let out = dir.join("r.csv");
+    let err = run_sweep(store.to_str().unwrap(), &out, &[]);
+    assert!(err.contains("misses=6"), "cold run:\n{err}");
+
+    // A segment written by a broken or future tool: one non-JSON line,
+    // one foreign cache version, one unknown entry kind.
+    std::fs::write(
+        store.join("segment-zzz.jsonl"),
+        "not json at all\n{\"cache_version\":999,\"kind\":\"cell\"}\n{\"cache_version\":1,\"kind\":\"martian\"}\n",
+    )
+    .unwrap();
+
+    let err = run_sweep(store.to_str().unwrap(), &out, &[]);
+    assert!(err.contains("misses=0"), "intact entries must still serve:\n{err}");
+    let (stats, _) = run_ok(&["cache", "stats", "--cache", store.to_str().unwrap()]);
+    assert!(stats.contains("3 skipped line(s)"), "{stats}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `--no-cache` bypasses everything: no store is opened (or created),
+/// no tally is printed, and the results are the plain uncached ones.
+#[test]
+fn no_cache_bypasses_the_store() {
+    let dir = scratch("no-cache");
+    let store = dir.join("store");
+    let (plain, bypassed) = (dir.join("plain.csv"), dir.join("bypassed.csv"));
+
+    // Baseline without any cache flags.
+    run_ok(&[
+        "sweep", "--axis", "remote-ratio", "--app", "stress", "--size", "tiny", "--seed", "11",
+        "--points", "remote-ratio=0,0.5", "--cus", "4", "--report", "csv", "--out",
+        plain.to_str().unwrap(),
+    ]);
+    let err = run_sweep(store.to_str().unwrap(), &bypassed, &["--no-cache"]);
+    assert!(!err.contains("cache:"), "--no-cache must print no tally:\n{err}");
+    assert!(!store.exists(), "--no-cache must not create the store");
+    assert_eq!(
+        std::fs::read(&bypassed).unwrap(),
+        std::fs::read(&plain).unwrap(),
+        "--no-cache must match the plain run"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The `srsp cache` maintenance surface: stats on an empty store,
+/// verify on a healthy one, verify failing loudly on a tampered
+/// fingerprint, and clear removing only store-owned files.
+#[test]
+fn cache_cli_stats_verify_clear() {
+    let dir = scratch("cache-cli");
+    let store = dir.join("store");
+    let store_s = store.to_str().unwrap();
+
+    // Stats on a fresh (auto-created) store.
+    let (stats, _) = run_ok(&["cache", "stats", "--cache", store_s]);
+    assert!(stats.contains("0 cell row(s)"), "{stats}");
+    assert!(stats.contains("last run: none recorded"), "{stats}");
+
+    let out = dir.join("r.csv");
+    run_sweep(store_s, &out, &[]);
+    let (verified, _) = run_ok(&["cache", "verify", "--cache", store_s]);
+    assert!(!verified.trim().is_empty(), "verify must report what it checked");
+
+    // Tamper one stored fingerprint (in a copy of the store) and verify
+    // must fail naming the mismatch.
+    let tampered_dir = dir.join("tampered");
+    std::fs::create_dir_all(&tampered_dir).unwrap();
+    let mut tampered_any = false;
+    for entry in std::fs::read_dir(&store).unwrap() {
+        let path = entry.unwrap().path();
+        let name = path.file_name().unwrap().to_str().unwrap().to_string();
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        if !tampered_any && name.starts_with("segment-") {
+            if let Some(pos) = text.find("\"fp\":\"") {
+                let i = pos + "\"fp\":\"".len();
+                let old = text.as_bytes()[i];
+                let new = if old == b'0' { 'f' } else { '0' };
+                text.replace_range(i..i + 1, &new.to_string());
+                tampered_any = true;
+            }
+        }
+        std::fs::write(tampered_dir.join(&name), text).unwrap();
+    }
+    assert!(tampered_any, "expected a segment file with an fp to tamper");
+    let out_cmd = srsp_bin()
+        .args(["cache", "verify", "--cache", tampered_dir.to_str().unwrap()])
+        .output()
+        .expect("spawn srsp");
+    assert!(!out_cmd.status.success(), "tampered store must fail verify");
+
+    // Clear removes segments and runs.jsonl, leaves foreign files.
+    std::fs::write(store.join("keepme.txt"), "mine").unwrap();
+    run_ok(&["cache", "clear", "--cache", store_s]);
+    assert!(store.join("keepme.txt").exists(), "foreign files survive clear");
+    for entry in std::fs::read_dir(&store).unwrap() {
+        let name = entry.unwrap().file_name().to_str().unwrap().to_string();
+        assert!(
+            !name.starts_with("segment-") && name != "runs.jsonl",
+            "{name} should have been cleared"
+        );
+    }
+    let (stats, _) = run_ok(&["cache", "stats", "--cache", store_s]);
+    assert!(stats.contains("0 cell row(s)"), "after clear: {stats}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The cache flags are scoped and conflicting combinations are refused
+/// up front — never silently ignored.
+#[test]
+fn cli_rejects_misplaced_cache_flags() {
+    for (args, needle) in [
+        (vec!["fig4", "--cache", "x"], "--cache applies to"),
+        (vec!["bench", "--cache", "x"], "--cache applies to"),
+        (vec!["merge-reports", "--cache", "x"], "--cache applies to"),
+        (vec!["fig5", "--no-cache"], "--no-cache applies to"),
+        (
+            vec!["run", "--cache", "d", "--trace", "t"],
+            "--cache conflicts with --trace",
+        ),
+        (
+            vec!["sweep", "--axis", "remote-ratio", "--cache", "d", "--trace", "t"],
+            "--cache conflicts with --trace",
+        ),
+        (vec!["cache"], "needs --cache"),
+        (vec!["cache", "bogus", "--cache", "d"], "unknown cache kind"),
+        (vec!["cache", "--cache", "d", "--no-cache"], "--no-cache applies to"),
+    ] {
+        let out = srsp_bin().args(&args).output().expect("spawn srsp");
+        assert!(!out.status.success(), "{args:?} must be rejected");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(stderr.contains(needle), "{args:?}: expected '{needle}' in:\n{stderr}");
+    }
+}
+
+/// Satellite gate: `merge-reports` refuses a partial whose rows would
+/// not round-trip losslessly (e.g. a non-finite ratio smuggled in by a
+/// broken or tampered worker) — the same check that guards every
+/// insertion into the cache store.
+#[test]
+fn merge_reports_rejects_lossy_partials() {
+    let dir = scratch("lossy-partial");
+    let runner = Runner {
+        validate: true,
+        seeding: Seeding::PerCell(11),
+        ..Runner::new(
+            DeviceConfig {
+                num_cus: 4,
+                ..DeviceConfig::small()
+            },
+            WorkloadSize::Tiny,
+            1,
+        )
+    };
+    let plan = SweepPlan::new(registry::STRESS, &[axis::REMOTE_RATIO])
+        .unwrap()
+        .with_points(axis::REMOTE_RATIO, vec![0.0])
+        .unwrap();
+    let lowered = ExecutionPlan::lower_sweep(&runner, &plan);
+    let spec = &shard::partition(&lowered, 1)[0];
+    let partial = PartialReport::from_shard(spec, &execute_shard(spec));
+
+    // Sanity: the healthy partial merges.
+    assert!(Report::merge(std::slice::from_ref(&partial)).is_ok());
+
+    // Replace one l1_hit_rate value with 1e999 (parses as a valid JSON
+    // number token, decodes to +inf — exactly the lossy case).
+    let text = partial.to_json();
+    let pos = text.find("\"l1_hit_rate\":").unwrap() + "\"l1_hit_rate\":".len();
+    let end = pos + text[pos..].find(',').unwrap();
+    let tampered = format!("{}1e999{}", &text[..pos], &text[end..]);
+    let path = dir.join("tampered.json");
+    std::fs::write(&path, &tampered).unwrap();
+
+    let out = srsp_bin()
+        .args(["merge-reports", "--partial", path.to_str().unwrap()])
+        .output()
+        .expect("spawn merge-reports");
+    assert!(!out.status.success(), "a lossy partial must not merge");
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("not finite"),
+        "the lossy field must be named:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
