@@ -31,6 +31,12 @@
 //! keys are reported and treated as misses, and every stored row must
 //! round-trip through the `jsonio` codec to the identical token stream
 //! before it is accepted — a lossy row can never poison the store.
+//!
+//! The [`serve`](super::serve) coordinator consults the same keys
+//! before scheduling: a warm cell is answered inside the coordinator
+//! and never dispatched to a worker, and fresh oracle-validated rows
+//! acked by the fleet are inserted back under identical keys — the
+//! service and local `--cache` runs share one store, byte-for-byte.
 
 use std::collections::BTreeMap;
 use std::fs::{self, File, OpenOptions};

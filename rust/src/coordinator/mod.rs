@@ -29,7 +29,9 @@
 
 pub mod axis;
 pub mod cache;
+pub mod serve;
 pub mod shard;
+pub mod wire;
 
 use crate::config::{DeviceConfig, Scenario};
 use crate::jsonio::{self, Json};

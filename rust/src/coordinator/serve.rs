@@ -1,0 +1,733 @@
+//! The resilient sweep service: `srsp serve` / `srsp work` /
+//! `srsp submit`.
+//!
+//! The coordinator (`serve`) accepts queued sweep requests from
+//! `submit` clients and dispatches them to a fleet of persistent `work`
+//! processes over the [`wire`](super::wire) protocol. It is the
+//! long-running face of the same plan → shard → execute → merge
+//! pipeline every local run uses:
+//!
+//! - **accept** — a `request` envelope carries a fully-lowered
+//!   [`ExecutionPlan`] (the submit client lowers exactly like a local
+//!   sweep, so the coordinator never re-derives seeds or parameters);
+//! - **warm probe** — with `--cache`, every cell is looked up in the
+//!   PR 8 [`CacheStore`] *before* scheduling: a warm cell is answered
+//!   inside the coordinator and never reaches the dispatch queue;
+//! - **dispatch** — cold cells are chunked into synthetic single-shard
+//!   [`ShardSpec`] batches (`--shard-cells` apiece) and dealt to
+//!   whichever worker asks first; each dispatched batch is guarded by a
+//!   per-batch ack deadline (`--deadline`);
+//! - **retry** — a worker that dies, hangs past the deadline, or acks
+//!   garbage fails its batch: the batch is split in half and re-queued
+//!   until the per-batch attempt budget (`--retries` beyond the first
+//!   try) is spent, after which the whole job fails loudly. Re-execution
+//!   is idempotent — shards are deterministic and rows land by global
+//!   grid index, first copy wins;
+//! - **stream + merge** — the submit client receives `progress` frames
+//!   as batches land and finally one all-covering [`PartialReport`];
+//!   `Report::merge` on it reproduces the `--jobs 1` local run
+//!   byte-for-byte (the wire reuses the lossless `jsonio` row codec
+//!   end to end);
+//! - **drain** — with `--max-jobs N` the coordinator stops accepting
+//!   after N jobs, finishes what is queued, summarizes, and exits.
+//!
+//! Fresh oracle-validated rows acked by workers are inserted into the
+//! coordinator's store under the same [`cache::cell_key`]s a local
+//! `--cache` sweep writes, so a warm resubmit — or a later local run
+//! against the same directory — dispatches nothing.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use crate::config::DeviceConfig;
+use crate::harness::report::{check_row_round_trip, PartialReport, ReportRow};
+use crate::harness::runner::{cell_layer_active, execute_shard, execute_shard_cached};
+use crate::workload::registry::WorkloadSize;
+
+use super::cache::{self, CacheCounters, CacheStore};
+use super::shard::ShardSpec;
+use super::wire::{Envelope, Framed, RecvError};
+use super::{ExecutionPlan, PlannedCell};
+
+/// Coordinator configuration (the `srsp serve` flags, resolved).
+pub struct ServeOpts {
+    /// TCP address to bind (`host:port`; port 0 picks a free port —
+    /// the bound address is announced on stderr either way).
+    pub listen: String,
+    /// Per-batch ack deadline: a dispatched batch not acked within it
+    /// fails (and re-dispatches, budget permitting). Also bounds how
+    /// long a fresh connection may sit silent before its hello.
+    pub deadline: Duration,
+    /// Re-dispatch budget per batch beyond the first attempt.
+    pub retries: u32,
+    /// Cells per dispatched batch.
+    pub shard_cells: usize,
+    /// Drain and exit after this many accepted jobs (`None`: serve
+    /// forever).
+    pub max_jobs: Option<u64>,
+    /// Result-cache directory for the warm probe / fresh-row inserts.
+    pub cache_dir: Option<String>,
+}
+
+/// The execution shape a job's cells share (from its plan) — what a
+/// synthetic batch [`ShardSpec`] and the cache keys are built from.
+struct JobShape {
+    cfg: DeviceConfig,
+    size: WorkloadSize,
+    validate: bool,
+}
+
+/// One accepted sweep request, tracked until its streamer hands the
+/// final partial to the submit client.
+struct JobState {
+    shape: JobShape,
+    total: usize,
+    /// Rows land here by global grid index (warm rows at creation,
+    /// acked rows as batches complete).
+    slots: Vec<Option<ReportRow>>,
+    done: usize,
+    /// Cells answered from the cache without dispatching.
+    warm: usize,
+    /// Cells that entered the dispatch queue.
+    dispatched: usize,
+    /// Monotonic batch-id source (retries mint fresh ids, so a stale
+    /// ack can never satisfy a re-dispatched batch).
+    next_batch: u64,
+    /// Set when a batch exhausts its retry budget; fails the whole job.
+    failed: Option<String>,
+}
+
+/// One dispatchable unit: a contiguous chunk of a job's cold cells.
+struct Task {
+    job: u64,
+    batch: u64,
+    /// Dispatch attempts already spent on these cells.
+    attempts: u32,
+    cells: Vec<(usize, PlannedCell)>,
+}
+
+#[derive(Default)]
+struct Shared {
+    queue: VecDeque<Task>,
+    jobs: BTreeMap<u64, JobState>,
+    next_job: u64,
+    started: u64,
+    completed: u64,
+    failed_jobs: u64,
+    cells_executed: u64,
+    cells_warm: u64,
+    retries_total: u64,
+    shutdown: bool,
+}
+
+struct Coord {
+    shared: Mutex<Shared>,
+    /// Signaled when the queue gains a task (or shutdown flips).
+    work_ready: Condvar,
+    /// Signaled when any job makes progress or fails.
+    job_tick: Condvar,
+    store: Option<CacheStore>,
+    opts: ServeOpts,
+    addr: SocketAddr,
+}
+
+/// Run the coordinator until drained (`--max-jobs`) or killed. One
+/// thread per connection; workers and submitters share one listener.
+pub fn serve(opts: ServeOpts) -> Result<(), String> {
+    let listener =
+        TcpListener::bind(&opts.listen).map_err(|e| format!("{}: {e}", opts.listen))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| format!("{}: {e}", opts.listen))?;
+    let store = match &opts.cache_dir {
+        Some(dir) => Some(CacheStore::open(dir)?),
+        None => None,
+    };
+    eprintln!("serve: listening on {addr}");
+    if let Some(dir) = &opts.cache_dir {
+        eprintln!("serve: answering warm cells from result cache {dir}");
+    }
+    let coord = Arc::new(Coord {
+        shared: Mutex::new(Shared::default()),
+        work_ready: Condvar::new(),
+        job_tick: Condvar::new(),
+        store,
+        opts,
+        addr,
+    });
+    let mut handles = Vec::new();
+    for conn in listener.incoming() {
+        if coord.shared.lock().unwrap().shutdown {
+            // The drain nudge (or any straggler) lands here; the
+            // connection drops unanswered.
+            break;
+        }
+        match conn {
+            Ok(stream) => {
+                let c = Arc::clone(&coord);
+                handles.push(thread::spawn(move || handle_connection(stream, &c)));
+            }
+            Err(e) => eprintln!("serve: accept failed: {e}"),
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let s = coord.shared.lock().unwrap();
+    eprintln!(
+        "serve: drained after {} job(s): {} cell(s) executed, {} served warm, \
+         {} batch retry(s), {} job failure(s)",
+        s.completed, s.cells_executed, s.cells_warm, s.retries_total, s.failed_jobs
+    );
+    Ok(())
+}
+
+fn handle_connection(stream: TcpStream, coord: &Coord) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "<unknown>".into());
+    let mut framed = match Framed::new(stream) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("serve: {peer}: {e}");
+            return;
+        }
+    };
+    // A connection that never says hello must not pin its thread past
+    // the drain join — the handshake shares the batch deadline.
+    let _ = framed.set_read_timeout(Some(coord.opts.deadline));
+    let first = framed.recv();
+    let _ = framed.set_read_timeout(None);
+    match first {
+        Ok(Envelope::Hello { role }) if role == "work" => {
+            if framed.send(&Envelope::Hello { role: "serve".into() }).is_err() {
+                return;
+            }
+            eprintln!("serve: worker connected from {peer}");
+            worker_loop(&mut framed, coord, &peer);
+            eprintln!("serve: worker {peer} disconnected");
+        }
+        Ok(Envelope::Hello { role }) if role == "submit" => {
+            if framed.send(&Envelope::Hello { role: "serve".into() }).is_err() {
+                return;
+            }
+            if let Err(e) = submit_loop(&mut framed, coord, &peer) {
+                eprintln!("serve: submit {peer}: {e}");
+            }
+        }
+        Ok(Envelope::Hello { role }) => {
+            let _ = framed.send(&Envelope::Error {
+                msg: format!("unknown hello role '{role}' (expected work or submit)"),
+            });
+        }
+        Ok(_) => {
+            let _ = framed.send(&Envelope::Error {
+                msg: "expected a hello envelope first".into(),
+            });
+        }
+        Err(RecvError::Closed) => {}
+        Err(RecvError::TimedOut) => eprintln!("serve: {peer}: no hello within the deadline"),
+        Err(RecvError::Fatal(e)) => {
+            // Version mismatches and malformed frames answer loudly so
+            // a stale or confused peer sees *why* it was dropped.
+            eprintln!("serve: {peer}: {e}");
+            let _ = framed.send(&Envelope::Error { msg: e });
+        }
+    }
+}
+
+/// Serve-side loop for one connected worker: pull a task, dispatch it as
+/// a batch, await the ack under the deadline. Any failure fails the
+/// in-flight task (triggering the retry policy) and drops the
+/// connection — the re-dispatched batch goes to a surviving worker.
+fn worker_loop(framed: &mut Framed, coord: &Coord, peer: &str) {
+    loop {
+        let (task, spec) = {
+            let mut s = coord.shared.lock().unwrap();
+            let task = loop {
+                if s.shutdown {
+                    break None;
+                }
+                match s.queue.pop_front() {
+                    Some(t) if s.jobs.get(&t.job).is_some_and(|j| j.failed.is_none()) => {
+                        break Some(t)
+                    }
+                    // A task of a failed or finished job: drop it.
+                    Some(_) => continue,
+                    None => s = coord.work_ready.wait(s).unwrap(),
+                }
+            };
+            let Some(task) = task else { return };
+            let job = s.jobs.get(&task.job).expect("live task implies live job");
+            let spec = ShardSpec {
+                shard: 0,
+                num_shards: 1,
+                total_cells: job.total,
+                cfg: job.shape.cfg.clone(),
+                size: job.shape.size,
+                validate: job.shape.validate,
+                // The store never crosses the wire: warm cells were
+                // answered before scheduling and fresh rows are inserted
+                // on ack, so workers need no filesystem shared with the
+                // coordinator.
+                cache_dir: None,
+                cells: task.cells.clone(),
+            };
+            (task, spec)
+        };
+        eprintln!(
+            "serve: job {} batch {} → {peer}: {} cell(s) (attempt {} of {})",
+            task.job,
+            task.batch,
+            task.cells.len(),
+            task.attempts + 1,
+            coord.opts.retries + 1
+        );
+        if framed
+            .send(&Envelope::Batch { job: task.job, batch: task.batch, spec })
+            .is_err()
+        {
+            fail_task(coord, task, &format!("worker {peer} vanished before dispatch"));
+            return;
+        }
+        if framed.set_read_timeout(Some(coord.opts.deadline)).is_err() {
+            fail_task(coord, task, &format!("worker {peer}: cannot arm the ack deadline"));
+            return;
+        }
+        let received = framed.recv();
+        let _ = framed.set_read_timeout(None);
+        match received {
+            Ok(Envelope::Ack { job, batch, partial })
+                if job == task.job && batch == task.batch =>
+            {
+                if let Err(e) = deliver(coord, &task, &partial) {
+                    let msg = format!("worker {peer} acked a bad batch: {e}");
+                    let _ = framed.send(&Envelope::Error { msg: msg.clone() });
+                    fail_task(coord, task, &msg);
+                    return;
+                }
+            }
+            Ok(Envelope::Error { msg }) => {
+                fail_task(coord, task, &format!("worker {peer} reported: {msg}"));
+                return;
+            }
+            Ok(_) => {
+                let msg = format!("worker {peer} broke the batch/ack protocol");
+                let _ = framed.send(&Envelope::Error { msg: msg.clone() });
+                fail_task(coord, task, &msg);
+                return;
+            }
+            Err(RecvError::Closed) => {
+                fail_task(coord, task, &format!("worker {peer} died mid-batch"));
+                return;
+            }
+            Err(RecvError::TimedOut) => {
+                fail_task(
+                    coord,
+                    task,
+                    &format!("worker {peer} missed the {:?} ack deadline", coord.opts.deadline),
+                );
+                return;
+            }
+            Err(RecvError::Fatal(e)) => {
+                fail_task(coord, task, &format!("worker {peer}: {e}"));
+                return;
+            }
+        }
+    }
+}
+
+/// Land an acked batch: verify it covers exactly the dispatched cells
+/// with lossless rows, fill the job's slots (first copy wins — retries
+/// are idempotent), and insert fresh oracle-validated rows into the
+/// store under the same keys a local `--cache` sweep writes.
+fn deliver(coord: &Coord, task: &Task, partial: &PartialReport) -> Result<(), String> {
+    if partial.rows.len() != task.cells.len() {
+        return Err(format!(
+            "{} row(s) for a {}-cell batch",
+            partial.rows.len(),
+            task.cells.len()
+        ));
+    }
+    for ((want, _), (got, row)) in task.cells.iter().zip(&partial.rows) {
+        if want != got {
+            return Err(format!("row for grid index {got} where {want} was dispatched"));
+        }
+        check_row_round_trip(row)?;
+    }
+    let mut s = coord.shared.lock().unwrap();
+    s.cells_executed += task.cells.len() as u64;
+    let Some(job) = s.jobs.get_mut(&task.job) else {
+        return Ok(());
+    };
+    if job.failed.is_some() {
+        return Ok(());
+    }
+    let warm_store = coord
+        .store
+        .as_ref()
+        .filter(|_| cell_layer_active(job.shape.validate, &job.shape.cfg));
+    for ((i, pc), (_, row)) in task.cells.iter().zip(&partial.rows) {
+        if job.slots[*i].is_none() {
+            job.slots[*i] = Some(row.clone());
+            job.done += 1;
+        }
+        if let Some(store) = warm_store {
+            if row.validated == Some(true) {
+                store.insert_cell(
+                    &cache::cell_key(&job.shape.cfg, job.shape.size, job.shape.validate, pc),
+                    row,
+                );
+            }
+        }
+    }
+    coord.job_tick.notify_all();
+    Ok(())
+}
+
+/// Apply the retry policy to a failed dispatch: within budget, split a
+/// multi-cell batch in half (a poisonous cell isolates itself) and
+/// re-queue at the front under fresh batch ids; over budget, fail the
+/// whole job loudly.
+fn fail_task(coord: &Coord, task: Task, why: &str) {
+    let mut s = coord.shared.lock().unwrap();
+    {
+        let Some(job) = s.jobs.get_mut(&task.job) else { return };
+        if job.failed.is_some() {
+            return;
+        }
+        if task.attempts >= coord.opts.retries {
+            job.failed = Some(format!(
+                "job {}: batch {} failed on all {} attempt(s): {why}",
+                task.job,
+                task.batch,
+                task.attempts + 1
+            ));
+            eprintln!("serve: {}", job.failed.as_deref().unwrap());
+            coord.job_tick.notify_all();
+            return;
+        }
+    }
+    let attempts = task.attempts + 1;
+    let halves: Vec<Vec<(usize, PlannedCell)>> = if task.cells.len() > 1 {
+        let mid = task.cells.len() / 2;
+        vec![task.cells[..mid].to_vec(), task.cells[mid..].to_vec()]
+    } else {
+        vec![task.cells]
+    };
+    let mut ids = Vec::with_capacity(halves.len());
+    {
+        let job = s.jobs.get_mut(&task.job).expect("checked above");
+        for _ in &halves {
+            job.next_batch += 1;
+            ids.push(job.next_batch);
+        }
+    }
+    eprintln!(
+        "serve: job {} batch {}: {why}; re-dispatching as {} batch(es) (attempt {} of {})",
+        task.job,
+        task.batch,
+        halves.len(),
+        attempts + 1,
+        coord.opts.retries + 1
+    );
+    s.retries_total += 1;
+    for (cells, batch) in halves.into_iter().zip(ids) {
+        s.queue.push_front(Task { job: task.job, batch, attempts, cells });
+    }
+    coord.work_ready.notify_all();
+}
+
+/// Serve-side loop for one submit client: accept the request, create the
+/// job, stream progress until it completes or fails, ship the result.
+fn submit_loop(framed: &mut Framed, coord: &Coord, peer: &str) -> Result<(), String> {
+    framed.set_read_timeout(Some(coord.opts.deadline))?;
+    let plan = match framed.recv() {
+        Ok(Envelope::Request { plan }) => plan,
+        Ok(_) => return Err("expected a request envelope after the hello".into()),
+        Err(RecvError::Closed) => return Ok(()),
+        Err(RecvError::TimedOut) => return Err("no request arrived within the deadline".into()),
+        Err(RecvError::Fatal(e)) => return Err(e),
+    };
+    framed.set_read_timeout(None)?;
+    let id = match create_job(coord, plan) {
+        Ok(id) => id,
+        Err(e) => {
+            let _ = framed.send(&Envelope::Error { msg: e.clone() });
+            return Err(e);
+        }
+    };
+    eprintln!("serve: job {id} accepted from {peer}");
+    match stream_job(framed, coord, id) {
+        Ok(partial) => {
+            eprintln!(
+                "serve: job {id} complete: {} cell(s) ({} warm, {} dispatched)",
+                partial.total_cells, partial.cache.hits, partial.cache.misses
+            );
+            let sent = framed.send(&Envelope::Report { job: id, partial });
+            finish_job(coord, id, true);
+            sent
+        }
+        Err(e) => {
+            let _ = framed.send(&Envelope::Error { msg: e.clone() });
+            finish_job(coord, id, false);
+            Err(e)
+        }
+    }
+}
+
+/// Accept a lowered plan as a job: probe the cache for warm cells, chunk
+/// the misses into tasks, enqueue them, wake the fleet.
+fn create_job(coord: &Coord, plan: ExecutionPlan) -> Result<u64, String> {
+    if plan.cells.is_empty() {
+        return Err("the submitted plan contains no cells".into());
+    }
+    let total = plan.cells.len();
+    let probe = coord
+        .store
+        .as_ref()
+        .filter(|_| cell_layer_active(plan.validate, &plan.cfg));
+    let mut slots: Vec<Option<ReportRow>> = (0..total).map(|_| None).collect();
+    let mut misses: Vec<(usize, PlannedCell)> = Vec::new();
+    let mut warm = 0usize;
+    for (i, pc) in plan.cells.iter().enumerate() {
+        let hit = probe.and_then(|store| {
+            store.lookup_cell(&cache::cell_key(&plan.cfg, plan.size, plan.validate, pc))
+        });
+        match hit {
+            Some(row) => {
+                slots[i] = Some(row);
+                warm += 1;
+            }
+            None => misses.push((i, pc.clone())),
+        }
+    }
+    let mut s = coord.shared.lock().unwrap();
+    if s.shutdown || coord.opts.max_jobs.is_some_and(|m| s.started >= m) {
+        return Err("the coordinator is draining and accepts no further jobs".into());
+    }
+    s.started += 1;
+    s.next_job += 1;
+    let id = s.next_job;
+    s.cells_warm += warm as u64;
+    let mut job = JobState {
+        shape: JobShape { cfg: plan.cfg, size: plan.size, validate: plan.validate },
+        total,
+        slots,
+        done: warm,
+        warm,
+        dispatched: misses.len(),
+        next_batch: 0,
+        failed: None,
+    };
+    eprintln!(
+        "serve: job {id}: {total} cell(s) ({warm} warm, {} to dispatch)",
+        misses.len()
+    );
+    for chunk in misses.chunks(coord.opts.shard_cells.max(1)) {
+        job.next_batch += 1;
+        s.queue.push_back(Task {
+            job: id,
+            batch: job.next_batch,
+            attempts: 0,
+            cells: chunk.to_vec(),
+        });
+    }
+    s.jobs.insert(id, job);
+    coord.work_ready.notify_all();
+    // An all-warm job is born complete; wake its own streamer too.
+    coord.job_tick.notify_all();
+    Ok(id)
+}
+
+/// Stream `progress` frames to the submit client as batches land, then
+/// assemble the finished job as one all-covering partial (or surface
+/// the job's failure).
+fn stream_job(framed: &mut Framed, coord: &Coord, id: u64) -> Result<PartialReport, String> {
+    let mut last_done = usize::MAX;
+    loop {
+        let (done, total, warm, dispatched, failed) = {
+            let mut s = coord.shared.lock().unwrap();
+            loop {
+                let job = s.jobs.get(&id).expect("the job lives until finish_job");
+                if job.failed.is_some() || job.done != last_done {
+                    break;
+                }
+                s = coord.job_tick.wait(s).unwrap();
+            }
+            let job = s.jobs.get(&id).expect("the job lives until finish_job");
+            (job.done, job.total, job.warm, job.dispatched, job.failed.clone())
+        };
+        if let Some(e) = failed {
+            return Err(e);
+        }
+        last_done = done;
+        // Progress is advisory: a vanished submit client must not stall
+        // the fleet, so send failures are ignored and the job runs on
+        // (its fresh rows still warm the cache for a resubmit).
+        let _ = framed.send(&Envelope::Progress { job: id, done, total, warm, dispatched });
+        if done == total {
+            let mut s = coord.shared.lock().unwrap();
+            let job = s.jobs.get_mut(&id).expect("the job lives until finish_job");
+            let rows: Vec<(usize, ReportRow)> = job
+                .slots
+                .iter_mut()
+                .enumerate()
+                .map(|(i, r)| (i, r.take().expect("a complete job has every row")))
+                .collect();
+            let counters = CacheCounters {
+                hits: job.warm as u64,
+                misses: job.dispatched as u64,
+                preset_reuses: 0,
+            };
+            return Ok(PartialReport::from_grid(rows, counters));
+        }
+    }
+}
+
+/// Retire a finished job: bookkeeping, per-job cache run record, and —
+/// once `--max-jobs` jobs have all retired — flip the drain switch and
+/// nudge the accept loop awake so `serve` can exit.
+fn finish_job(coord: &Coord, id: u64, succeeded: bool) {
+    let (record, drained) = {
+        let mut s = coord.shared.lock().unwrap();
+        let job = s.jobs.remove(&id);
+        s.completed += 1;
+        if !succeeded {
+            s.failed_jobs += 1;
+        }
+        s.queue.retain(|t| t.job != id);
+        let drained = coord.opts.max_jobs.is_some_and(|m| s.started >= m)
+            && s.jobs.is_empty();
+        if drained && !s.shutdown {
+            s.shutdown = true;
+            coord.work_ready.notify_all();
+        }
+        let record = job.filter(|_| succeeded).map(|j| CacheCounters {
+            hits: j.warm as u64,
+            misses: j.dispatched as u64,
+            preset_reuses: 0,
+        });
+        (record, drained)
+    };
+    if let (Some(store), Some(counters)) = (&coord.store, record) {
+        // One runs.jsonl record per job, like a local cached sweep —
+        // `srsp cache stats` reports served jobs the same way.
+        cache::record_run(store.dir(), &counters);
+    }
+    if drained {
+        // The accept loop blocks in `incoming()`; a throwaway local
+        // connection makes it observe the shutdown flag and exit.
+        let _ = TcpStream::connect(coord.addr);
+    }
+}
+
+/// `srsp work`: the persistent remote executor. Dials the coordinator
+/// and executes dispatched batches — through the shared result-cache
+/// path when this worker was given its own `--cache` — until the
+/// coordinator drains (clean exit) or the connection breaks.
+///
+/// `die_after`: deterministic fault injection for the retry path — the
+/// worker exits abruptly (status 3) on batch `n+1`, *after* simulating
+/// it but *before* acking. From the coordinator's view that is the
+/// worst-timed death: work done, results lost mid-shard.
+pub fn run_worker(
+    addr: &str,
+    cache_dir: Option<&str>,
+    die_after: Option<u64>,
+) -> Result<(), String> {
+    let store = match cache_dir {
+        Some(dir) => Some(CacheStore::open(dir)?),
+        None => None,
+    };
+    let mut framed = connect(addr, "work")?;
+    eprintln!("work: connected to {addr}");
+    let mut acked: u64 = 0;
+    loop {
+        match framed.recv() {
+            Ok(Envelope::Batch { job, batch, spec }) => {
+                eprintln!("work: job {job} batch {batch}: {} cell(s) ...", spec.cells.len());
+                let partial = execute_batch(&spec, store.as_ref());
+                if die_after.is_some_and(|n| acked >= n) {
+                    eprintln!("work: --die-after {acked}: dying before the ack");
+                    std::process::exit(3);
+                }
+                framed.send(&Envelope::Ack { job, batch, partial })?;
+                acked += 1;
+            }
+            Ok(Envelope::Error { msg }) => return Err(format!("coordinator: {msg}")),
+            Ok(_) => return Err("coordinator broke the batch/ack protocol".into()),
+            Err(RecvError::Closed) => {
+                eprintln!("work: coordinator drained; {acked} batch(es) executed");
+                return Ok(());
+            }
+            Err(RecvError::TimedOut) => return Err("the connection timed out".into()),
+            Err(RecvError::Fatal(e)) => return Err(e),
+        }
+    }
+}
+
+/// Execute one dispatched batch through the same shard executors every
+/// local path uses.
+fn execute_batch(spec: &ShardSpec, store: Option<&CacheStore>) -> PartialReport {
+    match store {
+        Some(store) => {
+            let (outcomes, counters) = execute_shard_cached(spec, store);
+            PartialReport::from_outcomes(spec, &outcomes, counters)
+        }
+        None => PartialReport::from_shard(spec, &execute_shard(spec)),
+    }
+}
+
+/// `srsp submit`: ship one lowered plan to the coordinator, stream its
+/// progress to stderr, and return the job's single all-covering
+/// [`PartialReport`] — `Report::merge(&[partial])` reproduces the
+/// byte-identical local report.
+pub fn submit(addr: &str, plan: &ExecutionPlan) -> Result<PartialReport, String> {
+    let mut framed = connect(addr, "submit")?;
+    framed.send(&Envelope::Request { plan: plan.clone() })?;
+    loop {
+        match framed.recv() {
+            Ok(Envelope::Progress { done, total, warm, dispatched, .. }) => {
+                eprintln!(
+                    "submit: {done}/{total} cell(s) done ({warm} warm, {dispatched} dispatched)"
+                );
+            }
+            Ok(Envelope::Report { partial, .. }) => {
+                eprintln!(
+                    "submit: job complete: {} cell(s) ({} warm, {} dispatched)",
+                    partial.total_cells, partial.cache.hits, partial.cache.misses
+                );
+                return Ok(partial);
+            }
+            Ok(Envelope::Error { msg }) => return Err(format!("coordinator: {msg}")),
+            Ok(_) => return Err("coordinator broke the request/report protocol".into()),
+            Err(RecvError::Closed) => {
+                return Err("coordinator closed the connection mid-job".into())
+            }
+            Err(RecvError::TimedOut) => return Err("the connection timed out".into()),
+            Err(RecvError::Fatal(e)) => return Err(e),
+        }
+    }
+}
+
+/// Dial the coordinator and complete the hello handshake as `role`.
+fn connect(addr: &str, role: &str) -> Result<Framed, String> {
+    let stream = TcpStream::connect(addr).map_err(|e| format!("{addr}: {e}"))?;
+    let mut framed = Framed::new(stream)?;
+    framed.send(&Envelope::Hello { role: role.into() })?;
+    match framed.recv() {
+        Ok(Envelope::Hello { .. }) => Ok(framed),
+        Ok(Envelope::Error { msg }) => Err(format!("coordinator: {msg}")),
+        Ok(_) => Err("coordinator answered the hello with a non-hello envelope".into()),
+        Err(RecvError::Closed) => {
+            Err("coordinator closed the connection during the handshake".into())
+        }
+        Err(RecvError::TimedOut) => Err("the handshake timed out".into()),
+        Err(RecvError::Fatal(e)) => Err(e),
+    }
+}

@@ -1,0 +1,325 @@
+//! The sweep-service wire protocol: version-gated JSON envelopes over
+//! TCP, newline-framed.
+//!
+//! `srsp serve`, `srsp work` and `srsp submit` speak this protocol over
+//! plain [`std::net`] sockets — no external dependencies. Every frame is
+//! one line of compact JSON (the [`jsonio`] renderer never emits a raw
+//! newline, so a line is always exactly one envelope) carrying a
+//! `wire_version` field; a peer from a different binary generation is
+//! refused loudly, never misread. The payloads reuse the pipeline's
+//! existing lossless codecs verbatim — an [`ExecutionPlan`] rides a
+//! `request`, a [`ShardSpec`] rides a `batch`, a [`PartialReport`] rides
+//! an `ack` or the final `report` — so a sweep that crosses the wire
+//! merges byte-identical to one that never left the process.
+//!
+//! Conversation shape (client speaks first):
+//!
+//! ```text
+//! work   → hello{role:"work"}    ← hello{role:"serve"}
+//!        ← batch{job,batch,spec} → ack{job,batch,partial}   (repeats)
+//! submit → hello{role:"submit"}  ← hello{role:"serve"}
+//!        → request{plan}         ← progress{...}* then report{partial}
+//! any error on either side       ← error{msg}, connection dropped
+//! ```
+
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::harness::report::PartialReport;
+use crate::jsonio::{self, Json};
+
+use super::shard::ShardSpec;
+use super::ExecutionPlan;
+
+/// Version tag carried by every envelope; bumped on any change to the
+/// frame shapes. A mismatched peer is refused during decode, so a stale
+/// worker can never execute (or ack) a frame it misunderstands.
+pub const WIRE_VERSION: u32 = 1;
+
+/// One wire frame. The pipeline artifacts are embedded as JSON values
+/// (not nested strings) by re-parsing their own lossless renderings, so
+/// a frame stays one readable object and the artifact codecs remain the
+/// single source of truth for their shapes.
+#[derive(Debug, Clone)]
+pub enum Envelope {
+    /// Connection opener, both directions: the client names its role
+    /// (`work` or `submit`), the coordinator answers with `serve`.
+    Hello { role: String },
+    /// submit → serve: run this lowered plan as one job.
+    Request { plan: ExecutionPlan },
+    /// serve → work: execute this synthetic single-shard batch.
+    Batch {
+        job: u64,
+        batch: u64,
+        spec: ShardSpec,
+    },
+    /// work → serve: the batch's results, lossless.
+    Ack {
+        job: u64,
+        batch: u64,
+        partial: PartialReport,
+    },
+    /// serve → submit: job progress as batches land.
+    Progress {
+        job: u64,
+        done: usize,
+        total: usize,
+        warm: usize,
+        dispatched: usize,
+    },
+    /// serve → submit: the finished job as one all-covering partial —
+    /// `Report::merge` on it reproduces the local run byte-for-byte.
+    Report { job: u64, partial: PartialReport },
+    /// Either direction: the peer broke the protocol; connection drops.
+    Error { msg: String },
+}
+
+/// Re-parse an artifact's own rendering into a [`Json`] value for
+/// embedding. The artifact codecs only emit what [`jsonio`] parses, so
+/// a failure here is a codec bug, not an input condition.
+fn embed(text: &str) -> Json {
+    jsonio::parse(text).expect("artifact codecs render valid JSON")
+}
+
+impl Envelope {
+    /// Render as one compact single-line JSON frame (no trailing
+    /// newline; the transport adds the frame delimiter).
+    pub fn to_json(&self) -> String {
+        let mut fields = vec![("wire_version".into(), Json::u32(WIRE_VERSION))];
+        match self {
+            Envelope::Hello { role } => {
+                fields.push(("kind".into(), Json::str("hello")));
+                fields.push(("role".into(), Json::str(role.clone())));
+            }
+            Envelope::Request { plan } => {
+                fields.push(("kind".into(), Json::str("request")));
+                fields.push(("plan".into(), embed(&plan.to_json())));
+            }
+            Envelope::Batch { job, batch, spec } => {
+                fields.push(("kind".into(), Json::str("batch")));
+                fields.push(("job".into(), Json::u64(*job)));
+                fields.push(("batch".into(), Json::u64(*batch)));
+                fields.push(("spec".into(), embed(&spec.to_json())));
+            }
+            Envelope::Ack {
+                job,
+                batch,
+                partial,
+            } => {
+                fields.push(("kind".into(), Json::str("ack")));
+                fields.push(("job".into(), Json::u64(*job)));
+                fields.push(("batch".into(), Json::u64(*batch)));
+                fields.push(("partial".into(), embed(&partial.to_json())));
+            }
+            Envelope::Progress {
+                job,
+                done,
+                total,
+                warm,
+                dispatched,
+            } => {
+                fields.push(("kind".into(), Json::str("progress")));
+                fields.push(("job".into(), Json::u64(*job)));
+                fields.push(("done".into(), Json::usize(*done)));
+                fields.push(("total".into(), Json::usize(*total)));
+                fields.push(("warm".into(), Json::usize(*warm)));
+                fields.push(("dispatched".into(), Json::usize(*dispatched)));
+            }
+            Envelope::Report { job, partial } => {
+                fields.push(("kind".into(), Json::str("report")));
+                fields.push(("job".into(), Json::u64(*job)));
+                fields.push(("partial".into(), embed(&partial.to_json())));
+            }
+            Envelope::Error { msg } => {
+                fields.push(("kind".into(), Json::str("error")));
+                fields.push(("msg".into(), Json::str(msg.clone())));
+            }
+        }
+        Json::Obj(fields).render()
+    }
+
+    /// Decode one frame; loud on malformation, a wire version this
+    /// binary does not speak, or an unknown envelope kind. The embedded
+    /// artifacts go back through their own versioned `from_json` codecs,
+    /// so plan/report schema drift is caught with the same messages the
+    /// file-based pipeline prints.
+    pub fn from_json(text: &str) -> Result<Envelope, String> {
+        let v = jsonio::parse(text).map_err(|e| format!("malformed wire frame: {e}"))?;
+        let version = v
+            .get("wire_version")
+            .and_then(|x| x.as_u32())
+            .map_err(|e| format!("malformed wire frame: {e}"))?;
+        if version != WIRE_VERSION {
+            return Err(format!(
+                "peer speaks wire version {version}, this binary speaks {WIRE_VERSION}"
+            ));
+        }
+        let kind = v.get("kind")?.as_str()?;
+        match kind {
+            "hello" => Ok(Envelope::Hello {
+                role: v.get("role")?.as_str()?.to_string(),
+            }),
+            "request" => Ok(Envelope::Request {
+                plan: ExecutionPlan::from_json(&v.get("plan")?.render())?,
+            }),
+            "batch" => Ok(Envelope::Batch {
+                job: v.get("job")?.as_u64()?,
+                batch: v.get("batch")?.as_u64()?,
+                spec: ShardSpec::from_json(&v.get("spec")?.render())?,
+            }),
+            "ack" => Ok(Envelope::Ack {
+                job: v.get("job")?.as_u64()?,
+                batch: v.get("batch")?.as_u64()?,
+                partial: PartialReport::from_json(&v.get("partial")?.render())?,
+            }),
+            "progress" => Ok(Envelope::Progress {
+                job: v.get("job")?.as_u64()?,
+                done: v.get("done")?.as_usize()?,
+                total: v.get("total")?.as_usize()?,
+                warm: v.get("warm")?.as_usize()?,
+                dispatched: v.get("dispatched")?.as_usize()?,
+            }),
+            "report" => Ok(Envelope::Report {
+                job: v.get("job")?.as_u64()?,
+                partial: PartialReport::from_json(&v.get("partial")?.render())?,
+            }),
+            "error" => Ok(Envelope::Error {
+                msg: v.get("msg")?.as_str()?.to_string(),
+            }),
+            other => Err(format!("unknown wire envelope kind '{other}'")),
+        }
+    }
+}
+
+/// Why a [`Framed::recv`] returned no envelope. `Closed` and `TimedOut`
+/// are ordinary fleet events (a worker died, a worker hung) the
+/// coordinator's retry policy consumes; `Fatal` is a protocol violation
+/// that drops the connection.
+#[derive(Debug)]
+pub enum RecvError {
+    /// The peer closed the connection (EOF).
+    Closed,
+    /// No complete frame arrived within the configured read deadline.
+    TimedOut,
+    /// I/O failure or an undecodable frame.
+    Fatal(String),
+}
+
+/// A newline-framed envelope transport over one [`TcpStream`]. Reader
+/// and writer are duplicated handles on the same socket, so a read
+/// deadline set via [`Framed::set_read_timeout`] never blocks sends.
+pub struct Framed {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Framed {
+    pub fn new(stream: TcpStream) -> Result<Framed, String> {
+        let reader = stream
+            .try_clone()
+            .map_err(|e| format!("cannot clone the connection: {e}"))?;
+        Ok(Framed {
+            writer: stream,
+            reader: BufReader::new(reader),
+        })
+    }
+
+    /// Write one envelope frame and flush it onto the wire.
+    pub fn send(&mut self, envelope: &Envelope) -> Result<(), String> {
+        let mut line = envelope.to_json();
+        line.push('\n');
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|()| self.writer.flush())
+            .map_err(|e| format!("send failed: {e}"))
+    }
+
+    /// Bound how long [`Framed::recv`] blocks for the next frame; `None`
+    /// waits forever. The deadline covers one whole frame: a peer that
+    /// trickles half a line then stalls times out like a silent one.
+    pub fn set_read_timeout(&mut self, deadline: Option<Duration>) -> Result<(), String> {
+        self.reader
+            .get_ref()
+            .set_read_timeout(deadline)
+            .map_err(|e| format!("cannot set the read deadline: {e}"))
+    }
+
+    /// Read and decode the next frame.
+    pub fn recv(&mut self) -> Result<Envelope, RecvError> {
+        let mut line = String::new();
+        match self.reader.read_line(&mut line) {
+            Ok(0) => Err(RecvError::Closed),
+            Ok(_) => Envelope::from_json(line.trim_end_matches(['\r', '\n']))
+                .map_err(RecvError::Fatal),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                Err(RecvError::TimedOut)
+            }
+            Err(e) => Err(RecvError::Fatal(format!("receive failed: {e}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envelopes_round_trip() {
+        let hello = Envelope::Hello {
+            role: "work".into(),
+        };
+        let text = hello.to_json();
+        assert!(!text.contains('\n'), "frames must be single-line");
+        match Envelope::from_json(&text).unwrap() {
+            Envelope::Hello { role } => assert_eq!(role, "work"),
+            other => panic!("decoded {other:?}"),
+        }
+        let progress = Envelope::Progress {
+            job: 3,
+            done: 2,
+            total: 6,
+            warm: 1,
+            dispatched: 5,
+        };
+        match Envelope::from_json(&progress.to_json()).unwrap() {
+            Envelope::Progress {
+                job,
+                done,
+                total,
+                warm,
+                dispatched,
+            } => {
+                assert_eq!((job, done, total, warm, dispatched), (3, 2, 6, 1, 5));
+            }
+            other => panic!("decoded {other:?}"),
+        }
+        let err = Envelope::Error {
+            msg: "boom".into(),
+        };
+        match Envelope::from_json(&err.to_json()).unwrap() {
+            Envelope::Error { msg } => assert_eq!(msg, "boom"),
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn version_gate_and_malformed_frames_are_loud() {
+        let text = Envelope::Hello {
+            role: "submit".into(),
+        }
+        .to_json();
+        let wrong = text.replacen(
+            &format!("\"wire_version\":{WIRE_VERSION}"),
+            "\"wire_version\":0",
+            1,
+        );
+        let e = Envelope::from_json(&wrong).unwrap_err();
+        assert!(e.contains("wire version"), "{e}");
+        let e = Envelope::from_json("this is not a frame").unwrap_err();
+        assert!(e.contains("malformed wire frame"), "{e}");
+        let unknown = text.replacen("\"kind\":\"hello\"", "\"kind\":\"warble\"", 1);
+        let e = Envelope::from_json(&unknown).unwrap_err();
+        assert!(e.contains("unknown wire envelope kind"), "{e}");
+    }
+}

@@ -364,6 +364,21 @@ pub struct PartialReport {
 }
 
 impl PartialReport {
+    /// Wrap a complete result grid (every cell, in grid order, from any
+    /// mix of sources) as the single all-covering partial of a
+    /// one-shard split — `Report::merge(&[partial])` then reproduces
+    /// the local single-process report byte-for-byte. The serve
+    /// coordinator assembles each finished job this way.
+    pub fn from_grid(rows: Vec<(usize, ReportRow)>, cache: CacheCounters) -> PartialReport {
+        PartialReport {
+            shard: 0,
+            num_shards: 1,
+            total_cells: rows.len(),
+            cache,
+            rows,
+        }
+    }
+
     /// Serialize to the worker-output JSON format, stamped with
     /// [`REPORT_SCHEMA`]`.version`.
     pub fn to_json(&self) -> String {

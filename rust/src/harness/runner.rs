@@ -373,7 +373,7 @@ impl CellOutcome {
 /// oracle-validated rows are trustworthy enough to store, and traced
 /// runs are for observation, not caching (a served cell would silently
 /// emit no events).
-fn cell_layer_active(validate: bool, cfg: &DeviceConfig) -> bool {
+pub(crate) fn cell_layer_active(validate: bool, cfg: &DeviceConfig) -> bool {
     validate && cfg.trace_capacity == 0
 }
 

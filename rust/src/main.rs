@@ -17,11 +17,12 @@
 //! offline; parsing is hand-rolled.
 
 use std::process::Command;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use srsp::config::{parse_config_str, DeviceConfig, Scenario};
 use srsp::coordinator::axis::{self, AxisId};
 use srsp::coordinator::cache::{self, CacheCounters, CacheStore};
+use srsp::coordinator::serve::{self, ServeOpts};
 use srsp::coordinator::{
     classic_grid, full_grid, scaling_cells, shard, ExecutionPlan, Seeding, SweepPlan,
     MAX_SWEEP_AXES, RATIO_SCENARIOS,
@@ -75,6 +76,20 @@ COMMANDS:
                            PartialReport JSON
     merge-reports          Merge worker PartialReport files into the final
                            grid-ordered report; fails loudly on any gap
+    serve                  Run the sweep-service coordinator: accept queued
+                           sweep requests from `submit` clients, dispatch
+                           deadline-guarded shard batches to connected
+                           `work` processes (retry/re-shard on death or
+                           timeout), answer warm cells from --cache without
+                           dispatching, and stream results back — merged
+                           reports stay byte-identical to a local --jobs 1
+                           run
+    work                   Connect a persistent remote worker to a serve
+                           coordinator and execute dispatched batches until
+                           the coordinator drains
+    submit                 Send a registry-axis sweep to a serve coordinator,
+                           stream its progress, and emit the merged report
+                           exactly like a local sweep
     trace [kind]           Render a recorded JSONL sync-event trace
                            (kinds: summary, timeline, perfetto, kinds;
                            default summary); input via --trace <file>
@@ -149,6 +164,24 @@ OPTIONS:
                                 for the cache command)
     --no-cache                  Ignore any cache — the flag and a shard-
                                 carried directory — and simulate fresh
+    --listen <addr>             serve: TCP address to bind (host:port;
+                                port 0 picks a free port — the bound
+                                address is announced on stderr)
+    --connect <addr>            work/submit: the coordinator's address
+    --deadline <secs>           serve: per-batch ack deadline; a dispatched
+                                batch not acked in time is re-dispatched
+                                (default 60)
+    --retries <n>               serve: re-dispatch budget per batch beyond
+                                the first attempt; a batch failing every
+                                attempt fails its whole job loudly
+                                (default 2)
+    --max-jobs <n>              serve: drain and exit after <n> accepted
+                                jobs (default: serve until killed)
+    --shard-cells <n>           serve: grid cells per dispatched batch
+                                (default 4)
+    --die-after <n>             work: exit abruptly instead of acking batch
+                                <n>+1 (deterministic fault injection for
+                                the retry path; exit status 3)
 ";
 
 /// What `sweep` runs: the classic fixed CU-scaling grid, or a composed
@@ -210,6 +243,21 @@ struct Opts {
     warmup: Option<u32>,
     /// Also time the reference interpreter path (`--compare-reference`).
     compare_reference: bool,
+    /// Coordinator bind address (`--listen`, serve only).
+    listen: Option<String>,
+    /// Coordinator address to dial (`--connect`, work and submit).
+    connect: Option<String>,
+    /// Per-batch ack deadline in seconds (`--deadline`, serve only).
+    deadline: Option<u64>,
+    /// Re-dispatch budget per batch (`--retries`, serve only).
+    retries: Option<u32>,
+    /// Drain after this many accepted jobs (`--max-jobs`, serve only).
+    max_jobs: Option<u64>,
+    /// Grid cells per dispatched batch (`--shard-cells`, serve only).
+    shard_cells: Option<usize>,
+    /// Fault injection: die instead of acking batch n+1 (`--die-after`,
+    /// work only).
+    die_after: Option<u64>,
 }
 
 /// Record grid points for `axis`, rejecting duplicates and out-of-domain
@@ -282,6 +330,13 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
         repeats: None,
         warmup: None,
         compare_reference: false,
+        listen: None,
+        connect: None,
+        deadline: None,
+        retries: None,
+        max_jobs: None,
+        shard_cells: None,
+        die_after: None,
     };
     let mut i = 0;
     while i < args.len() {
@@ -443,6 +498,35 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
             }
             "--warmup" => o.warmup = Some(val()?.parse().map_err(|e| format!("--warmup: {e}"))?),
             "--compare-reference" => o.compare_reference = true,
+            "--listen" => o.listen = Some(val()?),
+            "--connect" => o.connect = Some(val()?),
+            "--deadline" => {
+                let n: u64 = val()?.parse().map_err(|e| format!("--deadline: {e}"))?;
+                if n == 0 {
+                    return Err("--deadline needs at least 1 second".into());
+                }
+                o.deadline = Some(n);
+            }
+            "--retries" => {
+                o.retries = Some(val()?.parse().map_err(|e| format!("--retries: {e}"))?)
+            }
+            "--max-jobs" => {
+                let n: u64 = val()?.parse().map_err(|e| format!("--max-jobs: {e}"))?;
+                if n == 0 {
+                    return Err("--max-jobs needs at least 1".into());
+                }
+                o.max_jobs = Some(n);
+            }
+            "--shard-cells" => {
+                let n: usize = val()?.parse().map_err(|e| format!("--shard-cells: {e}"))?;
+                if n == 0 {
+                    return Err("--shard-cells needs at least 1".into());
+                }
+                o.shard_cells = Some(n);
+            }
+            "--die-after" => {
+                o.die_after = Some(val()?.parse().map_err(|e| format!("--die-after: {e}"))?)
+            }
             other => return Err(format!("unknown option '{other}'")),
         }
         i += 1;
@@ -457,6 +541,242 @@ fn parse_u64(s: &str) -> Result<u64, String> {
         None => s.parse().map_err(|e: std::num::ParseIntError| e.to_string()),
     }
 }
+
+/// Every command-scoped flag, gated by the [`COMMANDS`] registry. A flag
+/// on a command that would silently ignore it is rejected up front, so
+/// the user never plots a grid believing a flag constrained it.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Flag {
+    Workers,
+    Shard,
+    Partial,
+    Repeats,
+    Warmup,
+    CompareReference,
+    Trace,
+    TraceBuf,
+    Cache,
+    NoCache,
+    Listen,
+    Connect,
+    Deadline,
+    Retries,
+    MaxJobs,
+    ShardCells,
+    DieAfter,
+}
+
+use Flag::*;
+
+/// One scoped flag: its CLI spelling, the scope phrase its rejection
+/// message names ("<name> applies to <scope>, not '<cmd>'"), and how to
+/// tell it was given.
+struct FlagSpec {
+    flag: Flag,
+    name: &'static str,
+    scope: &'static str,
+    given: fn(&Opts) -> bool,
+}
+
+const FLAGS: &[FlagSpec] = &[
+    FlagSpec {
+        flag: Workers,
+        name: "--workers",
+        scope: "registry-axis sweeps",
+        given: |o| o.workers.is_some(),
+    },
+    FlagSpec {
+        flag: Shard,
+        name: "--shard",
+        scope: "worker",
+        given: |o| o.shard.is_some(),
+    },
+    FlagSpec {
+        flag: Partial,
+        name: "--partial",
+        scope: "merge-reports",
+        given: |o| !o.partials.is_empty(),
+    },
+    FlagSpec {
+        flag: Repeats,
+        name: "--repeats",
+        scope: "bench",
+        given: |o| o.repeats.is_some(),
+    },
+    FlagSpec {
+        flag: Warmup,
+        name: "--warmup",
+        scope: "bench",
+        given: |o| o.warmup.is_some(),
+    },
+    FlagSpec {
+        flag: CompareReference,
+        name: "--compare-reference",
+        scope: "bench",
+        given: |o| o.compare_reference,
+    },
+    FlagSpec {
+        flag: Trace,
+        name: "--trace",
+        scope: "run, sweep, worker and trace",
+        given: |o| o.trace.is_some(),
+    },
+    FlagSpec {
+        flag: TraceBuf,
+        name: "--trace-buf",
+        scope: "run and sweep (a worker inherits the capacity from its shard's device config)",
+        given: |o| o.trace_buf.is_some(),
+    },
+    FlagSpec {
+        flag: Cache,
+        name: "--cache",
+        scope: "run, sweep, validate, ci-smoke, worker, serve, work and cache",
+        given: |o| o.cache.is_some(),
+    },
+    FlagSpec {
+        flag: NoCache,
+        name: "--no-cache",
+        scope: "run, sweep, validate, ci-smoke, worker, serve and work",
+        given: |o| o.no_cache,
+    },
+    FlagSpec {
+        flag: Listen,
+        name: "--listen",
+        scope: "serve",
+        given: |o| o.listen.is_some(),
+    },
+    FlagSpec {
+        flag: Connect,
+        name: "--connect",
+        scope: "work and submit",
+        given: |o| o.connect.is_some(),
+    },
+    FlagSpec {
+        flag: Deadline,
+        name: "--deadline",
+        scope: "serve",
+        given: |o| o.deadline.is_some(),
+    },
+    FlagSpec {
+        flag: Retries,
+        name: "--retries",
+        scope: "serve",
+        given: |o| o.retries.is_some(),
+    },
+    FlagSpec {
+        flag: MaxJobs,
+        name: "--max-jobs",
+        scope: "serve",
+        given: |o| o.max_jobs.is_some(),
+    },
+    FlagSpec {
+        flag: ShardCells,
+        name: "--shard-cells",
+        scope: "serve",
+        given: |o| o.shard_cells.is_some(),
+    },
+    FlagSpec {
+        flag: DieAfter,
+        name: "--die-after",
+        scope: "work",
+        given: |o| o.die_after.is_some(),
+    },
+];
+
+/// One command's flag scope: the gated flags it consumes. A command
+/// absent from [`COMMANDS`] (including `help` and unknown names) allows
+/// none. Unscoped flags (`--app`, `--jobs`, `--out`, ...) are validated
+/// by the command arms themselves, where the right answer depends on
+/// more than presence.
+struct CommandSpec {
+    name: &'static str,
+    allowed: &'static [Flag],
+}
+
+const COMMANDS: &[CommandSpec] = &[
+    CommandSpec { name: "table1", allowed: &[] },
+    CommandSpec { name: "list-workloads", allowed: &[] },
+    CommandSpec { name: "list-protocols", allowed: &[] },
+    CommandSpec { name: "list-axes", allowed: &[] },
+    CommandSpec { name: "fig4", allowed: &[] },
+    CommandSpec { name: "fig5", allowed: &[] },
+    CommandSpec { name: "fig6", allowed: &[] },
+    CommandSpec {
+        name: "sweep",
+        allowed: &[Workers, Trace, TraceBuf, Cache, NoCache],
+    },
+    CommandSpec {
+        name: "run",
+        allowed: &[Trace, TraceBuf, Cache, NoCache],
+    },
+    CommandSpec {
+        name: "bench",
+        allowed: &[Repeats, Warmup, CompareReference],
+    },
+    CommandSpec { name: "validate", allowed: &[Cache, NoCache] },
+    CommandSpec { name: "ci-smoke", allowed: &[Cache, NoCache] },
+    CommandSpec {
+        name: "worker",
+        allowed: &[Shard, Trace, Cache, NoCache],
+    },
+    CommandSpec { name: "merge-reports", allowed: &[Partial] },
+    CommandSpec { name: "trace", allowed: &[Trace] },
+    CommandSpec { name: "cache", allowed: &[Cache] },
+    CommandSpec {
+        name: "serve",
+        allowed: &[Listen, Deadline, Retries, MaxJobs, ShardCells, Cache, NoCache],
+    },
+    CommandSpec {
+        name: "work",
+        allowed: &[Connect, DieAfter, Cache, NoCache],
+    },
+    CommandSpec { name: "submit", allowed: &[Connect] },
+];
+
+/// One validation rule of the [`RULES`] pass: `Scope` rejects a present
+/// flag on a command whose [`CommandSpec`] does not allow it; `Refuse`
+/// rejects a flag combination on every command.
+enum Rule {
+    Scope(Flag),
+    Refuse {
+        when: fn(&Opts) -> bool,
+        msg: &'static str,
+    },
+}
+
+const RULES: &[Rule] = &[
+    Rule::Scope(Workers),
+    Rule::Refuse {
+        when: |o| o.workers.is_some() && o.jobs.is_some(),
+        msg: "--jobs selects in-process executor threads; with --workers each subprocess \
+              executes its shard serially — pick one",
+    },
+    Rule::Scope(Shard),
+    Rule::Scope(Partial),
+    Rule::Scope(Repeats),
+    Rule::Scope(Warmup),
+    Rule::Scope(CompareReference),
+    Rule::Scope(Trace),
+    Rule::Refuse {
+        when: |o| o.trace_buf.is_some() && o.trace.is_none(),
+        msg: "--trace-buf sizes the trace ring; it needs --trace <file>",
+    },
+    Rule::Scope(TraceBuf),
+    Rule::Scope(Cache),
+    Rule::Refuse {
+        when: |o| o.cache.is_some() && o.trace.is_some(),
+        msg: "--cache conflicts with --trace: a cached cell replays no sync events, \
+              so traced runs bypass the result cache — drop one of the flags",
+    },
+    Rule::Scope(NoCache),
+    Rule::Scope(Listen),
+    Rule::Scope(Connect),
+    Rule::Scope(Deadline),
+    Rule::Scope(Retries),
+    Rule::Scope(MaxJobs),
+    Rule::Scope(ShardCells),
+    Rule::Scope(DieAfter),
+];
 
 impl Opts {
     fn jobs(&self) -> usize {
@@ -506,8 +826,9 @@ impl Opts {
     /// varies the device size itself — a flag the sweep would silently
     /// ignore is rejected so the user never plots a grid believing it
     /// was constrained (`--cus` vs the cu-count axis especially invites
-    /// the mix-up).
-    fn check_axis_flags(&self) -> Result<(), String> {
+    /// the mix-up). Runs as the sweep-conditional rule of [`RULES`];
+    /// `submit` calls it directly (its plan is a registry-axis sweep).
+    fn sweep_axis_conflicts(&self) -> Result<(), String> {
         match &self.sweep {
             SweepSel::Classic => {
                 if let Some((a, _)) = self.points.first() {
@@ -612,88 +933,6 @@ impl Opts {
         Ok(())
     }
 
-    /// The distributed-pipeline flags each belong to exactly one
-    /// command; anywhere else they would be silently ignored, so they
-    /// are rejected up front like the other scoped flags.
-    fn check_distributed_flags(&self, cmd: &str) -> Result<(), String> {
-        if self.workers.is_some() && cmd != "sweep" {
-            return Err(format!(
-                "--workers applies to registry-axis sweeps, not '{cmd}'"
-            ));
-        }
-        if self.workers.is_some() && self.jobs.is_some() {
-            return Err(
-                "--jobs selects in-process executor threads; with --workers each subprocess \
-                 executes its shard serially — pick one"
-                    .into(),
-            );
-        }
-        if self.shard.is_some() && cmd != "worker" {
-            return Err(format!("--shard applies to worker, not '{cmd}'"));
-        }
-        if !self.partials.is_empty() && cmd != "merge-reports" {
-            return Err(format!("--partial applies to merge-reports, not '{cmd}'"));
-        }
-        Ok(())
-    }
-
-    /// The trace flags belong to the commands that record a trace (run,
-    /// sweep, worker) or read one (`trace`); anywhere else they would be
-    /// silently ignored, so they are rejected up front like the other
-    /// scoped flags.
-    fn check_trace_flags(&self, cmd: &str) -> Result<(), String> {
-        if self.trace.is_some() && !matches!(cmd, "run" | "sweep" | "worker" | "trace") {
-            return Err(format!(
-                "--trace applies to run, sweep, worker and trace, not '{cmd}'"
-            ));
-        }
-        if self.trace_buf.is_some() {
-            if self.trace.is_none() {
-                return Err("--trace-buf sizes the trace ring; it needs --trace <file>".into());
-            }
-            if !matches!(cmd, "run" | "sweep") {
-                return Err(format!(
-                    "--trace-buf applies to run and sweep (a worker inherits the capacity \
-                     from its shard's device config), not '{cmd}'"
-                ));
-            }
-        }
-        Ok(())
-    }
-
-    /// The cache flags belong to the commands that execute cells (run,
-    /// sweep, validate, ci-smoke, worker) or maintain a store (`cache`);
-    /// anywhere else they would be silently ignored, so they are
-    /// rejected up front like the other scoped flags. `--cache` also
-    /// conflicts with `--trace`: a cached cell replays no events, so a
-    /// traced run must simulate everything fresh.
-    fn check_cache_flags(&self, cmd: &str) -> Result<(), String> {
-        if self.cache.is_some() {
-            if !matches!(
-                cmd,
-                "run" | "sweep" | "validate" | "ci-smoke" | "worker" | "cache"
-            ) {
-                return Err(format!(
-                    "--cache applies to run, sweep, validate, ci-smoke, worker and cache, \
-                     not '{cmd}'"
-                ));
-            }
-            if self.trace.is_some() {
-                return Err(
-                    "--cache conflicts with --trace: a cached cell replays no sync events, \
-                     so traced runs bypass the result cache — drop one of the flags"
-                        .into(),
-                );
-            }
-        }
-        if self.no_cache && !matches!(cmd, "run" | "sweep" | "validate" | "ci-smoke" | "worker") {
-            return Err(format!(
-                "--no-cache applies to run, sweep, validate, ci-smoke and worker, not '{cmd}'"
-            ));
-        }
-        Ok(())
-    }
-
     /// The result-cache directory this invocation runs against, when
     /// any (`--no-cache` wins over `--cache`).
     fn cache_dir(&self) -> Option<&str> {
@@ -714,21 +953,39 @@ impl Opts {
         }
     }
 
-    /// The measurement flags belong to `bench` alone; anywhere else
-    /// they would be silently ignored, so they are rejected up front
-    /// like the other scoped flags.
-    fn check_bench_flags(&self, cmd: &str) -> Result<(), String> {
-        if cmd == "bench" {
-            return Ok(());
-        }
-        if self.repeats.is_some() {
-            return Err(format!("--repeats applies to bench, not '{cmd}'"));
-        }
-        if self.warmup.is_some() {
-            return Err(format!("--warmup applies to bench, not '{cmd}'"));
-        }
-        if self.compare_reference {
-            return Err(format!("--compare-reference applies to bench, not '{cmd}'"));
+    /// The single declarative flag-validation pass, replacing the old
+    /// per-family `check_*_flags` validators: walk [`RULES`] in order,
+    /// rejecting any present scoped flag the [`COMMANDS`] row for `cmd`
+    /// does not allow, and any refused flag combination. Rule order is
+    /// load-bearing — it reproduces the historical validator order
+    /// (distributed → bench → trace → cache → service), so every
+    /// rejection message fires exactly where it used to.
+    fn check_flags(&self, cmd: &str) -> Result<(), String> {
+        let allowed = COMMANDS
+            .iter()
+            .find(|c| c.name == cmd)
+            .map(|c| c.allowed)
+            .unwrap_or(&[]);
+        for rule in RULES {
+            match rule {
+                Rule::Scope(flag) => {
+                    let spec = FLAGS
+                        .iter()
+                        .find(|s| s.flag == *flag)
+                        .expect("every gated flag has a FLAGS row");
+                    if (spec.given)(self) && !allowed.contains(&spec.flag) {
+                        return Err(format!(
+                            "{} applies to {}, not '{cmd}'",
+                            spec.name, spec.scope
+                        ));
+                    }
+                }
+                Rule::Refuse { when, msg } => {
+                    if when(self) {
+                        return Err((*msg).to_string());
+                    }
+                }
+            }
         }
         Ok(())
     }
@@ -820,17 +1077,31 @@ fn finish_cached_run(dir: Option<&str>, counters: &CacheCounters) {
     cache::record_run(dir, counters);
 }
 
+/// The one "`--out` → file else stdout" emission path: every rendered
+/// artifact (matrix report, bench JSON, rendered trace, worker partial,
+/// served report) flows through here. `announce` adds the "wrote
+/// <path>" stderr line the interactive surfaces (bench, trace) print;
+/// pipeline artifacts stay silent so their stderr is pure diagnostics.
+fn emit_to(out: Option<&str>, text: &str, announce: bool) -> Result<(), String> {
+    match out {
+        Some(path) => {
+            std::fs::write(path, text).map_err(|e| format!("{path}: {e}"))?;
+            if announce {
+                eprintln!("wrote {path}");
+            }
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
 /// Write `report` in `format` to `--out` or stdout.
 fn write_report(report: &Report, format: ReportFormat, o: &Opts) -> Result<(), String> {
     let text = match format {
         ReportFormat::Json => report.to_json(),
         ReportFormat::Csv => report.to_csv(),
     };
-    match &o.out {
-        Some(path) => std::fs::write(path, &text).map_err(|e| format!("{path}: {e}"))?,
-        None => print!("{text}"),
-    }
-    Ok(())
+    emit_to(o.out.as_deref(), &text, false)
 }
 
 /// Emit the machine-readable report when `--report` was given.
@@ -1083,62 +1354,53 @@ fn run_distributed(
     result
 }
 
-/// Run a composed registry-axis sweep: build the [`SweepPlan`], execute
-/// the cross-product grid oracle-gated — in-process (`--jobs`) or over
-/// worker subprocesses (`--workers`), byte-identical either way — emit
-/// the long-format report and the human protocol-comparison table.
-fn run_axis_sweep(o: &Opts, axes: &[AxisId]) -> Result<(), String> {
+/// Everything a registry-axis sweep resolves before executing — shared
+/// by the local `sweep` path and the `submit` client, which lowers the
+/// identical plan and ships it to a `serve` coordinator instead of
+/// executing here.
+struct AxisSweep {
+    app: WorkloadId,
+    plan: SweepPlan,
+    runner: Runner,
+    size: WorkloadSize,
+    axis_names: Vec<String>,
+}
+
+/// Validate the sweep-shaped flags and resolve the plan and runner for
+/// a registry-axis sweep; `cmd` names the rejecting command.
+fn prepare_axis_sweep(o: &Opts, axes: &[AxisId], cmd: &str) -> Result<AxisSweep, String> {
     let app = o.app.unwrap_or(registry::STRESS);
     // Surface bad --param keys as a clean CLI error before the runner
     // (which would panic inside an executor).
     Params::resolve(app.kernel().params(), &o.params).map_err(|e| format!("{}: {e}", app.name()))?;
     o.check_proto_params(&RATIO_SCENARIOS)?;
-    o.reject_protocol("sweep")?;
-    o.check_axis_flags()?;
+    o.reject_protocol(cmd)?;
+    o.sweep_axis_conflicts()?;
     let mut plan = SweepPlan::new(app, axes)?;
     for (a, pts) in &o.points {
         plan = plan.with_points(*a, pts.clone())?;
     }
     let cfg = device_config(o)?;
     let size = o.size.unwrap_or(WorkloadSize::Paper);
-    let axis_names: Vec<&str> = axes.iter().map(|a| a.name()).collect();
-    let combos = plan.combos();
-    let executors = match o.workers {
-        Some(w) => format!("{w} worker subprocesses"),
-        None => format!("{} jobs", o.jobs()),
-    };
-    eprintln!(
-        "sweep on {} over {} ({} grid points × {} protocols) at {size:?} scale ({executors}) ...",
-        app.name(),
-        axis_names.join(" × "),
-        combos.len(),
-        plan.scenarios.len(),
-    );
+    let axis_names: Vec<String> = axes.iter().map(|a| a.name().to_string()).collect();
     let runner = o.runner(cfg, size, true);
-    let report = match o.workers {
-        Some(workers) => run_distributed(&runner, &plan, workers, o)?,
-        None => match open_store(o)? {
-            Some(store) => {
-                // Cached in-process path: probe the store per cell, run
-                // only the misses, reassemble by grid index. The report
-                // is byte-identical to the uncached run (--trace cannot
-                // ride along; the CLI rejects the combination).
-                let lowered = ExecutionPlan::lower_sweep(&runner, &plan);
-                let (outcomes, counters) = execute_plan_cached(&lowered, o.jobs(), Some(&store));
-                finish_cached_run(Some(store.dir()), &counters);
-                Report::from_outcomes(&outcomes)
-            }
-            None => {
-                let results = runner.run_sweep(&plan);
-                emit_trace(&results, o)?;
-                Report::from_cells(&results)
-            }
-        },
-    };
-    emit_report(&report, o)?;
-    let failures = print_validation(&report, o);
-    let rows = sweep_speedup_rows_report(&plan, &report);
-    let mut header: Vec<String> = axis_names.iter().map(|n| n.to_string()).collect();
+    Ok(AxisSweep {
+        app,
+        plan,
+        runner,
+        size,
+        axis_names,
+    })
+}
+
+/// Emit a finished registry-axis sweep — report file/stdout, per-row
+/// validation lines, the human speedup table, loud oracle failures —
+/// identically for the local and served paths.
+fn finish_axis_sweep(o: &Opts, prep: &AxisSweep, report: &Report) -> Result<(), String> {
+    emit_report(report, o)?;
+    let failures = print_validation(report, o);
+    let rows = sweep_speedup_rows_report(&prep.plan, report);
+    let mut header: Vec<String> = prep.axis_names.clone();
     header.extend([
         "steal cycles".to_string(),
         "rsp ×".to_string(),
@@ -1158,8 +1420,8 @@ fn run_axis_sweep(o: &Opts, axes: &[AxisId]) -> Result<(), String> {
         o,
         &format!(
             "Sweep — {} — {} — speedup vs global-scope stealing (steal = 1.0)\n{}",
-            app.display(),
-            axis_names.join(" × "),
+            prep.app.display(),
+            prep.axis_names.join(" × "),
             format_table(&header, &body)
         ),
     );
@@ -1169,11 +1431,49 @@ fn run_axis_sweep(o: &Opts, axes: &[AxisId]) -> Result<(), String> {
     Ok(())
 }
 
+/// Run a composed registry-axis sweep: build the [`SweepPlan`], execute
+/// the cross-product grid oracle-gated — in-process (`--jobs`) or over
+/// worker subprocesses (`--workers`), byte-identical either way — emit
+/// the long-format report and the human protocol-comparison table.
+fn run_axis_sweep(o: &Opts, axes: &[AxisId]) -> Result<(), String> {
+    let prep = prepare_axis_sweep(o, axes, "sweep")?;
+    let size = prep.size;
+    let executors = match o.workers {
+        Some(w) => format!("{w} worker subprocesses"),
+        None => format!("{} jobs", o.jobs()),
+    };
+    eprintln!(
+        "sweep on {} over {} ({} grid points × {} protocols) at {size:?} scale ({executors}) ...",
+        prep.app.name(),
+        prep.axis_names.join(" × "),
+        prep.plan.combos().len(),
+        prep.plan.scenarios.len(),
+    );
+    let report = match o.workers {
+        Some(workers) => run_distributed(&prep.runner, &prep.plan, workers, o)?,
+        None => match open_store(o)? {
+            Some(store) => {
+                // Cached in-process path: probe the store per cell, run
+                // only the misses, reassemble by grid index. The report
+                // is byte-identical to the uncached run (--trace cannot
+                // ride along; the CLI rejects the combination).
+                let lowered = ExecutionPlan::lower_sweep(&prep.runner, &prep.plan);
+                let (outcomes, counters) = execute_plan_cached(&lowered, o.jobs(), Some(&store));
+                finish_cached_run(Some(store.dir()), &counters);
+                Report::from_outcomes(&outcomes)
+            }
+            None => {
+                let results = prep.runner.run_sweep(&prep.plan);
+                emit_trace(&results, o)?;
+                Report::from_cells(&results)
+            }
+        },
+    };
+    finish_axis_sweep(o, &prep, &report)
+}
+
 fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
-    o.check_distributed_flags(cmd)?;
-    o.check_bench_flags(cmd)?;
-    o.check_trace_flags(cmd)?;
-    o.check_cache_flags(cmd)?;
+    o.check_flags(cmd)?;
     match cmd {
         "help" | "--help" | "-h" => print!("{USAGE}"),
         "table1" => {
@@ -1297,7 +1597,7 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                 o.reject_params("sweep --axis cus")?;
                 o.reject_proto_params("sweep --axis cus")?;
                 o.reject_protocol("sweep --axis cus")?;
-                o.check_axis_flags()?;
+                o.sweep_axis_conflicts()?;
                 if o.workers.is_some() {
                     return Err(
                         "--workers applies to registry-axis sweeps (e.g. --axis \
@@ -1459,13 +1759,7 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                     );
                     let report = bench::run_bench(&cfg, &bopts);
                     eprint!("{}", report.render_human());
-                    match &o.out {
-                        Some(p) => {
-                            std::fs::write(p, report.to_json()).map_err(|e| format!("{p}: {e}"))?;
-                            eprintln!("wrote {p}");
-                        }
-                        None => print!("{}", report.to_json()),
-                    }
+                    emit_to(o.out.as_deref(), &report.to_json(), true)?;
                 }
                 other => {
                     return Err(format!("unknown bench kind '{other}' (try `srsp bench list`)"));
@@ -1610,10 +1904,7 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                     PartialReport::from_shard(&spec, &results)
                 }
             };
-            match &o.out {
-                Some(p) => std::fs::write(p, partial.to_json()).map_err(|e| format!("{p}: {e}"))?,
-                None => print!("{}", partial.to_json()),
-            }
+            emit_to(o.out.as_deref(), &partial.to_json(), false)?;
         }
         "trace" => {
             o.reject_params(cmd)?;
@@ -1646,13 +1937,7 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                 "timeline" => report.timeline_table(),
                 _ => report.render_perfetto(),
             };
-            match &o.out {
-                Some(p) => {
-                    std::fs::write(p, &rendered).map_err(|e| format!("{p}: {e}"))?;
-                    eprintln!("wrote {p}");
-                }
-                None => print!("{rendered}"),
-            }
+            emit_to(o.out.as_deref(), &rendered, true)?;
         }
         "cache" => {
             o.reject_params(cmd)?;
@@ -1738,6 +2023,92 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                 partials.len(),
                 report.rows.len()
             );
+        }
+        "serve" => {
+            o.reject_params(cmd)?;
+            o.reject_proto_params(cmd)?;
+            o.reject_protocol(cmd)?;
+            o.reject_axis_points(cmd)?;
+            if o.report.is_some() {
+                return Err(
+                    "serve streams results to submit clients; --report does not apply".into(),
+                );
+            }
+            if o.jobs.is_some() {
+                return Err(
+                    "serve dispatches batches to connected work processes; --jobs does not \
+                     apply"
+                        .into(),
+                );
+            }
+            let Some(listen) = o.listen.clone() else {
+                return Err("serve needs --listen <addr>".into());
+            };
+            serve::serve(ServeOpts {
+                listen,
+                deadline: Duration::from_secs(o.deadline.unwrap_or(60)),
+                retries: o.retries.unwrap_or(2),
+                shard_cells: o.shard_cells.unwrap_or(4),
+                max_jobs: o.max_jobs,
+                cache_dir: o.cache_dir().map(|d| d.to_string()),
+            })?;
+        }
+        "work" => {
+            o.reject_params(cmd)?;
+            o.reject_proto_params(cmd)?;
+            o.reject_protocol(cmd)?;
+            o.reject_axis_points(cmd)?;
+            if o.report.is_some() {
+                return Err(
+                    "work acks PartialReports over the wire; --report does not apply".into(),
+                );
+            }
+            if o.jobs.is_some() {
+                return Err(
+                    "work executes each dispatched batch serially (the batch IS the parallel \
+                     unit); --jobs does not apply"
+                        .into(),
+                );
+            }
+            let Some(addr) = o.connect.as_deref() else {
+                return Err("work needs --connect <addr>".into());
+            };
+            serve::run_worker(addr, o.cache_dir(), o.die_after)?;
+        }
+        "submit" => {
+            let Some(addr) = o.connect.as_deref() else {
+                return Err("submit needs --connect <addr>".into());
+            };
+            if o.jobs.is_some() {
+                return Err(
+                    "submit ships the sweep to the coordinator's fleet; --jobs does not apply"
+                        .into(),
+                );
+            }
+            let SweepSel::Axes(axes) = &o.sweep else {
+                return Err(
+                    "submit runs a registry-axis sweep on the coordinator (e.g. --axis \
+                     remote-ratio,cu-count); --axis cus is the in-process classic grid"
+                        .into(),
+                );
+            };
+            let prep = prepare_axis_sweep(o, axes, cmd)?;
+            let size = prep.size;
+            eprintln!(
+                "submit to {addr}: sweep on {} over {} ({} grid points × {} protocols) at \
+                 {size:?} scale ...",
+                prep.app.name(),
+                prep.axis_names.join(" × "),
+                prep.plan.combos().len(),
+                prep.plan.scenarios.len(),
+            );
+            let lowered = ExecutionPlan::lower_sweep(&prep.runner, &prep.plan);
+            let partial = serve::submit(addr, &lowered)?;
+            // One all-covering partial through the same merge gate the
+            // distributed path uses: any gap or lossy row fails loudly,
+            // and the merged report is byte-identical to --jobs 1.
+            let report = Report::merge(&[partial])?;
+            finish_axis_sweep(o, &prep, &report)?;
         }
         other => {
             return Err(format!("unknown command '{other}' (try `srsp help`)"));

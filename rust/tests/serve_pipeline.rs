@@ -1,0 +1,391 @@
+//! The sweep service end to end: `srsp serve` / `srsp work` /
+//! `srsp submit` over loopback TCP. The acceptance properties: a sweep
+//! submitted to a coordinator merges **byte-identical** to the same
+//! sweep run locally with `--jobs 1`; a worker killed mid-shard is
+//! survived by retry/re-dispatch with no gap; a warm-cache resubmit
+//! dispatches zero batches; a wire-version mismatch or malformed frame
+//! is refused loudly; and every service flag is scoped to its command
+//! through the declarative registry.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+
+use srsp::config::DeviceConfig;
+use srsp::coordinator::cache::CacheCounters;
+use srsp::coordinator::wire::Envelope;
+use srsp::coordinator::{axis, shard, ExecutionPlan, Runner, Seeding, SweepPlan};
+use srsp::harness::presets::WorkloadSize;
+use srsp::harness::report::{PartialReport, Report};
+use srsp::harness::runner::execute_shard;
+use srsp::workload::registry;
+
+fn srsp_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_srsp"))
+}
+
+/// A scratch directory unique to this test process + test name.
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("srsp-serve-{}-{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+fn tiny_runner() -> Runner {
+    Runner {
+        validate: true,
+        seeding: Seeding::PerCell(11),
+        ..Runner::new(
+            DeviceConfig {
+                num_cus: 4,
+                ..DeviceConfig::small()
+            },
+            WorkloadSize::Tiny,
+            1,
+        )
+    }
+}
+
+fn ratio_plan() -> SweepPlan {
+    SweepPlan::new(registry::STRESS, &[axis::REMOTE_RATIO])
+        .unwrap()
+        .with_points(axis::REMOTE_RATIO, vec![0.0, 0.5])
+        .unwrap()
+}
+
+/// The CLI flags that select the same sweep as [`ratio_plan`] under
+/// [`tiny_runner`]'s config — shared by the local `sweep` reference and
+/// the `submit` runs so byte-identity compares like with like.
+const SWEEP_FLAGS: &[&str] = &[
+    "--axis",
+    "remote-ratio",
+    "--app",
+    "stress",
+    "--size",
+    "tiny",
+    "--cus",
+    "4",
+    "--seed",
+    "11",
+    "--points",
+    "remote-ratio=0,0.5",
+];
+
+/// Run the reference sweep locally with `--jobs 1` and return the CSV
+/// report bytes.
+fn local_reference(dir: &Path) -> Vec<u8> {
+    let out = dir.join("local.csv");
+    let status = srsp_bin()
+        .arg("sweep")
+        .args(SWEEP_FLAGS)
+        .args(["--jobs", "1", "--report", "csv", "--out", out.to_str().unwrap()])
+        .status()
+        .expect("spawn local sweep");
+    assert!(status.success(), "local reference sweep failed");
+    std::fs::read(&out).expect("read local reference")
+}
+
+/// A running `srsp serve` child: its announced address, plus the stderr
+/// split into the lines consumed while finding the address and a
+/// channel carrying the rest at exit. Killed on drop so a failing test
+/// never leaves a listener behind.
+struct Serve {
+    child: Child,
+    addr: String,
+    early: String,
+    rest_rx: mpsc::Receiver<String>,
+}
+
+fn spawn_serve(extra: &[&str]) -> Serve {
+    let mut child = srsp_bin()
+        .args(["serve", "--listen", "127.0.0.1:0"])
+        .args(extra)
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn serve");
+    let mut reader = BufReader::new(child.stderr.take().expect("serve stderr piped"));
+    let mut early = String::new();
+    let addr = loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("read serve stderr");
+        assert!(n > 0, "serve exited before announcing its address:\n{early}");
+        early.push_str(&line);
+        if let Some(a) = line.trim_end().strip_prefix("serve: listening on ") {
+            break a.to_string();
+        }
+    };
+    let (tx, rest_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let mut rest = String::new();
+        let _ = reader.read_to_string(&mut rest);
+        let _ = tx.send(rest);
+    });
+    Serve {
+        child,
+        addr,
+        early,
+        rest_rx,
+    }
+}
+
+impl Serve {
+    /// Wait for the drain exit and return the full stderr transcript.
+    fn finish(mut self) -> String {
+        let status = self.child.wait().expect("wait serve");
+        let rest = self.rest_rx.recv().unwrap_or_default();
+        let all = format!("{}{rest}", self.early);
+        assert!(status.success(), "serve exited with {status}:\n{all}");
+        all
+    }
+}
+
+impl Drop for Serve {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_work(addr: &str, extra: &[&str]) -> Child {
+    srsp_bin()
+        .args(["work", "--connect", addr])
+        .args(extra)
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn work")
+}
+
+/// Library level: the wire envelopes carry the pipeline artifacts
+/// losslessly — a plan or partial that crosses a frame decodes equal.
+#[test]
+fn wire_envelopes_carry_pipeline_artifacts_losslessly() {
+    let lowered = ExecutionPlan::lower_sweep(&tiny_runner(), &ratio_plan());
+    let env = Envelope::Request {
+        plan: lowered.clone(),
+    };
+    match Envelope::from_json(&env.to_json()).unwrap() {
+        Envelope::Request { plan } => assert_eq!(plan, lowered),
+        other => panic!("decoded {other:?}"),
+    }
+    let spec = shard::partition(&lowered, 2).remove(0);
+    let partial = PartialReport::from_shard(&spec, &execute_shard(&spec));
+    let env = Envelope::Ack {
+        job: 7,
+        batch: 9,
+        partial: partial.clone(),
+    };
+    match Envelope::from_json(&env.to_json()).unwrap() {
+        Envelope::Ack {
+            job,
+            batch,
+            partial: p,
+        } => {
+            assert_eq!((job, batch), (7, 9));
+            assert_eq!(p.to_json(), partial.to_json(), "ack must stay lossless");
+        }
+        other => panic!("decoded {other:?}"),
+    }
+}
+
+/// Library level: the coordinator's final-assembly helper — a complete
+/// grid wrapped by `from_grid` merges byte-identical to the in-process
+/// report.
+#[test]
+fn from_grid_partial_merges_byte_identical() {
+    let runner = tiny_runner();
+    let plan = ratio_plan();
+    let local = Report::from_cells(&runner.run_sweep(&plan));
+    let lowered = ExecutionPlan::lower_sweep(&runner, &plan);
+    let spec = shard::partition(&lowered, 1).remove(0);
+    let p = PartialReport::from_shard(&spec, &execute_shard(&spec));
+    let grid = PartialReport::from_grid(p.rows, CacheCounters::default());
+    let merged = Report::merge(&[grid]).unwrap();
+    assert_eq!(merged.to_csv(), local.to_csv());
+    assert_eq!(merged.to_json(), local.to_json());
+}
+
+/// The tentpole acceptance gate: a sweep submitted through a coordinator
+/// with one worker emits a report byte-identical to `--jobs 1`, the
+/// coordinator drains after `--max-jobs`, and the worker exits cleanly.
+#[test]
+fn served_sweep_byte_identical_to_local_and_drains() {
+    let dir = scratch("identity");
+    let local = local_reference(&dir);
+    let serve = spawn_serve(&["--max-jobs", "1"]);
+    let mut worker = spawn_work(&serve.addr, &[]);
+    let served = dir.join("served.csv");
+    let out = srsp_bin()
+        .args(["submit", "--connect", &serve.addr])
+        .args(SWEEP_FLAGS)
+        .args(["--report", "csv", "--out", served.to_str().unwrap()])
+        .output()
+        .expect("spawn submit");
+    assert!(
+        out.status.success(),
+        "submit failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert_eq!(
+        std::fs::read(&served).unwrap(),
+        local,
+        "served report must be byte-identical to --jobs 1"
+    );
+    let stderr = serve.finish();
+    assert!(
+        stderr.contains("drained after 1 job(s)"),
+        "drain summary missing:\n{stderr}"
+    );
+    let ws = worker.wait().expect("wait worker");
+    assert!(ws.success(), "worker must exit cleanly on drain");
+}
+
+/// Fault tolerance: the only connected worker dies mid-shard (after
+/// simulating its first batch, before acking). The coordinator
+/// re-dispatches to a later-joining healthy worker and the job still
+/// completes byte-identical — no gap, no stale ack.
+#[test]
+fn worker_killed_mid_shard_completes_via_retry() {
+    let dir = scratch("retry");
+    let local = local_reference(&dir);
+    let serve = spawn_serve(&["--max-jobs", "1", "--shard-cells", "2"]);
+    // The doomed worker connects alone, so it is guaranteed the first
+    // dispatch; --die-after 0 kills it before its first ack.
+    let mut doomed = spawn_work(&serve.addr, &["--die-after", "0"]);
+    let served = dir.join("served.csv");
+    let mut submit = srsp_bin()
+        .args(["submit", "--connect", &serve.addr])
+        .args(SWEEP_FLAGS)
+        .args(["--report", "csv", "--out", served.to_str().unwrap()])
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn submit");
+    let doomed_status = doomed.wait().expect("wait doomed worker");
+    assert_eq!(
+        doomed_status.code(),
+        Some(3),
+        "the doomed worker must die mid-shard, not exit cleanly"
+    );
+    // Only now does a healthy worker join: every batch it executes is a
+    // re-dispatch or a never-dispatched remainder.
+    let mut healthy = spawn_work(&serve.addr, &[]);
+    let ss = submit.wait().expect("wait submit");
+    assert!(ss.success(), "submit must survive the worker death");
+    assert_eq!(
+        std::fs::read(&served).unwrap(),
+        local,
+        "retried report must be byte-identical to --jobs 1"
+    );
+    let stderr = serve.finish();
+    assert!(
+        stderr.contains("re-dispatching"),
+        "the retry must be visible in the coordinator log:\n{stderr}"
+    );
+    let hs = healthy.wait().expect("wait healthy worker");
+    assert!(hs.success());
+}
+
+/// The cache leg: with `--cache` on the coordinator, a resubmit of the
+/// same sweep is answered entirely from warm cells — zero batches
+/// dispatched — and both reports are byte-identical to the local run.
+#[test]
+fn warm_cache_resubmit_dispatches_zero_batches() {
+    let dir = scratch("warm");
+    let local = local_reference(&dir);
+    let cache = dir.join("cache");
+    let serve = spawn_serve(&["--max-jobs", "2", "--cache", cache.to_str().unwrap()]);
+    let mut worker = spawn_work(&serve.addr, &[]);
+    let submit = |out: &PathBuf| {
+        let o = srsp_bin()
+            .args(["submit", "--connect", &serve.addr])
+            .args(SWEEP_FLAGS)
+            .args(["--report", "csv", "--out", out.to_str().unwrap()])
+            .output()
+            .expect("spawn submit");
+        assert!(
+            o.status.success(),
+            "submit failed:\n{}",
+            String::from_utf8_lossy(&o.stderr)
+        );
+        String::from_utf8_lossy(&o.stderr).to_string()
+    };
+    let (cold_out, warm_out) = (dir.join("cold.csv"), dir.join("warm.csv"));
+    let cold_stderr = submit(&cold_out);
+    assert!(
+        !cold_stderr.contains(", 0 dispatched)"),
+        "the cold submit must dispatch batches:\n{cold_stderr}"
+    );
+    let warm_stderr = submit(&warm_out);
+    assert!(
+        warm_stderr.contains(", 0 dispatched)"),
+        "the warm resubmit must dispatch nothing:\n{warm_stderr}"
+    );
+    assert_eq!(std::fs::read(&cold_out).unwrap(), local, "cold serve vs local");
+    assert_eq!(std::fs::read(&warm_out).unwrap(), local, "warm serve vs local");
+    serve.finish();
+    let ws = worker.wait().expect("wait worker");
+    assert!(ws.success());
+}
+
+/// Protocol hygiene over a raw socket: a frame from a different wire
+/// generation, a non-JSON line, and an unknown hello role are each
+/// answered with a loud error envelope, never misread.
+#[test]
+fn wire_version_mismatch_and_malformed_frames_rejected_loudly() {
+    // No --max-jobs: this coordinator never drains; Drop kills it.
+    let serve = spawn_serve(&[]);
+    let probe = |frame: &str| -> String {
+        let mut s = TcpStream::connect(&serve.addr).expect("connect raw");
+        s.write_all(frame.as_bytes()).expect("write raw frame");
+        let mut line = String::new();
+        BufReader::new(s).read_line(&mut line).expect("read reply");
+        line
+    };
+    let reply = probe("{\"wire_version\":999,\"kind\":\"hello\",\"role\":\"work\"}\n");
+    assert!(reply.contains("\"kind\":\"error\""), "{reply}");
+    assert!(reply.contains("wire version"), "{reply}");
+    let reply = probe("this is not a frame\n");
+    assert!(reply.contains("\"kind\":\"error\""), "{reply}");
+    assert!(reply.contains("malformed wire frame"), "{reply}");
+    let reply = probe("{\"wire_version\":1,\"kind\":\"hello\",\"role\":\"warble\"}\n");
+    assert!(reply.contains("unknown hello role"), "{reply}");
+}
+
+/// The service flags are scoped to their commands through the
+/// declarative registry, and each service command names its required
+/// flag.
+#[test]
+fn cli_rejects_misplaced_service_flags() {
+    for (args, needle) in [
+        (vec!["run", "--listen", "x"], "--listen applies to"),
+        (vec!["sweep", "--connect", "x"], "--connect applies to"),
+        (vec!["serve", "--die-after", "0"], "--die-after applies to"),
+        (vec!["work", "--listen", "x"], "--listen applies to"),
+        (vec!["submit", "--deadline", "5"], "--deadline applies to"),
+        (vec!["run", "--retries", "1"], "--retries applies to"),
+        (vec!["run", "--max-jobs", "1"], "--max-jobs applies to"),
+        (vec!["submit", "--shard-cells", "4"], "--shard-cells applies to"),
+        (vec!["serve"], "needs --listen"),
+        (vec!["work"], "needs --connect"),
+        (vec!["submit"], "needs --connect"),
+        (
+            vec!["submit", "--connect", "x", "--jobs", "2"],
+            "--jobs does not apply",
+        ),
+        (
+            vec!["serve", "--listen", "x", "--trace", "t"],
+            "--trace applies to",
+        ),
+        (vec!["serve", "--listen", "x", "--deadline", "0"], "at least 1"),
+        (vec!["submit", "--connect", "x"], "registry-axis sweep"),
+    ] {
+        let out = srsp_bin().args(&args).output().expect("spawn srsp");
+        assert!(!out.status.success(), "{args:?} must be rejected");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            stderr.contains(needle),
+            "{args:?}: expected '{needle}' in:\n{stderr}"
+        );
+    }
+}
