@@ -13,10 +13,14 @@
 //! - **warm probe** — with `--cache`, every cell is looked up in the
 //!   PR 8 [`CacheStore`] *before* scheduling: a warm cell is answered
 //!   inside the coordinator and never reaches the dispatch queue;
-//! - **dispatch** — cold cells are chunked into synthetic single-shard
-//!   [`ShardSpec`] batches (`--shard-cells` apiece) and dealt to
-//!   whichever worker asks first; each dispatched batch is guarded by a
-//!   per-batch ack deadline (`--deadline`);
+//! - **dispatch** — cold cells are bin-packed into synthetic
+//!   single-shard [`ShardSpec`] batches by estimated cost (LPT: the
+//!   heaviest cell goes to the lightest batch with room, so one
+//!   64-CU cell does not ride with a queue of cheap ones) and dealt to
+//!   whichever worker asks first; batch capacity is `--shard-cells`,
+//!   or with `--shard-cells auto` is sized from the fleet's observed
+//!   per-batch ack times against the deadline; each dispatched batch
+//!   is guarded by a per-batch ack deadline (`--deadline`);
 //! - **retry** — a worker that dies, hangs past the deadline, or acks
 //!   garbage fails its batch: the batch is split in half and re-queued
 //!   until the per-batch attempt budget (`--retries` beyond the first
@@ -40,17 +44,31 @@ use std::collections::{BTreeMap, VecDeque};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::config::DeviceConfig;
 use crate::harness::report::{check_row_round_trip, PartialReport, ReportRow};
 use crate::harness::runner::{cell_layer_active, execute_shard, execute_shard_cached};
-use crate::workload::registry::WorkloadSize;
+use crate::workload::registry::{self, WorkloadSize};
 
 use super::cache::{self, CacheCounters, CacheStore};
 use super::shard::ShardSpec;
 use super::wire::{Envelope, Framed, RecvError};
 use super::{ExecutionPlan, PlannedCell};
+
+/// Batch-capacity policy for dispatch (`--shard-cells`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardCells {
+    /// At most this many cells per dispatched batch.
+    Fixed(usize),
+    /// Size batches from the fleet's observed ack throughput: target a
+    /// quarter of the ack deadline per batch, so a slowing fleet gets
+    /// smaller batches (fewer cells forfeited per deadline miss) and a
+    /// fast one amortizes dispatch overhead over more cells. Before the
+    /// first ack there is nothing to size against; batches start at the
+    /// fixed default of 4 cells.
+    Auto,
+}
 
 /// Coordinator configuration (the `srsp serve` flags, resolved).
 pub struct ServeOpts {
@@ -63,8 +81,8 @@ pub struct ServeOpts {
     pub deadline: Duration,
     /// Re-dispatch budget per batch beyond the first attempt.
     pub retries: u32,
-    /// Cells per dispatched batch.
-    pub shard_cells: usize,
+    /// Batch capacity policy.
+    pub shard_cells: ShardCells,
     /// Drain and exit after this many accepted jobs (`None`: serve
     /// forever).
     pub max_jobs: Option<u64>,
@@ -100,12 +118,15 @@ struct JobState {
     failed: Option<String>,
 }
 
-/// One dispatchable unit: a contiguous chunk of a job's cold cells.
+/// One dispatchable unit: a cost-balanced batch of a job's cold cells.
 struct Task {
     job: u64,
     batch: u64,
     /// Dispatch attempts already spent on these cells.
     attempts: u32,
+    /// Summed [`cell_cost`] of the cells — the denominator the observed
+    /// ack time is normalized by.
+    cost: u64,
     cells: Vec<(usize, PlannedCell)>,
 }
 
@@ -120,7 +141,74 @@ struct Shared {
     cells_executed: u64,
     cells_warm: u64,
     retries_total: u64,
+    /// Observed dispatch→ack wall time summed over delivered batches,
+    /// and the model cost those batches carried. Their ratio is the
+    /// fleet's nanos-per-cost-unit — what `--shard-cells auto` sizes
+    /// fresh batches against.
+    ack_nanos: u64,
+    ack_cost: u64,
     shutdown: bool,
+}
+
+/// Estimated relative cost of simulating one cell. Sim wall time scales
+/// with CU count (more agents per cycle), workload scale, and how much
+/// traffic the app's kernel generates per CU; the weights only need to
+/// rank cells well enough that LPT packing beats a blind chunk — they
+/// are never report data. Unknown (future) apps weigh as the heaviest.
+fn cell_cost(size: WorkloadSize, pc: &PlannedCell) -> u64 {
+    let app = match pc.cell.app {
+        registry::STRESS | registry::PRODCONS | registry::LOCK => 1,
+        registry::SSSP | registry::MIS | registry::BFS => 3,
+        _ => 4, // PRK and anything future: graph-sized frontier every iteration
+    };
+    let scale = match size {
+        WorkloadSize::Tiny => 1,
+        WorkloadSize::Paper => 64,
+    };
+    (pc.cell.num_cus as u64).max(1) * scale * app
+}
+
+/// LPT bin-pack `misses` into batches of at most `max_cells` cells:
+/// heaviest estimated cell first, into the lightest batch with room
+/// (ties on batch order). Within a batch cells are restored to
+/// ascending grid order — the shard convention workers and `deliver`
+/// both assume. A pure function of `(misses, size, max_cells)`, so a
+/// resubmitted plan packs identically.
+fn pack_batches(
+    misses: Vec<(usize, PlannedCell)>,
+    size: WorkloadSize,
+    max_cells: usize,
+) -> Vec<(u64, Vec<(usize, PlannedCell)>)> {
+    let max_cells = max_cells.max(1);
+    let bins = misses.len().div_ceil(max_cells).max(1);
+    let costs: Vec<u64> = misses.iter().map(|(_, pc)| cell_cost(size, pc)).collect();
+    let mut order: Vec<usize> = (0..misses.len()).collect();
+    order.sort_by_key(|&k| (std::cmp::Reverse(costs[k]), misses[k].0));
+    let mut packed: Vec<(u64, Vec<usize>)> = vec![(0, Vec::new()); bins];
+    for k in order {
+        let mut best: Option<usize> = None;
+        for (i, (load, members)) in packed.iter().enumerate() {
+            if members.len() < max_cells && best.map_or(true, |b| *load < packed[b].0) {
+                best = Some(i);
+            }
+        }
+        let b = best.expect("bin count times capacity covers every cell");
+        packed[b].0 += costs[k];
+        packed[b].1.push(k);
+    }
+    let mut misses: Vec<Option<(usize, PlannedCell)>> = misses.into_iter().map(Some).collect();
+    packed
+        .into_iter()
+        .filter(|(_, members)| !members.is_empty())
+        .map(|(load, mut members)| {
+            members.sort_unstable();
+            let cells = members
+                .iter()
+                .map(|&k| misses[k].take().expect("bins are disjoint"))
+                .collect();
+            (load, cells)
+        })
+        .collect()
 }
 
 struct Coord {
@@ -280,13 +368,15 @@ fn worker_loop(framed: &mut Framed, coord: &Coord, peer: &str) {
             (task, spec)
         };
         eprintln!(
-            "serve: job {} batch {} → {peer}: {} cell(s) (attempt {} of {})",
+            "serve: job {} batch {} → {peer}: {} cell(s), cost {} (attempt {} of {})",
             task.job,
             task.batch,
             task.cells.len(),
+            task.cost,
             task.attempts + 1,
             coord.opts.retries + 1
         );
+        let dispatched_at = Instant::now();
         if framed
             .send(&Envelope::Batch { job: task.job, batch: task.batch, spec })
             .is_err()
@@ -310,6 +400,7 @@ fn worker_loop(framed: &mut Framed, coord: &Coord, peer: &str) {
                     fail_task(coord, task, &msg);
                     return;
                 }
+                record_ack(coord, &task, dispatched_at.elapsed());
             }
             Ok(Envelope::Error { msg }) => {
                 fail_task(coord, task, &format!("worker {peer} reported: {msg}"));
@@ -389,6 +480,39 @@ fn deliver(coord: &Coord, task: &Task, partial: &PartialReport) -> Result<(), St
     Ok(())
 }
 
+/// Feed one delivered batch's observed dispatch→ack wall time into the
+/// throughput estimate `--shard-cells auto` sizes against.
+fn record_ack(coord: &Coord, task: &Task, elapsed: Duration) {
+    let mut s = coord.shared.lock().unwrap();
+    s.ack_nanos += (elapsed.as_nanos() as u64).max(1);
+    s.ack_cost += task.cost.max(1);
+}
+
+/// Resolve `--shard-cells auto` for one job: from the fleet's observed
+/// nanos-per-cost-unit, pick the cell count whose mean-cost batch runs
+/// an estimated quarter of the ack deadline — comfortably inside it,
+/// with headroom for stragglers and cost-model error. Clamped to
+/// `[1, 64]`; before any batch has acked it falls back to the fixed
+/// default of 4.
+fn auto_batch_cells(
+    s: &Shared,
+    deadline: Duration,
+    misses: &[(usize, PlannedCell)],
+    size: WorkloadSize,
+) -> usize {
+    const DEFAULT: usize = 4;
+    const MAX: usize = 64;
+    if s.ack_cost == 0 || misses.is_empty() {
+        return DEFAULT;
+    }
+    let mean_cost = misses.iter().map(|(_, pc)| cell_cost(size, pc)).sum::<u64>() as f64
+        / misses.len() as f64;
+    let nanos_per_cost = s.ack_nanos as f64 / s.ack_cost as f64;
+    let target = deadline.as_nanos() as f64 / 4.0;
+    let cells = target / (nanos_per_cost * mean_cost.max(1.0));
+    (cells as usize).clamp(1, MAX)
+}
+
 /// Apply the retry policy to a failed dispatch: within budget, split a
 /// multi-cell batch in half (a poisonous cell isolates itself) and
 /// re-queue at the front under fresh batch ids; over budget, fail the
@@ -419,14 +543,15 @@ fn fail_task(coord: &Coord, task: Task, why: &str) {
     } else {
         vec![task.cells]
     };
-    let mut ids = Vec::with_capacity(halves.len());
-    {
+    let (ids, size) = {
         let job = s.jobs.get_mut(&task.job).expect("checked above");
+        let mut ids = Vec::with_capacity(halves.len());
         for _ in &halves {
             job.next_batch += 1;
             ids.push(job.next_batch);
         }
-    }
+        (ids, job.shape.size)
+    };
     eprintln!(
         "serve: job {} batch {}: {why}; re-dispatching as {} batch(es) (attempt {} of {})",
         task.job,
@@ -437,7 +562,8 @@ fn fail_task(coord: &Coord, task: Task, why: &str) {
     );
     s.retries_total += 1;
     for (cells, batch) in halves.into_iter().zip(ids) {
-        s.queue.push_front(Task { job: task.job, batch, attempts, cells });
+        let cost = cells.iter().map(|(_, pc)| cell_cost(size, pc)).sum();
+        s.queue.push_front(Task { job: task.job, batch, attempts, cost, cells });
     }
     coord.work_ready.notify_all();
 }
@@ -480,8 +606,9 @@ fn submit_loop(framed: &mut Framed, coord: &Coord, peer: &str) -> Result<(), Str
     }
 }
 
-/// Accept a lowered plan as a job: probe the cache for warm cells, chunk
-/// the misses into tasks, enqueue them, wake the fleet.
+/// Accept a lowered plan as a job: probe the cache for warm cells,
+/// LPT-pack the misses into cost-balanced tasks, enqueue them, wake the
+/// fleet.
 fn create_job(coord: &Coord, plan: ExecutionPlan) -> Result<u64, String> {
     if plan.cells.is_empty() {
         return Err("the submitted plan contains no cells".into());
@@ -514,6 +641,10 @@ fn create_job(coord: &Coord, plan: ExecutionPlan) -> Result<u64, String> {
     s.next_job += 1;
     let id = s.next_job;
     s.cells_warm += warm as u64;
+    let max_cells = match coord.opts.shard_cells {
+        ShardCells::Fixed(n) => n.max(1),
+        ShardCells::Auto => auto_batch_cells(&s, coord.opts.deadline, &misses, plan.size),
+    };
     let mut job = JobState {
         shape: JobShape { cfg: plan.cfg, size: plan.size, validate: plan.validate },
         total,
@@ -524,18 +655,16 @@ fn create_job(coord: &Coord, plan: ExecutionPlan) -> Result<u64, String> {
         next_batch: 0,
         failed: None,
     };
+    let batches = pack_batches(misses, plan.size, max_cells);
     eprintln!(
-        "serve: job {id}: {total} cell(s) ({warm} warm, {} to dispatch)",
-        misses.len()
+        "serve: job {id}: {total} cell(s) ({warm} warm, {} to dispatch in {} batch(es), \
+         {max_cells} cell(s)/batch cap)",
+        job.dispatched,
+        batches.len()
     );
-    for chunk in misses.chunks(coord.opts.shard_cells.max(1)) {
+    for (cost, cells) in batches {
         job.next_batch += 1;
-        s.queue.push_back(Task {
-            job: id,
-            batch: job.next_batch,
-            attempts: 0,
-            cells: chunk.to_vec(),
-        });
+        s.queue.push_back(Task { job: id, batch: job.next_batch, attempts: 0, cost, cells });
     }
     s.jobs.insert(id, job);
     coord.work_ready.notify_all();
@@ -729,5 +858,96 @@ fn connect(addr: &str, role: &str) -> Result<Framed, String> {
         }
         Err(RecvError::TimedOut) => Err("the handshake timed out".into()),
         Err(RecvError::Fatal(e)) => Err(e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::coordinator::Cell;
+
+    fn pc(index: usize, num_cus: u32) -> (usize, PlannedCell) {
+        (
+            index,
+            PlannedCell {
+                cell: Cell { app: registry::STRESS, scenario: Scenario::SRSP, num_cus },
+                seed: 1,
+                params: vec![],
+                proto_params: vec![],
+                axis_values: String::new(),
+            },
+        )
+    }
+
+    #[test]
+    fn cost_model_scales_with_cus_size_and_app() {
+        let (_, light) = pc(0, 2);
+        let (_, heavy) = pc(1, 64);
+        assert_eq!(cell_cost(WorkloadSize::Tiny, &light), 2);
+        assert_eq!(cell_cost(WorkloadSize::Tiny, &heavy), 64);
+        assert_eq!(cell_cost(WorkloadSize::Paper, &light), 2 * 64);
+        let mut graph = heavy.clone();
+        graph.cell.app = registry::PRK;
+        assert!(cell_cost(WorkloadSize::Tiny, &graph) > cell_cost(WorkloadSize::Tiny, &heavy));
+    }
+
+    #[test]
+    fn lpt_packing_splits_heavy_cells_across_batches() {
+        // Two 64-CU cells among cheap ones: a blind 3-cell chunking puts
+        // both heavies in one batch; LPT lands one in each.
+        let misses = vec![pc(0, 64), pc(1, 2), pc(2, 2), pc(3, 2), pc(4, 2), pc(5, 64)];
+        let batches = pack_batches(misses.clone(), WorkloadSize::Tiny, 3);
+        assert_eq!(batches.len(), 2);
+        for (cost, cells) in &batches {
+            assert!(cells.len() <= 3);
+            assert_eq!(
+                cells.iter().filter(|(_, p)| p.cell.num_cus == 64).count(),
+                1,
+                "each batch carries exactly one heavy cell"
+            );
+            let want: u64 = cells.iter().map(|(_, p)| cell_cost(WorkloadSize::Tiny, p)).sum();
+            assert_eq!(*cost, want);
+            // Within a batch, cells stay in ascending grid order.
+            let idx: Vec<usize> = cells.iter().map(|(i, _)| *i).collect();
+            let mut sorted = idx.clone();
+            sorted.sort_unstable();
+            assert_eq!(idx, sorted);
+        }
+        // Complete and disjoint over the input.
+        let mut seen: Vec<usize> =
+            batches.iter().flat_map(|(_, c)| c.iter().map(|(i, _)| *i)).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..6).collect::<Vec<_>>());
+        // Pure function of the input: packing again packs identically.
+        let again = pack_batches(misses, WorkloadSize::Tiny, 3);
+        for ((ca, ba), (cb, bb)) in batches.iter().zip(&again) {
+            assert_eq!(ca, cb);
+            assert_eq!(ba, bb);
+        }
+    }
+
+    #[test]
+    fn auto_sizing_tracks_observed_throughput() {
+        let misses = vec![pc(0, 10), pc(1, 10)];
+        let deadline = Duration::from_secs(40); // target: 10 s per batch
+        // No acks yet: the fixed default.
+        let s = Shared::default();
+        assert_eq!(auto_batch_cells(&s, deadline, &misses, WorkloadSize::Tiny), 4);
+        // Fast fleet (1 ms per cost unit): a mean-cost-10 cell runs 10 ms,
+        // so ~1000 cells fit the target -- clamped to the 64 cap.
+        let mut s = Shared::default();
+        s.ack_nanos = 1_000_000_000;
+        s.ack_cost = 1_000;
+        assert_eq!(auto_batch_cells(&s, deadline, &misses, WorkloadSize::Tiny), 64);
+        // Slow fleet (10 s per cost unit): even one cell overshoots; the
+        // floor keeps batches dispatchable.
+        s.ack_nanos = 10_000_000_000;
+        s.ack_cost = 1;
+        assert_eq!(auto_batch_cells(&s, deadline, &misses, WorkloadSize::Tiny), 1);
+        // Mid fleet: 50 ms per cost unit, 0.5 s per mean cell -> 20 cells.
+        s.ack_nanos = 50_000_000;
+        s.ack_cost = 1;
+        assert_eq!(auto_batch_cells(&s, deadline, &misses, WorkloadSize::Tiny), 20);
     }
 }

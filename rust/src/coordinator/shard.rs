@@ -1,9 +1,11 @@
 //! Stage 2 of the distributed pipeline: partition an [`ExecutionPlan`]
 //! into deterministic, self-contained [`ShardSpec`]s.
 //!
-//! A shard is the unit of executor placement: in-process mode runs one
-//! OS thread per shard, subprocess mode (`sweep --workers N`) writes
-//! each shard to a file and spawns `srsp worker --shard <file>` on it.
+//! A shard is the unit of *subprocess* executor placement: `sweep
+//! --workers N` writes each shard to a file and spawns `srsp worker
+//! --shard <file>` on it. (In-process `--jobs N` instead feeds one
+//! all-cells shard through a shared work-stealing queue — see
+//! `harness::runner::execute_plan`.)
 //! Partitioning deals cells out **boustrophedon** (rows of N cells,
 //! alternating left-to-right and right-to-left): adjacent grid cells —
 //! the scenarios of one sweep combo, or one app's cells of a coverage

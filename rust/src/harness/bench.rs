@@ -142,6 +142,16 @@ impl BenchReport {
         instr as f64 / secs / 1e6
     }
 
+    /// Host-side cost attribution summed over every measured cell
+    /// (including the scheduler counters a scheduled run contributes).
+    pub fn total_perf(&self) -> PerfStats {
+        let mut perf = PerfStats::default();
+        for c in &self.cells {
+            perf.merge(&c.perf);
+        }
+        perf
+    }
+
     /// Median-wall speedup of the decoded path over the reference path
     /// (`None` unless both paths were measured).
     pub fn speedup_vs_reference(&self) -> Option<f64> {
@@ -203,6 +213,18 @@ impl BenchReport {
         if let Some(s) = self.speedup_vs_reference() {
             totals.push(("speedup_vs_reference".into(), Json::f64(s)));
         }
+        // Scheduler counters summed over the measured cells. Bench cells
+        // run serially, so these stay zero unless a scheduled run's
+        // PerfStats flowed into the report; utilization is emitted only
+        // when some scheduled section was actually measured (schema-
+        // compatible addition — absent means "nothing scheduled").
+        let perf = self.total_perf();
+        totals.push(("sched_steals".into(), Json::u64(perf.sched_steals)));
+        totals.push(("sched_busy_nanos".into(), Json::u64(perf.sched_busy_nanos)));
+        totals.push(("sched_idle_nanos".into(), Json::u64(perf.sched_idle_nanos)));
+        if let Some(u) = perf.utilization() {
+            totals.push(("utilization".into(), Json::f64(u)));
+        }
 
         let root = Json::Obj(vec![
             ("schema".into(), Json::u32(self.schema)),
@@ -235,6 +257,13 @@ impl BenchReport {
         }
         if let Some(s) = self.speedup_vs_reference() {
             out.push_str(&format!("decoded path speedup vs reference: {s:.2}x\n"));
+        }
+        let perf = self.total_perf();
+        if let Some(u) = perf.utilization() {
+            out.push_str(&format!(
+                "scheduler: steals {}  idle {}ns  utilization {u:.3}\n",
+                perf.sched_steals, perf.sched_idle_nanos
+            ));
         }
         out
     }
@@ -396,6 +425,11 @@ mod tests {
         assert!(cells[0].get("cells_per_sec").unwrap().as_f64().unwrap() > 0.0);
         let totals = parsed.get("totals").unwrap();
         assert!(totals.get("cells_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        // Scheduler counters ride along (zero for a serial bench), and
+        // utilization stays absent until a scheduled section is measured.
+        assert_eq!(totals.get("sched_steals").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(totals.get("sched_idle_nanos").unwrap().as_u64().unwrap(), 0);
+        assert!(totals.get("utilization").is_err());
     }
 
     #[test]

@@ -14,11 +14,14 @@
 //! [partitioned](crate::coordinator::shard::partition) into
 //! deterministic [`ShardSpec`]s, [`execute_shard`] runs one shard
 //! serially in the calling context, and results reassemble by global
-//! grid index. `--jobs N` runs the shards on N in-process threads;
-//! `srsp worker --shard <file>` runs exactly one shard in a subprocess
-//! and emits a [`PartialReport`] — the two executors are the same code
-//! over the same shards, which is what makes a `--workers` merged report
-//! byte-identical to the `--jobs` run.
+//! grid index. `--jobs N` runs the plan's cells on N in-process threads
+//! pulling from one shared work-stealing queue (cell cost varies by an
+//! order of magnitude across `cu-count`/size axes, so a static deal
+//! leaves threads idle behind the slowest shard); `srsp worker --shard
+//! <file>` runs exactly one shard in a subprocess and emits a
+//! [`PartialReport`]. Both executors run the same per-cell code and
+//! reassemble by the global grid index each result carries, which is
+//! what makes any `--jobs` / `--workers` split byte-identical.
 //!
 //! Workloads are resolved through the [`crate::workload::registry`] and
 //! sweep dimensions through the [`crate::coordinator::axis`] registry:
@@ -154,9 +157,9 @@ impl Runner {
             .expect("one planned cell yields one result")
     }
 
-    /// Run `cells` across `self.jobs` shard-executor threads. Returns
-    /// results in `cells` order regardless of scheduling, so any jobs
-    /// count yields byte-identical output.
+    /// Run `cells` across `self.jobs` work-stealing executor threads.
+    /// Returns results in `cells` order regardless of scheduling, so any
+    /// jobs count yields byte-identical output.
     pub fn run_cells(&self, cells: &[Cell]) -> Vec<CellResult> {
         execute_plan(&ExecutionPlan::lower_cells(self, cells), self.jobs)
     }
@@ -276,58 +279,40 @@ fn run_planned_cell(spec: &ShardSpec, pc: &PlannedCell, preset: &WorkloadPreset)
     }
 }
 
-/// The in-process executor: partition `plan` into `jobs` shards, run
-/// each on its own OS thread through [`execute_shard`], reassemble by
-/// global grid index. One shard stays on the calling thread (serial
-/// semantics, undisturbed panic messages). The shards are the *same*
-/// [`ShardSpec`]s `--workers` would hand to subprocesses — `--jobs` is
-/// just their in-process executor.
+/// The in-process executor: run the plan's cells across `jobs` worker
+/// threads pulling from one shared work-stealing queue (an atomic
+/// next-index over the plan), reassembling by global grid index. With
+/// one job the cells run serially on the calling thread (undisturbed
+/// panic messages). Scheduling never touches results — every cell
+/// carries its grid index and lands in its slot regardless of which
+/// thread ran it — so any jobs count is byte-identical to `--jobs 1`.
 pub fn execute_plan(plan: &ExecutionPlan, jobs: usize) -> Vec<CellResult> {
     execute_plan_with_store(plan, jobs, None)
 }
 
 /// [`execute_plan`] with an optional result-cache store backing the
 /// preset layer. All store access happens on the calling thread (preset
-/// generation up front, before the shard threads spawn).
+/// generation up front, before the worker threads spawn).
 fn execute_plan_with_store(
     plan: &ExecutionPlan,
     jobs: usize,
     store: Option<&CacheStore>,
 ) -> Vec<CellResult> {
-    let shards = shard::partition(plan, jobs);
+    // One all-cells spec carries the run shape (device config, size,
+    // validation) the cell executor needs; the queue deals its cells
+    // out dynamically instead of pre-splitting them.
+    let spec = shard::partition(plan, 1)
+        .pop()
+        .expect("partition yields at least one shard");
     // Generate each distinct input once for the whole run, up front;
-    // the shard threads share the cache read-only. (Subprocess workers
+    // the worker threads share the cache read-only. (Subprocess workers
     // regenerate their shard's inputs instead — no shared memory.)
     let presets = build_presets(plan.size, plan.cells.iter(), store);
-    let indexed: Vec<(usize, CellResult)> = if shards.len() == 1 {
-        execute_shard_with(&shards[0], &presets)
+    let jobs = jobs.clamp(1, plan.cells.len().max(1));
+    let indexed: Vec<(usize, CellResult)> = if jobs == 1 {
+        execute_shard_with(&spec, &presets)
     } else {
-        thread::scope(|scope| {
-            let presets = &presets;
-            let handles: Vec<_> = shards
-                .iter()
-                .map(|s| {
-                    // Each shard thread returns its results plus its
-                    // thread-local perf counters; the caller folds them
-                    // into its own collector so `--jobs N` loses no
-                    // wall-clock attribution.
-                    scope.spawn(move || (execute_shard_with(s, presets), perfstats::take_thread()))
-                })
-                .collect();
-            let mut all = Vec::with_capacity(plan.cells.len());
-            for h in handles {
-                match h.join() {
-                    Ok((mut part, perf)) => {
-                        perfstats::add_thread(&perf);
-                        all.append(&mut part);
-                    }
-                    // Re-raise the shard's own panic payload (e.g. a bad
-                    // --param key) instead of a generic join error.
-                    Err(e) => std::panic::resume_unwind(e),
-                }
-            }
-            all
-        })
+        execute_stealing(&spec, jobs, &presets)
     };
     let mut slots: Vec<Option<CellResult>> = plan.cells.iter().map(|_| None).collect();
     for (i, r) in indexed {
@@ -336,8 +321,77 @@ fn execute_plan_with_store(
     }
     slots
         .into_iter()
-        .map(|s| s.expect("a shard exited without covering its cells"))
+        .map(|s| s.expect("an executor exited without covering its cells"))
         .collect()
+}
+
+/// The work-stealing parallel section: `jobs` threads pull cells off a
+/// shared atomic cursor in plan order until it runs dry. A pull whose
+/// queue position falls outside the thread's static share of the plan
+/// (the balanced contiguous deal `position * jobs / cells`) counts as a
+/// steal — the load imbalance the shared queue actually corrected
+/// relative to a static split. Per-thread busy/idle wall time and the
+/// steal count feed the perfstats collector (stderr one-liners and the
+/// bench artifact); none of it is report data.
+fn execute_stealing(
+    spec: &ShardSpec,
+    jobs: usize,
+    presets: &PresetCache,
+) -> Vec<(usize, CellResult)> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Instant;
+
+    let n = spec.cells.len();
+    let cursor = AtomicUsize::new(0);
+    let mut all = Vec::with_capacity(n);
+    let (mut steals, mut busy, mut idle) = (0u64, 0u64, 0u64);
+    thread::scope(|scope| {
+        let cursor = &cursor;
+        let handles: Vec<_> = (0..jobs)
+            .map(|t| {
+                scope.spawn(move || {
+                    let section = Instant::now();
+                    let mut part = Vec::new();
+                    let (mut steals, mut busy) = (0u64, 0u64);
+                    loop {
+                        let k = cursor.fetch_add(1, Ordering::Relaxed);
+                        if k >= n {
+                            break;
+                        }
+                        if k * jobs / n != t {
+                            steals += 1;
+                        }
+                        let (index, pc) = &spec.cells[k];
+                        let t0 = Instant::now();
+                        part.push((*index, run_planned_cell(spec, pc, &presets[&preset_key(pc)])));
+                        busy += t0.elapsed().as_nanos() as u64;
+                    }
+                    let wall = section.elapsed().as_nanos() as u64;
+                    // Each worker returns its results plus its
+                    // thread-local perf counters; the caller folds them
+                    // into its own collector so `--jobs N` loses no
+                    // wall-clock attribution.
+                    (part, perfstats::take_thread(), steals, busy, wall.saturating_sub(busy))
+                })
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok((mut part, perf, s, b, i)) => {
+                    perfstats::add_thread(&perf);
+                    steals += s;
+                    busy += b;
+                    idle += i;
+                    all.append(&mut part);
+                }
+                // Re-raise the worker's own panic payload (e.g. a bad
+                // --param key) instead of a generic join error.
+                Err(e) => std::panic::resume_unwind(e),
+            }
+        }
+    });
+    perfstats::add_sched(steals, busy, idle, jobs as u64);
+    all
 }
 
 /// One cell of a cache-aware execution: either freshly simulated this

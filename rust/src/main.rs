@@ -11,8 +11,9 @@
 //! matrix-shaped (figures, sweeps, validation, the CI smoke gate) flows
 //! through one plan → shard → execute → merge pipeline
 //! ([`srsp::coordinator`] + [`srsp::harness::runner`]): `--jobs N` runs
-//! the shards on in-process threads, `sweep --workers N` runs them as
-//! spawned `srsp worker` subprocesses — and the merged report is
+//! the plan as a shared work-stealing cell queue on in-process
+//! threads, `sweep --workers N` runs its shards as spawned
+//! `srsp worker` subprocesses — and the merged report is
 //! byte-identical either way. No external CLI crate is available
 //! offline; parsing is hand-rolled.
 
@@ -177,8 +178,9 @@ OPTIONS:
                                 (default 2)
     --max-jobs <n>              serve: drain and exit after <n> accepted
                                 jobs (default: serve until killed)
-    --shard-cells <n>           serve: grid cells per dispatched batch
-                                (default 4)
+    --shard-cells <n|auto>      serve: grid cells per dispatched batch
+                                (default 4); auto sizes batches from the
+                                fleet's observed ack times
     --die-after <n>             work: exit abruptly instead of acking batch
                                 <n>+1 (deterministic fault injection for
                                 the retry path; exit status 3)
@@ -253,8 +255,9 @@ struct Opts {
     retries: Option<u32>,
     /// Drain after this many accepted jobs (`--max-jobs`, serve only).
     max_jobs: Option<u64>,
-    /// Grid cells per dispatched batch (`--shard-cells`, serve only).
-    shard_cells: Option<usize>,
+    /// Batch capacity for dispatch (`--shard-cells`, serve only): a
+    /// fixed cell count, or `auto` to size from observed ack times.
+    shard_cells: Option<serve::ShardCells>,
     /// Fault injection: die instead of acking batch n+1 (`--die-after`,
     /// work only).
     die_after: Option<u64>,
@@ -518,11 +521,16 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
                 o.max_jobs = Some(n);
             }
             "--shard-cells" => {
-                let n: usize = val()?.parse().map_err(|e| format!("--shard-cells: {e}"))?;
-                if n == 0 {
-                    return Err("--shard-cells needs at least 1".into());
-                }
-                o.shard_cells = Some(n);
+                let v = val()?;
+                o.shard_cells = Some(if v == "auto" {
+                    serve::ShardCells::Auto
+                } else {
+                    let n: usize = v.parse().map_err(|e| format!("--shard-cells: {e}"))?;
+                    if n == 0 {
+                        return Err("--shard-cells needs at least 1".into());
+                    }
+                    serve::ShardCells::Fixed(n)
+                });
             }
             "--die-after" => {
                 o.die_after = Some(val()?.parse().map_err(|e| format!("--die-after: {e}"))?)
@@ -1131,9 +1139,16 @@ fn emit_trace(results: &[CellResult], o: &Opts) -> Result<(), String> {
 /// Always on stderr — it is wall-clock attribution, never report data.
 fn print_perfstats() {
     let p = perfstats::take_thread();
+    let sched = match p.utilization() {
+        Some(u) => format!(
+            " sched_steals={} sched_idle_nanos={} utilization={u:.3}",
+            p.sched_steals, p.sched_idle_nanos
+        ),
+        None => String::new(),
+    };
     eprintln!(
         "perfstats: launches={} events={} launch_nanos={} engine_nanos={} sim_nanos={} \
-         cache_hits={} cache_misses={} preset_reuses={}",
+         cache_hits={} cache_misses={} preset_reuses={}{sched}",
         p.launches,
         p.events,
         p.launch_nanos,
@@ -2048,7 +2063,7 @@ fn dispatch(cmd: &str, o: &Opts) -> Result<(), String> {
                 listen,
                 deadline: Duration::from_secs(o.deadline.unwrap_or(60)),
                 retries: o.retries.unwrap_or(2),
-                shard_cells: o.shard_cells.unwrap_or(4),
+                shard_cells: o.shard_cells.unwrap_or(serve::ShardCells::Fixed(4)),
                 max_jobs: o.max_jobs,
                 cache_dir: o.cache_dir().map(|d| d.to_string()),
             })?;

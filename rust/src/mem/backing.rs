@@ -1,13 +1,16 @@
 //! The flat backing store (system memory image) and a bump allocator for
 //! laying out workload data structures in the simulated address space.
 
-use super::{byte_mask, line_of, offset_in_line, Addr, LineAddr, LINE};
+use super::{
+    line_of, line_read, line_write, merge_masked, offset_in_line, Addr, LineAddr, LineData, LINE,
+    ZERO_LINE,
+};
 use std::collections::HashMap;
 
 /// Ground-truth memory below the L2. Sparse: untouched lines read as zero.
 #[derive(Debug, Default, Clone)]
 pub struct BackingStore {
-    lines: HashMap<LineAddr, [u8; 64]>,
+    lines: HashMap<LineAddr, LineData>,
 }
 
 impl BackingStore {
@@ -16,45 +19,36 @@ impl BackingStore {
     }
 
     /// Read a full line (zeros if never written).
-    pub fn read_line(&self, line: LineAddr) -> [u8; 64] {
-        self.lines.get(&line).copied().unwrap_or([0u8; 64])
+    pub fn read_line(&self, line: LineAddr) -> LineData {
+        self.lines.get(&line).copied().unwrap_or(ZERO_LINE)
     }
 
     /// Write the bytes selected by `mask` into a line.
-    pub fn write_line_masked(&mut self, line: LineAddr, mask: u64, data: &[u8; 64]) {
+    pub fn write_line_masked(&mut self, line: LineAddr, mask: u64, data: &LineData) {
         if mask == 0 {
             return;
         }
-        let entry = self.lines.entry(line).or_insert([0u8; 64]);
-        for i in 0..64 {
-            if mask & (1 << i) != 0 {
-                entry[i] = data[i];
-            }
-        }
+        let entry = self.lines.entry(line).or_insert(ZERO_LINE);
+        merge_masked(entry, data, mask);
     }
 
     /// Direct (host) read of `len <= 8` bytes at `addr`; must not straddle
     /// a line. Used by host drivers and oracles, never by simulated code.
     pub fn read_bytes(&self, addr: Addr, len: usize) -> u64 {
-        let line = self.read_line(line_of(addr));
         let off = offset_in_line(addr);
         debug_assert!(off + len <= 64);
-        let mut v = 0u64;
-        for i in 0..len {
-            v |= (line[off + i] as u64) << (8 * i);
+        match self.lines.get(&line_of(addr)) {
+            Some(line) => line_read(line, off, len),
+            None => 0,
         }
-        v
     }
 
     /// Direct (host) write of `len <= 8` bytes at `addr`.
     pub fn write_bytes(&mut self, addr: Addr, len: usize, value: u64) {
         let off = offset_in_line(addr);
         debug_assert!(off + len <= 64);
-        let mut data = [0u8; 64];
-        for i in 0..len {
-            data[off + i] = (value >> (8 * i)) as u8;
-        }
-        self.write_line_masked(line_of(addr), byte_mask(off, len), &data);
+        let entry = self.lines.entry(line_of(addr)).or_insert(ZERO_LINE);
+        line_write(entry, off, len, value);
     }
 
     pub fn read_u32(&self, addr: Addr) -> u32 {
@@ -168,12 +162,12 @@ mod tests {
     #[test]
     fn masked_line_write() {
         let mut m = BackingStore::new();
-        let mut data = [0u8; 64];
-        data[3] = 0xAB;
+        let mut data = ZERO_LINE;
+        line_write(&mut data, 3, 1, 0xAB);
         m.write_line_masked(5, 1 << 3, &data);
         let line = m.read_line(5);
-        assert_eq!(line[3], 0xAB);
-        assert_eq!(line[2], 0);
+        assert_eq!(line_read(&line, 3, 1), 0xAB);
+        assert_eq!(line_read(&line, 2, 1), 0);
     }
 
     #[test]

@@ -14,9 +14,11 @@
 use std::cell::Cell;
 
 use super::sfifo::{Sfifo, SfifoEntry};
-use super::{LineAddr, Ticket};
+use super::{line_read, line_write, merge_masked, LineAddr, LineData, Ticket, ZERO_LINE};
 
-/// One cache line: per-byte valid and dirty masks plus data.
+/// One cache line: per-byte valid and dirty masks plus data. The data
+/// lives as eight 64-bit words ([`LineData`]) so masked merges are
+/// word-wise `(old & !m) | (new & m)` instead of 64 per-byte branches.
 #[derive(Debug, Clone)]
 pub struct Line {
     pub addr: LineAddr,
@@ -25,7 +27,7 @@ pub struct Line {
     /// Bit i set ⇒ byte i modified locally, not yet written back.
     /// Invariant: `dirty ⊆ valid`.
     pub dirty: u64,
-    pub data: [u8; 64],
+    pub data: LineData,
 }
 
 /// Dirty bytes leaving a cache, headed to the next level.
@@ -33,7 +35,7 @@ pub struct Line {
 pub struct Writeback {
     pub line: LineAddr,
     pub mask: u64,
-    pub data: [u8; 64],
+    pub data: LineData,
 }
 
 /// Result of one drain step (sFIFO pop).
@@ -175,10 +177,7 @@ impl WcCache {
         if l.valid & mask != mask {
             return None;
         }
-        let mut v = 0u64;
-        for k in 0..len {
-            v |= (l.data[off + k] as u64) << (8 * k);
-        }
+        let v = line_read(&l.data, off, len);
         self.touch(i);
         Some(v)
     }
@@ -200,11 +199,7 @@ impl WcCache {
         let i = self.find(line).expect("read_bytes: line not present");
         self.touch(i);
         let l = self.slots[i].as_ref().unwrap();
-        let mut v = 0u64;
-        for k in 0..len {
-            v |= (l.data[off + k] as u64) << (8 * k);
-        }
-        v
+        line_read(&l.data, off, len)
     }
 
     /// Store `len <= 8` bytes at in-line offset `off`. Write-combining,
@@ -216,17 +211,15 @@ impl WcCache {
         len: usize,
         value: u64,
     ) -> WriteOutcome {
-        let mut data = [0u8; 64];
-        for k in 0..len {
-            data[off + k] = (value >> (8 * k)) as u8;
-        }
+        let mut data = ZERO_LINE;
+        line_write(&mut data, off, len, value);
         self.write_masked(line, super::byte_mask(off, len), &data)
     }
 
     /// Store the bytes selected by `mask` (general form, used for
     /// writebacks arriving from an upper level). Write-combining,
     /// no-allocate.
-    pub fn write_masked(&mut self, line: LineAddr, mask: u64, data: &[u8; 64]) -> WriteOutcome {
+    pub fn write_masked(&mut self, line: LineAddr, mask: u64, data: &LineData) -> WriteOutcome {
         debug_assert!(mask != 0);
         let mut out = WriteOutcome::default();
 
@@ -239,7 +232,7 @@ impl WcCache {
                     addr: line,
                     valid: 0,
                     dirty: 0,
-                    data: [0u8; 64],
+                    data: ZERO_LINE,
                 });
                 i
             }
@@ -247,11 +240,7 @@ impl WcCache {
         self.touch(slot);
         self.last.set(Some((line, slot)));
         let l = self.slots[slot].as_mut().unwrap();
-        for k in 0..64 {
-            if mask & (1 << k) != 0 {
-                l.data[k] = data[k];
-            }
-        }
+        merge_masked(&mut l.data, data, mask);
         l.valid |= mask;
         let was_dirty = l.dirty != 0;
         l.dirty |= mask;
@@ -267,7 +256,7 @@ impl WcCache {
     }
 
     /// Full line data; `None` unless every byte is valid.
-    pub fn full_line(&mut self, line: LineAddr) -> Option<[u8; 64]> {
+    pub fn full_line(&mut self, line: LineAddr) -> Option<LineData> {
         let i = self.find(line)?;
         let l = self.slots[i].as_ref().unwrap();
         if l.valid == u64::MAX {
@@ -281,7 +270,7 @@ impl WcCache {
 
     /// Install a full line fetched from the next level, preserving local
     /// dirty bytes (they are newer than the fill).
-    pub fn fill(&mut self, line: LineAddr, fill_data: [u8; 64]) -> FillOutcome {
+    pub fn fill(&mut self, line: LineAddr, fill_data: LineData) -> FillOutcome {
         let mut out = FillOutcome::default();
         let slot = match self.find(line) {
             Some(i) => i,
@@ -292,7 +281,7 @@ impl WcCache {
                     addr: line,
                     valid: 0,
                     dirty: 0,
-                    data: [0u8; 64],
+                    data: ZERO_LINE,
                 });
                 i
             }
@@ -300,11 +289,9 @@ impl WcCache {
         self.touch(slot);
         self.last.set(Some((line, slot)));
         let l = self.slots[slot].as_mut().unwrap();
-        for k in 0..64 {
-            if l.dirty & (1 << k) == 0 {
-                l.data[k] = fill_data[k];
-            }
-        }
+        // Take fill bytes everywhere the line is not dirty (local dirty
+        // bytes are newer than the fill).
+        merge_masked(&mut l.data, &fill_data, !l.dirty);
         l.valid = u64::MAX;
         out
     }
@@ -441,8 +428,8 @@ mod tests {
     fn fill_preserves_dirty_bytes() {
         let mut c = cache();
         c.write_bytes(9, 0, 4, 0x11111111);
-        let mut fill = [0xFFu8; 64];
-        fill[0] = 0xEE;
+        let mut fill = [u64::MAX; 8];
+        line_write(&mut fill, 0, 1, 0xEE);
         c.fill(9, fill);
         // Dirty bytes kept, rest from fill.
         assert_eq!(c.read_bytes(9, 0, 4), 0x11111111);

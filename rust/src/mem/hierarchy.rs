@@ -13,7 +13,10 @@
 
 use super::cache::{DrainStep, WcCache, Writeback};
 use super::timing::{Banked, Resource};
-use super::{byte_mask, line_of, offset_in_line, Addr, BackingStore, LineAddr, Ticket};
+use super::{
+    byte_mask, line_of, line_write, offset_in_line, Addr, BackingStore, LineAddr, LineData,
+    Ticket, ZERO_LINE,
+};
 use crate::config::DeviceConfig;
 use crate::sim::{Cycle, Stats, TraceKind, TraceSink};
 use crate::sync::scope::AtomicOp;
@@ -155,7 +158,7 @@ impl MemSystem {
     // DRAM
     // ------------------------------------------------------------------
 
-    fn dram_fetch(&mut self, line: LineAddr, at: Cycle) -> ([u8; 64], Cycle) {
+    fn dram_fetch(&mut self, line: LineAddr, at: Cycle) -> (LineData, Cycle) {
         self.stats.dram_reads += 1;
         let start = self.dram.acquire(line, at, self.cfg.dram_occupancy);
         (self.backing.read_line(line), start + self.cfg.dram_latency)
@@ -204,7 +207,7 @@ impl MemSystem {
 
     /// Read a full line through the L2 (L1 miss path). Returns the line
     /// image and the data-ready cycle.
-    fn l2_read_line(&mut self, line: LineAddr, at: Cycle) -> ([u8; 64], Cycle) {
+    fn l2_read_line(&mut self, line: LineAddr, at: Cycle) -> (LineData, Cycle) {
         self.stats.l2_accesses += 1;
         let at = self.lock_wait(line, at);
         let start = self.l2_banks.acquire(line, at, self.cfg.l2_bank_occupancy);
@@ -264,10 +267,8 @@ impl MemSystem {
         let old = self.l2.read_bytes(line, off, 4) as u32;
         let (new, result) = op.apply(old, operand, cmp);
         if op.writes_given(old, operand, cmp) {
-            let mut data = [0u8; 64];
-            for k in 0..4 {
-                data[off + k] = (new >> (8 * k)) as u8;
-            }
+            let mut data = ZERO_LINE;
+            line_write(&mut data, off, 4, new as u64);
             let out = self.l2.write_masked(line, byte_mask(off, 4), &data);
             if let Some(ov) = out.overflow_wb {
                 self.dram_write(&ov, t);
@@ -452,11 +453,16 @@ impl MemSystem {
     }
 
     /// Full cache-flush of an L1 (drain entire sFIFO). Global-release path.
+    ///
+    /// The trace event is stamped at the flush's *completion* cycle (the
+    /// drain can take hundreds of cycles; stamping the start made flushes
+    /// look instantaneous on the timeline).
     pub fn full_flush_l1(&mut self, cu: u32, at: Cycle) -> Cycle {
         self.stats.l1_flushes += 1;
         let pending = self.cus[cu as usize].l1.sfifo_pending() as u64;
-        self.trace.emit(at, cu, TraceKind::L1Flush, 0, pending);
-        self.flush_l1(cu, None, at)
+        let t = self.flush_l1(cu, None, at);
+        self.trace.emit(t, cu, TraceKind::L1Flush, 0, pending);
+        t
     }
 
     /// Full invalidate of an L1: drain dirty, then one-cycle flash
@@ -470,10 +476,13 @@ impl MemSystem {
         self.stats.lines_invalidated += dropped;
         side.lr_tbl.clear();
         side.pa_tbl.clear();
-        self.trace.emit(at, cu, TraceKind::L1Invalidate, 0, dropped);
+        let done = t + 1;
+        // Stamped at completion (after the embedded flush + the one-cycle
+        // flash invalidate), matching the L1Flush convention above.
+        self.trace.emit(done, cu, TraceKind::L1Invalidate, 0, dropped);
         // hLRC: the cache can no longer hold its sync lines exclusively.
         self.hlrc_drop_owner(cu);
-        t + 1
+        done
     }
 
     // ------------------------------------------------------------------
@@ -563,7 +572,7 @@ impl MemSystem {
 
     /// Functional L2 full-line fetch (no timing). Returns data + whether
     /// DRAM was involved.
-    fn l2_line_functional(&mut self, line: LineAddr) -> ([u8; 64], bool) {
+    fn l2_line_functional(&mut self, line: LineAddr) -> (LineData, bool) {
         self.stats.l2_accesses += 1;
         if let Some(data) = self.l2.full_line(line) {
             self.stats.l2_hits += 1;

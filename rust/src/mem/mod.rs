@@ -56,6 +56,74 @@ pub fn byte_mask(off: usize, len: usize) -> u64 {
     }
 }
 
+/// A 64-byte line as eight little-endian words: line byte `k` is byte
+/// `k % 8` of word `k / 8`. The word layout lets masked merges run as
+/// eight 64-bit ops instead of a 64-iteration per-byte loop, while
+/// `line_read`/`line_write` keep the byte-addressed view the access
+/// paths need.
+pub type LineData = [u64; 8];
+
+/// All-zero line.
+pub const ZERO_LINE: LineData = [0u64; 8];
+
+/// Expand an 8-bit per-byte mask into a 64-bit word where each set bit
+/// becomes a full 0xFF byte: bit `i` of `m8` → bits `8i..8i+8`.
+/// Branchless bit-spread (0→0, 4-bit and 2-bit interleave steps), then a
+/// multiply fans each seed bit out across its byte.
+#[inline]
+pub fn expand8(m8: u64) -> u64 {
+    debug_assert!(m8 <= 0xFF);
+    let mut x = (m8 | (m8 << 28)) & 0x0000_000F_0000_000F;
+    x = (x | (x << 14)) & 0x0003_0003_0003_0003;
+    x = (x | (x << 7)) & 0x0101_0101_0101_0101;
+    x * 0xFF
+}
+
+/// Read `len <= 8` bytes at in-line offset `off` as a little-endian
+/// value. Handles accesses that straddle a word boundary (never a line
+/// boundary — `byte_mask` enforces that upstream).
+#[inline]
+pub fn line_read(data: &LineData, off: usize, len: usize) -> u64 {
+    debug_assert!(len >= 1 && len <= 8 && off + len <= 64);
+    let w = off / 8;
+    let sh = (off % 8) * 8;
+    let mut v = data[w] >> sh;
+    if off % 8 + len > 8 {
+        // Straddles into the next word; sh > 0 here, so 64 - sh < 64.
+        v |= data[w + 1] << (64 - sh);
+    }
+    if len < 8 {
+        v &= (1u64 << (8 * len)) - 1;
+    }
+    v
+}
+
+/// Write `len <= 8` little-endian bytes of `value` at in-line offset
+/// `off`. The word-straddling counterpart of [`line_read`].
+#[inline]
+pub fn line_write(data: &mut LineData, off: usize, len: usize, value: u64) {
+    debug_assert!(len >= 1 && len <= 8 && off + len <= 64);
+    let m = if len == 8 { u64::MAX } else { (1u64 << (8 * len)) - 1 };
+    let value = value & m;
+    let w = off / 8;
+    let sh = (off % 8) * 8;
+    data[w] = (data[w] & !(m << sh)) | (value << sh);
+    if off % 8 + len > 8 {
+        let hi = 64 - sh; // sh > 0 whenever the access straddles
+        data[w + 1] = (data[w + 1] & !(m >> hi)) | (value >> hi);
+    }
+}
+
+/// Merge the bytes selected by the per-byte `mask` from `src` into
+/// `dst`: eight branchless `(old & !m) | (new & m)` word merges.
+#[inline]
+pub fn merge_masked(dst: &mut LineData, src: &LineData, mask: u64) {
+    for w in 0..8 {
+        let m = expand8((mask >> (8 * w)) & 0xFF);
+        dst[w] = (dst[w] & !m) | (src[w] & m);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,5 +148,74 @@ mod tests {
     #[should_panic]
     fn straddle_panics_in_debug() {
         byte_mask(62, 4);
+    }
+
+    #[test]
+    fn expand8_spreads_every_mask() {
+        assert_eq!(expand8(0), 0);
+        assert_eq!(expand8(0xFF), u64::MAX);
+        assert_eq!(expand8(0b0000_0001), 0x0000_0000_0000_00FF);
+        assert_eq!(expand8(0b1000_0000), 0xFF00_0000_0000_0000);
+        assert_eq!(expand8(0b0101_0101), 0x00FF_00FF_00FF_00FF);
+        // Exhaustive against the per-byte reference.
+        for m8 in 0u64..=0xFF {
+            let mut want = 0u64;
+            for i in 0..8 {
+                if m8 & (1 << i) != 0 {
+                    want |= 0xFFu64 << (8 * i);
+                }
+            }
+            assert_eq!(expand8(m8), want, "m8={m8:#04x}");
+        }
+    }
+
+    #[test]
+    fn line_read_write_round_trip_all_offsets() {
+        for len in 1..=8usize {
+            for off in 0..=(64 - len) {
+                let mut data = ZERO_LINE;
+                let m = if len == 8 { u64::MAX } else { (1 << (8 * len)) - 1 };
+                let v = 0x1122_3344_5566_7788u64 & m;
+                line_write(&mut data, off, len, v);
+                assert_eq!(line_read(&data, off, len), v, "off={off} len={len}");
+                // Neighbouring bytes untouched.
+                if off > 0 {
+                    assert_eq!(line_read(&data, off - 1, 1), 0);
+                }
+                if off + len < 64 {
+                    assert_eq!(line_read(&data, off + len, 1), 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn line_write_straddles_word_boundary() {
+        let mut data = ZERO_LINE;
+        line_write(&mut data, 6, 4, 0xAABB_CCDD);
+        assert_eq!(data[0], 0xCCDD_0000_0000_0000);
+        assert_eq!(data[1], 0x0000_0000_0000_AABB);
+        assert_eq!(line_read(&data, 6, 4), 0xAABB_CCDD);
+    }
+
+    #[test]
+    fn merge_masked_matches_per_byte_reference() {
+        let mut dst = ZERO_LINE;
+        let mut src = ZERO_LINE;
+        for k in 0..64 {
+            line_write(&mut dst, k, 1, k as u64);
+            line_write(&mut src, k, 1, 0xA0 + k as u64 % 0x20);
+        }
+        let mask = 0xF0F0_1234_8001_FFFEu64;
+        let mut want = dst;
+        for k in 0..64 {
+            if mask & (1 << k) != 0 {
+                let b = line_read(&src, k, 1);
+                line_write(&mut want, k, 1, b);
+            }
+        }
+        let mut got = dst;
+        merge_masked(&mut got, &src, mask);
+        assert_eq!(got, want);
     }
 }

@@ -74,6 +74,18 @@ pub struct PerfStats {
     /// Workload presets rehydrated from the store instead of
     /// regenerated (graph builds skipped).
     pub preset_reuses: u64,
+    /// Work-stealing sweep scheduler: cells a thread pulled from outside
+    /// its static (contiguous-deal) share of the plan — the load
+    /// imbalance the shared queue actually corrected.
+    pub sched_steals: u64,
+    /// Wall nanoseconds worker threads spent executing cells inside
+    /// work-stealing sections.
+    pub sched_busy_nanos: u64,
+    /// Wall nanoseconds worker threads spent in a work-stealing section
+    /// *not* executing cells (queue drained, waiting for the join).
+    pub sched_idle_nanos: u64,
+    /// Worker threads that participated in work-stealing sections.
+    pub sched_threads: u64,
 }
 
 impl PerfStats {
@@ -81,6 +93,13 @@ impl PerfStats {
     /// in workload numerics.
     pub fn sim_nanos(&self) -> u64 {
         self.launch_nanos.saturating_sub(self.engine_nanos)
+    }
+
+    /// Scheduler utilization: the fraction of worker-thread wall time
+    /// spent executing cells. `None` until a work-stealing section ran.
+    pub fn utilization(&self) -> Option<f64> {
+        let total = self.sched_busy_nanos + self.sched_idle_nanos;
+        (total > 0).then(|| self.sched_busy_nanos as f64 / total as f64)
     }
 
     pub fn merge(&mut self, other: &PerfStats) {
@@ -92,6 +111,10 @@ impl PerfStats {
             cache_hits,
             cache_misses,
             preset_reuses,
+            sched_steals,
+            sched_busy_nanos,
+            sched_idle_nanos,
+            sched_threads,
         } = other;
         self.launches += launches;
         self.events += events;
@@ -100,7 +123,24 @@ impl PerfStats {
         self.cache_hits += cache_hits;
         self.cache_misses += cache_misses;
         self.preset_reuses += preset_reuses;
+        self.sched_steals += sched_steals;
+        self.sched_busy_nanos += sched_busy_nanos;
+        self.sched_idle_nanos += sched_idle_nanos;
+        self.sched_threads += sched_threads;
     }
+}
+
+/// Fold scheduler counters into this thread's collector (the
+/// work-stealing executor calls it once per parallel section, after the
+/// join).
+pub fn add_sched(steals: u64, busy_nanos: u64, idle_nanos: u64, threads: u64) {
+    THREAD_PERF.with(|tp| {
+        let mut p = tp.borrow_mut();
+        p.sched_steals += steals;
+        p.sched_busy_nanos += busy_nanos;
+        p.sched_idle_nanos += idle_nanos;
+        p.sched_threads += threads;
+    });
 }
 
 thread_local! {
@@ -291,6 +331,10 @@ mod tests {
             cache_hits: 4,
             cache_misses: 2,
             preset_reuses: 1,
+            sched_steals: 2,
+            sched_busy_nanos: 60,
+            sched_idle_nanos: 20,
+            sched_threads: 4,
         };
         let b = PerfStats {
             launches: 2,
@@ -300,6 +344,10 @@ mod tests {
             cache_hits: 1,
             cache_misses: 3,
             preset_reuses: 2,
+            sched_steals: 1,
+            sched_busy_nanos: 20,
+            sched_idle_nanos: 0,
+            sched_threads: 4,
         };
         a.merge(&b);
         assert_eq!(a.launches, 3);
@@ -308,6 +356,9 @@ mod tests {
         assert_eq!(a.cache_hits, 5);
         assert_eq!(a.cache_misses, 5);
         assert_eq!(a.preset_reuses, 3);
+        assert_eq!(a.sched_steals, 3);
+        assert_eq!(a.utilization(), Some(80.0 / 100.0));
+        assert_eq!(PerfStats::default().utilization(), None);
     }
 
     #[test]
@@ -318,16 +369,19 @@ mod tests {
             events: 7,
             launch_nanos: 9,
             engine_nanos: 2,
-            cache_hits: 0,
-            cache_misses: 0,
-            preset_reuses: 0,
+            ..PerfStats::default()
         });
         add_cache(5, 1, 2);
+        add_sched(3, 40, 10, 4);
         let got = take_thread();
         assert_eq!(got.events, 7);
         assert_eq!(got.cache_hits, 5);
         assert_eq!(got.cache_misses, 1);
         assert_eq!(got.preset_reuses, 2);
+        assert_eq!(got.sched_steals, 3);
+        assert_eq!(got.sched_busy_nanos, 40);
+        assert_eq!(got.sched_idle_nanos, 10);
+        assert_eq!(got.sched_threads, 4);
         assert_eq!(take_thread(), PerfStats::default());
     }
 

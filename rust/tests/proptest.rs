@@ -1,0 +1,209 @@
+//! Property tests for the word-level line data path and the scheduler's
+//! byte-identity guarantee.
+//!
+//! The cache stores line data as eight 64-bit words and merges with
+//! branchless mask expansion; these properties pin it against the
+//! original per-byte formulation — a `[u8; 64]` model updated with the
+//! exact loops the old code ran — under randomized masks, data, offsets
+//! and op interleavings. The scheduler matrix pins the other tentpole:
+//! a cost-skewed sweep produces byte-identical artifacts whether it
+//! runs serially, on the work-stealing queue, or sharded across
+//! subprocess-style partials.
+
+use srsp::config::DeviceConfig;
+use srsp::coordinator::{axis, shard, ExecutionPlan, Runner, Seeding, SweepPlan};
+use srsp::harness::report::{PartialReport, Report};
+use srsp::harness::runner::execute_shard;
+use srsp::mem::{line_read, line_write, merge_masked, LineData, WcCache, ZERO_LINE};
+use srsp::proptest::{run_prop, Gen};
+use srsp::workload::registry::{self, WorkloadSize};
+
+/// The pre-word-level line state: per-byte data with the per-byte merge
+/// loops the cache used to run. The properties assert the word-wise
+/// cache is observationally identical to this model.
+#[derive(Clone)]
+struct ByteLine {
+    valid: u64,
+    dirty: u64,
+    data: [u8; 64],
+}
+
+impl ByteLine {
+    fn new() -> Self {
+        ByteLine { valid: 0, dirty: 0, data: [0; 64] }
+    }
+
+    /// The old `write_masked` inner loop: copy each selected byte.
+    fn write_masked(&mut self, mask: u64, src: &[u8; 64]) {
+        for i in 0..64 {
+            if mask & (1 << i) != 0 {
+                self.data[i] = src[i];
+            }
+        }
+        self.valid |= mask;
+        self.dirty |= mask;
+    }
+
+    /// The old `fill` inner loop: take fill bytes wherever not dirty.
+    fn fill(&mut self, fill: &[u8; 64]) {
+        for i in 0..64 {
+            if self.dirty & (1 << i) == 0 {
+                self.data[i] = fill[i];
+            }
+        }
+        self.valid = u64::MAX;
+    }
+}
+
+fn gen_bytes(g: &mut Gen) -> [u8; 64] {
+    let mut b = [0u8; 64];
+    for x in &mut b {
+        *x = g.u64(0..256) as u8;
+    }
+    b
+}
+
+fn to_line_data(b: &[u8; 64]) -> LineData {
+    let mut d = ZERO_LINE;
+    for (i, &x) in b.iter().enumerate() {
+        line_write(&mut d, i, 1, x as u64);
+    }
+    d
+}
+
+/// Read every byte the cache holds for `line` (None where invalid).
+fn cache_bytes(c: &mut WcCache, line: u64) -> Vec<Option<u8>> {
+    (0..64)
+        .map(|i| c.probe_read(line, i, 1, 1 << i).map(|v| v as u8))
+        .collect()
+}
+
+#[test]
+fn word_merge_matches_per_byte_reference() {
+    run_prop("word_merge_matches_per_byte_reference", 200, |g| {
+        // One line, no eviction pressure, roomy sFIFO: the property is
+        // about the merge arithmetic, not the replacement policy.
+        let mut cache = WcCache::new(1, 1, 1024);
+        let mut model = ByteLine::new();
+        let line = 7u64;
+        let ops = g.len(1..24);
+        for _ in 0..ops {
+            if g.chance(0.3) && model.valid != 0 {
+                let bytes = gen_bytes(g);
+                cache.fill(line, to_line_data(&bytes));
+                model.fill(&bytes);
+            } else {
+                let mut mask = g.u64(0..u64::MAX) & g.u64(0..u64::MAX);
+                if mask == 0 {
+                    mask = 1 << g.u64(0..64);
+                }
+                let bytes = gen_bytes(g);
+                cache.write_masked(line, mask, &to_line_data(&bytes));
+                model.write_masked(mask, &bytes);
+            }
+            let got = cache_bytes(&mut cache, line);
+            for i in 0..64 {
+                let want = (model.valid & (1 << i) != 0).then(|| model.data[i]);
+                assert_eq!(
+                    got[i], want,
+                    "byte {i} diverged from the per-byte model (seed {})",
+                    g.seed
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn line_read_write_matches_byte_array_reference() {
+    run_prop("line_read_write_matches_byte_array_reference", 300, |g| {
+        let mut words = ZERO_LINE;
+        let mut bytes = [0u8; 64];
+        for _ in 0..g.len(1..32) {
+            let len = g.usize(1..9);
+            let off = g.usize(0..64 - len + 1);
+            if g.bool() {
+                let v = g.u64(0..u64::MAX);
+                line_write(&mut words, off, len, v);
+                for k in 0..len {
+                    bytes[off + k] = (v >> (8 * k)) as u8;
+                }
+            }
+            let got = line_read(&words, off, len);
+            let mut want = 0u64;
+            for k in 0..len {
+                want |= (bytes[off + k] as u64) << (8 * k);
+            }
+            assert_eq!(got, want, "off={off} len={len} (seed {})", g.seed);
+        }
+        // The whole-line views agree too.
+        assert_eq!(to_line_data(&bytes), words, "seed {}", g.seed);
+    });
+}
+
+#[test]
+fn merge_masked_equals_per_byte_select() {
+    run_prop("merge_masked_equals_per_byte_select", 300, |g| {
+        let dst_bytes = gen_bytes(g);
+        let src_bytes = gen_bytes(g);
+        let mask = g.u64(0..u64::MAX);
+        let mut dst = to_line_data(&dst_bytes);
+        merge_masked(&mut dst, &to_line_data(&src_bytes), mask);
+        let mut want = dst_bytes;
+        for i in 0..64 {
+            if mask & (1 << i) != 0 {
+                want[i] = src_bytes[i];
+            }
+        }
+        assert_eq!(dst, to_line_data(&want), "mask={mask:#018x} (seed {})", g.seed);
+    });
+}
+
+/// A deliberately cost-skewed plan: the CU-count axis spans 2..8, so
+/// cell wall time varies by roughly the CU ratio — exactly the shape
+/// the static deal loses on and the stealing queue rebalances.
+fn skewed_sweep() -> SweepPlan {
+    SweepPlan::new(registry::STRESS, &[axis::REMOTE_RATIO, axis::CU_COUNT])
+        .unwrap()
+        .with_points(axis::REMOTE_RATIO, vec![0.0, 0.5, 1.0])
+        .unwrap()
+        .with_points(axis::CU_COUNT, vec![2.0, 4.0, 8.0])
+        .unwrap()
+}
+
+fn skewed_runner(jobs: usize) -> Runner {
+    Runner {
+        seeding: Seeding::PerCell(11),
+        validate: true,
+        ..Runner::new(
+            DeviceConfig { num_cus: 4, ..DeviceConfig::small() },
+            WorkloadSize::Tiny,
+            jobs,
+        )
+    }
+}
+
+#[test]
+fn scheduler_matrix_is_byte_identical() {
+    // --jobs 1 (serial), --jobs 4 (work-stealing queue), and a
+    // 2-partition subprocess-style execution of the same plan must all
+    // emit byte-identical artifacts on the cost-skewed sweep.
+    let sweep = skewed_sweep();
+    let serial = skewed_runner(1).run_sweep(&sweep);
+    let stolen = skewed_runner(4).run_sweep(&sweep);
+    assert_eq!(format!("{serial:?}"), format!("{stolen:?}"));
+    let a = Report::from_cells(&serial);
+    let b = Report::from_cells(&stolen);
+    assert_eq!(a.to_csv(), b.to_csv(), "--jobs 4 must not change the CSV");
+    assert_eq!(a.to_json(), b.to_json(), "--jobs 4 must not change the JSON");
+
+    let plan = ExecutionPlan::lower_sweep(&skewed_runner(1), &sweep);
+    let partials: Vec<PartialReport> = shard::partition(&plan, 2)
+        .iter()
+        .map(|s| PartialReport::from_shard(s, &execute_shard(s)))
+        .map(|p| PartialReport::from_json(&p.to_json()).expect("partial round-trip"))
+        .collect();
+    let merged = Report::merge(&partials).unwrap();
+    assert_eq!(merged.to_csv(), a.to_csv(), "--workers 2 must not change the CSV");
+    assert_eq!(merged.to_json(), a.to_json(), "--workers 2 must not change the JSON");
+}
